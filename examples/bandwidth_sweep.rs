@@ -1,0 +1,63 @@
+//! Bandwidth sweep: how the budgeted draft length L^t and end-to-end
+//! latency respond to the uplink rate — the paper's central motivation
+//! (the edge-cloud link is the bottleneck; compression buys latency).
+//!
+//!     cargo run --release --example bandwidth_sweep
+//!
+//! Sweeps the uplink from 64 kbit/s to 8 Mbit/s for K-SQS, C-SQS, and the
+//! dense-QS baseline, reporting tokens/batch, latency per token, and the
+//! share of time spent on the wire.
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::coordinator::{PjrtStack, SessionConfig};
+use sqs_sd::model::encode;
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let stack = PjrtStack::load(1 << 30)?;
+    let prompt = encode("A distributed system is");
+
+    println!(
+        "{:<10} {:<22} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "uplink", "policy", "tok/batch", "ms/tok", "uplink_ms", "wire_share", "bits/tok"
+    );
+
+    for &kbps in &[64.0f64, 256.0, 1000.0, 8000.0] {
+        let link = LinkConfig {
+            uplink_bps: kbps * 1e3,
+            downlink_bps: 10.0 * kbps * 1e3,
+            propagation_s: 0.010,
+            jitter_s: 0.0,
+        };
+        for policy in [
+            Policy::KSqs { k: 8 },
+            Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+            Policy::DenseQs,
+        ] {
+            let cfg = SessionConfig {
+                policy,
+                temp: 0.6,
+                max_new_tokens: 48,
+                seed: 3,
+                ..Default::default()
+            };
+            let mut sess = stack.session(link, cfg);
+            let res = sess.run(&prompt)?;
+            let tokens_per_batch =
+                res.new_tokens() as f64 / res.batches.len().max(1) as f64;
+            let wire = (res.t_uplink_s + res.t_downlink_s) / res.total_time_s;
+            println!(
+                "{:<10} {:<22} {:>9.2} {:>10.1} {:>10.1} {:>9.0}% {:>10.0}",
+                format!("{}k", kbps as u64),
+                policy.describe(),
+                tokens_per_batch,
+                1e3 * res.latency_per_token(),
+                1e3 * res.t_uplink_s / res.batches.len().max(1) as f64,
+                100.0 * wire,
+                res.bits_per_token(),
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

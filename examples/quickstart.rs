@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts and run one C-SQS speculative-
+//! decoding session end to end.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest complete use of the public API: a `PjrtStack`
+//! (PJRT engine + compiled modules + device weights), a `SessionConfig`
+//! choosing the paper's C-SQS policy at its published operating point
+//! (B = 5000 bits, ell = 100, eta = 0.001, alpha = 0.0005), and one
+//! session over a simulated 1 Mbit/s uplink.
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::coordinator::{PjrtStack, SessionConfig};
+use sqs_sd::model::{decode, encode};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    // PJRT engine + compiled HLO modules + device-resident weights
+    let stack = PjrtStack::load(1 << 30)?;
+    println!("platform: {} | slm {} params | llm {} params",
+             stack.engine.platform(),
+             stack.slm.weights.total_params,
+             stack.llm.weights.total_params);
+
+    let cfg = SessionConfig {
+        policy: Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+        temp: 0.7,
+        ell: 100,
+        budget_bits: 5000,
+        max_new_tokens: 64,
+        seed: 7,
+        ..Default::default()
+    };
+
+    let prompt = "The capital of France is";
+    let mut session = stack.session(LinkConfig::default(), cfg);
+    let res = session.run(&encode(prompt))?;
+
+    println!("\nprompt     : {prompt}");
+    println!("completion : {:?}", decode(&res.tokens[res.prompt_len..]));
+    println!("\n{} new tokens in {} speculative batches", res.new_tokens(),
+             res.batches.len());
+    println!("latency    : {:.3}s simulated  ({:.1} ms/token)",
+             res.total_time_s, 1e3 * res.latency_per_token());
+    println!("  slm compute {:.3}s | uplink {:.3}s | llm verify {:.3}s | downlink {:.3}s",
+             res.t_slm_s, res.t_uplink_s, res.t_llm_s, res.t_downlink_s);
+    println!("uplink     : {} bits total, {:.0} bits/token (raw f32 would be {})",
+             res.uplink_bits, res.bits_per_token(),
+             sqs_sd::sqs::bits::raw_f32_bits(256));
+    println!("resampling : {:.3} per batch | acceptance {:.2} | mean support K {:.1}",
+             res.resampling_rate(), res.acceptance_rate(), res.mean_k());
+    if let (Some(emp), Some(bound)) = (res.conformal_empirical_alpha, res.conformal_bound) {
+        println!("conformal  : empirical alpha {emp:.5} <= Theorem-2 bound {bound:.5}");
+    }
+    Ok(())
+}

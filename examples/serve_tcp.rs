@@ -1,0 +1,68 @@
+//! TCP serving demo: start the server, drive it with a small client
+//! workload over real sockets, print the responses.
+//!
+//!     cargo run --release --example serve_tcp
+//!
+//! The server owns the PJRT stack on its inference thread; connections are
+//! handled by acceptor threads feeding a FIFO job queue (see
+//! rust/src/server/mod.rs for the protocol).
+
+use sqs_sd::server::{serve, Client, ServerConfig};
+use sqs_sd::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let addr = "127.0.0.1:7171";
+    let n_requests = 6;
+
+    // server thread (exits after n_requests)
+    let server_addr = addr.to_string();
+    let server = std::thread::spawn(move || {
+        serve(ServerConfig {
+            addr: server_addr,
+            max_requests: Some(n_requests),
+            ..Default::default()
+        })
+        .expect("server runs");
+    });
+
+    // wait for the listener, then connect
+    let client = loop {
+        match Client::connect(addr) {
+            Ok(c) => break c,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    };
+
+    let prompts = [
+        ("The capital of France is", "ksqs"),
+        ("Once there was a fox who", "csqs"),
+        ("To make the bread, first", "csqs"),
+        ("A distributed system is", "ksqs"),
+        ("The train left the station at", "dense"),
+        ("She opened the box and found", "csqs"),
+    ];
+    for (prompt, policy) in prompts.iter().take(n_requests) {
+        let req = Json::obj(vec![
+            ("prompt", Json::Str(prompt.to_string())),
+            ("policy", Json::Str(policy.to_string())),
+            ("max_tokens", Json::Num(32.0)),
+            ("temp", Json::Num(0.5)),
+        ]);
+        let resp = client.request(&req)?;
+        if let Some(err) = resp.get("error") {
+            println!("{policy:>5} | {prompt:<32} | ERROR {err:?}");
+            continue;
+        }
+        println!(
+            "{policy:>5} | {prompt:<32} -> {:?}  [{} tok, {:.0} bits/tok, rr {:.2}, {:.0} ms sim]",
+            resp.get("text").and_then(|t| t.as_str()).unwrap_or(""),
+            resp.get("tokens").and_then(|t| t.as_f64()).unwrap_or(0.0),
+            resp.get("bits_per_token").and_then(|t| t.as_f64()).unwrap_or(0.0),
+            resp.get("resampling_rate").and_then(|t| t.as_f64()).unwrap_or(0.0),
+            1e3 * resp.get("latency_s").and_then(|t| t.as_f64()).unwrap_or(0.0),
+        );
+    }
+
+    server.join().expect("server thread");
+    Ok(())
+}

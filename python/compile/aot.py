@@ -1,0 +1,231 @@
+"""AOT export: lower the L2 model (+ fused L1 kernels) to HLO text artifacts.
+
+`python -m compile.aot --out-dir ../artifacts` produces:
+
+  slm_prefill.hlo.txt   llm_prefill.hlo.txt
+  slm_decode.hlo.txt    llm_decode.hlo.txt
+  slm_decode_sqs.hlo.txt            (decode fused with the SQS Pallas kernel)
+  llm_verify.hlo.txt                (parallel verification window)
+  sqs_kernel.hlo.txt                (standalone kernel, rust cross-check)
+  weights_slm.bin / weights_llm.bin (flat f32 tensors, manifest-indexed)
+  manifest.json                     (shapes, arg order, configs, corpus)
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Model weights are runtime *inputs* (flat, ordered per `model.param_names`),
+not baked constants: HLO stays small, and the rust runtime uploads weights
+once as device-resident PJRT buffers — the same shape real serving takes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, train
+from .kernels.sparse_quant import sparse_quantize
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: multi-output executables return one PJRT buffer
+    # per output, so the rust runtime can keep the KV cache device-resident
+    # across calls (execute_b) without host round-trips.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _scalar_i32():
+    return _spec((), jnp.int32)
+
+
+def _scalar_f32():
+    return _spec((), jnp.float32)
+
+
+def kv_spec(cfg: model.Config):
+    return _spec((cfg.n_layers, 2, cfg.s_max, cfg.d_model), jnp.float32)
+
+
+def param_specs(cfg: model.Config, params):
+    return [_spec(p.shape, p.dtype) for p in model.params_flatten(cfg, params)]
+
+
+def build_exports(cfg: model.Config, params, name: str, use_pallas: bool):
+    """Return {artifact_name: (fn taking (*flat_params, *args), arg_specs, arg_names, out_names)}."""
+    n_flat = len(model.param_names(cfg))
+
+    def with_params(f):
+        def g(*all_args):
+            flat, rest = all_args[:n_flat], all_args[n_flat:]
+            p = model.params_unflatten(cfg, flat)
+            return f(p, *rest)
+        return g
+
+    exports = {}
+
+    exports[f"{name}_prefill"] = (
+        with_params(lambda p, tokens, n:
+                    model.prefill(cfg, p, tokens, n, use_pallas=use_pallas)),
+        [_spec((cfg.s_max,), jnp.int32), _scalar_i32()],
+        ["tokens", "n"],
+        ["logits", "kv"],
+    )
+    exports[f"{name}_decode"] = (
+        with_params(lambda p, token, pos, kv: model.decode(cfg, p, token, pos, kv)),
+        [_scalar_i32(), _scalar_i32(), kv_spec(cfg)],
+        ["token", "pos", "kv"],
+        ["logits", "kv"],
+    )
+    if name == "slm":
+        def decode_sqs(p, token, pos, kv, temp, mode, param, ell):
+            logits, kv2 = model.decode(cfg, p, token, pos, kv)
+            from .kernels import ref as kref
+            q = kref.softmax_t(logits, temp)
+            counts, alpha, kept = sparse_quantize(q, mode, param, ell)
+            return counts, alpha, kept, q, kv2
+
+        exports["slm_decode_sqs"] = (
+            with_params(decode_sqs),
+            [_scalar_i32(), _scalar_i32(), kv_spec(cfg), _scalar_f32(),
+             _scalar_i32(), _scalar_f32(), _scalar_i32()],
+            ["token", "pos", "kv", "temp", "mode", "param", "ell"],
+            ["counts", "alpha", "kept", "probs", "kv"],
+        )
+    if name == "llm":
+        exports["llm_verify"] = (
+            with_params(lambda p, tokens, start, kv, temp:
+                        model.verify(cfg, p, tokens, start, kv, temp,
+                                     use_pallas=use_pallas)),
+            [_spec((cfg.ld1,), jnp.int32), _scalar_i32(), kv_spec(cfg),
+             _scalar_f32()],
+            ["tokens", "start", "kv", "temp"],
+            ["probs", "kv"],
+        )
+    return exports
+
+
+def write_weights_bin(path: str, cfg: model.Config, params):
+    """Flat little-endian f32 tensors, concatenated in manifest order."""
+    index = []
+    offset = 0
+    with open(path, "wb") as f:
+        for nm, arr in zip(model.param_names(cfg),
+                           model.params_flatten(cfg, params)):
+            a = np.asarray(arr, dtype="<f4")
+            f.write(a.tobytes())
+            index.append(dict(name=nm, shape=list(a.shape),
+                              dtype="f32", offset=offset, numel=int(a.size)))
+            offset += a.size * 4
+    return index
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="export with jnp reference attention (debug)")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    models = {}
+    # SLM trains longer than its size suggests: the draft must be a decent
+    # approximation of the target for speculative acceptance rates to land
+    # in the paper's regime (GPT-Neo-125M is a *good* model; an
+    # undertrained draft makes every experiment rejection-dominated).
+    slm_params, slm_loss = train.load_or_train(
+        model.SLM_CONFIG, os.path.join(out, "weights_slm.npz"),
+        steps=2500, batch=16, seq_len=96, lr=3e-3, seed=1, name="slm",
+        retrain=args.retrain)
+    llm_params, llm_loss = train.load_or_train(
+        model.LLM_CONFIG, os.path.join(out, "weights_llm.npz"),
+        steps=1100, batch=16, seq_len=96, lr=1e-3, seed=2, name="llm",
+        retrain=args.retrain)
+    models["slm"] = (model.SLM_CONFIG, slm_params, slm_loss)
+    models["llm"] = (model.LLM_CONFIG, llm_params, llm_loss)
+
+    manifest = {
+        "vocab": model.SLM_CONFIG.vocab,
+        "corpus_sha": corpus.corpus_sha(),
+        "prompts": corpus.PROMPTS,
+        "models": {},
+        "artifacts": {},
+    }
+
+    for name, (cfg, params, loss) in models.items():
+        manifest["models"][name] = {
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "d_ff": cfg.d_ff,
+            "s_max": cfg.s_max, "ld1": cfg.ld1, "vocab": cfg.vocab,
+            "params": cfg.param_count(), "final_loss": loss,
+            "weights_bin": f"weights_{name}.bin",
+            "weights_index": write_weights_bin(
+                os.path.join(out, f"weights_{name}.bin"), cfg, params),
+        }
+        flat_specs = param_specs(cfg, params)
+        for art, (fn, arg_specs, arg_names, out_names) in build_exports(
+                cfg, params, name, use_pallas).items():
+            print(f"[aot] lowering {art} ...", flush=True)
+            lowered = jax.jit(fn).lower(*(flat_specs + arg_specs))
+            text = to_hlo_text(lowered)
+            fname = f"{art}.hlo.txt"
+            with open(os.path.join(out, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"][art] = {
+                "file": fname, "model": name,
+                "args": [
+                    {"name": nm, "shape": list(sp.shape),
+                     "dtype": str(np.dtype(sp.dtype))}
+                    for nm, sp in zip(arg_names, arg_specs)],
+                "outputs": out_names,
+                "n_weight_args": len(flat_specs),
+                "hlo_bytes": len(text),
+            }
+            print(f"[aot]   wrote {fname} ({len(text)} bytes)", flush=True)
+
+    # Standalone SQS kernel (no model), for rust<->python cross-checks.
+    v = model.SLM_CONFIG.vocab
+    print("[aot] lowering sqs_kernel ...", flush=True)
+    lowered = jax.jit(lambda q, mode, param, ell:
+                      sparse_quantize(q, mode, param, ell)).lower(
+        _spec((v,), jnp.float32), _scalar_i32(), _scalar_f32(), _scalar_i32())
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out, "sqs_kernel.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"]["sqs_kernel"] = {
+        "file": "sqs_kernel.hlo.txt", "model": None,
+        "args": [{"name": "q", "shape": [v], "dtype": "float32"},
+                 {"name": "mode", "shape": [], "dtype": "int32"},
+                 {"name": "param", "shape": [], "dtype": "float32"},
+                 {"name": "ell", "shape": [], "dtype": "int32"}],
+        "outputs": ["counts", "alpha", "kept"],
+        "n_weight_args": 0,
+        "hlo_bytes": len(text),
+    }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written; {len(manifest['artifacts'])} artifacts",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

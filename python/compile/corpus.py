@@ -1,0 +1,128 @@
+"""Embedded build-time corpus for training the edge SLM and cloud LLM.
+
+The paper trains nothing (it uses pretrained GPT-Neo-125M / 1.3B on LM1B);
+this repo cannot download either, so we substitute: a small public-domain
+style text corpus embedded in the source tree, on which *both* models are
+trained at `make artifacts` time.  What matters for reproducing the paper's
+dynamics is that (a) the draft and target models are statistically
+correlated (so speculative acceptance rates are realistic) and (b) the
+per-token uncertainty varies with context and with sampling temperature.
+A byte-level vocabulary (V=256) keeps the tokenizer trivially mirrored in
+rust while preserving the sparse "most mass in a few tokens" structure the
+paper exploits.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+VOCAB_SIZE = 256
+
+# ~8 KB of varied English prose, tiled with shuffling at sampling time.
+# Mixed registers (narrative, technical, dialogue, lists) give the draft
+# model contexts of very different predictability — the property C-SQS's
+# adaptive threshold is designed to exploit (paper §3, "The capital of
+# France is" vs "She opened the box and found").
+_PARAGRAPHS = [
+    "The river ran slow and brown past the old mill, and the miller's "
+    "daughter counted barges from the window. One, two, three, she said, "
+    "and the fourth barge carried salt, and the fifth carried nothing at "
+    "all. In the evening the water turned the color of tea and the lamps "
+    "came on one by one along the towpath.",
+    "A distributed system is a collection of independent computers that "
+    "appears to its users as a single coherent system. The first goal is "
+    "to hide the fact that processes and resources are physically "
+    "distributed across multiple machines. Communication latency, partial "
+    "failure, and concurrency are the three fundamental difficulties.",
+    "The capital of France is Paris. The capital of Italy is Rome. The "
+    "capital of Spain is Madrid. The capital of Portugal is Lisbon. The "
+    "capital of Austria is Vienna. The capital of Poland is Warsaw. The "
+    "capital of Greece is Athens. The capital of Norway is Oslo.",
+    "She opened the box and found a brass key, a folded map, and a "
+    "photograph of a house she had never seen. The key was cold. The map "
+    "showed a coastline with no names on it, only a cross in faded ink "
+    "and the word soon, written twice, in two different hands.",
+    "To make the bread, first dissolve the yeast in warm water and let it "
+    "stand for ten minutes. Add the flour and the salt, and knead until "
+    "the dough is smooth and elastic. Cover the bowl with a damp cloth "
+    "and let it rise in a warm place until doubled in size.",
+    "In the beginning the engineers measured everything twice. Throughput "
+    "was measured in tokens per second, latency in milliseconds, and the "
+    "bandwidth of the uplink in bits. When the link was slow the queue "
+    "grew, and when the queue grew the users complained, and when the "
+    "users complained the engineers measured everything again.",
+    "What is the answer, asked the student. The teacher looked out of the "
+    "window for a long time. The answer, said the teacher at last, "
+    "depends on the question, and the question depends on who is asking, "
+    "and you have not yet told me who you are.",
+    "The weather report promised rain by nightfall, heavy at times, with "
+    "a wind from the southwest. Fishing boats stayed in the harbor. The "
+    "lighthouse keeper wrote the pressure in his log, eight minutes past "
+    "noon, and underlined it, because the glass was falling faster than "
+    "he had ever seen it fall.",
+    "Speculative decoding accelerates inference by letting a small draft "
+    "model propose several tokens that a large target model verifies in "
+    "parallel. When the draft distribution is close to the target "
+    "distribution, most proposals are accepted, and the cost of the large "
+    "model is amortized across the whole batch of drafted tokens.",
+    "Once there was a fox who lived at the edge of the pine forest, and "
+    "every morning the fox walked the same path to the river, and every "
+    "morning the heron stood in the same shallow bend. Good morning, said "
+    "the fox. The heron said nothing, because herons say nothing, and the "
+    "fox respected that, as one professional respects another.",
+    "The train left the station at seven in the morning and arrived at "
+    "the border at noon. Papers, said the guard. The traveler handed over "
+    "the papers. The guard read them slowly, twice, and then stamped them "
+    "with a stamp shaped like an eagle, and the train went on into the "
+    "mountains where the snow had not yet melted.",
+    "Entropy measures the average uncertainty of a distribution. A sharply "
+    "peaked distribution has low entropy and can be compressed into few "
+    "bits, while a flat distribution has high entropy and resists "
+    "compression. The same trade governs how many draft tokens survive "
+    "verification: sharp distributions travel cheaply, flat ones do not.",
+]
+
+PROMPTS = [
+    "The capital of France is",
+    "She opened the box and found",
+    "To make the bread, first",
+    "The river ran slow and",
+    "A distributed system is",
+    "Good morning, said the",
+    "The train left the station at",
+    "Speculative decoding accelerates",
+    "The weather report promised",
+    "Entropy measures the average",
+    "Once there was a fox who",
+    "What is the answer, asked",
+]
+
+
+def corpus_text() -> str:
+    return "\n\n".join(_PARAGRAPHS) + "\n"
+
+
+def corpus_bytes() -> np.ndarray:
+    """Whole corpus as uint8 token ids (byte-level tokenizer)."""
+    return np.frombuffer(corpus_text().encode("utf-8"), dtype=np.uint8)
+
+
+def corpus_sha() -> str:
+    return hashlib.sha256(corpus_text().encode("utf-8")).hexdigest()[:16]
+
+
+def encode(s: str) -> np.ndarray:
+    return np.frombuffer(s.encode("utf-8"), dtype=np.uint8)
+
+
+def decode(ids) -> str:
+    return bytes(int(i) & 0xFF for i in ids).decode("utf-8", errors="replace")
+
+
+def sample_batch(rng: np.random.Generator, batch: int, seq_len: int) -> np.ndarray:
+    """Random contiguous windows of `seq_len+1` bytes (inputs + shifted targets)."""
+    data = corpus_bytes()
+    starts = rng.integers(0, len(data) - seq_len - 1, size=batch)
+    return np.stack([data[s : s + seq_len + 1] for s in starts]).astype(np.int32)

@@ -1,0 +1,100 @@
+"""Tiled causal/windowed attention as a Pallas kernel (L1).
+
+TPU-idiomatic flash attention: the query window is tiled into VMEM-resident
+blocks via `BlockSpec` (the role threadblock shared-memory staging plays on
+GPU), K/V are streamed block-by-block with an online-softmax accumulator,
+so the Sq x Skv score matrix is never materialized.  Matmul shapes are MXU
+friendly (block sizes multiples of 8); accumulation is f32.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is both the correctness path and the form
+that is AOT-exported into the HLO artifacts.  Real-TPU perf is *estimated*
+(VMEM footprint / MXU utilization) in DESIGN.md §7 — interpret wallclock is
+not a perf proxy.
+
+Semantics match `ref.attention_ref`: query row i (global position
+offset + i) attends to KV buffer columns j <= offset + i.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, skv: int, scale: float):
+    """One program = one (head, q-block). K/V streamed in block_k chunks."""
+    q = q_ref[0].astype(jnp.float32)  # block shape (1, Bq, Dh) -> [Bq, Dh]
+    bq, dh = q.shape
+    offset = off_ref[0]
+    qi = pl.program_id(1)  # q-block index
+    row0 = qi * bq  # first window-row of this block
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)  # running max
+    l0 = jnp.zeros((bq,), jnp.float32)  # running denom
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(kb * block_k, block_k), slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(kb * block_k, block_k), slice(None)))[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [Bq, Bk]
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        cols = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        s = jnp.where(cols <= rows + offset, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    nkb = skv // block_k
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, acc0))
+    # Fully masked rows (can't happen for valid windows, but keep safe):
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, ...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, offset, *, block_q: int | None = None, block_k: int = 64,
+              interpret: bool = True):
+    """Flash attention over a query window against a KV buffer.
+
+    q: [Sq, H, Dh]; k, v: [Skv, H, Dh]; offset: scalar i32 (global position
+    of window row 0).  Returns [Sq, H, Dh] in q.dtype.
+    """
+    sq, h, dh = q.shape
+    skv = k.shape[0]
+    if block_q is None:
+        block_q = min(64, sq)
+    assert sq % block_q == 0, f"Sq={sq} not divisible by block_q={block_q}"
+    assert skv % block_k == 0, f"Skv={skv} not divisible by block_k={block_k}"
+    scale = 1.0 / np.sqrt(dh)
+    off = jnp.reshape(jnp.asarray(offset, jnp.int32), (1,))
+
+    # [H, S, Dh] layout so the grid can tile (head, q-block).
+    qh = jnp.transpose(q, (1, 0, 2))
+    kh = jnp.transpose(k, (1, 0, 2))
+    vh = jnp.transpose(v, (1, 0, 2))
+
+    kern = functools.partial(_attn_kernel, block_k=block_k, skv=skv, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(h, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi, qi: (0,)),              # offset (replicated)
+            pl.BlockSpec((1, block_q, dh), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, skv, dh), lambda hi, qi: (hi, 0, 0)),  # stream inside
+            pl.BlockSpec((1, skv, dh), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, dh), q.dtype),
+        interpret=interpret,
+    )(off, qh, kh, vh)
+    return jnp.transpose(out, (1, 0, 2))

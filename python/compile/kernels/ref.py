@@ -1,0 +1,155 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a bit-for-bit-comparable reference
+here; pytest + hypothesis sweep shapes and assert closeness.  The
+`sparse_quantize` reference is *also* the normative specification of the
+SQS wire semantics: the rust implementation (`rust/src/sqs/slq.rs`)
+mirrors this function operation-for-operation (same tie-breaks, same f32
+rounding), and an integration test cross-checks the two through the AOT
+artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Attention reference
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, offset: int):
+    """Windowed causal attention against a KV buffer.
+
+    q: [Sq, H, Dh]  — query window, global positions offset..offset+Sq-1
+    k, v: [Skv, H, Dh] — KV buffer (rows beyond offset+Sq-1 are ignored
+        via the mask)
+    Row i of the window may attend to buffer column j iff j <= offset + i.
+    Returns [Sq, H, Dh].
+    """
+    sq, h, dh = q.shape
+    skv = k.shape[0]
+    scale = 1.0 / np.sqrt(dh)
+    # [H, Sq, Skv]
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = cols <= (rows + offset)
+    scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", w, v)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-lattice quantization reference (Algorithm 2 + sparsification rules)
+# ---------------------------------------------------------------------------
+
+MODE_TOPK = 0
+MODE_THRESHOLD = 1
+
+
+def rank_desc(x, valid=None):
+    """Rank of each element when sorting by (value desc, index asc).
+
+    rank 0 = largest.  `valid` restricts the competition to a boolean mask
+    (invalid entries get rank >= #valid and never win).
+    Pure jnp, O(V^2) broadcast compares — the same trick the Pallas kernel
+    uses to avoid data-dependent sorts on TPU.
+    """
+    n = x.shape[0]
+    idx = jnp.arange(n)
+    xi = x[None, :]  # j index
+    xj = x[:, None]  # i index
+    beats = (xi > xj) | ((xi == xj) & (idx[None, :] < idx[:, None]))
+    if valid is not None:
+        beats = beats & valid[None, :]
+        # invalid entries lose to everything valid
+        rank = jnp.sum(beats, axis=1)
+        rank = jnp.where(valid, rank, n)
+    else:
+        rank = jnp.sum(beats, axis=1)
+    return rank
+
+
+def sparse_quantize_ref(q, mode, param, ell):
+    """Fused sparsify + sparse-lattice-quantize (SLQ), jnp reference.
+
+    q:     [V] f32 probability vector (sums to 1)
+    mode:  MODE_TOPK (param = K) or MODE_THRESHOLD (param = beta)
+    ell:   lattice resolution (positive int)
+
+    Returns (counts i32[V], alpha f32, kept i32) where
+      counts/ell is the quantized distribution q_hat (sums to exactly ell),
+      alpha is the probability mass dropped by sparsification, and
+      kept = |support|.
+
+    Follows Algorithm 2 of the paper with deterministic index tie-breaks;
+    when thresholding would empty the support, the arg-max token is kept
+    (the paper's Lemma 4 semantics for beta > max q).
+    """
+    v = q.shape[0]
+    r = rank_desc(q)
+    mode = jnp.asarray(mode, jnp.int32)
+    param = jnp.asarray(param, jnp.float32)
+    ell_f = jnp.asarray(ell, jnp.float32)
+
+    keep_topk = r < param.astype(jnp.int32)
+    keep_thr = (q >= param) | (r == 0)
+    keep = jnp.where(mode == MODE_TOPK, keep_topk, keep_thr)
+
+    alpha = jnp.sum(jnp.where(keep, 0.0, q))
+    s = jnp.sum(jnp.where(keep, q, 0.0))
+    qbar = jnp.where(keep, q / s, 0.0)
+
+    b = jnp.floor(ell_f * qbar + 0.5)
+    d = (jnp.sum(b) - ell_f).astype(jnp.int32)  # surplus (can be +/-)
+    zeta = b - ell_f * qbar  # rounding residual in [-0.5, 0.5]
+
+    # d > 0: decrement the d kept entries with the largest zeta
+    rz_hi = rank_desc(zeta, valid=keep)
+    dec = keep & (rz_hi < d)
+    # d < 0: increment the |d| kept entries with the smallest zeta
+    rz_lo = rank_desc(-zeta, valid=keep)
+    inc = keep & (rz_lo < (-d))
+    b = b - jnp.where(dec, 1.0, 0.0) + jnp.where(inc, 1.0, 0.0)
+
+    counts = b.astype(jnp.int32)
+    return counts, alpha.astype(jnp.float32), jnp.sum(keep).astype(jnp.int32)
+
+
+def sparse_quantize_np(q: np.ndarray, mode: int, param: float, ell: int):
+    """Plain-numpy restatement (used by python tests as a second oracle)."""
+    v = q.shape[0]
+    order = np.lexsort((np.arange(v), -q.astype(np.float64)))
+    rank = np.empty(v, dtype=np.int64)
+    rank[order] = np.arange(v)
+    if mode == MODE_TOPK:
+        keep = rank < int(param)
+    else:
+        keep = (q >= np.float32(param)) | (rank == 0)
+    alpha = np.float32(q[~keep].sum(dtype=np.float32))
+    s = np.float32(q[keep].sum(dtype=np.float32))
+    qbar = np.where(keep, (q / s).astype(np.float32), np.float32(0.0))
+    b = np.floor(np.float32(ell) * qbar + np.float32(0.5)).astype(np.int64)
+    d = int(b.sum()) - int(ell)
+    zeta = b.astype(np.float32) - np.float32(ell) * qbar
+    if d > 0:
+        cand = np.lexsort((np.arange(v), -zeta.astype(np.float64)))
+        cand = [i for i in cand if keep[i]][:d]
+        b[cand] -= 1
+    elif d < 0:
+        cand = np.lexsort((np.arange(v), zeta.astype(np.float64)))
+        cand = [i for i in cand if keep[i]][: -d]
+        b[np.asarray(cand, dtype=np.int64)] += 1
+    return b.astype(np.int32), alpha, int(keep.sum())
+
+
+def softmax_t(logits, temp):
+    """Temperature softmax; temp -> 0 approaches argmax (clamped for safety)."""
+    t = jnp.maximum(jnp.asarray(temp, jnp.float32), 1e-4)
+    z = logits / t
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,119 @@
+"""Fused sparsify + sparse-lattice-quantize (SQS) as a Pallas kernel (L1).
+
+This is the paper's per-token compute hot-spot on the edge device: given
+the SLM's next-token distribution q, (i) select the support — top-K (K-SQS)
+or threshold beta (C-SQS, eq. (6)) — (ii) renormalize, (iii) project onto
+the lattice {b/ell : sum b = ell} with the largest-remainder correction of
+Algorithm 2, and (iv) report the dropped mass alpha_n used by the online
+conformal update (eq. (8)).
+
+TPU adaptation (DESIGN.md §3): data-dependent sorts are hostile to the
+TPU's vector unit, so both the top-K selection and the largest-remainder
+correction are done by *rank computation* — O(V^2) broadcast comparisons
+that lower to dense VPU ops.  At V=256 the V x V compare tile is 256 KiB
+in VMEM, far below budget; FLOPs are traded for the absence of control
+flow, the classic TPU move.
+
+Lowered with `interpret=True` (see attention.py for why) and AOT-exported
+both standalone (`sqs_kernel.hlo.txt`, for rust<->python cross-checks) and
+fused after the SLM decode step (`slm_decode_sqs.hlo.txt`).
+
+Semantics are defined by `ref.sparse_quantize_ref`; tie-breaks are by
+ascending index everywhere, so the rust mirror can reproduce them exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MODE_TOPK = 0
+MODE_THRESHOLD = 1
+
+
+def _rank_desc_block(x, valid, n):
+    """rank[i] = #{j : valid_j and (x_j > x_i or (x_j == x_i and j < i))}.
+
+    Invalid entries receive rank n so they never win a `rank < d` contest.
+    """
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    idx_t = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    xi = x[None, :]
+    xj = x[:, None]
+    beats = (xi > xj) | ((xi == xj) & (idx < idx_t))
+    beats = beats & valid[None, :]
+    rank = jnp.sum(beats.astype(jnp.int32), axis=1)
+    return jnp.where(valid, rank, n)
+
+
+def _sqs_kernel(q_ref, mode_ref, param_ref, ell_ref,
+                counts_ref, alpha_ref, kept_ref):
+    q = q_ref[...].astype(jnp.float32)  # [V]
+    v = q.shape[0]
+    mode = mode_ref[0]
+    param = param_ref[0]
+    ell_i = ell_ref[0]
+    ell_f = ell_i.astype(jnp.float32)
+
+    all_valid = jnp.ones((v,), jnp.bool_)
+    r = _rank_desc_block(q, all_valid, v)
+
+    keep_topk = r < param.astype(jnp.int32)
+    keep_thr = (q >= param) | (r == 0)
+    keep = jnp.where(mode == MODE_TOPK, keep_topk, keep_thr)
+
+    alpha = jnp.sum(jnp.where(keep, 0.0, q))
+    s = jnp.sum(jnp.where(keep, q, 0.0))
+    qbar = jnp.where(keep, q / s, 0.0)
+
+    b = jnp.floor(ell_f * qbar + 0.5)
+    d = (jnp.sum(b) - ell_f).astype(jnp.int32)
+    zeta = b - ell_f * qbar
+
+    rz_hi = _rank_desc_block(zeta, keep, v)
+    rz_lo = _rank_desc_block(-zeta, keep, v)
+    dec = keep & (rz_hi < d)
+    inc = keep & (rz_lo < (-d))
+    b = b - jnp.where(dec, 1.0, 0.0) + jnp.where(inc, 1.0, 0.0)
+
+    counts_ref[...] = b.astype(jnp.int32)
+    alpha_ref[0] = alpha
+    kept_ref[0] = jnp.sum(keep.astype(jnp.int32))
+
+
+def sparse_quantize(q, mode, param, ell, *, interpret: bool = True):
+    """Pallas-fused SQS quantizer.
+
+    q: [V] f32 probabilities; mode: scalar i32; param: scalar f32
+    (K for top-K mode, beta for threshold mode); ell: scalar i32.
+
+    Returns (counts i32[V], alpha f32, kept i32).
+    """
+    v = q.shape[0]
+    mode_a = jnp.reshape(jnp.asarray(mode, jnp.int32), (1,))
+    param_a = jnp.reshape(jnp.asarray(param, jnp.float32), (1,))
+    ell_a = jnp.reshape(jnp.asarray(ell, jnp.int32), (1,))
+
+    counts, alpha, kept = pl.pallas_call(
+        _sqs_kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((v,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((v,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, mode_a, param_a, ell_a)
+    return counts, alpha[0], kept[0]

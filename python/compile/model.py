@@ -1,0 +1,237 @@
+"""L2: byte-level GPT-style transformer in JAX, calling the L1 kernels.
+
+One forward primitive — `forward_window` — serves every serving phase:
+
+  * prefill : window = the whole token buffer, start = 0
+  * decode  : window = 1 token at position `pos` (draft loop / AR baseline)
+  * verify  : window = LD1 consecutive tokens starting at `start`
+              (the last accepted token + up to LD1-1 draft tokens)
+
+The KV cache is an explicit functional value `[n_layers, 2, s_max, d]`
+(rust owns the buffers; see rust/src/model/kv.rs).  `forward_window`
+writes the window's K/V rows into the cache *before* attending, so
+re-decoding a position after a speculative rejection simply overwrites the
+stale rows — KV rollback is a position-counter reset, never a copy.
+
+Architecture: pre-LN, learned positional embeddings, GELU MLP, weight-tied
+LM head.  Attention goes through the Pallas flash kernel when the window
+is block-aligned (prefill/verify), through the jnp reference otherwise
+(decode's single-row query; also training, where interpret-mode Pallas
+would dominate step time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.attention import attention as pallas_attention
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 256
+    s_max: int = 256      # KV buffer length == max sequence length
+    ld1: int = 16         # verify window: 1 context token + up to 15 drafts
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, l, v, s = self.d_model, self.d_ff, self.n_layers, self.vocab, self.s_max
+        per_block = 4 * d * d + 2 * d * f + f + d + 4 * d
+        return v * d + s * d + l * per_block + 2 * d
+
+
+# SLM (edge draft) and LLM (cloud target) configurations.  The paper uses
+# GPT-Neo-125M / 1.3B; these are laptop-scale substitutes with the same
+# ~6x parameter ratio trained on the same corpus (DESIGN.md §2).
+SLM_CONFIG = Config(d_model=64, n_heads=2, n_layers=2, d_ff=256)
+LLM_CONFIG = Config(d_model=160, n_heads=4, n_layers=4, d_ff=640)
+
+
+def init_params(cfg: Config, key: jax.Array) -> Params:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    std = 0.02
+    resid_std = std / np.sqrt(2 * cfg.n_layers)
+    d, f = cfg.d_model, cfg.d_ff
+
+    def nrm(k, shape, s):
+        return (jax.random.normal(k, shape, jnp.float32) * s)
+
+    blocks: List[Params] = []
+    for i in range(cfg.n_layers):
+        bk = jax.random.split(keys[2 + i], 6)
+        blocks.append(dict(
+            ln1_g=jnp.ones((d,)), ln1_b=jnp.zeros((d,)),
+            wq=nrm(bk[0], (d, d), std), wk=nrm(bk[1], (d, d), std),
+            wv=nrm(bk[2], (d, d), std), wo=nrm(bk[3], (d, d), resid_std),
+            ln2_g=jnp.ones((d,)), ln2_b=jnp.zeros((d,)),
+            w1=nrm(bk[4], (d, f), std), b1=jnp.zeros((f,)),
+            w2=nrm(bk[5], (f, d), resid_std), b2=jnp.zeros((d,)),
+        ))
+    return dict(
+        tok_emb=nrm(keys[0], (cfg.vocab, d), std),
+        pos_emb=nrm(keys[1], (cfg.s_max, d), std),
+        blocks=blocks,
+        lnf_g=jnp.ones((d,)), lnf_b=jnp.zeros((d,)),
+    )
+
+
+# Flat parameter ordering shared with the rust runtime (manifest.json lists
+# the same names/shapes; rust uploads the tensors once as device buffers and
+# passes them positionally before the per-call inputs).
+_BLOCK_KEYS = ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+               "ln2_g", "ln2_b", "w1", "b1", "w2", "b2")
+
+
+def param_names(cfg: Config) -> List[str]:
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [f"b{i}_{k}" for k in _BLOCK_KEYS]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def params_flatten(cfg: Config, params: Params) -> List[jnp.ndarray]:
+    flat = [params["tok_emb"], params["pos_emb"]]
+    for blk in params["blocks"]:
+        flat += [blk[k] for k in _BLOCK_KEYS]
+    flat += [params["lnf_g"], params["lnf_b"]]
+    return flat
+
+
+def params_unflatten(cfg: Config, flat) -> Params:
+    flat = list(flat)
+    tok_emb, pos_emb = flat[0], flat[1]
+    blocks = []
+    off = 2
+    for _ in range(cfg.n_layers):
+        blocks.append(dict(zip(_BLOCK_KEYS, flat[off:off + len(_BLOCK_KEYS)])))
+        off += len(_BLOCK_KEYS)
+    return dict(tok_emb=tok_emb, pos_emb=pos_emb, blocks=blocks,
+                lnf_g=flat[off], lnf_b=flat[off + 1])
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def zero_kv(cfg: Config) -> jnp.ndarray:
+    return jnp.zeros((cfg.n_layers, 2, cfg.s_max, cfg.d_model), jnp.float32)
+
+
+def forward_window(cfg: Config, params: Params, tokens: jnp.ndarray,
+                   start: jnp.ndarray, kv: jnp.ndarray,
+                   use_pallas: bool = True):
+    """Run `W = tokens.shape[0]` positions starting at `start` through the model.
+
+    tokens: [W] i32; start: scalar i32; kv: [L, 2, S, d] f32.
+    Returns (logits [W, V] f32, kv' [L, 2, S, d]).
+
+    Window row i is global position start+i and attends to cache columns
+    j <= start+i (its own K/V row included — written before attending).
+    """
+    w = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    pos = start + jnp.arange(w)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]
+
+    new_kv = []
+    for li, blk in enumerate(params["blocks"]):
+        xn = _ln(x, blk["ln1_g"], blk["ln1_b"])
+        q = xn @ blk["wq"]
+        k_new = xn @ blk["wk"]
+        v_new = xn @ blk["wv"]
+        k_buf = jax.lax.dynamic_update_slice(kv[li, 0], k_new, (start, 0))
+        v_buf = jax.lax.dynamic_update_slice(kv[li, 1], v_new, (start, 0))
+        qh = q.reshape(w, h, dh)
+        kh = k_buf.reshape(cfg.s_max, h, dh)
+        vh = v_buf.reshape(cfg.s_max, h, dh)
+        if use_pallas and w % 8 == 0 and w >= 8:
+            att = pallas_attention(qh, kh, vh, start,
+                                   block_q=min(64, w), block_k=64)
+        else:
+            att = kref.attention_ref(qh, kh, vh, start)
+        x = x + att.reshape(w, cfg.d_model) @ blk["wo"]
+        xn2 = _ln(x, blk["ln2_g"], blk["ln2_b"])
+        hdn = jax.nn.gelu(xn2 @ blk["w1"] + blk["b1"])
+        x = x + hdn @ blk["w2"] + blk["b2"]
+        new_kv.append(jnp.stack([k_buf, v_buf]))
+
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T
+    return logits, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# Serving-phase wrappers (these are what aot.py lowers to HLO)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: Config, params: Params, tokens: jnp.ndarray, n: jnp.ndarray,
+            use_pallas: bool = True):
+    """Process the whole padded buffer; return logits at position n-1 + cache.
+
+    tokens: [s_max] i32 (positions >= n are padding; their K/V rows are
+    garbage but are overwritten by decode/verify before ever being
+    attended to — see forward_window's write-before-attend contract).
+    """
+    logits, kv = forward_window(cfg, params, tokens, jnp.asarray(0, jnp.int32),
+                                zero_kv(cfg), use_pallas=use_pallas)
+    last = jnp.take(logits, n - 1, axis=0)
+    return last, kv
+
+
+def decode(cfg: Config, params: Params, token: jnp.ndarray, pos: jnp.ndarray,
+           kv: jnp.ndarray):
+    """Single-token decode step: logits for position pos+1's prediction."""
+    logits, kv = forward_window(cfg, params, jnp.reshape(token, (1,)), pos, kv,
+                                use_pallas=False)
+    return logits[0], kv
+
+
+def verify(cfg: Config, params: Params, tokens: jnp.ndarray, start: jnp.ndarray,
+           kv: jnp.ndarray, temp: jnp.ndarray, use_pallas: bool = True):
+    """Verify window: probs (temperature softmax) for ld1 positions.
+
+    tokens: [ld1] = [last accepted token, draft_1 .. draft_{ld1-1}] (padded).
+    probs[i] is the target model's next-token distribution *after* seeing
+    tokens[:i+1] — i.e. the distribution draft_{i+1} is verified against.
+    """
+    logits, kv = forward_window(cfg, params, tokens, start, kv,
+                                use_pallas=use_pallas)
+    return kref.softmax_t(logits, temp), kv
+
+
+def loss_fn(cfg: Config, params: Params, batch: jnp.ndarray):
+    """Mean next-token cross-entropy; batch [B, T+1] i32."""
+    inp, tgt = batch[:, :-1], batch[:, 1:]
+    b, t = inp.shape
+
+    def single(tok):
+        logits, _ = forward_window(
+            cfg, params, tok, jnp.asarray(0, jnp.int32),
+            jnp.zeros((cfg.n_layers, 2, cfg.s_max, cfg.d_model), jnp.float32),
+            use_pallas=False)
+        return logits[:t]
+
+    logits = jax.vmap(single)(inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

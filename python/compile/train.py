@@ -1,0 +1,108 @@
+"""Build-time training of the SLM (draft) and LLM (target) models.
+
+Runs once under `make artifacts`; weights are cached in
+`artifacts/weights_{slm,llm}.npz` so subsequent artifact builds skip
+training.  Adam is hand-rolled (optax is not a guaranteed dependency of
+this image).  Training uses the jnp reference attention — interpret-mode
+Pallas in the step function would dominate wallclock; kernel parity is
+guaranteed separately by the kernel test suite.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def tree_zeros_like(t):
+    return jax.tree_util.tree_map(jnp.zeros_like, t)
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** step), m)
+    vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** step), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat)
+    return params, m, v
+
+
+def train_model(cfg: model.Config, *, steps: int, batch: int, seq_len: int,
+                lr: float, seed: int, log_every: int = 50,
+                name: str = "model") -> Tuple[Dict[str, Any], float]:
+    rng = np.random.default_rng(seed)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def step_fn(params, m, v, step, batch_tokens):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch_tokens))(params)
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    m = tree_zeros_like(params)
+    v = tree_zeros_like(params)
+    t0 = time.time()
+    loss = float("nan")
+    for i in range(1, steps + 1):
+        bt = jnp.asarray(corpus.sample_batch(rng, batch, seq_len))
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(i, jnp.float32), bt)
+        if i % log_every == 0 or i == 1:
+            print(f"[train:{name}] step {i}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params, float(loss)
+
+
+def params_to_npz(params) -> Dict[str, np.ndarray]:
+    flat = {}
+    flat["tok_emb"] = np.asarray(params["tok_emb"])
+    flat["pos_emb"] = np.asarray(params["pos_emb"])
+    flat["lnf_g"] = np.asarray(params["lnf_g"])
+    flat["lnf_b"] = np.asarray(params["lnf_b"])
+    for i, blk in enumerate(params["blocks"]):
+        for k, a in blk.items():
+            flat[f"b{i}_{k}"] = np.asarray(a)
+    return flat
+
+
+def params_from_npz(cfg: model.Config, data) -> Dict[str, Any]:
+    blocks = []
+    for i in range(cfg.n_layers):
+        blocks.append({k: jnp.asarray(data[f"b{i}_{k}"])
+                       for k in ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+                                  "ln2_g", "ln2_b", "w1", "b1", "w2", "b2")})
+    return dict(tok_emb=jnp.asarray(data["tok_emb"]),
+                pos_emb=jnp.asarray(data["pos_emb"]),
+                blocks=blocks,
+                lnf_g=jnp.asarray(data["lnf_g"]),
+                lnf_b=jnp.asarray(data["lnf_b"]))
+
+
+def load_or_train(cfg: model.Config, path: str, *, steps: int, batch: int,
+                  seq_len: int, lr: float, seed: int, name: str,
+                  retrain: bool = False):
+    if os.path.exists(path) and not retrain:
+        data = np.load(path)
+        loss = float(data["final_loss"]) if "final_loss" in data else float("nan")
+        print(f"[train:{name}] loaded cached weights from {path} "
+              f"(loss {loss:.4f})", flush=True)
+        return params_from_npz(cfg, data), loss
+    fast = os.environ.get("SQS_FAST", "") not in ("", "0")
+    if fast:
+        steps = max(20, steps // 10)
+        print(f"[train:{name}] SQS_FAST set -> {steps} steps", flush=True)
+    params, loss = train_model(cfg, steps=steps, batch=batch, seq_len=seq_len,
+                               lr=lr, seed=seed, name=name)
+    flat = params_to_npz(params)
+    flat["final_loss"] = np.asarray(loss)
+    np.savez(path, **flat)
+    print(f"[train:{name}] saved weights to {path}", flush=True)
+    return params, loss

@@ -1,0 +1,88 @@
+"""AOT export integrity: manifests, weight blobs, HLO text round-trip.
+
+Skipped (not failed) when artifacts have not been built yet — `make test`
+always builds them first; bare `pytest` from a fresh checkout stays green
+on the pure-python tests.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+EXPECTED_ARTIFACTS = [
+    "slm_prefill", "slm_decode", "slm_decode_sqs",
+    "llm_prefill", "llm_decode", "llm_verify", "sqs_kernel",
+]
+
+
+def test_all_artifacts_present(manifest):
+    for name in EXPECTED_ARTIFACTS:
+        assert name in manifest["artifacts"], name
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        assert os.path.exists(path), path
+        assert os.path.getsize(path) > 1000
+
+
+def test_hlo_text_is_parseable_text(manifest):
+    """HLO text (the 0.5.1-compatible interchange) — not a serialized proto."""
+    for name in EXPECTED_ARTIFACTS:
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name} missing HloModule header"
+        assert "ENTRY" in open(path).read(), f"{name} missing ENTRY"
+
+
+def test_weight_blobs_match_index(manifest):
+    for m, info in manifest["models"].items():
+        blob = os.path.join(ART, info["weights_bin"])
+        size = os.path.getsize(blob)
+        total = sum(e["numel"] * 4 for e in info["weights_index"])
+        assert size == total, f"{m}: blob {size} != index {total}"
+        assert info["params"] == sum(e["numel"] for e in info["weights_index"])
+        # offsets are contiguous and ordered
+        off = 0
+        for e in info["weights_index"]:
+            assert e["offset"] == off
+            off += e["numel"] * 4
+
+
+def test_weights_load_and_are_finite(manifest):
+    for m, info in manifest["models"].items():
+        blob = os.path.join(ART, info["weights_bin"])
+        data = np.fromfile(blob, dtype="<f4")
+        assert np.isfinite(data).all(), f"{m} has non-finite weights"
+        assert np.abs(data).max() < 1e3
+
+
+def test_models_actually_trained(manifest):
+    """Final loss must beat the uniform-distribution baseline ln(256)=5.55
+    by a wide margin; otherwise the SD acceptance dynamics are meaningless."""
+    for m, info in manifest["models"].items():
+        assert info["final_loss"] < 3.0, (m, info["final_loss"])
+
+
+def test_decode_sqs_arg_spec(manifest):
+    art = manifest["artifacts"]["slm_decode_sqs"]
+    names = [a["name"] for a in art["args"]]
+    assert names == ["token", "pos", "kv", "temp", "mode", "param", "ell"]
+    assert art["outputs"] == ["counts", "alpha", "kept", "probs", "kv"]
+    kv = art["args"][2]["shape"]
+    slm = manifest["models"]["slm"]
+    assert kv == [slm["n_layers"], 2, slm["s_max"], slm["d_model"]]

@@ -1,0 +1,180 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes, seeds, and SQS parameters; these tests are the
+normative correctness signal for everything the AOT artifacts contain.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.sparse_quant import sparse_quantize, MODE_TOPK, MODE_THRESHOLD
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sq_blocks=st.integers(1, 4),
+    block_q=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32, 40]),
+    offset=st.integers(0, 128),
+)
+def test_attention_matches_ref(seed, sq_blocks, block_q, h, dh, offset):
+    skv = 256
+    sq = sq_blocks * block_q
+    offset = min(offset, skv - sq)  # window must fit in the buffer
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((sq, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((skv, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((skv, h, dh)), jnp.float32)
+    got = attention(q, k, v, offset, block_q=block_q, block_k=64)
+    want = ref.attention_ref(q, k, v, offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_causality():
+    """Changing K/V strictly in the masked-out future must not change output."""
+    rng = np.random.default_rng(7)
+    sq, skv, h, dh = 16, 256, 2, 16
+    offset = 40
+    q = jnp.asarray(rng.standard_normal((sq, h, dh)), jnp.float32)
+    k = rng.standard_normal((skv, h, dh)).astype(np.float32)
+    v = rng.standard_normal((skv, h, dh)).astype(np.float32)
+    out1 = attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), offset,
+                     block_q=16)
+    # poison everything beyond the last attendable column (offset+sq-1)
+    k2, v2 = k.copy(), v.copy()
+    k2[offset + sq:] = 1e3
+    v2[offset + sq:] = -1e3
+    out2 = attention(jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), offset,
+                     block_q=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_attention_rows_independent_of_padding_rows():
+    """Row i only depends on columns <= offset+i (windowed causality)."""
+    rng = np.random.default_rng(3)
+    sq, skv, h, dh = 16, 128, 1, 8
+    q = jnp.asarray(rng.standard_normal((sq, h, dh)), jnp.float32)
+    k = rng.standard_normal((skv, h, dh)).astype(np.float32)
+    v = rng.standard_normal((skv, h, dh)).astype(np.float32)
+    base = np.asarray(attention(q, jnp.asarray(k), jnp.asarray(v), 0, block_q=16))
+    # poison columns 8.. ; rows 0..7 must be unchanged
+    k2, v2 = k.copy(), v.copy()
+    k2[8:] = 50.0
+    v2[8:] = -50.0
+    out = np.asarray(attention(q, jnp.asarray(k2), jnp.asarray(v2), 0, block_q=16))
+    np.testing.assert_allclose(out[:8], base[:8], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sparse_quantize
+# ---------------------------------------------------------------------------
+
+def _rand_probs(rng, v, sharpness):
+    logits = rng.standard_normal(v).astype(np.float32) * sharpness
+    return np.asarray(jax.nn.softmax(jnp.asarray(logits)), np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    v=st.sampled_from([8, 32, 128, 256]),
+    sharpness=st.floats(0.1, 8.0),
+    mode=st.sampled_from([MODE_TOPK, MODE_THRESHOLD]),
+    ell=st.sampled_from([10, 64, 100, 333, 1000]),
+)
+def test_sqs_kernel_matches_oracles(seed, v, sharpness, mode, ell):
+    rng = np.random.default_rng(seed)
+    q = _rand_probs(rng, v, sharpness)
+    if mode == MODE_TOPK:
+        param = float(rng.integers(1, v + 1))
+    else:
+        param = float(rng.uniform(0, 1.2 / np.sqrt(v)))
+    counts, alpha, kept = sparse_quantize(jnp.asarray(q), mode, param, ell)
+    cr, ar, kr = ref.sparse_quantize_ref(jnp.asarray(q), mode, param, ell)
+    cn, an, kn = ref.sparse_quantize_np(q, mode, param, ell)
+    counts = np.asarray(counts)
+    assert (counts == np.asarray(cr)).all(), "pallas != jnp ref"
+    assert (counts == cn).all(), "pallas != numpy ref"
+    assert int(kept) == int(kr) == kn
+    np.testing.assert_allclose(float(alpha), float(ar), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(alpha), float(an), rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sharpness=st.floats(0.1, 8.0),
+    k=st.integers(1, 256),
+    ell=st.sampled_from([16, 100, 500]),
+)
+def test_sqs_topk_invariants(seed, sharpness, k, ell):
+    rng = np.random.default_rng(seed)
+    q = _rand_probs(rng, 256, sharpness)
+    counts, alpha, kept = ref.sparse_quantize_np(q, MODE_TOPK, float(k), ell)
+    assert counts.sum() == ell, "lattice counts must sum to ell"
+    assert (counts >= 0).all()
+    assert kept == k
+    assert 0.0 <= alpha <= 1.0
+    # support is exactly the top-k (counts nonzero only within it)
+    order = np.argsort(-q.astype(np.float64), kind="stable")
+    topk = set(order[:k].tolist())
+    assert set(np.nonzero(counts)[0].tolist()) <= topk
+    # TV(qbar, qhat) <= K/(4 ell)  — eq. (20) of the paper
+    s = q[list(topk)].sum(dtype=np.float32)
+    qbar = np.zeros_like(q)
+    for i in topk:
+        qbar[i] = q[i] / s
+    tv = 0.5 * np.abs(qbar - counts / ell).sum()
+    assert tv <= k / (4 * ell) + 1e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sharpness=st.floats(0.1, 8.0),
+    beta=st.floats(0.0, 1.5),
+    ell=st.sampled_from([16, 100, 500]),
+)
+def test_sqs_threshold_invariants(seed, sharpness, beta, ell):
+    rng = np.random.default_rng(seed)
+    q = _rand_probs(rng, 256, sharpness)
+    counts, alpha, kept = ref.sparse_quantize_np(q, MODE_THRESHOLD, beta, ell)
+    assert counts.sum() == ell
+    assert kept >= 1, "arg-max token always kept (Lemma 4 semantics)"
+    # support = {q >= beta} U {argmax}
+    expect = (q >= np.float32(beta))
+    expect[np.argmax(q)] = True
+    assert kept == expect.sum()
+    # alpha equals the dropped mass by definition (Lemma 1)
+    np.testing.assert_allclose(alpha, q[~expect].sum(dtype=np.float32),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_sqs_degenerate_top1():
+    """beta > max(q): only the arg-max survives and gets all ell counts."""
+    q = np.asarray(jax.nn.softmax(jnp.arange(16) * 0.1), np.float32)
+    counts, alpha, kept = ref.sparse_quantize_np(q, MODE_THRESHOLD, 0.99, 100)
+    assert kept == 1
+    assert counts[15] == 100
+    np.testing.assert_allclose(alpha, 1.0 - q[15], rtol=1e-6)
+
+
+def test_softmax_t_sharpening():
+    logits = jnp.asarray([1.0, 0.5, 0.0, -1.0])
+    p_hi = np.asarray(ref.softmax_t(logits, 1.0))
+    p_lo = np.asarray(ref.softmax_t(logits, 0.2))
+    assert p_lo[0] > p_hi[0]          # lower temperature sharpens
+    np.testing.assert_allclose(p_hi.sum(), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(p_lo.sum(), 1.0, rtol=1e-6)

@@ -1,0 +1,139 @@
+"""L2 model semantics: the serving phases must compose exactly.
+
+prefill -> decode -> decode must equal a from-scratch full forward; the
+verify window must reproduce the target model's per-position next-token
+distributions.  These are the invariants the rust coordinator relies on
+when it reuses KV caches across speculative batches and rolls back after
+rejections.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+from compile.kernels import ref as kref
+
+CFG = model.Config(d_model=32, n_heads=2, n_layers=2, d_ff=64, s_max=64, ld1=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def full_logits(params, toks):
+    lg, _ = model.forward_window(CFG, params, jnp.asarray(toks, jnp.int32),
+                                 jnp.asarray(0, jnp.int32), model.zero_kv(CFG),
+                                 use_pallas=False)
+    return np.asarray(lg)
+
+
+def test_param_count_matches_config(params):
+    n = sum(int(np.asarray(a).size) for a in model.params_flatten(CFG, params))
+    assert n == CFG.param_count()
+
+
+def test_flatten_roundtrip(params):
+    flat = model.params_flatten(CFG, params)
+    assert len(flat) == len(model.param_names(CFG))
+    back = model.params_unflatten(CFG, flat)
+    lg1 = full_logits(params, np.arange(10) % 256)
+    lg2 = full_logits(back, np.arange(10) % 256)
+    np.testing.assert_array_equal(lg1, lg2)
+
+
+def test_prefill_matches_full_forward(params):
+    toks = corpus.encode("The capital of France is")[: CFG.s_max].astype(np.int32)
+    n = len(toks)
+    buf = np.zeros(CFG.s_max, np.int32)
+    buf[:n] = toks
+    lg, _ = model.prefill(CFG, params, jnp.asarray(buf), jnp.asarray(n, jnp.int32),
+                          use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg), full_logits(params, toks)[n - 1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_chain_matches_full_forward(params):
+    toks = corpus.encode("Once there was a fox")[: CFG.s_max].astype(np.int32)
+    n = len(toks)
+    buf = np.zeros(CFG.s_max, np.int32)
+    buf[:n] = toks
+    lg, kv = model.prefill(CFG, params, jnp.asarray(buf),
+                           jnp.asarray(n, jnp.int32), use_pallas=False)
+    seq = list(toks)
+    pos = n
+    for _ in range(5):
+        nxt = int(jnp.argmax(lg))
+        lg, kv = model.decode(CFG, params, jnp.asarray(nxt, jnp.int32),
+                              jnp.asarray(pos, jnp.int32), kv)
+        seq.append(nxt)
+        pos += 1
+        want = full_logits(params, np.asarray(seq, np.int32))[-1]
+        np.testing.assert_allclose(np.asarray(lg), want, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_overwrite_position_is_rollback(params):
+    """Re-decoding at the same position with a different token must equal a
+    fresh context containing that token — the KV rollback contract."""
+    toks = corpus.encode("The river ran")[: CFG.s_max].astype(np.int32)
+    n = len(toks)
+    buf = np.zeros(CFG.s_max, np.int32)
+    buf[:n] = toks
+    _, kv = model.prefill(CFG, params, jnp.asarray(buf),
+                          jnp.asarray(n, jnp.int32), use_pallas=False)
+    # decode token 'x' at position n, then pretend it was rejected and
+    # decode token 'y' at the SAME position with the same cache object
+    _, kv_after_x = model.decode(CFG, params, jnp.asarray(120, jnp.int32),
+                                 jnp.asarray(n, jnp.int32), kv)
+    lg_y, _ = model.decode(CFG, params, jnp.asarray(97, jnp.int32),
+                           jnp.asarray(n, jnp.int32), kv_after_x)
+    want = full_logits(params, np.concatenate([toks, [97]]))[-1]
+    np.testing.assert_allclose(np.asarray(lg_y), want, rtol=1e-4, atol=1e-4)
+
+
+def test_verify_window_matches_full_forward(params):
+    ctx = corpus.encode("To make the bread, first")[: CFG.s_max - CFG.ld1]
+    ctx = ctx.astype(np.int32)
+    n = len(ctx)
+    buf = np.zeros(CFG.s_max, np.int32)
+    buf[:n] = ctx
+    _, kv = model.prefill(CFG, params, jnp.asarray(buf),
+                          jnp.asarray(n, jnp.int32), use_pallas=False)
+    drafts = corpus.encode(" dissolv")[: CFG.ld1 - 1].astype(np.int32)
+    window = np.zeros(CFG.ld1, np.int32)
+    window[0] = ctx[-1]
+    window[1: 1 + len(drafts)] = drafts
+    temp = 0.8
+    probs, _ = model.verify(CFG, params, jnp.asarray(window),
+                            jnp.asarray(n - 1, jnp.int32), kv,
+                            jnp.asarray(temp, jnp.float32), use_pallas=False)
+    ext = np.concatenate([ctx, drafts])
+    want = np.asarray(kref.softmax_t(
+        jnp.asarray(full_logits(params, ext)[n - 1: n - 1 + len(drafts) + 1]),
+        temp))
+    np.testing.assert_allclose(np.asarray(probs)[: len(drafts) + 1], want,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_and_ref_paths_agree(params):
+    """prefill with Pallas attention == prefill with jnp reference attention."""
+    toks = corpus.encode("A distributed system is a collection")
+    toks = toks[: CFG.s_max].astype(np.int32)
+    n = len(toks)
+    buf = np.zeros(CFG.s_max, np.int32)
+    buf[:n] = toks
+    lg_p, kv_p = model.prefill(CFG, params, jnp.asarray(buf),
+                               jnp.asarray(n, jnp.int32), use_pallas=True)
+    lg_r, kv_r = model.prefill(CFG, params, jnp.asarray(buf),
+                               jnp.asarray(n, jnp.int32), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_corpus_roundtrip():
+    s = "Hello, edge-cloud!"
+    assert corpus.decode(corpus.encode(s)) == s
+    assert corpus.corpus_bytes().max() < 256
+    assert len(corpus.corpus_text()) > 3000

@@ -1,0 +1,82 @@
+//! FIG2 — paper Figure 2: average end-to-end latency and resampling rate
+//! for K-SQS vs C-SQS across sampling temperatures, at the paper's
+//! operating point (B = 5000 bits, ell = 100, C-SQS eta = 0.001,
+//! alpha = 0.0005; K-SQS K = 8).
+//!
+//!   cargo bench --bench fig2_temperature_sweep [-- --synthetic]
+//!
+//! Expected shape (paper §4): K-SQS wins at low temperature (sharp drafts
+//! fit a fixed top-K), C-SQS wins at high temperature (adaptive support
+//! tracks the flattening distribution) — a crossover, which the harness
+//! checks and reports.
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::exp::{backend_from_args, fast_mode, run_point, temp_grid, CsvOut};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let backend = backend_from_args()?;
+    let full = !fast_mode();
+    let temps = temp_grid(full);
+    let sessions = if fast_mode() { 2 } else { 4 };
+    let max_new = if fast_mode() { 24 } else { 48 };
+    let link = LinkConfig::default();
+
+    let policies = [
+        ("K-SQS(K=8)", Policy::KSqs { k: 8 }),
+        ("C-SQS", Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 }),
+    ];
+
+    println!("== FIG2: latency & resampling rate vs temperature ({} backend) ==",
+             backend.name());
+    println!("{:<12} {:>5} {:>12} {:>12} {:>12} {:>10} {:>10}",
+             "policy", "T", "latency_s", "ci95", "resample", "accept", "mean_K");
+    let mut csv = CsvOut::new(
+        "fig2.csv",
+        "policy,temp,latency_s,latency_ci95,resampling_rate,acceptance,mean_k,bits_per_token",
+    );
+
+    let mut lat = vec![vec![0.0f64; temps.len()]; policies.len()];
+
+    for (pi, (name, policy)) in policies.iter().enumerate() {
+        for (ti, &t) in temps.iter().enumerate() {
+            let s = run_point(&backend, *policy, t, link, sessions, max_new, 42)?;
+            lat[pi][ti] = s.latency_s.mean();
+            println!(
+                "{name:<12} {t:>5.1} {:>12.4} {:>12.4} {:>12.3} {:>10.3} {:>10.1}",
+                s.latency_s.mean(), s.latency_s.ci95(),
+                s.resampling_rate.mean(), s.acceptance.mean(), s.mean_k.mean()
+            );
+            csv.row(format!(
+                "{name},{t},{},{},{},{},{},{}",
+                s.latency_s.mean(), s.latency_s.ci95(), s.resampling_rate.mean(),
+                s.acceptance.mean(), s.mean_k.mean(), s.bits_per_token.mean()
+            ));
+        }
+        println!();
+    }
+    csv.finish();
+
+    // paper-shape report: latency must rise with temperature for both, and
+    // the K-SQS/C-SQS ordering should flip somewhere in the sweep
+    let last = temps.len() - 1;
+    println!("-- shape checks --");
+    for (pi, (name, _)) in policies.iter().enumerate() {
+        let rising = lat[pi][last] > lat[pi][0];
+        println!("{name}: latency rises with T: {}",
+                 if rising { "YES (paper shape)" } else { "NO" });
+    }
+    let k_minus_c_low = lat[0][0] - lat[1][0];
+    let k_minus_c_high = lat[0][last] - lat[1][last];
+    println!(
+        "low-T advantage (K-SQS minus C-SQS latency): {k_minus_c_low:+.4}s; \
+         high-T: {k_minus_c_high:+.4}s"
+    );
+    if k_minus_c_low < 0.0 && k_minus_c_high > 0.0 {
+        println!("crossover: YES — K-SQS better at low T, C-SQS better at high T (paper Fig. 2)");
+    } else {
+        println!("crossover: pattern = ({k_minus_c_low:+.4}, {k_minus_c_high:+.4}) — \
+                  see EXPERIMENTS.md discussion");
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! FIG4 — paper Figure 4 (Appendix A.4.1): latency versus the scheme
+//! hyperparameter — K for K-SQS, initial threshold beta0 for C-SQS —
+//! across temperature settings.
+//!
+//!   cargo bench --bench fig4_hyperparam_ablation [-- --synthetic]
+//!
+//! Paper shape: small K is fast but unstable, large K robust but slower;
+//! C-SQS's beta0 matters much less because the conformal update washes
+//! out the initialization.
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::exp::{backend_from_args, fast_mode, run_point, CsvOut};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let backend = backend_from_args()?;
+    let temps: Vec<f32> = vec![0.2, 0.5, 0.8];
+    let ks: Vec<usize> = if fast_mode() { vec![2, 8, 32] } else { vec![2, 4, 8, 16, 32] };
+    let betas: Vec<f64> = if fast_mode() {
+        vec![1e-4, 1e-2]
+    } else {
+        vec![1e-4, 1e-3, 1e-2, 5e-2]
+    };
+    let sessions = if fast_mode() { 2 } else { 3 };
+    let max_new = if fast_mode() { 24 } else { 48 };
+    let link = LinkConfig::default();
+
+    println!("== FIG4a: K-SQS latency vs K ({} backend) ==", backend.name());
+    println!("{:>6} {:>5} {:>12} {:>12} {:>10}", "K", "T", "latency_s",
+             "resample", "bits/tok");
+    let mut csv = CsvOut::new("fig4_k.csv",
+                              "k,temp,latency_s,resampling_rate,bits_per_token");
+    for &k in &ks {
+        for &t in &temps {
+            let s = run_point(&backend, Policy::KSqs { k }, t, link, sessions,
+                              max_new, 17)?;
+            println!("{k:>6} {t:>5.1} {:>12.4} {:>12.3} {:>10.0}",
+                     s.latency_s.mean(), s.resampling_rate.mean(),
+                     s.bits_per_token.mean());
+            csv.row(format!("{k},{t},{},{},{}", s.latency_s.mean(),
+                            s.resampling_rate.mean(), s.bits_per_token.mean()));
+        }
+    }
+    csv.finish();
+
+    println!("\n== FIG4b: C-SQS latency vs beta0 ({} backend) ==", backend.name());
+    println!("{:>10} {:>5} {:>12} {:>12} {:>10}", "beta0", "T", "latency_s",
+             "resample", "mean_K");
+    let mut csv = CsvOut::new("fig4_beta.csv",
+                              "beta0,temp,latency_s,resampling_rate,mean_k");
+    for &b0 in &betas {
+        for &t in &temps {
+            let s = run_point(
+                &backend,
+                Policy::CSqs { beta0: b0, alpha: 0.0005, eta: 0.001 },
+                t, link, sessions, max_new, 19)?;
+            println!("{b0:>10.0e} {t:>5.1} {:>12.4} {:>12.3} {:>10.1}",
+                     s.latency_s.mean(), s.resampling_rate.mean(),
+                     s.mean_k.mean());
+            csv.row(format!("{b0},{t},{},{},{}", s.latency_s.mean(),
+                            s.resampling_rate.mean(), s.mean_k.mean()));
+        }
+    }
+    csv.finish();
+    Ok(())
+}

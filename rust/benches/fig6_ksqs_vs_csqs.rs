@@ -1,0 +1,65 @@
+//! FIG6 — paper Figure 6 (Appendix A.4.3): K-SQS at several K values vs
+//! C-SQS, latency and resampling rate across the full temperature range.
+//!
+//!   cargo bench --bench fig6_ksqs_vs_csqs [-- --synthetic]
+//!
+//! Paper shape: small K fast-but-fragile, large K reliable-but-slower;
+//! C-SQS tracks the best operating point as temperature (uncertainty)
+//! rises.
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::exp::{backend_from_args, fast_mode, run_point, temp_grid, CsvOut};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let backend = backend_from_args()?;
+    let temps = temp_grid(!fast_mode());
+    let sessions = if fast_mode() { 2 } else { 3 };
+    let max_new = if fast_mode() { 24 } else { 48 };
+    let link = LinkConfig::default();
+
+    let policies = [
+        ("K-SQS(K=4)".to_string(), Policy::KSqs { k: 4 }),
+        ("K-SQS(K=8)".to_string(), Policy::KSqs { k: 8 }),
+        ("K-SQS(K=16)".to_string(), Policy::KSqs { k: 16 }),
+        ("C-SQS".to_string(),
+         Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 }),
+    ];
+
+    println!("== FIG6: K-SQS (K in 4,8,16) vs C-SQS across temperature ({}) ==",
+             backend.name());
+    println!("{:<12} {:>5} {:>12} {:>12} {:>10} {:>10}",
+             "policy", "T", "latency_s", "resample", "accept", "mean_K");
+    let mut csv = CsvOut::new(
+        "fig6.csv",
+        "policy,temp,latency_s,resampling_rate,acceptance,mean_k,bits_per_token");
+
+    let mut high_t_latency: Vec<(String, f64)> = Vec::new();
+    for (name, policy) in &policies {
+        let mut last = 0.0;
+        for &t in &temps {
+            let s = run_point(&backend, *policy, t, link, sessions, max_new, 57)?;
+            println!("{name:<12} {t:>5.1} {:>12.4} {:>12.3} {:>10.3} {:>10.1}",
+                     s.latency_s.mean(), s.resampling_rate.mean(),
+                     s.acceptance.mean(), s.mean_k.mean());
+            csv.row(format!("{name},{t},{},{},{},{},{}",
+                            s.latency_s.mean(), s.resampling_rate.mean(),
+                            s.acceptance.mean(), s.mean_k.mean(),
+                            s.bits_per_token.mean()));
+            last = s.latency_s.mean();
+        }
+        high_t_latency.push((name.clone(), last));
+        println!();
+    }
+    csv.finish();
+
+    println!("-- shape checks (highest temperature) --");
+    let csqs = high_t_latency.last().unwrap().1;
+    for (name, lat) in &high_t_latency[..high_t_latency.len() - 1] {
+        println!(
+            "C-SQS vs {name} at max T: {csqs:.4}s vs {lat:.4}s ({})",
+            if csqs <= *lat { "C-SQS no worse — paper shape" } else { "K-SQS wins here" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! PERF — §Perf micro-benchmarks of the L3 hot path (hand-rolled harness;
+//! criterion is unavailable offline): per-op latency of every stage the
+//! coordinator executes per drafted token, plus the PJRT model calls.
+//!
+//!   cargo bench --bench micro_hotpath
+//!
+//! The optimization target (DESIGN.md §7): the pure-rust stages
+//! (sparsify + quantize + encode + decode + sample + verify bookkeeping)
+//! must be well under 5% of end-to-end per-token latency; the PJRT calls
+//! and the simulated wire dominate by design.
+
+use std::time::Instant;
+
+use sqs_sd::codec::{DraftFrame, DraftToken, FrameCodec};
+use sqs_sd::exp::CsvOut;
+use sqs_sd::sqs::bits::SchemeBits;
+use sqs_sd::sqs::probs::{residual, sample, sample_lattice, softmax_t};
+use sqs_sd::sqs::{sparse_quantize, Quantized, Sparsifier};
+use sqs_sd::util::check::Gen;
+use sqs_sd::util::rng::Pcg64;
+
+struct Bench {
+    rows: Vec<(String, f64, u64)>,
+}
+
+impl Bench {
+    fn time<F: FnMut() -> u64>(&mut self, name: &str, iters: usize, mut f: F) {
+        // warmup
+        let mut sink = 0u64;
+        for _ in 0..iters / 10 + 1 {
+            sink = sink.wrapping_add(f());
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sink = sink.wrapping_add(f());
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        self.rows.push((name.to_string(), per, sink));
+    }
+
+    fn report(&self) {
+        println!("{:<40} {:>14} {:>14}", "operation", "ns/op", "ops/s");
+        for (name, per, _sink) in &self.rows {
+            println!("{name:<40} {:>14.0} {:>14.0}", per * 1e9, 1.0 / per);
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let vocab = 256usize;
+    let ell = 100u32;
+    let mut g = Gen { rng: Pcg64::new(2025, 0) };
+    let mut rng = Pcg64::new(7, 7);
+    let mut b = Bench { rows: Vec::new() };
+
+    // representative inputs
+    let logits: Vec<f32> = (0..vocab).map(|_| g.f32(-4.0, 4.0)).collect();
+    let q = softmax_t(&logits, 0.8);
+    let sp_k = Sparsifier::top_k(8);
+    let sp_b = Sparsifier::threshold(0.01);
+    let quant_k = sparse_quantize(&q, &sp_k, ell);
+    let quant_b = sparse_quantize(&q, &sp_b, ell);
+    let dense_counts = quant_k.to_dense_counts(vocab);
+    let p = softmax_t(&logits.iter().map(|x| x * 1.1 + 0.1).collect::<Vec<_>>(), 0.8);
+    let qd = quant_k.to_dense_probs(vocab);
+
+    b.time("softmax_t (V=256)", 20_000, || {
+        softmax_t(&logits, 0.8)[0].to_bits() as u64
+    });
+    b.time("sparsify top-K=8 + SLQ (V=256)", 20_000, || {
+        sparse_quantize(&q, &sp_k, ell).counts[0] as u64
+    });
+    b.time("sparsify threshold + SLQ (V=256)", 20_000, || {
+        sparse_quantize(&q, &sp_b, ell).counts[0] as u64
+    });
+    b.time("sample_lattice (ell=100)", 200_000, || {
+        sample_lattice(&dense_counts, ell, &mut rng) as u64
+    });
+    b.time("residual + sample (V=256)", 50_000, || {
+        match residual(&p, &qd) {
+            Some(r) => sample(&r, &mut rng) as u64,
+            None => 0,
+        }
+    });
+
+    // codec paths (fresh codec outside the loop: the binomial memo is the
+    // steady-state configuration of a serving session)
+    let mut codec_k = FrameCodec::new(vocab, ell, SchemeBits::FixedK, 8);
+    let mut codec_a = FrameCodec::new(vocab, ell, SchemeBits::Adaptive, 0);
+    let frame_k = DraftFrame {
+        batch_id: 1,
+        tokens: (0..8)
+            .map(|_| DraftToken { quant: quant_k.clone(), token: quant_k.support[0] })
+            .collect(),
+    };
+    let frame_a = DraftFrame {
+        batch_id: 1,
+        tokens: (0..8)
+            .map(|_| DraftToken { quant: quant_b.clone(), token: quant_b.support[0] })
+            .collect(),
+    };
+    let (bytes_k, _, _) = codec_k.encode(&frame_k);
+    let (bytes_a, _, _) = codec_a.encode(&frame_a);
+
+    b.time("frame encode fixed-K (8 tokens)", 5_000, || {
+        codec_k.encode(&frame_k).1 as u64
+    });
+    b.time("frame decode fixed-K (8 tokens)", 5_000, || {
+        codec_k.decode(&bytes_k).unwrap().tokens.len() as u64
+    });
+    b.time("frame encode adaptive (8 tokens)", 5_000, || {
+        codec_a.encode(&frame_a).1 as u64
+    });
+    b.time("frame decode adaptive (8 tokens)", 5_000, || {
+        codec_a.decode(&bytes_a).unwrap().tokens.len() as u64
+    });
+    b.time("q_hat reconstruction (to_dense)", 100_000, || {
+        quant_k.to_dense_probs(vocab)[0].to_bits() as u64
+    });
+    let _: &Quantized = &quant_k;
+
+    // PJRT model calls, if artifacts exist
+    if sqs_sd::runtime::Manifest::default_dir().join("manifest.json").exists() {
+        use sqs_sd::coordinator::PjrtStack;
+        use sqs_sd::model::lm::{PjrtDraft, PjrtTarget};
+        use sqs_sd::model::{encode, DraftLm, TargetLm};
+        let stack = PjrtStack::load(1 << 30)?;
+        let prompt = encode("The river ran slow and brown past the old mill");
+
+        let mut draft = PjrtDraft::new(stack.slm.clone());
+        draft.start(&prompt)?;
+        b.time("PJRT slm_decode_sqs (fused draft step)", 300, || {
+            let s = draft.next_sqs(0.8, &sp_k, ell).unwrap();
+            s.quant.counts[0] as u64
+        });
+
+        let mut tgt = PjrtTarget::new(stack.llm.clone());
+        tgt.start(&prompt)?;
+        let window: Vec<u16> = {
+            let mut w = vec![*prompt.last().unwrap()];
+            w.extend(encode(" the miller's d"));
+            w.truncate(16);
+            w
+        };
+        b.time("PJRT llm_verify (16-token window)", 200, || {
+            tgt.verify_window(&window, 0.8).unwrap().len() as u64
+        });
+        let mut tgt2 = PjrtTarget::new(stack.llm.clone());
+        tgt2.start(&prompt)?;
+        b.time("PJRT llm_decode (AR step)", 300, || {
+            tgt2.decode_probs(0.8).unwrap()[0].to_bits() as u64
+        });
+        let mut draft2 = PjrtDraft::new(stack.slm.clone());
+        b.time("PJRT slm_prefill (S=256)", 100, || {
+            draft2.start(&prompt).unwrap();
+            draft2.len() as u64
+        });
+    } else {
+        eprintln!("[micro] artifacts not built; skipping PJRT rows");
+    }
+
+    b.report();
+
+    let mut csv = CsvOut::new("micro_hotpath.csv", "operation,ns_per_op");
+    for (name, per, _) in &b.rows {
+        csv.row(format!("{name},{:.1}", per * 1e9));
+    }
+    csv.finish();
+
+    // Hot-path share analysis: the rust work actually executed per drafted
+    // token on the PJRT serving path (C-SQS, the adaptive codec):
+    //   edge: frame-encode/8 + lattice sample  (sparsify+SLQ runs in the
+    //         fused kernel, not in rust)
+    //   cloud: frame-decode/8 + q_hat reconstruction + residual resample
+    // versus one fused PJRT draft step (the dominant per-token model call).
+    let per = |name: &str| -> f64 {
+        b.rows.iter().find(|(n, _, _)| n == name).map(|(_, p, _)| *p).unwrap_or(0.0)
+    };
+    let rust_per_token = per("frame encode adaptive (8 tokens)") / 8.0
+        + per("frame decode adaptive (8 tokens)") / 8.0
+        + per("sample_lattice (ell=100)")
+        + per("q_hat reconstruction (to_dense)")
+        + per("residual + sample (V=256)");
+    let pjrt_step = per("PJRT slm_decode_sqs (fused draft step)");
+    if pjrt_step > 0.0 {
+        println!(
+            "\nrust L3 work per drafted token {:.1} us vs PJRT draft step {:.1} us \
+             -> {:.2}% of compute (target < 5%)",
+            rust_per_token * 1e6,
+            pjrt_step * 1e6,
+            100.0 * rust_per_token / (rust_per_token + pjrt_step)
+        );
+    } else {
+        println!("\nrust L3 work per drafted token {:.1} us (PJRT rows unavailable)",
+                 rust_per_token * 1e6);
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! TBL-BITS — the paper's bit-accounting (eqs. (1), (2), (5) + the C-SQS
+//! K overhead): formula cost vs *actual serialized frame size*, per
+//! scheme, across (K, ell) — plus the raw-f32 baseline, at the paper's
+//! V and at GPT-2's V=50257 for scale.
+//!
+//!   cargo bench --bench table_bits_accounting
+//!
+//! The serialized size must equal the formula exactly (the codec is a
+//! combinatorial-number-system coder); the bench fails loudly otherwise.
+
+use sqs_sd::codec::{DraftFrame, DraftToken, FrameCodec};
+use sqs_sd::exp::CsvOut;
+use sqs_sd::sqs::bits::{self, SchemeBits};
+use sqs_sd::sqs::{sparse_quantize, Sparsifier};
+use sqs_sd::util::check::Gen;
+use sqs_sd::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let vocab = 256usize;
+    println!("== TBL-BITS: per-token uplink cost, V={vocab} ==");
+    println!("{:>6} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+             "K", "ell", "fixedK_fmla", "fixedK_wire", "adapt_fmla",
+             "adapt_wire", "dense");
+    let mut csv = CsvOut::new(
+        "table_bits.csv",
+        "k,ell,fixedk_formula,fixedk_wire,adaptive_formula,adaptive_wire,dense_formula");
+
+    let mut g = Gen { rng: Pcg64::new(77, 1) };
+    for &ell in &[10u32, 100, 1000] {
+        for &k in &[1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            // formula
+            let f_fixed = bits::token_bits(SchemeBits::FixedK, vocab, k, ell);
+            let f_adapt = bits::token_bits(SchemeBits::Adaptive, vocab, k, ell);
+            let f_dense = bits::token_bits(SchemeBits::Dense, vocab, vocab, ell);
+
+            // actual wire size of one-token frames
+            let q = g.probs(vocab, 2.0);
+            let quant_k = sparse_quantize(&q, &Sparsifier::top_k(k), ell);
+            let tok = quant_k.support[0];
+            let mut codec_f = FrameCodec::new(vocab, ell, SchemeBits::FixedK, k);
+            let (_, _, bd) = codec_f.encode(&DraftFrame {
+                batch_id: 0,
+                tokens: vec![DraftToken { quant: quant_k.clone(), token: tok }],
+            });
+            let w_fixed = bd[0].dist_bits();
+
+            let mut codec_a = FrameCodec::new(vocab, ell, SchemeBits::Adaptive, 0);
+            let (_, _, bd) = codec_a.encode(&DraftFrame {
+                batch_id: 0,
+                tokens: vec![DraftToken { quant: quant_k, token: tok }],
+            });
+            let w_adapt = bd[0].dist_bits();
+
+            assert_eq!(f_fixed, w_fixed, "K={k} ell={ell}: fixed-K wire != formula");
+            assert_eq!(f_adapt, w_adapt, "K={k} ell={ell}: adaptive wire != formula");
+
+            println!("{k:>6} {ell:>6} {f_fixed:>12} {w_fixed:>12} {f_adapt:>12} \
+                      {w_adapt:>12} {f_dense:>10}");
+            csv.row(format!("{k},{ell},{f_fixed},{w_fixed},{f_adapt},{w_adapt},{f_dense}"));
+        }
+        println!();
+    }
+    csv.finish();
+
+    println!("raw f32 baseline at V={vocab}: {} bits/token", bits::raw_f32_bits(vocab));
+    println!("compression vs raw f32 at the paper's point (K=8, ell=100): {:.0}x",
+             bits::raw_f32_bits(vocab) as f64
+                 / bits::token_bits(SchemeBits::FixedK, vocab, 8, 100) as f64);
+
+    // the paper's actual scale for context (GPT-2 BPE vocabulary)
+    let v2 = 50_257usize;
+    println!("\n-- at GPT-2 scale (V = {v2}), formula only --");
+    for &k in &[8usize, 32, 128] {
+        let b = bits::token_bits(SchemeBits::FixedK, v2, k, 100);
+        println!("K={k:<4} ell=100: b_n = {b} bits  ({}x smaller than raw f32 = {} bits)",
+                 bits::raw_f32_bits(v2) / b.max(1), bits::raw_f32_bits(v2));
+    }
+    Ok(())
+}

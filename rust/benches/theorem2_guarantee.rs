@@ -1,0 +1,94 @@
+//! THM2 — paper Theorem 2 / eq. (9): the conformal certificate
+//!
+//!   (1/T) sum_n alpha_n  <=  alpha + (|beta_1| + 1 + eta*alpha)/(eta T)
+//!
+//! measured on live C-SQS sessions over a grid of (eta, alpha, beta0),
+//! plus the Lemma 4 iterate envelope.  Violations would falsify either
+//! the theory or the implementation; the bench prints margin per point.
+//!
+//!   cargo bench --bench theorem2_guarantee [-- --synthetic]
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::session::{SdSession, SessionConfig, TimingMode};
+use sqs_sd::exp::{backend_from_args, fast_mode, CsvOut};
+use sqs_sd::exp::Backend;
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let backend = backend_from_args()?;
+    let grid: Vec<(f64, f64, f64)> = if fast_mode() {
+        vec![(0.001, 0.0005, 0.01), (0.01, 0.01, 0.05)]
+    } else {
+        vec![
+            (0.001, 0.0005, 0.01), // the paper's operating point
+            (0.001, 0.0005, 0.5),
+            (0.01, 0.01, 0.05),
+            (0.05, 0.02, 0.2),
+            (0.1, 0.05, 0.8),
+        ]
+    };
+    let max_new = if fast_mode() { 64 } else { 256 };
+
+    println!("== THM2: empirical (1/T)sum alpha_n vs certificate ({}) ==",
+             backend.name());
+    println!("{:>8} {:>8} {:>8} {:>8} {:>14} {:>14} {:>10}",
+             "eta", "alpha", "beta0", "T", "empirical", "bound", "margin");
+    let mut csv = CsvOut::new(
+        "theorem2.csv", "eta,alpha,beta0,t,empirical,bound,holds");
+
+    let mut all_hold = true;
+    for &(eta, alpha, beta0) in &grid {
+        // long-run stream: several sessions concatenated into one ledger
+        // by keeping the controller inside one session and generating many
+        // tokens
+        let (emp, bound, t) = match &backend {
+            Backend::Pjrt(stack) => {
+                let cfg = SessionConfig {
+                    policy: Policy::CSqs { beta0, alpha, eta },
+                    temp: 0.8,
+                    max_new_tokens: max_new.min(180),
+                    seed: 5,
+                    ..Default::default()
+                };
+                let mut sess = stack.session(LinkConfig::default(), cfg);
+                let res = sess.run(&sqs_sd::model::encode("Once there was a fox who"))?;
+                (res.conformal_empirical_alpha.unwrap(),
+                 res.conformal_bound.unwrap(),
+                 res.conformal_t.unwrap())
+            }
+            Backend::Synthetic { world, timing } => {
+                let cfg = SessionConfig {
+                    policy: Policy::CSqs { beta0, alpha, eta },
+                    temp: 1.0,
+                    max_new_tokens: max_new * 4,
+                    seed: 5,
+                    timing: *timing,
+                    ..Default::default()
+                };
+                let draft = SyntheticDraft::new(world.clone(), 10_000_000);
+                let target = SyntheticTarget::new(world.clone(), 15, 10_000_000);
+                let mut sess = SdSession::new(
+                    draft, target,
+                    SimulatedLink::new(LinkConfig::default(), 5), cfg);
+                let res = sess.run(&[3, 1])?;
+                let _ = TimingMode::Measured;
+                (res.conformal_empirical_alpha.unwrap(),
+                 res.conformal_bound.unwrap(),
+                 res.conformal_t.unwrap())
+            }
+        };
+        let holds = emp <= bound + 1e-9;
+        all_hold &= holds;
+        println!("{eta:>8.3} {alpha:>8.4} {beta0:>8.2} {t:>8} {emp:>14.6} {bound:>14.6} {:>10.6}",
+                 bound - emp);
+        csv.row(format!("{eta},{alpha},{beta0},{t},{emp},{bound},{holds}"));
+    }
+    csv.finish();
+    println!("\nTheorem 2 certificate: {}",
+             if all_hold { "HOLDS at every grid point" } else { "VIOLATED — investigate!" });
+    if !all_hold {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Simulated edge–cloud link.
+//!
+//! The paper models uplink time as payload_bits / bandwidth; we additionally
+//! serialize real frames (codec) so the bits are measured, not assumed, and
+//! track a byte ledger per direction.  Latency accounting uses virtual
+//! time: the channel returns the transmission delay, and the session's
+//! latency ledger adds it to measured compute time — so experiments are
+//! reproducible regardless of host load.
+
+/// Link parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkConfig {
+    /// Uplink bandwidth in bits/second (edge -> cloud).
+    pub uplink_bps: f64,
+    /// Downlink bandwidth in bits/second (cloud -> edge).
+    pub downlink_bps: f64,
+    /// One-way propagation delay in seconds (each direction).
+    pub propagation_s: f64,
+    /// Uniform jitter amplitude in seconds (0 = deterministic).
+    pub jitter_s: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        // A constrained wireless uplink: 1 Mbit/s up, 10 Mbit/s down, 10 ms
+        // propagation each way — the regime where the paper's compression
+        // matters (B=5000 bits/batch ≈ 5 ms of airtime per batch).
+        LinkConfig {
+            uplink_bps: 1e6,
+            downlink_bps: 1e7,
+            propagation_s: 0.010,
+            jitter_s: 0.0,
+        }
+    }
+}
+
+/// Per-direction transfer ledger.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ledger {
+    pub frames: u64,
+    pub bits: u64,
+    pub time_s: f64,
+}
+
+/// Deterministic rate-limited link with byte accounting.
+pub struct SimulatedLink {
+    pub cfg: LinkConfig,
+    pub up: Ledger,
+    pub down: Ledger,
+    rng: crate::util::rng::Pcg64,
+}
+
+impl SimulatedLink {
+    pub fn new(cfg: LinkConfig, seed: u64) -> Self {
+        SimulatedLink {
+            cfg,
+            up: Ledger::default(),
+            down: Ledger::default(),
+            rng: crate::util::rng::Pcg64::new(seed, 0xC4A77E1),
+        }
+    }
+
+    fn jitter(&mut self) -> f64 {
+        if self.cfg.jitter_s > 0.0 {
+            self.rng.next_f64() * self.cfg.jitter_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Send `bits` up; returns the simulated one-way latency in seconds.
+    pub fn send_uplink(&mut self, bits: usize) -> f64 {
+        let t = bits as f64 / self.cfg.uplink_bps + self.cfg.propagation_s + self.jitter();
+        self.up.frames += 1;
+        self.up.bits += bits as u64;
+        self.up.time_s += t;
+        t
+    }
+
+    /// Send `bits` down; returns the simulated one-way latency in seconds.
+    pub fn send_downlink(&mut self, bits: usize) -> f64 {
+        let t = bits as f64 / self.cfg.downlink_bps + self.cfg.propagation_s + self.jitter();
+        self.down.frames += 1;
+        self.down.bits += bits as u64;
+        self.down.time_s += t;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_latency_formula() {
+        let mut link = SimulatedLink::new(
+            LinkConfig { uplink_bps: 1000.0, downlink_bps: 2000.0,
+                         propagation_s: 0.5, jitter_s: 0.0 },
+            0,
+        );
+        let t = link.send_uplink(1000);
+        assert!((t - 1.5).abs() < 1e-12, "1000 bits @ 1kbps + 0.5s = 1.5s");
+        let t = link.send_downlink(1000);
+        assert!((t - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_conserves_bits() {
+        let mut link = SimulatedLink::new(LinkConfig::default(), 1);
+        let mut total = 0u64;
+        for i in 1..=100usize {
+            link.send_uplink(i * 13);
+            total += (i * 13) as u64;
+        }
+        assert_eq!(link.up.bits, total);
+        assert_eq!(link.up.frames, 100);
+        assert_eq!(link.down.frames, 0);
+    }
+
+    #[test]
+    fn jitter_bounded_and_reproducible() {
+        let cfg = LinkConfig { jitter_s: 0.01, ..Default::default() };
+        let mut a = SimulatedLink::new(cfg, 42);
+        let mut b = SimulatedLink::new(cfg, 42);
+        for _ in 0..50 {
+            let ta = a.send_uplink(500);
+            let tb = b.send_uplink(500);
+            assert_eq!(ta, tb, "same seed, same jitter");
+            let base = 500.0 / cfg.uplink_bps + cfg.propagation_s;
+            assert!(ta >= base && ta <= base + 0.01);
+        }
+    }
+}

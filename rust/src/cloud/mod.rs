@@ -1,0 +1,131 @@
+//! Cloud node: parallel verification and residual resampling.
+//!
+//! Implements the speculative-decoding acceptance rule against the
+//! *quantized* draft distribution q_hat (decoded from the wire), which is
+//! what preserves the exact target-distribution guarantee of QS [22]:
+//! accept draft x with prob min(1, p(x)/q_hat(x)); on rejection resample
+//! from the residual max(0, p - q_hat); if every draft survives, sample
+//! the bonus token from p directly.
+
+use anyhow::{bail, Result};
+
+use crate::codec::{DraftFrame, FeedbackFrame};
+use crate::model::TargetLm;
+use crate::sqs::probs::{residual, sample};
+use crate::util::rng::Pcg64;
+
+/// Outcome of verifying one batch at the cloud.
+pub struct Verdict {
+    pub feedback: FeedbackFrame,
+    /// number of drafts accepted (T^t)
+    pub accepted: usize,
+    /// true iff a draft was rejected (and the new token resampled)
+    pub rejected: bool,
+    /// measured LLM compute seconds
+    pub t_llm: f64,
+    /// the tokens committed to the target context this batch
+    pub committed: Vec<u16>,
+}
+
+pub struct CloudNode<T: TargetLm> {
+    pub target: T,
+    rng: Pcg64,
+}
+
+impl<T: TargetLm> CloudNode<T> {
+    pub fn new(target: T, seed: u64) -> Self {
+        CloudNode { target, rng: Pcg64::new(seed, 0xC10D) }
+    }
+
+    pub fn start(&mut self, prompt: &[u16]) -> Result<()> {
+        self.target.start(prompt)
+    }
+
+    pub fn context_len(&self) -> usize {
+        self.target.len()
+    }
+
+    /// Plain cloud-only autoregressive decoding (the no-SD baseline).
+    pub fn decode_one(&mut self, temp: f32) -> Result<(u16, f64)> {
+        let t0 = std::time::Instant::now();
+        let p = self.target.decode_probs(temp)?;
+        let t = t0.elapsed().as_secs_f64();
+        let tok = sample(&p, &mut self.rng) as u16;
+        self.target.commit_tokens(&[tok])?;
+        Ok((tok, t))
+    }
+}
+
+// The CloudNode needs the last committed token for the window; rather than
+// duplicating context state, the session passes it explicitly:
+impl<T: TargetLm> CloudNode<T> {
+    /// Same as `verify` but with the last committed token supplied by the
+    /// coordinator (which owns the canonical token sequence).
+    pub fn verify_with_prev(&mut self, frame: &DraftFrame, prev: u16, temp: f32)
+                            -> Result<Verdict> {
+        let l = frame.tokens.len();
+        if l == 0 {
+            bail!("empty draft frame");
+        }
+        if l > self.target.max_drafts() {
+            bail!("frame has {l} drafts > window capacity {}", self.target.max_drafts());
+        }
+        let vocab = self.target.vocab();
+
+        let mut window = Vec::with_capacity(l + 1);
+        window.push(prev);
+        window.extend(frame.tokens.iter().map(|t| t.token));
+
+        let t0 = std::time::Instant::now();
+        let probs = self.target.verify_window(&window, temp)?;
+        let t_llm = t0.elapsed().as_secs_f64();
+
+        let mut accepted = 0usize;
+        let mut rejected = false;
+        let mut new_token = None;
+
+        for (n, dt) in frame.tokens.iter().enumerate() {
+            let p_n = &probs[n];
+            let x = dt.token as usize;
+            let q_hat = dt.quant.prob_of(x);
+            if q_hat <= 0.0 {
+                bail!("draft token {x} has q_hat = 0 — corrupt frame?");
+            }
+            let ratio = (p_n[x] as f64 / q_hat as f64).min(1.0);
+            if self.rng.next_f64() < ratio {
+                accepted += 1;
+                continue;
+            }
+            rejected = true;
+            let q_dense = dt.quant.to_dense_probs(vocab);
+            let tok = match residual(p_n, &q_dense) {
+                Some(r) => sample(&r, &mut self.rng),
+                None => sample(p_n, &mut self.rng),
+            };
+            new_token = Some(tok as u16);
+            break;
+        }
+
+        let new_token = match new_token {
+            Some(t) => t,
+            None => sample(&probs[l], &mut self.rng) as u16,
+        };
+
+        let mut committed: Vec<u16> =
+            frame.tokens[..accepted].iter().map(|t| t.token).collect();
+        committed.push(new_token);
+        self.target.commit_tokens(&committed)?;
+
+        Ok(Verdict {
+            feedback: FeedbackFrame {
+                batch_id: frame.batch_id,
+                accepted: accepted as u16,
+                new_token,
+            },
+            accepted,
+            rejected,
+            t_llm,
+            committed,
+        })
+    }
+}

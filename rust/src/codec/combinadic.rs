@@ -1,0 +1,96 @@
+//! Combinatorial number system: bijective ranking of K-subsets of {0..V-1}.
+//!
+//! The rank of a sorted subset s_0 < s_1 < ... < s_{K-1} is
+//!     rank = sum_i C(s_i, i+1)
+//! which enumerates all C(V,K) subsets in colex order, so the support set
+//! travels in exactly ceil(log2 C(V,K)) bits — the paper's b~(K) (eq. (5)).
+
+use crate::util::bigint::{BigUint, BinomialCache};
+
+/// Rank a sorted ascending subset (colex order).
+pub fn subset_rank(subset: &[u16], cache: &mut BinomialCache) -> BigUint {
+    let mut rank = BigUint::zero();
+    for (i, &s) in subset.iter().enumerate() {
+        rank.add_assign(cache.get(s as u64, i as u64 + 1));
+    }
+    rank
+}
+
+/// Inverse: recover the sorted subset of size k (over vocab v) from a rank.
+pub fn subset_unrank(mut rank: BigUint, v: usize, k: usize,
+                     cache: &mut BinomialCache) -> Vec<u16> {
+    let mut out = vec![0u16; k];
+    let mut upper = v as u64; // exclusive bound for candidate element
+    for i in (1..=k).rev() {
+        // largest s < upper with C(s, i) <= rank (binary search; the
+        // element itself is >= i-1 since i-1 smaller elements precede it)
+        let s = cache
+            .max_n_le(i as u64, i as u64 - 1, upper, &rank)
+            .expect("unrank underflow: rank out of range");
+        let c = cache.get(s, i as u64).clone();
+        rank.sub_assign(&c);
+        out[i - 1] = s as u16;
+        upper = s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bigint::binomial;
+    use crate::util::check::check;
+
+    #[test]
+    fn rank_zero_is_first_subset() {
+        let mut c = BinomialCache::new();
+        // colex-first subset {0,1,...,k-1} has rank 0
+        let s: Vec<u16> = (0..5).collect();
+        assert_eq!(subset_rank(&s, &mut c).to_u64(), Some(0));
+    }
+
+    #[test]
+    fn rank_max_is_last_subset() {
+        let mut c = BinomialCache::new();
+        let v = 10u16;
+        let k = 4;
+        let s: Vec<u16> = (v - k..v).collect();
+        let mut want = binomial(v as u64, k as u64);
+        want.sub_assign(&BigUint::one());
+        assert_eq!(subset_rank(&s, &mut c), want);
+    }
+
+    #[test]
+    fn exhaustive_bijection_small() {
+        // all C(8,3) = 56 subsets rank/unrank bijectively
+        let mut cache = BinomialCache::new();
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..8u16 {
+            for b in a + 1..8 {
+                for c in b + 1..8 {
+                    let s = vec![a, b, c];
+                    let r = subset_rank(&s, &mut cache);
+                    let r64 = r.to_u64().unwrap();
+                    assert!(r64 < 56);
+                    assert!(seen.insert(r64), "duplicate rank {r64}");
+                    assert_eq!(subset_unrank(r, 8, 3, &mut cache), s);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 56);
+    }
+
+    #[test]
+    fn roundtrip_random_large() {
+        check("combinadic roundtrip", 150, |g, _| {
+            let v = g.usize(1, 256);
+            let k = g.usize(1, v);
+            let s: Vec<u16> = g.subset(v, k).into_iter().map(|x| x as u16).collect();
+            let mut cache = BinomialCache::new();
+            let r = subset_rank(&s, &mut cache);
+            // rank < C(v,k)
+            assert!(r.cmp_big(&binomial(v as u64, k as u64)) == std::cmp::Ordering::Less);
+            assert_eq!(subset_unrank(r, v, k, &mut cache), s);
+        });
+    }
+}

@@ -1,0 +1,400 @@
+//! Wire format for the edge→cloud uplink (draft frames) and the
+//! cloud→edge downlink (feedback frames).
+//!
+//! Every field is packed to the bit using the combinatorial number system,
+//! so a draft token's payload is *exactly* the paper's
+//!   b_n(K, ell) = b~(K) + ceil(log2 C(ell+K-1, K-1))   (eqs. (1),(2),(5))
+//! plus ceil(log2 V) bits for the sampled draft token itself (the paper
+//! transmits {q_hat, X} — budget accounting uses b_n only, matching §4,
+//! while the channel simulator charges the full frame).
+
+use crate::sqs::bits::SchemeBits;
+use crate::sqs::Quantized;
+use crate::util::bigint::with_binomials;
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::ceil_log2_u64;
+
+use super::combinadic::{subset_rank, subset_unrank};
+use super::multiset::{composition_rank, composition_unrank};
+
+/// One drafted token on the wire: its quantized distribution + the sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DraftToken {
+    pub quant: Quantized,
+    pub token: u16,
+}
+
+/// A speculative batch (uplink).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DraftFrame {
+    pub batch_id: u32,
+    pub tokens: Vec<DraftToken>,
+}
+
+/// Cloud verdict (downlink).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeedbackFrame {
+    pub batch_id: u32,
+    /// number of accepted draft tokens T^t
+    pub accepted: u16,
+    /// the resampled (or bonus) token X_{T^t + 1}
+    pub new_token: u16,
+}
+
+/// Per-token bit breakdown (for metrics and the TBL-BITS bench).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TokenBits {
+    pub support: usize,
+    pub lattice: usize,
+    pub token: usize,
+}
+
+impl TokenBits {
+    pub fn dist_bits(&self) -> usize {
+        self.support + self.lattice
+    }
+
+    pub fn total(&self) -> usize {
+        self.support + self.lattice + self.token
+    }
+}
+
+const HEADER_BITS: usize = 32 /* batch id */ + 8 /* token count */;
+const FEEDBACK_BITS: usize = 32 + 16 + 16;
+
+/// Bit-exact encoder/decoder; owns the binomial memo (keep one per thread).
+pub struct FrameCodec {
+    pub vocab: usize,
+    pub ell: u32,
+    pub scheme: SchemeBits,
+    /// K for the FixedK scheme (known to both ends, not transmitted).
+    pub fixed_k: usize,
+}
+
+impl FrameCodec {
+    pub fn new(vocab: usize, ell: u32, scheme: SchemeBits, fixed_k: usize) -> Self {
+        FrameCodec { vocab, ell, scheme, fixed_k }
+    }
+
+    fn support_field_bits(&mut self, k: usize) -> usize {
+        let vocab = self.vocab as u64;
+        with_binomials(|cache| {
+        let c = cache.get(vocab, k as u64);
+        let bits = c.bits();
+        if bits == 0 {
+            return 0;
+        }
+        // ceil(log2 c)
+        let mut ones = 0;
+        for i in 0..bits {
+            if c.bit(i) {
+                ones += 1;
+                if ones > 1 {
+                    break;
+                }
+            }
+        }
+        if ones == 1 { bits - 1 } else { bits }
+        })
+    }
+
+    fn lattice_field_bits(&mut self, k: usize) -> usize {
+        if k <= 1 {
+            return 0;
+        }
+        let ell = self.ell as u64;
+        with_binomials(|cache| {
+        let c = cache.get(ell + k as u64 - 1, k as u64 - 1);
+        let bits = c.bits();
+        let mut ones = 0;
+        for i in 0..bits {
+            if c.bit(i) {
+                ones += 1;
+                if ones > 1 {
+                    break;
+                }
+            }
+        }
+        if ones == 1 { bits - 1 } else { bits }
+        })
+    }
+
+    /// Bits one token will occupy on the wire (before encoding it).
+    pub fn token_bits(&mut self, k: usize) -> TokenBits {
+        let tok = ceil_log2_u64(self.vocab as u64);
+        match self.scheme {
+            SchemeBits::FixedK => TokenBits {
+                support: self.support_field_bits(self.fixed_k),
+                lattice: self.lattice_field_bits(self.fixed_k),
+                token: tok,
+            },
+            SchemeBits::Adaptive => TokenBits {
+                support: self.support_field_bits(k) + tok,
+                lattice: self.lattice_field_bits(k),
+                token: tok,
+            },
+            SchemeBits::Dense => TokenBits {
+                support: 0,
+                lattice: self.lattice_field_bits(self.vocab),
+                token: tok,
+            },
+        }
+    }
+
+    pub fn header_bits(&self) -> usize {
+        HEADER_BITS
+    }
+
+    pub fn feedback_bits(&self) -> usize {
+        FEEDBACK_BITS
+    }
+
+    /// Serialize a frame; returns (bytes, total bits, per-token breakdown).
+    pub fn encode(&mut self, frame: &DraftFrame) -> (Vec<u8>, usize, Vec<TokenBits>) {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(frame.batch_id as u64, 32);
+        w.write_bits_u64(frame.tokens.len() as u64, 8);
+        let tok_bits = ceil_log2_u64(self.vocab as u64);
+        let mut breakdown = Vec::with_capacity(frame.tokens.len());
+
+        for dt in &frame.tokens {
+            let q = &dt.quant;
+            let k = q.k();
+            assert_eq!(q.ell, self.ell, "codec/quantizer resolution mismatch");
+            let before = w.bit_len();
+            let mut tb = TokenBits { token: tok_bits, ..Default::default() };
+
+            match self.scheme {
+                SchemeBits::FixedK => {
+                    assert_eq!(k, self.fixed_k, "FixedK frame with k != K");
+                    let nbits = self.support_field_bits(k);
+                    let rank = with_binomials(|c| subset_rank(&q.support, c));
+                    w.write_bits_big(&rank, nbits);
+                    tb.support = nbits;
+                }
+                SchemeBits::Adaptive => {
+                    // k in 1..=V encoded as k-1 so it fits ceil(log2 V) bits
+                    w.write_bits_u64(k as u64 - 1, tok_bits.max(1));
+                    let nbits = self.support_field_bits(k);
+                    let rank = with_binomials(|c| subset_rank(&q.support, c));
+                    w.write_bits_big(&rank, nbits);
+                    tb.support = nbits + tok_bits.max(1);
+                }
+                SchemeBits::Dense => {
+                    assert_eq!(k, self.vocab, "Dense frame must cover vocab");
+                }
+            }
+
+            // lattice counts (over the support, which the decoder now knows)
+            let lat_k = match self.scheme {
+                SchemeBits::Dense => self.vocab,
+                _ => k,
+            };
+            if lat_k > 1 {
+                let nbits = self.lattice_field_bits(lat_k);
+                let rank = with_binomials(|c| composition_rank(&q.counts, c));
+                w.write_bits_big(&rank, nbits);
+                tb.lattice = nbits;
+            }
+
+            w.write_bits_u64(dt.token as u64, tok_bits.max(1));
+            debug_assert_eq!(w.bit_len() - before, tb.total());
+            breakdown.push(tb);
+        }
+
+        let bits = w.bit_len();
+        (w.finish(), bits, breakdown)
+    }
+
+    /// Decode a frame previously produced by `encode` (same config).
+    pub fn decode(&mut self, bytes: &[u8]) -> Result<DraftFrame, String> {
+        let mut r = BitReader::new(bytes);
+        let batch_id = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+        let n = r.read_bits_u64(8).map_err(|e| e.to_string())? as usize;
+        let tok_bits = ceil_log2_u64(self.vocab as u64).max(1);
+        let mut tokens = Vec::with_capacity(n);
+
+        for _ in 0..n {
+            let (support, k) = match self.scheme {
+                SchemeBits::FixedK => {
+                    let k = self.fixed_k;
+                    let nbits = self.support_field_bits(k);
+                    let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                    (with_binomials(|c| subset_unrank(rank, self.vocab, k, c)), k)
+                }
+                SchemeBits::Adaptive => {
+                    let k = r.read_bits_u64(tok_bits).map_err(|e| e.to_string())? as usize + 1;
+                    if k > self.vocab {
+                        return Err(format!("bad adaptive k={k}"));
+                    }
+                    let nbits = self.support_field_bits(k);
+                    let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                    (with_binomials(|c| subset_unrank(rank, self.vocab, k, c)), k)
+                }
+                SchemeBits::Dense => {
+                    ((0..self.vocab as u16).collect::<Vec<u16>>(), self.vocab)
+                }
+            };
+
+            let counts = if k > 1 {
+                let nbits = self.lattice_field_bits(k);
+                let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                with_binomials(|c| composition_unrank(rank, self.ell, k, c))
+            } else {
+                vec![self.ell]
+            };
+
+            let token = r.read_bits_u64(tok_bits).map_err(|e| e.to_string())? as u16;
+            tokens.push(DraftToken {
+                quant: Quantized {
+                    support,
+                    counts,
+                    ell: self.ell,
+                    // alpha is edge-local bookkeeping; not on the wire
+                    alpha: f32::NAN,
+                },
+                token,
+            });
+        }
+        Ok(DraftFrame { batch_id, tokens })
+    }
+
+    /// Feedback is tiny and fixed-size; encoded for completeness.
+    pub fn encode_feedback(&self, fb: &FeedbackFrame) -> (Vec<u8>, usize) {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(fb.batch_id as u64, 32);
+        w.write_bits_u64(fb.accepted as u64, 16);
+        w.write_bits_u64(fb.new_token as u64, 16);
+        let bits = w.bit_len();
+        (w.finish(), bits)
+    }
+
+    pub fn decode_feedback(&self, bytes: &[u8]) -> Result<FeedbackFrame, String> {
+        let mut r = BitReader::new(bytes);
+        Ok(FeedbackFrame {
+            batch_id: r.read_bits_u64(32).map_err(|e| e.to_string())? as u32,
+            accepted: r.read_bits_u64(16).map_err(|e| e.to_string())? as u16,
+            new_token: r.read_bits_u64(16).map_err(|e| e.to_string())? as u16,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sqs::bits;
+    use crate::sqs::{sparse_quantize, Sparsifier};
+    use crate::util::check::check;
+
+    fn quantize_random(g: &mut crate::util::check::Gen, vocab: usize, ell: u32,
+                       sp: &Sparsifier) -> Quantized {
+        let sharp = g.f64(0.2, 5.0);
+        let q = g.probs(vocab, sharp);
+        sparse_quantize(&q, sp, ell)
+    }
+
+    #[test]
+    fn fixed_k_roundtrip_and_exact_size() {
+        check("fixed-k frame roundtrip", 60, |g, _| {
+            let vocab = 256;
+            let ell = *g.pick(&[10u32, 100, 500]);
+            let k = g.usize(1, 64);
+            let mut codec = FrameCodec::new(vocab, ell, SchemeBits::FixedK, k);
+            let sp = Sparsifier::top_k(k);
+            let l = g.usize(1, 8);
+            let tokens: Vec<DraftToken> = (0..l)
+                .map(|_| {
+                    let quant = quantize_random(g, vocab, ell, &sp);
+                    let token = quant.support[0];
+                    DraftToken { quant, token }
+                })
+                .collect();
+            let frame = DraftFrame { batch_id: 7, tokens };
+            let (bytes, total_bits, breakdown) = codec.encode(&frame);
+            // exact size = header + sum of formula costs + token bits
+            let formula: usize = breakdown.iter().map(|b| b.total()).sum();
+            assert_eq!(total_bits, codec.header_bits() + formula);
+            for b in &breakdown {
+                assert_eq!(
+                    b.dist_bits(),
+                    bits::token_bits(SchemeBits::FixedK, vocab, k, ell),
+                    "frame cost must equal the paper's b_n(K, ell)"
+                );
+            }
+            let back = codec.decode(&bytes).unwrap();
+            assert_eq!(back.batch_id, 7);
+            assert_eq!(back.tokens.len(), frame.tokens.len());
+            for (a, b) in back.tokens.iter().zip(&frame.tokens) {
+                assert_eq!(a.quant.support, b.quant.support);
+                assert_eq!(a.quant.counts, b.quant.counts);
+                assert_eq!(a.token, b.token);
+            }
+        });
+    }
+
+    #[test]
+    fn adaptive_roundtrip_and_exact_size() {
+        check("adaptive frame roundtrip", 60, |g, _| {
+            let vocab = 256;
+            let ell = *g.pick(&[10u32, 100, 500]);
+            let mut codec = FrameCodec::new(vocab, ell, SchemeBits::Adaptive, 0);
+            let beta = g.f32(0.0, 0.3);
+            let sp = Sparsifier::threshold(beta);
+            let l = g.usize(1, 8);
+            let tokens: Vec<DraftToken> = (0..l)
+                .map(|_| {
+                    let quant = quantize_random(g, vocab, ell, &sp);
+                    let token = quant.support[0];
+                    DraftToken { quant, token }
+                })
+                .collect();
+            let frame = DraftFrame { batch_id: 99, tokens };
+            let (bytes, _total, breakdown) = codec.encode(&frame);
+            for (tb, dt) in breakdown.iter().zip(&frame.tokens) {
+                assert_eq!(
+                    tb.dist_bits(),
+                    bits::token_bits(SchemeBits::Adaptive, vocab, dt.quant.k(), ell)
+                );
+            }
+            let back = codec.decode(&bytes).unwrap();
+            for (a, b) in back.tokens.iter().zip(&frame.tokens) {
+                assert_eq!(a.quant.support, b.quant.support);
+                assert_eq!(a.quant.counts, b.quant.counts);
+            }
+        });
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        check("dense frame roundtrip", 30, |g, _| {
+            let vocab = *g.pick(&[16usize, 64, 256]);
+            let ell = 100u32;
+            let mut codec = FrameCodec::new(vocab, ell, SchemeBits::Dense, 0);
+            let quant = quantize_random(g, vocab, ell, &Sparsifier::Dense);
+            let frame = DraftFrame {
+                batch_id: 1,
+                tokens: vec![DraftToken { token: 3, quant }],
+            };
+            let (bytes, _b, _tb) = codec.encode(&frame);
+            let back = codec.decode(&bytes).unwrap();
+            assert_eq!(back.tokens[0].quant.counts, frame.tokens[0].quant.counts);
+        });
+    }
+
+    #[test]
+    fn feedback_roundtrip() {
+        let codec = FrameCodec::new(256, 100, SchemeBits::FixedK, 8);
+        let fb = FeedbackFrame { batch_id: 123456, accepted: 5, new_token: 250 };
+        let (bytes, bits) = codec.encode_feedback(&fb);
+        assert_eq!(bits, codec.feedback_bits());
+        assert_eq!(codec.decode_feedback(&bytes).unwrap(), fb);
+    }
+
+    #[test]
+    fn corrupt_frame_detected_or_bounded() {
+        let mut codec = FrameCodec::new(256, 100, SchemeBits::Adaptive, 0);
+        // truncated input must error, not panic
+        let err = codec.decode(&[0x00, 0x01]);
+        assert!(err.is_err());
+    }
+}

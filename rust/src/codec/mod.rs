@@ -1,0 +1,9 @@
+//! Bit-exact wire format: combinatorial-number-system support coding,
+//! stars-and-bars lattice coding, and frame assembly.  Payload sizes equal
+//! the paper's bit formulas by construction (asserted in tests).
+
+pub mod combinadic;
+pub mod frame;
+pub mod multiset;
+
+pub use frame::{DraftFrame, DraftToken, FeedbackFrame, FrameCodec, TokenBits};

@@ -1,0 +1,115 @@
+//! Ranking of lattice points: compositions of ell into K non-negative
+//! parts, of which there are C(ell+K-1, K-1) — the paper's b^(K, ell)
+//! (eq. (2)).  A composition maps to a (K-1)-subset of {0..ell+K-2} via
+//! stars-and-bars (divider positions), reusing the combinadic codec.
+
+use super::combinadic::{subset_rank, subset_unrank};
+use crate::util::bigint::{BigUint, BinomialCache};
+
+/// Divider positions of a composition: divider i sits after the first i
+/// parts, at position parts[0]+..+parts[i] + i.
+fn to_dividers(parts: &[u32]) -> Vec<u16> {
+    let k = parts.len();
+    let mut divs = Vec::with_capacity(k - 1);
+    let mut acc: u64 = 0;
+    for (i, &p) in parts.iter().take(k - 1).enumerate() {
+        acc += p as u64;
+        divs.push((acc + i as u64) as u16);
+    }
+    divs
+}
+
+fn from_dividers(divs: &[u16], ell: u32, k: usize) -> Vec<u32> {
+    let mut parts = Vec::with_capacity(k);
+    let mut prev: i64 = -1;
+    for (i, &d) in divs.iter().enumerate() {
+        parts.push((d as i64 - prev - 1) as u32);
+        let _ = i;
+        prev = d as i64;
+    }
+    let total: u32 = parts.iter().sum();
+    parts.push(ell - total);
+    parts
+}
+
+/// Rank a composition (counts summing to ell) among all C(ell+K-1, K-1).
+pub fn composition_rank(parts: &[u32], cache: &mut BinomialCache) -> BigUint {
+    assert!(!parts.is_empty());
+    if parts.len() == 1 {
+        return BigUint::zero(); // single part is forced; zero information
+    }
+    subset_rank(&to_dividers(parts), cache)
+}
+
+/// Inverse of `composition_rank`.
+pub fn composition_unrank(rank: BigUint, ell: u32, k: usize,
+                          cache: &mut BinomialCache) -> Vec<u32> {
+    assert!(k >= 1);
+    if k == 1 {
+        return vec![ell];
+    }
+    let divs = subset_unrank(rank, ell as usize + k - 1, k - 1, cache);
+    from_dividers(&divs, ell, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bigint::binomial;
+    use crate::util::check::check;
+
+    #[test]
+    fn dividers_roundtrip_by_hand() {
+        // parts [2,0,3] of ell=5, k=3: dividers after cum sums 2,2 -> {2,3}
+        let parts = vec![2u32, 0, 3];
+        let d = to_dividers(&parts);
+        assert_eq!(d, vec![2, 3]);
+        assert_eq!(from_dividers(&d, 5, 3), parts);
+    }
+
+    #[test]
+    fn single_part_forced() {
+        let mut c = BinomialCache::new();
+        let r = composition_rank(&[42], &mut c);
+        assert!(r.is_zero());
+        assert_eq!(composition_unrank(r, 42, 1, &mut c), vec![42]);
+    }
+
+    #[test]
+    fn exhaustive_bijection_small() {
+        // ell=5, k=3: C(7,2)=21 compositions
+        let mut cache = BinomialCache::new();
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..=5u32 {
+            for b in 0..=5 - a {
+                let parts = vec![a, b, 5 - a - b];
+                let r = composition_rank(&parts, &mut cache);
+                let r64 = r.to_u64().unwrap();
+                assert!(r64 < 21);
+                assert!(seen.insert(r64));
+                assert_eq!(composition_unrank(r, 5, 3, &mut cache), parts);
+            }
+        }
+        assert_eq!(seen.len(), 21);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        check("composition roundtrip", 150, |g, _| {
+            let ell = g.int(1, 1000) as u32;
+            let k = g.usize(1, 128);
+            let parts: Vec<u32> = g
+                .composition(ell as u64, k)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            let mut cache = BinomialCache::new();
+            let r = composition_rank(&parts, &mut cache);
+            assert!(
+                r.cmp_big(&binomial(ell as u64 + k as u64 - 1, k as u64 - 1))
+                    == std::cmp::Ordering::Less
+            );
+            assert_eq!(composition_unrank(r, ell, k, &mut cache), parts);
+        });
+    }
+}

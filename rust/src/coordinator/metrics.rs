@@ -1,0 +1,110 @@
+//! Serving-metrics registry: named counters and latency summaries,
+//! rendered as a table or exported as JSON for the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    summaries: Mutex<BTreeMap<String, Summary>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        self.summaries
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(Summary::new)
+            .add(value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        self.summaries.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str(&format!("{:<36} {:>14}\n", "counter", "value"));
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("{k:<36} {v:>14}\n"));
+            }
+        }
+        let summaries = self.summaries.lock().unwrap();
+        if !summaries.is_empty() {
+            out.push_str(&format!(
+                "{:<36} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+                "summary", "n", "mean", "p50", "p99", "max"
+            ));
+            for (k, s) in summaries.iter() {
+                out.push_str(&format!(
+                    "{k:<36} {:>8} {:>12.6} {:>12.6} {:>12.6} {:>12.6}\n",
+                    s.count(), s.mean(), s.p50(), s.p99(), s.max()
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let summaries = self.summaries.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        for (k, v) in counters.iter() {
+            obj.insert(format!("counter.{k}"), Json::Num(*v as f64));
+        }
+        for (k, s) in summaries.iter() {
+            obj.insert(
+                format!("summary.{k}"),
+                Json::obj(vec![
+                    ("n", Json::Num(s.count() as f64)),
+                    ("mean", Json::Num(s.mean())),
+                    ("p50", Json::Num(s.p50())),
+                    ("p99", Json::Num(s.p99())),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_summaries() {
+        let m = Metrics::new();
+        m.inc("requests", 1);
+        m.inc("requests", 2);
+        m.observe("latency_s", 0.5);
+        m.observe("latency_s", 1.5);
+        assert_eq!(m.counter("requests"), 3);
+        let s = m.summary("latency_s").unwrap();
+        assert_eq!(s.count(), 2);
+        assert!((s.mean() - 1.0).abs() < 1e-12);
+        let table = m.render_table();
+        assert!(table.contains("requests"));
+        assert!(table.contains("latency_s"));
+        let j = m.to_json();
+        assert_eq!(j.get("counter.requests").unwrap().as_f64(), Some(3.0));
+    }
+}

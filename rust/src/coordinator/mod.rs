@@ -1,0 +1,51 @@
+//! L3 coordinator: session driver, multi-request scheduler, metrics.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod session;
+
+pub use metrics::Metrics;
+pub use scheduler::{Request, Response, Scheduler, Worker, WorkerFactory};
+pub use session::{ArBaseline, BatchRecord, SdSession, SessionConfig, SessionResult, TimingMode};
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::channel::{LinkConfig, SimulatedLink};
+use crate::model::lm::{ModelAssets, PjrtDraft, PjrtTarget};
+use crate::runtime::{Engine, Manifest};
+
+/// Everything needed to run PJRT-backed sessions on one thread.
+pub struct PjrtStack {
+    pub engine: Arc<Engine>,
+    pub manifest: Manifest,
+    pub slm: Arc<ModelAssets>,
+    pub llm: Arc<ModelAssets>,
+}
+
+impl PjrtStack {
+    /// Load artifacts + weights and compile all modules (once per thread).
+    pub fn load(kv_budget_bytes: u64) -> Result<PjrtStack> {
+        let manifest = Manifest::load(Manifest::default_dir())?;
+        let engine = Arc::new(Engine::cpu()?);
+        let slm = ModelAssets::load(engine.clone(), &manifest, "slm", kv_budget_bytes)?;
+        let llm = ModelAssets::load(engine.clone(), &manifest, "llm", kv_budget_bytes)?;
+        Ok(PjrtStack { engine, manifest, slm, llm })
+    }
+
+    /// Build a fresh session over this stack.
+    pub fn session(&self, link_cfg: LinkConfig, cfg: SessionConfig)
+                   -> SdSession<PjrtDraft, PjrtTarget> {
+        let draft = PjrtDraft::new(self.slm.clone());
+        let target = PjrtTarget::new(self.llm.clone());
+        let link = SimulatedLink::new(link_cfg, cfg.seed);
+        SdSession::new(draft, target, link, cfg)
+    }
+
+    /// Cloud-only AR baseline over this stack.
+    pub fn ar_baseline(&self, link_cfg: LinkConfig, temp: f32, seed: u64,
+                       timing: TimingMode) -> ArBaseline<PjrtTarget> {
+        let target = PjrtTarget::new(self.llm.clone());
+        ArBaseline::new(target, SimulatedLink::new(link_cfg, seed), temp, seed, timing)
+    }
+}

@@ -1,0 +1,196 @@
+//! Multi-request scheduler: FIFO request queue + a pool of worker threads.
+//!
+//! PJRT's client type is thread-bound (Rc internally), so workers cannot
+//! share compiled executables; instead each worker thread constructs its
+//! own backend via the supplied factory — for the PJRT path that means one
+//! engine + model set per worker (weights uploaded per worker), mirroring
+//! a multi-replica serving deployment; for the synthetic path it is free.
+//!
+//! Invariants (tested): every submitted request is answered exactly once,
+//! results carry their request ids, and a failing request does not take
+//! the worker down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::session::SessionResult;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub worker: usize,
+    pub result: Result<SessionResult>,
+}
+
+/// A worker is a closure that serves one request; built per-thread by the
+/// factory so non-Send backends (PJRT) work.
+pub type Worker = Box<dyn FnMut(&Request) -> Result<SessionResult>>;
+pub type WorkerFactory = Arc<dyn Fn(usize) -> Result<Worker> + Send + Sync>;
+
+pub struct Scheduler {
+    tx: Sender<Request>,
+    rx_resp: Receiver<Response>,
+    handles: Vec<JoinHandle<()>>,
+    submitted: AtomicUsize,
+}
+
+impl Scheduler {
+    /// Spawn `n_workers` threads, each constructing its backend via
+    /// `factory(worker_id)`.
+    pub fn start(n_workers: usize, factory: WorkerFactory) -> Result<Scheduler> {
+        assert!(n_workers >= 1);
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_resp, rx_resp) = channel::<Response>();
+        let mut handles = Vec::new();
+        // Workers that fail to initialize report a poisoned first response.
+        for w in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let tx_resp = tx_resp.clone();
+            let factory = Arc::clone(&factory);
+            handles.push(std::thread::Builder::new()
+                .name(format!("sqs-worker-{w}"))
+                .spawn(move || {
+                    let mut worker = match factory(w) {
+                        Ok(wk) => wk,
+                        Err(e) => {
+                            crate::warn!("worker {w} failed to init: {e}");
+                            return;
+                        }
+                    };
+                    loop {
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let req = match req {
+                            Ok(r) => r,
+                            Err(_) => break, // queue closed
+                        };
+                        let result = worker(&req);
+                        if tx_resp
+                            .send(Response { id: req.id, worker: w, result })
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                })?);
+        }
+        Ok(Scheduler { tx, rx_resp, handles, submitted: AtomicUsize::new(0) })
+    }
+
+    pub fn submit(&self, req: Request) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(req).expect("scheduler queue closed");
+    }
+
+    /// Drain all responses for the submitted requests, then join workers.
+    pub fn finish(self) -> Vec<Response> {
+        let n = self.submitted.load(Ordering::SeqCst);
+        drop(self.tx); // close the queue so workers exit after draining
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.rx_resp.recv() {
+                Ok(r) => out.push(r),
+                Err(_) => break, // all workers died
+            }
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{LinkConfig, SimulatedLink};
+    use crate::coordinator::session::{SdSession, SessionConfig, TimingMode};
+    use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+    use crate::sqs::Policy;
+
+    fn synthetic_factory(policy: Policy) -> WorkerFactory {
+        Arc::new(move |worker_id| {
+            let world = SyntheticWorld::new(64, 0.5, 11);
+            let cfg = SessionConfig {
+                policy,
+                temp: 0.9,
+                max_new_tokens: 16,
+                seed: worker_id as u64,
+                timing: TimingMode::Modeled { slm_step_s: 1e-4, llm_call_s: 1e-3 },
+                ..Default::default()
+            };
+            Ok(Box::new(move |req: &Request| {
+                let draft = SyntheticDraft::new(world.clone(), 100_000);
+                let target = SyntheticTarget::new(world.clone(), 15, 100_000);
+                let link = SimulatedLink::new(LinkConfig::default(), req.id);
+                let mut cfg = cfg.clone();
+                cfg.max_new_tokens = req.max_new_tokens;
+                cfg.seed ^= req.id;
+                let mut sess = SdSession::new(draft, target, link, cfg);
+                sess.run(&req.prompt)
+            }) as Worker)
+        })
+    }
+
+    #[test]
+    fn all_requests_answered_exactly_once() {
+        let sched = Scheduler::start(4, synthetic_factory(Policy::KSqs { k: 8 })).unwrap();
+        for id in 0..20 {
+            sched.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 8 });
+        }
+        let responses = sched.finish();
+        assert_eq!(responses.len(), 20);
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+        for r in &responses {
+            let res = r.result.as_ref().unwrap();
+            // a batch commits accepted drafts + 1 cloud token, so the
+            // session may overshoot the cap by exactly the bonus token
+            assert!(
+                (8..=9).contains(&res.new_tokens()),
+                "new_tokens = {}", res.new_tokens()
+            );
+        }
+    }
+
+    #[test]
+    fn work_is_distributed_across_workers() {
+        let sched = Scheduler::start(3, synthetic_factory(Policy::KSqs { k: 4 })).unwrap();
+        for id in 0..30 {
+            sched.submit(Request { id, prompt: vec![7], max_new_tokens: 4 });
+        }
+        let responses = sched.finish();
+        let mut used = std::collections::HashSet::new();
+        for r in &responses {
+            used.insert(r.worker);
+        }
+        assert!(used.len() >= 2, "expected >= 2 workers used, got {used:?}");
+    }
+
+    #[test]
+    fn failing_request_does_not_kill_worker() {
+        let sched = Scheduler::start(1, synthetic_factory(Policy::KSqs { k: 8 })).unwrap();
+        // empty prompt -> error; next request must still be served
+        sched.submit(Request { id: 0, prompt: vec![], max_new_tokens: 4 });
+        sched.submit(Request { id: 1, prompt: vec![3], max_new_tokens: 4 });
+        let responses = sched.finish();
+        assert_eq!(responses.len(), 2);
+        assert!(responses[0].result.is_err());
+        assert!(responses[1].result.is_ok());
+    }
+}

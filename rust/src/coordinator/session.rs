@@ -1,0 +1,327 @@
+//! SdSession: one request's full edge–channel–cloud speculative-decoding
+//! loop, with the latency ledger the paper's figures are built from.
+//!
+//! Latency model (matching [22]'s decomposition, §4 of the paper):
+//!   total = sum over batches of
+//!     t_slm (measured draft compute) + t_uplink (simulated: frame bits /
+//!     bandwidth + propagation) + t_llm (measured verify compute) +
+//!     t_downlink (simulated feedback).
+//! Compute can optionally be *modeled* (fixed per-call costs) for
+//! hardware-independent, exactly reproducible sweeps — used by the
+//! synthetic-backend benches; PJRT benches default to measured.
+
+use anyhow::Result;
+
+use crate::channel::SimulatedLink;
+use crate::cloud::CloudNode;
+use crate::edge::EdgeNode;
+use crate::model::{DraftLm, TargetLm};
+use crate::sqs::Policy;
+use crate::util::stats::Summary;
+
+/// How compute time enters the latency ledger.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TimingMode {
+    /// wall-clock of the actual PJRT/synthetic calls
+    Measured,
+    /// fixed seconds per SLM draft step and per LLM verify call
+    Modeled { slm_step_s: f64, llm_call_s: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub policy: Policy,
+    pub temp: f32,
+    pub ell: u32,
+    /// per-batch uplink budget B, in bits (paper: 5000)
+    pub budget_bits: usize,
+    pub max_new_tokens: usize,
+    pub max_batch_drafts: usize,
+    pub seed: u64,
+    pub timing: TimingMode,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.8,
+            ell: 100,
+            budget_bits: 5000,
+            max_new_tokens: 64,
+            max_batch_drafts: 15,
+            seed: 0,
+            timing: TimingMode::Measured,
+        }
+    }
+}
+
+/// Per-batch record (diagnostics, figure generation).
+#[derive(Clone, Debug)]
+pub struct BatchRecord {
+    pub drafted: usize,
+    pub accepted: usize,
+    pub rejected: bool,
+    pub dist_bits: usize,
+    pub frame_bits: usize,
+    pub mean_k: f64,
+    pub t_slm: f64,
+    pub t_uplink: f64,
+    pub t_llm: f64,
+    pub t_downlink: f64,
+}
+
+/// Aggregated result of a session.
+#[derive(Clone, Debug)]
+pub struct SessionResult {
+    pub prompt_len: usize,
+    pub tokens: Vec<u16>,
+    pub batches: Vec<BatchRecord>,
+    pub n_rej: usize,
+    pub total_time_s: f64,
+    pub t_slm_s: f64,
+    pub t_uplink_s: f64,
+    pub t_llm_s: f64,
+    pub t_downlink_s: f64,
+    pub uplink_bits: u64,
+    pub conformal_empirical_alpha: Option<f64>,
+    pub conformal_bound: Option<f64>,
+    pub conformal_t: Option<u64>,
+}
+
+impl SessionResult {
+    pub fn new_tokens(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    /// The paper's resampling-rate metric: N_rej / #batches.
+    pub fn resampling_rate(&self) -> f64 {
+        if self.batches.is_empty() {
+            0.0
+        } else {
+            self.n_rej as f64 / self.batches.len() as f64
+        }
+    }
+
+    /// Fraction of drafted tokens accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        let drafted: usize = self.batches.iter().map(|b| b.drafted).sum();
+        let accepted: usize = self.batches.iter().map(|b| b.accepted).sum();
+        if drafted == 0 { 0.0 } else { accepted as f64 / drafted as f64 }
+    }
+
+    pub fn mean_k(&self) -> f64 {
+        let mut s = Summary::new();
+        for b in &self.batches {
+            s.add(b.mean_k);
+        }
+        s.mean()
+    }
+
+    pub fn bits_per_token(&self) -> f64 {
+        let n = self.new_tokens();
+        if n == 0 { 0.0 } else { self.uplink_bits as f64 / n as f64 }
+    }
+
+    pub fn latency_per_token(&self) -> f64 {
+        let n = self.new_tokens();
+        if n == 0 { 0.0 } else { self.total_time_s / n as f64 }
+    }
+}
+
+/// One request, one edge, one cloud, one link.
+pub struct SdSession<D: DraftLm, T: TargetLm> {
+    pub edge: EdgeNode<D>,
+    pub cloud: CloudNode<T>,
+    pub link: SimulatedLink,
+    pub cfg: SessionConfig,
+    /// canonical committed sequence (prompt + verified tokens)
+    seq: Vec<u16>,
+}
+
+impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
+    pub fn new(draft: D, target: T, link: SimulatedLink, cfg: SessionConfig) -> Self {
+        let edge = EdgeNode::new(
+            draft,
+            cfg.policy,
+            cfg.ell,
+            cfg.budget_bits,
+            cfg.max_batch_drafts,
+            cfg.seed ^ 0xE,
+        );
+        let cloud = CloudNode::new(target, cfg.seed ^ 0xC);
+        SdSession { edge, cloud, link, cfg, seq: Vec::new() }
+    }
+
+    /// Run the speculative-decoding loop to completion.
+    pub fn run(&mut self, prompt: &[u16]) -> Result<SessionResult> {
+        self.edge.start(prompt)?;
+        self.cloud.start(prompt)?;
+        self.seq = prompt.to_vec();
+
+        let mut batches = Vec::new();
+        let mut n_rej = 0usize;
+        let (mut t_slm, mut t_up, mut t_llm, mut t_down) = (0.0, 0.0, 0.0, 0.0);
+        let mut uplink_bits = 0u64;
+
+        while self.seq.len() - prompt.len() < self.cfg.max_new_tokens
+            && self.room_left()
+        {
+            let ctx_before = self.seq.len();
+
+            // ---- edge: draft under budget -------------------------------
+            let remaining =
+                self.cfg.max_new_tokens - (self.seq.len() - prompt.len());
+            let drafted = self.edge.draft_batch_capped(self.cfg.temp, remaining)?;
+            let l = drafted.frame.tokens.len();
+            if l == 0 {
+                break; // context exhausted
+            }
+            let slm_time = match self.cfg.timing {
+                TimingMode::Measured => drafted.t_slm,
+                TimingMode::Modeled { slm_step_s, .. } => slm_step_s * l as f64,
+            };
+
+            // ---- uplink -------------------------------------------------
+            let up_time = self.link.send_uplink(drafted.frame_bits);
+            uplink_bits += drafted.frame_bits as u64;
+
+            // ---- cloud: decode frame + verify ---------------------------
+            // (decode from the actual bytes: the wire format is exercised
+            // on every batch, not just in codec tests)
+            let decoded = self
+                .edge
+                .codec
+                .decode(&drafted.bytes)
+                .map_err(|e| anyhow::anyhow!("frame decode: {e}"))?;
+            let prev = *self.seq.last().unwrap();
+            let verdict = self.cloud.verify_with_prev(&decoded, prev, self.cfg.temp)?;
+            let llm_time = match self.cfg.timing {
+                TimingMode::Measured => verdict.t_llm,
+                TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
+            };
+
+            // ---- downlink feedback -------------------------------------
+            let (_fb_bytes, fb_bits) = self.edge.codec.encode_feedback(&verdict.feedback);
+            let down_time = self.link.send_downlink(fb_bits);
+
+            // ---- edge sync + conformal backtrack ------------------------
+            self.edge.apply_feedback(
+                ctx_before,
+                l,
+                verdict.accepted,
+                verdict.feedback.new_token,
+            )?;
+            self.seq.extend_from_slice(&verdict.committed);
+
+            // consistency: edge and cloud contexts must match ours
+            debug_assert_eq!(self.edge.context_len(), self.seq.len());
+            debug_assert_eq!(self.cloud.context_len(), self.seq.len());
+
+            if verdict.rejected {
+                n_rej += 1;
+            }
+            t_slm += slm_time;
+            t_up += up_time;
+            t_llm += llm_time;
+            t_down += down_time;
+
+            batches.push(BatchRecord {
+                drafted: l,
+                accepted: verdict.accepted,
+                rejected: verdict.rejected,
+                dist_bits: drafted.dist_bits.iter().sum(),
+                frame_bits: drafted.frame_bits,
+                mean_k: drafted.ks.iter().sum::<usize>() as f64 / l as f64,
+                t_slm: slm_time,
+                t_uplink: up_time,
+                t_llm: llm_time,
+                t_downlink: down_time,
+            });
+        }
+
+        let conformal = self.edge.conformal.as_ref();
+        Ok(SessionResult {
+            prompt_len: prompt.len(),
+            tokens: self.seq.clone(),
+            batches,
+            n_rej,
+            total_time_s: t_slm + t_up + t_llm + t_down,
+            t_slm_s: t_slm,
+            t_uplink_s: t_up,
+            t_llm_s: t_llm,
+            t_downlink_s: t_down,
+            uplink_bits,
+            conformal_empirical_alpha: conformal.map(|c| c.empirical_alpha()),
+            conformal_bound: conformal.map(|c| c.theorem2_bound()),
+            conformal_t: conformal.map(|c| c.t()),
+        })
+    }
+
+    fn room_left(&self) -> bool {
+        // need room for a full verify window on the target and a token on
+        // the draft side
+        self.seq.len() + self.cfg.max_batch_drafts + 2 < self.cloud.target.max_len()
+            && self.seq.len() + self.cfg.max_batch_drafts + 2 < self.edge_max_len()
+    }
+
+    fn edge_max_len(&self) -> usize {
+        self.edge.draft.max_len()
+    }
+}
+
+/// Cloud-only autoregressive baseline over the same latency model: the
+/// prompt goes up once, every generated token comes back down.
+pub struct ArBaseline<T: TargetLm> {
+    pub cloud: CloudNode<T>,
+    pub link: SimulatedLink,
+    pub temp: f32,
+    pub timing: TimingMode,
+}
+
+impl<T: TargetLm> ArBaseline<T> {
+    pub fn new(target: T, link: SimulatedLink, temp: f32, seed: u64,
+               timing: TimingMode) -> Self {
+        ArBaseline {
+            cloud: CloudNode::new(target, seed ^ 0xA2),
+            link,
+            temp,
+            timing,
+        }
+    }
+
+    pub fn run(&mut self, prompt: &[u16], max_new_tokens: usize) -> Result<SessionResult> {
+        self.cloud.start(prompt)?;
+        let mut seq = prompt.to_vec();
+        // prompt uplink: raw bytes (8 bits/token) once
+        let mut t_up = self.link.send_uplink(prompt.len() * 8);
+        let mut t_llm = 0.0;
+        let mut t_down = 0.0;
+        while seq.len() - prompt.len() < max_new_tokens
+            && seq.len() + 2 < self.cloud.target.max_len()
+        {
+            let (tok, t) = self.cloud.decode_one(self.temp)?;
+            t_llm += match self.timing {
+                TimingMode::Measured => t,
+                TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
+            };
+            t_down += self.link.send_downlink(8);
+            seq.push(tok);
+        }
+        Ok(SessionResult {
+            prompt_len: prompt.len(),
+            tokens: seq,
+            batches: Vec::new(),
+            n_rej: 0,
+            total_time_s: t_up + t_llm + t_down,
+            t_slm_s: 0.0,
+            t_uplink_s: t_up,
+            t_llm_s: t_llm,
+            t_downlink_s: t_down,
+            uplink_bits: (prompt.len() * 8) as u64,
+            conformal_empirical_alpha: None,
+            conformal_bound: None,
+            conformal_t: None,
+        })
+    }
+}

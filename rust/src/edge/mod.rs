@@ -1,0 +1,240 @@
+//! Edge node: the draft loop of Algorithm 1.
+//!
+//! Per speculative batch the edge (i) reads the current sparsification
+//! policy (fixed K, or the conformal controller's live threshold),
+//! (ii) runs the fused decode+SQS step, (iii) samples the draft token from
+//! the *quantized* distribution (the QS correctness requirement), and
+//! (iv) stops when the uplink bit budget B is exhausted — the paper's
+//! L^t = max{L : sum b_n^t(K_n^t, ell) <= B}, enforced sequentially.
+
+use anyhow::Result;
+
+use crate::codec::{DraftFrame, DraftToken, FrameCodec};
+use crate::model::DraftLm;
+use crate::sqs::probs::sample_lattice;
+use crate::sqs::{ConformalController, Policy, Sparsifier};
+use crate::util::rng::Pcg64;
+
+/// Outcome of drafting one batch at the edge.
+pub struct DraftedBatch {
+    pub frame: DraftFrame,
+    /// distribution-payload bits per token (the paper's b_n; budget basis)
+    pub dist_bits: Vec<usize>,
+    /// full frame size on the wire, bits (header + payloads + tokens)
+    pub frame_bits: usize,
+    /// serialized frame
+    pub bytes: Vec<u8>,
+    /// dropped mass alpha_n per drafted token
+    pub alphas: Vec<f32>,
+    /// support size K_n per drafted token
+    pub ks: Vec<usize>,
+    /// measured SLM compute seconds
+    pub t_slm: f64,
+    /// dense draft distributions (diagnostics; Theorem 1 tracking)
+    pub probs: Vec<Vec<f32>>,
+}
+
+pub struct EdgeNode<D: DraftLm> {
+    pub draft: D,
+    pub policy: Policy,
+    pub conformal: Option<ConformalController>,
+    pub codec: FrameCodec,
+    pub ell: u32,
+    pub budget_bits: usize,
+    pub max_batch_drafts: usize,
+    rng: Pcg64,
+    batch_id: u32,
+}
+
+impl<D: DraftLm> EdgeNode<D> {
+    pub fn new(draft: D, policy: Policy, ell: u32, budget_bits: usize,
+               max_batch_drafts: usize, seed: u64) -> Self {
+        let vocab = draft.vocab();
+        let (scheme, fixed_k) = match policy {
+            Policy::KSqs { k } => (crate::sqs::bits::SchemeBits::FixedK, k),
+            Policy::CSqs { .. } => (crate::sqs::bits::SchemeBits::Adaptive, 0),
+            Policy::DenseQs | Policy::RawF32 => {
+                (crate::sqs::bits::SchemeBits::Dense, vocab)
+            }
+        };
+        let conformal = match policy {
+            Policy::CSqs { beta0, alpha, eta } => {
+                Some(ConformalController::new(beta0, alpha, eta))
+            }
+            _ => None,
+        };
+        EdgeNode {
+            draft,
+            policy,
+            conformal,
+            codec: FrameCodec::new(vocab, ell, scheme, fixed_k),
+            ell,
+            budget_bits,
+            max_batch_drafts,
+            rng: Pcg64::new(seed, 0xED6E),
+            batch_id: 0,
+        }
+    }
+
+    pub fn start(&mut self, prompt: &[u16]) -> Result<()> {
+        self.draft.start(prompt)
+    }
+
+    fn sparsifier(&self) -> Sparsifier {
+        match self.policy {
+            Policy::KSqs { k } => Sparsifier::top_k(k),
+            Policy::CSqs { .. } => {
+                Sparsifier::threshold(self.conformal.as_ref().unwrap().beta() as f32)
+            }
+            Policy::DenseQs | Policy::RawF32 => Sparsifier::Dense,
+        }
+    }
+
+    /// Draft one batch under the bit budget.  `temp` is the shared
+    /// SLM/LLM sampling temperature of the experiment.
+    pub fn draft_batch(&mut self, temp: f32) -> Result<DraftedBatch> {
+        self.draft_batch_capped(temp, self.max_batch_drafts)
+    }
+
+    /// Draft at most `cap` tokens this batch (used by the session to avoid
+    /// overshooting the request's max_new_tokens by more than the bonus).
+    pub fn draft_batch_capped(&mut self, temp: f32, cap: usize) -> Result<DraftedBatch> {
+        let cap = cap.min(self.max_batch_drafts).max(1);
+        if let Some(c) = self.conformal.as_mut() {
+            c.begin_batch();
+        }
+        let mut frame = DraftFrame { batch_id: self.batch_id, tokens: Vec::new() };
+        self.batch_id = self.batch_id.wrapping_add(1);
+
+        let mut dist_bits = Vec::new();
+        let mut alphas = Vec::new();
+        let mut ks = Vec::new();
+        let mut probs_log = Vec::new();
+        let mut used_bits = 0usize;
+        let mut t_slm = 0.0f64;
+
+        while frame.tokens.len() < cap && self.draft.len() + 1 < self.draft.max_len() {
+            let sp = self.sparsifier();
+            let t0 = std::time::Instant::now();
+            let step = self.draft.next_sqs(temp, &sp, self.ell)?;
+            t_slm += t0.elapsed().as_secs_f64();
+
+            let k = step.quant.k();
+            let b_n = self.codec.token_bits(k).dist_bits();
+            // budget rule: stop before the token that would overflow B —
+            // but always send at least one token so the batch progresses
+            if !frame.tokens.is_empty() && used_bits + b_n > self.budget_bits {
+                break;
+            }
+            used_bits += b_n;
+
+            if let Some(c) = self.conformal.as_mut() {
+                c.observe(step.quant.alpha as f64);
+            }
+            // QS: sample the draft from the quantized distribution
+            let dense = step.quant.to_dense_counts(self.draft.vocab());
+            let token = sample_lattice(&dense, self.ell, &mut self.rng) as u16;
+            self.draft.commit(token)?;
+
+            dist_bits.push(b_n);
+            alphas.push(step.quant.alpha);
+            ks.push(k);
+            probs_log.push(step.probs.clone());
+            frame.tokens.push(DraftToken { quant: step.quant, token });
+        }
+
+        let (bytes, frame_bits, _breakdown) = self.codec.encode(&frame);
+        Ok(DraftedBatch {
+            frame,
+            dist_bits,
+            frame_bits,
+            bytes,
+            alphas,
+            ks,
+            t_slm,
+            probs: probs_log,
+        })
+    }
+
+    /// Apply cloud feedback: roll the draft context back to the accepted
+    /// prefix, append the cloud's new token, and update the conformal
+    /// controller per Algorithm 1 lines 11-13.
+    pub fn apply_feedback(&mut self, ctx_len_before: usize, drafted: usize,
+                          accepted: usize, new_token: u16) -> Result<()> {
+        self.draft.rollback(ctx_len_before + accepted)?;
+        self.draft.commit(new_token)?;
+        if let Some(c) = self.conformal.as_mut() {
+            c.feedback(drafted, accepted);
+        }
+        Ok(())
+    }
+
+    pub fn context_len(&self) -> usize {
+        self.draft.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::{SyntheticDraft, SyntheticWorld};
+
+    fn edge(policy: Policy, budget: usize) -> EdgeNode<SyntheticDraft> {
+        let world = SyntheticWorld::new(64, 0.5, 3);
+        let draft = SyntheticDraft::new(world, 4096);
+        EdgeNode::new(draft, policy, 100, budget, 15, 42)
+    }
+
+    #[test]
+    fn budget_rule_is_respected() {
+        let mut e = edge(Policy::KSqs { k: 8 }, 500);
+        e.start(&[1, 2, 3]).unwrap();
+        let b = e.draft_batch(0.9).unwrap();
+        let total: usize = b.dist_bits.iter().sum();
+        assert!(total <= 500, "bits {total} > budget");
+        assert!(!b.frame.tokens.is_empty());
+        // drafting another token's worth would overflow (or cap reached)
+        let per = b.dist_bits[0];
+        assert!(total + per > 500 || b.frame.tokens.len() == 15);
+    }
+
+    #[test]
+    fn at_least_one_token_even_if_budget_tiny() {
+        let mut e = edge(Policy::KSqs { k: 8 }, 1);
+        e.start(&[5]).unwrap();
+        let b = e.draft_batch(0.9).unwrap();
+        assert_eq!(b.frame.tokens.len(), 1);
+    }
+
+    #[test]
+    fn csqs_threshold_moves_with_feedback() {
+        let mut e = edge(
+            Policy::CSqs { beta0: 0.05, alpha: 0.01, eta: 0.1 },
+            5000,
+        );
+        e.start(&[1, 2]).unwrap();
+        let before = e.conformal.as_ref().unwrap().beta();
+        let b = e.draft_batch(1.0).unwrap();
+        let drafted = b.frame.tokens.len();
+        e.apply_feedback(2, drafted, drafted.saturating_sub(1), 7).unwrap();
+        let after = e.conformal.as_ref().unwrap().beta();
+        assert_ne!(before, after, "eta > 0 must adapt");
+        // context: 2 + accepted + 1 new token
+        assert_eq!(e.context_len(), 2 + (drafted - 1) + 1);
+    }
+
+    #[test]
+    fn frame_decodes_to_what_was_drafted() {
+        let mut e = edge(Policy::KSqs { k: 4 }, 5000);
+        e.start(&[9, 9]).unwrap();
+        let b = e.draft_batch(0.8).unwrap();
+        let mut codec = FrameCodec::new(64, 100, crate::sqs::bits::SchemeBits::FixedK, 4);
+        let decoded = codec.decode(&b.bytes).unwrap();
+        assert_eq!(decoded.tokens.len(), b.frame.tokens.len());
+        for (d, o) in decoded.tokens.iter().zip(&b.frame.tokens) {
+            assert_eq!(d.token, o.token);
+            assert_eq!(d.quant.support, o.quant.support);
+            assert_eq!(d.quant.counts, o.quant.counts);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! # SQS-SD — Conformal Sparsification for Bandwidth-Efficient
+//! # Edge–Cloud Speculative Decoding
+//!
+//! Rust L3 coordinator of the three-layer stack (see DESIGN.md):
+//! JAX/Pallas author the compute (AOT-lowered to HLO text); this crate
+//! loads the artifacts via PJRT and runs the paper's edge–cloud
+//! speculative-decoding protocol — K-SQS and C-SQS sparsified,
+//! lattice-quantized draft distributions over a simulated uplink.
+
+pub mod channel;
+pub mod cloud;
+pub mod coordinator;
+pub mod edge;
+pub mod exp;
+pub mod model;
+pub mod codec;
+pub mod runtime;
+pub mod server;
+pub mod sqs;
+pub mod util;

@@ -1,0 +1,221 @@
+//! sqs-sd — CLI for the SQS-SD edge–cloud speculative-decoding stack.
+//!
+//! Subcommands:
+//!   run      one prompt through the full SD pipeline, print text + stats
+//!   serve    TCP serving front-end (see server module for the protocol)
+//!   sweep    temperature sweep for a policy, CSV to stdout
+//!   inspect  print the artifact manifest / model card
+//!
+//! `sqs-sd <subcommand> --help` lists options.
+
+use anyhow::{anyhow, bail, Result};
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::coordinator::{PjrtStack, SessionConfig, TimingMode};
+use sqs_sd::model::{decode, encode};
+use sqs_sd::runtime::Manifest;
+use sqs_sd::server::{serve, ServerConfig};
+use sqs_sd::sqs::Policy;
+use sqs_sd::util::cli::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let result = match sub.as_str() {
+        "run" => cmd_run(argv),
+        "serve" => cmd_serve(argv),
+        "sweep" => cmd_sweep(argv),
+        "inspect" => cmd_inspect(argv),
+        "help" | "--help" | "-h" => {
+            println!(
+                "sqs-sd — bandwidth-efficient edge-cloud speculative decoding\n\n\
+                 subcommands:\n  run      generate a completion for a prompt\n  \
+                 serve    TCP serving front-end\n  sweep    temperature sweep (CSV)\n  \
+                 inspect  print the artifact manifest\n\n\
+                 run `sqs-sd <subcommand> --help` for options"
+            );
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}' (try --help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_policy(a: &Args) -> Result<Policy> {
+    Ok(match a.get("policy").as_str() {
+        "ksqs" => Policy::KSqs { k: a.get_usize("k").map_err(|e| anyhow!(e))? },
+        "csqs" => Policy::CSqs {
+            beta0: a.get_f64("beta0").map_err(|e| anyhow!(e))?,
+            alpha: a.get_f64("alpha").map_err(|e| anyhow!(e))?,
+            eta: a.get_f64("eta").map_err(|e| anyhow!(e))?,
+        },
+        "dense" => Policy::DenseQs,
+        other => bail!("unknown policy '{other}' (ksqs|csqs|dense)"),
+    })
+}
+
+fn policy_opts(a: Args) -> Args {
+    a.opt("policy", "csqs", "sparsification policy: ksqs|csqs|dense")
+        .opt("k", "8", "top-K for ksqs")
+        .opt("beta0", "0.01", "initial threshold for csqs")
+        .opt("alpha", "0.0005", "target dropped mass for csqs")
+        .opt("eta", "0.001", "conformal learning rate for csqs")
+        .opt("temp", "0.8", "sampling temperature (SLM and LLM)")
+        .opt("ell", "100", "lattice resolution")
+        .opt("budget", "5000", "per-batch uplink budget B in bits")
+        .opt("uplink-bps", "1000000", "uplink bandwidth, bits/s")
+        .opt("rtt-ms", "20", "round-trip propagation, milliseconds")
+        .opt("seed", "0", "rng seed")
+}
+
+fn link_from(a: &Args) -> Result<LinkConfig> {
+    Ok(LinkConfig {
+        uplink_bps: a.get_f64("uplink-bps").map_err(|e| anyhow!(e))?,
+        downlink_bps: 10.0 * a.get_f64("uplink-bps").map_err(|e| anyhow!(e))?,
+        propagation_s: a.get_f64("rtt-ms").map_err(|e| anyhow!(e))? / 2.0 / 1000.0,
+        jitter_s: 0.0,
+    })
+}
+
+fn session_cfg(a: &Args, max_new: usize) -> Result<SessionConfig> {
+    Ok(SessionConfig {
+        policy: parse_policy(a)?,
+        temp: a.get_f64("temp").map_err(|e| anyhow!(e))? as f32,
+        ell: a.get_usize("ell").map_err(|e| anyhow!(e))? as u32,
+        budget_bits: a.get_usize("budget").map_err(|e| anyhow!(e))?,
+        max_new_tokens: max_new,
+        seed: a.get_u64("seed").map_err(|e| anyhow!(e))?,
+        timing: TimingMode::Measured,
+        ..Default::default()
+    })
+}
+
+fn cmd_run(argv: Vec<String>) -> Result<()> {
+    let a = policy_opts(Args::new("sqs-sd run", "generate a completion"))
+        .opt("prompt", "The capital of France is", "prompt text")
+        .opt("max-tokens", "48", "tokens to generate")
+        .flag("ar", "run the cloud-only autoregressive baseline instead")
+        .parse_from(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let stack = PjrtStack::load(1 << 30)?;
+    let prompt = encode(&a.get("prompt"));
+    let max_new = a.get_usize("max-tokens").map_err(|e| anyhow!(e))?;
+    let link = link_from(&a)?;
+
+    if a.get_flag("ar") {
+        let mut ar = stack.ar_baseline(
+            link,
+            a.get_f64("temp").map_err(|e| anyhow!(e))? as f32,
+            a.get_u64("seed").map_err(|e| anyhow!(e))?,
+            TimingMode::Measured,
+        );
+        let res = ar.run(&prompt, max_new)?;
+        println!("{}", decode(&res.tokens[res.prompt_len..]));
+        println!("--- AR baseline: {} tokens, {:.3}s simulated ({:.1} ms/tok)",
+                 res.new_tokens(), res.total_time_s,
+                 1e3 * res.latency_per_token());
+        return Ok(());
+    }
+
+    let cfg = session_cfg(&a, max_new)?;
+    let policy = cfg.policy;
+    let mut sess = stack.session(link, cfg);
+    let res = sess.run(&prompt)?;
+    println!("{}", decode(&res.tokens[res.prompt_len..]));
+    println!(
+        "--- {}: {} tokens in {} batches | latency {:.3}s ({:.1} ms/tok) \
+         [slm {:.3} + up {:.3} + llm {:.3} + down {:.3}]",
+        policy.describe(), res.new_tokens(), res.batches.len(),
+        res.total_time_s, 1e3 * res.latency_per_token(),
+        res.t_slm_s, res.t_uplink_s, res.t_llm_s, res.t_downlink_s
+    );
+    println!(
+        "    resampling rate {:.3} | acceptance {:.3} | mean K {:.1} | {:.0} bits/tok",
+        res.resampling_rate(), res.acceptance_rate(), res.mean_k(),
+        res.bits_per_token()
+    );
+    if let (Some(emp), Some(bound)) = (res.conformal_empirical_alpha, res.conformal_bound) {
+        println!("    conformal: empirical alpha {emp:.5} <= bound {bound:.5} (T={})",
+                 res.conformal_t.unwrap_or(0));
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("sqs-sd serve", "TCP serving front-end")
+        .opt("addr", "127.0.0.1:7077", "listen address")
+        .opt("max-requests", "0", "exit after N requests (0 = forever)")
+        .parse_from(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let max = a.get_usize("max-requests").map_err(|e| anyhow!(e))?;
+    serve(ServerConfig {
+        addr: a.get("addr"),
+        max_requests: if max == 0 { None } else { Some(max) },
+        ..Default::default()
+    })
+}
+
+fn cmd_sweep(argv: Vec<String>) -> Result<()> {
+    let a = policy_opts(Args::new("sqs-sd sweep", "temperature sweep, CSV to stdout"))
+        .opt("temps", "0.1,0.3,0.5,0.7,0.9", "comma-separated temperatures")
+        .opt("max-tokens", "48", "tokens per session")
+        .opt("sessions", "3", "sessions (prompts) per temperature")
+        .parse_from(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let stack = PjrtStack::load(1 << 30)?;
+    let prompts: Vec<Vec<u16>> =
+        stack.manifest.prompts.iter().map(|p| encode(p)).collect();
+    let temps = a.get_f64_list("temps").map_err(|e| anyhow!(e))?;
+    let sessions = a.get_usize("sessions").map_err(|e| anyhow!(e))?;
+    let max_new = a.get_usize("max-tokens").map_err(|e| anyhow!(e))?;
+    let link = link_from(&a)?;
+
+    println!("temp,policy,latency_s,ms_per_token,resampling_rate,acceptance,bits_per_token,mean_k");
+    for &t in &temps {
+        for s in 0..sessions {
+            let mut cfg = session_cfg(&a, max_new)?;
+            cfg.temp = t as f32;
+            cfg.seed ^= s as u64 * 7919;
+            let policy = cfg.policy;
+            let mut sess = stack.session(link, cfg);
+            let res = sess.run(&prompts[s % prompts.len()])?;
+            println!(
+                "{t},{},{:.4},{:.2},{:.4},{:.4},{:.1},{:.1}",
+                policy.name(), res.total_time_s,
+                1e3 * res.latency_per_token(), res.resampling_rate(),
+                res.acceptance_rate(), res.bits_per_token(), res.mean_k()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> Result<()> {
+    let _a = Args::new("sqs-sd inspect", "print the artifact manifest")
+        .parse_from(argv)
+        .map_err(|e| anyhow!("{e}"))?;
+    let m = Manifest::load(Manifest::default_dir())?;
+    println!("artifacts dir : {:?}", m.dir);
+    println!("vocab         : {}", m.vocab);
+    println!("corpus sha    : {}", m.corpus_sha);
+    for spec in &m.models {
+        println!(
+            "model {:>4}   : d={} h={} L={} ff={} s_max={} ld1={} params={} loss={:.3}",
+            spec.name, spec.d_model, spec.n_heads, spec.n_layers, spec.d_ff,
+            spec.s_max, spec.ld1, spec.params, spec.final_loss
+        );
+    }
+    for art in &m.artifacts {
+        println!(
+            "artifact {:<16} {:>2} args (+{} weights) -> {:?}",
+            art.name, art.args.len(), art.n_weight_args, art.outputs
+        );
+    }
+    println!("prompts       : {}", m.prompts.len());
+    Ok(())
+}

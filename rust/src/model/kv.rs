@@ -1,0 +1,129 @@
+//! KV-cache accounting for device-resident caches.
+//!
+//! PJRT owns the actual memory (caches are executable outputs fed back
+//! into the next call); this tracker is the serving-side bookkeeping —
+//! bytes resident, live sessions, high-water mark — and the admission
+//! gate that refuses new sessions when the configured budget is exhausted
+//! (the role a paging KV manager plays in a GPU serving stack).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct KvPool {
+    /// bytes per cache instance (n_layers * 2 * s_max * d_model * 4)
+    cache_bytes: u64,
+    budget_bytes: u64,
+    live: AtomicU64,
+    peak: AtomicU64,
+    total_allocs: AtomicU64,
+}
+
+/// RAII lease on one cache slot.
+pub struct KvLease {
+    pool: Arc<KvPool>,
+}
+
+impl KvPool {
+    pub fn new(n_layers: usize, s_max: usize, d_model: usize, budget_bytes: u64) -> Arc<Self> {
+        let cache_bytes = (n_layers * 2 * s_max * d_model * 4) as u64;
+        Arc::new(KvPool {
+            cache_bytes,
+            budget_bytes,
+            live: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            total_allocs: AtomicU64::new(0),
+        })
+    }
+
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache_bytes
+    }
+
+    pub fn live_sessions(&self) -> u64 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.live_sessions() * self.cache_bytes
+    }
+
+    pub fn peak_sessions(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn total_allocs(&self) -> u64 {
+        self.total_allocs.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity_sessions(&self) -> u64 {
+        if self.cache_bytes == 0 {
+            u64::MAX
+        } else {
+            self.budget_bytes / self.cache_bytes
+        }
+    }
+
+    /// Admit a session (one KV cache instance) or refuse.
+    pub fn acquire(self: &Arc<Self>) -> Result<KvLease> {
+        let prev = self.live.fetch_add(1, Ordering::SeqCst);
+        if (prev + 1) * self.cache_bytes > self.budget_bytes {
+            self.live.fetch_sub(1, Ordering::SeqCst);
+            bail!(
+                "KV budget exhausted: {} live sessions x {} B > {} B",
+                prev + 1,
+                self.cache_bytes,
+                self.budget_bytes
+            );
+        }
+        self.total_allocs.fetch_add(1, Ordering::Relaxed);
+        self.peak.fetch_max(prev + 1, Ordering::Relaxed);
+        Ok(KvLease { pool: Arc::clone(self) })
+    }
+}
+
+impl Drop for KvLease {
+    fn drop(&mut self) {
+        self.pool.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_accounting() {
+        let pool = KvPool::new(4, 256, 160, 10 * 1024 * 1024);
+        assert_eq!(pool.cache_bytes(), 4 * 2 * 256 * 160 * 4);
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        assert_eq!(pool.live_sessions(), 2);
+        assert_eq!(pool.peak_sessions(), 2);
+        drop(a);
+        assert_eq!(pool.live_sessions(), 1);
+        drop(b);
+        assert_eq!(pool.live_sessions(), 0);
+        assert_eq!(pool.total_allocs(), 2);
+        assert_eq!(pool.peak_sessions(), 2);
+    }
+
+    #[test]
+    fn admission_control() {
+        // budget for exactly 2 caches
+        let pool = KvPool::new(1, 16, 8, 2 * (2 * 16 * 8 * 4) as u64);
+        let _a = pool.acquire().unwrap();
+        let _b = pool.acquire().unwrap();
+        assert!(pool.acquire().is_err(), "third session must be refused");
+        drop(_a);
+        assert!(pool.acquire().is_ok(), "slot freed -> admit again");
+    }
+
+    #[test]
+    fn capacity_math() {
+        let pool = KvPool::new(2, 64, 32, 1_000_000);
+        assert_eq!(pool.capacity_sessions(), 1_000_000 / (2 * 2 * 64 * 32 * 4));
+    }
+}

@@ -1,0 +1,400 @@
+//! PJRT-backed draft and target models — the real serving path.
+//!
+//! Each session owns its device-resident KV cache (a PJRT buffer threaded
+//! through successive calls); weights are shared, device-resident, and
+//! uploaded once per model (see runtime::weights).
+//!
+//! Cache-coherence contract (verified by python/tests/test_model.py and
+//! the integration tests): forward windows write their K/V rows before
+//! attending, so speculative rollback = truncating the host-side token
+//! list; stale device rows are overwritten before they can be attended.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::runtime::weights::Weights;
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, lit_to_f32, lit_to_i32, lit_vec_i32,
+    Arg, Engine, Manifest, Module,
+};
+use crate::sqs::{Quantized, Sparsifier};
+
+use super::kv::{KvLease, KvPool};
+use super::{DraftLm, SqsStep, TargetLm};
+
+/// Shared, immutable per-model assets (modules compile once; weights
+/// upload once).  Sessions clone the Arc.
+pub struct ModelAssets {
+    pub engine: Arc<Engine>,
+    pub weights: Weights,
+    pub prefill: Module,
+    pub decode: Module,
+    /// slm only
+    pub decode_sqs: Option<Module>,
+    /// llm only
+    pub verify: Option<Module>,
+    pub vocab: usize,
+    pub s_max: usize,
+    pub ld1: usize,
+    pub kv_pool: Arc<KvPool>,
+    pub name: String,
+}
+
+impl ModelAssets {
+    pub fn load(engine: Arc<Engine>, manifest: &Manifest, model: &str,
+                kv_budget_bytes: u64) -> Result<Arc<ModelAssets>> {
+        let spec = manifest.model(model)?;
+        let weights = Weights::load(&engine, spec)?;
+        let load = |art: &str| -> Result<Module> {
+            engine.load_module(&manifest.artifact(art)?.file)
+        };
+        let prefill = load(&format!("{model}_prefill"))?;
+        let decode = load(&format!("{model}_decode"))?;
+        let decode_sqs = if model == "slm" { Some(load("slm_decode_sqs")?) } else { None };
+        let verify = if model == "llm" { Some(load("llm_verify")?) } else { None };
+        Ok(Arc::new(ModelAssets {
+            engine,
+            weights,
+            prefill,
+            decode,
+            decode_sqs,
+            verify,
+            vocab: spec.vocab,
+            s_max: spec.s_max,
+            ld1: spec.ld1,
+            kv_pool: KvPool::new(spec.n_layers, spec.s_max, spec.d_model, kv_budget_bytes),
+            name: model.to_string(),
+        }))
+    }
+
+    fn weight_args(&self) -> Vec<Arg<'_>> {
+        self.weights.buffers.iter().map(Arg::Device).collect()
+    }
+
+    fn padded_tokens(&self, toks: &[u16]) -> Vec<i32> {
+        let mut buf = vec![0i32; self.s_max];
+        for (i, &t) in toks.iter().enumerate() {
+            buf[i] = t as i32;
+        }
+        buf
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Draft (edge) model
+// ---------------------------------------------------------------------------
+
+pub struct PjrtDraft {
+    assets: Arc<ModelAssets>,
+    seq: Vec<u16>,
+    kv: Option<Literal>,
+    /// Rows 0..kv_valid of the device cache hold the K/V of seq[0..kv_valid].
+    /// Tokens can be committed without being decoded (e.g. the last draft
+    /// of an all-accepted batch, or the cloud's bonus token), leaving a gap
+    /// that `catch_up` fills with raw decode steps before the next fused
+    /// draft step — otherwise attention would read stale rows.
+    kv_valid: usize,
+    _lease: Option<KvLease>,
+}
+
+impl PjrtDraft {
+    pub fn new(assets: Arc<ModelAssets>) -> PjrtDraft {
+        assert_eq!(assets.name, "slm");
+        PjrtDraft { assets, seq: Vec::new(), kv: None, kv_valid: 0, _lease: None }
+    }
+
+    pub fn context(&self) -> &[u16] {
+        &self.seq
+    }
+
+    /// Ensure cache rows 0..self.seq.len()-1 are valid by raw-decoding any
+    /// committed-but-never-decoded tokens (logits discarded).
+    fn catch_up(&mut self) -> Result<()> {
+        while self.kv_valid + 1 < self.seq.len() {
+            let i = self.kv_valid; // row to write: token seq[i] at position i
+            let kv = self.kv.as_ref().unwrap();
+            let token = lit_i32(self.seq[i] as i32);
+            let pos = lit_i32(i as i32);
+            let mut args = self.assets.weight_args();
+            args.push(Arg::Host(&token));
+            args.push(Arg::Host(&pos));
+            args.push(Arg::Host(kv));
+            let mut out = self.assets.decode.call(&self.assets.engine, &args)?;
+            if out.len() != 2 {
+                bail!("slm_decode: expected 2 outputs, got {}", out.len());
+            }
+            self.kv = Some(out.pop().unwrap());
+            self.kv_valid = i + 1;
+        }
+        Ok(())
+    }
+}
+
+impl DraftLm for PjrtDraft {
+    fn vocab(&self) -> usize {
+        self.assets.vocab
+    }
+
+    fn start(&mut self, prompt: &[u16]) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        if prompt.len() >= self.assets.s_max {
+            bail!("prompt length {} >= s_max {}", prompt.len(), self.assets.s_max);
+        }
+        if self._lease.is_none() {
+            self._lease = Some(self.assets.kv_pool.acquire()?);
+        }
+        let tokens = lit_vec_i32(&self.assets.padded_tokens(prompt));
+        let n = lit_i32(prompt.len() as i32);
+        let mut args = self.assets.weight_args();
+        args.push(Arg::Host(&tokens));
+        args.push(Arg::Host(&n));
+        let mut out = self.assets.prefill.call(&self.assets.engine, &args)?;
+        if out.len() != 2 {
+            bail!("slm_prefill: expected 2 outputs, got {}", out.len());
+        }
+        let kv = out.pop().unwrap();
+        self.kv = Some(kv);
+        self.seq = prompt.to_vec();
+        self.kv_valid = prompt.len();
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    fn next_sqs(&mut self, temp: f32, sp: &Sparsifier, ell: u32) -> Result<SqsStep> {
+        if self.kv.is_none() {
+            bail!("start() not called");
+        }
+        if self.seq.len() + 1 >= self.assets.s_max {
+            bail!("context full");
+        }
+        self.catch_up()?;
+        let kv = self.kv.as_ref().unwrap();
+        let (mode, param) = sp.mode_param(self.assets.vocab);
+        let last = *self.seq.last().unwrap();
+        let token = lit_i32(last as i32);
+        let pos = lit_i32(self.seq.len() as i32 - 1);
+        let temp_l = lit_f32(temp);
+        let mode_l = lit_i32(mode);
+        let param_l = lit_f32(param);
+        let ell_l = lit_i32(ell as i32);
+        let module = self.assets.decode_sqs.as_ref().unwrap();
+        let mut args = self.assets.weight_args();
+        args.push(Arg::Host(&token));
+        args.push(Arg::Host(&pos));
+        args.push(Arg::Host(kv));
+        args.push(Arg::Host(&temp_l));
+        args.push(Arg::Host(&mode_l));
+        args.push(Arg::Host(&param_l));
+        args.push(Arg::Host(&ell_l));
+        let mut out = module.call(&self.assets.engine, &args)?;
+        if out.len() != 5 {
+            bail!("slm_decode_sqs: expected 5 outputs, got {}", out.len());
+        }
+        let new_kv = out.pop().unwrap();
+        let probs_buf = out.pop().unwrap();
+        let kept_buf = out.pop().unwrap();
+        let alpha_buf = out.pop().unwrap();
+        let counts_buf = out.pop().unwrap();
+
+        let counts_dense = lit_to_i32(&counts_buf)?;
+        let alpha = lit_scalar_f32(&alpha_buf)?;
+        let kept = lit_scalar_i32(&kept_buf)? as usize;
+        let probs = lit_to_f32(&probs_buf)?;
+        self.kv = Some(new_kv);
+        // the fused step wrote row len-1 (seq.last re-decoded in place)
+        self.kv_valid = self.seq.len();
+
+        // Reconstruct the support mask in rust (bit-identical selection
+        // rules; see sqs::sparsify) and cross-check the kernel outputs —
+        // an always-on parity assertion between L1 and L3.
+        let support = sp.select(&probs);
+        if support.indices.len() != kept {
+            bail!(
+                "L1/L3 support divergence: kernel kept {kept}, rust kept {} ({})",
+                support.indices.len(),
+                sp.describe_for_err()
+            );
+        }
+        let counts: Vec<u32> = support
+            .indices
+            .iter()
+            .map(|&i| counts_dense[i as usize] as u32)
+            .collect();
+        let on_support: u64 = counts.iter().map(|&c| c as u64).sum();
+        let total: i64 = counts_dense.iter().map(|&c| c as i64).sum();
+        if on_support != ell as u64 || total != ell as i64 {
+            bail!("lattice counts mismatch: support sum {on_support}, dense sum {total}, ell {ell}");
+        }
+        Ok(SqsStep {
+            quant: Quantized { support: support.indices, counts, ell, alpha },
+            probs,
+        })
+    }
+
+    fn commit(&mut self, token: u16) -> Result<()> {
+        if self.seq.len() + 1 >= self.assets.s_max {
+            bail!("context full");
+        }
+        self.seq.push(token);
+        Ok(())
+    }
+
+    fn rollback(&mut self, len: usize) -> Result<()> {
+        if len > self.seq.len() || len == 0 {
+            bail!("bad rollback to {len} (have {})", self.seq.len());
+        }
+        self.seq.truncate(len);
+        // rows beyond the surviving prefix hold rejected-draft K/V
+        self.kv_valid = self.kv_valid.min(len);
+        Ok(())
+    }
+
+    fn max_len(&self) -> usize {
+        self.assets.s_max - 1
+    }
+}
+
+impl Sparsifier {
+    fn describe_for_err(&self) -> String {
+        format!("{self:?}")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Target (cloud) model
+// ---------------------------------------------------------------------------
+
+pub struct PjrtTarget {
+    assets: Arc<ModelAssets>,
+    seq: Vec<u16>,
+    kv: Option<Literal>,
+    _lease: Option<KvLease>,
+}
+
+impl PjrtTarget {
+    pub fn new(assets: Arc<ModelAssets>) -> PjrtTarget {
+        assert_eq!(assets.name, "llm");
+        PjrtTarget { assets, seq: Vec::new(), kv: None, _lease: None }
+    }
+
+    pub fn context(&self) -> &[u16] {
+        &self.seq
+    }
+}
+
+impl TargetLm for PjrtTarget {
+    fn vocab(&self) -> usize {
+        self.assets.vocab
+    }
+
+    fn start(&mut self, prompt: &[u16]) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        if prompt.len() >= self.assets.s_max {
+            bail!("prompt too long");
+        }
+        if self._lease.is_none() {
+            self._lease = Some(self.assets.kv_pool.acquire()?);
+        }
+        let tokens = lit_vec_i32(&self.assets.padded_tokens(prompt));
+        let n = lit_i32(prompt.len() as i32);
+        let mut args = self.assets.weight_args();
+        args.push(Arg::Host(&tokens));
+        args.push(Arg::Host(&n));
+        let mut out = self.assets.prefill.call(&self.assets.engine, &args)?;
+        if out.len() != 2 {
+            bail!("llm_prefill: expected 2 outputs, got {}", out.len());
+        }
+        self.kv = Some(out.pop().unwrap());
+        self.seq = prompt.to_vec();
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    fn verify_window(&mut self, window: &[u16], temp: f32) -> Result<Vec<Vec<f32>>> {
+        let kv = self.kv.as_ref().ok_or_else(|| anyhow!("start() not called"))?;
+        let ld1 = self.assets.ld1;
+        if window.is_empty() || window.len() > ld1 {
+            bail!("window length {} out of 1..={ld1}", window.len());
+        }
+        if window[0] != *self.seq.last().unwrap() {
+            bail!("window[0] must be the last committed token");
+        }
+        let start = self.seq.len() - 1;
+        if start + ld1 > self.assets.s_max {
+            bail!("context too long for a verify window");
+        }
+        let mut padded = vec![0i32; ld1];
+        for (i, &t) in window.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let tokens = lit_vec_i32(&padded);
+        let start_l = lit_i32(start as i32);
+        let temp_l = lit_f32(temp);
+        let module = self.assets.verify.as_ref().unwrap();
+        let mut args = self.assets.weight_args();
+        args.push(Arg::Host(&tokens));
+        args.push(Arg::Host(&start_l));
+        args.push(Arg::Host(kv));
+        args.push(Arg::Host(&temp_l));
+        let mut out = module.call(&self.assets.engine, &args)?;
+        if out.len() != 2 {
+            bail!("llm_verify: expected 2 outputs, got {}", out.len());
+        }
+        let new_kv = out.pop().unwrap();
+        let probs_flat = lit_to_f32(&out.pop().unwrap())?;
+        self.kv = Some(new_kv);
+        let v = self.assets.vocab;
+        Ok(window
+            .iter()
+            .enumerate()
+            .map(|(i, _)| probs_flat[i * v..(i + 1) * v].to_vec())
+            .collect())
+    }
+
+    fn commit_tokens(&mut self, tokens: &[u16]) -> Result<()> {
+        if self.seq.len() + tokens.len() >= self.assets.s_max {
+            bail!("context full");
+        }
+        self.seq.extend_from_slice(tokens);
+        Ok(())
+    }
+
+    fn max_drafts(&self) -> usize {
+        self.assets.ld1 - 1
+    }
+
+    fn max_len(&self) -> usize {
+        self.assets.s_max - self.assets.ld1
+    }
+
+    fn decode_probs(&mut self, temp: f32) -> Result<Vec<f32>> {
+        let kv = self.kv.as_ref().ok_or_else(|| anyhow!("start() not called"))?;
+        let last = *self.seq.last().unwrap();
+        let token = lit_i32(last as i32);
+        let pos = lit_i32(self.seq.len() as i32 - 1);
+        let mut args = self.assets.weight_args();
+        args.push(Arg::Host(&token));
+        args.push(Arg::Host(&pos));
+        args.push(Arg::Host(kv));
+        let mut out = self.assets.decode.call(&self.assets.engine, &args)?;
+        if out.len() != 2 {
+            bail!("llm_decode: expected 2 outputs, got {}", out.len());
+        }
+        let new_kv = out.pop().unwrap();
+        let logits = lit_to_f32(&out.pop().unwrap())?;
+        self.kv = Some(new_kv);
+        Ok(crate::sqs::probs::softmax_t(&logits, temp))
+    }
+}

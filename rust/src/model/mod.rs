@@ -1,0 +1,92 @@
+//! Model layer: tokenizer, backend traits, PJRT-backed models, the KV-cache
+//! pool, and a synthetic backend for protocol tests and large sweeps.
+//!
+//! The speculative-decoding coordinator is written against the two traits
+//! below so the protocol logic is testable without artifacts and the big
+//! hyperparameter grids (Fig. 4/5) can run on a fast synthetic backend;
+//! the PJRT backend is the real serving path.
+
+pub mod kv;
+pub mod lm;
+pub mod synthetic;
+pub mod tokenizer;
+
+use anyhow::Result;
+
+use crate::sqs::{Quantized, Sparsifier};
+
+/// One fused draft step's outputs (mirrors the slm_decode_sqs artifact).
+#[derive(Clone, Debug)]
+pub struct SqsStep {
+    /// Sparsified + lattice-quantized distribution (what goes on the wire).
+    pub quant: Quantized,
+    /// The dense temperature-softmaxed draft distribution q (metrics /
+    /// support reconstruction; never transmitted).
+    pub probs: Vec<f32>,
+}
+
+/// Edge draft model: autoregressive decode fused with SQS.
+pub trait DraftLm {
+    fn vocab(&self) -> usize;
+
+    /// Reset to `prompt` as context (prefill).  Length must leave room for
+    /// drafting: prompt.len() + budget < s_max.
+    fn start(&mut self, prompt: &[u16]) -> Result<()>;
+
+    /// Number of tokens currently in context.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Compute q for the next position (conditioned on the current
+    /// context), sparsify + quantize, and *append* `sampled` afterwards via
+    /// `commit`.  Split in two so the caller samples from the quantized
+    /// distribution (QS correctness: the draft is sampled from q_hat).
+    fn next_sqs(&mut self, temp: f32, sp: &Sparsifier, ell: u32) -> Result<SqsStep>;
+
+    /// Append a token to the context (the sampled draft, or the cloud's
+    /// accepted/resampled token when syncing after feedback).
+    fn commit(&mut self, token: u16) -> Result<()>;
+
+    /// Truncate the context to `len` tokens (speculative rollback).  The
+    /// KV-cache contract makes this O(1): stale rows are overwritten
+    /// before they can be attended.
+    fn rollback(&mut self, len: usize) -> Result<()>;
+
+    /// Max usable context length.
+    fn max_len(&self) -> usize;
+}
+
+/// Cloud target model: windowed parallel verification.
+pub trait TargetLm {
+    fn vocab(&self) -> usize;
+
+    fn start(&mut self, prompt: &[u16]) -> Result<()>;
+
+    fn len(&self) -> usize;
+
+    /// Verify window: `window[0]` is the last committed context token
+    /// (re-processed), `window[1..]` are draft tokens.  Returns the
+    /// temperature-softmaxed next-token distribution after each window
+    /// position: out[i] = p(· | context + window[..=i]).
+    ///
+    /// Does NOT commit anything; call `commit_tokens` with what survived.
+    fn verify_window(&mut self, window: &[u16], temp: f32) -> Result<Vec<Vec<f32>>>;
+
+    /// Append accepted tokens (drafts that survived + the resampled/bonus
+    /// token) to the committed context.
+    fn commit_tokens(&mut self, tokens: &[u16]) -> Result<()>;
+
+    /// Max draft tokens per verify window (ld1 - 1).
+    fn max_drafts(&self) -> usize;
+
+    /// Max usable context length.
+    fn max_len(&self) -> usize;
+
+    /// Next-token distribution for AR-baseline decoding (appends nothing).
+    fn decode_probs(&mut self, temp: f32) -> Result<Vec<f32>>;
+}
+
+pub use tokenizer::{decode, encode, VOCAB};

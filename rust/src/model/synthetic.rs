@@ -1,0 +1,239 @@
+//! Synthetic draft/target model pair — a first-order Markov substrate.
+//!
+//! Purpose: (i) statistical tests of the speculative-decoding protocol
+//! against exactly-known distributions (impossible with the PJRT models),
+//! and (ii) fast backends for the large hyperparameter grids (Fig. 4/5),
+//! where the PJRT path would dominate sweep wallclock.
+//!
+//! Construction mirrors the paper's setting: the *target* has per-state
+//! logit rows with varying sharpness (some contexts predictable, some
+//! not — the variability C-SQS exploits); the *draft* sees the same rows
+//! through a distortion (scaled + noised logits), modelling a smaller
+//! model trained on the same data.  Temperature divides logits exactly as
+//! in the real stack.
+
+use anyhow::{bail, Result};
+
+use crate::sqs::probs::softmax_t;
+use crate::sqs::{sparse_quantize, Sparsifier};
+use crate::util::rng::Pcg64;
+
+use super::{DraftLm, SqsStep, TargetLm};
+
+/// Shared logit tables for a draft/target pair.
+#[derive(Clone)]
+pub struct SyntheticWorld {
+    pub vocab: usize,
+    /// target logits[state][token]
+    target: Vec<Vec<f32>>,
+    /// draft logits[state][token]
+    draft: Vec<Vec<f32>>,
+}
+
+impl SyntheticWorld {
+    /// `mismatch` in [0, inf): 0 = draft identical to target; larger values
+    /// increase SLM–LLM discrepancy (the first term of Theorem 1).
+    pub fn new(vocab: usize, mismatch: f64, seed: u64) -> SyntheticWorld {
+        let mut rng = Pcg64::new(seed, 0x5EED);
+        let mut target = Vec::with_capacity(vocab);
+        let mut draft = Vec::with_capacity(vocab);
+        for _ in 0..vocab {
+            // per-state sharpness: log-uniform in [0.5, 4] — some rows are
+            // near-deterministic, others diffuse
+            let sharp = (0.5f64).exp2() * (rng.next_f64() * 3.0).exp2() * 0.5;
+            let t_row: Vec<f32> = (0..vocab)
+                .map(|_| (rng.normal() * sharp) as f32)
+                .collect();
+            let d_row: Vec<f32> = t_row
+                .iter()
+                .map(|&x| x * (1.0 - 0.3 * mismatch as f32).max(0.0)
+                    + (rng.normal() * mismatch) as f32)
+                .collect();
+            target.push(t_row);
+            draft.push(d_row);
+        }
+        SyntheticWorld { vocab, target, draft }
+    }
+
+    pub fn draft_probs(&self, state: u16, temp: f32) -> Vec<f32> {
+        softmax_t(&self.draft[state as usize % self.vocab], temp)
+    }
+
+    pub fn target_probs(&self, state: u16, temp: f32) -> Vec<f32> {
+        softmax_t(&self.target[state as usize % self.vocab], temp)
+    }
+}
+
+/// Draft side (implements the same fused next_sqs contract as PJRT).
+pub struct SyntheticDraft {
+    world: SyntheticWorld,
+    seq: Vec<u16>,
+    max_len: usize,
+}
+
+impl SyntheticDraft {
+    pub fn new(world: SyntheticWorld, max_len: usize) -> Self {
+        SyntheticDraft { world, seq: Vec::new(), max_len }
+    }
+}
+
+impl DraftLm for SyntheticDraft {
+    fn vocab(&self) -> usize {
+        self.world.vocab
+    }
+
+    fn start(&mut self, prompt: &[u16]) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        self.seq = prompt.to_vec();
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    fn next_sqs(&mut self, temp: f32, sp: &Sparsifier, ell: u32) -> Result<SqsStep> {
+        if self.seq.len() >= self.max_len {
+            bail!("context full");
+        }
+        let probs = self.world.draft_probs(*self.seq.last().unwrap(), temp);
+        let quant = sparse_quantize(&probs, sp, ell);
+        Ok(SqsStep { quant, probs })
+    }
+
+    fn commit(&mut self, token: u16) -> Result<()> {
+        self.seq.push(token);
+        Ok(())
+    }
+
+    fn rollback(&mut self, len: usize) -> Result<()> {
+        if len == 0 || len > self.seq.len() {
+            bail!("bad rollback");
+        }
+        self.seq.truncate(len);
+        Ok(())
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+}
+
+/// Target side.
+pub struct SyntheticTarget {
+    world: SyntheticWorld,
+    seq: Vec<u16>,
+    max_drafts: usize,
+    max_len: usize,
+}
+
+impl SyntheticTarget {
+    pub fn new(world: SyntheticWorld, max_drafts: usize, max_len: usize) -> Self {
+        SyntheticTarget { world, seq: Vec::new(), max_drafts, max_len }
+    }
+}
+
+impl TargetLm for SyntheticTarget {
+    fn vocab(&self) -> usize {
+        self.world.vocab
+    }
+
+    fn start(&mut self, prompt: &[u16]) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("prompt must be non-empty");
+        }
+        self.seq = prompt.to_vec();
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.seq.len()
+    }
+
+    fn verify_window(&mut self, window: &[u16], temp: f32) -> Result<Vec<Vec<f32>>> {
+        if window.is_empty() || window.len() > self.max_drafts + 1 {
+            bail!("bad window");
+        }
+        if window[0] != *self.seq.last().unwrap() {
+            bail!("window[0] must be the last committed token");
+        }
+        Ok(window
+            .iter()
+            .map(|&t| self.world.target_probs(t, temp))
+            .collect())
+    }
+
+    fn commit_tokens(&mut self, tokens: &[u16]) -> Result<()> {
+        self.seq.extend_from_slice(tokens);
+        Ok(())
+    }
+
+    fn max_drafts(&self) -> usize {
+        self.max_drafts
+    }
+
+    fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    fn decode_probs(&mut self, temp: f32) -> Result<Vec<f32>> {
+        Ok(self.world.target_probs(*self.seq.last().unwrap(), temp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::tv_distance;
+
+    #[test]
+    fn zero_mismatch_means_identical_models() {
+        let w = SyntheticWorld::new(32, 0.0, 7);
+        for s in 0..32u16 {
+            let d = w.draft_probs(s, 0.8);
+            let t = w.target_probs(s, 0.8);
+            assert!(tv_distance(&d, &t) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mismatch_increases_tv() {
+        let w0 = SyntheticWorld::new(32, 0.2, 7);
+        let w1 = SyntheticWorld::new(32, 2.0, 7);
+        let avg = |w: &SyntheticWorld| -> f64 {
+            (0..32u16)
+                .map(|s| tv_distance(&w.draft_probs(s, 1.0), &w.target_probs(s, 1.0)))
+                .sum::<f64>()
+                / 32.0
+        };
+        assert!(avg(&w1) > avg(&w0) + 0.05, "more mismatch, more TV");
+    }
+
+    #[test]
+    fn temperature_controls_entropy() {
+        let w = SyntheticWorld::new(64, 0.5, 3);
+        let h = |t: f32| -> f64 {
+            (0..64u16)
+                .map(|s| crate::util::stats::entropy_bits(&w.target_probs(s, t)))
+                .sum::<f64>()
+                / 64.0
+        };
+        assert!(h(1.0) > h(0.3) + 0.5, "hotter => higher entropy");
+    }
+
+    #[test]
+    fn draft_trait_flow() {
+        let w = SyntheticWorld::new(16, 0.5, 1);
+        let mut d = SyntheticDraft::new(w, 100);
+        d.start(&[1, 2, 3]).unwrap();
+        let step = d.next_sqs(1.0, &Sparsifier::top_k(4), 50).unwrap();
+        assert_eq!(step.quant.k(), 4);
+        assert_eq!(step.quant.counts.iter().sum::<u32>(), 50);
+        d.commit(5).unwrap();
+        assert_eq!(d.len(), 4);
+        d.rollback(3).unwrap();
+        assert_eq!(d.len(), 3);
+    }
+}

@@ -1,0 +1,48 @@
+//! Byte-level tokenizer (V = 256), mirroring python/compile/corpus.py.
+//!
+//! Chosen precisely so the tokenizer is trivially identical across the
+//! python author path and the rust request path — no vocab files to ship,
+//! no merge tables to drift.
+
+/// Vocabulary size of the byte tokenizer.
+pub const VOCAB: usize = 256;
+
+pub fn encode(s: &str) -> Vec<u16> {
+    s.as_bytes().iter().map(|&b| b as u16).collect()
+}
+
+pub fn decode(tokens: &[u16]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Lossless byte view (for exact round-trips in tests).
+pub fn decode_bytes(tokens: &[u16]) -> Vec<u8> {
+    tokens.iter().map(|&t| (t & 0xff) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let s = "The capital of France is";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_roundtrip_via_bytes() {
+        let s = "café ≤ 東京";
+        let toks = encode(s);
+        assert_eq!(decode_bytes(&toks), s.as_bytes());
+        assert_eq!(decode(&toks), s);
+    }
+
+    #[test]
+    fn tokens_below_vocab() {
+        for t in encode("any text at all\n\t\u{7f}") {
+            assert!((t as usize) < VOCAB);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Typed view of `artifacts/manifest.json` (produced by python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub s_max: usize,
+    pub ld1: usize,
+    pub vocab: usize,
+    pub params: usize,
+    pub final_loss: f64,
+    pub weights_bin: PathBuf,
+    pub weights_index: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: Option<String>,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+    pub n_weight_args: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub corpus_sha: String,
+    pub prompts: Vec<String>,
+    pub models: Vec<ModelSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("'{key}' not a number"))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let vocab = req_usize(&j, "vocab")?;
+        let corpus_sha = req(&j, "corpus_sha")?.as_str().unwrap_or("").to_string();
+        let prompts = req(&j, "prompts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("prompts not an array"))?
+            .iter()
+            .filter_map(|p| p.as_str().map(String::from))
+            .collect();
+
+        let mut models = Vec::new();
+        for (name, m) in req(&j, "models")?.as_obj().ok_or_else(|| anyhow!("models"))? {
+            let mut weights_index = Vec::new();
+            for e in req(m, "weights_index")?.as_arr().unwrap_or(&[]) {
+                weights_index.push(TensorSpec {
+                    name: req(e, "name")?.as_str().unwrap_or("").to_string(),
+                    shape: req(e, "shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    offset: req_usize(e, "offset")?,
+                    numel: req_usize(e, "numel")?,
+                });
+            }
+            models.push(ModelSpec {
+                name: name.clone(),
+                d_model: req_usize(m, "d_model")?,
+                n_heads: req_usize(m, "n_heads")?,
+                n_layers: req_usize(m, "n_layers")?,
+                d_ff: req_usize(m, "d_ff")?,
+                s_max: req_usize(m, "s_max")?,
+                ld1: req_usize(m, "ld1")?,
+                vocab: req_usize(m, "vocab")?,
+                params: req_usize(m, "params")?,
+                final_loss: req(m, "final_loss")?.as_f64().unwrap_or(f64::NAN),
+                weights_bin: dir.join(req(m, "weights_bin")?.as_str().unwrap_or("")),
+                weights_index,
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for (name, a) in req(&j, "artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts"))? {
+            let mut args = Vec::new();
+            for e in req(a, "args")?.as_arr().unwrap_or(&[]) {
+                args.push(ArgSpec {
+                    name: req(e, "name")?.as_str().unwrap_or("").to_string(),
+                    shape: req(e, "shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    dtype: req(e, "dtype")?.as_str().unwrap_or("").to_string(),
+                });
+            }
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(req(a, "file")?.as_str().unwrap_or("")),
+                model: a.get("model").and_then(|m| m.as_str()).map(String::from),
+                args,
+                outputs: req(a, "outputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect(),
+                n_weight_args: req_usize(a, "n_weight_args")?,
+            });
+        }
+
+        if models.is_empty() || artifacts.is_empty() {
+            bail!("manifest has no models/artifacts");
+        }
+        Ok(Manifest { dir, vocab, corpus_sha, prompts, models, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Default artifacts directory: $SQS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SQS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.models.len(), 2);
+        let slm = m.model("slm").unwrap();
+        let llm = m.model("llm").unwrap();
+        assert!(llm.params > slm.params * 4, "target must dwarf draft");
+        for art in ["slm_prefill", "slm_decode", "slm_decode_sqs",
+                    "llm_prefill", "llm_decode", "llm_verify", "sqs_kernel"] {
+            let a = m.artifact(art).unwrap();
+            assert!(a.file.exists(), "{:?} missing", a.file);
+        }
+        assert!(!m.prompts.is_empty());
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the serving hot path.
+//!
+//! Design notes:
+//! * Interchange is HLO *text* (see aot.py) — `HloModuleProto::from_text_file`
+//!   reassigns instruction ids, dodging the jax>=0.5 64-bit-id proto
+//!   incompatibility with xla_extension 0.5.1.
+//! * Artifacts are lowered with `return_tuple=False`, so executables return
+//!   one `PjRtBuffer` per output; large state (KV caches) is fed back into
+//!   the next call with `execute_b` and never leaves the device.
+//! * Model weights are uploaded once per model as device-resident buffers
+//!   and passed positionally before the per-call arguments.
+
+pub mod manifest;
+pub mod weights;
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+pub use manifest::{ArtifactSpec, Manifest, ModelSpec};
+
+/// Process-wide PJRT engine (CPU client).
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: PjRtClient::cpu().map_err(|e| anyhow!("{e}"))? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_module(&self, path: impl AsRef<Path>) -> Result<Module> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+        Ok(Module {
+            exe: Mutex::new(exe),
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Upload a host literal to the device.
+    pub fn upload(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload: {e}"))
+    }
+}
+
+/// A compiled executable + its name.  The inner mutex serializes calls on
+/// one executable; the coordinator shards sessions across `Module` clones
+/// (compiled per worker) when it needs parallel throughput.
+pub struct Module {
+    exe: Mutex<PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+/// Argument to an execution: either a host literal (uploaded per call) or
+/// a device-resident buffer (weights, carried KV state).
+pub enum Arg<'a> {
+    Host(&'a Literal),
+    Device(&'a PjRtBuffer),
+}
+
+impl Module {
+    /// Execute with mixed host/device args; returns one host literal per
+    /// output.
+    ///
+    /// PJRT (through this crate) returns a multi-output execution as a
+    /// single *tuple* buffer with no on-device splitting API, so outputs
+    /// necessarily round-trip through the host: the tuple is downloaded
+    /// and decomposed.  Weights stay device-resident (Arg::Device) and are
+    /// never re-uploaded; carried state (KV caches) costs one
+    /// download+upload per call — measured in the §Perf pass.
+    pub fn call(&self, engine: &Engine, args: &[Arg<'_>]) -> Result<Vec<Literal>> {
+        // upload host args first so `owned` is stable before re-borrowing
+        let mut owned: Vec<PjRtBuffer> = Vec::new();
+        for a in args {
+            if let Arg::Host(l) = a {
+                owned.push(engine.upload(l)?);
+            }
+        }
+        let mut uploaded = owned.iter();
+        let ptrs: Vec<&PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                Arg::Device(b) => *b,
+                Arg::Host(_) => uploaded.next().expect("upload count mismatch"),
+            })
+            .collect();
+        let exe = self.exe.lock().unwrap();
+        let out = exe
+            .execute_b::<&PjRtBuffer>(&ptrs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        drop(exe);
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: no outputs", self.name))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: download: {e}", self.name))?;
+        // multi-output executions come back as a tuple literal
+        match lit.shape().map_err(|e| anyhow!("{e}"))? {
+            xla::Shape::Tuple(_) => {
+                let mut lit = lit;
+                lit.decompose_tuple().map_err(|e| anyhow!("{e}"))
+            }
+            _ => Ok(vec![lit]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn lit_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn lit_vec_i32(xs: &[i32]) -> Literal {
+    Literal::vec1(xs)
+}
+
+pub fn lit_f32_tensor(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Extract f32 data from an output literal.
+pub fn lit_to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+}
+
+pub fn lit_to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))
+}
+
+pub fn lit_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit_to_f32(lit)?[0])
+}
+
+pub fn lit_scalar_i32(lit: &Literal) -> Result<i32> {
+    Ok(lit_to_i32(lit)?[0])
+}
+
+/// Element count of an array literal (shape sanity checks in tests).
+pub fn lit_element_count(lit: &Literal) -> usize {
+    lit.element_count()
+}
+
+pub fn element_type_of(lit: &Literal) -> Result<ElementType> {
+    lit.ty().map_err(|e| anyhow!("{e}"))
+}

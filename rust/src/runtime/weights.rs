@@ -1,0 +1,56 @@
+//! Model-weight loading: flat little-endian f32 blobs indexed by the
+//! manifest (written by aot.py), uploaded once as device-resident buffers.
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer};
+
+use super::manifest::ModelSpec;
+use super::{lit_f32_tensor, Engine};
+
+/// Device-resident weight set for one model, in manifest (= HLO argument)
+/// order.
+///
+/// The source host literals are retained: PJRT's buffer_from_host_literal
+/// copies asynchronously and holds a raw reference to the literal's
+/// storage; dropping the literal while the copy is in flight is a
+/// use-after-free (observed as a size-check abort in the CPU plugin).
+pub struct Weights {
+    pub buffers: Vec<PjRtBuffer>,
+    pub names: Vec<String>,
+    pub total_params: usize,
+    _literals: Vec<Literal>,
+}
+
+impl Weights {
+    pub fn load(engine: &Engine, spec: &ModelSpec) -> Result<Weights> {
+        let blob = std::fs::read(&spec.weights_bin)
+            .with_context(|| format!("reading {:?}", spec.weights_bin))?;
+        let mut buffers = Vec::with_capacity(spec.weights_index.len());
+        let mut literals = Vec::with_capacity(spec.weights_index.len());
+        let mut names = Vec::with_capacity(spec.weights_index.len());
+        let mut total = 0usize;
+        for t in &spec.weights_index {
+            let bytes = t.numel * 4;
+            if t.offset + bytes > blob.len() {
+                bail!("weights blob truncated at tensor '{}'", t.name);
+            }
+            let mut data = vec![0f32; t.numel];
+            for (i, chunk) in blob[t.offset..t.offset + bytes].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            if data.iter().any(|x| !x.is_finite()) {
+                bail!("non-finite weight in tensor '{}'", t.name);
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit: Literal = lit_f32_tensor(&data, &dims)?;
+            buffers.push(engine.upload(&lit)?);
+            literals.push(lit);
+            names.push(t.name.clone());
+            total += t.numel;
+        }
+        if total != spec.params {
+            bail!("weight count {} != manifest params {}", total, spec.params);
+        }
+        Ok(Weights { buffers, names, total_params: total, _literals: literals })
+    }
+}

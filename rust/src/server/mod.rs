@@ -1,0 +1,243 @@
+//! TCP serving front-end: newline-delimited JSON over std::net.
+//!
+//! Protocol (one request per line):
+//!   -> {"prompt": "...", "max_tokens": 32, "policy": "csqs",
+//!       "temp": 0.8, "k": 8, "beta0": 0.01, "alpha": 0.0005, "eta": 0.001}
+//!   <- {"id": 1, "text": "...", "tokens": 32, "batches": 5,
+//!       "resampling_rate": 0.2, "acceptance": 0.81,
+//!       "bits_per_token": 92.5, "latency_s": 0.41, ...}
+//!
+//! Architecture: acceptor threads feed a shared request channel; a single
+//! inference thread owns the (thread-bound) PJRT stack and serves requests
+//! in FIFO order, replying through per-request response channels.  This is
+//! the classic single-accelerator serving shape: network concurrency at
+//! the edge of the process, strict ordering at the device.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::channel::LinkConfig;
+use crate::coordinator::{Metrics, PjrtStack, SessionConfig};
+use crate::model::{decode, encode};
+use crate::sqs::Policy;
+use crate::util::json::Json;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub kv_budget_bytes: u64,
+    pub link: LinkConfig,
+    /// serve at most this many requests then exit (None = forever);
+    /// used by tests and the serve_tcp example
+    pub max_requests: Option<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7077".into(),
+            kv_budget_bytes: 1 << 30,
+            link: LinkConfig::default(),
+            max_requests: None,
+        }
+    }
+}
+
+struct Job {
+    line: String,
+    reply: Sender<String>,
+}
+
+/// Parse a request line into a session config + prompt.
+pub fn parse_request(line: &str) -> Result<(Vec<u16>, SessionConfig)> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+    let prompt_s = j
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .ok_or_else(|| anyhow!("missing 'prompt'"))?;
+    let policy = match j.get("policy").and_then(|p| p.as_str()).unwrap_or("csqs") {
+        "ksqs" => Policy::KSqs {
+            k: j.get("k").and_then(|x| x.as_usize()).unwrap_or(8),
+        },
+        "csqs" => Policy::CSqs {
+            beta0: j.get("beta0").and_then(|x| x.as_f64()).unwrap_or(0.01),
+            alpha: j.get("alpha").and_then(|x| x.as_f64()).unwrap_or(0.0005),
+            eta: j.get("eta").and_then(|x| x.as_f64()).unwrap_or(0.001),
+        },
+        "dense" => Policy::DenseQs,
+        other => return Err(anyhow!("unknown policy '{other}'")),
+    };
+    let cfg = SessionConfig {
+        policy,
+        temp: j.get("temp").and_then(|x| x.as_f64()).unwrap_or(0.8) as f32,
+        max_new_tokens: j.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(32),
+        seed: j.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+        ..Default::default()
+    };
+    Ok((encode(prompt_s), cfg))
+}
+
+fn handle_conn(stream: TcpStream, jobs: Sender<Job>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (tx, rx) = channel();
+        if jobs.send(Job { line, reply: tx }).is_err() {
+            break; // server shutting down
+        }
+        match rx.recv() {
+            Ok(resp) => {
+                if writer.write_all(resp.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    crate::debug!("connection {peer} closed");
+}
+
+/// Run the server (blocks).  Returns after `max_requests` if set.
+pub fn serve(cfg: ServerConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    crate::info!("sqs-sd serving on {}", cfg.addr);
+    let (jobs_tx, jobs_rx) = channel::<Job>();
+
+    // acceptor thread: spawns one lightweight thread per connection
+    let acceptor = {
+        let jobs_tx = jobs_tx.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(s) => {
+                        let jt = jobs_tx.clone();
+                        std::thread::spawn(move || handle_conn(s, jt));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+    };
+    drop(jobs_tx);
+
+    // inference thread = this thread (owns the PJRT stack)
+    let stack = PjrtStack::load(cfg.kv_budget_bytes)?;
+    let metrics = Metrics::new();
+    let mut served = 0usize;
+    let mut next_id = 0u64;
+
+    while let Ok(job) = jobs_rx.recv() {
+        next_id += 1;
+        let id = next_id;
+        let resp = match parse_request(&job.line) {
+            Err(e) => Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("error", Json::Str(e.to_string())),
+            ]),
+            Ok((prompt, mut scfg)) => {
+                scfg.seed ^= id;
+                let t0 = std::time::Instant::now();
+                let mut sess = stack.session(cfg.link, scfg);
+                match sess.run(&prompt) {
+                    Err(e) => Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("error", Json::Str(e.to_string())),
+                    ]),
+                    Ok(res) => {
+                        metrics.inc("requests_ok", 1);
+                        metrics.observe("wall_s", t0.elapsed().as_secs_f64());
+                        metrics.observe("sim_latency_s", res.total_time_s);
+                        metrics.observe("resampling_rate", res.resampling_rate());
+                        Json::obj(vec![
+                            ("id", Json::Num(id as f64)),
+                            ("text", Json::Str(decode(&res.tokens[res.prompt_len..]))),
+                            ("tokens", Json::Num(res.new_tokens() as f64)),
+                            ("batches", Json::Num(res.batches.len() as f64)),
+                            ("resampling_rate", Json::Num(res.resampling_rate())),
+                            ("acceptance", Json::Num(res.acceptance_rate())),
+                            ("bits_per_token", Json::Num(res.bits_per_token())),
+                            ("latency_s", Json::Num(res.total_time_s)),
+                            ("t_slm_s", Json::Num(res.t_slm_s)),
+                            ("t_uplink_s", Json::Num(res.t_uplink_s)),
+                            ("t_llm_s", Json::Num(res.t_llm_s)),
+                            ("mean_k", Json::Num(res.mean_k())),
+                        ])
+                    }
+                }
+            }
+        };
+        let _ = job.reply.send(resp.to_string_compact());
+        served += 1;
+        if let Some(max) = cfg.max_requests {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    crate::info!("server done after {served} requests\n{}", metrics.render_table());
+    drop(acceptor);
+    Ok(())
+}
+
+/// Minimal blocking client (examples + tests).
+pub struct Client {
+    stream: Mutex<(BufReader<TcpStream>, TcpStream)>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream: Mutex::new((reader, stream)) })
+    }
+
+    pub fn request(&self, body: &Json) -> Result<Json> {
+        let mut guard = self.stream.lock().unwrap();
+        let line = body.to_string_compact();
+        guard.1.write_all(line.as_bytes())?;
+        guard.1.write_all(b"\n")?;
+        let mut resp = String::new();
+        guard.0.read_line(&mut resp)?;
+        Json::parse(resp.trim()).map_err(|e| anyhow!("bad response: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_variants() {
+        let (prompt, cfg) = parse_request(
+            r#"{"prompt": "hi", "policy": "ksqs", "k": 4, "temp": 0.5, "max_tokens": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(prompt, encode("hi"));
+        assert_eq!(cfg.policy, Policy::KSqs { k: 4 });
+        assert_eq!(cfg.temp, 0.5);
+        assert_eq!(cfg.max_new_tokens, 7);
+
+        let (_, cfg) = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert!(matches!(cfg.policy, Policy::CSqs { .. }));
+
+        assert!(parse_request(r#"{"policy": "ksqs"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"prompt":"x","policy":"bogus"}"#).is_err());
+    }
+}

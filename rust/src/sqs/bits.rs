@@ -1,0 +1,209 @@
+//! Uplink bit accounting — eqs. (1), (2), (5) and the C-SQS overhead.
+//!
+//! Two views are provided and cross-checked by tests and the TBL-BITS
+//! bench: the paper's *formula* costs (exact integer bit counts via the
+//! BigUint binomials) and the *actual serialized frame size* from the
+//! codec, which are equal by construction of the combinatorial coding.
+
+use crate::util::bigint::{binomial, BinomialCache};
+use crate::util::ceil_log2_u64;
+
+/// ceil(log2 C(n, k)) — exact, via bignum.
+pub fn log2_binomial_ceil(n: u64, k: u64) -> usize {
+    let c = binomial(n, k);
+    if c.is_zero() {
+        return 0;
+    }
+    // ceil(log2 c): bits()-1 if power of two else bits()
+    let bits = c.bits();
+    let is_pow2 = {
+        let mut seen = false;
+        let mut pow2 = true;
+        for i in 0..bits {
+            if c.bit(i) {
+                if seen {
+                    pow2 = false;
+                    break;
+                }
+                seen = true;
+            }
+        }
+        pow2
+    };
+    if is_pow2 { bits - 1 } else { bits }
+}
+
+/// Fractional log2 C(n, k) (for reporting; budgets use the integer view).
+pub fn log2_binomial(n: u64, k: u64) -> f64 {
+    binomial(n, k).log2()
+}
+
+/// Support-set description cost b~(K) for a *fixed-K* scheme (eq. (5)):
+/// ceil(log2 C(V, K)).
+pub fn support_bits_fixed_k(vocab: usize, k: usize) -> usize {
+    log2_binomial_ceil(vocab as u64, k as u64)
+}
+
+/// Support-set description cost for C-SQS, where K varies per token:
+/// ceil(log2 C(V, K)) + ceil(log2 V)  (the second term transmits K).
+pub fn support_bits_adaptive(vocab: usize, k: usize) -> usize {
+    log2_binomial_ceil(vocab as u64, k as u64) + ceil_log2_u64(vocab as u64)
+}
+
+/// Lattice-point description cost b^(K, ell) (eq. (2)):
+/// ceil(log2 C(ell + K - 1, K - 1)) — the number of compositions of ell
+/// into K non-negative parts.
+pub fn lattice_bits(k: usize, ell: u32) -> usize {
+    if k <= 1 {
+        return 0; // a single part must equal ell: zero information
+    }
+    log2_binomial_ceil(ell as u64 + k as u64 - 1, k as u64 - 1)
+}
+
+/// Total per-token payload b_n(K, ell) (eq. (1)) for the given scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeBits {
+    /// K-SQS: fixed K known to both ends.
+    FixedK,
+    /// C-SQS: K transmitted per token.
+    Adaptive,
+    /// Dense QS: support is the whole vocabulary (no support bits).
+    Dense,
+}
+
+pub fn token_bits(scheme: SchemeBits, vocab: usize, k: usize, ell: u32) -> usize {
+    match scheme {
+        SchemeBits::FixedK => support_bits_fixed_k(vocab, k) + lattice_bits(k, ell),
+        SchemeBits::Adaptive => support_bits_adaptive(vocab, k) + lattice_bits(k, ell),
+        SchemeBits::Dense => lattice_bits(vocab, ell),
+    }
+}
+
+/// Raw float32 baseline: transmitting q densely costs 32V bits.
+pub fn raw_f32_bits(vocab: usize) -> usize {
+    32 * vocab
+}
+
+/// Memoizing calculator for hot loops (one per edge thread).
+pub struct BitCost {
+    vocab: usize,
+    cache: BinomialCache,
+}
+
+impl BitCost {
+    pub fn new(vocab: usize) -> Self {
+        BitCost { vocab, cache: BinomialCache::new() }
+    }
+
+    fn ceil_log2(&mut self, n: u64, k: u64) -> usize {
+        let c = self.cache.get(n, k);
+        if c.is_zero() {
+            return 0;
+        }
+        let bits = c.bits();
+        let mut ones = 0;
+        for i in 0..bits {
+            if c.bit(i) {
+                ones += 1;
+                if ones > 1 {
+                    break;
+                }
+            }
+        }
+        if ones == 1 { bits - 1 } else { bits }
+    }
+
+    pub fn token_bits(&mut self, scheme: SchemeBits, k: usize, ell: u32) -> usize {
+        let v = self.vocab;
+        match scheme {
+            SchemeBits::FixedK => {
+                self.ceil_log2(v as u64, k as u64) + self.lattice(k, ell)
+            }
+            SchemeBits::Adaptive => {
+                self.ceil_log2(v as u64, k as u64)
+                    + ceil_log2_u64(v as u64)
+                    + self.lattice(k, ell)
+            }
+            SchemeBits::Dense => self.lattice(v, ell),
+        }
+    }
+
+    fn lattice(&mut self, k: usize, ell: u32) -> usize {
+        if k <= 1 {
+            0
+        } else {
+            self.ceil_log2(ell as u64 + k as u64 - 1, k as u64 - 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_binomial_small() {
+        assert_eq!(log2_binomial_ceil(4, 2), 3); // C(4,2)=6 -> 3 bits
+        assert_eq!(log2_binomial_ceil(4, 0), 0); // C=1 -> 0 bits
+        assert_eq!(log2_binomial_ceil(8, 1), 3); // C=8 -> exactly 3 bits
+        assert_eq!(log2_binomial_ceil(9, 1), 4); // C=9 -> 4 bits
+    }
+
+    #[test]
+    fn fractional_close_to_ceil() {
+        for (n, k) in [(256u64, 8u64), (256, 32), (256, 128), (355, 99)] {
+            let f = log2_binomial(n, k);
+            let c = log2_binomial_ceil(n, k) as f64;
+            assert!(c >= f - 1e-9 && c < f + 1.0, "n={n} k={k} f={f} c={c}");
+        }
+    }
+
+    #[test]
+    fn paper_operating_point() {
+        // V=256 byte vocab, ell=100 (the paper's resolution), K=8:
+        let sup = support_bits_fixed_k(256, 8);
+        let lat = lattice_bits(8, 100);
+        // C(256,8) ~ 4.1e14 -> 49 bits; C(107,7) ~ 2.6e10 -> 35 bits
+        assert_eq!(sup, 49);
+        assert_eq!(lat, 35);
+        assert_eq!(token_bits(SchemeBits::FixedK, 256, 8, 100), 84);
+        // adaptive adds ceil(log2 256) = 8 bits
+        assert_eq!(token_bits(SchemeBits::Adaptive, 256, 8, 100), 92);
+        // all schemes beat raw f32 (8192 bits) by a huge factor
+        assert!(token_bits(SchemeBits::Dense, 256, 8, 100) < raw_f32_bits(256));
+    }
+
+    #[test]
+    fn dense_support_is_free() {
+        // K = V: C(V,V) = 1 -> support carries no information
+        assert_eq!(support_bits_fixed_k(64, 64), 0);
+    }
+
+    #[test]
+    fn monotone_in_k_and_ell() {
+        let mut prev = 0;
+        for k in 1..=64usize {
+            let b = lattice_bits(k, 100);
+            assert!(b >= prev, "lattice bits must grow with k");
+            prev = b;
+        }
+        let mut prev = 0;
+        for ell in [2u32, 10, 100, 1000] {
+            let b = lattice_bits(16, ell);
+            assert!(b >= prev, "lattice bits must grow with ell");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn memoized_matches_direct() {
+        let mut bc = BitCost::new(256);
+        for k in [1usize, 2, 8, 33, 256] {
+            for ell in [10u32, 100, 500] {
+                for s in [SchemeBits::FixedK, SchemeBits::Adaptive, SchemeBits::Dense] {
+                    assert_eq!(bc.token_bits(s, k, ell), token_bits(s, 256, k, ell));
+                }
+            }
+        }
+    }
+}

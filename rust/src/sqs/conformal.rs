@@ -1,0 +1,275 @@
+//! Online conformal threshold controller — the paper's C-SQS contribution.
+//!
+//! Implements the update rule (eq. (8))
+//!
+//! ```text
+//! beta_{n+1} = beta_n - eta * (alpha_n - alpha_target)
+//! ```
+//!
+//! where alpha_n is the probability mass dropped by thresholding at step n
+//! (equal to TV(q, q~) by Lemma 1), together with Algorithm 1's
+//! checkpoint/backtracking: during drafting the update is applied
+//! per-token; once cloud feedback arrives, the threshold state rolls back
+//! to just after the last token that "counts" — the accepted prefix plus
+//! the rejected-and-resampled position (whose distribution is conditioned
+//! only on accepted tokens, so its update stands) — discarding updates
+//! made for drafts beyond the rejection point.
+//!
+//! The controller also tracks the Theorem 2 certificate
+//!
+//! ```text
+//! (1/T) sum alpha_n  <=  alpha + (|beta_1| + 1 + eta*alpha) / (eta*T)
+//! ```
+//!
+//! and the Lemma 4 iterate envelope -eta(1-alpha) <= beta <= 1 + eta*alpha,
+//! both asserted in tests and reported by the THM2 bench.
+
+/// Controller state + guarantee bookkeeping.
+#[derive(Clone, Debug)]
+pub struct ConformalController {
+    /// Target average dropped mass (alpha in the paper; e.g. 5e-4).
+    pub target: f64,
+    /// Learning rate eta (0 disables adaptation — the Fig. 5 ablation).
+    pub eta: f64,
+    beta0: f64,
+    beta: f64,
+    /// Per-batch history: beta value *after* each in-batch update.
+    batch_betas: Vec<f64>,
+    /// Per-batch history of observed alphas (parallel to batch_betas).
+    batch_alphas: Vec<f64>,
+    /// Committed (post-feedback) cumulative alpha over counted tokens.
+    cum_alpha: f64,
+    /// Number of counted tokens T.
+    counted: u64,
+}
+
+impl ConformalController {
+    pub fn new(beta0: f64, target: f64, eta: f64) -> Self {
+        assert!((0.0..1.0).contains(&target), "alpha target must be in (0,1)");
+        assert!(eta >= 0.0);
+        ConformalController {
+            target,
+            eta,
+            beta0,
+            beta: beta0,
+            batch_betas: Vec::new(),
+            batch_alphas: Vec::new(),
+            cum_alpha: 0.0,
+            counted: 0,
+        }
+    }
+
+    /// Current threshold to use for the next token.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    pub fn beta0(&self) -> f64 {
+        self.beta0
+    }
+
+    /// Begin a new speculative batch (clears in-batch history).
+    pub fn begin_batch(&mut self) {
+        self.batch_betas.clear();
+        self.batch_alphas.clear();
+    }
+
+    /// Observe the dropped mass alpha_n for the token just drafted and
+    /// apply update (8).  Call once per drafted token, in order.
+    pub fn observe(&mut self, alpha_n: f64) {
+        if self.eta > 0.0 {
+            self.beta -= self.eta * (alpha_n - self.target);
+        }
+        self.batch_betas.push(self.beta);
+        self.batch_alphas.push(alpha_n);
+    }
+
+    /// Cloud feedback for the batch: `accepted` of the `drafted` tokens
+    /// were accepted (accepted < drafted means position accepted+1 was
+    /// rejected and resampled; accepted == drafted means all drafts stood
+    /// and the bonus token came from the LLM directly).
+    ///
+    /// Rolls the threshold back per Algorithm 1 lines 11-13 and commits
+    /// the counted alphas for the Theorem 2 ledger.
+    pub fn feedback(&mut self, drafted: usize, accepted: usize) {
+        assert!(accepted <= drafted);
+        assert_eq!(self.batch_betas.len(), drafted, "observe() per drafted token");
+        // tokens that count: accepted prefix + the resampled position (if any)
+        let counted = if accepted < drafted { accepted + 1 } else { drafted };
+        if counted > 0 {
+            // roll back to the state after the last counted update; the
+            // updates for discarded drafts (counted..drafted) are undone
+            self.beta = self.batch_betas[counted - 1];
+            for &a in &self.batch_alphas[..counted] {
+                self.cum_alpha += a;
+            }
+            self.counted += counted as u64;
+        } else {
+            // nothing drafted (shouldn't happen, but keep state coherent)
+            self.beta = if let Some(&b) = self.batch_betas.last() { b } else { self.beta };
+        }
+        self.batch_betas.clear();
+        self.batch_alphas.clear();
+    }
+
+    /// Number of counted tokens T in the Theorem 2 ledger.
+    pub fn t(&self) -> u64 {
+        self.counted
+    }
+
+    /// Empirical (1/T) sum alpha_n over counted tokens.
+    pub fn empirical_alpha(&self) -> f64 {
+        if self.counted == 0 {
+            0.0
+        } else {
+            self.cum_alpha / self.counted as f64
+        }
+    }
+
+    /// Theorem 2 bound: alpha + (|beta_1| + 1 + eta*alpha)/(eta * T).
+    /// Infinite for eta = 0 (no guarantee without adaptation).
+    pub fn theorem2_bound(&self) -> f64 {
+        if self.eta == 0.0 || self.counted == 0 {
+            return f64::INFINITY;
+        }
+        self.target
+            + (self.beta0.abs() + 1.0 + self.eta * self.target)
+                / (self.eta * self.counted as f64)
+    }
+
+    /// Lemma 4 envelope: -eta(1-alpha) <= beta <= 1 + eta*alpha.
+    /// (Holds when beta0 itself starts inside the envelope.)
+    pub fn envelope(&self) -> (f64, f64) {
+        (-self.eta * (1.0 - self.target), 1.0 + self.eta * self.target)
+    }
+
+    pub fn in_envelope(&self) -> bool {
+        let (lo, hi) = self.envelope();
+        let lo = lo.min(self.beta0);
+        let hi = hi.max(self.beta0);
+        self.beta >= lo - 1e-12 && self.beta <= hi + 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Pcg64;
+
+    /// Simulate the threshold acting on synthetic distributions: the
+    /// observed alpha is a (noisy, monotone) function of beta, as it is
+    /// for real next-token distributions.
+    fn synthetic_alpha(beta: f64, rng: &mut Pcg64) -> f64 {
+        // Physical coupling of thresholding (the property Lemma 4 uses):
+        // beta <= 0 keeps the full support (alpha = 0); beta > 1 drops all
+        // but the arg-max (alpha -> 1); in between alpha grows with beta,
+        // with noise modelling per-context variability.
+        if beta <= 0.0 {
+            return 0.0;
+        }
+        if beta > 1.0 {
+            return 1.0;
+        }
+        let base = beta.powf(0.5) * 0.8;
+        (base + 0.2 * rng.next_f64() * beta).clamp(0.0, 1.0)
+    }
+
+    #[test]
+    fn update_direction() {
+        let mut c = ConformalController::new(0.1, 0.05, 0.01);
+        c.begin_batch();
+        c.observe(0.5); // dropped too much -> beta must decrease
+        assert!(c.beta() < 0.1);
+        let b = c.beta();
+        c.observe(0.0); // dropped nothing -> beta increases
+        assert!(c.beta() > b);
+    }
+
+    #[test]
+    fn eta_zero_is_static() {
+        let mut c = ConformalController::new(0.07, 0.01, 0.0);
+        c.begin_batch();
+        for _ in 0..10 {
+            c.observe(0.9);
+        }
+        assert_eq!(c.beta(), 0.07);
+        c.feedback(10, 4);
+        assert_eq!(c.beta(), 0.07);
+        assert_eq!(c.t(), 5);
+    }
+
+    #[test]
+    fn backtracking_discards_post_rejection_updates() {
+        let mut c = ConformalController::new(0.5, 0.1, 0.1);
+        c.begin_batch();
+        c.observe(0.2); // beta -> 0.5 - 0.1*(0.1) = 0.49
+        c.observe(0.3); // beta -> 0.49 - 0.1*(0.2) = 0.47
+        c.observe(0.9); // would-be beta 0.47 - 0.08 = 0.39 (discarded)
+        c.observe(0.9); // (discarded)
+        // 1 accepted of 4 drafted -> counted = 2 (accepted + resampled)
+        c.feedback(4, 1);
+        assert!((c.beta() - 0.47).abs() < 1e-12, "beta={}", c.beta());
+        assert_eq!(c.t(), 2);
+        assert!((c.empirical_alpha() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_accepted_keeps_final_beta() {
+        let mut c = ConformalController::new(0.5, 0.1, 0.1);
+        c.begin_batch();
+        c.observe(0.2);
+        c.observe(0.3);
+        let b = c.beta();
+        c.feedback(2, 2);
+        assert_eq!(c.beta(), b);
+        assert_eq!(c.t(), 2);
+    }
+
+    #[test]
+    fn theorem2_bound_holds_on_synthetic_stream() {
+        check("theorem 2 bound", 40, |g, case| {
+            let eta = g.f64(1e-4, 0.5);
+            let target = g.f64(1e-4, 0.3);
+            let beta0 = g.f64(0.0, 1.0);
+            let mut c = ConformalController::new(beta0, target, eta);
+            let mut rng = Pcg64::new(77, case as u64);
+            for _ in 0..300 {
+                c.begin_batch();
+                let drafted = 1 + rng.below(8) as usize;
+                for _ in 0..drafted {
+                    let a = synthetic_alpha(c.beta(), &mut rng);
+                    c.observe(a);
+                }
+                let accepted = rng.below(drafted as u64 + 1) as usize;
+                c.feedback(drafted, accepted);
+                assert!(c.in_envelope(), "beta escaped envelope: {}", c.beta());
+            }
+            assert!(
+                c.empirical_alpha() <= c.theorem2_bound() + 1e-9,
+                "empirical {} > bound {} (eta={eta} target={target})",
+                c.empirical_alpha(),
+                c.theorem2_bound()
+            );
+        });
+    }
+
+    #[test]
+    fn adaptation_tracks_target_on_responsive_stream() {
+        // When alpha responds monotonically to beta, long-run empirical
+        // alpha should approach the target from below the bound.
+        let mut c = ConformalController::new(0.5, 0.10, 0.05);
+        let mut rng = Pcg64::new(5, 0);
+        for _ in 0..5000 {
+            c.begin_batch();
+            let a = synthetic_alpha(c.beta(), &mut rng);
+            c.observe(a);
+            c.feedback(1, 1);
+        }
+        let emp = c.empirical_alpha();
+        assert!(
+            (emp - 0.10).abs() < 0.05,
+            "empirical alpha {emp} should approach target 0.10"
+        );
+    }
+}

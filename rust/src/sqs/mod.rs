@@ -1,0 +1,71 @@
+//! The paper's algorithms: sparsification, sparse-lattice quantization,
+//! online conformal threshold control, and uplink bit accounting.
+
+pub mod bits;
+pub mod conformal;
+pub mod probs;
+pub mod slq;
+pub mod sparsify;
+
+pub use conformal::ConformalController;
+pub use slq::{lattice_quantize, sparse_quantize, Quantized};
+pub use sparsify::{Sparsifier, Support};
+
+/// Draft-compression policy for a speculative-decoding session — the
+/// operating modes compared in the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    /// K-SQS: fixed top-K truncation (paper §2).
+    KSqs { k: usize },
+    /// C-SQS: online-conformal threshold (paper §3).
+    CSqs { beta0: f64, alpha: f64, eta: f64 },
+    /// Dense QS baseline [22]: quantize the full vocabulary.
+    DenseQs,
+    /// Uncompressed baseline: ship raw f32 probabilities.
+    RawF32,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::KSqs { .. } => "K-SQS",
+            Policy::CSqs { .. } => "C-SQS",
+            Policy::DenseQs => "QS-dense",
+            Policy::RawF32 => "raw-f32",
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Policy::KSqs { k } => format!("K-SQS(K={k})"),
+            Policy::CSqs { beta0, alpha, eta } => {
+                format!("C-SQS(beta0={beta0}, alpha={alpha}, eta={eta})")
+            }
+            Policy::DenseQs => "QS-dense".into(),
+            Policy::RawF32 => "raw-f32".into(),
+        }
+    }
+
+    pub fn bits_scheme(&self) -> bits::SchemeBits {
+        match self {
+            Policy::KSqs { .. } => bits::SchemeBits::FixedK,
+            Policy::CSqs { .. } => bits::SchemeBits::Adaptive,
+            Policy::DenseQs | Policy::RawF32 => bits::SchemeBits::Dense,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::KSqs { k: 8 }.name(), "K-SQS");
+        assert_eq!(
+            Policy::CSqs { beta0: 0.01, alpha: 5e-4, eta: 1e-3 }.name(),
+            "C-SQS"
+        );
+        assert!(Policy::KSqs { k: 8 }.describe().contains("K=8"));
+    }
+}

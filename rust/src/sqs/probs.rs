@@ -1,0 +1,143 @@
+//! Probability-vector utilities shared across the SQS pipeline.
+//!
+//! All math is f32 to mirror the L1/L2 compute exactly (the rust SLQ must
+//! reproduce the Pallas kernel's arithmetic bit-for-bit; see slq.rs).
+
+use crate::util::rng::Pcg64;
+
+/// Temperature softmax, f32, numerically matching `kernels/ref.py::softmax_t`
+/// (max-subtraction, temperature clamped at 1e-4).
+pub fn softmax_t(logits: &[f32], temp: f32) -> Vec<f32> {
+    let t = temp.max(1e-4);
+    let mut z: Vec<f32> = logits.iter().map(|&x| x / t).collect();
+    let m = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in z.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in z.iter_mut() {
+        *x /= sum;
+    }
+    z
+}
+
+/// Sample an index from a probability vector (sums to ~1).
+pub fn sample(probs: &[f32], rng: &mut Pcg64) -> usize {
+    let mut u = rng.next_f64() * probs.iter().map(|&p| p as f64).sum::<f64>();
+    for (i, &p) in probs.iter().enumerate() {
+        u -= p as f64;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Sample from a lattice-quantized distribution given integer counts
+/// summing to `ell`: exact sampling from q_hat = counts/ell with a single
+/// uniform integer draw (no float roundoff).
+pub fn sample_lattice(counts: &[u32], ell: u32, rng: &mut Pcg64) -> usize {
+    debug_assert_eq!(counts.iter().sum::<u32>(), ell);
+    let mut u = rng.below(ell as u64) as i64;
+    for (i, &c) in counts.iter().enumerate() {
+        u -= c as i64;
+        if u < 0 {
+            return i;
+        }
+    }
+    // unreachable if counts sum to ell
+    counts.len() - 1
+}
+
+/// Residual distribution for speculative rejection: r(x) ∝ max(0, p(x) - qhat(x)).
+/// Returns None if the residual has zero mass (p == qhat), in which case
+/// the caller samples from p directly.
+pub fn residual(p: &[f32], qhat: &[f32]) -> Option<Vec<f32>> {
+    let mut r: Vec<f32> = p
+        .iter()
+        .zip(qhat)
+        .map(|(&a, &b)| (a - b).max(0.0))
+        .collect();
+    let s: f32 = r.iter().sum();
+    if s <= 0.0 {
+        return None;
+    }
+    for x in r.iter_mut() {
+        *x /= s;
+    }
+    Some(r)
+}
+
+/// Dense quantized distribution from lattice counts.
+pub fn lattice_to_probs(counts: &[u32], ell: u32) -> Vec<f32> {
+    counts.iter().map(|&c| c as f32 / ell as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::stats::tv_distance;
+
+    #[test]
+    fn softmax_normalizes_and_sharpens() {
+        let logits = [2.0f32, 1.0, 0.0, -1.0];
+        let p1 = softmax_t(&logits, 1.0);
+        let p02 = softmax_t(&logits, 0.2);
+        assert!((p1.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p02[0] > p1[0]);
+        // temp->0 approaches argmax
+        let p0 = softmax_t(&logits, 0.0);
+        assert!(p0[0] > 0.999);
+    }
+
+    #[test]
+    fn sample_lattice_exact_frequencies() {
+        let counts = [50u32, 30, 0, 20];
+        let mut rng = Pcg64::new(1, 1);
+        let mut freq = [0u64; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            freq[sample_lattice(&counts, 100, &mut rng)] += 1;
+        }
+        assert_eq!(freq[2], 0, "zero-count symbol must never be sampled");
+        for i in 0..4 {
+            let expect = counts[i] as f64 / 100.0 * n as f64;
+            if expect > 0.0 {
+                assert!(
+                    (freq[i] as f64 - expect).abs() < 6.0 * expect.sqrt(),
+                    "i={i} freq={} expect={expect}", freq[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_math() {
+        let p = [0.5f32, 0.3, 0.2];
+        let q = [0.2f32, 0.5, 0.3];
+        let r = residual(&p, &q).unwrap();
+        assert!((r[0] - 1.0).abs() < 1e-6, "only p[0] exceeds q[0]: r={r:?}");
+        assert_eq!(residual(&p, &p), None);
+    }
+
+    #[test]
+    fn residual_prop_total_variation() {
+        // the residual's unnormalized mass equals TV(p, q)
+        check("residual mass = TV", 100, |g, _| {
+            let v = g.usize(2, 128);
+            let s1 = g.f64(0.2, 4.0);
+            let s2 = g.f64(0.2, 4.0);
+            let p = g.probs(v, s1);
+            let q = g.probs(v, s2);
+            let tv = tv_distance(&p, &q);
+            let mass: f64 = p
+                .iter()
+                .zip(&q)
+                .map(|(&a, &b)| ((a - b).max(0.0)) as f64)
+                .sum();
+            assert!((mass - tv).abs() < 1e-4, "mass={mass} tv={tv}");
+        });
+    }
+}

@@ -1,0 +1,226 @@
+//! Sparsify + sparse-lattice quantization (Algorithm 2) — rust mirror of
+//! the L1 Pallas kernel (`python/compile/kernels/sparse_quant.py`).
+//!
+//! Semantics are defined by `kernels/ref.py::sparse_quantize_ref`; this
+//! implementation reproduces them exactly: same index tie-breaks, same f32
+//! arithmetic for the rounding step (`floor(ell*qbar + 0.5)` computed in
+//! f32).  The kernel computes ranks with O(V²) broadcast compares (TPU
+//! idiom); here a sort with an explicit (value desc, index asc) comparator
+//! yields the identical ordering in O(V log V) — the natural CPU idiom.
+//! An integration test feeds both paths the same vectors and asserts
+//! identical counts.
+
+use super::sparsify::{Sparsifier, Support};
+
+/// Result of sparsify+quantize on one next-token distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quantized {
+    /// Sorted (ascending) vocabulary indices of the retained support.
+    pub support: Vec<u16>,
+    /// Lattice counts aligned with `support`; sum == ell.  Entries may be 0.
+    pub counts: Vec<u32>,
+    /// Lattice resolution.
+    pub ell: u32,
+    /// Probability mass dropped by sparsification (alpha_n in the paper).
+    pub alpha: f32,
+}
+
+impl Quantized {
+    pub fn k(&self) -> usize {
+        self.support.len()
+    }
+
+    /// Dense q_hat over the full vocabulary.
+    pub fn to_dense_probs(&self, vocab: usize) -> Vec<f32> {
+        let mut q = vec![0.0f32; vocab];
+        for (&i, &c) in self.support.iter().zip(&self.counts) {
+            q[i as usize] = c as f32 / self.ell as f32;
+        }
+        q
+    }
+
+    /// Dense counts over the full vocabulary.
+    pub fn to_dense_counts(&self, vocab: usize) -> Vec<u32> {
+        let mut out = vec![0u32; vocab];
+        for (&i, &c) in self.support.iter().zip(&self.counts) {
+            out[i as usize] = c;
+        }
+        out
+    }
+
+    /// q_hat(x) for a single token.
+    pub fn prob_of(&self, token: usize) -> f32 {
+        match self.support.binary_search(&(token as u16)) {
+            Ok(pos) => self.counts[pos] as f32 / self.ell as f32,
+            Err(_) => 0.0,
+        }
+    }
+}
+
+/// Project the probabilities on `support` onto the lattice
+/// {b/ell : sum b = ell} (Algorithm 2: round then largest-remainder fix-up).
+pub fn lattice_quantize(q: &[f32], support: &Support, ell: u32) -> Quantized {
+    let k = support.indices.len();
+    assert!(k >= 1, "support must be non-empty");
+    let ell_f = ell as f32;
+
+    // Renormalize over the support, f32 (matches the kernel).
+    let s: f32 = support.indices.iter().map(|&i| q[i as usize]).sum();
+    let qbar: Vec<f32> = support.indices.iter().map(|&i| q[i as usize] / s).collect();
+
+    // Round.
+    let mut b: Vec<i64> = qbar.iter().map(|&x| (ell_f * x + 0.5).floor() as i64).collect();
+    let d: i64 = b.iter().sum::<i64>() - ell as i64;
+
+    // Largest-remainder correction, tie-break by ascending vocabulary index
+    // (support is sorted ascending, so position order == index order).
+    if d != 0 {
+        let zeta: Vec<f32> = b
+            .iter()
+            .zip(&qbar)
+            .map(|(&bi, &qi)| bi as f32 - ell_f * qi)
+            .collect();
+        let mut order: Vec<usize> = (0..k).collect();
+        if d > 0 {
+            // decrement the d entries with the largest zeta
+            order.sort_by(|&a, &c| {
+                zeta[c].partial_cmp(&zeta[a]).unwrap().then(a.cmp(&c))
+            });
+            for &i in order.iter().take(d as usize) {
+                b[i] -= 1;
+            }
+        } else {
+            // increment the |d| entries with the smallest zeta
+            order.sort_by(|&a, &c| {
+                zeta[a].partial_cmp(&zeta[c]).unwrap().then(a.cmp(&c))
+            });
+            for &i in order.iter().take((-d) as usize) {
+                b[i] += 1;
+            }
+        }
+    }
+
+    debug_assert_eq!(b.iter().sum::<i64>(), ell as i64);
+    debug_assert!(b.iter().all(|&x| x >= 0), "negative lattice count");
+
+    Quantized {
+        support: support.indices.clone(),
+        counts: b.into_iter().map(|x| x as u32).collect(),
+        ell,
+        alpha: support.alpha,
+    }
+}
+
+/// Full SQS step: sparsify `q` with `sp`, then lattice-quantize.
+pub fn sparse_quantize(q: &[f32], sp: &Sparsifier, ell: u32) -> Quantized {
+    let support = sp.select(q);
+    lattice_quantize(q, &support, ell)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sqs::sparsify::Sparsifier;
+    use crate::util::check::{check, Gen};
+    use crate::util::stats::tv_distance;
+
+    fn gen_probs(g: &mut Gen) -> Vec<f32> {
+        let v = g.usize(2, 256);
+        let sharp = g.f64(0.1, 6.0);
+        g.probs(v, sharp)
+    }
+
+    #[test]
+    fn counts_sum_to_ell() {
+        check("counts sum to ell", 200, |g, _| {
+            let q = gen_probs(g);
+            let v = q.len();
+            let ell = g.int(1, 1000) as u32;
+            let sp = if g.bool() {
+                Sparsifier::top_k(g.usize(1, v))
+            } else {
+                Sparsifier::threshold(g.f32(0.0, 1.1))
+            };
+            let z = sparse_quantize(&q, &sp, ell);
+            assert_eq!(z.counts.iter().map(|&c| c as u64).sum::<u64>(), ell as u64);
+        });
+    }
+
+    #[test]
+    fn quantization_distortion_bound() {
+        // TV(qbar, qhat) <= K / (4*ell)  — eq. (20) of the paper.
+        check("TV(qbar,qhat) <= K/4ell", 200, |g, _| {
+            let q = gen_probs(g);
+            let v = q.len();
+            let ell = g.int(8, 2000) as u32;
+            let k = g.usize(1, v);
+            let z = sparse_quantize(&q, &Sparsifier::top_k(k), ell);
+            // reconstruct qbar
+            let s: f32 = z.support.iter().map(|&i| q[i as usize]).sum();
+            let mut qbar = vec![0.0f32; v];
+            for &i in &z.support {
+                qbar[i as usize] = q[i as usize] / s;
+            }
+            let qhat = z.to_dense_probs(v);
+            let tv = tv_distance(&qbar, &qhat);
+            let bound = k as f64 / (4.0 * ell as f64);
+            assert!(tv <= bound + 1e-5, "tv={tv} bound={bound} k={k} ell={ell}");
+        });
+    }
+
+    #[test]
+    fn sparsification_distortion_is_alpha() {
+        // TV(q, qbar) == dropped mass (Lemma 1).
+        check("TV(q,qbar) = alpha", 200, |g, _| {
+            let q = gen_probs(g);
+            let v = q.len();
+            let beta = g.f32(0.0, 0.5);
+            let sp = Sparsifier::threshold(beta);
+            let sup = sp.select(&q);
+            let s: f32 = sup.indices.iter().map(|&i| q[i as usize]).sum();
+            let mut qbar = vec![0.0f32; v];
+            for &i in &sup.indices {
+                qbar[i as usize] = q[i as usize] / s;
+            }
+            let tv = tv_distance(&q, &qbar);
+            assert!(
+                (tv - sup.alpha as f64).abs() < 2e-4,
+                "tv={tv} alpha={}", sup.alpha
+            );
+        });
+    }
+
+    #[test]
+    fn matches_handworked_example() {
+        // q = [0.5, 0.3, 0.2], ell = 10, top-2:
+        // support {0,1}, S=0.8, qbar = [0.625, 0.375]
+        // b' = floor([6.25, 3.75] + .5) = [6, 4], sum = 10 = ell, no fixup.
+        let q = [0.5f32, 0.3, 0.2];
+        let z = sparse_quantize(&q, &Sparsifier::top_k(2), 10);
+        assert_eq!(z.support, vec![0, 1]);
+        assert_eq!(z.counts, vec![6, 4]);
+        assert!((z.alpha - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fixup_decrements_largest_residual() {
+        // Construct a case where rounding overshoots: qbar = [1/3; 3], ell=10
+        // b' = floor(3.333+.5)=3 each, sum 9 < 10 -> increment smallest zeta.
+        let q = [1.0f32 / 3.0; 3];
+        let z = sparse_quantize(&q, &Sparsifier::top_k(3), 10);
+        assert_eq!(z.counts.iter().sum::<u32>(), 10);
+        // zeta = 3 - 3.333 = -0.333 for all; tie-break -> index 0 incremented
+        assert_eq!(z.counts, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let q = [0.05f32, 0.6, 0.05, 0.3];
+        let z = sparse_quantize(&q, &Sparsifier::top_k(2), 100);
+        let dense = z.to_dense_counts(4);
+        assert_eq!(dense[1] + dense[3], 100);
+        assert_eq!(dense[0], 0);
+        assert_eq!(z.prob_of(1), dense[1] as f32 / 100.0);
+        assert_eq!(z.prob_of(0), 0.0);
+    }
+}

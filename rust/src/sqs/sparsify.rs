@@ -1,0 +1,186 @@
+//! Support selection: top-K (K-SQS) and threshold (C-SQS, eq. (6)).
+//!
+//! Tie-breaks mirror the Pallas kernel: rank by (probability desc, index
+//! asc); the threshold rule always keeps the arg-max token (the paper's
+//! Lemma 4 semantics when beta exceeds max q — thresholding "discards all
+//! but the top outcome", never everything).
+
+/// Selected support of a next-token distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Support {
+    /// Sorted ascending vocabulary indices.
+    pub indices: Vec<u16>,
+    /// Dropped probability mass alpha_n = sum_{x not in support} q(x).
+    pub alpha: f32,
+}
+
+/// Sparsification rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sparsifier {
+    /// Keep the K most probable tokens (fixed K — K-SQS).
+    TopK(usize),
+    /// Keep {x : q(x) >= beta} plus the arg-max (adaptive — C-SQS).
+    Threshold(f32),
+    /// Keep everything (dense QS baseline).
+    Dense,
+}
+
+impl Sparsifier {
+    pub fn top_k(k: usize) -> Self {
+        assert!(k >= 1);
+        Sparsifier::TopK(k)
+    }
+
+    pub fn threshold(beta: f32) -> Self {
+        Sparsifier::Threshold(beta)
+    }
+
+    /// Kernel-equivalent mode/param encoding for the fused HLO artifact.
+    pub fn mode_param(&self, vocab: usize) -> (i32, f32) {
+        match *self {
+            Sparsifier::TopK(k) => (0, k as f32),
+            Sparsifier::Threshold(b) => (1, b),
+            Sparsifier::Dense => (0, vocab as f32),
+        }
+    }
+
+    pub fn select(&self, q: &[f32]) -> Support {
+        match *self {
+            Sparsifier::TopK(k) => select_top_k(q, k.min(q.len())),
+            Sparsifier::Threshold(beta) => select_threshold(q, beta),
+            Sparsifier::Dense => Support {
+                indices: (0..q.len() as u16).collect(),
+                alpha: 0.0,
+            },
+        }
+    }
+}
+
+fn select_top_k(q: &[f32], k: usize) -> Support {
+    let mut order: Vec<u16> = (0..q.len() as u16).collect();
+    // (q desc, index asc) — identical ordering to the kernel's rank compute.
+    order.sort_by(|&a, &b| {
+        q[b as usize]
+            .partial_cmp(&q[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut indices: Vec<u16> = order[..k].to_vec();
+    indices.sort_unstable();
+    Support { alpha: dropped_mass(q, &indices), indices }
+}
+
+fn select_threshold(q: &[f32], beta: f32) -> Support {
+    let mut indices: Vec<u16> = Vec::new();
+    for (i, &p) in q.iter().enumerate() {
+        if p >= beta {
+            indices.push(i as u16);
+        }
+    }
+    if indices.is_empty() {
+        // arg-max with lowest index (rank 0 in the kernel)
+        let mut best = 0usize;
+        for (i, &p) in q.iter().enumerate() {
+            if p > q[best] {
+                best = i;
+            }
+        }
+        indices.push(best as u16);
+    }
+    Support { alpha: dropped_mass(q, &indices), indices }
+}
+
+/// alpha computed as the sum over dropped entries in index order (not as
+/// 1 - kept_mass), matching the kernel's masked `sum(where(keep, 0, q))`
+/// so f32 rounding agrees between rust and HLO.
+fn dropped_mass(q: &[f32], kept_sorted: &[u16]) -> f32 {
+    let mut alpha = 0.0f32;
+    let mut it = kept_sorted.iter().peekable();
+    for (i, &p) in q.iter().enumerate() {
+        if it.peek().map(|&&k| k as usize == i).unwrap_or(false) {
+            it.next();
+        } else {
+            alpha += p;
+        }
+    }
+    alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn top_k_picks_largest() {
+        let q = [0.1f32, 0.4, 0.05, 0.3, 0.15];
+        let s = Sparsifier::top_k(2).select(&q);
+        assert_eq!(s.indices, vec![1, 3]);
+        assert!((s.alpha - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_tie_break_by_index() {
+        let q = [0.25f32, 0.25, 0.25, 0.25];
+        let s = Sparsifier::top_k(2).select(&q);
+        assert_eq!(s.indices, vec![0, 1]);
+    }
+
+    #[test]
+    fn threshold_keeps_at_least_argmax() {
+        let q = [0.2f32, 0.5, 0.3];
+        let s = Sparsifier::threshold(0.9).select(&q);
+        assert_eq!(s.indices, vec![1]);
+        assert!((s.alpha - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threshold_inclusive() {
+        let q = [0.5f32, 0.25, 0.25];
+        let s = Sparsifier::threshold(0.25).select(&q);
+        assert_eq!(s.indices, vec![0, 1, 2]);
+        assert_eq!(s.alpha, 0.0);
+    }
+
+    #[test]
+    fn dense_keeps_all() {
+        let q = [0.25f32; 4];
+        let s = Sparsifier::Dense.select(&q);
+        assert_eq!(s.indices.len(), 4);
+        assert_eq!(s.alpha, 0.0);
+    }
+
+    #[test]
+    fn properties() {
+        check("sparsify invariants", 200, |g, _| {
+            let v = g.usize(2, 256);
+            let sharp = g.f64(0.2, 5.0);
+            let q = g.probs(v, sharp);
+            let sp = if g.bool() {
+                Sparsifier::top_k(g.usize(1, v))
+            } else {
+                Sparsifier::threshold(g.f32(0.0, 1.1))
+            };
+            let s = sp.select(&q);
+            assert!(!s.indices.is_empty());
+            for w in s.indices.windows(2) {
+                assert!(w[0] < w[1], "support must be sorted/unique");
+            }
+            assert!(s.alpha >= 0.0 && s.alpha <= 1.0 + 1e-6);
+            if let Sparsifier::TopK(k) = sp {
+                assert_eq!(s.indices.len(), k.min(v));
+                // every kept prob >= every dropped prob
+                let kept_min = s
+                    .indices
+                    .iter()
+                    .map(|&i| q[i as usize])
+                    .fold(f32::INFINITY, f32::min);
+                let dropped_max = (0..v)
+                    .filter(|i| s.indices.binary_search(&(*i as u16)).is_err())
+                    .map(|i| q[i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                assert!(kept_min >= dropped_max);
+            }
+        });
+    }
+}

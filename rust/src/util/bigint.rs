@@ -1,0 +1,414 @@
+//! Arbitrary-precision unsigned integers (substrate for the bit-exact codec).
+//!
+//! The combinatorial number system used by the wire format needs exact
+//! binomials up to C(V, V/2) ≈ 2^251 at V=256 and C(ℓ+K−1, K−1) beyond
+//! that, so u128 is not enough.  Only the operations the codec needs are
+//! implemented: add/sub/cmp, small-word mul/div, and bit extraction for
+//! the bit reader/writer.
+
+use std::cmp::Ordering;
+
+/// Little-endian base-2^64 limbs, no leading zero limbs (canonical form).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(x: u64) -> Self {
+        if x == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![x] }
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn to_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bits(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => 64 * (self.limbs.len() - 1) + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Bit i (little-endian).
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |&l| (l >> off) & 1 == 1)
+    }
+
+    pub fn set_bit(&mut self, i: usize) {
+        let (limb, off) = (i / 64, i % 64);
+        if self.limbs.len() <= limb {
+            self.limbs.resize(limb + 1, 0);
+        }
+        self.limbs[limb] |= 1u64 << off;
+    }
+
+    pub fn cmp_big(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn add_assign(&mut self, other: &BigUint) {
+        let n = self.limbs.len().max(other.limbs.len());
+        self.limbs.resize(n, 0);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (s1, c1) = self.limbs[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            self.limbs[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            self.limbs.push(carry);
+        }
+    }
+
+    /// self -= other; panics if other > self (codec logic guarantees order).
+    pub fn sub_assign(&mut self, other: &BigUint) {
+        debug_assert!(self.cmp_big(other) != Ordering::Less, "BigUint underflow");
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, c1) = self.limbs[i].overflowing_sub(b);
+            let (d2, c2) = d1.overflowing_sub(borrow);
+            self.limbs[i] = d2;
+            borrow = (c1 as u64) + (c2 as u64);
+        }
+        assert_eq!(borrow, 0, "BigUint underflow");
+        self.trim();
+    }
+
+    pub fn mul_small(&self, m: u64) -> BigUint {
+        if m == 0 || self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry: u128 = 0;
+        for &l in &self.limbs {
+            let p = (l as u128) * (m as u128) + carry;
+            out.push(p as u64);
+            carry = p >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        BigUint { limbs: out }
+    }
+
+    /// Exact or truncating division by a small word; returns (quotient, remainder).
+    pub fn div_small(&self, d: u64) -> (BigUint, u64) {
+        assert!(d != 0);
+        let mut q = vec![0u64; self.limbs.len()];
+        let mut rem: u128 = 0;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            q[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        let mut out = BigUint { limbs: q };
+        out.trim();
+        (out, rem as u64)
+    }
+
+    /// Decimal string (for debugging / table output).
+    pub fn to_decimal(&self) -> String {
+        if self.is_zero() {
+            return "0".into();
+        }
+        let mut cur = self.clone();
+        let mut digits = Vec::new();
+        while !cur.is_zero() {
+            let (q, r) = cur.div_small(10);
+            digits.push(b'0' + r as u8);
+            cur = q;
+        }
+        digits.reverse();
+        String::from_utf8(digits).unwrap()
+    }
+
+    /// log2 as f64 (for reporting fractional bit costs).
+    pub fn log2(&self) -> f64 {
+        let n = self.bits();
+        if n == 0 {
+            return f64::NEG_INFINITY;
+        }
+        // take top 64 bits as mantissa
+        let mut mant: u64 = 0;
+        for i in (n.saturating_sub(64)..n).rev() {
+            mant = (mant << 1) | self.bit(i) as u64;
+        }
+        let shift = n.saturating_sub(64);
+        (mant as f64).log2() + shift as f64
+    }
+}
+
+/// Exact binomial coefficient C(n, k) via multiplicative formula
+/// (each division is exact because prefixes of the product are binomials).
+pub fn binomial(n: u64, k: u64) -> BigUint {
+    if k > n {
+        return BigUint::zero();
+    }
+    let k = k.min(n - k);
+    let mut acc = BigUint::one();
+    for i in 0..k {
+        acc = acc.mul_small(n - i);
+        let (q, r) = acc.div_small(i + 1);
+        debug_assert_eq!(r, 0);
+        acc = q;
+    }
+    acc
+}
+
+/// Memoized binomial table for codec hot paths (per-thread instances).
+///
+/// Perf note (§Perf in EXPERIMENTS.md): this started as a
+/// HashMap<(n,k), BigUint>; the decoder's unrank scans probe C(n,k) for
+/// runs of consecutive n at fixed k, so a dense per-k row (Vec indexed by
+/// n) removes hashing from the innermost loop — frame decode dropped ~4x.
+pub struct BinomialCache {
+    /// rows[k][n] = C(n, k), built lazily per k via the Pascal recurrence
+    /// along n (one mul-free add per entry instead of a full multiplicative
+    /// evaluation per probe).
+    rows: Vec<Vec<BigUint>>,
+}
+
+impl Default for BinomialCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BinomialCache {
+    pub fn new() -> Self {
+        BinomialCache { rows: Vec::new() }
+    }
+
+    /// Extend row k so it covers index n (using row k-1, extended first).
+    fn ensure(&mut self, n: u64, k: u64) {
+        let k = k as usize;
+        let n = n as usize;
+        while self.rows.len() <= k {
+            let kk = self.rows.len();
+            // C(kk-1, kk) = 0 boundary handled by starting at n = kk
+            let _ = kk;
+            self.rows.push(Vec::new());
+        }
+        // row 0: C(n, 0) = 1 for all n
+        if self.rows[0].len() <= n {
+            self.rows[0].resize(n + 1, BigUint::one());
+        }
+        for kk in 1..=k {
+            if self.rows[kk].len() > n {
+                continue;
+            }
+            // need row kk-1 up to n-1
+            if self.rows[kk - 1].len() <= n {
+                // recurse levels below via direct extension
+                let need = n;
+                let prev_len = self.rows[kk - 1].len();
+                if kk - 1 == 0 {
+                    self.rows[0].resize(need + 1, BigUint::one());
+                } else {
+                    let _ = prev_len;
+                    self.ensure(need as u64, (kk - 1) as u64);
+                }
+            }
+            // C(n, k) = C(n-1, k) + C(n-1, k-1); C(n, k) = 0 for n < k
+            let mut row = std::mem::take(&mut self.rows[kk]);
+            if row.is_empty() {
+                // C(0..kk-1, kk) = 0, C(kk, kk) = 1
+                row.extend((0..kk).map(|_| BigUint::zero()));
+                row.push(BigUint::one());
+            }
+            while row.len() <= n {
+                let m = row.len(); // computing C(m, kk)
+                let mut v = row[m - 1].clone(); // C(m-1, kk)
+                v.add_assign(&self.rows[kk - 1][m - 1]); // + C(m-1, kk-1)
+                row.push(v);
+            }
+            self.rows[kk] = row;
+        }
+    }
+
+    pub fn get(&mut self, n: u64, k: u64) -> &BigUint {
+        if k > n {
+            // C(n, k) = 0 for k > n; keep a stable zero around
+            self.ensure(k, k);
+            // rows[k][n] for n < k is zero by construction when materialized;
+            // materialize up to k and index below
+            return &self.rows[k as usize][n as usize];
+        }
+        self.ensure(n, k);
+        &self.rows[k as usize][n as usize]
+    }
+}
+
+impl BinomialCache {
+    /// Largest n in [lo, hi) with C(n, k) <= r, or None if even C(lo, k) > r.
+    /// Binary search over the (monotone in n) dense row — the decoder's
+    /// unrank inner loop (§Perf: replaced a linear scan).
+    pub fn max_n_le(&mut self, k: u64, lo: u64, hi: u64, r: &BigUint) -> Option<u64> {
+        if lo >= hi {
+            return None;
+        }
+        self.ensure(hi - 1, k);
+        let row = &self.rows[k as usize];
+        if row[lo as usize].cmp_big(r) == std::cmp::Ordering::Greater {
+            return None;
+        }
+        let (mut lo, mut hi) = (lo, hi - 1);
+        // invariant: C(lo, k) <= r
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if row[mid as usize].cmp_big(r) != std::cmp::Ordering::Greater {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        Some(lo)
+    }
+}
+
+thread_local! {
+    static BINOM_TLS: std::cell::RefCell<BinomialCache> =
+        std::cell::RefCell::new(BinomialCache::new());
+}
+
+/// Thread-shared binomial table: codec instances are per-session and
+/// short-lived, so per-instance tables would rebuild the Pascal rows on
+/// every request — the thread-local amortizes them across a worker's
+/// lifetime (§Perf).
+pub fn with_binomials<R>(f: impl FnOnce(&mut BinomialCache) -> R) -> R {
+    BINOM_TLS.with(|c| f(&mut c.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_binomials() {
+        assert_eq!(binomial(5, 2).to_u64(), Some(10));
+        assert_eq!(binomial(10, 0).to_u64(), Some(1));
+        assert_eq!(binomial(10, 10).to_u64(), Some(1));
+        assert_eq!(binomial(3, 5).to_u64(), Some(0));
+        assert_eq!(binomial(52, 5).to_u64(), Some(2_598_960));
+    }
+
+    #[test]
+    fn big_binomial_known_value() {
+        // C(100, 50) = 100891344545564193334812497256
+        assert_eq!(binomial(100, 50).to_decimal(), "100891344545564193334812497256");
+    }
+
+    #[test]
+    fn pascal_identity() {
+        for n in 1..40u64 {
+            for k in 1..n {
+                let mut lhs = binomial(n - 1, k - 1);
+                lhs.add_assign(&binomial(n - 1, k));
+                assert_eq!(lhs, binomial(n, k), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = binomial(200, 90);
+        let b = binomial(180, 77);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        c.sub_assign(&b);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn mul_div_roundtrip() {
+        let a = binomial(256, 128);
+        let b = a.mul_small(123_456_789);
+        let (q, r) = b.div_small(123_456_789);
+        assert_eq!(r, 0);
+        assert_eq!(q, a);
+    }
+
+    #[test]
+    fn bits_and_log2() {
+        assert_eq!(BigUint::from_u64(1).bits(), 1);
+        assert_eq!(BigUint::from_u64(255).bits(), 8);
+        assert_eq!(BigUint::from_u64(256).bits(), 9);
+        let c = binomial(256, 128);
+        assert_eq!(c.bits(), 252, "C(256,128) is a 252-bit number");
+        let l2 = c.log2();
+        assert!((l2 - 251.67).abs() < 0.1, "log2={l2}");
+    }
+
+    #[test]
+    fn decimal_roundtrip_small() {
+        for x in [0u64, 1, 9, 10, 12345, u64::MAX] {
+            assert_eq!(BigUint::from_u64(x).to_decimal(), x.to_string());
+        }
+    }
+
+    #[test]
+    fn cache_matches_direct() {
+        let mut c = BinomialCache::new();
+        // mixed access order exercises the lazy row extension
+        for (n, k) in [(10u64, 3u64), (256, 8), (5, 9), (0, 0), (355, 99),
+                       (100, 50), (3, 7), (256, 256), (40, 1)] {
+            assert_eq!(c.get(n, k), &binomial(n, k), "n={n} k={k}");
+        }
+        // dense sweep
+        for n in 0..60u64 {
+            for k in 0..60u64 {
+                assert_eq!(c.get(n, k), &binomial(n, k), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_accessors() {
+        let mut x = BigUint::zero();
+        x.set_bit(0);
+        x.set_bit(100);
+        assert!(x.bit(0) && x.bit(100) && !x.bit(50));
+        assert_eq!(x.bits(), 101);
+    }
+}

@@ -1,0 +1,197 @@
+//! Bit-level reader/writer: the uplink wire format is packed to the bit,
+//! so payload sizes equal the paper's b_n^t(K, ℓ) formulas exactly.
+
+use super::bigint::BigUint;
+
+/// MSB-first bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits used in the last byte (0..8); 0 means byte-aligned
+    partial: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bit_len(&self) -> usize {
+        if self.partial == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.partial as usize
+        }
+    }
+
+    pub fn write_bit(&mut self, b: bool) {
+        if self.partial == 0 {
+            self.buf.push(0);
+            self.partial = 0;
+        }
+        let last = self.buf.last_mut().unwrap();
+        *last |= (b as u8) << (7 - self.partial);
+        self.partial = (self.partial + 1) % 8;
+        if self.partial == 0 {
+            // byte exactly filled
+        }
+    }
+
+    /// Write the low `n` bits of `v`, MSB first.
+    pub fn write_bits_u64(&mut self, v: u64, n: usize) {
+        assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.write_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Write `n` bits of a BigUint (must satisfy x.bits() <= n), MSB first.
+    pub fn write_bits_big(&mut self, x: &BigUint, n: usize) {
+        assert!(x.bits() <= n, "value {} bits > field width {}", x.bits(), n);
+        for i in (0..n).rev() {
+            self.write_bit(x.bit(i));
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// MSB-first bit reader.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+#[derive(Debug)]
+pub struct BitUnderflow;
+
+impl std::fmt::Display for BitUnderflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bit reader underflow")
+    }
+}
+
+impl std::error::Error for BitUnderflow {}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn bits_remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn read_bit(&mut self) -> Result<bool, BitUnderflow> {
+        if self.pos >= self.buf.len() * 8 {
+            return Err(BitUnderflow);
+        }
+        let byte = self.buf[self.pos / 8];
+        let b = (byte >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    pub fn read_bits_u64(&mut self, n: usize) -> Result<u64, BitUnderflow> {
+        assert!(n <= 64);
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit()? as u64;
+        }
+        Ok(v)
+    }
+
+    pub fn read_bits_big(&mut self, n: usize) -> Result<BigUint, BitUnderflow> {
+        let mut x = BigUint::zero();
+        for i in (0..n).rev() {
+            if self.read_bit()? {
+                x.set_bit(i);
+            }
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bigint::binomial;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn u64_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(0b1011, 4);
+        w.write_bits_u64(0xdead_beef, 32);
+        w.write_bits_u64(1, 1);
+        assert_eq!(w.bit_len(), 37);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits_u64(4).unwrap(), 0b1011);
+        assert_eq!(r.read_bits_u64(32).unwrap(), 0xdead_beef);
+        assert_eq!(r.read_bits_u64(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn big_roundtrip() {
+        let x = binomial(200, 71);
+        let n = x.bits() + 3;
+        let mut w = BitWriter::new();
+        w.write_bits_big(&x, n);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits_big(n).unwrap(), x);
+    }
+
+    #[test]
+    fn random_streams_roundtrip() {
+        let mut rng = Pcg64::new(11, 0);
+        for _ in 0..50 {
+            let mut vals = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..rng.range_u64(1, 40) {
+                let n = rng.range_u64(1, 64) as usize;
+                let v = rng.next_u64() & (u64::MAX >> (64 - n));
+                w.write_bits_u64(v, n);
+                vals.push((v, n));
+            }
+            let total = w.bit_len();
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for (v, n) in vals {
+                assert_eq!(r.read_bits_u64(n).unwrap(), v);
+            }
+            assert!(r.bits_remaining() < 8);
+            assert_eq!(total + r.bits_remaining(), bytes.len() * 8);
+        }
+    }
+
+    #[test]
+    fn underflow_detected() {
+        let mut r = BitReader::new(&[0xff]);
+        assert!(r.read_bits_u64(8).is_ok());
+        assert!(r.read_bit().is_err());
+    }
+
+    #[test]
+    fn field_width_enforced() {
+        let x = BigUint::from_u64(255);
+        let mut w = BitWriter::new();
+        w.write_bits_big(&x, 8); // exactly fits
+        let r = std::panic::catch_unwind(move || {
+            let mut w2 = BitWriter::new();
+            w2.write_bits_big(&BigUint::from_u64(256), 8);
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Property-testing harness substrate (proptest is unavailable offline).
+//!
+//! Seeded generators + a driver that runs N cases and, on failure, reports
+//! the case index and seed so the exact failing input reproduces with
+//! `CHECK_SEED=<seed> CHECK_CASE=<i> cargo test <name>`.  No shrinking —
+//! generators are kept small-biased instead (sizes drawn log-uniformly).
+
+use super::rng::Pcg64;
+
+pub struct Gen {
+    pub rng: Pcg64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi], biased toward small spans (log-uniform-ish).
+    pub fn int(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        let span = hi - lo;
+        // 50%: full range; 50%: log-scaled small values
+        if self.rng.next_f64() < 0.5 {
+            lo + self.rng.below(span + 1)
+        } else {
+            let bits = 64 - span.leading_zeros() as u64;
+            let b = self.rng.below(bits.max(1)) + 1;
+            let cap = if b >= 64 { span } else { span.min((1u64 << b) - 1) };
+            lo + self.rng.below(cap + 1)
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Random probability vector of length v (softmax of normals * sharpness).
+    pub fn probs(&mut self, v: usize, sharpness: f64) -> Vec<f32> {
+        let logits: Vec<f64> = (0..v).map(|_| self.rng.normal() * sharpness).collect();
+        let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|&x| (x - m).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        // normalize in f32 exactly the way the model stack does
+        let mut p: Vec<f32> = exps.iter().map(|&e| (e / sum) as f32).collect();
+        let s: f32 = p.iter().sum();
+        for x in p.iter_mut() {
+            *x /= s;
+        }
+        p
+    }
+
+    /// Random subset of {0..v-1} of size k, sorted ascending.
+    pub fn subset(&mut self, v: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..v).collect();
+        self.rng.shuffle(&mut idx);
+        let mut s: Vec<usize> = idx[..k].to_vec();
+        s.sort_unstable();
+        s
+    }
+
+    /// Random composition of `total` into `k` non-negative parts.
+    pub fn composition(&mut self, total: u64, k: usize) -> Vec<u64> {
+        // stars and bars via sorted cut points
+        if k == 1 {
+            return vec![total];
+        }
+        let mut cuts: Vec<u64> = (0..k - 1).map(|_| self.rng.below(total + 1)).collect();
+        cuts.sort_unstable();
+        let mut parts = Vec::with_capacity(k);
+        let mut prev = 0;
+        for &c in &cuts {
+            parts.push(c - prev);
+            prev = c;
+        }
+        parts.push(total - prev);
+        parts
+    }
+}
+
+/// Run `cases` random cases of `prop`.  Panics with a reproduction line on
+/// the first failure (the property itself should panic/assert on violation).
+pub fn check<F: FnMut(&mut Gen, usize)>(name: &str, cases: usize, mut prop: F) {
+    let seed = std::env::var("CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let only: Option<usize> = std::env::var("CHECK_CASE").ok().and_then(|s| s.parse().ok());
+    for case in 0..cases {
+        if let Some(c) = only {
+            if case != c {
+                continue;
+            }
+        }
+        let mut g = Gen { rng: Pcg64::new(seed, case as u64) };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (reproduce with \
+                 CHECK_SEED={seed} CHECK_CASE={case}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probs_are_normalized() {
+        check("probs normalized", 50, |g, _| {
+            let v = g.usize(2, 300);
+            let sharp = g.f64(0.1, 6.0);
+            let p = g.probs(v, sharp);
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "sum={s}");
+            assert!(p.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn subset_sorted_unique() {
+        check("subset sorted", 50, |g, _| {
+            let v = g.usize(1, 200);
+            let k = g.usize(0, v);
+            let s = g.subset(v, k);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(s.iter().all(|&i| i < v));
+        });
+    }
+
+    #[test]
+    fn composition_sums() {
+        check("composition sums", 50, |g, _| {
+            let total = g.int(0, 1000);
+            let k = g.usize(1, 64);
+            let parts = g.composition(total, k);
+            assert_eq!(parts.len(), k);
+            assert_eq!(parts.iter().sum::<u64>(), total);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failure_reports_case() {
+        check("always fails", 3, |_, case| {
+            assert!(case < 1, "boom");
+        });
+    }
+}

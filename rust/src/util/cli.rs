@@ -1,0 +1,228 @@
+//! Tiny CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative option set + parsed values.
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.into(),
+            about: about.into(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            if spec.is_flag {
+                s.push_str(&format!("  --{:<24} {}\n", spec.name, spec.help));
+            } else {
+                s.push_str(&format!(
+                    "  --{:<24} {} (default: {})\n",
+                    format!("{} <v>", spec.name),
+                    spec.help,
+                    spec.default.as_deref().unwrap_or("")
+                ));
+            }
+        }
+        s
+    }
+
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, args: I) -> Result<Self, String> {
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    self.flags.insert(key, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    self.values.insert(key, v);
+                }
+            } else {
+                self.positional.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse_env(self) -> Result<Self, String> {
+        self.parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} was never registered"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list of f64 (`--temps 0.1,0.5,1.0`).
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| format!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| format!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_values_and_flags() {
+        let a = Args::new("t", "test")
+            .opt("temp", "1.0", "temperature")
+            .opt("k", "8", "top-k")
+            .flag("verbose", "chatty")
+            .parse_from(argv(&["--temp", "0.5", "--verbose", "--k=16", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_f64("temp").unwrap(), 0.5);
+        assert_eq!(a.get_usize("k").unwrap(), 16);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "test")
+            .opt("temp", "1.0", "temperature")
+            .flag("quiet", "")
+            .parse_from(argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_f64("temp").unwrap(), 1.0);
+        assert!(!a.get_flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "test").parse_from(argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = Args::new("t", "test")
+            .opt("temps", "0.1,0.2", "")
+            .parse_from(argv(&["--temps", "0.3, 0.6 ,0.9"]))
+            .unwrap();
+        assert_eq!(a.get_f64_list("temps").unwrap(), vec![0.3, 0.6, 0.9]);
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let r = Args::new("prog", "about").opt("x", "1", "an x").parse_from(argv(&["--help"]));
+        let msg = r.err().unwrap();
+        assert!(msg.contains("prog"));
+        assert!(msg.contains("--x"));
+    }
+}

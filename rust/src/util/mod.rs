@@ -1,0 +1,114 @@
+//! Hand-rolled substrates: the offline build environment ships only the
+//! `xla` crate and its closure, so the usual ecosystem pieces (rand, serde,
+//! clap, proptest, criterion) are implemented in-tree, scoped to exactly
+//! what the serving stack needs.
+
+pub mod bigint;
+pub mod bitio;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn log_level() -> u8 {
+    let lv = LOG_LEVEL.load(Ordering::Relaxed);
+    if lv != 255 {
+        return lv;
+    }
+    let parsed = match std::env::var("SQS_LOG").as_deref() {
+        Ok("trace") => 4,
+        Ok("debug") => 3,
+        Ok("info") => 2,
+        Ok("warn") => 1,
+        Ok("error") | Ok("off") => 0,
+        _ => 2,
+    };
+    LOG_LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    level <= log_level()
+}
+
+/// Leveled logging macros: `info!`, `debug!`, `warn!` (env `SQS_LOG`).
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $tag:expr, $($arg:tt)*) => {
+        if $crate::util::log_enabled($lvl) {
+            eprintln!("[{}] {}", $tag, format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!(2, "info", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log_at!(3, "debug", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::log_at!(1, "warn", $($arg)*) };
+}
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Stopwatch(Instant);
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn lap_s(&mut self) -> f64 {
+        let t = self.0.elapsed().as_secs_f64();
+        self.0 = Instant::now();
+        t
+    }
+}
+
+/// ceil(log2(n)) for n >= 1; 0 bits for n <= 1 (a single possibility
+/// carries no information).
+pub fn ceil_log2_u64(n: u64) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2_u64(1), 0);
+        assert_eq!(ceil_log2_u64(2), 1);
+        assert_eq!(ceil_log2_u64(3), 2);
+        assert_eq!(ceil_log2_u64(4), 2);
+        assert_eq!(ceil_log2_u64(5), 3);
+        assert_eq!(ceil_log2_u64(256), 8);
+        assert_eq!(ceil_log2_u64(257), 9);
+    }
+}

@@ -1,0 +1,160 @@
+//! Summary-statistics substrate for metrics and bench tables.
+
+/// Online mean/variance (Welford) plus retained samples for percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.samples.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean() * self.n as f64
+    }
+
+    /// Percentile by linear interpolation (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// 95% CI half-width under normal approximation.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 { f64::NAN } else { 1.96 * self.std() / (self.n as f64).sqrt() }
+    }
+}
+
+/// Total-variation distance between two distributions (sum |p-q| / 2).
+pub fn tv_distance(p: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q).map(|(&a, &b)| (a as f64 - b as f64).abs()).sum::<f64>()
+}
+
+/// Shannon entropy in bits.
+pub fn entropy_bits(p: &[f32]) -> f64 {
+    -p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| (x as f64) * (x as f64).log2())
+        .sum::<f64>()
+}
+
+/// Pearson chi-square statistic of observed counts against expected probs.
+pub fn chi_square(observed: &[u64], probs: &[f64]) -> f64 {
+    let total: u64 = observed.iter().sum();
+    let mut stat = 0.0;
+    for (&o, &p) in observed.iter().zip(probs) {
+        let e = p * total as f64;
+        if e > 1e-12 {
+            stat += (o as f64 - e) * (o as f64 - e) / e;
+        } else if o > 0 {
+            stat += f64::INFINITY;
+        }
+    }
+    stat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.p50() - 3.0).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tv_basic() {
+        let p = [0.5f32, 0.5, 0.0];
+        let q = [0.0f32, 0.5, 0.5];
+        assert!((tv_distance(&p, &q) - 0.5).abs() < 1e-9);
+        assert_eq!(tv_distance(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn entropy_known() {
+        assert!((entropy_bits(&[0.5, 0.5]) - 1.0).abs() < 1e-9);
+        assert!(entropy_bits(&[1.0, 0.0]).abs() < 1e-9);
+        assert!((entropy_bits(&[0.25; 4]) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chi_square_uniform_counts() {
+        let obs = [250u64, 250, 250, 250];
+        let p = [0.25f64; 4];
+        assert!(chi_square(&obs, &p) < 1e-9);
+        let skew = [400u64, 200, 200, 200];
+        assert!(chi_square(&skew, &p) > 50.0);
+    }
+}

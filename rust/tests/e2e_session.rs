@@ -1,0 +1,117 @@
+//! End-to-end speculative decoding over the real PJRT stack (requires
+//! `make artifacts`; run with --test-threads=1, see Makefile).
+
+use sqs_sd::channel::LinkConfig;
+use sqs_sd::coordinator::{PjrtStack, SessionConfig, TimingMode};
+use sqs_sd::model::encode;
+use sqs_sd::runtime::Manifest;
+use sqs_sd::sqs::Policy;
+
+fn stack_or_skip() -> Option<PjrtStack> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(PjrtStack::load(1 << 30).expect("stack loads"))
+}
+
+#[test]
+fn full_sd_session_ksqs_and_csqs() {
+    let Some(stack) = stack_or_skip() else { return };
+    let prompt = encode("The capital of France is");
+
+    for policy in [
+        Policy::KSqs { k: 8 },
+        Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+    ] {
+        let cfg = SessionConfig {
+            policy,
+            temp: 0.3,
+            max_new_tokens: 24,
+            seed: 42,
+            timing: TimingMode::Measured,
+            ..Default::default()
+        };
+        let mut sess = stack.session(LinkConfig::default(), cfg);
+        let res = sess.run(&prompt).unwrap();
+
+        assert!(res.new_tokens() >= 24, "{}: too few tokens", policy.name());
+        assert!(!res.batches.is_empty());
+        let rr = res.resampling_rate();
+        assert!((0.0..=1.0).contains(&rr));
+        assert!(res.total_time_s > 0.0);
+        assert!(res.uplink_bits > 0);
+        for b in &res.batches {
+            assert!(b.dist_bits <= 5000 || b.drafted == 1);
+        }
+        let text = sqs_sd::model::decode(&res.tokens[res.prompt_len..]);
+        // low temperature on a memorized corpus: mostly printable English
+        let printable = text.bytes().filter(|b| (32..127).contains(b)).count();
+        assert!(
+            printable * 10 >= text.len() * 8,
+            "{}: output not mostly printable: {text:?}", policy.name()
+        );
+        eprintln!("{}: {:?} (rr={:.3}, accept={:.3}, bits/tok={:.0})",
+                  policy.name(), text, rr, res.acceptance_rate(),
+                  res.bits_per_token());
+    }
+}
+
+#[test]
+fn csqs_certificate_on_pjrt() {
+    let Some(stack) = stack_or_skip() else { return };
+    let cfg = SessionConfig {
+        policy: Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+        temp: 0.8,
+        max_new_tokens: 48,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut sess = stack.session(LinkConfig::default(), cfg);
+    let res = sess.run(&encode("Once there was a fox who")).unwrap();
+    let emp = res.conformal_empirical_alpha.unwrap();
+    let bound = res.conformal_bound.unwrap();
+    assert!(emp <= bound + 1e-9, "Theorem 2 violated on PJRT: {emp} > {bound}");
+}
+
+#[test]
+fn ar_baseline_runs_and_sd_saves_llm_calls() {
+    let Some(stack) = stack_or_skip() else { return };
+    let prompt = encode("A distributed system is");
+
+    let mut ar = stack.ar_baseline(LinkConfig::default(), 0.3, 7, TimingMode::Measured);
+    let res_ar = ar.run(&prompt, 16).unwrap();
+    assert_eq!(res_ar.new_tokens(), 16);
+    assert!(res_ar.t_llm_s > 0.0);
+
+    let cfg = SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.3,
+        max_new_tokens: 16,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut sess = stack.session(LinkConfig::default(), cfg);
+    let res_sd = sess.run(&prompt).unwrap();
+    // SD must invoke the LLM strictly fewer times than AR generates tokens
+    assert!(
+        res_sd.batches.len() < res_ar.new_tokens(),
+        "SD used {} LLM calls for {} tokens; AR used {}",
+        res_sd.batches.len(), res_sd.new_tokens(), res_ar.new_tokens()
+    );
+}
+
+#[test]
+fn kv_pool_tracks_sessions() {
+    let Some(stack) = stack_or_skip() else { return };
+    assert_eq!(stack.slm.kv_pool.live_sessions(), 0);
+    let cfg = SessionConfig { max_new_tokens: 4, ..Default::default() };
+    {
+        let mut sess = stack.session(LinkConfig::default(), cfg);
+        sess.run(&encode("The weather report")).unwrap();
+        assert_eq!(stack.slm.kv_pool.live_sessions(), 1);
+        assert_eq!(stack.llm.kv_pool.live_sessions(), 1);
+    }
+    assert_eq!(stack.slm.kv_pool.live_sessions(), 0, "lease released on drop");
+    assert!(stack.slm.kv_pool.total_allocs() >= 1);
+}

@@ -1,0 +1,242 @@
+//! Protocol-correctness tests over the synthetic backend (no artifacts
+//! needed): the speculative-decoding + QS guarantee, conformal behaviour,
+//! and budget/ledger invariants of the full session loop.
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::session::{SdSession, SessionConfig, TimingMode};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+use sqs_sd::util::stats::tv_distance;
+
+fn modeled() -> TimingMode {
+    TimingMode::Modeled { slm_step_s: 1e-4, llm_call_s: 1e-3 }
+}
+
+fn make_session(world: &SyntheticWorld, policy: Policy, temp: f32, seed: u64,
+                max_new: usize) -> SdSession<SyntheticDraft, SyntheticTarget> {
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 15, 1_000_000);
+    let link = SimulatedLink::new(LinkConfig::default(), seed);
+    let cfg = SessionConfig {
+        policy,
+        temp,
+        max_new_tokens: max_new,
+        seed,
+        timing: modeled(),
+        ..Default::default()
+    };
+    SdSession::new(draft, target, link, cfg)
+}
+
+/// THE speculative-decoding guarantee: accepted+resampled tokens follow the
+/// target distribution exactly, *even with aggressive sparsification* —
+/// QS samples drafts from q_hat and verifies against q_hat.
+///
+/// The synthetic world is Markov (distribution depends only on the previous
+/// token), so the first generated token after prompt [s] across many seeded
+/// sessions must be distributed as p(. | s).
+#[test]
+fn sd_outputs_follow_target_distribution() {
+    let world = SyntheticWorld::new(32, 0.8, 99);
+    let temp = 0.9f32;
+    let prev = 5u16;
+    let p_ref = world.target_probs(prev, temp);
+
+    for policy in [
+        Policy::KSqs { k: 4 },
+        Policy::CSqs { beta0: 0.02, alpha: 0.02, eta: 0.05 },
+        Policy::DenseQs,
+    ] {
+        let n = 30_000usize;
+        let mut freq = vec![0u64; 32];
+        for seed in 0..n {
+            let mut sess = make_session(&world, policy, temp, seed as u64, 1);
+            let res = sess.run(&[prev]).unwrap();
+            let first = res.tokens[1];
+            freq[first as usize] += 1;
+        }
+        let emp: Vec<f32> = freq.iter().map(|&c| c as f32 / n as f32).collect();
+        let tv = tv_distance(&emp, &p_ref);
+        // TV of an n-sample empirical distribution over 32 outcomes
+        // concentrates near sqrt(V/(2*pi*n)) ~ 0.013; 0.03 is ~3 sigma.
+        assert!(
+            tv < 0.03,
+            "{}: empirical TV {tv:.4} too far from target (SD guarantee broken?)",
+            policy.name()
+        );
+    }
+}
+
+/// Acceptance must degrade as sparsification gets more aggressive (smaller
+/// K drops more target mass), and dense QS must accept the most.
+#[test]
+fn acceptance_monotone_in_k() {
+    let world = SyntheticWorld::new(64, 0.6, 3);
+    let mut rates = Vec::new();
+    for k in [1usize, 2, 8, 64] {
+        let mut sess = make_session(&world, Policy::KSqs { k }, 1.0, 7, 400);
+        let res = sess.run(&[9, 3, 1]).unwrap();
+        rates.push(res.acceptance_rate());
+    }
+    for w in rates.windows(2) {
+        assert!(
+            w[1] >= w[0] - 0.03,
+            "acceptance should not degrade with larger K: {rates:?}"
+        );
+    }
+    assert!(rates[3] > rates[0] + 0.05, "K=64 must beat K=1 clearly: {rates:?}");
+}
+
+/// Per-batch distribution payload must respect the budget B (§4).
+#[test]
+fn budget_respected_for_all_policies() {
+    let world = SyntheticWorld::new(64, 0.5, 1);
+    for policy in [
+        Policy::KSqs { k: 8 },
+        Policy::CSqs { beta0: 0.01, alpha: 0.005, eta: 0.01 },
+        Policy::DenseQs,
+    ] {
+        let mut sess = make_session(&world, policy, 0.9, 11, 200);
+        let res = sess.run(&[1]).unwrap();
+        for (i, b) in res.batches.iter().enumerate() {
+            assert!(
+                b.dist_bits <= 5000 || b.drafted == 1,
+                "{} batch {i}: {} bits > B=5000 with {} drafts",
+                policy.name(), b.dist_bits, b.drafted
+            );
+        }
+    }
+}
+
+/// Theorem 2 certificate on the real protocol (not the synthetic-alpha
+/// stream of the unit test): empirical mean dropped mass <= bound.
+#[test]
+fn theorem2_holds_in_protocol() {
+    let world = SyntheticWorld::new(64, 0.7, 21);
+    for (eta, alpha, beta0) in [
+        (0.001f64, 0.0005f64, 0.01f64),   // the paper's operating point
+        (0.01, 0.01, 0.05),
+        (0.1, 0.05, 0.5),
+    ] {
+        let mut sess = make_session(
+            &world,
+            Policy::CSqs { beta0, alpha, eta },
+            1.0,
+            5,
+            600,
+        );
+        let res = sess.run(&[2, 4]).unwrap();
+        let emp = res.conformal_empirical_alpha.unwrap();
+        let bound = res.conformal_bound.unwrap();
+        assert!(
+            emp <= bound + 1e-9,
+            "eta={eta} alpha={alpha}: empirical {emp} > bound {bound}"
+        );
+        assert!(res.conformal_t.unwrap() > 0);
+    }
+}
+
+/// eta = 0 disables adaptation: the threshold never moves, and the
+/// Theorem 2 certificate degenerates (infinite bound).
+#[test]
+fn eta_zero_no_adaptation() {
+    let world = SyntheticWorld::new(64, 0.7, 5);
+    let mut sess = make_session(
+        &world,
+        Policy::CSqs { beta0: 0.02, alpha: 0.0005, eta: 0.0 },
+        1.0,
+        5,
+        100,
+    );
+    let res = sess.run(&[2]).unwrap();
+    assert!(res.conformal_bound.unwrap().is_infinite());
+    let beta = sess.edge.conformal.as_ref().unwrap().beta();
+    assert_eq!(beta, 0.02, "eta=0 must never move the threshold");
+}
+
+/// The latency ledger must be internally consistent and each component
+/// must match its model.
+#[test]
+fn latency_ledger_consistent() {
+    let world = SyntheticWorld::new(64, 0.5, 13);
+    let mut sess = make_session(&world, Policy::KSqs { k: 8 }, 0.8, 3, 64);
+    let res = sess.run(&[1, 2, 3]).unwrap();
+    let sum = res.t_slm_s + res.t_uplink_s + res.t_llm_s + res.t_downlink_s;
+    assert!((res.total_time_s - sum).abs() < 1e-12);
+    // modeled compute: slm time = 1e-4 * total drafted
+    let drafted: usize = res.batches.iter().map(|b| b.drafted).sum();
+    assert!((res.t_slm_s - 1e-4 * drafted as f64).abs() < 1e-9);
+    assert!((res.t_llm_s - 1e-3 * res.batches.len() as f64).abs() < 1e-9);
+    // uplink time from the deterministic link formula
+    let expect_up: f64 = res
+        .batches
+        .iter()
+        .map(|b| b.frame_bits as f64 / 1e6 + 0.010)
+        .sum();
+    assert!((res.t_uplink_s - expect_up).abs() < 1e-9, "{} vs {expect_up}", res.t_uplink_s);
+    let rr = res.resampling_rate();
+    assert!((0.0..=1.0).contains(&rr));
+    assert_eq!(res.n_rej, res.batches.iter().filter(|b| b.rejected).count());
+}
+
+/// Determinism: same seed, same trajectory; different seed diverges.
+#[test]
+fn deterministic_given_seed() {
+    let world = SyntheticWorld::new(64, 0.5, 17);
+    let run = |seed: u64| {
+        let mut sess = make_session(
+            &world,
+            Policy::CSqs { beta0: 0.01, alpha: 0.001, eta: 0.01 },
+            0.9,
+            seed,
+            50,
+        );
+        sess.run(&[4, 4]).unwrap().tokens
+    };
+    assert_eq!(run(123), run(123), "same seed, same trajectory");
+    assert_ne!(run(123), run(124), "different seed should diverge");
+}
+
+/// With draft == target (mismatch 0) and a fine lattice, rejections are
+/// bounded by the quantization distortion alone (Theorem 1 with zero
+/// discrepancy term).
+#[test]
+fn identical_models_almost_never_reject() {
+    let world = SyntheticWorld::new(32, 0.0, 9);
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 15, 1_000_000);
+    let link = SimulatedLink::new(LinkConfig::default(), 5);
+    let cfg = SessionConfig {
+        policy: Policy::DenseQs,
+        temp: 1.0,
+        ell: 4000, // fine lattice: V/(4*ell) = 0.002
+        max_new_tokens: 300,
+        seed: 5,
+        timing: modeled(),
+        ..Default::default()
+    };
+    let mut sess = SdSession::new(draft, target, link, cfg);
+    let res = sess.run(&[8]).unwrap();
+    assert!(
+        res.resampling_rate() < 0.05,
+        "identical models + fine lattice must almost never reject: rate={}",
+        res.resampling_rate()
+    );
+}
+
+/// Theorem 1 shape: the resampling rate should increase with draft–target
+/// mismatch (the SLM–LLM discrepancy term).
+#[test]
+fn resampling_grows_with_mismatch() {
+    let mut rates = Vec::new();
+    for mismatch in [0.0, 0.5, 2.0] {
+        let world = SyntheticWorld::new(64, mismatch, 31);
+        let mut sess = make_session(&world, Policy::DenseQs, 1.0, 2, 400);
+        let res = sess.run(&[3]).unwrap();
+        rates.push(res.resampling_rate());
+    }
+    assert!(
+        rates[2] > rates[0] + 0.1,
+        "mismatch 2.0 must reject far more than 0.0: {rates:?}"
+    );
+}
