@@ -1,0 +1,54 @@
+//! Fleet simulator quickstart: 12 heterogeneous devices with a mix of
+//! policies contend for one 1 Mbit/s uplink and a 2-slot batching cloud
+//! verifier.  Runs in virtual time — finishes in milliseconds of wall
+//! clock and prints the fleet-wide latency/utilization report.
+//!
+//!   cargo run --release --example fleet_demo
+
+use sqs_sd::fleet::{
+    heterogeneous_profiles, mixed_policy_profiles, DeviceProfile, FleetConfig, FleetSim,
+    VerifierConfig, Workload,
+};
+
+fn main() -> anyhow::Result<()> {
+    let base = DeviceProfile {
+        max_new_tokens: 32,
+        workload: Workload::Poisson { rate_hz: 2.0 },
+        ..Default::default()
+    };
+    // heterogeneous draft speeds/downlinks, then a ksqs/csqs/dense mix
+    let profiles = mixed_policy_profiles(12, base)
+        .into_iter()
+        .zip(heterogeneous_profiles(12, base, 77))
+        .map(|(mixed, het)| DeviceProfile {
+            policy: mixed.policy,
+            draft_token_s: het.draft_token_s,
+            downlink_bps: het.downlink_bps,
+            workload: het.workload,
+            ..base
+        })
+        .collect();
+
+    let cfg = FleetConfig {
+        profiles,
+        uplink_bps: 1e6,
+        propagation_s: 0.010,
+        jitter_s: 0.002,
+        requests_per_device: 5,
+        verifier: VerifierConfig { concurrency: 2, batch_max: 6, ..Default::default() },
+        vocab: 64,
+        mismatch: 0.6,
+        seed: 7,
+        record_trace: false,
+    };
+    let report = FleetSim::new(cfg).run()?;
+    print!("{}", report.render());
+    println!("--- per-device ---");
+    for d in &report.per_device {
+        println!(
+            "dev{:02} {:<8} {} reqs | mean {:.3}s p99 {:.3}s | {} uplink bits",
+            d.id, d.policy, d.completed, d.mean_latency_s, d.p99_latency_s, d.uplink_bits
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! FLEET — contention study on the discrete-event fleet simulator:
+//! fleet size x shared-uplink capacity x sparsification policy.
+//!
+//!   cargo bench --bench fleet_contention
+//!
+//! Expected shape (the question the paper's single-pair setup cannot
+//! ask): as devices contend for the uplink, the policies that ship fewer
+//! bits per batch (K-SQS small K, C-SQS adaptive) degrade more slowly
+//! than dense QS; C-SQS's advantage grows with congestion because its
+//! threshold adapts per-token while dense pays the full-vocab cost into a
+//! saturated queue.  Everything runs in virtual time — results are
+//! bit-reproducible and host-independent.
+
+use sqs_sd::exp::{fast_mode, CsvOut};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    let fleet_sizes: Vec<usize> = if fast_mode() { vec![2, 8, 16] } else { vec![2, 8, 32] };
+    let uplink_caps: Vec<f64> = vec![2.5e5, 1e6, 4e6];
+    let policies = [
+        ("ksqs", Policy::KSqs { k: 8 }),
+        ("csqs", Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 }),
+        ("dense", Policy::DenseQs),
+    ];
+    let requests = if fast_mode() { 2 } else { 4 };
+
+    println!("== FLEET: size x uplink capacity x policy (virtual time) ==");
+    println!(
+        "{:<8} {:>8} {:>12} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "policy", "devices", "uplink_bps", "lat_mean_s", "lat_p99_s", "up_util", "up_wait_s", "resample"
+    );
+    let mut csv = CsvOut::new(
+        "fleet_contention.csv",
+        "policy,devices,uplink_bps,latency_mean_s,latency_p50_s,latency_p99_s,\
+         uplink_utilization,uplink_mean_wait_s,rejection_rate,acceptance,\
+         verify_mean_batch,bits_per_token",
+    );
+
+    for (name, policy) in &policies {
+        for &n in &fleet_sizes {
+            for &bps in &uplink_caps {
+                let base = DeviceProfile {
+                    policy: *policy,
+                    max_new_tokens: 24,
+                    workload: Workload::Poisson { rate_hz: 2.0 },
+                    ..Default::default()
+                };
+                let mut cfg = FleetConfig::uniform(n, base);
+                cfg.uplink_bps = bps;
+                cfg.requests_per_device = requests;
+                cfg.verifier =
+                    VerifierConfig { concurrency: 4, batch_max: 8, ..Default::default() };
+                cfg.seed = 90210;
+                let r = FleetSim::new(cfg).run()?;
+
+                let (rej, tot) = r
+                    .rejection_by_policy
+                    .iter()
+                    .map(|(_, rj, t)| (*rj, *t))
+                    .fold((0u64, 0u64), |acc, x| (acc.0 + x.0, acc.1 + x.1));
+                let rejection = if tot == 0 { 0.0 } else { rej as f64 / tot as f64 };
+                let bits_per_token =
+                    if r.tokens == 0 { 0.0 } else { r.uplink_bits as f64 / r.tokens as f64 };
+
+                println!(
+                    "{name:<8} {n:>8} {bps:>12.0} {:>12.4} {:>12.4} {:>10.3} {:>10.4} {:>10.3}",
+                    r.latency.mean(),
+                    r.latency.p99(),
+                    r.uplink_utilization,
+                    r.uplink_mean_wait_s,
+                    rejection
+                );
+                csv.row(format!(
+                    "{name},{n},{bps},{},{},{},{},{},{},{},{},{}",
+                    r.latency.mean(),
+                    r.latency.p50(),
+                    r.latency.p99(),
+                    r.uplink_utilization,
+                    r.uplink_mean_wait_s,
+                    rejection,
+                    r.acceptance,
+                    r.verify_mean_batch,
+                    bits_per_token
+                ));
+            }
+        }
+        println!();
+    }
+    csv.finish();
+
+    println!("-- shape check: congestion must not help --");
+    for (name, policy) in &policies {
+        let lat = |bps: f64| -> anyhow::Result<f64> {
+            let base = DeviceProfile {
+                policy: *policy,
+                max_new_tokens: 24,
+                workload: Workload::Poisson { rate_hz: 2.0 },
+                ..Default::default()
+            };
+            let mut cfg = FleetConfig::uniform(16, base);
+            cfg.uplink_bps = bps;
+            cfg.requests_per_device = requests;
+            cfg.verifier = VerifierConfig { concurrency: 16, batch_max: 1, ..Default::default() };
+            cfg.seed = 90210;
+            Ok(FleetSim::new(cfg).run()?.latency.mean())
+        };
+        let wide = lat(4e6)?;
+        let narrow = lat(2.5e5)?;
+        println!(
+            "{name}: mean latency {wide:.4}s @4Mbps -> {narrow:.4}s @250kbps ({})",
+            if narrow >= wide { "monotone — expected" } else { "ANOMALY" }
+        );
+    }
+    Ok(())
+}

@@ -7,6 +7,10 @@
 //! latency ledger adds it to measured compute time — so experiments are
 //! reproducible regardless of host load.
 
+pub mod shared;
+
+pub use shared::SharedUplink;
+
 /// Link parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkConfig {

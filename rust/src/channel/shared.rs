@@ -1,0 +1,156 @@
+//! Shared uplink: one channel, many edge devices.
+//!
+//! `SimulatedLink` gives every session the full configured bandwidth; in a
+//! fleet the uplink is a contended resource.  `SharedUplink` models it as a
+//! FIFO server in virtual time: a frame submitted at `now` starts
+//! transmitting when the channel frees up, occupies it for
+//! `bits / capacity_bps` seconds, then takes one propagation delay (plus
+//! optional seeded jitter) to arrive.  Because the fleet simulator calls
+//! `reserve` in deterministic event order, the queueing discipline is
+//! reproducible bit-for-bit.
+//!
+//! The ledger extends `channel::Ledger` with the two quantities contention
+//! studies need: total busy time (-> utilization) and total queue wait.
+
+use crate::util::rng::Pcg64;
+
+use super::Ledger;
+
+/// A shared, rate-limited uplink with FIFO queueing and byte accounting.
+pub struct SharedUplink {
+    /// channel capacity in bits/second, shared by all devices
+    pub capacity_bps: f64,
+    /// one-way propagation delay, seconds
+    pub propagation_s: f64,
+    /// uniform jitter amplitude, seconds (0 = deterministic)
+    pub jitter_s: f64,
+    /// aggregate transfer ledger (frames, bits, busy seconds)
+    pub ledger: Ledger,
+    /// total seconds frames spent waiting for the channel
+    pub queue_wait_s: f64,
+    free_at: f64,
+    rng: Pcg64,
+}
+
+impl SharedUplink {
+    pub fn new(capacity_bps: f64, propagation_s: f64, jitter_s: f64, seed: u64) -> Self {
+        SharedUplink {
+            capacity_bps,
+            propagation_s,
+            jitter_s,
+            ledger: Ledger::default(),
+            queue_wait_s: 0.0,
+            free_at: 0.0,
+            rng: Pcg64::new(seed, 0x5A4ED),
+        }
+    }
+
+    /// Reserve the channel for a `bits`-sized frame submitted at virtual
+    /// time `now`.  Returns `(start, delivered)`: when transmission begins
+    /// (>= now; the FIFO wait is `start - now`) and when the frame reaches
+    /// the far end.
+    pub fn reserve(&mut self, now: f64, bits: usize) -> (f64, f64) {
+        let start = if self.free_at > now { self.free_at } else { now };
+        let tx = bits as f64 / self.capacity_bps;
+        let finish = start + tx;
+        self.free_at = finish;
+        let jitter = if self.jitter_s > 0.0 {
+            self.rng.next_f64() * self.jitter_s
+        } else {
+            0.0
+        };
+        self.ledger.frames += 1;
+        self.ledger.bits += bits as u64;
+        self.ledger.time_s += tx;
+        self.queue_wait_s += start - now;
+        (start, finish + self.propagation_s + jitter)
+    }
+
+    /// When the channel next becomes idle (virtual time).
+    pub fn free_at(&self) -> f64 {
+        self.free_at
+    }
+
+    /// Fraction of `[0, horizon_s]` the channel spent transmitting.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        if horizon_s > 0.0 {
+            (self.ledger.time_s / horizon_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean FIFO wait per frame, seconds.
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.ledger.frames == 0 {
+            0.0
+        } else {
+            self.queue_wait_s / self.ledger.frames as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_channel_transmits_immediately() {
+        let mut up = SharedUplink::new(1000.0, 0.5, 0.0, 0);
+        let (start, delivered) = up.reserve(1.0, 1000);
+        assert_eq!(start, 1.0);
+        // 1000 bits @ 1 kbps = 1 s tx + 0.5 s propagation
+        assert!((delivered - 2.5).abs() < 1e-12);
+        assert_eq!(up.queue_wait_s, 0.0);
+    }
+
+    #[test]
+    fn contending_frames_queue_fifo() {
+        let mut up = SharedUplink::new(1000.0, 0.0, 0.0, 0);
+        let (s1, d1) = up.reserve(0.0, 500); // tx 0.5s: [0.0, 0.5]
+        let (s2, d2) = up.reserve(0.1, 500); // waits until 0.5: [0.5, 1.0]
+        let (s3, d3) = up.reserve(0.2, 500); // waits until 1.0: [1.0, 1.5]
+        assert_eq!(s1, 0.0);
+        assert!((d1 - 0.5).abs() < 1e-12);
+        assert!((s2 - 0.5).abs() < 1e-12);
+        assert!((d2 - 1.0).abs() < 1e-12);
+        assert!((s3 - 1.0).abs() < 1e-12);
+        assert!((d3 - 1.5).abs() < 1e-12);
+        assert!((up.queue_wait_s - (0.4 + 0.8)).abs() < 1e-12);
+        assert_eq!(up.ledger.frames, 3);
+        assert_eq!(up.ledger.bits, 1500);
+    }
+
+    #[test]
+    fn halving_capacity_never_speeds_delivery() {
+        let mut fast = SharedUplink::new(2000.0, 0.01, 0.0, 0);
+        let mut slow = SharedUplink::new(1000.0, 0.01, 0.0, 0);
+        let submissions = [(0.0, 800usize), (0.1, 400), (0.15, 1200), (0.9, 300)];
+        for &(t, bits) in &submissions {
+            let (_, df) = fast.reserve(t, bits);
+            let (_, ds) = slow.reserve(t, bits);
+            assert!(ds >= df - 1e-12, "slow link delivered earlier: {ds} < {df}");
+        }
+        assert!(slow.utilization(2.0) >= fast.utilization(2.0));
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut up = SharedUplink::new(100.0, 0.0, 0.0, 0);
+        up.reserve(0.0, 1000); // 10 s of airtime
+        assert_eq!(up.utilization(5.0), 1.0); // clamped
+        assert!((up.utilization(20.0) - 0.5).abs() < 1e-12);
+        assert_eq!(up.utilization(0.0), 0.0);
+    }
+
+    #[test]
+    fn jitter_reproducible_per_seed() {
+        let mut a = SharedUplink::new(1e6, 0.01, 0.005, 9);
+        let mut b = SharedUplink::new(1e6, 0.01, 0.005, 9);
+        for i in 0..20 {
+            let (_, da) = a.reserve(i as f64, 1000);
+            let (_, db) = b.reserve(i as f64, 1000);
+            assert_eq!(da.to_bits(), db.to_bits());
+        }
+    }
+}

@@ -54,11 +54,16 @@ impl Scheduler {
         let rx = Arc::new(Mutex::new(rx));
         let (tx_resp, rx_resp) = channel::<Response>();
         let mut handles = Vec::new();
-        // Workers that fail to initialize report a poisoned first response.
+        // Init-failure contract: a worker whose factory() fails exits, but
+        // the *last* worker to fail (when every worker failed) stays behind
+        // and answers each request with an error Response — otherwise
+        // submitted requests are never answered and finish() under-returns.
+        let alive = Arc::new(AtomicUsize::new(n_workers));
         for w in 0..n_workers {
             let rx = Arc::clone(&rx);
             let tx_resp = tx_resp.clone();
             let factory = Arc::clone(&factory);
+            let alive = Arc::clone(&alive);
             handles.push(std::thread::Builder::new()
                 .name(format!("sqs-worker-{w}"))
                 .spawn(move || {
@@ -66,7 +71,19 @@ impl Scheduler {
                         Ok(wk) => wk,
                         Err(e) => {
                             crate::warn!("worker {w} failed to init: {e}");
-                            return;
+                            if alive.fetch_sub(1, Ordering::SeqCst) != 1 {
+                                return; // other workers cover the queue
+                            }
+                            // no worker survived: stay in the loop as an
+                            // error-returning worker so every request is
+                            // still answered exactly once
+                            let msg = format!(
+                                "all workers failed to initialize; \
+                                 worker {w}'s error: {e:#}"
+                            );
+                            Box::new(move |_req: &Request| {
+                                Err(anyhow::anyhow!("{msg}"))
+                            }) as Worker
                         }
                     };
                     loop {
@@ -180,6 +197,46 @@ mod tests {
             used.insert(r.worker);
         }
         assert!(used.len() >= 2, "expected >= 2 workers used, got {used:?}");
+    }
+
+    #[test]
+    fn all_workers_failing_init_surface_error_responses() {
+        let factory: WorkerFactory =
+            Arc::new(|w| Err(anyhow::anyhow!("no backend for worker {w}")));
+        let sched = Scheduler::start(3, factory).unwrap();
+        for id in 0..5 {
+            sched.submit(Request { id, prompt: vec![1], max_new_tokens: 2 });
+        }
+        let responses = sched.finish();
+        assert_eq!(responses.len(), 5, "every request must be answered");
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..5).collect::<Vec<u64>>());
+        for r in &responses {
+            let err = r.result.as_ref().unwrap_err().to_string();
+            assert!(err.contains("failed to initialize"), "unexpected error: {err}");
+        }
+    }
+
+    #[test]
+    fn partial_init_failure_still_serves_all_requests() {
+        let inner = synthetic_factory(Policy::KSqs { k: 8 });
+        let factory: WorkerFactory = Arc::new(move |w| {
+            if w == 0 {
+                Err(anyhow::anyhow!("worker 0 has no accelerator"))
+            } else {
+                inner(w)
+            }
+        });
+        let sched = Scheduler::start(2, factory).unwrap();
+        for id in 0..6 {
+            sched.submit(Request { id, prompt: vec![2], max_new_tokens: 4 });
+        }
+        let responses = sched.finish();
+        assert_eq!(responses.len(), 6);
+        for r in &responses {
+            assert!(r.result.is_ok(), "healthy worker must cover the fleet");
+            assert_eq!(r.worker, 1);
+        }
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! One edge device in the fleet: an `EdgeNode` over the synthetic draft
+//! model, its per-request cloud context (`CloudNode`), a local request
+//! queue fed by the workload process, and per-device tallies.
+//!
+//! The device mirrors `SdSession`'s per-batch protocol (draft -> encode ->
+//! uplink -> verify -> feedback -> sync) but is driven phase-by-phase by
+//! the fleet simulator's event loop instead of a private synchronous loop,
+//! so many devices can interleave on the shared uplink and the cloud
+//! verify server.  Compute enters virtual time via the profile's modeled
+//! costs (exactly like `TimingMode::Modeled`), which keeps fleet runs
+//! reproducible regardless of host load.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cloud::{CloudNode, Verdict};
+use crate::edge::EdgeNode;
+use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use crate::model::{DraftLm, TargetLm};
+use crate::sqs::Policy;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+use super::workload::Workload;
+
+/// Heterogeneous per-device parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub policy: Policy,
+    pub temp: f32,
+    /// lattice resolution
+    pub ell: u32,
+    /// per-batch uplink budget B, bits
+    pub budget_bits: usize,
+    pub max_batch_drafts: usize,
+    /// tokens to generate per request
+    pub max_new_tokens: usize,
+    /// modeled SLM seconds per drafted token
+    pub draft_token_s: f64,
+    /// modeled fixed SLM overhead per batch, seconds
+    pub draft_overhead_s: f64,
+    /// dedicated per-device downlink, bits/s
+    pub downlink_bps: f64,
+    pub workload: Workload,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.9,
+            ell: 100,
+            budget_bits: 5000,
+            max_batch_drafts: 15,
+            max_new_tokens: 32,
+            // matches exp::synthetic_default's modeled compute costs
+            draft_token_s: 1.2e-3,
+            draft_overhead_s: 0.0,
+            downlink_bps: 1e7,
+            workload: Workload::ClosedLoop { think_s: 0.0 },
+        }
+    }
+}
+
+/// The request currently being served.
+pub struct ActiveRequest {
+    pub arrived_at: f64,
+    pub prompt_len: usize,
+    /// canonical committed sequence (prompt + verified tokens)
+    pub seq: Vec<u16>,
+}
+
+/// In-flight batch scratch between protocol phases.
+struct PendingBatch {
+    ctx_before: usize,
+    drafted: usize,
+    bytes: Vec<u8>,
+    frame_bits: usize,
+    verdict: Option<Verdict>,
+}
+
+/// Per-device tallies surfaced in the fleet report.
+#[derive(Default)]
+pub struct DeviceStats {
+    pub completed: usize,
+    pub tokens: u64,
+    pub batches: u64,
+    pub rejected_batches: u64,
+    pub drafted_tokens: u64,
+    pub accepted_tokens: u64,
+    pub uplink_bits: u64,
+    pub latency: Summary,
+}
+
+pub struct Device {
+    pub id: usize,
+    pub profile: DeviceProfile,
+    pub edge: EdgeNode<SyntheticDraft>,
+    pub cloud: CloudNode<SyntheticTarget>,
+    pub queue: VecDeque<f64>,
+    pub active: Option<ActiveRequest>,
+    pub stats: DeviceStats,
+    /// arrivals generated so far (bounded by requests_per_device)
+    pub generated: usize,
+    pending: Option<PendingBatch>,
+    /// prompt generation + downlink jitter
+    rng: Pcg64,
+    /// workload inter-arrival stream (isolated so arrival times do not
+    /// depend on how many prompts/jitters were drawn)
+    arrival_rng: Pcg64,
+    vocab: usize,
+}
+
+impl Device {
+    pub fn new(id: usize, profile: DeviceProfile, world: &SyntheticWorld, base_seed: u64) -> Device {
+        let seed = base_seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let vocab = world.vocab;
+        let draft = SyntheticDraft::new(world.clone(), 100_000);
+        let target = SyntheticTarget::new(world.clone(), profile.max_batch_drafts, 100_000);
+        let edge = EdgeNode::new(
+            draft,
+            profile.policy,
+            profile.ell,
+            profile.budget_bits,
+            profile.max_batch_drafts,
+            seed ^ 0xE,
+        );
+        let cloud = CloudNode::new(target, seed ^ 0xC);
+        Device {
+            id,
+            profile,
+            edge,
+            cloud,
+            queue: VecDeque::new(),
+            active: None,
+            stats: DeviceStats { latency: Summary::new(), ..Default::default() },
+            generated: 0,
+            pending: None,
+            rng: Pcg64::new(seed, 0xF1EE7),
+            arrival_rng: Pcg64::new(seed, 0xA441),
+            vocab,
+        }
+    }
+
+    /// Draw the next inter-arrival/think gap from this device's workload.
+    pub fn next_gap(&mut self) -> f64 {
+        self.profile.workload.next_gap(&mut self.arrival_rng)
+    }
+
+    /// Pop the next queued request (if any) and start serving it: fresh
+    /// prompt, fresh edge/cloud contexts, first batch drafted.  Returns
+    /// the modeled draft time of that batch, or None when the queue is
+    /// empty.
+    pub fn start_next_request(&mut self, _now: f64) -> Result<Option<f64>> {
+        debug_assert!(self.active.is_none());
+        let Some(arrived_at) = self.queue.pop_front() else {
+            return Ok(None);
+        };
+        let plen = 2 + (self.rng.below(3)) as usize; // 2..=4 tokens
+        let prompt: Vec<u16> = (0..plen)
+            .map(|_| self.rng.below(self.vocab as u64) as u16)
+            .collect();
+        self.edge.start(&prompt)?;
+        self.cloud.start(&prompt)?;
+        self.active = Some(ActiveRequest {
+            arrived_at,
+            prompt_len: prompt.len(),
+            seq: prompt,
+        });
+        match self.begin_batch()? {
+            Some(d) => Ok(Some(d)),
+            // a fresh context can always draft at least one token; treat
+            // the impossible case as an error rather than wedging the sim
+            None => bail!("device {}: fresh request could not draft", self.id),
+        }
+    }
+
+    /// Draft the next batch of the active request.  Returns the modeled
+    /// SLM time, or None when the request has nothing left to draft
+    /// (finished / out of context room).
+    pub fn begin_batch(&mut self) -> Result<Option<f64>> {
+        let req = self
+            .active
+            .as_ref()
+            .ok_or_else(|| anyhow!("begin_batch without active request"))?;
+        let produced = req.seq.len() - req.prompt_len;
+        if produced >= self.profile.max_new_tokens || !self.room_left() {
+            return Ok(None);
+        }
+        let ctx_before = req.seq.len();
+        let remaining = self.profile.max_new_tokens - produced;
+        let drafted = self.edge.draft_batch_capped(self.profile.temp, remaining)?;
+        let l = drafted.frame.tokens.len();
+        if l == 0 {
+            return Ok(None);
+        }
+        self.pending = Some(PendingBatch {
+            ctx_before,
+            drafted: l,
+            bytes: drafted.bytes,
+            frame_bits: drafted.frame_bits,
+            verdict: None,
+        });
+        self.stats.drafted_tokens += l as u64;
+        Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * l as f64))
+    }
+
+    /// Wire size of the pending frame, bits.
+    pub fn frame_bits(&self) -> usize {
+        self.pending.as_ref().map(|p| p.frame_bits).unwrap_or(0)
+    }
+
+    pub fn note_uplink(&mut self, bits: usize) {
+        self.stats.uplink_bits += bits as u64;
+    }
+
+    /// Decode the pending frame from its wire bytes and verify it against
+    /// this device's cloud context.  Returns the verify-window length
+    /// (drafts + 1) so the verifier can model batched service time.
+    pub fn verify_now(&mut self) -> Result<usize> {
+        let req = self
+            .active
+            .as_ref()
+            .ok_or_else(|| anyhow!("verify without active request"))?;
+        let prev = *req.seq.last().unwrap();
+        let pending = self
+            .pending
+            .as_mut()
+            .ok_or_else(|| anyhow!("verify without pending batch"))?;
+        let frame = self
+            .edge
+            .codec
+            .decode(&pending.bytes)
+            .map_err(|e| anyhow!("frame decode: {e}"))?;
+        let temp = self.profile.temp;
+        let verdict = self.cloud.verify_with_prev(&frame, prev, temp)?;
+        let window = pending.drafted + 1;
+        pending.verdict = Some(verdict);
+        Ok(window)
+    }
+
+    /// Feedback frame size for the verified batch, bits.
+    pub fn feedback_bits(&mut self) -> Result<usize> {
+        let pending = self
+            .pending
+            .as_ref()
+            .ok_or_else(|| anyhow!("feedback without pending batch"))?;
+        let verdict = pending
+            .verdict
+            .as_ref()
+            .ok_or_else(|| anyhow!("feedback before verify"))?;
+        let (_bytes, bits) = self.edge.codec.encode_feedback(&verdict.feedback);
+        Ok(bits)
+    }
+
+    /// Downlink delivery time for `bits` on this device's dedicated link.
+    pub fn downlink_time(&mut self, bits: usize, propagation_s: f64, jitter_s: f64) -> f64 {
+        let jitter = if jitter_s > 0.0 { self.rng.next_f64() * jitter_s } else { 0.0 };
+        bits as f64 / self.profile.downlink_bps + propagation_s + jitter
+    }
+
+    /// Sync the edge with the cloud verdict and commit tokens.  Returns
+    /// true when the active request has produced all its tokens.
+    pub fn apply_feedback(&mut self) -> Result<bool> {
+        let pending = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("apply_feedback without pending batch"))?;
+        let verdict = pending
+            .verdict
+            .ok_or_else(|| anyhow!("apply_feedback before verify"))?;
+        self.edge.apply_feedback(
+            pending.ctx_before,
+            pending.drafted,
+            verdict.accepted,
+            verdict.feedback.new_token,
+        )?;
+        let req = self
+            .active
+            .as_mut()
+            .ok_or_else(|| anyhow!("apply_feedback without active request"))?;
+        req.seq.extend_from_slice(&verdict.committed);
+        debug_assert_eq!(self.edge.context_len(), req.seq.len());
+        debug_assert_eq!(self.cloud.context_len(), req.seq.len());
+
+        self.stats.batches += 1;
+        self.stats.accepted_tokens += verdict.accepted as u64;
+        if verdict.rejected {
+            self.stats.rejected_batches += 1;
+        }
+        let produced = req.seq.len() - req.prompt_len;
+        Ok(produced >= self.profile.max_new_tokens || !self.room_left())
+    }
+
+    /// Record the finished request and free the device.
+    pub fn complete_request(&mut self, now: f64) -> Result<f64> {
+        let req = self
+            .active
+            .take()
+            .ok_or_else(|| anyhow!("complete without active request"))?;
+        let latency = now - req.arrived_at;
+        self.stats.completed += 1;
+        self.stats.tokens += (req.seq.len() - req.prompt_len) as u64;
+        self.stats.latency.add(latency);
+        self.pending = None;
+        Ok(latency)
+    }
+
+    fn room_left(&self) -> bool {
+        let len = self.active.as_ref().map(|r| r.seq.len()).unwrap_or(0);
+        len + self.profile.max_batch_drafts + 2 < self.cloud.target.max_len()
+            && len + self.profile.max_batch_drafts + 2 < self.edge.draft.max_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device(policy: Policy) -> Device {
+        let world = SyntheticWorld::new(64, 0.5, 7);
+        let profile = DeviceProfile { policy, max_new_tokens: 12, ..Default::default() };
+        Device::new(0, profile, &world, 42)
+    }
+
+    #[test]
+    fn full_request_through_phases() {
+        let mut d = device(Policy::KSqs { k: 8 });
+        d.queue.push_back(0.0);
+        let draft_s = d.start_next_request(0.0).unwrap().unwrap();
+        assert!(draft_s > 0.0);
+        let mut batches = 0;
+        loop {
+            batches += 1;
+            assert!(d.frame_bits() > 0);
+            let window = d.verify_now().unwrap();
+            assert!(window >= 2);
+            assert!(d.feedback_bits().unwrap() > 0);
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            assert!(d.begin_batch().unwrap().is_some());
+        }
+        let latency = d.complete_request(3.5).unwrap();
+        assert!((latency - 3.5).abs() < 1e-12);
+        assert_eq!(d.stats.completed, 1);
+        assert!(d.stats.tokens >= 12);
+        assert_eq!(d.stats.batches, batches);
+        assert!(d.active.is_none());
+    }
+
+    #[test]
+    fn serves_queued_requests_in_arrival_order() {
+        let mut d = device(Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 });
+        d.queue.push_back(1.0);
+        d.queue.push_back(2.0);
+        d.start_next_request(1.0).unwrap().unwrap();
+        assert_eq!(d.active.as_ref().unwrap().arrived_at, 1.0);
+        loop {
+            d.verify_now().unwrap();
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            d.begin_batch().unwrap().unwrap();
+        }
+        d.complete_request(4.0).unwrap();
+        d.start_next_request(4.0).unwrap().unwrap();
+        assert_eq!(d.active.as_ref().unwrap().arrived_at, 2.0);
+    }
+
+    #[test]
+    fn idle_device_has_nothing_to_start() {
+        let mut d = device(Policy::KSqs { k: 4 });
+        assert!(d.start_next_request(0.0).unwrap().is_none());
+        assert_eq!(d.frame_bits(), 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Event-queue core of the fleet simulator: a virtual-time priority queue
+//! with seeded, reproducible ordering.
+//!
+//! Determinism contract: events are ordered by (time, insertion sequence).
+//! The sequence number is assigned at push, and the simulator is
+//! single-threaded, so two runs with the same config and seed process an
+//! identical event stream — the basis of the bit-identical-trace test.
+//! Times compare via `f64::total_cmp`, so even NaN/-0.0 corner cases order
+//! the same way on every platform.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when the event fires (the per-device protocol phases plus
+/// the verifier's slot bookkeeping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A new request arrives at the device (joins its local queue).
+    Arrival,
+    /// The device finished drafting a batch (modeled SLM compute).
+    DraftDone,
+    /// The frame cleared the shared uplink and reached the cloud.
+    UplinkDelivered,
+    /// The cloud finished verifying this device's window.
+    VerifyDone,
+    /// A cloud verify slot freed up (one per coalesced batch).
+    SlotFree,
+    /// The feedback frame reached the device over its downlink.
+    FeedbackDelivered,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::DraftDone => "draft_done",
+            EventKind::UplinkDelivered => "uplink_delivered",
+            EventKind::VerifyDone => "verify_done",
+            EventKind::SlotFree => "slot_free",
+            EventKind::FeedbackDelivered => "feedback_delivered",
+        }
+    }
+}
+
+/// One scheduled event in virtual time.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// virtual firing time, seconds
+    pub t: f64,
+    /// insertion sequence (total tie-break order)
+    pub seq: u64,
+    /// owning device id (for SlotFree: the first device of the batch)
+    pub device: usize,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Exact, platform-independent trace line (f64 rendered via to_bits so
+    /// the determinism test compares bit-identical virtual times).
+    pub fn trace_line(&self) -> String {
+        format!(
+            "{:016x} {:08} dev{:04} {}",
+            self.t.to_bits(),
+            self.seq,
+            self.device,
+            self.kind.name()
+        )
+    }
+}
+
+/// Heap adapter: min-heap on (t, seq) over std's max-heap.
+struct HeapItem(Event);
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.t.to_bits() == other.0.t.to_bits() && self.0.seq == other.0.seq
+    }
+}
+
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: earliest time (then lowest seq) pops first
+        other
+            .0
+            .t
+            .total_cmp(&self.0.t)
+            .then(other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Deterministic virtual-time event queue.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<HeapItem>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `kind` for `device` at virtual time `t`.
+    pub fn push(&mut self, t: f64, device: usize, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapItem(Event { t, seq, device, kind }));
+    }
+
+    /// Pop the earliest event (ties broken by insertion order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|h| h.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_insertion() {
+        let mut q = EventQueue::new();
+        q.push(2.0, 0, EventKind::Arrival);
+        q.push(1.0, 1, EventKind::DraftDone);
+        q.push(1.0, 2, EventKind::Arrival);
+        q.push(0.5, 3, EventKind::SlotFree);
+        let order: Vec<(usize, EventKind)> = std::iter::from_fn(|| q.pop())
+            .map(|e| (e.device, e.kind))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (3, EventKind::SlotFree),
+                (1, EventKind::DraftDone),
+                (2, EventKind::Arrival),
+                (0, EventKind::Arrival),
+            ]
+        );
+    }
+
+    #[test]
+    fn equal_times_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for d in 0..100 {
+            q.push(1.25, d, EventKind::VerifyDone);
+        }
+        for d in 0..100 {
+            let e = q.pop().unwrap();
+            assert_eq!(e.device, d);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn trace_lines_are_exact() {
+        let mut q = EventQueue::new();
+        q.push(0.1 + 0.2, 7, EventKind::FeedbackDelivered);
+        let e = q.pop().unwrap();
+        let line = e.trace_line();
+        assert!(line.contains("dev0007"));
+        assert!(line.contains("feedback_delivered"));
+        assert!(line.starts_with(&format!("{:016x}", (0.1f64 + 0.2).to_bits())));
+    }
+}

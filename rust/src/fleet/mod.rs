@@ -1,0 +1,572 @@
+//! Fleet simulator: a deterministic discrete-event model of N edge
+//! devices running the SQS-SD protocol against a *shared* uplink and a
+//! cloud verify server with bounded concurrency and batch coalescing.
+//!
+//! Single-session experiments (`SdSession`) answer "how fast is one
+//! edge–cloud pair"; this subsystem answers the production questions the
+//! ROADMAP targets: how do K-SQS/C-SQS behave when many devices contend
+//! for the same uplink, and how much does verify batching amortize cloud
+//! cost.  Everything runs in virtual time with seeded randomness — same
+//! config + seed => bit-identical event trace and metrics (tested).
+//!
+//! Event flow per batch (each edge device cycles through):
+//!   Arrival -> [queue at device] -> DraftDone -> [queue at SharedUplink]
+//!   -> UplinkDelivered -> [queue at CloudVerifier] -> VerifyDone
+//!   -> FeedbackDelivered -> next DraftDone | request complete
+//! plus SlotFree events that drive the verifier's admission loop.
+
+pub mod device;
+pub mod events;
+pub mod verifier;
+pub mod workload;
+
+pub use device::{Device, DeviceProfile, DeviceStats};
+pub use events::{Event, EventKind, EventQueue};
+pub use verifier::{CloudVerifier, VerifierConfig};
+pub use workload::Workload;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::channel::SharedUplink;
+use crate::coordinator::Metrics;
+use crate::model::synthetic::SyntheticWorld;
+use crate::sqs::Policy;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+
+/// Whole-fleet configuration.
+pub struct FleetConfig {
+    /// one profile per device (heterogeneity lives here)
+    pub profiles: Vec<DeviceProfile>,
+    /// shared uplink capacity, bits/s (all devices contend for this)
+    pub uplink_bps: f64,
+    /// one-way propagation delay, seconds (both directions)
+    pub propagation_s: f64,
+    /// uniform jitter amplitude, seconds
+    pub jitter_s: f64,
+    /// requests each device issues over the run
+    pub requests_per_device: usize,
+    pub verifier: VerifierConfig,
+    /// synthetic-world parameters (shared draft/target tables)
+    pub vocab: usize,
+    pub mismatch: f64,
+    pub seed: u64,
+    /// record the exact event trace (determinism tests; large!)
+    pub record_trace: bool,
+}
+
+impl FleetConfig {
+    /// Default link/verifier/world parameters around explicit profiles.
+    pub fn with_profiles(profiles: Vec<DeviceProfile>) -> FleetConfig {
+        FleetConfig {
+            profiles,
+            uplink_bps: 1e6,
+            propagation_s: 0.010,
+            jitter_s: 0.0,
+            requests_per_device: 4,
+            verifier: VerifierConfig::default(),
+            vocab: 64,
+            mismatch: 0.6,
+            seed: 0,
+            record_trace: false,
+        }
+    }
+
+    /// A uniform fleet of `n` devices sharing one profile.
+    pub fn uniform(n: usize, profile: DeviceProfile) -> FleetConfig {
+        FleetConfig::with_profiles(vec![profile; n])
+    }
+}
+
+/// Deterministically varied device profiles around `base`: draft speed in
+/// [0.5x, 2x], downlink in [0.5x, 2x], Poisson rates jittered likewise.
+pub fn heterogeneous_profiles(n: usize, base: DeviceProfile, seed: u64) -> Vec<DeviceProfile> {
+    let mut rng = Pcg64::new(seed, 0xF1EE7B);
+    (0..n)
+        .map(|_| {
+            let mut p = base;
+            p.draft_token_s = base.draft_token_s * (0.5 + 1.5 * rng.next_f64());
+            p.downlink_bps = base.downlink_bps * (0.5 + 1.5 * rng.next_f64());
+            if let Workload::Poisson { rate_hz } = base.workload {
+                p.workload = Workload::Poisson { rate_hz: rate_hz * (0.5 + 1.5 * rng.next_f64()) };
+            }
+            p
+        })
+        .collect()
+}
+
+/// Round-robin policy mix over `base` (K-SQS / C-SQS / dense), for
+/// policy-contention comparisons inside one fleet.
+pub fn mixed_policy_profiles(n: usize, base: DeviceProfile) -> Vec<DeviceProfile> {
+    let policies = [
+        Policy::KSqs { k: 8 },
+        Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+        Policy::DenseQs,
+    ];
+    (0..n)
+        .map(|i| {
+            let mut p = base;
+            p.policy = policies[i % policies.len()];
+            p
+        })
+        .collect()
+}
+
+/// Per-device roll-up in the report.
+#[derive(Clone, Debug)]
+pub struct DeviceReport {
+    pub id: usize,
+    pub policy: String,
+    pub completed: usize,
+    pub tokens: u64,
+    pub batches: u64,
+    pub rejected_batches: u64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub uplink_bits: u64,
+}
+
+/// Aggregate outcome of a fleet run.
+pub struct FleetReport {
+    pub devices: usize,
+    pub horizon_s: f64,
+    pub completed: usize,
+    pub tokens: u64,
+    /// fleet-wide per-request latency
+    pub latency: Summary,
+    pub per_device: Vec<DeviceReport>,
+    pub uplink_utilization: f64,
+    pub uplink_mean_wait_s: f64,
+    pub uplink_bits: u64,
+    pub verify_calls: u64,
+    pub verify_mean_batch: f64,
+    pub verify_utilization: f64,
+    /// (policy name, rejected batches, total batches)
+    pub rejection_by_policy: Vec<(String, u64, u64)>,
+    /// drafted-token acceptance across the fleet
+    pub acceptance: f64,
+    pub trace: Vec<String>,
+    pub metrics: Metrics,
+}
+
+impl FleetReport {
+    /// Exact textual fingerprint for determinism tests: every float is
+    /// rendered via to_bits, so two runs match iff they are bit-identical.
+    pub fn digest(&self) -> String {
+        let mut s = format!(
+            "devices={} horizon={:016x} completed={} tokens={} lat_mean={:016x} \
+             lat_p99={:016x} up_util={:016x} up_bits={} verify_calls={} accept={:016x}",
+            self.devices,
+            self.horizon_s.to_bits(),
+            self.completed,
+            self.tokens,
+            self.latency.mean().to_bits(),
+            self.latency.p99().to_bits(),
+            self.uplink_utilization.to_bits(),
+            self.uplink_bits,
+            self.verify_calls,
+            self.acceptance.to_bits(),
+        );
+        for d in &self.per_device {
+            s.push_str(&format!(
+                "\ndev{} {} c={} t={} b={} r={} lat={:016x}",
+                d.id, d.policy, d.completed, d.tokens, d.batches, d.rejected_batches,
+                d.mean_latency_s.to_bits()
+            ));
+        }
+        s
+    }
+
+    /// Human-readable summary (the `sqs-sd fleet` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fleet: {} devices | {} requests ({} tokens) in {:.3}s virtual\n",
+            self.devices, self.completed, self.tokens, self.horizon_s
+        ));
+        out.push_str(&format!(
+            "latency/request: mean {:.4}s  p50 {:.4}s  p90 {:.4}s  p99 {:.4}s  max {:.4}s\n",
+            self.latency.mean(),
+            self.latency.p50(),
+            self.latency.percentile(90.0),
+            self.latency.p99(),
+            self.latency.max()
+        ));
+        out.push_str(&format!(
+            "uplink: {:.1}% utilized | mean queue wait {:.4}s | {} bits total\n",
+            100.0 * self.uplink_utilization,
+            self.uplink_mean_wait_s,
+            self.uplink_bits
+        ));
+        out.push_str(&format!(
+            "verify: {} calls | mean batch {:.2} windows | {:.1}% slot-utilized\n",
+            self.verify_calls,
+            self.verify_mean_batch,
+            100.0 * self.verify_utilization
+        ));
+        out.push_str(&format!("acceptance: {:.3}\n", self.acceptance));
+        out.push_str("rejection rate by policy:\n");
+        for (name, rej, total) in &self.rejection_by_policy {
+            let rate = if *total == 0 { 0.0 } else { *rej as f64 / *total as f64 };
+            out.push_str(&format!("  {name:<10} {rate:.3}  ({rej}/{total} batches)\n"));
+        }
+        out
+    }
+}
+
+/// The simulator: owns devices, the shared channel, the verifier, the
+/// event queue, and the metrics registry.
+pub struct FleetSim {
+    pub cfg: FleetConfig,
+    devices: Vec<Device>,
+    uplink: SharedUplink,
+    verifier: CloudVerifier,
+    events: EventQueue,
+    metrics: Metrics,
+    latency: Summary,
+    trace: Vec<String>,
+    horizon: f64,
+}
+
+/// Safety valve: no realistic run needs more events than this.
+const MAX_EVENTS: u64 = 50_000_000;
+
+impl FleetSim {
+    pub fn new(cfg: FleetConfig) -> FleetSim {
+        let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.seed ^ 0x57A7E);
+        let devices: Vec<Device> = cfg
+            .profiles
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Device::new(i, *p, &world, cfg.seed))
+            .collect();
+        let uplink = SharedUplink::new(cfg.uplink_bps, cfg.propagation_s, cfg.jitter_s, cfg.seed ^ 0x11F);
+        let verifier = CloudVerifier::new(cfg.verifier);
+        FleetSim {
+            cfg,
+            devices,
+            uplink,
+            verifier,
+            events: EventQueue::new(),
+            metrics: Metrics::new(),
+            latency: Summary::new(),
+            trace: Vec::new(),
+            horizon: 0.0,
+        }
+    }
+
+    /// Run to completion (all devices drain their request budget).
+    pub fn run(mut self) -> Result<FleetReport> {
+        // seed first arrivals: Poisson devices at their first draw, closed
+        // loop at t=0
+        if self.cfg.requests_per_device > 0 {
+            for d in 0..self.devices.len() {
+                let t0 = if self.devices[d].profile.workload.is_open_loop() {
+                    self.devices[d].next_gap()
+                } else {
+                    0.0
+                };
+                self.events.push(t0, d, EventKind::Arrival);
+            }
+        }
+
+        let mut processed = 0u64;
+        while let Some(ev) = self.events.pop() {
+            processed += 1;
+            if processed > MAX_EVENTS {
+                bail!("fleet sim exceeded {MAX_EVENTS} events — runaway loop?");
+            }
+            self.horizon = self.horizon.max(ev.t);
+            if self.cfg.record_trace {
+                self.trace.push(ev.trace_line());
+            }
+            self.dispatch(ev)?;
+        }
+        Ok(self.report())
+    }
+
+    fn dispatch(&mut self, ev: Event) -> Result<()> {
+        let now = ev.t;
+        let d = ev.device;
+        match ev.kind {
+            EventKind::Arrival => {
+                self.devices[d].generated += 1;
+                self.devices[d].queue.push_back(now);
+                self.metrics.inc("fleet.arrivals", 1);
+                if self.devices[d].profile.workload.is_open_loop()
+                    && self.devices[d].generated < self.cfg.requests_per_device
+                {
+                    let gap = self.devices[d].next_gap();
+                    self.events.push(now + gap, d, EventKind::Arrival);
+                }
+                if self.devices[d].active.is_none() {
+                    self.start_from_queue(d, now)?;
+                }
+            }
+            EventKind::DraftDone => {
+                let bits = self.devices[d].frame_bits();
+                self.devices[d].note_uplink(bits);
+                let (start, delivered) = self.uplink.reserve(now, bits);
+                self.metrics.observe("fleet.uplink_wait_s", start - now);
+                self.events.push(delivered, d, EventKind::UplinkDelivered);
+            }
+            EventKind::UplinkDelivered => {
+                self.verifier.enqueue(d);
+                self.start_verifies(now)?;
+            }
+            EventKind::VerifyDone => {
+                let fb_bits = self.devices[d].feedback_bits()?;
+                let prop = self.cfg.propagation_s;
+                let jit = self.cfg.jitter_s;
+                let t_down = self.devices[d].downlink_time(fb_bits, prop, jit);
+                self.events.push(now + t_down, d, EventKind::FeedbackDelivered);
+            }
+            EventKind::SlotFree => {
+                self.verifier.release_slot();
+                self.start_verifies(now)?;
+            }
+            EventKind::FeedbackDelivered => {
+                let done = self.devices[d].apply_feedback()?;
+                self.metrics.inc("fleet.batches", 1);
+                if done {
+                    self.finish_request(d, now)?;
+                } else {
+                    match self.devices[d].begin_batch()? {
+                        Some(draft_s) => {
+                            self.events.push(now + draft_s, d, EventKind::DraftDone)
+                        }
+                        // out of context room mid-request: close it out
+                        None => self.finish_request(d, now)?,
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Admission loop: start coalesced verify calls while slots are free.
+    fn start_verifies(&mut self, now: f64) -> Result<()> {
+        while self.verifier.slot_free() {
+            let batch = self.verifier.take_batch();
+            let mut total_window = 0usize;
+            for &dev in &batch {
+                total_window += self.devices[dev].verify_now()?;
+            }
+            let service = self.verifier.service_s(total_window);
+            let t_done = now + service;
+            for &dev in &batch {
+                self.events.push(t_done, dev, EventKind::VerifyDone);
+            }
+            self.events.push(t_done, batch[0], EventKind::SlotFree);
+            self.metrics.observe("fleet.verify_batch_windows", batch.len() as f64);
+        }
+        Ok(())
+    }
+
+    /// Request finished: record, possibly schedule the closed-loop
+    /// follow-up arrival, and pull the next queued request.
+    fn finish_request(&mut self, d: usize, now: f64) -> Result<()> {
+        let latency = self.devices[d].complete_request(now)?;
+        self.latency.add(latency);
+        self.metrics.observe("fleet.request_latency_s", latency);
+        self.metrics.inc("fleet.requests_completed", 1);
+        if !self.devices[d].profile.workload.is_open_loop()
+            && self.devices[d].generated < self.cfg.requests_per_device
+        {
+            let gap = self.devices[d].next_gap();
+            self.events.push(now + gap, d, EventKind::Arrival);
+        }
+        self.start_from_queue(d, now)
+    }
+
+    fn start_from_queue(&mut self, d: usize, now: f64) -> Result<()> {
+        if let Some(draft_s) = self.devices[d].start_next_request(now)? {
+            self.events.push(now + draft_s, d, EventKind::DraftDone);
+        }
+        Ok(())
+    }
+
+    fn report(self) -> FleetReport {
+        let FleetSim { devices, uplink, verifier, metrics, latency, trace, horizon, .. } = self;
+        let mut per_device = Vec::with_capacity(devices.len());
+        let mut by_policy: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        let (mut completed, mut tokens) = (0usize, 0u64);
+        let (mut drafted, mut accepted) = (0u64, 0u64);
+        for dev in &devices {
+            let st = &dev.stats;
+            completed += st.completed;
+            tokens += st.tokens;
+            drafted += st.drafted_tokens;
+            accepted += st.accepted_tokens;
+            let entry = by_policy.entry(dev.profile.policy.name().to_string()).or_insert((0, 0));
+            entry.0 += st.rejected_batches;
+            entry.1 += st.batches;
+            per_device.push(DeviceReport {
+                id: dev.id,
+                policy: dev.profile.policy.name().to_string(),
+                completed: st.completed,
+                tokens: st.tokens,
+                batches: st.batches,
+                rejected_batches: st.rejected_batches,
+                mean_latency_s: st.latency.mean(),
+                p99_latency_s: st.latency.p99(),
+                uplink_bits: st.uplink_bits,
+            });
+        }
+        metrics.inc("fleet.uplink_bits", uplink.ledger.bits);
+        metrics.inc("fleet.verify_calls", verifier.calls);
+        FleetReport {
+            devices: devices.len(),
+            horizon_s: horizon,
+            completed,
+            tokens,
+            latency,
+            per_device,
+            uplink_utilization: uplink.utilization(horizon),
+            uplink_mean_wait_s: uplink.mean_queue_wait_s(),
+            uplink_bits: uplink.ledger.bits,
+            verify_calls: verifier.calls,
+            verify_mean_batch: verifier.mean_batch(),
+            verify_utilization: verifier.utilization(horizon),
+            rejection_by_policy: by_policy
+                .into_iter()
+                .map(|(k, (r, t))| (k, r, t))
+                .collect(),
+            acceptance: if drafted == 0 { 0.0 } else { accepted as f64 / drafted as f64 },
+            trace,
+            metrics,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(n: usize, policy: Policy) -> FleetConfig {
+        let profile = DeviceProfile {
+            policy,
+            max_new_tokens: 16,
+            workload: Workload::ClosedLoop { think_s: 0.01 },
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(n, profile);
+        cfg.requests_per_device = 3;
+        cfg.seed = 42;
+        cfg
+    }
+
+    #[test]
+    fn fleet_completes_all_requests() {
+        let cfg = base_cfg(4, Policy::KSqs { k: 8 });
+        let report = FleetSim::new(cfg).run().unwrap();
+        assert_eq!(report.devices, 4);
+        assert_eq!(report.completed, 12, "4 devices x 3 requests");
+        assert_eq!(report.latency.count(), 12);
+        assert!(report.tokens >= 12 * 16, "each request makes >= max_new tokens");
+        assert!(report.horizon_s > 0.0);
+        assert!(report.uplink_bits > 0);
+        assert!(report.uplink_utilization > 0.0 && report.uplink_utilization <= 1.0);
+        assert_eq!(report.metrics.counter("fleet.requests_completed"), 12);
+        for d in &report.per_device {
+            assert_eq!(d.completed, 3);
+            assert!(d.mean_latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_digest() {
+        let mk = || {
+            let mut cfg = base_cfg(3, Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 });
+            cfg.record_trace = true;
+            cfg
+        };
+        let a = FleetSim::new(mk()).run().unwrap();
+        let b = FleetSim::new(mk()).run().unwrap();
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.digest(), b.digest());
+        assert!(!a.trace.is_empty());
+    }
+
+    #[test]
+    fn different_seed_different_trace() {
+        let mut ca = base_cfg(3, Policy::KSqs { k: 8 });
+        ca.record_trace = true;
+        let mut cb = base_cfg(3, Policy::KSqs { k: 8 });
+        cb.record_trace = true;
+        cb.seed = 43;
+        let a = FleetSim::new(ca).run().unwrap();
+        let b = FleetSim::new(cb).run().unwrap();
+        assert_ne!(a.trace, b.trace);
+    }
+
+    #[test]
+    fn poisson_open_loop_runs() {
+        let profile = DeviceProfile {
+            max_new_tokens: 8,
+            workload: Workload::Poisson { rate_hz: 5.0 },
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(3, profile);
+        cfg.requests_per_device = 4;
+        cfg.seed = 7;
+        let report = FleetSim::new(cfg).run().unwrap();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.metrics.counter("fleet.arrivals"), 12);
+    }
+
+    #[test]
+    fn verify_coalescing_batches_under_contention() {
+        // many devices, single verify slot, batching allowed: mean batch
+        // must exceed 1 once windows queue up
+        let mut cfg = base_cfg(8, Policy::KSqs { k: 8 });
+        cfg.verifier = VerifierConfig { concurrency: 1, batch_max: 8, base_s: 8e-3, per_token_s: 1e-4 };
+        let report = FleetSim::new(cfg).run().unwrap();
+        assert!(report.verify_mean_batch > 1.0, "mean batch {}", report.verify_mean_batch);
+        assert!(report.verify_calls > 0);
+    }
+
+    #[test]
+    fn tighter_uplink_does_not_reduce_mean_latency() {
+        let mk = |bps: f64| {
+            let profile = DeviceProfile {
+                max_new_tokens: 12,
+                workload: Workload::Poisson { rate_hz: 4.0 },
+                ..Default::default()
+            };
+            let mut cfg = FleetConfig::uniform(6, profile);
+            cfg.requests_per_device = 3;
+            cfg.seed = 5;
+            cfg.uplink_bps = bps;
+            // decouple the verifier so uplink is the only contended stage
+            cfg.verifier = VerifierConfig { concurrency: 6, batch_max: 1, ..Default::default() };
+            cfg
+        };
+        let fast = FleetSim::new(mk(2e6)).run().unwrap();
+        let slow = FleetSim::new(mk(1e6)).run().unwrap();
+        assert!(
+            slow.latency.mean() >= fast.latency.mean() - 1e-9,
+            "halved uplink reduced mean latency: {} < {}",
+            slow.latency.mean(),
+            fast.latency.mean()
+        );
+    }
+
+    #[test]
+    fn mixed_and_heterogeneous_profiles() {
+        let base = DeviceProfile { max_new_tokens: 8, ..Default::default() };
+        let mix = mixed_policy_profiles(6, base);
+        assert_eq!(mix.len(), 6);
+        assert_ne!(mix[0].policy, mix[1].policy);
+        let het = heterogeneous_profiles(6, base, 1);
+        assert_eq!(het.len(), 6);
+        assert!((0..6).any(|i| het[i].draft_token_s != base.draft_token_s));
+        let mut cfg = FleetConfig::with_profiles(mix);
+        cfg.requests_per_device = 2;
+        let report = FleetSim::new(cfg).run().unwrap();
+        assert_eq!(report.completed, 12);
+        assert!(report.rejection_by_policy.len() >= 2, "policies aggregated separately");
+    }
+}

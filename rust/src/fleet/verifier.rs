@@ -1,0 +1,162 @@
+//! Cloud verify server model: admission (at most `concurrency` verify
+//! calls in flight) plus batch coalescing (a free slot takes up to
+//! `batch_max` pending windows and serves them together, amortizing the
+//! per-call overhead — the fleet-scale knob the DSD/PipeSD line studies).
+//!
+//! The verifier owns only *timing and admission*; the actual acceptance
+//! test runs through each device's own `cloud::CloudNode` (per-request
+//! context), so the paper's exact-distribution guarantee is untouched by
+//! coalescing.  Service time for a coalesced batch of windows w_1..w_m is
+//!   base_s + per_token_s * (w_1 + ... + w_m)
+//! i.e. the fixed call overhead is paid once per slot, the token-parallel
+//! verify cost scales with the combined window.
+
+use std::collections::VecDeque;
+
+/// Cloud service-time and admission parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifierConfig {
+    /// max verify calls in flight (cloud replicas / streams)
+    pub concurrency: usize,
+    /// max pending windows coalesced into one call (1 = no batching)
+    pub batch_max: usize,
+    /// fixed seconds per verify call
+    pub base_s: f64,
+    /// seconds per window token in a call
+    pub per_token_s: f64,
+}
+
+impl Default for VerifierConfig {
+    fn default() -> Self {
+        // base cost matches exp::synthetic_default's llm_call_s; the
+        // per-token term makes batched calls cost more than lone ones
+        VerifierConfig { concurrency: 1, batch_max: 4, base_s: 4.0e-3, per_token_s: 2.0e-4 }
+    }
+}
+
+/// Admission state: FIFO of devices whose frames reached the cloud.
+pub struct CloudVerifier {
+    pub cfg: VerifierConfig,
+    pub pending: VecDeque<usize>,
+    pub in_flight: usize,
+    /// verify calls issued (slots used)
+    pub calls: u64,
+    /// windows served (>= calls when coalescing happens)
+    pub windows: u64,
+    /// busy seconds summed over slots (utilization vs concurrency*horizon)
+    pub busy_s: f64,
+}
+
+impl CloudVerifier {
+    pub fn new(cfg: VerifierConfig) -> CloudVerifier {
+        assert!(cfg.concurrency >= 1, "verifier needs >= 1 slot");
+        assert!(cfg.batch_max >= 1, "batch_max must be >= 1");
+        CloudVerifier { cfg, pending: VecDeque::new(), in_flight: 0, calls: 0, windows: 0, busy_s: 0.0 }
+    }
+
+    pub fn enqueue(&mut self, device: usize) {
+        self.pending.push_back(device);
+    }
+
+    /// Can a new call start right now?
+    pub fn slot_free(&self) -> bool {
+        self.in_flight < self.cfg.concurrency && !self.pending.is_empty()
+    }
+
+    /// Claim up to `batch_max` pending devices for one coalesced call.
+    pub fn take_batch(&mut self) -> Vec<usize> {
+        let m = self.pending.len().min(self.cfg.batch_max);
+        let batch: Vec<usize> = self.pending.drain(..m).collect();
+        if !batch.is_empty() {
+            self.in_flight += 1;
+            self.calls += 1;
+            self.windows += batch.len() as u64;
+        }
+        batch
+    }
+
+    /// Modeled service seconds for a call over `total_window_tokens`.
+    pub fn service_s(&mut self, total_window_tokens: usize) -> f64 {
+        let s = self.cfg.base_s + self.cfg.per_token_s * total_window_tokens as f64;
+        self.busy_s += s;
+        s
+    }
+
+    pub fn release_slot(&mut self) {
+        debug_assert!(self.in_flight > 0);
+        self.in_flight -= 1;
+    }
+
+    /// Mean windows per verify call (batching amortization achieved).
+    pub fn mean_batch(&self) -> f64 {
+        if self.calls == 0 { 0.0 } else { self.windows as f64 / self.calls as f64 }
+    }
+
+    /// Fraction of slot-seconds busy over `[0, horizon_s]`.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        let denom = horizon_s * self.cfg.concurrency as f64;
+        if denom > 0.0 { (self.busy_s / denom).min(1.0) } else { 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_respects_concurrency() {
+        let mut v = CloudVerifier::new(VerifierConfig {
+            concurrency: 2,
+            batch_max: 1,
+            ..Default::default()
+        });
+        for d in 0..5 {
+            v.enqueue(d);
+        }
+        assert_eq!(v.take_batch(), vec![0]);
+        assert_eq!(v.take_batch(), vec![1]);
+        assert!(!v.slot_free(), "both slots busy");
+        v.release_slot();
+        assert!(v.slot_free());
+        assert_eq!(v.take_batch(), vec![2]);
+    }
+
+    #[test]
+    fn coalescing_amortizes_base_cost() {
+        let mut v = CloudVerifier::new(VerifierConfig {
+            concurrency: 1,
+            batch_max: 4,
+            base_s: 4e-3,
+            per_token_s: 1e-4,
+        });
+        for d in 0..4 {
+            v.enqueue(d);
+        }
+        let batch = v.take_batch();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let coalesced = v.service_s(4 * 16);
+        // four separate calls would pay base 4x
+        let separate = 4.0 * (4e-3 + 1e-4 * 16.0);
+        assert!(coalesced < separate, "{coalesced} !< {separate}");
+        assert_eq!(v.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut v = CloudVerifier::new(VerifierConfig {
+            concurrency: 1,
+            batch_max: 2,
+            ..Default::default()
+        });
+        for d in [3usize, 1, 4, 1, 5] {
+            v.enqueue(d);
+        }
+        assert_eq!(v.take_batch(), vec![3, 1]);
+        v.release_slot();
+        assert_eq!(v.take_batch(), vec![4, 1]);
+        v.release_slot();
+        assert_eq!(v.take_batch(), vec![5]);
+        assert_eq!(v.windows, 5);
+        assert_eq!(v.calls, 3);
+    }
+}

@@ -1,0 +1,84 @@
+//! Workload arrival processes for fleet devices.
+//!
+//! Two standard shapes:
+//!  * open-loop Poisson — arrivals at `rate_hz` independent of service
+//!    (requests queue at the device when it is busy), the regime where
+//!    shared-uplink congestion compounds;
+//!  * closed loop — the next request is issued a fixed think time after
+//!    the previous one completes (classic interactive-client model; load
+//!    self-throttles under congestion).
+//!
+//! Inter-arrival draws come from a per-device seeded stream, so the fleet
+//! arrival pattern is reproducible and independent of event interleaving.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Workload {
+    /// Open loop: Poisson arrivals at `rate_hz` requests/second.
+    Poisson { rate_hz: f64 },
+    /// Closed loop: next request `think_s` seconds after completion.
+    ClosedLoop { think_s: f64 },
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Poisson { .. } => "poisson",
+            Workload::ClosedLoop { .. } => "closed",
+        }
+    }
+
+    /// Is load generated independently of completions?
+    pub fn is_open_loop(&self) -> bool {
+        matches!(self, Workload::Poisson { .. })
+    }
+
+    /// Draw the next inter-arrival gap (Poisson) or think gap (closed
+    /// loop), seconds.
+    pub fn next_gap(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            Workload::Poisson { rate_hz } => {
+                // inverse-CDF exponential; 1-u in (0,1] so ln() is finite
+                let u = rng.next_f64();
+                -(1.0 - u).ln() / rate_hz.max(1e-12)
+            }
+            Workload::ClosedLoop { think_s } => *think_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_matches_rate() {
+        let w = Workload::Poisson { rate_hz: 4.0 };
+        let mut rng = Pcg64::new(11, 0);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| w.next_gap(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean gap {mean} != 1/rate");
+    }
+
+    #[test]
+    fn closed_loop_gap_is_fixed() {
+        let w = Workload::ClosedLoop { think_s: 0.125 };
+        let mut rng = Pcg64::new(1, 1);
+        for _ in 0..10 {
+            assert_eq!(w.next_gap(&mut rng), 0.125);
+        }
+        assert!(!w.is_open_loop());
+        assert!(Workload::Poisson { rate_hz: 1.0 }.is_open_loop());
+    }
+
+    #[test]
+    fn gaps_reproducible_per_seed() {
+        let w = Workload::Poisson { rate_hz: 2.0 };
+        let mut a = Pcg64::new(3, 3);
+        let mut b = Pcg64::new(3, 3);
+        for _ in 0..50 {
+            assert_eq!(w.next_gap(&mut a).to_bits(), w.next_gap(&mut b).to_bits());
+        }
+    }
+}

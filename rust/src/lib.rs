@@ -12,6 +12,7 @@ pub mod cloud;
 pub mod coordinator;
 pub mod edge;
 pub mod exp;
+pub mod fleet;
 pub mod model;
 pub mod codec;
 pub mod runtime;

@@ -4,6 +4,7 @@
 //!   run      one prompt through the full SD pipeline, print text + stats
 //!   serve    TCP serving front-end (see server module for the protocol)
 //!   sweep    temperature sweep for a policy, CSV to stdout
+//!   fleet    multi-device discrete-event simulation on a shared uplink
 //!   inspect  print the artifact manifest / model card
 //!
 //! `sqs-sd <subcommand> --help` lists options.
@@ -12,6 +13,10 @@ use anyhow::{anyhow, bail, Result};
 
 use sqs_sd::channel::LinkConfig;
 use sqs_sd::coordinator::{PjrtStack, SessionConfig, TimingMode};
+use sqs_sd::fleet::{
+    heterogeneous_profiles, mixed_policy_profiles, DeviceProfile, FleetConfig, FleetSim,
+    VerifierConfig, Workload,
+};
 use sqs_sd::model::{decode, encode};
 use sqs_sd::runtime::Manifest;
 use sqs_sd::server::{serve, ServerConfig};
@@ -25,12 +30,14 @@ fn main() {
         "run" => cmd_run(argv),
         "serve" => cmd_serve(argv),
         "sweep" => cmd_sweep(argv),
+        "fleet" => cmd_fleet(argv),
         "inspect" => cmd_inspect(argv),
         "help" | "--help" | "-h" => {
             println!(
                 "sqs-sd — bandwidth-efficient edge-cloud speculative decoding\n\n\
                  subcommands:\n  run      generate a completion for a prompt\n  \
                  serve    TCP serving front-end\n  sweep    temperature sweep (CSV)\n  \
+                 fleet    multi-device fleet simulation (shared uplink)\n  \
                  inspect  print the artifact manifest\n\n\
                  run `sqs-sd <subcommand> --help` for options"
             );
@@ -67,16 +74,21 @@ fn policy_opts(a: Args) -> Args {
         .opt("ell", "100", "lattice resolution")
         .opt("budget", "5000", "per-batch uplink budget B in bits")
         .opt("uplink-bps", "1000000", "uplink bandwidth, bits/s")
+        .opt("downlink-bps", "0", "downlink bandwidth, bits/s (0 = 10x uplink)")
         .opt("rtt-ms", "20", "round-trip propagation, milliseconds")
+        .opt("jitter-ms", "0", "uniform link jitter amplitude, milliseconds")
         .opt("seed", "0", "rng seed")
 }
 
 fn link_from(a: &Args) -> Result<LinkConfig> {
+    let uplink = a.get_f64("uplink-bps").map_err(|e| anyhow!(e))?;
+    let downlink = a.get_f64("downlink-bps").map_err(|e| anyhow!(e))?;
     Ok(LinkConfig {
-        uplink_bps: a.get_f64("uplink-bps").map_err(|e| anyhow!(e))?,
-        downlink_bps: 10.0 * a.get_f64("uplink-bps").map_err(|e| anyhow!(e))?,
+        uplink_bps: uplink,
+        // 0 keeps the historical 10:1 downlink asymmetry
+        downlink_bps: if downlink > 0.0 { downlink } else { 10.0 * uplink },
         propagation_s: a.get_f64("rtt-ms").map_err(|e| anyhow!(e))? / 2.0 / 1000.0,
-        jitter_s: 0.0,
+        jitter_s: a.get_f64("jitter-ms").map_err(|e| anyhow!(e))? / 1000.0,
     })
 }
 
@@ -192,6 +204,120 @@ fn cmd_sweep(argv: Vec<String>) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_fleet(argv: Vec<String>) -> Result<()> {
+    let a = policy_opts(Args::new(
+        "sqs-sd fleet",
+        "deterministic multi-device simulation: N edge devices share one \
+         uplink and a bounded-concurrency cloud verifier",
+    ))
+    .opt("devices", "32", "number of edge devices")
+    .opt("requests", "4", "requests per device")
+    .opt("max-tokens", "32", "tokens per request")
+    .opt("arrival", "closed", "workload: poisson|closed")
+    .opt("rate", "2.0", "poisson arrival rate per device, req/s")
+    .opt("think-ms", "10", "closed-loop think time, milliseconds")
+    .opt("verify-concurrency", "2", "concurrent cloud verify calls")
+    .opt("verify-batch", "4", "max windows coalesced per verify call")
+    .opt("verify-base-ms", "4.0", "fixed cost per verify call, ms")
+    .opt("verify-token-ms", "0.2", "cost per window token in a call, ms")
+    .opt("draft-token-ms", "1.2", "modeled SLM cost per drafted token, ms")
+    .opt("vocab", "64", "synthetic vocabulary size")
+    .opt("mismatch", "0.6", "draft-target mismatch (synthetic world)")
+    .flag("heterogeneous", "vary draft speed / downlink / rate per device")
+    .flag("mixed", "round-robin ksqs/csqs/dense policies (overrides --policy)")
+    .flag("trace", "print the exact event trace before the summary")
+    .parse_from(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+
+    let link = link_from(&a)?;
+    let seed = a.get_u64("seed").map_err(|e| anyhow!(e))?;
+    let n = a.get_usize("devices").map_err(|e| anyhow!(e))?;
+    let max_tokens = a.get_usize("max-tokens").map_err(|e| anyhow!(e))?;
+    let concurrency = a.get_usize("verify-concurrency").map_err(|e| anyhow!(e))?;
+    let batch_max = a.get_usize("verify-batch").map_err(|e| anyhow!(e))?;
+    if n == 0 {
+        bail!("--devices must be >= 1");
+    }
+    if link.uplink_bps <= 0.0 {
+        bail!("--uplink-bps must be > 0");
+    }
+    if max_tokens == 0 {
+        bail!("--max-tokens must be >= 1");
+    }
+    if concurrency == 0 {
+        bail!("--verify-concurrency must be >= 1");
+    }
+    if batch_max == 0 {
+        bail!("--verify-batch must be >= 1");
+    }
+    let vocab = a.get_usize("vocab").map_err(|e| anyhow!(e))?;
+    if vocab == 0 {
+        bail!("--vocab must be >= 1");
+    }
+    for flag in ["rate", "think-ms", "draft-token-ms", "verify-base-ms", "verify-token-ms"] {
+        if a.get_f64(flag).map_err(|e| anyhow!(e))? < 0.0 {
+            bail!("--{flag} must be >= 0");
+        }
+    }
+    let workload = match a.get("arrival").as_str() {
+        "poisson" => Workload::Poisson { rate_hz: a.get_f64("rate").map_err(|e| anyhow!(e))? },
+        "closed" => Workload::ClosedLoop {
+            think_s: a.get_f64("think-ms").map_err(|e| anyhow!(e))? / 1e3,
+        },
+        other => bail!("unknown arrival process '{other}' (poisson|closed)"),
+    };
+    let base = DeviceProfile {
+        policy: parse_policy(&a)?,
+        temp: a.get_f64("temp").map_err(|e| anyhow!(e))? as f32,
+        ell: a.get_usize("ell").map_err(|e| anyhow!(e))? as u32,
+        budget_bits: a.get_usize("budget").map_err(|e| anyhow!(e))?,
+        max_new_tokens: max_tokens,
+        draft_token_s: a.get_f64("draft-token-ms").map_err(|e| anyhow!(e))? / 1e3,
+        downlink_bps: link.downlink_bps,
+        workload,
+        ..Default::default()
+    };
+    // --heterogeneous and --mixed compose: vary the hardware, then
+    // overlay the round-robin policy mix
+    let mut profiles = if a.get_flag("heterogeneous") {
+        heterogeneous_profiles(n, base, seed)
+    } else {
+        vec![base; n]
+    };
+    if a.get_flag("mixed") {
+        for (p, m) in profiles.iter_mut().zip(mixed_policy_profiles(n, base)) {
+            p.policy = m.policy;
+        }
+    }
+    let cfg = FleetConfig {
+        profiles,
+        uplink_bps: link.uplink_bps,
+        propagation_s: link.propagation_s,
+        jitter_s: link.jitter_s,
+        requests_per_device: a.get_usize("requests").map_err(|e| anyhow!(e))?,
+        verifier: VerifierConfig {
+            concurrency,
+            batch_max,
+            base_s: a.get_f64("verify-base-ms").map_err(|e| anyhow!(e))? / 1e3,
+            per_token_s: a.get_f64("verify-token-ms").map_err(|e| anyhow!(e))? / 1e3,
+        },
+        vocab,
+        mismatch: a.get_f64("mismatch").map_err(|e| anyhow!(e))?,
+        seed,
+        record_trace: a.get_flag("trace"),
+    };
+    let report = FleetSim::new(cfg).run()?;
+    if a.get_flag("trace") {
+        for line in &report.trace {
+            println!("{line}");
+        }
+    }
+    print!("{}", report.render());
+    println!("--- metrics ---");
+    print!("{}", report.metrics.render_table());
     Ok(())
 }
 

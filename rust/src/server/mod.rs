@@ -5,7 +5,11 @@
 //!       "temp": 0.8, "k": 8, "beta0": 0.01, "alpha": 0.0005, "eta": 0.001}
 //!   <- {"id": 1, "text": "...", "tokens": 32, "batches": 5,
 //!       "resampling_rate": 0.2, "acceptance": 0.81,
-//!       "bits_per_token": 92.5, "latency_s": 0.41, ...}
+//!       "bits_per_token": 92.5, "latency_s": 0.41,
+//!       "uplink_bits": 2960, "t_downlink_s": 0.05, ...}
+//!
+//! The per-direction ledger fields (`uplink_bits`, `t_uplink_s`,
+//! `t_downlink_s`) let clients observe bandwidth use per request.
 //!
 //! Architecture: acceptor threads feed a shared request channel; a single
 //! inference thread owns the (thread-bound) PJRT stack and serves requests
@@ -176,6 +180,8 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
                             ("t_slm_s", Json::Num(res.t_slm_s)),
                             ("t_uplink_s", Json::Num(res.t_uplink_s)),
                             ("t_llm_s", Json::Num(res.t_llm_s)),
+                            ("t_downlink_s", Json::Num(res.t_downlink_s)),
+                            ("uplink_bits", Json::Num(res.uplink_bits as f64)),
                             ("mean_k", Json::Num(res.mean_k())),
                         ])
                     }

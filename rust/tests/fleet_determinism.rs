@@ -1,0 +1,115 @@
+//! Fleet-simulator contract tests: (1) bit-identical reproducibility —
+//! same seed + config must give the same event trace and the same metrics
+//! digest across independent runs; (2) contention sanity — tightening the
+//! shared uplink must not make the fleet faster.
+
+use sqs_sd::fleet::{
+    mixed_policy_profiles, DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload,
+};
+use sqs_sd::sqs::Policy;
+
+fn fleet_cfg(seed: u64, uplink_bps: f64, record_trace: bool) -> FleetConfig {
+    let base = DeviceProfile {
+        policy: Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+        max_new_tokens: 16,
+        workload: Workload::Poisson { rate_hz: 3.0 },
+        ..Default::default()
+    };
+    let mut cfg = FleetConfig::with_profiles(mixed_policy_profiles(9, base));
+    cfg.uplink_bps = uplink_bps;
+    cfg.jitter_s = 0.002; // exercise the seeded jitter path too
+    cfg.requests_per_device = 3;
+    cfg.verifier = VerifierConfig { concurrency: 2, batch_max: 4, ..Default::default() };
+    cfg.seed = seed;
+    cfg.record_trace = record_trace;
+    cfg
+}
+
+#[test]
+fn same_seed_and_config_is_bit_identical() {
+    let a = FleetSim::new(fleet_cfg(2024, 1e6, true)).run().unwrap();
+    let b = FleetSim::new(fleet_cfg(2024, 1e6, true)).run().unwrap();
+
+    assert!(!a.trace.is_empty());
+    assert_eq!(a.trace.len(), b.trace.len(), "event counts differ");
+    for (i, (la, lb)) in a.trace.iter().zip(&b.trace).enumerate() {
+        assert_eq!(la, lb, "traces diverge at event {i}");
+    }
+    assert_eq!(a.digest(), b.digest(), "metrics digests differ");
+
+    // the digest covers floats via to_bits; spot-check raw aggregates too
+    assert_eq!(a.completed, 27);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.uplink_bits, b.uplink_bits);
+    assert_eq!(a.verify_calls, b.verify_calls);
+    assert_eq!(a.horizon_s.to_bits(), b.horizon_s.to_bits());
+    assert_eq!(a.latency.mean().to_bits(), b.latency.mean().to_bits());
+}
+
+#[test]
+fn different_seeds_diverge() {
+    let a = FleetSim::new(fleet_cfg(1, 1e6, true)).run().unwrap();
+    let b = FleetSim::new(fleet_cfg(2, 1e6, true)).run().unwrap();
+    assert_ne!(a.trace, b.trace, "seeds must matter");
+}
+
+#[test]
+fn halving_shared_uplink_does_not_decrease_mean_latency() {
+    // Decouple the verifier (one slot per device, no coalescing) and use
+    // zero jitter + open-loop arrivals so the uplink is the only coupled
+    // stage: every frame's delivery can then only get later at half rate.
+    let mk = |bps: f64| {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 16,
+            workload: Workload::Poisson { rate_hz: 4.0 },
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(8, base);
+        cfg.uplink_bps = bps;
+        cfg.jitter_s = 0.0;
+        cfg.requests_per_device = 4;
+        cfg.verifier = VerifierConfig { concurrency: 8, batch_max: 1, ..Default::default() };
+        cfg.seed = 7;
+        cfg
+    };
+    let full = FleetSim::new(mk(1e6)).run().unwrap();
+    let half = FleetSim::new(mk(5e5)).run().unwrap();
+
+    assert_eq!(full.completed, half.completed, "same workload either way");
+    assert!(
+        half.latency.mean() >= full.latency.mean() - 1e-9,
+        "halving uplink capacity decreased mean latency: {} < {}",
+        half.latency.mean(),
+        full.latency.mean()
+    );
+    assert!(
+        half.uplink_utilization >= full.uplink_utilization - 1e-9,
+        "tighter link should be at least as utilized"
+    );
+    assert!(half.horizon_s >= full.horizon_s - 1e-9);
+}
+
+#[test]
+fn report_aggregates_are_consistent() {
+    let r = FleetSim::new(fleet_cfg(11, 1e6, false)).run().unwrap();
+    assert!(r.trace.is_empty(), "trace off by default");
+    let dev_completed: usize = r.per_device.iter().map(|d| d.completed).sum();
+    let dev_tokens: u64 = r.per_device.iter().map(|d| d.tokens).sum();
+    let dev_bits: u64 = r.per_device.iter().map(|d| d.uplink_bits).sum();
+    assert_eq!(dev_completed, r.completed);
+    assert_eq!(dev_tokens, r.tokens);
+    assert_eq!(dev_bits, r.uplink_bits, "device ledgers must match the channel ledger");
+    let batch_total: u64 = r.rejection_by_policy.iter().map(|(_, _, t)| *t).sum();
+    let dev_batches: u64 = r.per_device.iter().map(|d| d.batches).sum();
+    assert_eq!(batch_total, dev_batches);
+    assert!(r.rejection_by_policy.len() == 3, "ksqs/csqs/dense all present");
+    assert!((0.0..=1.0).contains(&r.acceptance));
+    assert!(r.verify_mean_batch >= 1.0);
+    // metrics registry agrees with the report
+    assert_eq!(r.metrics.counter("fleet.requests_completed") as usize, r.completed);
+    assert_eq!(r.metrics.counter("fleet.uplink_bits"), r.uplink_bits);
+    let lat = r.metrics.summary("fleet.request_latency_s").unwrap();
+    assert_eq!(lat.count(), r.completed as u64);
+}
