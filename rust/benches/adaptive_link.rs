@@ -1,0 +1,200 @@
+//! ADAPT — link-adaptive control-plane study: bandwidth steps and drops,
+//! static knobs vs AIMD-on-K vs acceptance-driven draft windows.
+//!
+//!   cargo bench --bench adaptive_link
+//!
+//! Single sessions run over a `SimulatedLink` with a *scheduled* uplink
+//! bandwidth (a mid-run drop to 250 kbit/s, a mid-run step up to
+//! 4 Mbit/s), then a small fleet contends for a congested shared uplink
+//! with per-device control loops.  Expected shape: `static` ships the
+//! same wire bits per round regardless of the channel and overshoots the
+//! uplink budget; `aimd` holds mean wire bits per round near the
+//! configured target (within ~10% at these operating points); `window`
+//! shrinks ℓ when acceptance collapses and so fails faster per round.
+//! Everything runs in virtual time — results are bit-reproducible.
+//!
+//! Outputs: results/adaptive_link.csv (per-session rows) and
+//! results/BENCH_adaptive.json (p50/p95 latency, bits/token,
+//! bits/round — the cross-PR perf trajectory).
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::control::AdaptiveMode;
+use sqs_sd::coordinator::{SdSession, SessionConfig, SessionResult, TimingMode};
+use sqs_sd::exp::{fast_mode, write_json_summary, CsvOut};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+use sqs_sd::util::json::Json;
+use sqs_sd::util::stats::Summary;
+
+/// AIMD wire-budget target, bits per round (the congested-regime budget;
+/// static's fixed knobs ship ~2x this).
+const TARGET_BITS: usize = 600;
+
+fn run_session(mode: AdaptiveMode, schedule: &[(u64, f64)], seed: u64,
+               max_new: usize) -> anyhow::Result<SessionResult> {
+    let world = SyntheticWorld::new(64, 0.6, 2024);
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 15, 1_000_000);
+    let link_cfg = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.010,
+        jitter_s: 0.0,
+    };
+    let link = SimulatedLink::new(link_cfg, seed)
+        .with_uplink_schedule(schedule.to_vec());
+    let cfg = SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.9,
+        max_new_tokens: max_new,
+        seed,
+        timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
+        adaptive: mode,
+        ..Default::default()
+    };
+    let mut sess = SdSession::new(draft, target, link, cfg);
+    sess.run(&[7, 21, 42])
+}
+
+fn main() -> anyhow::Result<()> {
+    let sessions = if fast_mode() { 4 } else { 8 };
+    let max_new = if fast_mode() { 96 } else { 160 };
+    let modes: [(&str, AdaptiveMode); 3] = [
+        ("static", AdaptiveMode::Off),
+        ("aimd", AdaptiveMode::Aimd { target_bits: TARGET_BITS }),
+        ("window", AdaptiveMode::Window { grow: 0.8, shrink: 0.5 }),
+    ];
+    // uplink schedules keyed by frame (= round) index
+    let scenarios: [(&str, Vec<(u64, f64)>); 3] = [
+        ("steady", vec![]),
+        ("drop", vec![(10, 2.5e5)]),
+        ("step", vec![(10, 4e6)]),
+    ];
+
+    println!("== ADAPT: control-plane mode x bandwidth scenario ==");
+    println!(
+        "{:<8} {:<8} {:>12} {:>12} {:>12} {:>10}",
+        "mode", "scenario", "latency_s", "bits/tok", "bits/round", "batches"
+    );
+    let mut csv = CsvOut::new(
+        "adaptive_link.csv",
+        "mode,scenario,seed,latency_s,ms_per_token,bits_per_token,\
+         mean_bits_per_round,batches,acceptance",
+    );
+    let mut points = Vec::new();
+    let mut drop_bpr = std::collections::BTreeMap::new();
+
+    for (mode_name, mode) in &modes {
+        for (scen_name, schedule) in &scenarios {
+            let mut lat = Summary::new();
+            let mut bpt = Summary::new();
+            let mut bpr = Summary::new();
+            let mut batches = Summary::new();
+            for s in 0..sessions {
+                let seed = 1000 + s as u64 * 7919;
+                let r = run_session(*mode, schedule, seed, max_new)?;
+                lat.add(r.total_time_s);
+                bpt.add(r.bits_per_token());
+                bpr.add(r.mean_bits_per_round());
+                batches.add(r.batches.len() as f64);
+                csv.row(format!(
+                    "{mode_name},{scen_name},{seed},{},{},{},{},{},{}",
+                    r.total_time_s,
+                    1e3 * r.latency_per_token(),
+                    r.bits_per_token(),
+                    r.mean_bits_per_round(),
+                    r.batches.len(),
+                    r.acceptance_rate(),
+                ));
+            }
+            println!(
+                "{mode_name:<8} {scen_name:<8} {:>12.4} {:>12.1} {:>12.1} {:>10.1}",
+                lat.mean(),
+                bpt.mean(),
+                bpr.mean(),
+                batches.mean()
+            );
+            if *scen_name == "drop" {
+                drop_bpr.insert(mode_name.to_string(), bpr.mean());
+            }
+            points.push(Json::obj(vec![
+                ("mode", Json::Str(mode_name.to_string())),
+                ("scenario", Json::Str(scen_name.to_string())),
+                ("latency_p50_s", Json::Num(lat.p50())),
+                ("latency_p95_s", Json::Num(lat.percentile(95.0))),
+                ("bits_per_token", Json::Num(bpt.mean())),
+                ("bits_per_round", Json::Num(bpr.mean())),
+            ]));
+        }
+    }
+
+    // ---- fleet: adaptive devices on a congested shared uplink ----------
+    println!("\n== ADAPT-FLEET: 12 devices, 250 kbit/s shared uplink ==");
+    let mut fleet_points = Vec::new();
+    for (mode_name, mode) in &modes {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 24,
+            workload: Workload::Poisson { rate_hz: 2.0 },
+            adaptive: *mode,
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(12, base);
+        cfg.uplink_bps = 2.5e5;
+        cfg.requests_per_device = if fast_mode() { 2 } else { 4 };
+        cfg.verifier = VerifierConfig { concurrency: 4, batch_max: 8, ..Default::default() };
+        cfg.seed = 4242;
+        let r = FleetSim::new(cfg).run()?;
+        let fleet_bpr = r.mean_bits_per_round();
+        let fleet_bpt = r.bits_per_token();
+        println!(
+            "{mode_name:<8} latency mean {:.4}s p99 {:.4}s | uplink {:.1}% | \
+             {:.0} bits/round | {:.1} bits/tok",
+            r.latency.mean(),
+            r.latency.p99(),
+            100.0 * r.uplink_utilization,
+            fleet_bpr,
+            fleet_bpt
+        );
+        fleet_points.push(Json::obj(vec![
+            ("mode", Json::Str(mode_name.to_string())),
+            ("latency_p50_s", Json::Num(r.latency.p50())),
+            ("latency_p95_s", Json::Num(r.latency.percentile(95.0))),
+            ("uplink_utilization", Json::Num(r.uplink_utilization)),
+            ("bits_per_round", Json::Num(fleet_bpr)),
+            ("bits_per_token", Json::Num(fleet_bpt)),
+        ]));
+    }
+    csv.finish();
+
+    write_json_summary(
+        "BENCH_adaptive.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("adaptive_link".into())),
+            ("target_bits", Json::Num(TARGET_BITS as f64)),
+            ("sessions_per_point", Json::Num(sessions as f64)),
+            ("points", Json::Arr(points)),
+            ("fleet", Json::Arr(fleet_points)),
+        ]),
+    );
+
+    // ---- shape check: AIMD must hold the wire budget under the drop ----
+    println!("\n-- shape check: bits/round vs the {TARGET_BITS}b budget (drop scenario) --");
+    let aimd = drop_bpr.get("aimd").copied().unwrap_or(0.0);
+    let stat = drop_bpr.get("static").copied().unwrap_or(0.0);
+    let dev = (aimd - TARGET_BITS as f64).abs() / TARGET_BITS as f64;
+    println!(
+        "aimd   : {:.0} bits/round ({:+.1}% of target) {}",
+        aimd,
+        100.0 * (aimd / TARGET_BITS as f64 - 1.0),
+        if dev <= 0.10 { "— HOLDS" } else { "— ANOMALY (>10% off target)" }
+    );
+    println!(
+        "static : {:.0} bits/round ({:+.1}% of target) {}",
+        stat,
+        100.0 * (stat / TARGET_BITS as f64 - 1.0),
+        if stat > TARGET_BITS as f64 { "— overshoots, as expected" } else { "— ANOMALY" }
+    );
+    Ok(())
+}

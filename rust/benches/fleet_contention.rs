@@ -11,9 +11,10 @@
 //! saturated queue.  Everything runs in virtual time — results are
 //! bit-reproducible and host-independent.
 
-use sqs_sd::exp::{fast_mode, CsvOut};
+use sqs_sd::exp::{fast_mode, write_json_summary, CsvOut};
 use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload};
 use sqs_sd::sqs::Policy;
+use sqs_sd::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let fleet_sizes: Vec<usize> = if fast_mode() { vec![2, 8, 16] } else { vec![2, 8, 32] };
@@ -36,6 +37,7 @@ fn main() -> anyhow::Result<()> {
          uplink_utilization,uplink_mean_wait_s,rejection_rate,acceptance,\
          verify_mean_batch,bits_per_token",
     );
+    let mut points = Vec::new();
 
     for (name, policy) in &policies {
         for &n in &fleet_sizes {
@@ -60,8 +62,7 @@ fn main() -> anyhow::Result<()> {
                     .map(|(_, rj, t)| (*rj, *t))
                     .fold((0u64, 0u64), |acc, x| (acc.0 + x.0, acc.1 + x.1));
                 let rejection = if tot == 0 { 0.0 } else { rej as f64 / tot as f64 };
-                let bits_per_token =
-                    if r.tokens == 0 { 0.0 } else { r.uplink_bits as f64 / r.tokens as f64 };
+                let bits_per_token = r.bits_per_token();
 
                 println!(
                     "{name:<8} {n:>8} {bps:>12.0} {:>12.4} {:>12.4} {:>10.3} {:>10.4} {:>10.3}",
@@ -83,11 +84,27 @@ fn main() -> anyhow::Result<()> {
                     r.verify_mean_batch,
                     bits_per_token
                 ));
+                points.push(Json::obj(vec![
+                    ("policy", Json::Str(name.to_string())),
+                    ("devices", Json::Num(n as f64)),
+                    ("uplink_bps", Json::Num(bps)),
+                    ("latency_p50_s", Json::Num(r.latency.p50())),
+                    ("latency_p95_s", Json::Num(r.latency.percentile(95.0))),
+                    ("bits_per_token", Json::Num(bits_per_token)),
+                ]));
             }
         }
         println!();
     }
     csv.finish();
+    write_json_summary(
+        "BENCH_fleet.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("fleet_contention".into())),
+            ("requests_per_device", Json::Num(requests as f64)),
+            ("points", Json::Arr(points)),
+        ]),
+    );
 
     println!("-- shape check: congestion must not help --");
     for (name, policy) in &policies {

@@ -52,6 +52,12 @@ pub struct SimulatedLink {
     pub up: Ledger,
     pub down: Ledger,
     rng: crate::util::rng::Pcg64,
+    /// scheduled uplink-bandwidth steps `(uplink frame index, new bps)`,
+    /// sorted ascending; step `(n, bps)` applies from the n-th uplink
+    /// frame (0-based) onward.  Deterministic in frame count, not wall
+    /// clock, so stepped-link experiments stay bit-reproducible.
+    schedule: Vec<(u64, f64)>,
+    next_step: usize,
 }
 
 impl SimulatedLink {
@@ -61,7 +67,19 @@ impl SimulatedLink {
             up: Ledger::default(),
             down: Ledger::default(),
             rng: crate::util::rng::Pcg64::new(seed, 0xC4A77E1),
+            schedule: Vec::new(),
+            next_step: 0,
         }
+    }
+
+    /// Attach an uplink-bandwidth schedule (e.g. a mid-session drop:
+    /// `vec![(20, 2.5e5)]` halves nothing until frame 20, then caps the
+    /// uplink at 250 kbit/s).  Steps apply in frame-index order.
+    pub fn with_uplink_schedule(mut self, mut steps: Vec<(u64, f64)>) -> Self {
+        steps.sort_by(|a, b| a.0.cmp(&b.0));
+        self.schedule = steps;
+        self.next_step = 0;
+        self
     }
 
     fn jitter(&mut self) -> f64 {
@@ -74,6 +92,12 @@ impl SimulatedLink {
 
     /// Send `bits` up; returns the simulated one-way latency in seconds.
     pub fn send_uplink(&mut self, bits: usize) -> f64 {
+        while self.next_step < self.schedule.len()
+            && self.schedule[self.next_step].0 <= self.up.frames
+        {
+            self.cfg.uplink_bps = self.schedule[self.next_step].1;
+            self.next_step += 1;
+        }
         let t = bits as f64 / self.cfg.uplink_bps + self.cfg.propagation_s + self.jitter();
         self.up.frames += 1;
         self.up.bits += bits as u64;
@@ -119,6 +143,37 @@ mod tests {
         assert_eq!(link.up.bits, total);
         assert_eq!(link.up.frames, 100);
         assert_eq!(link.down.frames, 0);
+    }
+
+    #[test]
+    fn uplink_schedule_steps_bandwidth_at_frame_index() {
+        let cfg = LinkConfig {
+            uplink_bps: 1000.0,
+            downlink_bps: 1e6,
+            propagation_s: 0.0,
+            jitter_s: 0.0,
+        };
+        let mut link = SimulatedLink::new(cfg, 0)
+            .with_uplink_schedule(vec![(4, 250.0), (2, 500.0)]); // unsorted on purpose
+        let mut times = Vec::new();
+        for _ in 0..6 {
+            times.push(link.send_uplink(1000));
+        }
+        // frames 0-1 @1kbps, 2-3 @500bps, 4-5 @250bps
+        assert!((times[0] - 1.0).abs() < 1e-12 && (times[1] - 1.0).abs() < 1e-12);
+        assert!((times[2] - 2.0).abs() < 1e-12 && (times[3] - 2.0).abs() < 1e-12);
+        assert!((times[4] - 4.0).abs() < 1e-12 && (times[5] - 4.0).abs() < 1e-12);
+        assert_eq!(link.up.frames, 6);
+    }
+
+    #[test]
+    fn empty_schedule_changes_nothing() {
+        let mut plain = SimulatedLink::new(LinkConfig::default(), 9);
+        let mut scheduled = SimulatedLink::new(LinkConfig::default(), 9)
+            .with_uplink_schedule(Vec::new());
+        for bits in [100usize, 5000, 1, 777] {
+            assert_eq!(plain.send_uplink(bits).to_bits(), scheduled.send_uplink(bits).to_bits());
+        }
     }
 
     #[test]

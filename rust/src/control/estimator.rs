@@ -1,0 +1,245 @@
+//! LinkEstimator: deterministic channel/feedback state estimation.
+//!
+//! Every estimate is derived purely from the session's own ledger — the
+//! simulated uplink times, the frame sizes the codec produced, and the
+//! cloud's accept/reject feedback.  No wall clock, no RNG: feeding the
+//! same observation sequence always yields the same state, which is what
+//! keeps adaptive fleet runs bit-reproducible (see tests in
+//! `tests/fleet_determinism.rs`).
+
+use super::policy::BatchOutcome;
+
+/// Exponentially-weighted moving average, initialized on first sample.
+///
+/// `gamma` is the weight on history (0 = last sample only, ->1 = long
+/// memory).  Because the value is always a convex combination of observed
+/// samples, it stays inside [min, max] of the observations — the property
+/// test below pins this.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    gamma: f64,
+    value: f64,
+    n: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Ewma {
+    pub fn new(gamma: f64) -> Ewma {
+        assert!((0.0..1.0).contains(&gamma), "gamma must be in [0,1)");
+        Ewma { gamma, value: 0.0, n: 0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.n == 0 {
+            self.value = x;
+        } else {
+            self.value = self.gamma * self.value + (1.0 - self.gamma) * x;
+        }
+        self.n += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Current estimate (the supplied default before any observation).
+    pub fn get_or(&self, default: f64) -> f64 {
+        if self.n == 0 { default } else { self.value }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn observed_min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn observed_max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Snapshot of the estimator handed to `AdaptivePolicy::begin_batch`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkState {
+    /// Effective uplink throughput estimate, bits/s (frame bits over the
+    /// air time excluding queueing; includes propagation, so it is a
+    /// conservative lower bound on raw channel rate).
+    pub throughput_bps: f64,
+    /// Shared-uplink queueing delay estimate, seconds (0 on private links).
+    pub queue_wait_s: f64,
+    /// Drafted-token acceptance rate estimate in [0, 1].
+    pub acceptance: f64,
+    /// Wire bits per speculative round estimate.
+    pub bits_per_round: f64,
+    /// Rounds observed so far (0 => all fields are priors).
+    pub rounds: u64,
+}
+
+/// Default EWMA history weight used by the control loop.
+pub const DEFAULT_GAMMA: f64 = 0.7;
+
+/// Windowless channel estimator fed once per speculative round.
+#[derive(Clone, Debug)]
+pub struct LinkEstimator {
+    throughput: Ewma,
+    queue_wait: Ewma,
+    acceptance: Ewma,
+    bits_per_round: Ewma,
+    rounds: u64,
+}
+
+impl LinkEstimator {
+    pub fn new(gamma: f64) -> LinkEstimator {
+        LinkEstimator {
+            throughput: Ewma::new(gamma),
+            queue_wait: Ewma::new(gamma),
+            acceptance: Ewma::new(gamma),
+            bits_per_round: Ewma::new(gamma),
+            rounds: 0,
+        }
+    }
+
+    /// Fold one round's ledger entries into the estimates.
+    pub fn observe(&mut self, o: &BatchOutcome) {
+        let air_s = o.t_uplink_s - o.queue_wait_s;
+        if air_s > 0.0 && o.frame_bits > 0 {
+            self.throughput.observe(o.frame_bits as f64 / air_s);
+        }
+        self.queue_wait.observe(o.queue_wait_s.max(0.0));
+        if o.drafted > 0 {
+            self.acceptance.observe(o.accepted as f64 / o.drafted as f64);
+        }
+        self.bits_per_round.observe(o.frame_bits as f64);
+        self.rounds += 1;
+    }
+
+    pub fn state(&self) -> LinkState {
+        LinkState {
+            throughput_bps: self.throughput.get_or(f64::INFINITY),
+            queue_wait_s: self.queue_wait.get_or(0.0),
+            acceptance: self.acceptance.get_or(1.0),
+            bits_per_round: self.bits_per_round.get_or(0.0),
+            rounds: self.rounds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn outcome(drafted: usize, accepted: usize, frame_bits: usize,
+               t_uplink_s: f64, queue_wait_s: f64) -> BatchOutcome {
+        BatchOutcome {
+            drafted,
+            accepted,
+            rejected: accepted < drafted,
+            frame_bits,
+            t_uplink_s,
+            queue_wait_s,
+        }
+    }
+
+    #[test]
+    fn ewma_stays_within_observed_min_max() {
+        check("ewma within min/max", 100, |g, _| {
+            let gamma = g.f64(0.0, 0.999);
+            let mut e = Ewma::new(gamma);
+            let n = g.usize(1, 200);
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for _ in 0..n {
+                let x = g.f64(-1e6, 1e6);
+                lo = lo.min(x);
+                hi = hi.max(x);
+                e.observe(x);
+                let v = e.get_or(f64::NAN);
+                assert!(
+                    v >= lo - 1e-9 && v <= hi + 1e-9,
+                    "ewma {v} escaped [{lo}, {hi}] (gamma={gamma})"
+                );
+                assert_eq!(e.observed_min(), lo);
+                assert_eq!(e.observed_max(), hi);
+            }
+        });
+    }
+
+    #[test]
+    fn ewma_monotone_response_to_step_change() {
+        // Feed a constant `a`, then step to a constant `b`: the estimate
+        // must move toward `b` monotonically and never overshoot it.
+        check("ewma step response", 100, |g, _| {
+            let gamma = g.f64(0.0, 0.99);
+            let a = g.f64(-100.0, 100.0);
+            let mut b = g.f64(-100.0, 100.0);
+            if (a - b).abs() < 1e-6 {
+                b = a + 1.0;
+            }
+            let mut e = Ewma::new(gamma);
+            for _ in 0..g.usize(1, 20) {
+                e.observe(a);
+            }
+            assert!((e.get_or(f64::NAN) - a).abs() < 1e-9, "constant stream pins the ewma");
+            let mut prev = e.get_or(f64::NAN);
+            for _ in 0..50 {
+                e.observe(b);
+                let v = e.get_or(f64::NAN);
+                if b > a {
+                    assert!(v >= prev - 1e-12 && v <= b + 1e-9, "up-step: {prev} -> {v}");
+                } else {
+                    assert!(v <= prev + 1e-12 && v >= b - 1e-9, "down-step: {prev} -> {v}");
+                }
+                prev = v;
+            }
+            // 50 steps of gamma <= 0.99 closes most of the gap
+            assert!((prev - b).abs() <= (a - b).abs() * 0.7 + 1e-9);
+        });
+    }
+
+    #[test]
+    fn estimator_state_tracks_observations() {
+        let mut est = LinkEstimator::new(0.5);
+        let prior = est.state();
+        assert_eq!(prior.rounds, 0);
+        assert_eq!(prior.acceptance, 1.0);
+        assert_eq!(prior.queue_wait_s, 0.0);
+        assert!(prior.throughput_bps.is_infinite());
+
+        // 1000 bits over 1 ms of air time = 1 Mbit/s
+        est.observe(&outcome(10, 5, 1000, 2e-3, 1e-3));
+        let s = est.state();
+        assert_eq!(s.rounds, 1);
+        assert!((s.throughput_bps - 1e6).abs() < 1e-6);
+        assert!((s.acceptance - 0.5).abs() < 1e-12);
+        assert!((s.bits_per_round - 1000.0).abs() < 1e-12);
+        assert!((s.queue_wait_s - 1e-3).abs() < 1e-12);
+
+        // a second, slower round moves every estimate toward it
+        est.observe(&outcome(10, 10, 500, 5e-3, 0.0));
+        let s2 = est.state();
+        assert!(s2.throughput_bps < s.throughput_bps);
+        assert!(s2.acceptance > s.acceptance);
+        assert!(s2.bits_per_round < s.bits_per_round);
+        assert_eq!(s2.rounds, 2);
+    }
+
+    #[test]
+    fn estimator_is_deterministic() {
+        let feed = |est: &mut LinkEstimator| {
+            for i in 0..50usize {
+                est.observe(&outcome(8, i % 9, 700 + 13 * i, 1e-3 + 1e-5 * i as f64,
+                                     (i % 3) as f64 * 1e-4));
+            }
+        };
+        let mut a = LinkEstimator::new(DEFAULT_GAMMA);
+        let mut b = LinkEstimator::new(DEFAULT_GAMMA);
+        feed(&mut a);
+        feed(&mut b);
+        let (sa, sb) = (a.state(), b.state());
+        assert_eq!(sa.throughput_bps.to_bits(), sb.throughput_bps.to_bits());
+        assert_eq!(sa.bits_per_round.to_bits(), sb.bits_per_round.to_bits());
+        assert_eq!(sa.acceptance.to_bits(), sb.acceptance.to_bits());
+        assert_eq!(sa.queue_wait_s.to_bits(), sb.queue_wait_s.to_bits());
+    }
+}

@@ -1,0 +1,201 @@
+//! Link-adaptive control plane: close the loop from observed channel +
+//! acceptance feedback to the session's policy knobs.
+//!
+//! The paper adapts only the conformal threshold beta online; top-K, the
+//! draft window ℓ and the per-batch bit budget B are config-time
+//! constants.  This subsystem makes them run-time state:
+//!
+//! ```text
+//!            +--------------- ControlLoop ----------------+
+//!            |  LinkEstimator          AdaptivePolicy     |
+//!  ledger -->|  (EWMA throughput,  --> (Static | AIMD |   |--> Knobs
+//!  verdicts  |   queue wait, accept,    AdaptiveWindow)   |    per batch
+//!            |   bits/round)                              |
+//!            +--------------------------------------------+
+//! ```
+//!
+//! Determinism: the estimator reads only the session's *virtual-time*
+//! ledger (simulated uplink seconds, codec frame bits, cloud verdicts) and
+//! the policies are RNG- and clock-free state machines, so an adaptive
+//! session — or a whole adaptive fleet — remains a pure function of
+//! (config, seed).  `tests/fleet_determinism.rs` pins this with
+//! bit-identical trace/digest assertions, and the `Static` policy is
+//! regression-tested to reproduce the fixed-knob path exactly.
+
+pub mod estimator;
+pub mod policy;
+
+pub use estimator::{Ewma, LinkEstimator, LinkState, DEFAULT_GAMMA};
+pub use policy::{AdaptivePolicy, AdaptiveWindow, BatchOutcome, BudgetAimd, Knobs, Static};
+
+use crate::sqs::Policy;
+
+/// Config-level selection of the adaptive policy (plain data, so it can
+/// live in `SessionConfig` and the fleet's `DeviceProfile`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdaptiveMode {
+    /// Fixed knobs — byte-identical to the pre-control-plane behavior.
+    Off,
+    /// AIMD on top-K holding wire bits per round near `target_bits`.
+    Aimd { target_bits: usize },
+    /// Acceptance-driven draft-window sizing (thresholds in [0, 1]).
+    Window { grow: f64, shrink: f64 },
+}
+
+impl AdaptiveMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdaptiveMode::Off => "off",
+            AdaptiveMode::Aimd { .. } => "aimd",
+            AdaptiveMode::Window { .. } => "window",
+        }
+    }
+}
+
+impl Default for AdaptiveMode {
+    fn default() -> Self {
+        AdaptiveMode::Off
+    }
+}
+
+/// Estimator + policy, consulted by the session (or fleet device) once per
+/// speculative round.  Optionally layers over the edge's
+/// `ConformalController`: policies that return `sparsifier: None` leave
+/// the per-token conformal threshold in charge and only steer ℓ / B.
+pub struct ControlLoop {
+    pub estimator: LinkEstimator,
+    policy: Box<dyn AdaptivePolicy>,
+}
+
+impl ControlLoop {
+    pub fn new(policy: Box<dyn AdaptivePolicy>) -> ControlLoop {
+        ControlLoop { estimator: LinkEstimator::new(DEFAULT_GAMMA), policy }
+    }
+
+    /// Build the loop for a session's config: `mode` selects the policy,
+    /// the remaining arguments supply today's static knobs as the fixed
+    /// point (`Off`) or the adaptation range (`Aimd` / `Window`).
+    pub fn for_session(mode: AdaptiveMode, policy: Policy, window: usize,
+                       budget_bits: usize, vocab: usize) -> ControlLoop {
+        let boxed: Box<dyn AdaptivePolicy> = match mode {
+            AdaptiveMode::Off => Box::new(Static::new(policy, window, budget_bits)),
+            AdaptiveMode::Aimd { target_bits } => {
+                let k0 = match policy {
+                    Policy::KSqs { k } => k,
+                    _ => 8,
+                };
+                Box::new(BudgetAimd::new(target_bits, k0, vocab.max(1), window))
+            }
+            AdaptiveMode::Window { grow, shrink } => {
+                Box::new(AdaptiveWindow::new(window, budget_bits, grow, shrink))
+            }
+        };
+        ControlLoop::new(boxed)
+    }
+
+    /// Knobs for the next speculative round.
+    pub fn begin_batch(&mut self) -> Knobs {
+        let state = self.estimator.state();
+        self.policy.begin_batch(&state)
+    }
+
+    /// Fold a finished round into the estimator and the policy.
+    pub fn feedback(&mut self, outcome: &BatchOutcome) {
+        self.estimator.observe(outcome);
+        self.policy.feedback(outcome);
+    }
+
+    pub fn link_state(&self) -> LinkState {
+        self.estimator.state()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn describe(&self) -> String {
+        self.policy.describe()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(drafted: usize, accepted: usize, frame_bits: usize) -> BatchOutcome {
+        BatchOutcome {
+            drafted,
+            accepted,
+            rejected: accepted < drafted,
+            frame_bits,
+            t_uplink_s: frame_bits as f64 / 1e6 + 0.01,
+            queue_wait_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn off_mode_yields_static_config_knobs_forever() {
+        let mut cl = ControlLoop::for_session(
+            AdaptiveMode::Off, Policy::KSqs { k: 8 }, 15, 5000, 64);
+        let first = cl.begin_batch();
+        assert_eq!(first, Knobs { sparsifier: None, ell: 15, budget_bits: 5000 });
+        for i in 0..30 {
+            cl.feedback(&outcome(15, i % 16, 2000 + 100 * i));
+            assert_eq!(cl.begin_batch(), first, "static knobs must never move");
+        }
+        assert_eq!(cl.policy_name(), "static");
+        assert_eq!(cl.link_state().rounds, 30, "estimator still observes");
+    }
+
+    #[test]
+    fn aimd_mode_converges_toward_target_bits() {
+        // Idealized plant: wire bits per round = 48 + 80 * K (monotone in
+        // K), target 600 -> equilibrium K around 6-7.
+        let mut cl = ControlLoop::for_session(
+            AdaptiveMode::Aimd { target_bits: 600 }, Policy::KSqs { k: 32 }, 15, 5000, 64);
+        let mut bits = Vec::new();
+        for _ in 0..60 {
+            let knobs = cl.begin_batch();
+            let k = match knobs.sparsifier {
+                Some(crate::sqs::Sparsifier::TopK(k)) => k,
+                other => panic!("aimd must pin top-K, got {other:?}"),
+            };
+            assert_eq!(knobs.budget_bits, 600, "budget knob pinned to target");
+            let frame = 48 + 80 * k;
+            bits.push(frame as f64);
+            cl.feedback(&outcome(10, 8, frame));
+        }
+        let tail = &bits[20..];
+        let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+        assert!(
+            (mean - 600.0).abs() <= 0.15 * 600.0,
+            "AIMD mean bits/round {mean} should track the 600b target"
+        );
+        assert!(tail.iter().all(|&b| b <= 600.0 * 1.5), "sawtooth stays near target");
+    }
+
+    #[test]
+    fn window_mode_steers_ell_from_ewma_acceptance() {
+        let mut cl = ControlLoop::for_session(
+            AdaptiveMode::Window { grow: 0.8, shrink: 0.5 },
+            Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
+            15, 5000, 64);
+        let k0 = cl.begin_batch();
+        assert_eq!(k0.sparsifier, None, "conformal threshold stays in charge");
+        assert_eq!(k0.budget_bits, 5000);
+        cl.feedback(&outcome(k0.ell, k0.ell, 800)); // EWMA acceptance = 1.0
+        assert_eq!(cl.begin_batch().ell, k0.ell + 1, "high acceptance grows");
+        cl.feedback(&outcome(10, 0, 800)); // EWMA -> 0.7: dead band
+        assert_eq!(cl.begin_batch().ell, k0.ell + 1, "smoothing rides out one bad batch");
+        cl.feedback(&outcome(10, 0, 800)); // EWMA -> 0.49: below shrink
+        assert_eq!(cl.begin_batch().ell, k0.ell, "sustained low acceptance shrinks");
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(AdaptiveMode::Off.name(), "off");
+        assert_eq!(AdaptiveMode::Aimd { target_bits: 1 }.name(), "aimd");
+        assert_eq!(AdaptiveMode::Window { grow: 0.8, shrink: 0.5 }.name(), "window");
+        assert_eq!(AdaptiveMode::default(), AdaptiveMode::Off);
+    }
+}

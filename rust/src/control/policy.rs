@@ -1,0 +1,373 @@
+//! AdaptivePolicy: per-batch knob selection from estimated link state.
+//!
+//! The paper's C-SQS adapts only the conformal threshold beta; everything
+//! else (top-K, draft window, bit budget) is frozen at config time.  The
+//! policies here close that gap, in the spirit of channel-aware QSV
+//! (arXiv:2507.00605) and DSD's dynamic draft windows (arXiv:2511.21669):
+//!
+//! - [`Static`]    — wraps today's `sqs::Policy` knobs verbatim.  Zero
+//!                   behavior change: the edge drafts exactly as it would
+//!                   without a control plane (regression-tested).
+//! - [`BudgetAimd`]— AIMD on top-K: additively grow K while the last
+//!                   frame *and* the estimator's EWMA wire bits per round
+//!                   sit under the target uplink budget; multiplicatively
+//!                   shrink on overshoot or when the estimated queue wait
+//!                   says the shared channel is congested.
+//! - [`AdaptiveWindow`] — grow/shrink the draft window ℓ with the
+//!                   estimator's EWMA acceptance rate (high acceptance ⇒
+//!                   speculate deeper, low acceptance ⇒ fail faster).
+//!
+//! Policies are plain deterministic state machines: no RNG, no clock.
+//! The `LinkState` they read is the estimator half of the loop
+//! (`super::estimator`), fed once per round by the session/device.
+
+use crate::sqs::Sparsifier;
+
+use super::estimator::LinkState;
+
+/// Per-batch knobs the control plane hands the edge before drafting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Knobs {
+    /// Per-token sparsifier override for this batch.  `None` defers to the
+    /// edge's configured policy — in particular C-SQS keeps its live
+    /// conformal threshold, so the control loop *layers over* the
+    /// `ConformalController` instead of replacing it.
+    pub sparsifier: Option<Sparsifier>,
+    /// Draft window ℓ^t: maximum tokens drafted this batch (the DSD knob;
+    /// not the lattice resolution, which stays fixed per session).
+    pub ell: usize,
+    /// Per-batch uplink budget B, in distribution-payload bits.
+    pub budget_bits: usize,
+}
+
+/// What actually happened in one speculative round — the feedback half of
+/// the control loop, assembled by the session / fleet device from the
+/// latency ledger and the cloud verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOutcome {
+    /// tokens drafted this round
+    pub drafted: usize,
+    /// tokens the cloud accepted
+    pub accepted: usize,
+    /// true iff a draft was rejected (and resampled)
+    pub rejected: bool,
+    /// full frame size on the wire, bits
+    pub frame_bits: usize,
+    /// simulated uplink time for the frame, seconds (queue + air + prop)
+    pub t_uplink_s: f64,
+    /// time the frame waited before transmission began (shared uplink), s
+    pub queue_wait_s: f64,
+}
+
+/// A per-session knob controller.  `begin_batch` picks the knobs for the
+/// next round given the current link estimate; `feedback` folds in the
+/// round's outcome.
+pub trait AdaptivePolicy: Send {
+    fn begin_batch(&mut self, link: &LinkState) -> Knobs;
+    fn feedback(&mut self, outcome: &BatchOutcome);
+    fn name(&self) -> &'static str;
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
+}
+
+/// The no-op policy: reproduces today's fixed-knob behavior exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct Static {
+    /// the session's `sqs::Policy` (kept for reporting; the edge still
+    /// owns the live sparsifier, including the conformal threshold)
+    pub policy: crate::sqs::Policy,
+    pub ell: usize,
+    pub budget_bits: usize,
+}
+
+impl Static {
+    pub fn new(policy: crate::sqs::Policy, ell: usize, budget_bits: usize) -> Static {
+        Static { policy, ell, budget_bits }
+    }
+}
+
+impl AdaptivePolicy for Static {
+    fn begin_batch(&mut self, _link: &LinkState) -> Knobs {
+        Knobs { sparsifier: None, ell: self.ell, budget_bits: self.budget_bits }
+    }
+
+    fn feedback(&mut self, _outcome: &BatchOutcome) {}
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn describe(&self) -> String {
+        format!("static({})", self.policy.describe())
+    }
+}
+
+/// AIMD on top-K against a target wire budget per round.
+///
+/// The step is decided at `begin_batch` from the last round *and* the
+/// link estimate.  Multiplicative decrease on a congestion event: the
+/// last frame overshot `target_bits`, or the estimated shared-uplink
+/// queue wait exceeds the air time of a target-sized frame at the
+/// estimated throughput (the channel, not just this session, is the
+/// bottleneck).  Additive increase (K += 1: finer distributions, better
+/// acceptance) only while the EWMA wire bits per round also sit at or
+/// under the target — a single small frame after a burst of fat ones
+/// holds instead of growing.  `md` defaults to 3/4, gentler than TCP's
+/// 1/2, so the sawtooth tracks the target more tightly.  The budget knob
+/// is pinned to the target so the edge's budget rule bounds the
+/// distribution payload while K controls how the budget is spent.
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetAimd {
+    pub target_bits: usize,
+    pub k: usize,
+    pub k_min: usize,
+    pub k_max: usize,
+    pub ell: usize,
+    /// multiplicative-decrease factor in (0, 1)
+    pub md: f64,
+    /// wire bits of the round awaiting an AIMD decision
+    last_frame_bits: Option<usize>,
+}
+
+impl BudgetAimd {
+    pub fn new(target_bits: usize, k0: usize, k_max: usize, ell: usize) -> BudgetAimd {
+        assert!(target_bits > 0, "AIMD needs a positive bit target");
+        let k_max = k_max.max(1);
+        BudgetAimd {
+            target_bits,
+            k: k0.clamp(1, k_max),
+            k_min: 1,
+            k_max,
+            ell,
+            md: 0.75,
+            last_frame_bits: None,
+        }
+    }
+
+    /// Estimated queue congestion: waiting longer for the channel than a
+    /// target-sized frame takes to transmit means shrinking K cannot be
+    /// deferred to this session's own overshoot signal.
+    fn queue_congested(&self, link: &LinkState) -> bool {
+        link.rounds > 0
+            && link.throughput_bps.is_finite()
+            && link.throughput_bps > 0.0
+            && link.queue_wait_s > self.target_bits as f64 / link.throughput_bps
+    }
+}
+
+impl AdaptivePolicy for BudgetAimd {
+    fn begin_batch(&mut self, link: &LinkState) -> Knobs {
+        if let Some(frame) = self.last_frame_bits.take() {
+            if frame > self.target_bits || self.queue_congested(link) {
+                // congestion event: multiplicative decrease
+                self.k =
+                    ((self.k as f64 * self.md).floor() as usize).clamp(self.k_min, self.k_max);
+            } else if link.bits_per_round <= self.target_bits as f64 {
+                // additive increase, gated on the EWMA having headroom too
+                self.k = (self.k + 1).min(self.k_max);
+            }
+        }
+        Knobs {
+            sparsifier: Some(Sparsifier::top_k(self.k)),
+            ell: self.ell,
+            budget_bits: self.target_bits,
+        }
+    }
+
+    fn feedback(&mut self, outcome: &BatchOutcome) {
+        self.last_frame_bits = Some(outcome.frame_bits);
+    }
+
+    fn name(&self) -> &'static str {
+        "aimd"
+    }
+
+    fn describe(&self) -> String {
+        format!("aimd(target={}b, K={}..{}, md={})", self.target_bits, self.k_min, self.k_max, self.md)
+    }
+}
+
+/// DSD-style draft-window sizing driven by the estimator's EWMA
+/// acceptance rate: before each batch, ℓ grows by one while the smoothed
+/// acceptance sits at or above `grow`, shrinks by one at or below
+/// `shrink`, and holds in the dead band between (the smoothing means one
+/// unlucky batch does not whipsaw the window).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveWindow {
+    pub ell: usize,
+    pub ell_min: usize,
+    pub ell_max: usize,
+    /// EWMA acceptance at or above this grows ℓ
+    pub grow: f64,
+    /// EWMA acceptance at or below this shrinks ℓ
+    pub shrink: f64,
+    pub budget_bits: usize,
+}
+
+impl AdaptiveWindow {
+    pub fn new(ell_max: usize, budget_bits: usize, grow: f64, shrink: f64) -> AdaptiveWindow {
+        assert!(shrink <= grow, "shrink threshold must not exceed grow threshold");
+        let ell_max = ell_max.max(1);
+        AdaptiveWindow {
+            // start mid-range: the first link estimate decides the direction
+            ell: (ell_max + 1) / 2,
+            ell_min: 1,
+            ell_max,
+            grow,
+            shrink,
+            budget_bits,
+        }
+    }
+}
+
+impl AdaptivePolicy for AdaptiveWindow {
+    fn begin_batch(&mut self, link: &LinkState) -> Knobs {
+        // link.acceptance is the estimator's EWMA over verify feedback;
+        // before any observation (rounds == 0) keep the starting window
+        if link.rounds > 0 {
+            if link.acceptance >= self.grow {
+                self.ell = (self.ell + 1).min(self.ell_max);
+            } else if link.acceptance <= self.shrink {
+                self.ell = self.ell.saturating_sub(1).max(self.ell_min);
+            }
+        }
+        Knobs { sparsifier: None, ell: self.ell, budget_bits: self.budget_bits }
+    }
+
+    fn feedback(&mut self, _outcome: &BatchOutcome) {}
+
+    fn name(&self) -> &'static str {
+        "window"
+    }
+
+    fn describe(&self) -> String {
+        format!("window(ell={}..{}, grow>={}, shrink<={})", self.ell_min, self.ell_max, self.grow, self.shrink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sqs::Policy;
+
+    fn idle_link() -> LinkState {
+        LinkState {
+            throughput_bps: 1e6,
+            queue_wait_s: 0.0,
+            acceptance: 1.0,
+            bits_per_round: 0.0,
+            rounds: 0,
+        }
+    }
+
+    fn outcome(drafted: usize, accepted: usize, frame_bits: usize) -> BatchOutcome {
+        BatchOutcome {
+            drafted,
+            accepted,
+            rejected: accepted < drafted,
+            frame_bits,
+            t_uplink_s: 1e-3,
+            queue_wait_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn static_policy_echoes_config_knobs() {
+        let mut s = Static::new(Policy::KSqs { k: 8 }, 15, 5000);
+        let k = s.begin_batch(&idle_link());
+        assert_eq!(k, Knobs { sparsifier: None, ell: 15, budget_bits: 5000 });
+        for _ in 0..10 {
+            s.feedback(&outcome(15, 3, 9999));
+        }
+        // nothing moves, ever
+        assert_eq!(s.begin_batch(&idle_link()), k);
+        assert!(s.describe().contains("K-SQS"));
+    }
+
+    #[test]
+    fn aimd_decreases_on_overshoot_increases_under() {
+        let mut p = BudgetAimd::new(600, 8, 64, 15);
+        let first = p.begin_batch(&idle_link());
+        assert_eq!(first.sparsifier, Some(Sparsifier::TopK(8)), "no feedback yet: K holds");
+        assert_eq!(first.budget_bits, 600, "budget knob pinned to target");
+        p.feedback(&outcome(10, 10, 700)); // over target
+        p.begin_batch(&idle_link());
+        assert!(p.k < 8, "multiplicative decrease, got K={}", p.k);
+        let low = p.k;
+        p.feedback(&outcome(10, 10, 100)); // under target, EWMA idle
+        let knobs = p.begin_batch(&idle_link());
+        assert_eq!(p.k, low + 1, "additive increase");
+        assert_eq!(knobs.sparsifier, Some(Sparsifier::TopK(p.k)));
+    }
+
+    #[test]
+    fn aimd_holds_while_ewma_bits_stay_over_target() {
+        let mut p = BudgetAimd::new(600, 5, 64, 15);
+        p.feedback(&outcome(10, 10, 500)); // this frame fit...
+        let congested_history = LinkState {
+            bits_per_round: 900.0, // ...but the EWMA says recent rounds did not
+            ..idle_link()
+        };
+        p.begin_batch(&congested_history);
+        assert_eq!(p.k, 5, "no additive increase without EWMA headroom");
+    }
+
+    #[test]
+    fn aimd_treats_queue_buildup_as_congestion() {
+        let mut p = BudgetAimd::new(600, 8, 64, 15);
+        p.feedback(&outcome(10, 10, 500)); // frame itself fit under target
+        let queued = LinkState {
+            throughput_bps: 1e5,
+            queue_wait_s: 0.05, // 600b @ 100kbps = 6ms air << 50ms queued
+            rounds: 4,
+            ..idle_link()
+        };
+        p.begin_batch(&queued);
+        assert!(p.k < 8, "queue congestion must shrink K, got {}", p.k);
+    }
+
+    #[test]
+    fn aimd_respects_clamps() {
+        let mut p = BudgetAimd::new(100, 2, 4, 15);
+        for _ in 0..20 {
+            p.feedback(&outcome(5, 5, 1000)); // always over
+            p.begin_batch(&idle_link());
+        }
+        assert_eq!(p.k, 1, "K floors at k_min");
+        for _ in 0..20 {
+            p.feedback(&outcome(5, 5, 10)); // always under
+            p.begin_batch(&idle_link());
+        }
+        assert_eq!(p.k, 4, "K caps at k_max");
+    }
+
+    #[test]
+    fn window_follows_ewma_acceptance() {
+        let accepting = |acc: f64, rounds: u64| LinkState {
+            acceptance: acc,
+            rounds,
+            ..idle_link()
+        };
+        let mut p = AdaptiveWindow::new(15, 5000, 0.8, 0.5);
+        let start = p.ell;
+        let k0 = p.begin_batch(&accepting(1.0, 0));
+        assert_eq!(k0.ell, start, "no observations yet: window holds");
+        assert_eq!(k0.sparsifier, None, "window policy defers sparsification");
+        assert_eq!(k0.budget_bits, 5000);
+        p.begin_batch(&accepting(0.9, 1)); // above grow
+        assert_eq!(p.ell, start + 1);
+        p.begin_batch(&accepting(0.7, 2)); // dead band
+        assert_eq!(p.ell, start + 1);
+        p.begin_batch(&accepting(0.2, 3)); // below shrink
+        assert_eq!(p.ell, start);
+        for r in 0..40 {
+            p.begin_batch(&accepting(0.0, 4 + r));
+        }
+        assert_eq!(p.ell, 1, "window floors at 1");
+        for r in 0..40 {
+            p.begin_batch(&accepting(1.0, 44 + r));
+        }
+        assert_eq!(p.ell, 15, "window caps at ell_max");
+    }
+}

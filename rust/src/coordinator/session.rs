@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use crate::channel::SimulatedLink;
 use crate::cloud::CloudNode;
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop};
 use crate::edge::EdgeNode;
 use crate::model::{DraftLm, TargetLm};
 use crate::sqs::Policy;
@@ -39,6 +40,8 @@ pub struct SessionConfig {
     pub max_batch_drafts: usize,
     pub seed: u64,
     pub timing: TimingMode,
+    /// link-adaptive control plane (Off = today's fixed knobs, bit-exact)
+    pub adaptive: AdaptiveMode,
 }
 
 impl Default for SessionConfig {
@@ -52,6 +55,7 @@ impl Default for SessionConfig {
             max_batch_drafts: 15,
             seed: 0,
             timing: TimingMode::Measured,
+            adaptive: AdaptiveMode::Off,
         }
     }
 }
@@ -84,6 +88,7 @@ pub struct SessionResult {
     pub t_llm_s: f64,
     pub t_downlink_s: f64,
     pub uplink_bits: u64,
+    pub downlink_bits: u64,
     pub conformal_empirical_alpha: Option<f64>,
     pub conformal_bound: Option<f64>,
     pub conformal_t: Option<u64>,
@@ -123,6 +128,16 @@ impl SessionResult {
         if n == 0 { 0.0 } else { self.uplink_bits as f64 / n as f64 }
     }
 
+    /// Mean wire bits per speculative round — the control plane's AIMD
+    /// budget basis (0 for the batchless AR baseline).
+    pub fn mean_bits_per_round(&self) -> f64 {
+        if self.batches.is_empty() {
+            0.0
+        } else {
+            self.uplink_bits as f64 / self.batches.len() as f64
+        }
+    }
+
     pub fn latency_per_token(&self) -> f64 {
         let n = self.new_tokens();
         if n == 0 { 0.0 } else { self.total_time_s / n as f64 }
@@ -135,13 +150,16 @@ pub struct SdSession<D: DraftLm, T: TargetLm> {
     pub cloud: CloudNode<T>,
     pub link: SimulatedLink,
     pub cfg: SessionConfig,
+    /// link-adaptive control plane, consulted once per batch
+    pub control: ControlLoop,
     /// canonical committed sequence (prompt + verified tokens)
     seq: Vec<u16>,
 }
 
 impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
     pub fn new(draft: D, target: T, link: SimulatedLink, cfg: SessionConfig) -> Self {
-        let edge = EdgeNode::new(
+        let vocab = draft.vocab();
+        let mut edge = EdgeNode::new(
             draft,
             cfg.policy,
             cfg.ell,
@@ -149,8 +167,19 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             cfg.max_batch_drafts,
             cfg.seed ^ 0xE,
         );
+        // runtime-varying K needs the per-token-K wire scheme
+        if matches!(cfg.adaptive, AdaptiveMode::Aimd { .. }) {
+            edge.use_adaptive_scheme();
+        }
+        let control = ControlLoop::for_session(
+            cfg.adaptive,
+            cfg.policy,
+            cfg.max_batch_drafts,
+            cfg.budget_bits,
+            vocab,
+        );
         let cloud = CloudNode::new(target, cfg.seed ^ 0xC);
-        SdSession { edge, cloud, link, cfg, seq: Vec::new() }
+        SdSession { edge, cloud, link, cfg, control, seq: Vec::new() }
     }
 
     /// Run the speculative-decoding loop to completion.
@@ -163,16 +192,20 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         let mut n_rej = 0usize;
         let (mut t_slm, mut t_up, mut t_llm, mut t_down) = (0.0, 0.0, 0.0, 0.0);
         let mut uplink_bits = 0u64;
+        let mut downlink_bits = 0u64;
 
         while self.seq.len() - prompt.len() < self.cfg.max_new_tokens
             && self.room_left()
         {
             let ctx_before = self.seq.len();
 
+            // ---- control plane: knobs for this round --------------------
+            let knobs = self.control.begin_batch();
+
             // ---- edge: draft under budget -------------------------------
             let remaining =
                 self.cfg.max_new_tokens - (self.seq.len() - prompt.len());
-            let drafted = self.edge.draft_batch_capped(self.cfg.temp, remaining)?;
+            let drafted = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
             let l = drafted.frame.tokens.len();
             if l == 0 {
                 break; // context exhausted
@@ -204,6 +237,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             // ---- downlink feedback -------------------------------------
             let (_fb_bytes, fb_bits) = self.edge.codec.encode_feedback(&verdict.feedback);
             let down_time = self.link.send_downlink(fb_bits);
+            downlink_bits += fb_bits as u64;
 
             // ---- edge sync + conformal backtrack ------------------------
             self.edge.apply_feedback(
@@ -213,6 +247,16 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 verdict.feedback.new_token,
             )?;
             self.seq.extend_from_slice(&verdict.committed);
+
+            // ---- control plane: fold the round's ledger back in ---------
+            self.control.feedback(&BatchOutcome {
+                drafted: l,
+                accepted: verdict.accepted,
+                rejected: verdict.rejected,
+                frame_bits: drafted.frame_bits,
+                t_uplink_s: up_time,
+                queue_wait_s: 0.0, // private link: no shared-uplink queue
+            });
 
             // consistency: edge and cloud contexts must match ours
             debug_assert_eq!(self.edge.context_len(), self.seq.len());
@@ -240,7 +284,14 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             });
         }
 
-        let conformal = self.edge.conformal.as_ref();
+        // AIMD pins a top-K sparsifier on every token, so the conformal
+        // controller — though it kept observing — was never in control:
+        // reporting its Theorem 2 certificate would be misleading
+        let conformal = if matches!(self.cfg.adaptive, AdaptiveMode::Aimd { .. }) {
+            None
+        } else {
+            self.edge.conformal.as_ref()
+        };
         Ok(SessionResult {
             prompt_len: prompt.len(),
             tokens: self.seq.clone(),
@@ -252,6 +303,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             t_llm_s: t_llm,
             t_downlink_s: t_down,
             uplink_bits,
+            downlink_bits,
             conformal_empirical_alpha: conformal.map(|c| c.empirical_alpha()),
             conformal_bound: conformal.map(|c| c.theorem2_bound()),
             conformal_t: conformal.map(|c| c.t()),
@@ -297,6 +349,7 @@ impl<T: TargetLm> ArBaseline<T> {
         let mut t_up = self.link.send_uplink(prompt.len() * 8);
         let mut t_llm = 0.0;
         let mut t_down = 0.0;
+        let mut downlink_bits = 0u64;
         while seq.len() - prompt.len() < max_new_tokens
             && seq.len() + 2 < self.cloud.target.max_len()
         {
@@ -306,6 +359,7 @@ impl<T: TargetLm> ArBaseline<T> {
                 TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
             };
             t_down += self.link.send_downlink(8);
+            downlink_bits += 8;
             seq.push(tok);
         }
         Ok(SessionResult {
@@ -319,6 +373,7 @@ impl<T: TargetLm> ArBaseline<T> {
             t_llm_s: t_llm,
             t_downlink_s: t_down,
             uplink_bits: (prompt.len() * 8) as u64,
+            downlink_bits,
             conformal_empirical_alpha: None,
             conformal_bound: None,
             conformal_t: None,

@@ -10,6 +10,7 @@
 use anyhow::Result;
 
 use crate::codec::{DraftFrame, DraftToken, FrameCodec};
+use crate::control::Knobs;
 use crate::model::DraftLm;
 use crate::sqs::probs::sample_lattice;
 use crate::sqs::{ConformalController, Policy, Sparsifier};
@@ -80,6 +81,17 @@ impl<D: DraftLm> EdgeNode<D> {
         self.draft.start(prompt)
     }
 
+    /// Switch the wire format to the per-token-K adaptive scheme.  A
+    /// control policy that varies K at run time (e.g. AIMD) cannot use the
+    /// FixedK scheme, whose codec assumes a config-time constant K on both
+    /// ends.  Call before the first batch; encode and decode share this
+    /// codec, so the cloud side follows automatically.
+    pub fn use_adaptive_scheme(&mut self) {
+        let vocab = self.draft.vocab();
+        self.codec =
+            FrameCodec::new(vocab, self.ell, crate::sqs::bits::SchemeBits::Adaptive, 0);
+    }
+
     fn sparsifier(&self) -> Sparsifier {
         match self.policy {
             Policy::KSqs { k } => Sparsifier::top_k(k),
@@ -99,7 +111,26 @@ impl<D: DraftLm> EdgeNode<D> {
     /// Draft at most `cap` tokens this batch (used by the session to avoid
     /// overshooting the request's max_new_tokens by more than the bonus).
     pub fn draft_batch_capped(&mut self, temp: f32, cap: usize) -> Result<DraftedBatch> {
-        let cap = cap.min(self.max_batch_drafts).max(1);
+        // the static special case of the knobs path: config-time window and
+        // budget, policy-owned sparsifier — behavior identical by
+        // construction (regression-tested below)
+        let knobs = Knobs {
+            sparsifier: None,
+            ell: self.max_batch_drafts,
+            budget_bits: self.budget_bits,
+        };
+        self.draft_batch_knobs(temp, cap, &knobs)
+    }
+
+    /// Draft one batch under per-batch control-plane knobs: `knobs.ell`
+    /// caps the window (never above the configured `max_batch_drafts`,
+    /// which also bounds the cloud's verify window), `knobs.budget_bits`
+    /// replaces the config budget, and `knobs.sparsifier` (when set)
+    /// overrides the per-token policy sparsifier.
+    pub fn draft_batch_knobs(&mut self, temp: f32, cap: usize, knobs: &Knobs)
+                             -> Result<DraftedBatch> {
+        let cap = cap.min(knobs.ell).min(self.max_batch_drafts).max(1);
+        let budget_bits = knobs.budget_bits;
         if let Some(c) = self.conformal.as_mut() {
             c.begin_batch();
         }
@@ -114,7 +145,10 @@ impl<D: DraftLm> EdgeNode<D> {
         let mut t_slm = 0.0f64;
 
         while frame.tokens.len() < cap && self.draft.len() + 1 < self.draft.max_len() {
-            let sp = self.sparsifier();
+            let sp = match knobs.sparsifier {
+                Some(s) => s,
+                None => self.sparsifier(),
+            };
             let t0 = std::time::Instant::now();
             let step = self.draft.next_sqs(temp, &sp, self.ell)?;
             t_slm += t0.elapsed().as_secs_f64();
@@ -123,7 +157,7 @@ impl<D: DraftLm> EdgeNode<D> {
             let b_n = self.codec.token_bits(k).dist_bits();
             // budget rule: stop before the token that would overflow B —
             // but always send at least one token so the batch progresses
-            if !frame.tokens.is_empty() && used_bits + b_n > self.budget_bits {
+            if !frame.tokens.is_empty() && used_bits + b_n > budget_bits {
                 break;
             }
             used_bits += b_n;
@@ -221,6 +255,83 @@ mod tests {
         assert_ne!(before, after, "eta > 0 must adapt");
         // context: 2 + accepted + 1 new token
         assert_eq!(e.context_len(), 2 + (drafted - 1) + 1);
+    }
+
+    #[test]
+    fn knobs_path_with_static_knobs_is_bit_identical() {
+        // pins the delegation contract the Static policy relies on: knobs
+        // of (no override, ell = max_batch_drafts, config budget) must be
+        // a perfect alias of `draft_batch_capped` — same RNG draws, same
+        // frames, same bits — so a future knob-handling change cannot
+        // silently alter the fixed-knob path that predates the control
+        // plane.  (A cross-version golden digest needs a toolchain-
+        // equipped environment; CI runs this suite against each revision.)
+        for policy in [
+            Policy::KSqs { k: 6 },
+            Policy::CSqs { beta0: 0.05, alpha: 0.001, eta: 0.01 },
+        ] {
+            let mut legacy = edge(policy, 900);
+            let mut knobbed = edge(policy, 900);
+            legacy.start(&[3, 1, 4]).unwrap();
+            knobbed.start(&[3, 1, 4]).unwrap();
+            for _ in 0..4 {
+                let a = legacy.draft_batch_capped(0.9, 10).unwrap();
+                let static_knobs = Knobs {
+                    sparsifier: None,
+                    ell: knobbed.max_batch_drafts,
+                    budget_bits: knobbed.budget_bits,
+                };
+                let b = knobbed.draft_batch_knobs(0.9, 10, &static_knobs).unwrap();
+                assert_eq!(a.bytes, b.bytes, "wire bytes diverged ({policy:?})");
+                assert_eq!(a.frame_bits, b.frame_bits);
+                assert_eq!(a.dist_bits, b.dist_bits);
+                assert_eq!(a.frame.tokens, b.frame.tokens);
+                let l = a.frame.tokens.len();
+                legacy.apply_feedback(legacy.context_len() - l, l, l.saturating_sub(1), 2).unwrap();
+                knobbed.apply_feedback(knobbed.context_len() - l, l, l.saturating_sub(1), 2).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn aimd_knobs_need_the_adaptive_scheme() {
+        // runtime-varying K over a KSqs edge: the adaptive wire scheme
+        // carries K per token, and frames round-trip at every K
+        let mut e = edge(Policy::KSqs { k: 8 }, 5000);
+        e.use_adaptive_scheme();
+        e.start(&[7, 7]).unwrap();
+        for k in [2usize, 5, 3, 8] {
+            let knobs = Knobs {
+                sparsifier: Some(Sparsifier::top_k(k)),
+                ell: 4,
+                budget_bits: 5000,
+            };
+            let b = e.draft_batch_knobs(1.0, 10, &knobs).unwrap();
+            assert!(!b.frame.tokens.is_empty());
+            assert!(b.frame.tokens.len() <= 4, "knobs.ell caps the window");
+            for &got_k in &b.ks {
+                assert_eq!(got_k, k, "top-{k} support on every token");
+            }
+            let decoded = e.codec.decode(&b.bytes).unwrap();
+            assert_eq!(decoded.tokens.len(), b.frame.tokens.len());
+            for (d, o) in decoded.tokens.iter().zip(&b.frame.tokens) {
+                assert_eq!(d.quant.support, o.quant.support);
+                assert_eq!(d.quant.counts, o.quant.counts);
+            }
+            let l = b.frame.tokens.len();
+            e.apply_feedback(e.context_len() - l, l, l, 1).unwrap();
+        }
+    }
+
+    #[test]
+    fn knobs_budget_overrides_config_budget() {
+        let mut e = edge(Policy::KSqs { k: 8 }, 5000);
+        e.start(&[1]).unwrap();
+        let knobs = Knobs { sparsifier: None, ell: 15, budget_bits: 150 };
+        let b = e.draft_batch_knobs(0.9, 15, &knobs).unwrap();
+        let total: usize = b.dist_bits.iter().sum();
+        assert!(total <= 150 || b.frame.tokens.len() == 1, "knob budget enforced");
+        assert!(b.frame.tokens.len() < 15, "tight budget cuts the batch short");
     }
 
     #[test]

@@ -152,12 +152,19 @@ pub struct CsvOut {
     rows: Vec<String>,
 }
 
+/// The bench output directory (`SQS_RESULTS`, default `results/`),
+/// created on first use — shared by the CSV and JSON writers so both
+/// always land in the same place.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from(
+        std::env::var("SQS_RESULTS").unwrap_or_else(|_| "results".into()));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
 impl CsvOut {
     pub fn new(name: &str, header: &str) -> CsvOut {
-        let dir = std::path::PathBuf::from(
-            std::env::var("SQS_RESULTS").unwrap_or_else(|_| "results".into()));
-        let _ = std::fs::create_dir_all(&dir);
-        CsvOut { path: dir.join(name), rows: vec![header.to_string()] }
+        CsvOut { path: results_dir().join(name), rows: vec![header.to_string()] }
     }
 
     pub fn row(&mut self, row: String) {
@@ -170,6 +177,18 @@ impl CsvOut {
         } else {
             eprintln!("[csv] wrote {:?} ({} rows)", self.path, self.rows.len() - 1);
         }
+    }
+}
+
+/// Write a machine-readable bench summary (pretty JSON) into the results
+/// dir (`SQS_RESULTS`, default `results/`).  The `BENCH_*.json` files are
+/// the perf trajectory tracked across PRs — keep their top-level keys
+/// stable.
+pub fn write_json_summary(name: &str, value: &crate::util::json::Json) {
+    let path = results_dir().join(name);
+    match std::fs::write(&path, value.to_string_pretty() + "\n") {
+        Err(e) => eprintln!("warning: could not write {path:?}: {e}"),
+        Ok(()) => eprintln!("[json] wrote {path:?}"),
     }
 }
 

@@ -15,6 +15,7 @@ use std::collections::VecDeque;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cloud::{CloudNode, Verdict};
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop};
 use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
@@ -43,6 +44,8 @@ pub struct DeviceProfile {
     /// dedicated per-device downlink, bits/s
     pub downlink_bps: f64,
     pub workload: Workload,
+    /// link-adaptive control plane (Off = fixed knobs, pre-PR behavior)
+    pub adaptive: AdaptiveMode,
 }
 
 impl Default for DeviceProfile {
@@ -59,6 +62,7 @@ impl Default for DeviceProfile {
             draft_overhead_s: 0.0,
             downlink_bps: 1e7,
             workload: Workload::ClosedLoop { think_s: 0.0 },
+            adaptive: AdaptiveMode::Off,
         }
     }
 }
@@ -78,6 +82,10 @@ struct PendingBatch {
     bytes: Vec<u8>,
     frame_bits: usize,
     verdict: Option<Verdict>,
+    /// time the frame waited in the shared-uplink queue, seconds
+    queue_wait_s: f64,
+    /// queue + air + propagation time for the frame, seconds
+    uplink_s: f64,
 }
 
 /// Per-device tallies surfaced in the fleet report.
@@ -98,6 +106,9 @@ pub struct Device {
     pub profile: DeviceProfile,
     pub edge: EdgeNode<SyntheticDraft>,
     pub cloud: CloudNode<SyntheticTarget>,
+    /// per-device control plane; persists across requests so link
+    /// estimates carry over (the channel outlives any one request)
+    pub control: ControlLoop,
     pub queue: VecDeque<f64>,
     pub active: Option<ActiveRequest>,
     pub stats: DeviceStats,
@@ -118,7 +129,7 @@ impl Device {
         let vocab = world.vocab;
         let draft = SyntheticDraft::new(world.clone(), 100_000);
         let target = SyntheticTarget::new(world.clone(), profile.max_batch_drafts, 100_000);
-        let edge = EdgeNode::new(
+        let mut edge = EdgeNode::new(
             draft,
             profile.policy,
             profile.ell,
@@ -126,12 +137,23 @@ impl Device {
             profile.max_batch_drafts,
             seed ^ 0xE,
         );
+        if matches!(profile.adaptive, AdaptiveMode::Aimd { .. }) {
+            edge.use_adaptive_scheme();
+        }
+        let control = ControlLoop::for_session(
+            profile.adaptive,
+            profile.policy,
+            profile.max_batch_drafts,
+            profile.budget_bits,
+            vocab,
+        );
         let cloud = CloudNode::new(target, seed ^ 0xC);
         Device {
             id,
             profile,
             edge,
             cloud,
+            control,
             queue: VecDeque::new(),
             active: None,
             stats: DeviceStats { latency: Summary::new(), ..Default::default() },
@@ -190,7 +212,8 @@ impl Device {
         }
         let ctx_before = req.seq.len();
         let remaining = self.profile.max_new_tokens - produced;
-        let drafted = self.edge.draft_batch_capped(self.profile.temp, remaining)?;
+        let knobs = self.control.begin_batch();
+        let drafted = self.edge.draft_batch_knobs(self.profile.temp, remaining, &knobs)?;
         let l = drafted.frame.tokens.len();
         if l == 0 {
             return Ok(None);
@@ -201,6 +224,8 @@ impl Device {
             bytes: drafted.bytes,
             frame_bits: drafted.frame_bits,
             verdict: None,
+            queue_wait_s: 0.0,
+            uplink_s: 0.0,
         });
         self.stats.drafted_tokens += l as u64;
         Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * l as f64))
@@ -211,8 +236,15 @@ impl Device {
         self.pending.as_ref().map(|p| p.frame_bits).unwrap_or(0)
     }
 
-    pub fn note_uplink(&mut self, bits: usize) {
+    /// Record the pending frame's trip through the shared uplink: bits
+    /// shipped, queue wait, and total uplink time (the control plane's
+    /// channel observations).
+    pub fn note_uplink(&mut self, bits: usize, queue_wait_s: f64, uplink_s: f64) {
         self.stats.uplink_bits += bits as u64;
+        if let Some(p) = self.pending.as_mut() {
+            p.queue_wait_s = queue_wait_s;
+            p.uplink_s = uplink_s;
+        }
     }
 
     /// Decode the pending frame from its wire bytes and verify it against
@@ -289,6 +321,14 @@ impl Device {
         if verdict.rejected {
             self.stats.rejected_batches += 1;
         }
+        self.control.feedback(&BatchOutcome {
+            drafted: pending.drafted,
+            accepted: verdict.accepted,
+            rejected: verdict.rejected,
+            frame_bits: pending.frame_bits,
+            t_uplink_s: pending.uplink_s,
+            queue_wait_s: pending.queue_wait_s,
+        });
         let produced = req.seq.len() - req.prompt_len;
         Ok(produced >= self.profile.max_new_tokens || !self.room_left())
     }
@@ -367,6 +407,43 @@ mod tests {
         d.complete_request(4.0).unwrap();
         d.start_next_request(4.0).unwrap().unwrap();
         assert_eq!(d.active.as_ref().unwrap().arrived_at, 2.0);
+    }
+
+    #[test]
+    fn adaptive_device_holds_bits_near_target() {
+        let world = SyntheticWorld::new(64, 0.5, 7);
+        let profile = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 48,
+            adaptive: AdaptiveMode::Aimd { target_bits: 500 },
+            ..Default::default()
+        };
+        let mut d = Device::new(0, profile, &world, 42);
+        d.queue.push_back(0.0);
+        d.start_next_request(0.0).unwrap().unwrap();
+        loop {
+            d.note_uplink(d.frame_bits(), 1e-4, 1e-3);
+            d.verify_now().unwrap();
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            if d.begin_batch().unwrap().is_none() {
+                break;
+            }
+        }
+        d.complete_request(1.0).unwrap();
+        assert_eq!(d.stats.completed, 1);
+        assert!(d.stats.batches > 0);
+        assert_eq!(
+            d.control.link_state().rounds,
+            d.stats.batches,
+            "every batch feeds the estimator"
+        );
+        let bits_per_round = d.stats.uplink_bits as f64 / d.stats.batches as f64;
+        assert!(
+            bits_per_round <= 500.0 * 1.4,
+            "AIMD keeps wire bits/round near the 500b target, got {bits_per_round}"
+        );
     }
 
     #[test]

@@ -30,11 +30,22 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use crate::channel::SharedUplink;
+use crate::control::AdaptiveMode;
 use crate::coordinator::Metrics;
 use crate::model::synthetic::SyntheticWorld;
 use crate::sqs::Policy;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
+
+/// Report label for a device: the policy name, plus the adaptive mode
+/// when a control plane is steering it (`Off` keeps the bare name so
+/// pre-control-plane digests stay byte-identical).
+fn policy_label(policy: &Policy, adaptive: AdaptiveMode) -> String {
+    match adaptive {
+        AdaptiveMode::Off => policy.name().to_string(),
+        m => format!("{}+{}", policy.name(), m.name()),
+    }
+}
 
 /// Whole-fleet configuration.
 pub struct FleetConfig {
@@ -152,6 +163,26 @@ pub struct FleetReport {
 }
 
 impl FleetReport {
+    /// Fleet-wide mean wire bits per speculative round — the control
+    /// plane's AIMD budget basis.
+    pub fn mean_bits_per_round(&self) -> f64 {
+        let batches: u64 = self.per_device.iter().map(|d| d.batches).sum();
+        if batches == 0 {
+            0.0
+        } else {
+            self.uplink_bits as f64 / batches as f64
+        }
+    }
+
+    /// Fleet-wide uplink bits per generated token.
+    pub fn bits_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.uplink_bits as f64 / self.tokens as f64
+        }
+    }
+
     /// Exact textual fingerprint for determinism tests: every float is
     /// rendered via to_bits, so two runs match iff they are bit-identical.
     pub fn digest(&self) -> String {
@@ -307,8 +338,10 @@ impl FleetSim {
             }
             EventKind::DraftDone => {
                 let bits = self.devices[d].frame_bits();
-                self.devices[d].note_uplink(bits);
                 let (start, delivered) = self.uplink.reserve(now, bits);
+                // queue wait + total uplink time feed the device's link
+                // estimator (its control plane's channel observations)
+                self.devices[d].note_uplink(bits, start - now, delivered - now);
                 self.metrics.observe("fleet.uplink_wait_s", start - now);
                 self.events.push(delivered, d, EventKind::UplinkDelivered);
             }
@@ -400,12 +433,13 @@ impl FleetSim {
             tokens += st.tokens;
             drafted += st.drafted_tokens;
             accepted += st.accepted_tokens;
-            let entry = by_policy.entry(dev.profile.policy.name().to_string()).or_insert((0, 0));
+            let label = policy_label(&dev.profile.policy, dev.profile.adaptive);
+            let entry = by_policy.entry(label.clone()).or_insert((0, 0));
             entry.0 += st.rejected_batches;
             entry.1 += st.batches;
             per_device.push(DeviceReport {
                 id: dev.id,
-                policy: dev.profile.policy.name().to_string(),
+                policy: label,
                 completed: st.completed,
                 tokens: st.tokens,
                 batches: st.batches,

@@ -9,6 +9,7 @@
 
 pub mod channel;
 pub mod cloud;
+pub mod control;
 pub mod coordinator;
 pub mod edge;
 pub mod exp;

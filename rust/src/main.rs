@@ -12,6 +12,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use sqs_sd::channel::LinkConfig;
+use sqs_sd::control::AdaptiveMode;
 use sqs_sd::coordinator::{PjrtStack, SessionConfig, TimingMode};
 use sqs_sd::fleet::{
     heterogeneous_profiles, mixed_policy_profiles, DeviceProfile, FleetConfig, FleetSim,
@@ -73,11 +74,47 @@ fn policy_opts(a: Args) -> Args {
         .opt("temp", "0.8", "sampling temperature (SLM and LLM)")
         .opt("ell", "100", "lattice resolution")
         .opt("budget", "5000", "per-batch uplink budget B in bits")
+        .opt("adaptive", "off", "link-adaptive control plane: off|aimd|window")
+        .opt(
+            "uplink-budget-bits",
+            "0",
+            "AIMD wire-bits-per-round target (0 = use --budget)",
+        )
         .opt("uplink-bps", "1000000", "uplink bandwidth, bits/s")
         .opt("downlink-bps", "0", "downlink bandwidth, bits/s (0 = 10x uplink)")
         .opt("rtt-ms", "20", "round-trip propagation, milliseconds")
         .opt("jitter-ms", "0", "uniform link jitter amplitude, milliseconds")
         .opt("seed", "0", "rng seed")
+}
+
+fn parse_adaptive(a: &Args) -> Result<AdaptiveMode> {
+    let target = a.get_usize("uplink-budget-bits").map_err(|e| anyhow!(e))?;
+    let budget = a.get_usize("budget").map_err(|e| anyhow!(e))?;
+    Ok(match a.get("adaptive").as_str() {
+        "off" => AdaptiveMode::Off,
+        "aimd" => {
+            if target == 0 && budget == 0 {
+                bail!("aimd needs --uplink-budget-bits (or --budget) > 0");
+            }
+            AdaptiveMode::Aimd { target_bits: if target > 0 { target } else { budget } }
+        }
+        "window" => AdaptiveMode::Window { grow: 0.8, shrink: 0.5 },
+        other => bail!("unknown adaptive mode '{other}' (off|aimd|window)"),
+    })
+}
+
+/// True when AIMD pins a top-K sparsifier over a C-SQS policy, bypassing
+/// the conformal threshold — legal, but the Theorem 2 certificate is
+/// suppressed, which the operator should hear about.
+fn aimd_overrides_csqs(policy: Policy, adaptive: AdaptiveMode) -> bool {
+    matches!(policy, Policy::CSqs { .. }) && matches!(adaptive, AdaptiveMode::Aimd { .. })
+}
+
+fn warn_aimd_overrides_csqs() {
+    eprintln!(
+        "note: --adaptive aimd overrides the C-SQS conformal threshold with \
+         top-K (conformal certificate suppressed)"
+    );
 }
 
 fn link_from(a: &Args) -> Result<LinkConfig> {
@@ -101,6 +138,7 @@ fn session_cfg(a: &Args, max_new: usize) -> Result<SessionConfig> {
         max_new_tokens: max_new,
         seed: a.get_u64("seed").map_err(|e| anyhow!(e))?,
         timing: TimingMode::Measured,
+        adaptive: parse_adaptive(a)?,
         ..Default::default()
     })
 }
@@ -135,9 +173,16 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
 
     let cfg = session_cfg(&a, max_new)?;
     let policy = cfg.policy;
+    let adaptive = cfg.adaptive;
+    if aimd_overrides_csqs(policy, adaptive) {
+        warn_aimd_overrides_csqs();
+    }
     let mut sess = stack.session(link, cfg);
     let res = sess.run(&prompt)?;
     println!("{}", decode(&res.tokens[res.prompt_len..]));
+    if adaptive != AdaptiveMode::Off {
+        println!("--- control plane: {}", sess.control.describe());
+    }
     println!(
         "--- {}: {} tokens in {} batches | latency {:.3}s ({:.1} ms/tok) \
          [slm {:.3} + up {:.3} + llm {:.3} + down {:.3}]",
@@ -278,6 +323,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         draft_token_s: a.get_f64("draft-token-ms").map_err(|e| anyhow!(e))? / 1e3,
         downlink_bps: link.downlink_bps,
         workload,
+        adaptive: parse_adaptive(&a)?,
         ..Default::default()
     };
     // --heterogeneous and --mixed compose: vary the hardware, then
@@ -291,6 +337,10 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         for (p, m) in profiles.iter_mut().zip(mixed_policy_profiles(n, base)) {
             p.policy = m.policy;
         }
+    }
+    // check post-overlay: --mixed can put CSqs under an AIMD control loop
+    if profiles.iter().any(|p| aimd_overrides_csqs(p.policy, p.adaptive)) {
+        warn_aimd_overrides_csqs();
     }
     let cfg = FleetConfig {
         profiles,

@@ -6,10 +6,12 @@
 //!   <- {"id": 1, "text": "...", "tokens": 32, "batches": 5,
 //!       "resampling_rate": 0.2, "acceptance": 0.81,
 //!       "bits_per_token": 92.5, "latency_s": 0.41,
-//!       "uplink_bits": 2960, "t_downlink_s": 0.05, ...}
+//!       "uplink_bits": 2960, "downlink_bits": 320,
+//!       "t_downlink_s": 0.05, ...}
 //!
-//! The per-direction ledger fields (`uplink_bits`, `t_uplink_s`,
-//! `t_downlink_s`) let clients observe bandwidth use per request.
+//! The per-direction ledger fields (`uplink_bits`, `downlink_bits`,
+//! `t_uplink_s`, `t_downlink_s`) let clients observe bandwidth use per
+//! request in both directions.
 //!
 //! Architecture: acceptor threads feed a shared request channel; a single
 //! inference thread owns the (thread-bound) PJRT stack and serves requests
@@ -182,6 +184,7 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
                             ("t_llm_s", Json::Num(res.t_llm_s)),
                             ("t_downlink_s", Json::Num(res.t_downlink_s)),
                             ("uplink_bits", Json::Num(res.uplink_bits as f64)),
+                            ("downlink_bits", Json::Num(res.downlink_bits as f64)),
                             ("mean_k", Json::Num(res.mean_k())),
                         ])
                     }
