@@ -13,9 +13,13 @@
 //! shrinks ℓ when acceptance collapses and so fails faster per round.
 //! Everything runs in virtual time — results are bit-reproducible.
 //!
-//! Outputs: results/adaptive_link.csv (per-session rows) and
+//! Outputs: results/adaptive_link.csv (per-session rows),
+//! results/adaptive_knobs.csv + results/adaptive_fleet_knobs.csv
+//! (per-round knob traces K^t / ell^t / B^t, for convergence plots), and
 //! results/BENCH_adaptive.json (p50/p95 latency, bits/token,
-//! bits/round — the cross-PR perf trajectory).
+//! bits/round — the cross-PR perf trajectory).  The fleet section runs
+//! both a steady shared uplink and a scheduled mid-run capacity drop
+//! (`FleetConfig::uplink_schedule`).
 
 use sqs_sd::channel::{LinkConfig, SimulatedLink};
 use sqs_sd::control::AdaptiveMode;
@@ -65,7 +69,8 @@ fn main() -> anyhow::Result<()> {
         ("aimd", AdaptiveMode::Aimd { target_bits: TARGET_BITS }),
         ("window", AdaptiveMode::Window { grow: 0.8, shrink: 0.5 }),
     ];
-    // uplink schedules keyed by frame (= round) index
+    // uplink schedules keyed by frame index (the protocol-v2 Hello is
+    // frame 0, so step N lands at speculative round N-1)
     let scenarios: [(&str, Vec<(u64, f64)>); 3] = [
         ("steady", vec![]),
         ("drop", vec![(10, 2.5e5)]),
@@ -81,6 +86,11 @@ fn main() -> anyhow::Result<()> {
         "adaptive_link.csv",
         "mode,scenario,seed,latency_s,ms_per_token,bits_per_token,\
          mean_bits_per_round,batches,acceptance",
+    );
+    // per-round knob traces: convergence, not just steady-state means
+    let mut knob_csv = CsvOut::new(
+        "adaptive_knobs.csv",
+        "mode,scenario,seed,round,k,ell,budget_bits,frame_bits",
     );
     let mut points = Vec::new();
     let mut drop_bpr = std::collections::BTreeMap::new();
@@ -107,6 +117,13 @@ fn main() -> anyhow::Result<()> {
                     r.batches.len(),
                     r.acceptance_rate(),
                 ));
+                for b in &r.batches {
+                    knob_csv.row(format!(
+                        "{mode_name},{scen_name},{seed},{},{}",
+                        b.knobs.csv(),
+                        b.frame_bits
+                    ));
+                }
             }
             println!(
                 "{mode_name:<8} {scen_name:<8} {:>12.4} {:>12.1} {:>12.1} {:>10.1}",
@@ -130,43 +147,63 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- fleet: adaptive devices on a congested shared uplink ----------
+    // two fleet scenarios: steady 250 kbit/s, and a scheduled mid-run
+    // capacity drop to 125 kbit/s after 40 shared frames (the ROADMAP's
+    // time-varying SharedUplink item)
     println!("\n== ADAPT-FLEET: 12 devices, 250 kbit/s shared uplink ==");
+    let fleet_scenarios: [(&str, Vec<(u64, f64)>); 2] =
+        [("steady", vec![]), ("drop", vec![(40, 1.25e5)])];
     let mut fleet_points = Vec::new();
+    let mut fleet_knob_csv = CsvOut::new(
+        "adaptive_fleet_knobs.csv",
+        "mode,scenario,device,round,k,ell,budget_bits",
+    );
     for (mode_name, mode) in &modes {
-        let base = DeviceProfile {
-            policy: Policy::KSqs { k: 8 },
-            max_new_tokens: 24,
-            workload: Workload::Poisson { rate_hz: 2.0 },
-            adaptive: *mode,
-            ..Default::default()
-        };
-        let mut cfg = FleetConfig::uniform(12, base);
-        cfg.uplink_bps = 2.5e5;
-        cfg.requests_per_device = if fast_mode() { 2 } else { 4 };
-        cfg.verifier = VerifierConfig { concurrency: 4, batch_max: 8, ..Default::default() };
-        cfg.seed = 4242;
-        let r = FleetSim::new(cfg).run()?;
-        let fleet_bpr = r.mean_bits_per_round();
-        let fleet_bpt = r.bits_per_token();
-        println!(
-            "{mode_name:<8} latency mean {:.4}s p99 {:.4}s | uplink {:.1}% | \
-             {:.0} bits/round | {:.1} bits/tok",
-            r.latency.mean(),
-            r.latency.p99(),
-            100.0 * r.uplink_utilization,
-            fleet_bpr,
-            fleet_bpt
-        );
-        fleet_points.push(Json::obj(vec![
-            ("mode", Json::Str(mode_name.to_string())),
-            ("latency_p50_s", Json::Num(r.latency.p50())),
-            ("latency_p95_s", Json::Num(r.latency.percentile(95.0))),
-            ("uplink_utilization", Json::Num(r.uplink_utilization)),
-            ("bits_per_round", Json::Num(fleet_bpr)),
-            ("bits_per_token", Json::Num(fleet_bpt)),
-        ]));
+        for (scen_name, schedule) in &fleet_scenarios {
+            let base = DeviceProfile {
+                policy: Policy::KSqs { k: 8 },
+                max_new_tokens: 24,
+                workload: Workload::Poisson { rate_hz: 2.0 },
+                adaptive: *mode,
+                ..Default::default()
+            };
+            let mut cfg = FleetConfig::uniform(12, base);
+            cfg.uplink_bps = 2.5e5;
+            cfg.uplink_schedule = schedule.clone();
+            cfg.requests_per_device = if fast_mode() { 2 } else { 4 };
+            cfg.verifier = VerifierConfig { concurrency: 4, batch_max: 8, ..Default::default() };
+            cfg.seed = 4242;
+            let r = FleetSim::new(cfg).run()?;
+            let fleet_bpr = r.mean_bits_per_round();
+            let fleet_bpt = r.bits_per_token();
+            println!(
+                "{mode_name:<8} {scen_name:<8} latency mean {:.4}s p99 {:.4}s | uplink {:.1}% | \
+                 {:.0} bits/round | {:.1} bits/tok",
+                r.latency.mean(),
+                r.latency.p99(),
+                100.0 * r.uplink_utilization,
+                fleet_bpr,
+                fleet_bpt
+            );
+            for d in &r.per_device {
+                for kp in &d.knob_trace {
+                    fleet_knob_csv.row(format!("{mode_name},{scen_name},{},{}", d.id, kp.csv()));
+                }
+            }
+            fleet_points.push(Json::obj(vec![
+                ("mode", Json::Str(mode_name.to_string())),
+                ("scenario", Json::Str(scen_name.to_string())),
+                ("latency_p50_s", Json::Num(r.latency.p50())),
+                ("latency_p95_s", Json::Num(r.latency.percentile(95.0))),
+                ("uplink_utilization", Json::Num(r.uplink_utilization)),
+                ("bits_per_round", Json::Num(fleet_bpr)),
+                ("bits_per_token", Json::Num(fleet_bpt)),
+            ]));
+        }
     }
     csv.finish();
+    knob_csv.finish();
+    fleet_knob_csv.finish();
 
     write_json_summary(
         "BENCH_adaptive.json",

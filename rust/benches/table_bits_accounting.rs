@@ -10,6 +10,7 @@
 
 use sqs_sd::codec::{DraftFrame, DraftToken, FrameCodec};
 use sqs_sd::exp::CsvOut;
+use sqs_sd::protocol::{Frame, WireCodec, FRAME_HEADER_BITS};
 use sqs_sd::sqs::bits::{self, SchemeBits};
 use sqs_sd::sqs::{sparse_quantize, Sparsifier};
 use sqs_sd::util::check::Gen;
@@ -47,12 +48,30 @@ fn main() -> anyhow::Result<()> {
             let mut codec_a = FrameCodec::new(vocab, ell, SchemeBits::Adaptive, 0);
             let (_, _, bd) = codec_a.encode(&DraftFrame {
                 batch_id: 0,
-                tokens: vec![DraftToken { quant: quant_k, token: tok }],
+                tokens: vec![DraftToken { quant: quant_k.clone(), token: tok }],
             });
             let w_adapt = bd[0].dist_bits();
 
             assert_eq!(f_fixed, w_fixed, "K={k} ell={ell}: fixed-K wire != formula");
             assert_eq!(f_adapt, w_adapt, "K={k} ell={ell}: adaptive wire != formula");
+
+            // protocol v2: the versioned frame costs exactly the 8-bit
+            // header over the v1 layout — per-token b_n is untouched
+            let v1_frame = DraftFrame {
+                batch_id: 0,
+                tokens: vec![DraftToken { quant: quant_k, token: tok }],
+            };
+            let mut v1 = FrameCodec::new(vocab, ell, SchemeBits::FixedK, k);
+            let (_, v1_bits, _) = v1.encode(&v1_frame);
+            let mut v2 = WireCodec::for_config(vocab, ell, SchemeBits::FixedK, k);
+            let (_, v2_bits) = v2
+                .encode(&Frame::Draft(v1_frame))
+                .expect("v2 draft frame must encode");
+            assert_eq!(
+                v2_bits,
+                v1_bits + FRAME_HEADER_BITS,
+                "K={k} ell={ell}: v2 framing must add exactly the header"
+            );
 
             println!("{k:>6} {ell:>6} {f_fixed:>12} {w_fixed:>12} {f_adapt:>12} \
                       {w_adapt:>12} {f_dense:>10}");

@@ -30,6 +30,13 @@ pub struct SharedUplink {
     pub queue_wait_s: f64,
     free_at: f64,
     rng: Pcg64,
+    /// scheduled capacity steps `(frame index, new bps)`, sorted
+    /// ascending — the same frame-indexed semantics as
+    /// `SimulatedLink::with_uplink_schedule`, so fleet-wide capacity
+    /// drops stay bit-reproducible (deterministic in frame count, not
+    /// wall clock).
+    schedule: Vec<(u64, f64)>,
+    next_step: usize,
 }
 
 impl SharedUplink {
@@ -42,7 +49,18 @@ impl SharedUplink {
             queue_wait_s: 0.0,
             free_at: 0.0,
             rng: Pcg64::new(seed, 0x5A4ED),
+            schedule: Vec::new(),
+            next_step: 0,
         }
+    }
+
+    /// Attach a capacity schedule: step `(n, bps)` caps the shared
+    /// channel at `bps` from the n-th reserved frame (0-based) onward.
+    pub fn with_capacity_schedule(mut self, mut steps: Vec<(u64, f64)>) -> Self {
+        steps.sort_by(|a, b| a.0.cmp(&b.0));
+        self.schedule = steps;
+        self.next_step = 0;
+        self
     }
 
     /// Reserve the channel for a `bits`-sized frame submitted at virtual
@@ -50,6 +68,12 @@ impl SharedUplink {
     /// (>= now; the FIFO wait is `start - now`) and when the frame reaches
     /// the far end.
     pub fn reserve(&mut self, now: f64, bits: usize) -> (f64, f64) {
+        while self.next_step < self.schedule.len()
+            && self.schedule[self.next_step].0 <= self.ledger.frames
+        {
+            self.capacity_bps = self.schedule[self.next_step].1;
+            self.next_step += 1;
+        }
         let start = if self.free_at > now { self.free_at } else { now };
         let tx = bits as f64 / self.capacity_bps;
         let finish = start + tx;
@@ -141,6 +165,38 @@ mod tests {
         assert_eq!(up.utilization(5.0), 1.0); // clamped
         assert!((up.utilization(20.0) - 0.5).abs() < 1e-12);
         assert_eq!(up.utilization(0.0), 0.0);
+    }
+
+    #[test]
+    fn capacity_schedule_steps_at_frame_index() {
+        let mut up = SharedUplink::new(1000.0, 0.0, 0.0, 0)
+            .with_capacity_schedule(vec![(4, 250.0), (2, 500.0)]); // unsorted on purpose
+        let mut widths = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..6 {
+            let (start, delivered) = up.reserve(t, 1000);
+            widths.push(delivered - start);
+            t = delivered; // submit after the previous frame clears
+        }
+        // frames 0-1 @1kbps (1s), 2-3 @500bps (2s), 4-5 @250bps (4s)
+        assert!((widths[0] - 1.0).abs() < 1e-12 && (widths[1] - 1.0).abs() < 1e-12);
+        assert!((widths[2] - 2.0).abs() < 1e-12 && (widths[3] - 2.0).abs() < 1e-12);
+        assert!((widths[4] - 4.0).abs() < 1e-12 && (widths[5] - 4.0).abs() < 1e-12);
+        assert_eq!(up.ledger.frames, 6);
+    }
+
+    #[test]
+    fn empty_capacity_schedule_changes_nothing() {
+        let mut plain = SharedUplink::new(1e6, 0.01, 0.0, 3);
+        let mut scheduled =
+            SharedUplink::new(1e6, 0.01, 0.0, 3).with_capacity_schedule(Vec::new());
+        for (i, bits) in [100usize, 5000, 1, 777].into_iter().enumerate() {
+            let now = i as f64 * 0.1;
+            let a = plain.reserve(now, bits);
+            let b = scheduled.reserve(now, bits);
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::codec::{DraftFrame, FeedbackFrame};
 use crate::model::TargetLm;
+use crate::protocol::{Ext, FeedbackV2};
 use crate::sqs::probs::{residual, sample};
 use crate::util::rng::Pcg64;
 
@@ -25,6 +26,16 @@ pub struct Verdict {
     pub t_llm: f64,
     /// the tokens committed to the target context this batch
     pub committed: Vec<u16>,
+}
+
+impl Verdict {
+    /// The protocol-v2 feedback frame for this verdict, carrying the
+    /// given extensions (congestion bit, budget grant, ...).
+    pub fn feedback_v2(&self, exts: Vec<Ext>) -> FeedbackV2 {
+        let mut fb = FeedbackV2::from_v1(&self.feedback);
+        fb.exts = exts;
+        fb
+    }
 }
 
 pub struct CloudNode<T: TargetLm> {

@@ -152,6 +152,19 @@ impl FrameCodec {
     /// Serialize a frame; returns (bytes, total bits, per-token breakdown).
     pub fn encode(&mut self, frame: &DraftFrame) -> (Vec<u8>, usize, Vec<TokenBits>) {
         let mut w = BitWriter::new();
+        let breakdown = self.encode_into(frame, &mut w);
+        let bits = w.bit_len();
+        (w.finish(), bits, breakdown)
+    }
+
+    /// Serialize the v1 draft layout into an existing bit stream (the
+    /// protocol-v2 frame body); returns the per-token breakdown.
+    pub fn encode_into(&mut self, frame: &DraftFrame, w: &mut BitWriter) -> Vec<TokenBits> {
+        assert!(
+            frame.tokens.len() <= u8::MAX as usize,
+            "frame of {} tokens overflows the 8-bit count field",
+            frame.tokens.len()
+        );
         w.write_bits_u64(frame.batch_id as u64, 32);
         w.write_bits_u64(frame.tokens.len() as u64, 8);
         let tok_bits = ceil_log2_u64(self.vocab as u64);
@@ -202,13 +215,21 @@ impl FrameCodec {
             breakdown.push(tb);
         }
 
-        let bits = w.bit_len();
-        (w.finish(), bits, breakdown)
+        breakdown
     }
 
     /// Decode a frame previously produced by `encode` (same config).
     pub fn decode(&mut self, bytes: &[u8]) -> Result<DraftFrame, String> {
         let mut r = BitReader::new(bytes);
+        self.decode_from(&mut r)
+    }
+
+    /// Decode the v1 draft layout from a bit stream (the protocol-v2
+    /// frame body).  Malformed input — truncation, out-of-range ranks,
+    /// tokens beyond the vocabulary — returns `Err`, never panics: ranks
+    /// are range-checked against their binomial bounds *before* the
+    /// unrank (whose precondition would otherwise be violated).
+    pub fn decode_from(&mut self, r: &mut BitReader) -> Result<DraftFrame, String> {
         let batch_id = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
         let n = r.read_bits_u64(8).map_err(|e| e.to_string())? as usize;
         let tok_bits = ceil_log2_u64(self.vocab as u64).max(1);
@@ -220,6 +241,13 @@ impl FrameCodec {
                     let k = self.fixed_k;
                     let nbits = self.support_field_bits(k);
                     let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                    let in_range = with_binomials(|c| {
+                        rank.cmp_big(c.get(self.vocab as u64, k as u64))
+                            == std::cmp::Ordering::Less
+                    });
+                    if !in_range {
+                        return Err(format!("support rank out of range for K={k}"));
+                    }
                     (with_binomials(|c| subset_unrank(rank, self.vocab, k, c)), k)
                 }
                 SchemeBits::Adaptive => {
@@ -229,6 +257,13 @@ impl FrameCodec {
                     }
                     let nbits = self.support_field_bits(k);
                     let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                    let in_range = with_binomials(|c| {
+                        rank.cmp_big(c.get(self.vocab as u64, k as u64))
+                            == std::cmp::Ordering::Less
+                    });
+                    if !in_range {
+                        return Err(format!("support rank out of range for k={k}"));
+                    }
                     (with_binomials(|c| subset_unrank(rank, self.vocab, k, c)), k)
                 }
                 SchemeBits::Dense => {
@@ -239,12 +274,22 @@ impl FrameCodec {
             let counts = if k > 1 {
                 let nbits = self.lattice_field_bits(k);
                 let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                let in_range = with_binomials(|c| {
+                    rank.cmp_big(c.get(self.ell as u64 + k as u64 - 1, k as u64 - 1))
+                        == std::cmp::Ordering::Less
+                });
+                if !in_range {
+                    return Err(format!("lattice rank out of range for K={k}, ell={}", self.ell));
+                }
                 with_binomials(|c| composition_unrank(rank, self.ell, k, c))
             } else {
                 vec![self.ell]
             };
 
             let token = r.read_bits_u64(tok_bits).map_err(|e| e.to_string())? as u16;
+            if token as usize >= self.vocab {
+                return Err(format!("draft token {token} outside vocab {}", self.vocab));
+            }
             tokens.push(DraftToken {
                 quant: Quantized {
                     support,
@@ -396,5 +441,29 @@ mod tests {
         // truncated input must error, not panic
         let err = codec.decode(&[0x00, 0x01]);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn out_of_range_ranks_error_instead_of_panicking() {
+        use crate::util::bitio::BitWriter;
+        // FixedK over a tiny vocab: C(4,2) = 6 subsets in 3 bits, so rank
+        // values 6 and 7 are representable but invalid — the decoder must
+        // reject them before unranking (which would panic)
+        let mut codec = FrameCodec::new(4, 10, SchemeBits::FixedK, 2);
+        let mut w = BitWriter::new();
+        w.write_bits_u64(1, 32); // batch id
+        w.write_bits_u64(1, 8); // one token
+        w.write_bits_u64(7, 3); // support rank 7 >= C(4,2)
+        w.write_bits_u64(0, 64); // plenty of trailing bits
+        assert!(codec.decode(&w.finish()).is_err());
+
+        // same for the lattice rank: C(10+2-1, 1) = 11 compositions
+        let mut w = BitWriter::new();
+        w.write_bits_u64(1, 32);
+        w.write_bits_u64(1, 8);
+        w.write_bits_u64(0, 3); // valid support rank
+        w.write_bits_u64(15, 4); // lattice rank 15 >= 11
+        w.write_bits_u64(0, 64);
+        assert!(codec.decode(&w.finish()).is_err());
     }
 }

@@ -1,6 +1,10 @@
 //! Bit-exact wire format: combinatorial-number-system support coding,
 //! stars-and-bars lattice coding, and frame assembly.  Payload sizes equal
 //! the paper's bit formulas by construction (asserted in tests).
+//!
+//! This is the *payload* layer (the protocol-v1 layouts).  The versioned
+//! frame taxonomy, handshake, and transports live in `crate::protocol`,
+//! which embeds these layouts bit-for-bit via `encode_into`/`decode_from`.
 
 pub mod combinadic;
 pub mod frame;

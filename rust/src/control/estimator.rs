@@ -59,6 +59,61 @@ impl Ewma {
     }
 }
 
+/// Sliding-window sample buffer with percentile queries — the EWMAs
+/// smooth bursts away by design, so tail-sensitive policies read a
+/// windowed percentile next to them (ROADMAP "estimator upgrades").
+///
+/// A ring buffer of the last `cap` samples; `percentile` sorts a copy on
+/// demand (cap is small — the control loop reads it once per round).
+#[derive(Clone, Debug)]
+pub struct Windowed {
+    cap: usize,
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Windowed {
+    pub fn new(cap: usize) -> Windowed {
+        assert!(cap >= 1, "window needs at least one slot");
+        Windowed { cap, buf: Vec::new(), next: 0 }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Percentile over the current window by linear interpolation
+    /// (p in [0, 100]); NaN when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.buf.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.buf.clone();
+        s.sort_by(f64::total_cmp);
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+}
+
 /// Snapshot of the estimator handed to `AdaptivePolicy::begin_batch`.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkState {
@@ -68,6 +123,9 @@ pub struct LinkState {
     pub throughput_bps: f64,
     /// Shared-uplink queueing delay estimate, seconds (0 on private links).
     pub queue_wait_s: f64,
+    /// p95 queue wait over the last `QUEUE_WAIT_WINDOW` rounds, seconds —
+    /// the tail the EWMA smooths away (0 before any observation).
+    pub queue_wait_p95_s: f64,
     /// Drafted-token acceptance rate estimate in [0, 1].
     pub acceptance: f64,
     /// Wire bits per speculative round estimate.
@@ -79,11 +137,16 @@ pub struct LinkState {
 /// Default EWMA history weight used by the control loop.
 pub const DEFAULT_GAMMA: f64 = 0.7;
 
-/// Windowless channel estimator fed once per speculative round.
+/// Rounds retained for the windowed queue-wait percentile.
+pub const QUEUE_WAIT_WINDOW: usize = 64;
+
+/// Channel estimator fed once per speculative round: EWMAs for the
+/// smooth signals plus a windowed percentile for the queue-wait tail.
 #[derive(Clone, Debug)]
 pub struct LinkEstimator {
     throughput: Ewma,
     queue_wait: Ewma,
+    queue_wait_window: Windowed,
     acceptance: Ewma,
     bits_per_round: Ewma,
     rounds: u64,
@@ -94,6 +157,7 @@ impl LinkEstimator {
         LinkEstimator {
             throughput: Ewma::new(gamma),
             queue_wait: Ewma::new(gamma),
+            queue_wait_window: Windowed::new(QUEUE_WAIT_WINDOW),
             acceptance: Ewma::new(gamma),
             bits_per_round: Ewma::new(gamma),
             rounds: 0,
@@ -107,6 +171,7 @@ impl LinkEstimator {
             self.throughput.observe(o.frame_bits as f64 / air_s);
         }
         self.queue_wait.observe(o.queue_wait_s.max(0.0));
+        self.queue_wait_window.observe(o.queue_wait_s.max(0.0));
         if o.drafted > 0 {
             self.acceptance.observe(o.accepted as f64 / o.drafted as f64);
         }
@@ -115,9 +180,15 @@ impl LinkEstimator {
     }
 
     pub fn state(&self) -> LinkState {
+        let p95 = if self.queue_wait_window.is_empty() {
+            0.0
+        } else {
+            self.queue_wait_window.percentile(95.0)
+        };
         LinkState {
             throughput_bps: self.throughput.get_or(f64::INFINITY),
             queue_wait_s: self.queue_wait.get_or(0.0),
+            queue_wait_p95_s: p95,
             acceptance: self.acceptance.get_or(1.0),
             bits_per_round: self.bits_per_round.get_or(0.0),
             rounds: self.rounds,
@@ -139,6 +210,8 @@ mod tests {
             frame_bits,
             t_uplink_s,
             queue_wait_s,
+            congestion: false,
+            grant_bits: None,
         }
     }
 
@@ -204,6 +277,7 @@ mod tests {
         assert_eq!(prior.rounds, 0);
         assert_eq!(prior.acceptance, 1.0);
         assert_eq!(prior.queue_wait_s, 0.0);
+        assert_eq!(prior.queue_wait_p95_s, 0.0);
         assert!(prior.throughput_bps.is_infinite());
 
         // 1000 bits over 1 ms of air time = 1 Mbit/s
@@ -222,6 +296,70 @@ mod tests {
         assert!(s2.acceptance > s.acceptance);
         assert!(s2.bits_per_round < s.bits_per_round);
         assert_eq!(s2.rounds, 2);
+    }
+
+    #[test]
+    fn windowed_percentile_stays_within_window_bounds() {
+        // property: at every step, any percentile lies within the min/max
+        // of the *current window contents* (samples older than `cap` are
+        // evicted and must stop influencing the estimate)
+        check("windowed percentile within window", 100, |g, _| {
+            let cap = g.usize(1, 40);
+            let n = g.usize(1, 200);
+            let mut w = Windowed::new(cap);
+            let mut all = Vec::new();
+            for i in 0..n {
+                let x = g.f64(-1e4, 1e4);
+                all.push(x);
+                w.observe(x);
+                let window = &all[i + 1 - (i + 1).min(cap)..];
+                let lo = window.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = window.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                for p in [0.0, 50.0, 95.0, 100.0] {
+                    let v = w.percentile(p);
+                    assert!(
+                        v >= lo - 1e-9 && v <= hi + 1e-9,
+                        "p{p} = {v} escaped window [{lo}, {hi}] (cap={cap})"
+                    );
+                }
+                assert_eq!(w.percentile(0.0), lo, "p0 is the window min");
+                assert_eq!(w.percentile(100.0), hi, "p100 is the window max");
+                assert!(w.percentile(95.0) >= w.percentile(50.0) - 1e-12, "monotone in p");
+            }
+            assert_eq!(w.len(), n.min(cap));
+        });
+    }
+
+    #[test]
+    fn windowed_evicts_old_spikes() {
+        // one huge spike, then a full window of calm samples: the spike
+        // must age out of the p95
+        let mut w = Windowed::new(8);
+        w.observe(1e9);
+        for _ in 0..8 {
+            w.observe(1.0);
+        }
+        assert_eq!(w.percentile(95.0), 1.0, "spike evicted after cap samples");
+        assert_eq!(w.len(), 8);
+    }
+
+    #[test]
+    fn estimator_p95_tracks_queue_tail_the_ewma_smooths() {
+        // 19 calm rounds + 1 spiky round per 20: the EWMA sits far below
+        // the spike, the windowed p95 rides near it
+        let mut est = LinkEstimator::new(DEFAULT_GAMMA);
+        for i in 0..60 {
+            let wait = if i % 20 == 19 { 0.5 } else { 0.001 };
+            est.observe(&outcome(8, 6, 700, wait + 1e-3, wait));
+        }
+        let s = est.state();
+        assert!(s.queue_wait_s < 0.1, "EWMA smooths the spikes: {}", s.queue_wait_s);
+        assert!(
+            s.queue_wait_p95_s > s.queue_wait_s,
+            "p95 ({}) must sit above the EWMA ({}) under bursts",
+            s.queue_wait_p95_s,
+            s.queue_wait_s
+        );
     }
 
     #[test]

@@ -25,8 +25,10 @@
 pub mod estimator;
 pub mod policy;
 
-pub use estimator::{Ewma, LinkEstimator, LinkState, DEFAULT_GAMMA};
-pub use policy::{AdaptivePolicy, AdaptiveWindow, BatchOutcome, BudgetAimd, Knobs, Static};
+pub use estimator::{Ewma, LinkEstimator, LinkState, Windowed, DEFAULT_GAMMA, QUEUE_WAIT_WINDOW};
+pub use policy::{
+    AdaptivePolicy, AdaptiveWindow, BatchOutcome, BudgetAimd, KnobPoint, Knobs, Static,
+};
 
 use crate::sqs::Policy;
 
@@ -130,6 +132,8 @@ mod tests {
             frame_bits,
             t_uplink_s: frame_bits as f64 / 1e6 + 0.01,
             queue_wait_s: 0.0,
+            congestion: false,
+            grant_bits: None,
         }
     }
 

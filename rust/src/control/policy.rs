@@ -40,6 +40,40 @@ pub struct Knobs {
     pub budget_bits: usize,
 }
 
+/// One per-round knob sample (K^t, ℓ^t, B^t) — the convergence traces
+/// the benches export next to the steady-state means.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KnobPoint {
+    /// speculative round index within the trace
+    pub round: u64,
+    /// top-K override if the policy pinned one (None: policy-owned
+    /// sparsifier, e.g. the conformal threshold)
+    pub k: Option<usize>,
+    pub ell: usize,
+    pub budget_bits: usize,
+}
+
+impl KnobPoint {
+    pub fn from_knobs(round: u64, knobs: &Knobs) -> KnobPoint {
+        let k = match knobs.sparsifier {
+            Some(Sparsifier::TopK(k)) => Some(k),
+            _ => None,
+        };
+        KnobPoint { round, k, ell: knobs.ell, budget_bits: knobs.budget_bits }
+    }
+
+    /// CSV cell: `round,k,ell,budget` (k = -1 when policy-owned).
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{},{}",
+            self.round,
+            self.k.map_or(-1, |k| k as i64),
+            self.ell,
+            self.budget_bits
+        )
+    }
+}
+
 /// What actually happened in one speculative round — the feedback half of
 /// the control loop, assembled by the session / fleet device from the
 /// latency ledger and the cloud verdict.
@@ -57,6 +91,11 @@ pub struct BatchOutcome {
     pub t_uplink_s: f64,
     /// time the frame waited before transmission began (shared uplink), s
     pub queue_wait_s: f64,
+    /// congestion bit piggybacked on the feedback frame (protocol v2)
+    pub congestion: bool,
+    /// explicit per-round uplink budget grant from the feedback frame's
+    /// v2 extension, bits (None: no grant rode this round)
+    pub grant_bits: Option<u32>,
 }
 
 /// A per-session knob controller.  `begin_batch` picks the knobs for the
@@ -107,16 +146,28 @@ impl AdaptivePolicy for Static {
 ///
 /// The step is decided at `begin_batch` from the last round *and* the
 /// link estimate.  Multiplicative decrease on a congestion event: the
-/// last frame overshot `target_bits`, or the estimated shared-uplink
-/// queue wait exceeds the air time of a target-sized frame at the
-/// estimated throughput (the channel, not just this session, is the
-/// bottleneck).  Additive increase (K += 1: finer distributions, better
-/// acceptance) only while the EWMA wire bits per round also sit at or
-/// under the target — a single small frame after a burst of fat ones
-/// holds instead of growing.  `md` defaults to 3/4, gentler than TCP's
-/// 1/2, so the sawtooth tracks the target more tightly.  The budget knob
-/// is pinned to the target so the edge's budget rule bounds the
-/// distribution payload while K controls how the budget is spent.
+/// last frame overshot the effective target, the cloud piggybacked a
+/// congestion bit on its feedback frame (protocol v2), or the estimated
+/// shared-uplink queue wait — the worse of the EWMA and the windowed
+/// p95, so bursty tails count — exceeds the air time of a target-sized
+/// frame at the estimated throughput (the channel, not just this
+/// session, is the bottleneck).  Additive increase (K += 1: finer
+/// distributions, better acceptance) only while the EWMA wire bits per
+/// round also sit at or under the target — a single small frame after a
+/// burst of fat ones holds instead of growing.  `md` defaults to 3/4,
+/// gentler than TCP's 1/2, so the sawtooth tracks the target more
+/// tightly.  The budget knob is pinned to the effective target so the
+/// edge's budget rule bounds the distribution payload while K controls
+/// how the budget is spent.
+///
+/// An explicit budget grant on the feedback frame *caps* the target:
+/// the policy converges to `min(target_bits, grant)` until a feedback
+/// frame arrives without a grant, at which point the configured target
+/// is back in charge.  A grant also supersedes the congestion bit it
+/// rode in with — the cloud said exactly how many bits it wants per
+/// round, so AIMD tracks that number instead of also backing off
+/// multiplicatively (a bare congestion bit, with no grant, still forces
+/// the multiplicative decrease).
 #[derive(Clone, Copy, Debug)]
 pub struct BudgetAimd {
     pub target_bits: usize,
@@ -128,6 +179,10 @@ pub struct BudgetAimd {
     pub md: f64,
     /// wire bits of the round awaiting an AIMD decision
     last_frame_bits: Option<usize>,
+    /// standing budget grant from the cloud (v2 feedback extension)
+    grant_bits: Option<u32>,
+    /// congestion bit from the last feedback frame
+    congested: bool,
 }
 
 impl BudgetAimd {
@@ -142,28 +197,44 @@ impl BudgetAimd {
             ell,
             md: 0.75,
             last_frame_bits: None,
+            grant_bits: None,
+            congested: false,
+        }
+    }
+
+    /// The target in force this round: the configured budget, capped by
+    /// any standing cloud grant.
+    pub fn effective_target(&self) -> usize {
+        match self.grant_bits {
+            Some(g) => (g as usize).max(1).min(self.target_bits),
+            None => self.target_bits,
         }
     }
 
     /// Estimated queue congestion: waiting longer for the channel than a
     /// target-sized frame takes to transmit means shrinking K cannot be
     /// deferred to this session's own overshoot signal.
-    fn queue_congested(&self, link: &LinkState) -> bool {
+    fn queue_congested(&self, link: &LinkState, target: usize) -> bool {
+        let wait = link.queue_wait_s.max(link.queue_wait_p95_s);
         link.rounds > 0
             && link.throughput_bps.is_finite()
             && link.throughput_bps > 0.0
-            && link.queue_wait_s > self.target_bits as f64 / link.throughput_bps
+            && wait > target as f64 / link.throughput_bps
     }
 }
 
 impl AdaptivePolicy for BudgetAimd {
     fn begin_batch(&mut self, link: &LinkState) -> Knobs {
+        let target = self.effective_target();
+        // a bare congestion bit forces back-off; with a grant attached,
+        // the grant (folded into `target`) is the control signal
+        let signal = self.congested && self.grant_bits.is_none();
         if let Some(frame) = self.last_frame_bits.take() {
-            if frame > self.target_bits || self.queue_congested(link) {
+            if frame > target || signal || self.queue_congested(link, target) {
                 // congestion event: multiplicative decrease
                 self.k =
                     ((self.k as f64 * self.md).floor() as usize).clamp(self.k_min, self.k_max);
-            } else if link.bits_per_round <= self.target_bits as f64 {
+            } else if link.bits_per_round <= target as f64 {
                 // additive increase, gated on the EWMA having headroom too
                 self.k = (self.k + 1).min(self.k_max);
             }
@@ -171,12 +242,14 @@ impl AdaptivePolicy for BudgetAimd {
         Knobs {
             sparsifier: Some(Sparsifier::top_k(self.k)),
             ell: self.ell,
-            budget_bits: self.target_bits,
+            budget_bits: target,
         }
     }
 
     fn feedback(&mut self, outcome: &BatchOutcome) {
         self.last_frame_bits = Some(outcome.frame_bits);
+        self.grant_bits = outcome.grant_bits;
+        self.congested = outcome.congestion;
     }
 
     fn name(&self) -> &'static str {
@@ -255,6 +328,7 @@ mod tests {
         LinkState {
             throughput_bps: 1e6,
             queue_wait_s: 0.0,
+            queue_wait_p95_s: 0.0,
             acceptance: 1.0,
             bits_per_round: 0.0,
             rounds: 0,
@@ -269,6 +343,8 @@ mod tests {
             frame_bits,
             t_uplink_s: 1e-3,
             queue_wait_s: 0.0,
+            congestion: false,
+            grant_bits: None,
         }
     }
 
@@ -325,6 +401,78 @@ mod tests {
         };
         p.begin_batch(&queued);
         assert!(p.k < 8, "queue congestion must shrink K, got {}", p.k);
+    }
+
+    #[test]
+    fn aimd_caps_target_at_the_cloud_grant() {
+        let mut p = BudgetAimd::new(5000, 8, 64, 15);
+        assert_eq!(p.begin_batch(&idle_link()).budget_bits, 5000);
+        // a grant arrives: the effective target is min(configured, grant)
+        let mut granted = outcome(10, 10, 400);
+        granted.grant_bits = Some(300);
+        p.feedback(&granted);
+        let knobs = p.begin_batch(&idle_link());
+        assert_eq!(knobs.budget_bits, 300, "grant caps the budget knob");
+        assert!(p.k < 8, "400b frame over the 300b grant is a congestion event");
+        // grants above the configured target never raise it
+        let mut generous = outcome(10, 10, 100);
+        generous.grant_bits = Some(1_000_000);
+        p.feedback(&generous);
+        assert_eq!(p.begin_batch(&idle_link()).budget_bits, 5000);
+        // a grant-free feedback frame restores the configured target
+        p.feedback(&outcome(10, 10, 100));
+        assert_eq!(p.begin_batch(&idle_link()).budget_bits, 5000);
+    }
+
+    #[test]
+    fn aimd_treats_the_congestion_bit_as_congestion() {
+        let mut p = BudgetAimd::new(600, 8, 64, 15);
+        let mut o = outcome(10, 10, 100); // frame itself far under target...
+        o.congestion = true; // ...but the cloud says its queue is building
+        p.feedback(&o);
+        p.begin_batch(&idle_link());
+        assert!(p.k < 8, "congestion bit must shrink K, got {}", p.k);
+        // without the bit the same frame would have grown K
+        let mut q = BudgetAimd::new(600, 8, 64, 15);
+        q.feedback(&outcome(10, 10, 100));
+        q.begin_batch(&idle_link());
+        assert_eq!(q.k, 9);
+        // a grant riding with the bit supersedes it: the grant is the
+        // control signal, so a frame under the grant still grows K
+        let mut r = BudgetAimd::new(600, 8, 64, 15);
+        let mut o = outcome(10, 10, 100);
+        o.congestion = true;
+        o.grant_bits = Some(500);
+        r.feedback(&o);
+        let knobs = r.begin_batch(&idle_link());
+        assert_eq!(knobs.budget_bits, 500);
+        assert_eq!(r.k, 9, "granted congestion does not force MD under the grant");
+    }
+
+    #[test]
+    fn aimd_reacts_to_the_queue_wait_tail() {
+        // EWMA calm, but the windowed p95 shows a bursty tail: congestion
+        let mut p = BudgetAimd::new(600, 8, 64, 15);
+        p.feedback(&outcome(10, 10, 500));
+        let bursty = LinkState {
+            throughput_bps: 1e5,
+            queue_wait_s: 1e-4,  // smooth average looks fine
+            queue_wait_p95_s: 0.05, // 600b @ 100kbps = 6ms air << 50ms tail
+            rounds: 8,
+            ..idle_link()
+        };
+        p.begin_batch(&bursty);
+        assert!(p.k < 8, "p95 queue tail must shrink K, got {}", p.k);
+    }
+
+    #[test]
+    fn knob_points_snapshot_the_knobs() {
+        let knobs = Knobs { sparsifier: Some(Sparsifier::top_k(5)), ell: 12, budget_bits: 700 };
+        let kp = KnobPoint::from_knobs(3, &knobs);
+        assert_eq!(kp, KnobPoint { round: 3, k: Some(5), ell: 12, budget_bits: 700 });
+        assert_eq!(kp.csv(), "3,5,12,700");
+        let deferred = Knobs { sparsifier: None, ell: 15, budget_bits: 5000 };
+        assert_eq!(KnobPoint::from_knobs(0, &deferred).csv(), "0,-1,15,5000");
     }
 
     #[test]

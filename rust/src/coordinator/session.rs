@@ -2,21 +2,29 @@
 //! loop, with the latency ledger the paper's figures are built from.
 //!
 //! Latency model (matching [22]'s decomposition, §4 of the paper):
-//!   total = sum over batches of
+//!   total = handshake (Hello up + HelloAck down) + sum over batches of
 //!     t_slm (measured draft compute) + t_uplink (simulated: frame bits /
 //!     bandwidth + propagation) + t_llm (measured verify compute) +
 //!     t_downlink (simulated feedback).
 //! Compute can optionally be *modeled* (fixed per-call costs) for
 //! hardware-independent, exactly reproducible sweeps — used by the
 //! synthetic-backend benches; PJRT benches default to measured.
+//!
+//! Since protocol v2 the session speaks typed frames through a
+//! [`LinkTransport`]: drafts and feedback are encoded exactly once, by
+//! the transport, and the cloud side decodes the same bytes — there is
+//! no codec call in the session itself.  The one-time handshake bits are
+//! ledgered in `uplink_bits`/`downlink_bits` (broken out in
+//! `SessionResult` so bit-accounting tests stay exact).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::channel::SimulatedLink;
 use crate::cloud::CloudNode;
-use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop};
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint};
 use crate::edge::EdgeNode;
 use crate::model::{DraftLm, TargetLm};
+use crate::protocol::{negotiate, Direction, Frame, LinkTransport, Transport};
 use crate::sqs::Policy;
 use crate::util::stats::Summary;
 
@@ -60,7 +68,7 @@ impl Default for SessionConfig {
     }
 }
 
-/// Per-batch record (diagnostics, figure generation).
+/// Per-batch record (diagnostics, figure generation, knob traces).
 #[derive(Clone, Debug)]
 pub struct BatchRecord {
     pub drafted: usize,
@@ -68,7 +76,11 @@ pub struct BatchRecord {
     pub rejected: bool,
     pub dist_bits: usize,
     pub frame_bits: usize,
+    /// downlink feedback frame size, bits (v2: varies with extensions)
+    pub feedback_bits: usize,
     pub mean_k: f64,
+    /// the control-plane knobs (K^t, ℓ^t, B^t) in force this round
+    pub knobs: KnobPoint,
     pub t_slm: f64,
     pub t_uplink: f64,
     pub t_llm: f64,
@@ -89,6 +101,10 @@ pub struct SessionResult {
     pub t_downlink_s: f64,
     pub uplink_bits: u64,
     pub downlink_bits: u64,
+    /// one-time Hello bits (included in `uplink_bits`)
+    pub handshake_uplink_bits: u64,
+    /// one-time HelloAck bits (included in `downlink_bits`)
+    pub handshake_downlink_bits: u64,
     pub conformal_empirical_alpha: Option<f64>,
     pub conformal_bound: Option<f64>,
     pub conformal_t: Option<u64>,
@@ -148,7 +164,8 @@ impl SessionResult {
 pub struct SdSession<D: DraftLm, T: TargetLm> {
     pub edge: EdgeNode<D>,
     pub cloud: CloudNode<T>,
-    pub link: SimulatedLink,
+    /// typed frame channel over the simulated link
+    pub transport: LinkTransport,
     pub cfg: SessionConfig,
     /// link-adaptive control plane, consulted once per batch
     pub control: ControlLoop,
@@ -179,7 +196,14 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             vocab,
         );
         let cloud = CloudNode::new(target, cfg.seed ^ 0xC);
-        SdSession { edge, cloud, link, cfg, control, seq: Vec::new() }
+        SdSession {
+            edge,
+            cloud,
+            transport: LinkTransport::new(link),
+            cfg,
+            control,
+            seq: Vec::new(),
+        }
     }
 
     /// Run the speculative-decoding loop to completion.
@@ -188,11 +212,49 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         self.cloud.start(prompt)?;
         self.seq = prompt.to_vec();
 
+        // ---- handshake: negotiate version + codec parameters ------------
+        // The edge advertises its codec config; the cloud validates and
+        // acks.  Both frames ride the simulated link, so their bits and
+        // latency are in the ledger like every other wire event.
+        let hello = self.edge.wire.hello().map_err(|e| anyhow::anyhow!("handshake: {e}"))?;
+        let d_hello = self.transport.send_frame(
+            Direction::Up,
+            &Frame::Hello(hello),
+            &mut self.edge.wire,
+            0.0,
+        )?;
+        let heard = match self.transport.recv_frame(Direction::Up, &mut self.edge.wire)? {
+            Frame::Hello(h) => h,
+            other => bail!("handshake: expected Hello on the uplink, got {}", other.name()),
+        };
+        let ack = negotiate(&heard).map_err(|e| anyhow::anyhow!("handshake rejected: {e}"))?;
+        let d_ack = self.transport.send_frame(
+            Direction::Down,
+            &Frame::HelloAck(ack),
+            &mut self.edge.wire,
+            0.0,
+        )?;
+        let ack = match self.transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+            Frame::HelloAck(a) => a,
+            other => bail!("handshake: expected HelloAck, got {}", other.name()),
+        };
+        if !ack.ok {
+            bail!("handshake: cloud rejected the session");
+        }
+        if !self.edge.wire.matches(&ack) {
+            bail!("handshake: ack does not match the advertised codec config");
+        }
+
+        let hs_up = d_hello.bits as u64;
+        let hs_down = d_ack.bits as u64;
+        let mut uplink_bits = hs_up;
+        let mut downlink_bits = hs_down;
+        let (mut t_slm, mut t_llm) = (0.0, 0.0);
+        let mut t_up = d_hello.latency_s();
+        let mut t_down = d_ack.latency_s();
+
         let mut batches = Vec::new();
         let mut n_rej = 0usize;
-        let (mut t_slm, mut t_up, mut t_llm, mut t_down) = (0.0, 0.0, 0.0, 0.0);
-        let mut uplink_bits = 0u64;
-        let mut downlink_bits = 0u64;
 
         while self.seq.len() - prompt.len() < self.cfg.max_new_tokens
             && self.room_left()
@@ -215,18 +277,26 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 TimingMode::Modeled { slm_step_s, .. } => slm_step_s * l as f64,
             };
 
-            // ---- uplink -------------------------------------------------
-            let up_time = self.link.send_uplink(drafted.frame_bits);
-            uplink_bits += drafted.frame_bits as u64;
+            // ---- uplink: the transport encodes + charges the link -------
+            // (the frame is moved, not cloned: everything the record
+            // keeps — dist_bits, ks, t_slm — lives outside it)
+            let up_frame = Frame::Draft(drafted.frame);
+            let d_up = self.transport.send_frame(
+                Direction::Up,
+                &up_frame,
+                &mut self.edge.wire,
+                0.0,
+            )?;
+            let up_time = d_up.latency_s();
+            uplink_bits += d_up.bits as u64;
 
             // ---- cloud: decode frame + verify ---------------------------
-            // (decode from the actual bytes: the wire format is exercised
+            // (decode from the actual wire bytes: the format is exercised
             // on every batch, not just in codec tests)
-            let decoded = self
-                .edge
-                .codec
-                .decode(&drafted.bytes)
-                .map_err(|e| anyhow::anyhow!("frame decode: {e}"))?;
+            let decoded = match self.transport.recv_frame(Direction::Up, &mut self.edge.wire)? {
+                Frame::Draft(f) => f,
+                other => bail!("expected a Draft frame on the uplink, got {}", other.name()),
+            };
             let prev = *self.seq.last().unwrap();
             let verdict = self.cloud.verify_with_prev(&decoded, prev, self.cfg.temp)?;
             let llm_time = match self.cfg.timing {
@@ -234,18 +304,22 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
             };
 
-            // ---- downlink feedback -------------------------------------
-            let (_fb_bytes, fb_bits) = self.edge.codec.encode_feedback(&verdict.feedback);
-            let down_time = self.link.send_downlink(fb_bits);
-            downlink_bits += fb_bits as u64;
+            // ---- downlink feedback (v2; no extensions on a private link)
+            let d_down = self.transport.send_frame(
+                Direction::Down,
+                &Frame::Feedback(verdict.feedback_v2(Vec::new())),
+                &mut self.edge.wire,
+                0.0,
+            )?;
+            let down_time = d_down.latency_s();
+            downlink_bits += d_down.bits as u64;
+            let fb = match self.transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+                Frame::Feedback(f) => f,
+                other => bail!("expected a Feedback frame, got {}", other.name()),
+            };
 
             // ---- edge sync + conformal backtrack ------------------------
-            self.edge.apply_feedback(
-                ctx_before,
-                l,
-                verdict.accepted,
-                verdict.feedback.new_token,
-            )?;
+            self.edge.apply_feedback(ctx_before, l, fb.accepted as usize, fb.new_token)?;
             self.seq.extend_from_slice(&verdict.committed);
 
             // ---- control plane: fold the round's ledger back in ---------
@@ -253,9 +327,11 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 drafted: l,
                 accepted: verdict.accepted,
                 rejected: verdict.rejected,
-                frame_bits: drafted.frame_bits,
+                frame_bits: d_up.bits,
                 t_uplink_s: up_time,
                 queue_wait_s: 0.0, // private link: no shared-uplink queue
+                congestion: fb.congestion(),
+                grant_bits: fb.grant(),
             });
 
             // consistency: edge and cloud contexts must match ours
@@ -270,13 +346,16 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             t_llm += llm_time;
             t_down += down_time;
 
+            let round = batches.len() as u64;
             batches.push(BatchRecord {
                 drafted: l,
                 accepted: verdict.accepted,
                 rejected: verdict.rejected,
                 dist_bits: drafted.dist_bits.iter().sum(),
-                frame_bits: drafted.frame_bits,
+                frame_bits: d_up.bits,
+                feedback_bits: d_down.bits,
                 mean_k: drafted.ks.iter().sum::<usize>() as f64 / l as f64,
+                knobs: KnobPoint::from_knobs(round, &knobs),
                 t_slm: slm_time,
                 t_uplink: up_time,
                 t_llm: llm_time,
@@ -304,6 +383,8 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             t_downlink_s: t_down,
             uplink_bits,
             downlink_bits,
+            handshake_uplink_bits: hs_up,
+            handshake_downlink_bits: hs_down,
             conformal_empirical_alpha: conformal.map(|c| c.empirical_alpha()),
             conformal_bound: conformal.map(|c| c.theorem2_bound()),
             conformal_t: conformal.map(|c| c.t()),
@@ -374,6 +455,8 @@ impl<T: TargetLm> ArBaseline<T> {
             t_downlink_s: t_down,
             uplink_bits: (prompt.len() * 8) as u64,
             downlink_bits,
+            handshake_uplink_bits: 0,
+            handshake_downlink_bits: 0,
             conformal_empirical_alpha: None,
             conformal_bound: None,
             conformal_t: None,

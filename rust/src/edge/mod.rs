@@ -9,22 +9,21 @@
 
 use anyhow::Result;
 
-use crate::codec::{DraftFrame, DraftToken, FrameCodec};
+use crate::codec::{DraftFrame, DraftToken};
 use crate::control::Knobs;
 use crate::model::DraftLm;
+use crate::protocol::WireCodec;
 use crate::sqs::probs::sample_lattice;
 use crate::sqs::{ConformalController, Policy, Sparsifier};
 use crate::util::rng::Pcg64;
 
-/// Outcome of drafting one batch at the edge.
+/// Outcome of drafting one batch at the edge.  Serialization happens in
+/// the `protocol::Transport` that ships the frame, so the batch carries
+/// the structured frame plus the budget-relevant bit counts.
 pub struct DraftedBatch {
     pub frame: DraftFrame,
     /// distribution-payload bits per token (the paper's b_n; budget basis)
     pub dist_bits: Vec<usize>,
-    /// full frame size on the wire, bits (header + payloads + tokens)
-    pub frame_bits: usize,
-    /// serialized frame
-    pub bytes: Vec<u8>,
     /// dropped mass alpha_n per drafted token
     pub alphas: Vec<f32>,
     /// support size K_n per drafted token
@@ -39,7 +38,9 @@ pub struct EdgeNode<D: DraftLm> {
     pub draft: D,
     pub policy: Policy,
     pub conformal: Option<ConformalController>,
-    pub codec: FrameCodec,
+    /// protocol-v2 wire codec (payload scheme derived from the policy);
+    /// shared with the transport so budget math and wire bytes agree
+    pub wire: WireCodec,
     pub ell: u32,
     pub budget_bits: usize,
     pub max_batch_drafts: usize,
@@ -68,7 +69,7 @@ impl<D: DraftLm> EdgeNode<D> {
             draft,
             policy,
             conformal,
-            codec: FrameCodec::new(vocab, ell, scheme, fixed_k),
+            wire: WireCodec::for_config(vocab, ell, scheme, fixed_k),
             ell,
             budget_bits,
             max_batch_drafts,
@@ -84,12 +85,12 @@ impl<D: DraftLm> EdgeNode<D> {
     /// Switch the wire format to the per-token-K adaptive scheme.  A
     /// control policy that varies K at run time (e.g. AIMD) cannot use the
     /// FixedK scheme, whose codec assumes a config-time constant K on both
-    /// ends.  Call before the first batch; encode and decode share this
-    /// codec, so the cloud side follows automatically.
+    /// ends.  Call before the handshake: the Hello advertises whatever
+    /// scheme the codec holds, so the cloud side follows automatically.
     pub fn use_adaptive_scheme(&mut self) {
         let vocab = self.draft.vocab();
-        self.codec =
-            FrameCodec::new(vocab, self.ell, crate::sqs::bits::SchemeBits::Adaptive, 0);
+        self.wire =
+            WireCodec::for_config(vocab, self.ell, crate::sqs::bits::SchemeBits::Adaptive, 0);
     }
 
     fn sparsifier(&self) -> Sparsifier {
@@ -154,7 +155,7 @@ impl<D: DraftLm> EdgeNode<D> {
             t_slm += t0.elapsed().as_secs_f64();
 
             let k = step.quant.k();
-            let b_n = self.codec.token_bits(k).dist_bits();
+            let b_n = self.wire.token_bits(k).dist_bits();
             // budget rule: stop before the token that would overflow B —
             // but always send at least one token so the batch progresses
             if !frame.tokens.is_empty() && used_bits + b_n > budget_bits {
@@ -177,12 +178,9 @@ impl<D: DraftLm> EdgeNode<D> {
             frame.tokens.push(DraftToken { quant: step.quant, token });
         }
 
-        let (bytes, frame_bits, _breakdown) = self.codec.encode(&frame);
         Ok(DraftedBatch {
             frame,
             dist_bits,
-            frame_bits,
-            bytes,
             alphas,
             ks,
             t_slm,
@@ -212,11 +210,17 @@ impl<D: DraftLm> EdgeNode<D> {
 mod tests {
     use super::*;
     use crate::model::synthetic::{SyntheticDraft, SyntheticWorld};
+    use crate::protocol::Frame;
 
     fn edge(policy: Policy, budget: usize) -> EdgeNode<SyntheticDraft> {
         let world = SyntheticWorld::new(64, 0.5, 3);
         let draft = SyntheticDraft::new(world, 4096);
         EdgeNode::new(draft, policy, 100, budget, 15, 42)
+    }
+
+    /// Wire bytes of a drafted batch, as the transport would ship them.
+    fn wire_bytes<D: DraftLm>(e: &mut EdgeNode<D>, b: &DraftedBatch) -> (Vec<u8>, usize) {
+        e.wire.encode(&Frame::Draft(b.frame.clone())).unwrap()
     }
 
     #[test]
@@ -282,8 +286,10 @@ mod tests {
                     budget_bits: knobbed.budget_bits,
                 };
                 let b = knobbed.draft_batch_knobs(0.9, 10, &static_knobs).unwrap();
-                assert_eq!(a.bytes, b.bytes, "wire bytes diverged ({policy:?})");
-                assert_eq!(a.frame_bits, b.frame_bits);
+                let (a_bytes, a_bits) = wire_bytes(&mut legacy, &a);
+                let (b_bytes, b_bits) = wire_bytes(&mut knobbed, &b);
+                assert_eq!(a_bytes, b_bytes, "wire bytes diverged ({policy:?})");
+                assert_eq!(a_bits, b_bits);
                 assert_eq!(a.dist_bits, b.dist_bits);
                 assert_eq!(a.frame.tokens, b.frame.tokens);
                 let l = a.frame.tokens.len();
@@ -312,7 +318,11 @@ mod tests {
             for &got_k in &b.ks {
                 assert_eq!(got_k, k, "top-{k} support on every token");
             }
-            let decoded = e.codec.decode(&b.bytes).unwrap();
+            let (bytes, _bits) = wire_bytes(&mut e, &b);
+            let decoded = match e.wire.decode(&bytes).unwrap() {
+                Frame::Draft(f) => f,
+                other => panic!("expected a draft frame, got {}", other.name()),
+            };
             assert_eq!(decoded.tokens.len(), b.frame.tokens.len());
             for (d, o) in decoded.tokens.iter().zip(&b.frame.tokens) {
                 assert_eq!(d.quant.support, o.quant.support);
@@ -339,8 +349,15 @@ mod tests {
         let mut e = edge(Policy::KSqs { k: 4 }, 5000);
         e.start(&[9, 9]).unwrap();
         let b = e.draft_batch(0.8).unwrap();
-        let mut codec = FrameCodec::new(64, 100, crate::sqs::bits::SchemeBits::FixedK, 4);
-        let decoded = codec.decode(&b.bytes).unwrap();
+        let (bytes, _bits) = wire_bytes(&mut e, &b);
+        // an independently constructed codec with the same negotiated
+        // parameters must decode the peer's bytes
+        let mut codec =
+            WireCodec::for_config(64, 100, crate::sqs::bits::SchemeBits::FixedK, 4);
+        let decoded = match codec.decode(&bytes).unwrap() {
+            Frame::Draft(f) => f,
+            other => panic!("expected a draft frame, got {}", other.name()),
+        };
         assert_eq!(decoded.tokens.len(), b.frame.tokens.len());
         for (d, o) in decoded.tokens.iter().zip(&b.frame.tokens) {
             assert_eq!(d.token, o.token);

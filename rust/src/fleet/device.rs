@@ -2,23 +2,30 @@
 //! model, its per-request cloud context (`CloudNode`), a local request
 //! queue fed by the workload process, and per-device tallies.
 //!
-//! The device mirrors `SdSession`'s per-batch protocol (draft -> encode ->
-//! uplink -> verify -> feedback -> sync) but is driven phase-by-phase by
-//! the fleet simulator's event loop instead of a private synchronous loop,
+//! The device mirrors `SdSession`'s per-batch protocol (draft -> uplink
+//! -> verify -> feedback -> sync) but is driven phase-by-phase by the
+//! fleet simulator's event loop instead of a private synchronous loop,
 //! so many devices can interleave on the shared uplink and the cloud
-//! verify server.  Compute enters virtual time via the profile's modeled
-//! costs (exactly like `TimingMode::Modeled`), which keeps fleet runs
-//! reproducible regardless of host load.
+//! verify server.  All wire traffic goes through the device's
+//! [`SharedPort`] transport: the draft frame is encoded exactly once
+//! (when it enters the shared channel), the verifier decodes those
+//! bytes, and the v2 feedback frame — congestion bit / budget grant
+//! extensions included — rides the dedicated downlink the same way.
+//! Compute enters virtual time via the profile's modeled costs (exactly
+//! like `TimingMode::Modeled`), which keeps fleet runs reproducible
+//! regardless of host load.
 
 use std::collections::VecDeque;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::cloud::{CloudNode, Verdict};
-use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop};
+use crate::codec::DraftFrame;
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint};
 use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
+use crate::protocol::{Delivery, Direction, Ext, Frame, SharedPort, Transport};
 use crate::sqs::Policy;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -79,9 +86,13 @@ pub struct ActiveRequest {
 struct PendingBatch {
     ctx_before: usize,
     drafted: usize,
-    bytes: Vec<u8>,
+    /// the structured frame, held until the uplink send encodes it
+    frame: Option<DraftFrame>,
+    /// wire size of the sent frame, bits (set by `send_draft`)
     frame_bits: usize,
     verdict: Option<Verdict>,
+    /// feedback extensions decided at verify time (verifier queue state)
+    exts: Vec<Ext>,
     /// time the frame waited in the shared-uplink queue, seconds
     queue_wait_s: f64,
     /// queue + air + propagation time for the frame, seconds
@@ -98,7 +109,10 @@ pub struct DeviceStats {
     pub drafted_tokens: u64,
     pub accepted_tokens: u64,
     pub uplink_bits: u64,
+    pub downlink_bits: u64,
     pub latency: Summary,
+    /// per-round knob trajectory (K^t, ℓ^t, B^t) for convergence plots
+    pub knob_trace: Vec<KnobPoint>,
 }
 
 pub struct Device {
@@ -109,13 +123,15 @@ pub struct Device {
     /// per-device control plane; persists across requests so link
     /// estimates carry over (the channel outlives any one request)
     pub control: ControlLoop,
+    /// this device's transport: shared uplink + dedicated downlink
+    pub port: SharedPort,
     pub queue: VecDeque<f64>,
     pub active: Option<ActiveRequest>,
     pub stats: DeviceStats,
     /// arrivals generated so far (bounded by requests_per_device)
     pub generated: usize,
     pending: Option<PendingBatch>,
-    /// prompt generation + downlink jitter
+    /// prompt generation
     rng: Pcg64,
     /// workload inter-arrival stream (isolated so arrival times do not
     /// depend on how many prompts/jitters were drawn)
@@ -124,7 +140,13 @@ pub struct Device {
 }
 
 impl Device {
-    pub fn new(id: usize, profile: DeviceProfile, world: &SyntheticWorld, base_seed: u64) -> Device {
+    pub fn new(
+        id: usize,
+        profile: DeviceProfile,
+        world: &SyntheticWorld,
+        base_seed: u64,
+        port: SharedPort,
+    ) -> Device {
         let seed = base_seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let vocab = world.vocab;
         let draft = SyntheticDraft::new(world.clone(), 100_000);
@@ -154,6 +176,7 @@ impl Device {
             edge,
             cloud,
             control,
+            port,
             queue: VecDeque::new(),
             active: None,
             stats: DeviceStats { latency: Summary::new(), ..Default::default() },
@@ -218,12 +241,15 @@ impl Device {
         if l == 0 {
             return Ok(None);
         }
+        let round = self.stats.knob_trace.len() as u64;
+        self.stats.knob_trace.push(KnobPoint::from_knobs(round, &knobs));
         self.pending = Some(PendingBatch {
             ctx_before,
             drafted: l,
-            bytes: drafted.bytes,
-            frame_bits: drafted.frame_bits,
+            frame: Some(drafted.frame),
+            frame_bits: 0,
             verdict: None,
+            exts: Vec::new(),
             queue_wait_s: 0.0,
             uplink_s: 0.0,
         });
@@ -231,49 +257,58 @@ impl Device {
         Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * l as f64))
     }
 
-    /// Wire size of the pending frame, bits.
-    pub fn frame_bits(&self) -> usize {
-        self.pending.as_ref().map(|p| p.frame_bits).unwrap_or(0)
+    /// Ship the pending draft frame through this device's port onto the
+    /// shared uplink at virtual time `now`.  The transport encodes the
+    /// frame (charging exact wire bits) and reserves the FIFO channel;
+    /// the returned delivery tells the simulator when the cloud sees it.
+    pub fn send_draft(&mut self, now: f64) -> Result<Delivery> {
+        let pending = self
+            .pending
+            .as_mut()
+            .ok_or_else(|| anyhow!("send_draft without pending batch"))?;
+        let frame = pending
+            .frame
+            .take()
+            .ok_or_else(|| anyhow!("draft frame already sent"))?;
+        let d =
+            self.port.send_frame(Direction::Up, &Frame::Draft(frame), &mut self.edge.wire, now)?;
+        pending.frame_bits = d.bits;
+        pending.queue_wait_s = d.queue_wait_s;
+        pending.uplink_s = d.latency_s();
+        self.stats.uplink_bits += d.bits as u64;
+        Ok(d)
     }
 
-    /// Record the pending frame's trip through the shared uplink: bits
-    /// shipped, queue wait, and total uplink time (the control plane's
-    /// channel observations).
-    pub fn note_uplink(&mut self, bits: usize, queue_wait_s: f64, uplink_s: f64) {
-        self.stats.uplink_bits += bits as u64;
-        if let Some(p) = self.pending.as_mut() {
-            p.queue_wait_s = queue_wait_s;
-            p.uplink_s = uplink_s;
-        }
-    }
-
-    /// Decode the pending frame from its wire bytes and verify it against
-    /// this device's cloud context.  Returns the verify-window length
-    /// (drafts + 1) so the verifier can model batched service time.
-    pub fn verify_now(&mut self) -> Result<usize> {
+    /// Decode the delivered frame from its wire bytes and verify it
+    /// against this device's cloud context, stamping the feedback
+    /// extensions the verifier chose (congestion / budget grant).
+    /// Returns the verify-window length (drafts + 1) so the verifier can
+    /// model batched service time.
+    pub fn verify_now(&mut self, exts: Vec<Ext>) -> Result<usize> {
         let req = self
             .active
             .as_ref()
             .ok_or_else(|| anyhow!("verify without active request"))?;
         let prev = *req.seq.last().unwrap();
+        let frame = match self.port.recv_frame(Direction::Up, &mut self.edge.wire)? {
+            Frame::Draft(f) => f,
+            other => bail!("device {}: expected a Draft frame, got {}", self.id, other.name()),
+        };
+        let temp = self.profile.temp;
+        let verdict = self.cloud.verify_with_prev(&frame, prev, temp)?;
         let pending = self
             .pending
             .as_mut()
             .ok_or_else(|| anyhow!("verify without pending batch"))?;
-        let frame = self
-            .edge
-            .codec
-            .decode(&pending.bytes)
-            .map_err(|e| anyhow!("frame decode: {e}"))?;
-        let temp = self.profile.temp;
-        let verdict = self.cloud.verify_with_prev(&frame, prev, temp)?;
         let window = pending.drafted + 1;
         pending.verdict = Some(verdict);
+        pending.exts = exts;
         Ok(window)
     }
 
-    /// Feedback frame size for the verified batch, bits.
-    pub fn feedback_bits(&mut self) -> Result<usize> {
+    /// Ship the v2 feedback frame (verdict + extensions) down this
+    /// device's dedicated link at virtual time `now`.
+    pub fn send_feedback(&mut self, now: f64) -> Result<Delivery> {
         let pending = self
             .pending
             .as_ref()
@@ -282,19 +317,21 @@ impl Device {
             .verdict
             .as_ref()
             .ok_or_else(|| anyhow!("feedback before verify"))?;
-        let (_bytes, bits) = self.edge.codec.encode_feedback(&verdict.feedback);
-        Ok(bits)
+        let fb = verdict.feedback_v2(pending.exts.clone());
+        let d =
+            self.port.send_frame(Direction::Down, &Frame::Feedback(fb), &mut self.edge.wire, now)?;
+        self.stats.downlink_bits += d.bits as u64;
+        Ok(d)
     }
 
-    /// Downlink delivery time for `bits` on this device's dedicated link.
-    pub fn downlink_time(&mut self, bits: usize, propagation_s: f64, jitter_s: f64) -> f64 {
-        let jitter = if jitter_s > 0.0 { self.rng.next_f64() * jitter_s } else { 0.0 };
-        bits as f64 / self.profile.downlink_bps + propagation_s + jitter
-    }
-
-    /// Sync the edge with the cloud verdict and commit tokens.  Returns
-    /// true when the active request has produced all its tokens.
+    /// Receive the feedback frame, sync the edge with the verdict, and
+    /// commit tokens.  Returns true when the active request has produced
+    /// all its tokens.
     pub fn apply_feedback(&mut self) -> Result<bool> {
+        let fb = match self.port.recv_frame(Direction::Down, &mut self.edge.wire)? {
+            Frame::Feedback(f) => f,
+            other => bail!("device {}: expected a Feedback frame, got {}", self.id, other.name()),
+        };
         let pending = self
             .pending
             .take()
@@ -302,11 +339,12 @@ impl Device {
         let verdict = pending
             .verdict
             .ok_or_else(|| anyhow!("apply_feedback before verify"))?;
+        debug_assert_eq!(fb.accepted as usize, verdict.accepted);
         self.edge.apply_feedback(
             pending.ctx_before,
             pending.drafted,
-            verdict.accepted,
-            verdict.feedback.new_token,
+            fb.accepted as usize,
+            fb.new_token,
         )?;
         let req = self
             .active
@@ -328,6 +366,8 @@ impl Device {
             frame_bits: pending.frame_bits,
             t_uplink_s: pending.uplink_s,
             queue_wait_s: pending.queue_wait_s,
+            congestion: fb.congestion(),
+            grant_bits: fb.grant(),
         });
         let produced = req.seq.len() - req.prompt_len;
         Ok(produced >= self.profile.max_new_tokens || !self.room_left())
@@ -357,11 +397,22 @@ impl Device {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::channel::SharedUplink;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn port() -> SharedPort {
+        let channel = Rc::new(RefCell::new(SharedUplink::new(1e6, 0.01, 0.0, 5)));
+        SharedPort::new(channel, 1e7, 0.01, 0.0, 5)
+    }
+
+    fn mk_device(profile: DeviceProfile) -> Device {
+        let world = SyntheticWorld::new(64, 0.5, 7);
+        Device::new(0, profile, &world, 42, port())
+    }
 
     fn device(policy: Policy) -> Device {
-        let world = SyntheticWorld::new(64, 0.5, 7);
-        let profile = DeviceProfile { policy, max_new_tokens: 12, ..Default::default() };
-        Device::new(0, profile, &world, 42)
+        mk_device(DeviceProfile { policy, max_new_tokens: 12, ..Default::default() })
     }
 
     #[test]
@@ -371,22 +422,29 @@ mod tests {
         let draft_s = d.start_next_request(0.0).unwrap().unwrap();
         assert!(draft_s > 0.0);
         let mut batches = 0;
+        let mut now = 0.0;
         loop {
             batches += 1;
-            assert!(d.frame_bits() > 0);
-            let window = d.verify_now().unwrap();
+            let up = d.send_draft(now).unwrap();
+            assert!(up.bits > 0);
+            now = up.delivered_at;
+            let window = d.verify_now(Vec::new()).unwrap();
             assert!(window >= 2);
-            assert!(d.feedback_bits().unwrap() > 0);
+            let down = d.send_feedback(now).unwrap();
+            assert!(down.bits > 0);
+            now = down.delivered_at;
             if d.apply_feedback().unwrap() {
                 break;
             }
             assert!(d.begin_batch().unwrap().is_some());
         }
-        let latency = d.complete_request(3.5).unwrap();
-        assert!((latency - 3.5).abs() < 1e-12);
+        let latency = d.complete_request(now + 3.5).unwrap();
+        assert!((latency - (now + 3.5)).abs() < 1e-12);
         assert_eq!(d.stats.completed, 1);
         assert!(d.stats.tokens >= 12);
         assert_eq!(d.stats.batches, batches);
+        assert_eq!(d.stats.knob_trace.len() as u64, d.stats.batches, "one knob point per round");
+        assert!(d.stats.downlink_bits > 0, "feedback frames land in the downlink ledger");
         assert!(d.active.is_none());
     }
 
@@ -397,33 +455,37 @@ mod tests {
         d.queue.push_back(2.0);
         d.start_next_request(1.0).unwrap().unwrap();
         assert_eq!(d.active.as_ref().unwrap().arrived_at, 1.0);
+        let mut now = 1.0;
         loop {
-            d.verify_now().unwrap();
+            now = d.send_draft(now).unwrap().delivered_at;
+            d.verify_now(Vec::new()).unwrap();
+            now = d.send_feedback(now).unwrap().delivered_at;
             if d.apply_feedback().unwrap() {
                 break;
             }
             d.begin_batch().unwrap().unwrap();
         }
-        d.complete_request(4.0).unwrap();
-        d.start_next_request(4.0).unwrap().unwrap();
+        d.complete_request(now).unwrap();
+        d.start_next_request(now).unwrap().unwrap();
         assert_eq!(d.active.as_ref().unwrap().arrived_at, 2.0);
     }
 
     #[test]
     fn adaptive_device_holds_bits_near_target() {
-        let world = SyntheticWorld::new(64, 0.5, 7);
         let profile = DeviceProfile {
             policy: Policy::KSqs { k: 8 },
             max_new_tokens: 48,
             adaptive: AdaptiveMode::Aimd { target_bits: 500 },
             ..Default::default()
         };
-        let mut d = Device::new(0, profile, &world, 42);
+        let mut d = mk_device(profile);
         d.queue.push_back(0.0);
         d.start_next_request(0.0).unwrap().unwrap();
+        let mut now = 0.0;
         loop {
-            d.note_uplink(d.frame_bits(), 1e-4, 1e-3);
-            d.verify_now().unwrap();
+            now = d.send_draft(now).unwrap().delivered_at;
+            d.verify_now(Vec::new()).unwrap();
+            now = d.send_feedback(now).unwrap().delivered_at;
             if d.apply_feedback().unwrap() {
                 break;
             }
@@ -431,7 +493,7 @@ mod tests {
                 break;
             }
         }
-        d.complete_request(1.0).unwrap();
+        d.complete_request(now).unwrap();
         assert_eq!(d.stats.completed, 1);
         assert!(d.stats.batches > 0);
         assert_eq!(
@@ -447,9 +509,43 @@ mod tests {
     }
 
     #[test]
+    fn grant_extension_reaches_the_device_control_loop() {
+        let profile = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 24,
+            adaptive: AdaptiveMode::Aimd { target_bits: 5000 },
+            ..Default::default()
+        };
+        let mut d = mk_device(profile);
+        d.queue.push_back(0.0);
+        d.start_next_request(0.0).unwrap().unwrap();
+        let mut now = 0.0;
+        let exts = vec![Ext::Congestion(true), Ext::BudgetGrant(300)];
+        loop {
+            now = d.send_draft(now).unwrap().delivered_at;
+            d.verify_now(exts.clone()).unwrap();
+            now = d.send_feedback(now).unwrap().delivered_at;
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            if d.begin_batch().unwrap().is_none() {
+                break;
+            }
+        }
+        // every round after the first was granted 300 bits: the knob
+        // trace must show the budget dropping from 5000 to the grant
+        let trace = &d.stats.knob_trace;
+        assert!(trace.len() >= 2, "need at least two rounds, got {}", trace.len());
+        assert_eq!(trace[0].budget_bits, 5000, "round 0 predates any grant");
+        for kp in &trace[1..] {
+            assert_eq!(kp.budget_bits, 300, "grant caps every later round: {kp:?}");
+        }
+    }
+
+    #[test]
     fn idle_device_has_nothing_to_start() {
         let mut d = device(Policy::KSqs { k: 4 });
         assert!(d.start_next_request(0.0).unwrap().is_none());
-        assert_eq!(d.frame_bits(), 0);
+        assert!(d.send_draft(0.0).is_err(), "no pending batch to send");
     }
 }

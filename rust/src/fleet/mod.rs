@@ -25,14 +25,17 @@ pub use events::{Event, EventKind, EventQueue};
 pub use verifier::{CloudVerifier, VerifierConfig};
 pub use workload::Workload;
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use crate::channel::SharedUplink;
-use crate::control::AdaptiveMode;
+use crate::control::{AdaptiveMode, KnobPoint};
 use crate::coordinator::Metrics;
 use crate::model::synthetic::SyntheticWorld;
+use crate::protocol::SharedPort;
 use crate::sqs::Policy;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -53,6 +56,10 @@ pub struct FleetConfig {
     pub profiles: Vec<DeviceProfile>,
     /// shared uplink capacity, bits/s (all devices contend for this)
     pub uplink_bps: f64,
+    /// scheduled shared-uplink capacity steps `(frame index, new bps)` —
+    /// same frame-indexed semantics as `SimulatedLink`'s schedule, so a
+    /// fleet-wide capacity drop is a reproducible dynamic scenario
+    pub uplink_schedule: Vec<(u64, f64)>,
     /// one-way propagation delay, seconds (both directions)
     pub propagation_s: f64,
     /// uniform jitter amplitude, seconds
@@ -74,6 +81,7 @@ impl FleetConfig {
         FleetConfig {
             profiles,
             uplink_bps: 1e6,
+            uplink_schedule: Vec::new(),
             propagation_s: 0.010,
             jitter_s: 0.0,
             requests_per_device: 4,
@@ -137,6 +145,10 @@ pub struct DeviceReport {
     pub mean_latency_s: f64,
     pub p99_latency_s: f64,
     pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    /// per-round knob trajectory (K^t, ℓ^t, B^t) — convergence traces
+    /// for the benches' CSV export
+    pub knob_trace: Vec<KnobPoint>,
 }
 
 /// Aggregate outcome of a fleet run.
@@ -151,6 +163,8 @@ pub struct FleetReport {
     pub uplink_utilization: f64,
     pub uplink_mean_wait_s: f64,
     pub uplink_bits: u64,
+    /// fleet-wide downlink bits (v2 feedback frames incl. extensions)
+    pub downlink_bits: u64,
     pub verify_calls: u64,
     pub verify_mean_batch: f64,
     pub verify_utilization: f64,
@@ -188,7 +202,8 @@ impl FleetReport {
     pub fn digest(&self) -> String {
         let mut s = format!(
             "devices={} horizon={:016x} completed={} tokens={} lat_mean={:016x} \
-             lat_p99={:016x} up_util={:016x} up_bits={} verify_calls={} accept={:016x}",
+             lat_p99={:016x} up_util={:016x} up_bits={} down_bits={} verify_calls={} \
+             accept={:016x}",
             self.devices,
             self.horizon_s.to_bits(),
             self.completed,
@@ -197,6 +212,7 @@ impl FleetReport {
             self.latency.p99().to_bits(),
             self.uplink_utilization.to_bits(),
             self.uplink_bits,
+            self.downlink_bits,
             self.verify_calls,
             self.acceptance.to_bits(),
         );
@@ -232,6 +248,10 @@ impl FleetReport {
             self.uplink_bits
         ));
         out.push_str(&format!(
+            "downlink: {} bits total (v2 feedback frames)\n",
+            self.downlink_bits
+        ));
+        out.push_str(&format!(
             "verify: {} calls | mean batch {:.2} windows | {:.1}% slot-utilized\n",
             self.verify_calls,
             self.verify_mean_batch,
@@ -252,7 +272,8 @@ impl FleetReport {
 pub struct FleetSim {
     pub cfg: FleetConfig,
     devices: Vec<Device>,
-    uplink: SharedUplink,
+    /// shared by every device's `SharedPort` (single-threaded sim)
+    uplink: Rc<RefCell<SharedUplink>>,
     verifier: CloudVerifier,
     events: EventQueue,
     metrics: Metrics,
@@ -267,13 +288,27 @@ const MAX_EVENTS: u64 = 50_000_000;
 impl FleetSim {
     pub fn new(cfg: FleetConfig) -> FleetSim {
         let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.seed ^ 0x57A7E);
+        let uplink = Rc::new(RefCell::new(
+            SharedUplink::new(cfg.uplink_bps, cfg.propagation_s, cfg.jitter_s, cfg.seed ^ 0x11F)
+                .with_capacity_schedule(cfg.uplink_schedule.clone()),
+        ));
         let devices: Vec<Device> = cfg
             .profiles
             .iter()
             .enumerate()
-            .map(|(i, p)| Device::new(i, *p, &world, cfg.seed))
+            .map(|(i, p)| {
+                let port_seed =
+                    cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0xD0;
+                let port = SharedPort::new(
+                    uplink.clone(),
+                    p.downlink_bps,
+                    cfg.propagation_s,
+                    cfg.jitter_s,
+                    port_seed,
+                );
+                Device::new(i, *p, &world, cfg.seed, port)
+            })
             .collect();
-        let uplink = SharedUplink::new(cfg.uplink_bps, cfg.propagation_s, cfg.jitter_s, cfg.seed ^ 0x11F);
         let verifier = CloudVerifier::new(cfg.verifier);
         FleetSim {
             cfg,
@@ -337,24 +372,20 @@ impl FleetSim {
                 }
             }
             EventKind::DraftDone => {
-                let bits = self.devices[d].frame_bits();
-                let (start, delivered) = self.uplink.reserve(now, bits);
-                // queue wait + total uplink time feed the device's link
-                // estimator (its control plane's channel observations)
-                self.devices[d].note_uplink(bits, start - now, delivered - now);
-                self.metrics.observe("fleet.uplink_wait_s", start - now);
-                self.events.push(delivered, d, EventKind::UplinkDelivered);
+                // the device's port encodes the frame and reserves the
+                // shared channel; queue wait + total uplink time feed its
+                // link estimator when the round completes
+                let delivery = self.devices[d].send_draft(now)?;
+                self.metrics.observe("fleet.uplink_wait_s", delivery.queue_wait_s);
+                self.events.push(delivery.delivered_at, d, EventKind::UplinkDelivered);
             }
             EventKind::UplinkDelivered => {
                 self.verifier.enqueue(d);
                 self.start_verifies(now)?;
             }
             EventKind::VerifyDone => {
-                let fb_bits = self.devices[d].feedback_bits()?;
-                let prop = self.cfg.propagation_s;
-                let jit = self.cfg.jitter_s;
-                let t_down = self.devices[d].downlink_time(fb_bits, prop, jit);
-                self.events.push(now + t_down, d, EventKind::FeedbackDelivered);
+                let delivery = self.devices[d].send_feedback(now)?;
+                self.events.push(delivery.delivered_at, d, EventKind::FeedbackDelivered);
             }
             EventKind::SlotFree => {
                 self.verifier.release_slot();
@@ -383,9 +414,12 @@ impl FleetSim {
     fn start_verifies(&mut self, now: f64) -> Result<()> {
         while self.verifier.slot_free() {
             let batch = self.verifier.take_batch();
+            // feedback extensions reflect the backlog left *behind* this
+            // call: what is still queued is what the edges should react to
+            let exts = self.verifier.feedback_exts();
             let mut total_window = 0usize;
             for &dev in &batch {
-                total_window += self.devices[dev].verify_now()?;
+                total_window += self.devices[dev].verify_now(exts.clone())?;
             }
             let service = self.verifier.service_s(total_window);
             let t_done = now + service;
@@ -427,12 +461,14 @@ impl FleetSim {
         let mut by_policy: BTreeMap<String, (u64, u64)> = BTreeMap::new();
         let (mut completed, mut tokens) = (0usize, 0u64);
         let (mut drafted, mut accepted) = (0u64, 0u64);
+        let mut downlink_bits = 0u64;
         for dev in &devices {
             let st = &dev.stats;
             completed += st.completed;
             tokens += st.tokens;
             drafted += st.drafted_tokens;
             accepted += st.accepted_tokens;
+            downlink_bits += st.downlink_bits;
             let label = policy_label(&dev.profile.policy, dev.profile.adaptive);
             let entry = by_policy.entry(label.clone()).or_insert((0, 0));
             entry.0 += st.rejected_batches;
@@ -447,9 +483,13 @@ impl FleetSim {
                 mean_latency_s: st.latency.mean(),
                 p99_latency_s: st.latency.p99(),
                 uplink_bits: st.uplink_bits,
+                downlink_bits: st.downlink_bits,
+                knob_trace: st.knob_trace.clone(),
             });
         }
+        let uplink = uplink.borrow();
         metrics.inc("fleet.uplink_bits", uplink.ledger.bits);
+        metrics.inc("fleet.downlink_bits", downlink_bits);
         metrics.inc("fleet.verify_calls", verifier.calls);
         FleetReport {
             devices: devices.len(),
@@ -461,6 +501,7 @@ impl FleetSim {
             uplink_utilization: uplink.utilization(horizon),
             uplink_mean_wait_s: uplink.mean_queue_wait_s(),
             uplink_bits: uplink.ledger.bits,
+            downlink_bits,
             verify_calls: verifier.calls,
             verify_mean_batch: verifier.mean_batch(),
             verify_utilization: verifier.utilization(horizon),
@@ -556,7 +597,13 @@ mod tests {
         // many devices, single verify slot, batching allowed: mean batch
         // must exceed 1 once windows queue up
         let mut cfg = base_cfg(8, Policy::KSqs { k: 8 });
-        cfg.verifier = VerifierConfig { concurrency: 1, batch_max: 8, base_s: 8e-3, per_token_s: 1e-4 };
+        cfg.verifier = VerifierConfig {
+            concurrency: 1,
+            batch_max: 8,
+            base_s: 8e-3,
+            per_token_s: 1e-4,
+            ..Default::default()
+        };
         let report = FleetSim::new(cfg).run().unwrap();
         assert!(report.verify_mean_batch > 1.0, "mean batch {}", report.verify_mean_batch);
         assert!(report.verify_calls > 0);
@@ -586,6 +633,42 @@ mod tests {
             slow.latency.mean(),
             fast.latency.mean()
         );
+    }
+
+    #[test]
+    fn scheduled_capacity_drop_slows_the_fleet() {
+        let mk = |schedule: Vec<(u64, f64)>| {
+            let mut cfg = base_cfg(6, Policy::KSqs { k: 8 });
+            cfg.uplink_bps = 1e6;
+            cfg.uplink_schedule = schedule;
+            // decouple the verifier so the uplink dominates
+            cfg.verifier = VerifierConfig { concurrency: 6, batch_max: 1, ..Default::default() };
+            cfg
+        };
+        let steady = FleetSim::new(mk(Vec::new())).run().unwrap();
+        // after 10 shared frames, capacity collapses to 50 kbit/s
+        let dropped = FleetSim::new(mk(vec![(10, 5e4)])).run().unwrap();
+        assert_eq!(steady.completed, dropped.completed, "same workload either way");
+        assert!(
+            dropped.latency.mean() > steady.latency.mean(),
+            "a mid-run capacity collapse must raise mean latency: {} !> {}",
+            dropped.latency.mean(),
+            steady.latency.mean()
+        );
+        assert!(dropped.horizon_s > steady.horizon_s);
+    }
+
+    #[test]
+    fn downlink_ledger_aggregates_device_feedback_bits() {
+        let report = FleetSim::new(base_cfg(4, Policy::KSqs { k: 8 })).run().unwrap();
+        let dev_down: u64 = report.per_device.iter().map(|d| d.downlink_bits).sum();
+        assert_eq!(dev_down, report.downlink_bits);
+        assert!(report.downlink_bits > 0, "every batch sends a feedback frame");
+        // each device's knob trace has one point per batch
+        for d in &report.per_device {
+            assert_eq!(d.knob_trace.len() as u64, d.batches, "device {}", d.id);
+        }
+        assert_eq!(report.metrics.counter("fleet.downlink_bits"), report.downlink_bits);
     }
 
     #[test]

@@ -13,6 +13,8 @@
 
 use std::collections::VecDeque;
 
+use crate::protocol::Ext;
+
 /// Cloud service-time and admission parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct VerifierConfig {
@@ -24,13 +26,27 @@ pub struct VerifierConfig {
     pub base_s: f64,
     /// seconds per window token in a call
     pub per_token_s: f64,
+    /// pending-window backlog at/above which feedback frames carry the
+    /// protocol-v2 congestion bit (the verifier sees queue depth before
+    /// any device does — ROADMAP "cloud-to-edge congestion signaling")
+    pub congestion_depth: usize,
+    /// per-round uplink budget granted on congested feedback frames,
+    /// bits (None: signal congestion only, grant nothing)
+    pub grant_bits: Option<u32>,
 }
 
 impl Default for VerifierConfig {
     fn default() -> Self {
         // base cost matches exp::synthetic_default's llm_call_s; the
         // per-token term makes batched calls cost more than lone ones
-        VerifierConfig { concurrency: 1, batch_max: 4, base_s: 4.0e-3, per_token_s: 2.0e-4 }
+        VerifierConfig {
+            concurrency: 1,
+            batch_max: 4,
+            base_s: 4.0e-3,
+            per_token_s: 2.0e-4,
+            congestion_depth: 4,
+            grant_bits: None,
+        }
     }
 }
 
@@ -73,6 +89,22 @@ impl CloudVerifier {
             self.windows += batch.len() as u64;
         }
         batch
+    }
+
+    /// Protocol-v2 feedback extensions for verdicts being served right
+    /// now: when the remaining backlog is at/above `congestion_depth`,
+    /// every feedback frame of the batch carries the congestion bit —
+    /// and, when configured, an explicit uplink budget grant that
+    /// `BudgetAimd` consumes directly.
+    pub fn feedback_exts(&self) -> Vec<Ext> {
+        let mut exts = Vec::new();
+        if self.pending.len() >= self.cfg.congestion_depth {
+            exts.push(Ext::Congestion(true));
+            if let Some(g) = self.cfg.grant_bits {
+                exts.push(Ext::BudgetGrant(g));
+            }
+        }
+        exts
     }
 
     /// Modeled service seconds for a call over `total_window_tokens`.
@@ -128,6 +160,7 @@ mod tests {
             batch_max: 4,
             base_s: 4e-3,
             per_token_s: 1e-4,
+            ..Default::default()
         });
         for d in 0..4 {
             v.enqueue(d);
@@ -139,6 +172,34 @@ mod tests {
         let separate = 4.0 * (4e-3 + 1e-4 * 16.0);
         assert!(coalesced < separate, "{coalesced} !< {separate}");
         assert_eq!(v.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn congestion_exts_follow_queue_depth() {
+        let mut v = CloudVerifier::new(VerifierConfig {
+            concurrency: 1,
+            batch_max: 1,
+            congestion_depth: 2,
+            grant_bits: Some(600),
+            ..Default::default()
+        });
+        assert!(v.feedback_exts().is_empty(), "idle queue: no extensions");
+        v.enqueue(0);
+        assert!(v.feedback_exts().is_empty(), "below depth");
+        v.enqueue(1);
+        v.enqueue(2);
+        let exts = v.feedback_exts();
+        assert!(exts.contains(&Ext::Congestion(true)));
+        assert!(exts.contains(&Ext::BudgetGrant(600)));
+        // without a configured grant only the bit rides
+        let mut bare = CloudVerifier::new(VerifierConfig {
+            congestion_depth: 0,
+            grant_bits: None,
+            ..Default::default()
+        });
+        assert_eq!(bare.feedback_exts(), vec![Ext::Congestion(true)]);
+        bare.enqueue(0);
+        assert_eq!(bare.feedback_exts(), vec![Ext::Congestion(true)]);
     }
 
     #[test]

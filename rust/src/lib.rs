@@ -16,6 +16,7 @@ pub mod exp;
 pub mod fleet;
 pub mod model;
 pub mod codec;
+pub mod protocol;
 pub mod runtime;
 pub mod server;
 pub mod sqs;

@@ -345,6 +345,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     let cfg = FleetConfig {
         profiles,
         uplink_bps: link.uplink_bps,
+        uplink_schedule: Vec::new(),
         propagation_s: link.propagation_s,
         jitter_s: link.jitter_s,
         requests_per_device: a.get_usize("requests").map_err(|e| anyhow!(e))?,
@@ -353,6 +354,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
             batch_max,
             base_s: a.get_f64("verify-base-ms").map_err(|e| anyhow!(e))? / 1e3,
             per_token_s: a.get_f64("verify-token-ms").map_err(|e| anyhow!(e))? / 1e3,
+            ..Default::default()
         },
         vocab,
         mismatch: a.get_f64("mismatch").map_err(|e| anyhow!(e))?,

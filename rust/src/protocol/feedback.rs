@@ -1,0 +1,297 @@
+//! Extensible feedback frames (protocol v2).
+//!
+//! v1 froze the downlink at a 64-bit `(batch_id, accepted, new_token)`
+//! struct, which left no room for the cloud-to-edge control channel the
+//! ROADMAP calls for (and QSV, arXiv:2507.00605, argues the downlink
+//! should be).  v2 keeps that struct as the frame core — byte-compatible
+//! with the v1 layout, see the tests — and appends a 4-bit extension
+//! count followed by TLV-style extensions:
+//!
+//! ```text
+//!   | batch_id:32 | accepted:16 | new_token:16 | n_ext:4 | ext* |
+//!   ext := | tag:4 | width:6 | value:width |
+//! ```
+//!
+//! Every extension is length-prefixed, so a decoder can skip tags it does
+//! not understand (they surface as [`Ext::Unknown`] and are re-encodable
+//! verbatim).  Defined extensions:
+//!
+//! * `Congestion` (tag 1, 1 bit) — the cloud verifier's queue is building
+//!   up; the edge's `BudgetAimd` treats it as a congestion event instead
+//!   of waiting to infer congestion from uplink queue delays.
+//! * `BudgetGrant` (tag 2, 24 bits) — an explicit per-round uplink budget
+//!   grant in bits; `BudgetAimd` caps its target at the grant until a
+//!   feedback frame arrives without one.
+//!
+//! Extension bits ride the downlink ledger like every other wire bit, so
+//! `downlink_bits` stays exact.
+
+use crate::codec::FeedbackFrame;
+use crate::util::bitio::{BitReader, BitWriter};
+
+const EXT_COUNT_BITS: usize = 4;
+const EXT_TAG_BITS: usize = 4;
+const EXT_WIDTH_BITS: usize = 6;
+
+/// Most extensions one feedback frame can carry (4-bit count field).
+pub const MAX_EXTS: usize = (1 << EXT_COUNT_BITS) - 1;
+/// Widest extension value, bits (fits comfortably in a u64 read).
+pub const MAX_EXT_WIDTH: usize = 56;
+
+pub const EXT_TAG_CONGESTION: u8 = 1;
+pub const EXT_TAG_BUDGET_GRANT: u8 = 2;
+const GRANT_WIDTH: usize = 24;
+/// Largest representable budget grant, bits per round.
+pub const MAX_GRANT_BITS: u32 = (1 << GRANT_WIDTH) - 1;
+
+/// One TLV extension on a v2 feedback frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ext {
+    /// Cloud-side congestion indicator (verifier queue building up).
+    Congestion(bool),
+    /// Explicit per-round uplink budget grant, bits (cloud -> edge).
+    BudgetGrant(u32),
+    /// Well-formed extension with an unrecognized tag: skipped by
+    /// consumers, preserved bit-exactly on re-encode.
+    Unknown { tag: u8, width: u8, value: u64 },
+}
+
+impl Ext {
+    /// Wire triple (tag, width, value); errors on unencodable values.
+    fn wire(&self) -> Result<(u8, u8, u64), String> {
+        match *self {
+            Ext::Congestion(b) => Ok((EXT_TAG_CONGESTION, 1, b as u64)),
+            Ext::BudgetGrant(g) => {
+                if g > MAX_GRANT_BITS {
+                    return Err(format!("budget grant {g} exceeds {MAX_GRANT_BITS} bits"));
+                }
+                Ok((EXT_TAG_BUDGET_GRANT, GRANT_WIDTH as u8, g as u64))
+            }
+            Ext::Unknown { tag, width, value } => {
+                if tag as usize >= 1 << EXT_TAG_BITS {
+                    return Err(format!("extension tag {tag} exceeds {EXT_TAG_BITS} bits"));
+                }
+                if width == 0 || width as usize > MAX_EXT_WIDTH {
+                    return Err(format!("extension width {width} out of 1..={MAX_EXT_WIDTH}"));
+                }
+                if (width as usize) < 64 && value >> width != 0 {
+                    return Err(format!("extension value {value} wider than {width} bits"));
+                }
+                Ok((tag, width, value))
+            }
+        }
+    }
+
+    /// Bits this extension occupies on the wire (tag + width + value).
+    pub fn bit_len(&self) -> usize {
+        let width = match *self {
+            Ext::Congestion(_) => 1,
+            Ext::BudgetGrant(_) => GRANT_WIDTH,
+            Ext::Unknown { width, .. } => width as usize,
+        };
+        EXT_TAG_BITS + EXT_WIDTH_BITS + width
+    }
+}
+
+/// Protocol-v2 feedback: the v1 core plus TLV extensions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeedbackV2 {
+    pub batch_id: u32,
+    /// number of accepted draft tokens T^t
+    pub accepted: u16,
+    /// the resampled (or bonus) token X_{T^t + 1}
+    pub new_token: u16,
+    pub exts: Vec<Ext>,
+}
+
+impl FeedbackV2 {
+    pub fn plain(batch_id: u32, accepted: u16, new_token: u16) -> FeedbackV2 {
+        FeedbackV2 { batch_id, accepted, new_token, exts: Vec::new() }
+    }
+
+    /// Lift a v1 feedback struct into a v2 frame (no extensions).
+    pub fn from_v1(fb: &FeedbackFrame) -> FeedbackV2 {
+        FeedbackV2::plain(fb.batch_id, fb.accepted, fb.new_token)
+    }
+
+    /// The v1 view of the core fields.
+    pub fn core(&self) -> FeedbackFrame {
+        FeedbackFrame {
+            batch_id: self.batch_id,
+            accepted: self.accepted,
+            new_token: self.new_token,
+        }
+    }
+
+    /// True iff a congestion extension is set.
+    pub fn congestion(&self) -> bool {
+        self.exts.iter().any(|e| matches!(e, Ext::Congestion(true)))
+    }
+
+    /// The budget grant, if one rode this frame.
+    pub fn grant(&self) -> Option<u32> {
+        self.exts.iter().find_map(|e| match e {
+            Ext::BudgetGrant(g) => Some(*g),
+            _ => None,
+        })
+    }
+
+    /// Body size on the wire, bits (excluding the protocol frame header).
+    pub fn body_bits(&self) -> usize {
+        32 + 16 + 16 + EXT_COUNT_BITS + self.exts.iter().map(Ext::bit_len).sum::<usize>()
+    }
+
+    pub(crate) fn encode_into(&self, w: &mut BitWriter) -> Result<(), String> {
+        w.write_bits_u64(self.batch_id as u64, 32);
+        w.write_bits_u64(self.accepted as u64, 16);
+        w.write_bits_u64(self.new_token as u64, 16);
+        if self.exts.len() > MAX_EXTS {
+            return Err(format!("{} extensions exceed the max of {MAX_EXTS}", self.exts.len()));
+        }
+        w.write_bits_u64(self.exts.len() as u64, EXT_COUNT_BITS);
+        for e in &self.exts {
+            let (tag, width, value) = e.wire()?;
+            w.write_bits_u64(tag as u64, EXT_TAG_BITS);
+            w.write_bits_u64(width as u64, EXT_WIDTH_BITS);
+            w.write_bits_u64(value, width as usize);
+        }
+        Ok(())
+    }
+
+    pub(crate) fn decode_from(r: &mut BitReader) -> Result<FeedbackV2, String> {
+        let batch_id = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+        let accepted = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+        let new_token = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+        let n = r.read_bits_u64(EXT_COUNT_BITS).map_err(|e| e.to_string())? as usize;
+        let mut exts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let tag = r.read_bits_u64(EXT_TAG_BITS).map_err(|e| e.to_string())? as u8;
+            let width = r.read_bits_u64(EXT_WIDTH_BITS).map_err(|e| e.to_string())? as usize;
+            if width == 0 || width > MAX_EXT_WIDTH {
+                return Err(format!("bad extension width {width}"));
+            }
+            let value = r.read_bits_u64(width).map_err(|e| e.to_string())?;
+            exts.push(match tag {
+                EXT_TAG_CONGESTION if width == 1 => Ext::Congestion(value == 1),
+                EXT_TAG_CONGESTION => {
+                    return Err(format!("congestion extension must be 1 bit, got {width}"))
+                }
+                EXT_TAG_BUDGET_GRANT if width == GRANT_WIDTH => Ext::BudgetGrant(value as u32),
+                EXT_TAG_BUDGET_GRANT => {
+                    return Err(format!("budget-grant extension must be {GRANT_WIDTH} bits"))
+                }
+                t => Ext::Unknown { tag: t, width: width as u8, value },
+            });
+        }
+        Ok(FeedbackV2 { batch_id, accepted, new_token, exts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(fb: &FeedbackV2) -> FeedbackV2 {
+        let mut w = BitWriter::new();
+        fb.encode_into(&mut w).unwrap();
+        assert_eq!(w.bit_len(), fb.body_bits(), "body_bits must predict the encoding");
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        FeedbackV2::decode_from(&mut r).unwrap()
+    }
+
+    #[test]
+    fn plain_roundtrip_and_v1_core_compat() {
+        let fb = FeedbackV2::plain(0xDEAD_BEEF, 7, 511);
+        assert_eq!(roundtrip(&fb), fb);
+        assert_eq!(fb.body_bits(), 68, "v1 core (64) + empty ext count (4)");
+        assert!(!fb.congestion());
+        assert_eq!(fb.grant(), None);
+
+        // the first 64 bits are exactly the v1 layout
+        let mut w = BitWriter::new();
+        fb.encode_into(&mut w).unwrap();
+        let v2 = w.finish();
+        let codec = crate::codec::FrameCodec::new(64, 100, crate::sqs::bits::SchemeBits::FixedK, 8);
+        let (v1, v1_bits) = codec.encode_feedback(&fb.core());
+        assert_eq!(v1_bits, 64);
+        assert_eq!(&v2[..8], &v1[..], "v2 core must be byte-identical to v1");
+    }
+
+    #[test]
+    fn extensions_roundtrip_and_query() {
+        let fb = FeedbackV2 {
+            batch_id: 3,
+            accepted: 2,
+            new_token: 40,
+            exts: vec![Ext::Congestion(true), Ext::BudgetGrant(4321)],
+        };
+        let back = roundtrip(&fb);
+        assert_eq!(back, fb);
+        assert!(back.congestion());
+        assert_eq!(back.grant(), Some(4321));
+        assert_eq!(fb.body_bits(), 68 + (4 + 6 + 1) + (4 + 6 + 24));
+    }
+
+    #[test]
+    fn unknown_extensions_skipped_and_preserved() {
+        let fb = FeedbackV2 {
+            batch_id: 1,
+            accepted: 0,
+            new_token: 9,
+            exts: vec![
+                Ext::Unknown { tag: 7, width: 13, value: 0x1ABC },
+                Ext::Congestion(true),
+            ],
+        };
+        let back = roundtrip(&fb);
+        assert_eq!(back, fb, "unknown TLVs must survive a re-encode");
+        assert!(back.congestion(), "known exts still found after an unknown one");
+    }
+
+    #[test]
+    fn encode_rejects_malformed_extensions() {
+        let mut w = BitWriter::new();
+        let too_wide = FeedbackV2 {
+            batch_id: 0,
+            accepted: 0,
+            new_token: 0,
+            exts: vec![Ext::Unknown { tag: 3, width: 57, value: 0 }],
+        };
+        assert!(too_wide.encode_into(&mut w).is_err());
+        let mut w = BitWriter::new();
+        let over_grant = FeedbackV2 {
+            batch_id: 0,
+            accepted: 0,
+            new_token: 0,
+            exts: vec![Ext::BudgetGrant(MAX_GRANT_BITS + 1)],
+        };
+        assert!(over_grant.encode_into(&mut w).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_truncated_and_bad_widths() {
+        let fb = FeedbackV2 {
+            batch_id: 11,
+            accepted: 1,
+            new_token: 2,
+            exts: vec![Ext::BudgetGrant(600)],
+        };
+        let mut w = BitWriter::new();
+        fb.encode_into(&mut w).unwrap();
+        let bytes = w.finish();
+        for cut in 0..bytes.len() {
+            let mut r = BitReader::new(&bytes[..cut]);
+            assert!(FeedbackV2::decode_from(&mut r).is_err(), "truncation at {cut} must fail");
+        }
+        // a zero-width TLV is malformed
+        let mut w = BitWriter::new();
+        w.write_bits_u64(0, 64); // core
+        w.write_bits_u64(1, 4); // one ext
+        w.write_bits_u64(5, 4); // tag
+        w.write_bits_u64(0, 6); // width 0
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(FeedbackV2::decode_from(&mut r).is_err());
+    }
+}

@@ -1,0 +1,467 @@
+//! Versioned, self-describing protocol frames.
+//!
+//! Every v2 frame opens with an 8-bit header — 4 bits of protocol
+//! version, 4 bits of frame type — followed by a type-specific body:
+//!
+//! ```text
+//!   | ver:4 | tag:4 | body... |
+//!   Hello    (0): | min_ver:4 | max_ver:4 | vocab:32 | ell:32 | scheme:2 | fixed_k:16 |
+//!   HelloAck (1): | ver:4 | ok:1 | vocab:32 | ell:32 | scheme:2 | fixed_k:16 |
+//!   Draft    (2): the v1 draft-frame layout, bit-for-bit (see codec::frame)
+//!   Feedback (3): the v2 feedback layout (see protocol::feedback)
+//!   Control  (4): | op:4 | op-specific |   (Prompt: | len:16 | token:16 * len |)
+//! ```
+//!
+//! The `Draft` body *is* the v1 byte layout: because the header is
+//! exactly one byte, `v2_bytes[1..] == v1_bytes` — pinned by tests — and
+//! the per-token payload still equals the paper's b_n(K, ell) formula.
+//! The `Hello`/`HelloAck` exchange negotiates what v1 assumed out of
+//! band: protocol version, vocabulary size, lattice resolution ell, bit
+//! scheme, and the fixed K of the FixedK scheme.
+
+use crate::codec::{DraftFrame, FrameCodec, TokenBits};
+use crate::sqs::bits::SchemeBits;
+use crate::util::bitio::{BitReader, BitWriter};
+
+use super::feedback::FeedbackV2;
+use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2};
+
+/// Self-describing per-frame header: 4-bit version + 4-bit type tag.
+pub const FRAME_HEADER_BITS: usize = 8;
+const VERSION_BITS: usize = 4;
+const TAG_BITS: usize = 4;
+
+const TAG_HELLO: u64 = 0;
+const TAG_HELLO_ACK: u64 = 1;
+const TAG_DRAFT: u64 = 2;
+const TAG_FEEDBACK: u64 = 3;
+const TAG_CONTROL: u64 = 4;
+
+const CONTROL_OP_BITS: usize = 4;
+const OP_PROMPT: u64 = 0;
+const OP_BYE: u64 = 1;
+
+/// Exact wire size of a Hello frame, bits.
+pub const HELLO_BITS: usize = FRAME_HEADER_BITS + 4 + 4 + 32 + 32 + 2 + 16;
+/// Exact wire size of a HelloAck frame, bits.
+pub const HELLO_ACK_BITS: usize = FRAME_HEADER_BITS + 4 + 1 + 32 + 32 + 2 + 16;
+
+/// Handshake proposal (edge -> cloud): the version range the sender
+/// speaks plus the codec parameters it wants for the session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub min_version: u8,
+    pub max_version: u8,
+    pub vocab: u32,
+    pub ell: u32,
+    pub scheme: SchemeBits,
+    pub fixed_k: u16,
+}
+
+/// Handshake response (cloud -> edge): the chosen version and the
+/// confirmed codec parameters (`ok: false` rejects the session).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloAck {
+    pub version: u8,
+    pub ok: bool,
+    pub vocab: u32,
+    pub ell: u32,
+    pub scheme: SchemeBits,
+    pub fixed_k: u16,
+}
+
+/// Out-of-band session control.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Control {
+    /// Initialize the peer's context with these tokens (edge -> cloud).
+    Prompt(Vec<u16>),
+    /// End of session.
+    Bye,
+}
+
+/// One protocol-v2 frame on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Hello(Hello),
+    HelloAck(HelloAck),
+    Draft(DraftFrame),
+    Feedback(FeedbackV2),
+    Control(Control),
+}
+
+impl Frame {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello(_) => "hello",
+            Frame::HelloAck(_) => "hello_ack",
+            Frame::Draft(_) => "draft",
+            Frame::Feedback(_) => "feedback",
+            Frame::Control(_) => "control",
+        }
+    }
+}
+
+fn scheme_code(s: SchemeBits) -> u64 {
+    match s {
+        SchemeBits::FixedK => 0,
+        SchemeBits::Adaptive => 1,
+        SchemeBits::Dense => 2,
+    }
+}
+
+fn scheme_from(code: u64) -> Result<SchemeBits, String> {
+    match code {
+        0 => Ok(SchemeBits::FixedK),
+        1 => Ok(SchemeBits::Adaptive),
+        2 => Ok(SchemeBits::Dense),
+        other => Err(format!("unknown bit scheme code {other}")),
+    }
+}
+
+/// Versioned frame codec: the v2 header plus per-type bodies.  Draft
+/// bodies need the negotiated payload parameters (vocab, ell, scheme,
+/// fixed K); handshake and control frames are parameter-free, so a
+/// [`WireCodec::handshake_only`] instance can carry the negotiation that
+/// produces the full codec.
+pub struct WireCodec {
+    pub version: u8,
+    payload: Option<FrameCodec>,
+}
+
+impl WireCodec {
+    /// A codec that can speak Hello/HelloAck/Control only — what each
+    /// side holds before the handshake completes.
+    pub fn handshake_only() -> WireCodec {
+        WireCodec { version: PROTOCOL_V2, payload: None }
+    }
+
+    /// A codec with known payload parameters (both ends of an in-process
+    /// session construct this directly; TCP peers negotiate first).
+    pub fn for_config(vocab: usize, ell: u32, scheme: SchemeBits, fixed_k: usize) -> WireCodec {
+        WireCodec {
+            version: PROTOCOL_V2,
+            payload: Some(FrameCodec::new(vocab, ell, scheme, fixed_k)),
+        }
+    }
+
+    /// Build the session codec from a successful handshake.
+    pub fn negotiated(ack: &HelloAck) -> Result<WireCodec, String> {
+        if !ack.ok {
+            return Err("peer rejected the handshake".into());
+        }
+        if ack.version < MIN_SUPPORTED || ack.version > MAX_SUPPORTED {
+            return Err(format!(
+                "peer acked protocol v{}, we support v{MIN_SUPPORTED}..v{MAX_SUPPORTED}",
+                ack.version
+            ));
+        }
+        Ok(WireCodec::for_config(ack.vocab as usize, ack.ell, ack.scheme, ack.fixed_k as usize))
+    }
+
+    pub fn has_payload_codec(&self) -> bool {
+        self.payload.is_some()
+    }
+
+    /// The Hello advertising this codec's payload parameters.
+    pub fn hello(&self) -> Result<Hello, String> {
+        let p = self.payload.as_ref().ok_or("no payload config to advertise")?;
+        if p.vocab > u32::MAX as usize || p.fixed_k > u16::MAX as usize {
+            return Err(format!(
+                "config (V={}, K={}) exceeds Hello field widths",
+                p.vocab, p.fixed_k
+            ));
+        }
+        Ok(Hello {
+            min_version: MIN_SUPPORTED,
+            max_version: MAX_SUPPORTED,
+            vocab: p.vocab as u32,
+            ell: p.ell,
+            scheme: p.scheme,
+            fixed_k: p.fixed_k as u16,
+        })
+    }
+
+    /// Does an ack confirm exactly this codec's payload parameters?
+    pub fn matches(&self, ack: &HelloAck) -> bool {
+        match &self.payload {
+            None => false,
+            Some(p) => {
+                ack.vocab as usize == p.vocab
+                    && ack.ell == p.ell
+                    && ack.scheme == p.scheme
+                    && ack.fixed_k as usize == p.fixed_k
+            }
+        }
+    }
+
+    /// Bits one draft token will occupy (the edge's budget rule).
+    /// Panics if called before a payload config exists.
+    pub fn token_bits(&mut self, k: usize) -> TokenBits {
+        self.payload
+            .as_mut()
+            .expect("WireCodec::token_bits before handshake")
+            .token_bits(k)
+    }
+
+    /// Serialize a frame; returns (bytes, exact bit count).
+    pub fn encode(&mut self, frame: &Frame) -> Result<(Vec<u8>, usize), String> {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(self.version as u64, VERSION_BITS);
+        match frame {
+            Frame::Hello(h) => {
+                w.write_bits_u64(TAG_HELLO, TAG_BITS);
+                w.write_bits_u64(h.min_version as u64, 4);
+                w.write_bits_u64(h.max_version as u64, 4);
+                w.write_bits_u64(h.vocab as u64, 32);
+                w.write_bits_u64(h.ell as u64, 32);
+                w.write_bits_u64(scheme_code(h.scheme), 2);
+                w.write_bits_u64(h.fixed_k as u64, 16);
+            }
+            Frame::HelloAck(a) => {
+                w.write_bits_u64(TAG_HELLO_ACK, TAG_BITS);
+                w.write_bits_u64(a.version as u64, 4);
+                w.write_bits_u64(a.ok as u64, 1);
+                w.write_bits_u64(a.vocab as u64, 32);
+                w.write_bits_u64(a.ell as u64, 32);
+                w.write_bits_u64(scheme_code(a.scheme), 2);
+                w.write_bits_u64(a.fixed_k as u64, 16);
+            }
+            Frame::Draft(d) => {
+                w.write_bits_u64(TAG_DRAFT, TAG_BITS);
+                if d.tokens.len() > u8::MAX as usize {
+                    let n = d.tokens.len();
+                    return Err(format!("draft of {n} tokens overflows the 8-bit count"));
+                }
+                let p = self
+                    .payload
+                    .as_mut()
+                    .ok_or("draft frame before the handshake negotiated a codec")?;
+                p.encode_into(d, &mut w);
+            }
+            Frame::Feedback(f) => {
+                w.write_bits_u64(TAG_FEEDBACK, TAG_BITS);
+                f.encode_into(&mut w)?;
+            }
+            Frame::Control(c) => {
+                w.write_bits_u64(TAG_CONTROL, TAG_BITS);
+                match c {
+                    Control::Prompt(tokens) => {
+                        w.write_bits_u64(OP_PROMPT, CONTROL_OP_BITS);
+                        if tokens.len() > u16::MAX as usize {
+                            let n = tokens.len();
+                            return Err(format!("prompt of {n} tokens overflows len:16"));
+                        }
+                        w.write_bits_u64(tokens.len() as u64, 16);
+                        for &t in tokens {
+                            w.write_bits_u64(t as u64, 16);
+                        }
+                    }
+                    Control::Bye => w.write_bits_u64(OP_BYE, CONTROL_OP_BITS),
+                }
+            }
+        }
+        let bits = w.bit_len();
+        Ok((w.finish(), bits))
+    }
+
+    /// Decode any v2 frame.  Malformed or truncated input returns `Err`,
+    /// never panics (fuzzed in `tests/protocol.rs`).
+    pub fn decode(&mut self, bytes: &[u8]) -> Result<Frame, String> {
+        let mut r = BitReader::new(bytes);
+        let ver = r.read_bits_u64(VERSION_BITS).map_err(|e| e.to_string())? as u8;
+        let tag = r.read_bits_u64(TAG_BITS).map_err(|e| e.to_string())?;
+        // Handshake frames are readable at ANY header version: they are
+        // how the version gets agreed, so their layout is frozen across
+        // protocol revisions and a v2 node must be able to read a v9
+        // peer's Hello to discover the overlap (negotiate() then applies
+        // the real version policy).  Everything else must match the
+        // negotiated version exactly.
+        let handshake = tag == TAG_HELLO || tag == TAG_HELLO_ACK;
+        if !handshake && ver != self.version {
+            return Err(format!("frame header v{ver} != negotiated v{}", self.version));
+        }
+        match tag {
+            TAG_HELLO => {
+                let min_version = r.read_bits_u64(4).map_err(|e| e.to_string())? as u8;
+                let max_version = r.read_bits_u64(4).map_err(|e| e.to_string())? as u8;
+                let vocab = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+                let ell = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+                let scheme = scheme_from(r.read_bits_u64(2).map_err(|e| e.to_string())?)?;
+                let fixed_k = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+                Ok(Frame::Hello(Hello { min_version, max_version, vocab, ell, scheme, fixed_k }))
+            }
+            TAG_HELLO_ACK => {
+                let version = r.read_bits_u64(4).map_err(|e| e.to_string())? as u8;
+                let ok = r.read_bits_u64(1).map_err(|e| e.to_string())? == 1;
+                let vocab = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+                let ell = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+                let scheme = scheme_from(r.read_bits_u64(2).map_err(|e| e.to_string())?)?;
+                let fixed_k = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+                Ok(Frame::HelloAck(HelloAck { version, ok, vocab, ell, scheme, fixed_k }))
+            }
+            TAG_DRAFT => {
+                let p = self
+                    .payload
+                    .as_mut()
+                    .ok_or("draft frame before the handshake negotiated a codec")?;
+                Ok(Frame::Draft(p.decode_from(&mut r)?))
+            }
+            TAG_FEEDBACK => Ok(Frame::Feedback(FeedbackV2::decode_from(&mut r)?)),
+            TAG_CONTROL => {
+                let op = r.read_bits_u64(CONTROL_OP_BITS).map_err(|e| e.to_string())?;
+                match op {
+                    OP_PROMPT => {
+                        let n = r.read_bits_u64(16).map_err(|e| e.to_string())? as usize;
+                        let mut tokens = Vec::with_capacity(n.min(4096));
+                        for _ in 0..n {
+                            tokens.push(r.read_bits_u64(16).map_err(|e| e.to_string())? as u16);
+                        }
+                        Ok(Frame::Control(Control::Prompt(tokens)))
+                    }
+                    OP_BYE => Ok(Frame::Control(Control::Bye)),
+                    other => Err(format!("unknown control op {other}")),
+                }
+            }
+            other => Err(format!("unknown frame tag {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::DraftToken;
+    use crate::sqs::{sparse_quantize, Sparsifier};
+    use crate::util::check::Gen;
+    use crate::util::rng::Pcg64;
+
+    fn codec() -> WireCodec {
+        WireCodec::for_config(64, 100, SchemeBits::FixedK, 4)
+    }
+
+    fn sample_draft(g: &mut Gen, codec_vocab: usize, k: usize, ell: u32, n: usize) -> DraftFrame {
+        let sp = Sparsifier::top_k(k);
+        let tokens = (0..n)
+            .map(|_| {
+                let q = g.probs(codec_vocab, 2.0);
+                let quant = sparse_quantize(&q, &sp, ell);
+                let token = quant.support[0];
+                DraftToken { quant, token }
+            })
+            .collect();
+        DraftFrame { batch_id: 5, tokens }
+    }
+
+    #[test]
+    fn handshake_frames_roundtrip_at_fixed_sizes() {
+        let mut wc = WireCodec::handshake_only();
+        let hello = Hello {
+            min_version: 2,
+            max_version: 2,
+            vocab: 50_257,
+            ell: 100,
+            scheme: SchemeBits::Adaptive,
+            fixed_k: 0,
+        };
+        let (bytes, bits) = wc.encode(&Frame::Hello(hello)).unwrap();
+        assert_eq!(bits, HELLO_BITS);
+        assert_eq!(wc.decode(&bytes).unwrap(), Frame::Hello(hello));
+
+        let ack = HelloAck {
+            version: 2,
+            ok: true,
+            vocab: 50_257,
+            ell: 100,
+            scheme: SchemeBits::Adaptive,
+            fixed_k: 0,
+        };
+        let (bytes, bits) = wc.encode(&Frame::HelloAck(ack)).unwrap();
+        assert_eq!(bits, HELLO_ACK_BITS);
+        assert_eq!(wc.decode(&bytes).unwrap(), Frame::HelloAck(ack));
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        let mut wc = WireCodec::handshake_only();
+        for c in [Control::Prompt(vec![1, 2, 65_535]), Control::Prompt(vec![]), Control::Bye] {
+            let (bytes, _bits) = wc.encode(&Frame::Control(c.clone())).unwrap();
+            assert_eq!(wc.decode(&bytes).unwrap(), Frame::Control(c));
+        }
+    }
+
+    #[test]
+    fn draft_body_is_v1_layout_bit_exact() {
+        let mut g = Gen { rng: Pcg64::new(31, 0) };
+        let frame = sample_draft(&mut g, 64, 4, 100, 3);
+
+        let mut v1 = FrameCodec::new(64, 100, SchemeBits::FixedK, 4);
+        let (v1_bytes, v1_bits, breakdown) = v1.encode(&frame);
+
+        let mut wc = codec();
+        let (v2_bytes, v2_bits) = wc.encode(&Frame::Draft(frame.clone())).unwrap();
+
+        assert_eq!(v2_bits, FRAME_HEADER_BITS + v1_bits, "v2 adds exactly the 8-bit header");
+        assert_eq!(&v2_bytes[1..], &v1_bytes[..], "v2 draft body must equal the v1 bytes");
+        // per-token payload still the paper's b_n
+        for (tb, dt) in breakdown.iter().zip(&frame.tokens) {
+            assert_eq!(
+                tb.dist_bits(),
+                crate::sqs::bits::token_bits(SchemeBits::FixedK, 64, dt.quant.k(), 100)
+            );
+        }
+        let back = wc.decode(&v2_bytes).unwrap();
+        assert_eq!(back, Frame::Draft(frame));
+    }
+
+    #[test]
+    fn draft_before_handshake_is_an_error_not_a_panic() {
+        let mut wc = WireCodec::handshake_only();
+        let mut g = Gen { rng: Pcg64::new(7, 7) };
+        let frame = sample_draft(&mut g, 64, 4, 100, 1);
+        assert!(wc.encode(&Frame::Draft(frame)).is_err());
+
+        let mut full = codec();
+        let mut g = Gen { rng: Pcg64::new(7, 7) };
+        let frame = sample_draft(&mut g, 64, 4, 100, 1);
+        let (bytes, _) = full.encode(&Frame::Draft(frame)).unwrap();
+        assert!(wc.decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut wc = codec();
+        let (mut bytes, _) = wc.encode(&Frame::Control(Control::Bye)).unwrap();
+        bytes[0] = (1 << 4) | (bytes[0] & 0x0F); // header says v1
+        assert!(wc.decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn handshake_frames_decode_at_any_header_version() {
+        // a future v9 peer's Hello must still parse, so negotiate() can
+        // discover the version overlap advertised in its body
+        let mut wc = WireCodec::handshake_only();
+        let hello = Hello {
+            min_version: 2,
+            max_version: 9,
+            vocab: 64,
+            ell: 100,
+            scheme: SchemeBits::FixedK,
+            fixed_k: 8,
+        };
+        let (mut bytes, _) = wc.encode(&Frame::Hello(hello)).unwrap();
+        bytes[0] = (9 << 4) | (bytes[0] & 0x0F); // header stamped v9
+        match wc.decode(&bytes).unwrap() {
+            Frame::Hello(h) => assert_eq!(h, hello),
+            other => panic!("expected Hello, got {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(PROTOCOL_V2 as u64, 4);
+        w.write_bits_u64(9, 4); // no such frame type
+        let bytes = w.finish();
+        assert!(codec().decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Protocol v2: the versioned edge–cloud wire layer.
+//!
+//! v1 (the seed's `codec::FrameCodec` alone) was an *implicit* contract:
+//! both ends had to be configured with the same (vocab, ell, scheme, K)
+//! out of band, the feedback frame was a frozen 64-bit struct, and every
+//! consumer hand-rolled its own encode/ledger/decode path.  v2 makes the
+//! contract explicit and extensible:
+//!
+//! * [`frame::Frame`] — a versioned frame taxonomy with self-describing
+//!   8-bit headers: `Hello`/`HelloAck` negotiate the protocol version
+//!   and codec parameters, `Draft` carries the v1 payload layout
+//!   bit-for-bit, `Feedback` adds TLV extensions, `Control` handles
+//!   prompt setup / teardown for remote peers.
+//! * [`feedback::FeedbackV2`] — the downlink as a control channel:
+//!   congestion bit and explicit uplink budget grants (consumed by
+//!   `control::BudgetAimd`).
+//! * [`transport::Transport`] — typed `send_frame`/`recv_frame` with
+//!   exact per-frame bit accounting, implemented by the simulated link,
+//!   the fleet's shared-uplink port, and TCP stream framing.
+//!
+//! Bit-accounting invariants (pinned by `tests/protocol.rs` and the
+//! TBL-BITS bench): a v2 draft frame costs exactly `FRAME_HEADER_BITS`
+//! more than its v1 layout, the per-token distribution payload still
+//! equals the paper's b_n(K, ell), and handshake + extension bits land
+//! in the same `uplink_bits`/`downlink_bits` ledgers as everything else.
+
+pub mod feedback;
+pub mod frame;
+pub mod transport;
+
+pub use feedback::{Ext, FeedbackV2, MAX_GRANT_BITS};
+pub use frame::{
+    Control, Frame, Hello, HelloAck, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS, HELLO_BITS,
+};
+pub use transport::{
+    Delivery, Direction, LinkTransport, SharedPort, StreamTransport, Transport,
+};
+
+/// The legacy headerless layout (codec::FrameCodec alone).
+pub const PROTOCOL_V1: u8 = 1;
+/// Current protocol: versioned headers, handshake, extensible feedback.
+pub const PROTOCOL_V2: u8 = 2;
+/// Version range this build speaks.
+pub const MIN_SUPPORTED: u8 = PROTOCOL_V2;
+pub const MAX_SUPPORTED: u8 = PROTOCOL_V2;
+
+/// Protocol-level cap on the lattice resolution a peer may propose.
+/// The binomial tables behind the codec are dense in ell, so an
+/// unbounded ell from an untrusted Hello would be a memory DoS on the
+/// TCP endpoint; the paper operates at ell <= 4000.
+pub const MAX_ELL: u32 = 1 << 16;
+
+/// Cloud-side handshake: validate a peer's [`Hello`] and choose the
+/// session parameters.  The highest mutually supported version wins.
+pub fn negotiate(h: &Hello) -> Result<HelloAck, String> {
+    if h.min_version > h.max_version {
+        return Err(format!("inverted version range {}..{}", h.min_version, h.max_version));
+    }
+    if h.min_version > MAX_SUPPORTED || h.max_version < MIN_SUPPORTED {
+        return Err(format!(
+            "no common protocol version: peer speaks v{}..v{}, \
+             we speak v{MIN_SUPPORTED}..v{MAX_SUPPORTED}",
+            h.min_version, h.max_version
+        ));
+    }
+    if h.vocab == 0 {
+        return Err("vocab must be >= 1".into());
+    }
+    if h.vocab > (u16::MAX as u32) + 1 {
+        return Err(format!("vocab {} exceeds the 16-bit token space", h.vocab));
+    }
+    if h.ell == 0 {
+        return Err("lattice resolution ell must be >= 1".into());
+    }
+    if h.ell > MAX_ELL {
+        return Err(format!("lattice resolution ell={} exceeds the {MAX_ELL} cap", h.ell));
+    }
+    if h.scheme == crate::sqs::bits::SchemeBits::FixedK
+        && (h.fixed_k == 0 || h.fixed_k as u32 > h.vocab)
+    {
+        return Err(format!("fixed K={} out of 1..=V={}", h.fixed_k, h.vocab));
+    }
+    Ok(HelloAck {
+        version: h.max_version.min(MAX_SUPPORTED),
+        ok: true,
+        vocab: h.vocab,
+        ell: h.ell,
+        scheme: h.scheme,
+        fixed_k: h.fixed_k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sqs::bits::SchemeBits;
+
+    fn hello() -> Hello {
+        Hello {
+            min_version: MIN_SUPPORTED,
+            max_version: MAX_SUPPORTED,
+            vocab: 256,
+            ell: 100,
+            scheme: SchemeBits::FixedK,
+            fixed_k: 8,
+        }
+    }
+
+    #[test]
+    fn negotiate_accepts_a_valid_hello() {
+        let ack = negotiate(&hello()).unwrap();
+        assert!(ack.ok);
+        assert_eq!(ack.version, PROTOCOL_V2);
+        assert_eq!(ack.vocab, 256);
+        assert_eq!(ack.fixed_k, 8);
+        let wc = WireCodec::negotiated(&ack).unwrap();
+        assert!(wc.has_payload_codec());
+        assert!(wc.matches(&ack));
+    }
+
+    #[test]
+    fn negotiate_picks_the_highest_common_version() {
+        // a future peer speaking v2..v7 still lands on our v2
+        let h = Hello { min_version: 2, max_version: 7, ..hello() };
+        assert_eq!(negotiate(&h).unwrap().version, MAX_SUPPORTED);
+    }
+
+    #[test]
+    fn negotiate_rejects_version_mismatch_and_bad_configs() {
+        let v1_only = Hello { min_version: 1, max_version: 1, ..hello() };
+        assert!(negotiate(&v1_only).is_err(), "v1-only peers cannot speak v2");
+        let inverted = Hello { min_version: 3, max_version: 2, ..hello() };
+        assert!(negotiate(&inverted).is_err());
+        assert!(negotiate(&Hello { vocab: 0, ..hello() }).is_err());
+        assert!(negotiate(&Hello { ell: 0, ..hello() }).is_err());
+        assert!(
+            negotiate(&Hello { ell: MAX_ELL + 1, ..hello() }).is_err(),
+            "unbounded ell is a binomial-table memory DoS"
+        );
+        assert!(negotiate(&Hello { fixed_k: 0, ..hello() }).is_err());
+        assert!(negotiate(&Hello { fixed_k: 300, ..hello() }).is_err(), "K > V");
+        // adaptive ignores fixed_k entirely
+        let adaptive = Hello { scheme: SchemeBits::Adaptive, fixed_k: 0, ..hello() };
+        assert!(negotiate(&adaptive).is_ok());
+    }
+}

@@ -1,0 +1,421 @@
+//! Transport: typed frame send/recv with exact per-frame bit accounting.
+//!
+//! Before this trait, three consumers hand-rolled the same
+//! encode -> charge-the-ledger -> decode sequence with three different
+//! shapes: `SdSession` against `SimulatedLink`, the fleet's `Device`
+//! against `SharedUplink`, and the TCP server against a socket.  The
+//! trait pins the shared contract — a frame is *encoded exactly once*,
+//! the bits charged are the bits of that encoding, and the receiver
+//! decodes the same bytes that were shipped — while implementations keep
+//! their own timing models:
+//!
+//! * [`LinkTransport`] — a private simulated link in virtual time
+//!   (uplink/downlink rates + propagation); the session path.
+//! * [`SharedPort`] — one device's port onto the fleet's shared FIFO
+//!   uplink (queueing in virtual time) plus its dedicated downlink.
+//! * [`StreamTransport`] — length-prefixed framing over any
+//!   `Read + Write` byte stream (the TCP wire endpoint); bits are the
+//!   actual bytes on the stream (prefix included), wall time is not
+//!   modeled.
+//!
+//! `Direction::Up` is edge -> cloud (drafts, control), `Down` is
+//! cloud -> edge (acks, feedback).  Simulated transports model each
+//! direction as a one-frame-in-flight pipe: `send_frame` stores the
+//! encoded bytes, `recv_frame` decodes and drains them — so the wire
+//! format is exercised on every frame, not just in codec tests.
+
+use std::cell::RefCell;
+use std::io::{Read, Write};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::channel::{SharedUplink, SimulatedLink};
+use crate::util::rng::Pcg64;
+
+use super::frame::{Frame, WireCodec};
+
+/// Which way a frame travels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// edge -> cloud
+    Up,
+    /// cloud -> edge
+    Down,
+}
+
+/// What shipping one frame cost.
+#[derive(Clone, Copy, Debug)]
+pub struct Delivery {
+    /// exact size on the wire, bits
+    pub bits: usize,
+    /// virtual time the frame was submitted
+    pub submitted_at: f64,
+    /// time spent waiting for a shared channel (0 on private links)
+    pub queue_wait_s: f64,
+    /// virtual time the frame reaches the far end
+    pub delivered_at: f64,
+}
+
+impl Delivery {
+    /// Total submission-to-delivery latency (queue + air + propagation).
+    pub fn latency_s(&self) -> f64 {
+        self.delivered_at - self.submitted_at
+    }
+}
+
+/// A typed frame channel with per-frame bit accounting.
+pub trait Transport {
+    /// Encode `frame` and ship it in `dir`, submitted at virtual time
+    /// `now` (stream transports ignore `now`).
+    fn send_frame(
+        &mut self,
+        dir: Direction,
+        frame: &Frame,
+        codec: &mut WireCodec,
+        now: f64,
+    ) -> Result<Delivery>;
+
+    /// Receive and decode the next frame in `dir`.
+    fn recv_frame(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame>;
+
+    /// (frames, bits) shipped so far in `dir`.
+    fn ledger(&self, dir: Direction) -> (u64, u64);
+}
+
+/// One-frame-in-flight pipe pair shared by the simulated transports:
+/// `send_frame` stores the encoded bytes, `recv_frame` drains them.
+/// The strict-alternation invariant (and its error messages) live here
+/// once, so the timing models cannot diverge on it.
+#[derive(Default)]
+struct InflightPipes {
+    up: Option<Vec<u8>>,
+    down: Option<Vec<u8>>,
+}
+
+impl InflightPipes {
+    fn slot(&mut self, dir: Direction) -> &mut Option<Vec<u8>> {
+        match dir {
+            Direction::Up => &mut self.up,
+            Direction::Down => &mut self.down,
+        }
+    }
+
+    /// The occupancy check, run *before* any channel time is charged.
+    fn ensure_clear(&mut self, dir: Direction) -> Result<()> {
+        if self.slot(dir).is_some() {
+            bail!("{dir:?} frame already in flight (protocol is strictly alternating)");
+        }
+        Ok(())
+    }
+
+    fn store(&mut self, dir: Direction, bytes: Vec<u8>) {
+        debug_assert!(self.slot(dir).is_none());
+        *self.slot(dir) = Some(bytes);
+    }
+
+    fn take(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame> {
+        let bytes = self
+            .slot(dir)
+            .take()
+            .ok_or_else(|| anyhow!("no {dir:?} frame in flight"))?;
+        codec.decode(&bytes).map_err(|e| anyhow!("frame decode: {e}"))
+    }
+}
+
+/// [`Transport`] over a private [`SimulatedLink`]: the single-session
+/// path (one edge, one cloud, dedicated bandwidth both ways).
+pub struct LinkTransport {
+    pub link: SimulatedLink,
+    pipes: InflightPipes,
+}
+
+impl LinkTransport {
+    pub fn new(link: SimulatedLink) -> LinkTransport {
+        LinkTransport { link, pipes: InflightPipes::default() }
+    }
+}
+
+impl Transport for LinkTransport {
+    fn send_frame(
+        &mut self,
+        dir: Direction,
+        frame: &Frame,
+        codec: &mut WireCodec,
+        now: f64,
+    ) -> Result<Delivery> {
+        self.pipes.ensure_clear(dir)?;
+        let (bytes, bits) = codec.encode(frame).map_err(|e| anyhow!("frame encode: {e}"))?;
+        let t = match dir {
+            Direction::Up => self.link.send_uplink(bits),
+            Direction::Down => self.link.send_downlink(bits),
+        };
+        self.pipes.store(dir, bytes);
+        Ok(Delivery { bits, submitted_at: now, queue_wait_s: 0.0, delivered_at: now + t })
+    }
+
+    fn recv_frame(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame> {
+        self.pipes.take(dir, codec)
+    }
+
+    fn ledger(&self, dir: Direction) -> (u64, u64) {
+        match dir {
+            Direction::Up => (self.link.up.frames, self.link.up.bits),
+            Direction::Down => (self.link.down.frames, self.link.down.bits),
+        }
+    }
+}
+
+/// One fleet device's port onto the shared uplink: uplink frames reserve
+/// the contended FIFO channel (queueing in virtual time), downlink
+/// frames ride the device's dedicated link.  The port keeps per-device
+/// (frames, bits) tallies; the shared channel's own ledger aggregates
+/// across devices.
+pub struct SharedPort {
+    channel: Rc<RefCell<SharedUplink>>,
+    pub downlink_bps: f64,
+    pub propagation_s: f64,
+    pub jitter_s: f64,
+    rng: Pcg64,
+    pipes: InflightPipes,
+    up: (u64, u64),
+    down: (u64, u64),
+}
+
+impl SharedPort {
+    pub fn new(
+        channel: Rc<RefCell<SharedUplink>>,
+        downlink_bps: f64,
+        propagation_s: f64,
+        jitter_s: f64,
+        seed: u64,
+    ) -> SharedPort {
+        SharedPort {
+            channel,
+            downlink_bps,
+            propagation_s,
+            jitter_s,
+            rng: Pcg64::new(seed, 0xD04),
+            pipes: InflightPipes::default(),
+            up: (0, 0),
+            down: (0, 0),
+        }
+    }
+}
+
+impl Transport for SharedPort {
+    fn send_frame(
+        &mut self,
+        dir: Direction,
+        frame: &Frame,
+        codec: &mut WireCodec,
+        now: f64,
+    ) -> Result<Delivery> {
+        self.pipes.ensure_clear(dir)?;
+        let (bytes, bits) = codec.encode(frame).map_err(|e| anyhow!("frame encode: {e}"))?;
+        let delivery = match dir {
+            Direction::Up => {
+                let (start, delivered) = self.channel.borrow_mut().reserve(now, bits);
+                self.up.0 += 1;
+                self.up.1 += bits as u64;
+                Delivery {
+                    bits,
+                    submitted_at: now,
+                    queue_wait_s: start - now,
+                    delivered_at: delivered,
+                }
+            }
+            Direction::Down => {
+                let jitter =
+                    if self.jitter_s > 0.0 { self.rng.next_f64() * self.jitter_s } else { 0.0 };
+                let t = bits as f64 / self.downlink_bps + self.propagation_s + jitter;
+                self.down.0 += 1;
+                self.down.1 += bits as u64;
+                Delivery { bits, submitted_at: now, queue_wait_s: 0.0, delivered_at: now + t }
+            }
+        };
+        self.pipes.store(dir, bytes);
+        Ok(delivery)
+    }
+
+    fn recv_frame(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame> {
+        self.pipes.take(dir, codec)
+    }
+
+    fn ledger(&self, dir: Direction) -> (u64, u64) {
+        match dir {
+            Direction::Up => self.up,
+            Direction::Down => self.down,
+        }
+    }
+}
+
+/// Bytes of length prefix per stream frame.
+pub const STREAM_LEN_PREFIX_BYTES: usize = 2;
+
+/// [`Transport`] over any byte stream: 16-bit big-endian byte-length
+/// prefix + frame bytes.  Used by the TCP wire endpoint on both ends.
+/// Bit accounting charges what actually crosses the stream — the prefix
+/// plus the byte-padded frame — so TCP ledgers are honest rather than
+/// bit-packed-theoretical.
+pub struct StreamTransport<S: Read + Write> {
+    stream: S,
+    up: (u64, u64),
+    down: (u64, u64),
+}
+
+impl<S: Read + Write> StreamTransport<S> {
+    pub fn new(stream: S) -> StreamTransport<S> {
+        StreamTransport { stream, up: (0, 0), down: (0, 0) }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.stream
+    }
+
+    fn tally(&mut self, dir: Direction, bits: usize) {
+        match dir {
+            Direction::Up => {
+                self.up.0 += 1;
+                self.up.1 += bits as u64;
+            }
+            Direction::Down => {
+                self.down.0 += 1;
+                self.down.1 += bits as u64;
+            }
+        }
+    }
+}
+
+impl<S: Read + Write> Transport for StreamTransport<S> {
+    fn send_frame(
+        &mut self,
+        dir: Direction,
+        frame: &Frame,
+        codec: &mut WireCodec,
+        now: f64,
+    ) -> Result<Delivery> {
+        let (bytes, _frame_bits) = codec.encode(frame).map_err(|e| anyhow!("frame encode: {e}"))?;
+        if bytes.len() > u16::MAX as usize {
+            bail!("frame of {} bytes overflows the 16-bit length prefix", bytes.len());
+        }
+        self.stream.write_all(&(bytes.len() as u16).to_be_bytes())?;
+        self.stream.write_all(&bytes)?;
+        self.stream.flush()?;
+        let bits = (STREAM_LEN_PREFIX_BYTES + bytes.len()) * 8;
+        self.tally(dir, bits);
+        Ok(Delivery { bits, submitted_at: now, queue_wait_s: 0.0, delivered_at: now })
+    }
+
+    fn recv_frame(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame> {
+        let mut len = [0u8; STREAM_LEN_PREFIX_BYTES];
+        self.stream.read_exact(&mut len)?;
+        let n = u16::from_be_bytes(len) as usize;
+        let mut buf = vec![0u8; n];
+        self.stream.read_exact(&mut buf)?;
+        self.tally(dir, (STREAM_LEN_PREFIX_BYTES + n) * 8);
+        codec.decode(&buf).map_err(|e| anyhow!("frame decode: {e}"))
+    }
+
+    fn ledger(&self, dir: Direction) -> (u64, u64) {
+        match dir {
+            Direction::Up => self.up,
+            Direction::Down => self.down,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::LinkConfig;
+    use crate::protocol::feedback::FeedbackV2;
+    use crate::protocol::frame::Control;
+    use crate::sqs::bits::SchemeBits;
+
+    fn wire() -> WireCodec {
+        WireCodec::for_config(64, 100, SchemeBits::FixedK, 4)
+    }
+
+    #[test]
+    fn link_transport_charges_exact_bits_and_roundtrips() {
+        let cfg = LinkConfig {
+            uplink_bps: 1000.0,
+            downlink_bps: 1000.0,
+            propagation_s: 0.0,
+            jitter_s: 0.0,
+        };
+        let mut tr = LinkTransport::new(SimulatedLink::new(cfg, 0));
+        let mut wc = wire();
+        let fb = Frame::Feedback(FeedbackV2::plain(1, 2, 3));
+        let d = tr.send_frame(Direction::Down, &fb, &mut wc, 0.0).unwrap();
+        assert_eq!(d.bits, 8 + 68, "header + v2 feedback body");
+        assert!((d.latency_s() - d.bits as f64 / 1000.0).abs() < 1e-12);
+        assert_eq!(tr.ledger(Direction::Down), (1, d.bits as u64));
+        assert_eq!(tr.ledger(Direction::Up), (0, 0));
+        assert_eq!(tr.recv_frame(Direction::Down, &mut wc).unwrap(), fb);
+        assert!(tr.recv_frame(Direction::Down, &mut wc).is_err(), "pipe drained");
+    }
+
+    #[test]
+    fn link_transport_rejects_double_send() {
+        let mut tr = LinkTransport::new(SimulatedLink::new(LinkConfig::default(), 0));
+        let mut wc = wire();
+        let f = Frame::Control(Control::Bye);
+        tr.send_frame(Direction::Up, &f, &mut wc, 0.0).unwrap();
+        assert!(tr.send_frame(Direction::Up, &f, &mut wc, 0.0).is_err());
+        // the other direction is an independent pipe
+        tr.send_frame(Direction::Down, &f, &mut wc, 0.0).unwrap();
+    }
+
+    #[test]
+    fn shared_port_queues_on_the_common_channel() {
+        let channel = Rc::new(RefCell::new(SharedUplink::new(1000.0, 0.0, 0.0, 0)));
+        let mut a = SharedPort::new(channel.clone(), 1e6, 0.0, 0.0, 1);
+        let mut b = SharedPort::new(channel.clone(), 1e6, 0.0, 0.0, 2);
+        let mut wc = wire();
+        let f = Frame::Feedback(FeedbackV2::plain(0, 0, 0));
+        let da = a.send_frame(Direction::Up, &f, &mut wc, 0.0).unwrap();
+        let db = b.send_frame(Direction::Up, &f, &mut wc, 0.0).unwrap();
+        assert_eq!(da.queue_wait_s, 0.0);
+        assert!(db.queue_wait_s > 0.0, "second frame waits for the shared channel");
+        assert!(db.delivered_at > da.delivered_at);
+        // per-port tallies + the shared ledger agree
+        assert_eq!(a.ledger(Direction::Up).1 + b.ledger(Direction::Up).1,
+                   channel.borrow().ledger.bits);
+        assert_eq!(a.recv_frame(Direction::Up, &mut wc).unwrap(), f);
+        assert_eq!(b.recv_frame(Direction::Up, &mut wc).unwrap(), f);
+    }
+
+    #[test]
+    fn stream_transport_over_an_in_memory_pipe() {
+        // a Vec<u8> cursor is Read + Write enough for a loopback check
+        struct Loop {
+            buf: std::io::Cursor<Vec<u8>>,
+        }
+        impl Read for Loop {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                self.buf.read(out)
+            }
+        }
+        impl Write for Loop {
+            fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+                let pos = self.buf.position();
+                self.buf.set_position(self.buf.get_ref().len() as u64);
+                let n = self.buf.write(data)?;
+                self.buf.set_position(pos);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut tr = StreamTransport::new(Loop { buf: std::io::Cursor::new(Vec::new()) });
+        let mut wc = wire();
+        let f = Frame::Control(Control::Prompt(vec![9, 8, 7]));
+        let d = tr.send_frame(Direction::Up, &f, &mut wc, 0.0).unwrap();
+        assert_eq!(tr.recv_frame(Direction::Up, &mut wc).unwrap(), f);
+        assert_eq!(tr.ledger(Direction::Up), (2, 2 * d.bits as u64),
+                   "loopback counts the frame once per side");
+    }
+}

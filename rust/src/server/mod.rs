@@ -18,6 +18,11 @@
 //! in FIFO order, replying through per-request response channels.  This is
 //! the classic single-accelerator serving shape: network concurrency at
 //! the edge of the process, strict ordering at the device.
+//!
+//! A second endpoint speaks the binary protocol-v2 wire format — the
+//! actual edge–cloud split over TCP — see [`wire`].
+
+pub mod wire;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

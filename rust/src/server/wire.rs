@@ -1,0 +1,427 @@
+//! Protocol-v2 TCP endpoint: the paper's edge–cloud split over a real
+//! socket instead of a simulated link.
+//!
+//! The JSON front-end (`server::serve`) runs the *whole* SD loop
+//! server-side and is a text API.  This endpoint is the wire protocol
+//! itself: a remote edge connects, handshakes (`Hello`/`HelloAck`),
+//! initializes its context with `Control::Prompt`, then streams `Draft`
+//! frames and receives v2 `Feedback` frames until `Control::Bye`.  Both
+//! ends speak through [`StreamTransport`] — length-prefixed frames over
+//! the stream — so the server has no codec calls of its own, and the
+//! per-connection ledgers count the actual bytes on the wire.
+//!
+//! The downlink is an active control channel: when the number of live
+//! sessions reaches `congestion_depth`, every feedback frame carries the
+//! congestion bit and (when configured) an explicit uplink budget grant,
+//! which an AIMD edge consumes directly (tests/wire_tcp.rs pins the
+//! convergence).  The verify backend is the synthetic world — the same
+//! models the fleet simulator uses — so the endpoint runs anywhere the
+//! test suite does; swapping in the PJRT target is a backend change, not
+//! a protocol one.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cloud::CloudNode;
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop};
+use crate::edge::EdgeNode;
+use crate::model::synthetic::{SyntheticTarget, SyntheticWorld};
+use crate::model::DraftLm;
+use crate::protocol::{
+    negotiate, Control, Direction, Ext, Frame, HelloAck, StreamTransport, Transport, WireCodec,
+    MAX_SUPPORTED,
+};
+use crate::sqs::Policy;
+
+/// Wire-endpoint configuration.
+#[derive(Clone, Debug)]
+pub struct WireServerConfig {
+    pub addr: String,
+    /// synthetic-world parameters (must match the clients' draft models)
+    pub vocab: usize,
+    pub mismatch: f64,
+    pub world_seed: u64,
+    /// shared SLM/LLM sampling temperature
+    pub temp: f32,
+    /// verify-window capacity per draft frame
+    pub max_batch_drafts: usize,
+    /// target-context capacity per session
+    pub max_len: usize,
+    /// largest lattice resolution accepted from a client Hello (the
+    /// binomial tables are dense in ell; see `protocol::MAX_ELL`)
+    pub max_ell: u32,
+    /// serve at most this many connections then return (None = forever)
+    pub max_conns: Option<usize>,
+    /// live-session count at/above which feedback carries the
+    /// congestion bit (0 = always congested; useful in tests)
+    pub congestion_depth: usize,
+    /// per-round uplink budget granted on congested feedback frames
+    pub grant_bits: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for WireServerConfig {
+    fn default() -> Self {
+        WireServerConfig {
+            addr: "127.0.0.1:0".into(),
+            vocab: 64,
+            mismatch: 0.6,
+            world_seed: 2024,
+            temp: 0.9,
+            max_batch_drafts: 15,
+            max_len: 100_000,
+            max_ell: 10_000,
+            max_conns: None,
+            congestion_depth: 2,
+            grant_bits: None,
+            seed: 0,
+        }
+    }
+}
+
+/// A bound wire endpoint (bind first so tests can read the OS-assigned
+/// port before serving).
+pub struct WireServer {
+    listener: TcpListener,
+    cfg: WireServerConfig,
+    world: SyntheticWorld,
+}
+
+impl WireServer {
+    pub fn bind(cfg: WireServerConfig) -> Result<WireServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.world_seed);
+        Ok(WireServer { listener, cfg, world })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// The world clients must build their draft models from.
+    pub fn world(&self) -> &SyntheticWorld {
+        &self.world
+    }
+
+    /// Accept and serve connections (one thread per session).  Returns
+    /// after `max_conns` sessions, with all session threads joined.
+    pub fn serve(self) -> Result<()> {
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        let mut served = 0usize;
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            served += 1;
+            let world = self.world.clone();
+            let cfg = self.cfg.clone();
+            let counter = active.clone();
+            let conn_seed = self.cfg.seed ^ (served as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let handle = std::thread::spawn(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+                let outcome = serve_conn(stream, world, &cfg, &counter, conn_seed);
+                counter.fetch_sub(1, Ordering::SeqCst);
+                if let Err(e) = outcome {
+                    crate::debug!("wire session error: {e}");
+                }
+            });
+            // bounded mode (tests) joins every session before returning;
+            // serve-forever detaches like the JSON front-end, so handles
+            // do not accumulate without bound
+            match self.cfg.max_conns {
+                Some(max) => {
+                    handles.push(handle);
+                    if served >= max {
+                        break;
+                    }
+                }
+                None => drop(handle),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// One session: handshake, prompt, then draft/feedback rounds.
+fn serve_conn(
+    stream: TcpStream,
+    world: SyntheticWorld,
+    cfg: &WireServerConfig,
+    active: &AtomicUsize,
+    seed: u64,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut tr = StreamTransport::new(stream);
+    let mut wire = WireCodec::handshake_only();
+
+    // ---- handshake --------------------------------------------------
+    let hello = match tr.recv_frame(Direction::Up, &mut wire)? {
+        Frame::Hello(h) => h,
+        other => bail!("expected Hello, got {}", other.name()),
+    };
+    // server-side admission on top of protocol validation: the backend
+    // serves one world, and ell bounds the binomial tables this session
+    // may make the server build
+    let admitted = if hello.vocab as usize != world.vocab {
+        Err(format!("client vocab {} != server world vocab {}", hello.vocab, world.vocab))
+    } else if hello.ell > cfg.max_ell {
+        Err(format!("client ell {} exceeds the server cap {}", hello.ell, cfg.max_ell))
+    } else {
+        negotiate(&hello)
+    };
+    let ack = match admitted {
+        Ok(a) => a,
+        Err(e) => {
+            // best effort: tell the peer why before closing
+            let nack = HelloAck {
+                version: MAX_SUPPORTED,
+                ok: false,
+                vocab: hello.vocab,
+                ell: hello.ell,
+                scheme: hello.scheme,
+                fixed_k: hello.fixed_k,
+            };
+            let _ = tr.send_frame(Direction::Down, &Frame::HelloAck(nack), &mut wire, 0.0);
+            bail!("handshake rejected: {e}");
+        }
+    };
+    tr.send_frame(Direction::Down, &Frame::HelloAck(ack), &mut wire, 0.0)?;
+    let mut wire = WireCodec::negotiated(&ack).map_err(|e| anyhow!(e))?;
+
+    // ---- prompt -----------------------------------------------------
+    let prompt = match tr.recv_frame(Direction::Up, &mut wire)? {
+        Frame::Control(Control::Prompt(tokens)) => tokens,
+        other => bail!("expected Control::Prompt, got {}", other.name()),
+    };
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let target = SyntheticTarget::new(world, cfg.max_batch_drafts, cfg.max_len);
+    let mut cloud = CloudNode::new(target, seed ^ 0xC);
+    cloud.start(&prompt)?;
+    let mut prev = *prompt.last().unwrap();
+
+    // ---- draft / feedback rounds ------------------------------------
+    loop {
+        match tr.recv_frame(Direction::Up, &mut wire)? {
+            Frame::Draft(frame) => {
+                let verdict = cloud.verify_with_prev(&frame, prev, cfg.temp)?;
+                prev = *verdict.committed.last().unwrap();
+                let mut exts = Vec::new();
+                if active.load(Ordering::SeqCst) >= cfg.congestion_depth {
+                    exts.push(Ext::Congestion(true));
+                    if let Some(g) = cfg.grant_bits {
+                        exts.push(Ext::BudgetGrant(g));
+                    }
+                }
+                let fb = verdict.feedback_v2(exts);
+                tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+            }
+            Frame::Control(Control::Bye) => break,
+            other => bail!("unexpected {} frame mid-session", other.name()),
+        }
+    }
+    Ok(())
+}
+
+/// Per-session edge-side configuration for [`WireEdge`].
+#[derive(Clone, Copy, Debug)]
+pub struct WireEdgeConfig {
+    pub policy: Policy,
+    pub temp: f32,
+    pub ell: u32,
+    pub budget_bits: usize,
+    pub max_batch_drafts: usize,
+    pub adaptive: AdaptiveMode,
+    pub seed: u64,
+}
+
+impl Default for WireEdgeConfig {
+    fn default() -> Self {
+        WireEdgeConfig {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.9,
+            ell: 100,
+            budget_bits: 5000,
+            max_batch_drafts: 15,
+            adaptive: AdaptiveMode::Off,
+            seed: 0,
+        }
+    }
+}
+
+/// What one wire session produced (edge-side view).
+#[derive(Clone, Debug)]
+pub struct WireRunReport {
+    /// prompt + committed tokens
+    pub tokens: Vec<u16>,
+    pub prompt_len: usize,
+    pub batches: usize,
+    /// total stream bits up (length prefixes included)
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    /// Hello bits on the stream (subset of `uplink_bits`)
+    pub handshake_uplink_bits: u64,
+    /// HelloAck bits on the stream (subset of `downlink_bits`)
+    pub handshake_downlink_bits: u64,
+    /// per-round draft frame sizes, bits (convergence diagnostics)
+    pub frame_bits: Vec<usize>,
+    /// feedback frames that carried a budget grant
+    pub grants_seen: usize,
+}
+
+impl WireRunReport {
+    pub fn new_tokens(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}
+
+/// Edge-side client of the wire endpoint: owns the local draft model and
+/// control loop, speaks protocol v2 over any `Read + Write` stream.
+pub struct WireEdge<D: DraftLm> {
+    pub edge: EdgeNode<D>,
+    pub control: ControlLoop,
+    pub cfg: WireEdgeConfig,
+}
+
+impl<D: DraftLm> WireEdge<D> {
+    pub fn new(draft: D, cfg: WireEdgeConfig) -> WireEdge<D> {
+        let vocab = draft.vocab();
+        let mut edge = EdgeNode::new(
+            draft,
+            cfg.policy,
+            cfg.ell,
+            cfg.budget_bits,
+            cfg.max_batch_drafts,
+            cfg.seed ^ 0xE,
+        );
+        if matches!(cfg.adaptive, AdaptiveMode::Aimd { .. }) {
+            edge.use_adaptive_scheme();
+        }
+        let control = ControlLoop::for_session(
+            cfg.adaptive,
+            cfg.policy,
+            cfg.max_batch_drafts,
+            cfg.budget_bits,
+            vocab,
+        );
+        WireEdge { edge, control, cfg }
+    }
+
+    /// Run one request over the transport: handshake, prompt, then the
+    /// speculative loop until `max_new_tokens` tokens are committed.
+    pub fn run<S: Read + Write>(
+        &mut self,
+        transport: &mut StreamTransport<S>,
+        prompt: &[u16],
+        max_new_tokens: usize,
+    ) -> Result<WireRunReport> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        self.edge.start(prompt)?;
+
+        // ---- handshake ----------------------------------------------
+        let hello = self.edge.wire.hello().map_err(|e| anyhow!("handshake: {e}"))?;
+        let d_hello =
+            transport.send_frame(Direction::Up, &Frame::Hello(hello), &mut self.edge.wire, 0.0)?;
+        let ack = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+            Frame::HelloAck(a) => a,
+            other => bail!("expected HelloAck, got {}", other.name()),
+        };
+        let (_, hs_down) = transport.ledger(Direction::Down);
+        if !ack.ok {
+            bail!("server rejected the handshake");
+        }
+        if !self.edge.wire.matches(&ack) {
+            bail!("server negotiated a different codec config");
+        }
+
+        // ---- prompt -------------------------------------------------
+        transport.send_frame(
+            Direction::Up,
+            &Frame::Control(Control::Prompt(prompt.to_vec())),
+            &mut self.edge.wire,
+            0.0,
+        )?;
+
+        // ---- speculative loop ---------------------------------------
+        let mut seq = prompt.to_vec();
+        let mut frame_bits = Vec::new();
+        let mut grants_seen = 0usize;
+        while seq.len() - prompt.len() < max_new_tokens && self.room_left(seq.len()) {
+            let knobs = self.control.begin_batch();
+            let remaining = max_new_tokens - (seq.len() - prompt.len());
+            let drafted = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
+            let l = drafted.frame.tokens.len();
+            if l == 0 {
+                break;
+            }
+            let ctx_before = seq.len();
+            let d = transport.send_frame(
+                Direction::Up,
+                &Frame::Draft(drafted.frame.clone()),
+                &mut self.edge.wire,
+                0.0,
+            )?;
+            let fb = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+                Frame::Feedback(f) => f,
+                other => bail!("expected Feedback, got {}", other.name()),
+            };
+            let accepted = fb.accepted as usize;
+            if accepted > l {
+                bail!("server accepted {accepted} of {l} drafts");
+            }
+            self.edge.apply_feedback(ctx_before, l, accepted, fb.new_token)?;
+            seq.extend(drafted.frame.tokens[..accepted].iter().map(|t| t.token));
+            seq.push(fb.new_token);
+            if fb.grant().is_some() {
+                grants_seen += 1;
+            }
+            frame_bits.push(d.bits);
+            self.control.feedback(&BatchOutcome {
+                drafted: l,
+                accepted,
+                rejected: accepted < l,
+                frame_bits: d.bits,
+                // wall time is not part of the virtual-time ledger: feed
+                // zeros so the estimator skips throughput, keeping the
+                // run a pure function of (config, seed)
+                t_uplink_s: 0.0,
+                queue_wait_s: 0.0,
+                congestion: fb.congestion(),
+                grant_bits: fb.grant(),
+            });
+        }
+        let _ = transport.send_frame(
+            Direction::Up,
+            &Frame::Control(Control::Bye),
+            &mut self.edge.wire,
+            0.0,
+        );
+
+        let (_, up_bits) = transport.ledger(Direction::Up);
+        let (_, down_bits) = transport.ledger(Direction::Down);
+        Ok(WireRunReport {
+            prompt_len: prompt.len(),
+            batches: frame_bits.len(),
+            uplink_bits: up_bits,
+            downlink_bits: down_bits,
+            handshake_uplink_bits: d_hello.bits as u64,
+            handshake_downlink_bits: hs_down,
+            frame_bits,
+            grants_seen,
+            tokens: seq,
+        })
+    }
+
+    fn room_left(&self, seq_len: usize) -> bool {
+        seq_len + self.cfg.max_batch_drafts + 2 < self.edge.draft.max_len()
+    }
+}

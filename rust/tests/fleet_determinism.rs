@@ -201,6 +201,85 @@ fn aimd_fleet_holds_wire_budget_where_static_overshoots() {
     );
 }
 
+/// Acceptance: verifier budget grants measurably change `BudgetAimd`
+/// behavior in a congested fleet — granted sessions converge to the
+/// granted budget — and the whole thing stays a pure function of
+/// (config, seed).
+#[test]
+fn verifier_budget_grants_throttle_an_aimd_fleet_deterministically() {
+    let grant = 500u32;
+    let mk = |congestion_depth: usize, grant_bits: Option<u32>| {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 24,
+            // AIMD with a generous configured target: without grants it
+            // settles high, so the grant is the binding constraint
+            adaptive: AdaptiveMode::Aimd { target_bits: 5000 },
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(6, base);
+        cfg.uplink_bps = 1e6;
+        cfg.requests_per_device = 3;
+        cfg.seed = 77;
+        cfg.verifier = VerifierConfig {
+            concurrency: 2,
+            batch_max: 4,
+            congestion_depth,
+            grant_bits,
+            ..Default::default()
+        };
+        cfg
+    };
+
+    // three regimes: no signal at all, grant on every feedback frame,
+    // bare congestion bit on every feedback frame
+    let quiet = FleetSim::new(mk(usize::MAX, None)).run().unwrap();
+    let granted = FleetSim::new(mk(0, Some(grant))).run().unwrap();
+    let bit_only = FleetSim::new(mk(0, None)).run().unwrap();
+
+    let q_bpr = quiet.mean_bits_per_round();
+    let g_bpr = granted.mean_bits_per_round();
+    let b_bpr = bit_only.mean_bits_per_round();
+    assert!(
+        q_bpr > grant as f64 * 2.0,
+        "unthrottled AIMD settles far above the grant ({q_bpr:.0})"
+    );
+    assert!(
+        g_bpr < q_bpr,
+        "granted fleet must ship fewer bits/round ({g_bpr:.0} vs {q_bpr:.0})"
+    );
+    // convergence TO the grant, not collapse below it: AIMD oscillates
+    // around the granted budget
+    assert!(
+        g_bpr <= grant as f64 * 1.5 && g_bpr >= grant as f64 * 0.4,
+        "granted fleet converges near the {grant}b grant, got {g_bpr:.0}"
+    );
+    assert!(
+        b_bpr < q_bpr,
+        "a bare congestion bit also throttles ({b_bpr:.0} vs {q_bpr:.0})"
+    );
+
+    // the grant reaches every device's knob trace: after round 0 the
+    // budget knob is the grant, not the configured 5000
+    for d in &granted.per_device {
+        assert!(d.knob_trace.len() >= 2, "device {} ran {} rounds", d.id, d.knob_trace.len());
+        assert_eq!(d.knob_trace[0].budget_bits, 5000, "round 0 predates any feedback");
+        for kp in &d.knob_trace[1..] {
+            assert_eq!(kp.budget_bits, grant as usize, "device {}: {kp:?}", d.id);
+        }
+    }
+    for d in &quiet.per_device {
+        for kp in &d.knob_trace {
+            assert_eq!(kp.budget_bits, 5000, "no grant: configured target everywhere");
+        }
+    }
+
+    // bit-identical reproducibility from (config, seed)
+    let again = FleetSim::new(mk(0, Some(grant))).run().unwrap();
+    assert_eq!(granted.digest(), again.digest());
+    assert_eq!(granted.downlink_bits, again.downlink_bits);
+}
+
 #[test]
 fn report_aggregates_are_consistent() {
     let r = FleetSim::new(fleet_cfg(11, 1e6, false)).run().unwrap();

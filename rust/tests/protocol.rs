@@ -1,11 +1,19 @@
 //! Protocol-correctness tests over the synthetic backend (no artifacts
 //! needed): the speculative-decoding + QS guarantee, conformal behaviour,
-//! and budget/ledger invariants of the full session loop.
+//! budget/ledger invariants of the full session loop, and the protocol-v2
+//! wire layer (handshake accounting, v1 layout compatibility, and
+//! fuzz-style corruption of every frame type).
 
 use sqs_sd::channel::{LinkConfig, SimulatedLink};
 use sqs_sd::coordinator::session::{SdSession, SessionConfig, TimingMode};
 use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::protocol::{
+    Control, Ext, FeedbackV2, Frame, Hello, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS,
+    HELLO_BITS, MAX_SUPPORTED, MIN_SUPPORTED,
+};
+use sqs_sd::sqs::bits::SchemeBits;
 use sqs_sd::sqs::Policy;
+use sqs_sd::util::check::check;
 use sqs_sd::util::stats::tv_distance;
 
 fn modeled() -> TimingMode {
@@ -155,7 +163,7 @@ fn eta_zero_no_adaptation() {
 }
 
 /// The latency ledger must be internally consistent and each component
-/// must match its model.
+/// must match its model (handshake frames included since protocol v2).
 #[test]
 fn latency_ledger_consistent() {
     let world = SyntheticWorld::new(64, 0.5, 13);
@@ -167,16 +175,61 @@ fn latency_ledger_consistent() {
     let drafted: usize = res.batches.iter().map(|b| b.drafted).sum();
     assert!((res.t_slm_s - 1e-4 * drafted as f64).abs() < 1e-9);
     assert!((res.t_llm_s - 1e-3 * res.batches.len() as f64).abs() < 1e-9);
-    // uplink time from the deterministic link formula
-    let expect_up: f64 = res
-        .batches
-        .iter()
-        .map(|b| b.frame_bits as f64 / 1e6 + 0.010)
-        .sum();
+    // uplink time from the deterministic link formula: the Hello frame
+    // plus one draft frame per batch
+    let expect_up: f64 = res.handshake_uplink_bits as f64 / 1e6
+        + 0.010
+        + res
+            .batches
+            .iter()
+            .map(|b| b.frame_bits as f64 / 1e6 + 0.010)
+            .sum::<f64>();
     assert!((res.t_uplink_s - expect_up).abs() < 1e-9, "{} vs {expect_up}", res.t_uplink_s);
+    // downlink likewise: HelloAck + one feedback frame per batch
+    let expect_down: f64 = res.handshake_downlink_bits as f64 / 1e7
+        + 0.010
+        + res
+            .batches
+            .iter()
+            .map(|b| b.feedback_bits as f64 / 1e7 + 0.010)
+            .sum::<f64>();
+    assert!((res.t_downlink_s - expect_down).abs() < 1e-9, "{} vs {expect_down}", res.t_downlink_s);
     let rr = res.resampling_rate();
     assert!((0.0..=1.0).contains(&rr));
     assert_eq!(res.n_rej, res.batches.iter().filter(|b| b.rejected).count());
+}
+
+/// Wire-bit ledger exactness: every bit in `uplink_bits`/`downlink_bits`
+/// is attributable — handshake frames plus per-batch frames, nothing
+/// else — and the v2 draft frame costs exactly the 8-bit header over the
+/// v1 layout (header 40 + payloads), keeping b_n accounting intact.
+#[test]
+fn wire_ledger_exact_with_handshake() {
+    let world = SyntheticWorld::new(64, 0.5, 23);
+    let mut sess = make_session(&world, Policy::KSqs { k: 8 }, 0.9, 4, 48);
+    let res = sess.run(&[2, 7]).unwrap();
+
+    assert_eq!(res.handshake_uplink_bits, HELLO_BITS as u64);
+    assert_eq!(res.handshake_downlink_bits, HELLO_ACK_BITS as u64);
+    let batch_up: u64 = res.batches.iter().map(|b| b.frame_bits as u64).sum();
+    let batch_down: u64 = res.batches.iter().map(|b| b.feedback_bits as u64).sum();
+    assert_eq!(res.uplink_bits, res.handshake_uplink_bits + batch_up);
+    assert_eq!(res.downlink_bits, res.handshake_downlink_bits + batch_down);
+
+    for b in &res.batches {
+        // v2 header (8) + v1 frame header (32 id + 8 count) + payloads:
+        // dist bits + ceil(log2 V) = 6 bits per sampled token at V=64
+        assert_eq!(
+            b.frame_bits,
+            FRAME_HEADER_BITS + 40 + b.dist_bits + 6 * b.drafted,
+            "draft frame bits must decompose exactly"
+        );
+        // plain v2 feedback: header + v1 core (64) + empty ext count (4)
+        assert_eq!(b.feedback_bits, FRAME_HEADER_BITS + 68);
+        // knob trace rides every batch
+        assert_eq!(b.knobs.ell, 15);
+        assert_eq!(b.knobs.budget_bits, 5000);
+    }
 }
 
 /// Determinism: same seed, same trajectory; different seed diverges.
@@ -239,4 +292,113 @@ fn resampling_grows_with_mismatch() {
         rates[2] > rates[0] + 0.1,
         "mismatch 2.0 must reject far more than 0.0: {rates:?}"
     );
+}
+
+// ---------------------------------------------------------------------
+// protocol v2 wire layer
+// ---------------------------------------------------------------------
+
+/// Build one of each frame type for corruption / roundtrip tests.
+fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
+    use sqs_sd::codec::{DraftFrame, DraftToken};
+    use sqs_sd::sqs::{sparse_quantize, Sparsifier};
+
+    let mut g = sqs_sd::util::check::Gen { rng: sqs_sd::util::rng::Pcg64::new(404, 0) };
+    let tokens: Vec<DraftToken> = (0..3)
+        .map(|_| {
+            let q = g.probs(64, 2.0);
+            let quant = sparse_quantize(&q, &Sparsifier::top_k(8), 100);
+            let token = quant.support[0];
+            DraftToken { quant, token }
+        })
+        .collect();
+    let frames = vec![
+        Frame::Hello(Hello {
+            min_version: MIN_SUPPORTED,
+            max_version: MAX_SUPPORTED,
+            vocab: 64,
+            ell: 100,
+            scheme: SchemeBits::FixedK,
+            fixed_k: 8,
+        }),
+        Frame::HelloAck(sqs_sd::protocol::negotiate(&Hello {
+            min_version: MIN_SUPPORTED,
+            max_version: MAX_SUPPORTED,
+            vocab: 64,
+            ell: 100,
+            scheme: SchemeBits::FixedK,
+            fixed_k: 8,
+        })
+        .unwrap()),
+        Frame::Draft(DraftFrame { batch_id: 77, tokens }),
+        Frame::Feedback(FeedbackV2 {
+            batch_id: 9,
+            accepted: 2,
+            new_token: 40,
+            exts: vec![Ext::Congestion(true), Ext::BudgetGrant(600)],
+        }),
+        Frame::Control(Control::Prompt(vec![1, 2, 3])),
+        Frame::Control(Control::Bye),
+    ];
+    frames
+        .into_iter()
+        .map(|f| {
+            let name = f.name();
+            let (bytes, _bits) = codec.encode(&f).unwrap();
+            (name, bytes)
+        })
+        .collect()
+}
+
+/// Corruption fuzz: for EVERY frame type, (a) all byte truncations of a
+/// valid encoding must decode to `Err` — never panic — and (b) random
+/// bit flips must never panic (they may decode to garbage `Ok`, which
+/// the verify layer rejects downstream).
+#[test]
+fn corrupted_v2_frames_error_never_panic() {
+    let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    let frames = sample_frames(&mut codec);
+
+    for (name, bytes) in &frames {
+        // (a) every strict prefix loses payload bits -> must Err
+        for cut in 0..bytes.len() {
+            let r = codec.decode(&bytes[..cut]);
+            assert!(r.is_err(), "{name}: truncation to {cut}/{} bytes must fail", bytes.len());
+        }
+    }
+
+    // (b) seeded bit-flip storm over every frame type; util/check catches
+    // panics and reports the reproducing (seed, case)
+    check("v2 frame corruption never panics", 300, |g, _| {
+        let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+        let frames = sample_frames(&mut codec);
+        let (name, bytes) = g.pick(&frames);
+        let mut corrupt = bytes.clone();
+        let flips = g.usize(1, 16);
+        for _ in 0..flips {
+            let bit = g.usize(0, corrupt.len() * 8 - 1);
+            corrupt[bit / 8] ^= 1 << (bit % 8);
+        }
+        // decoding must terminate without panicking; Ok(garbage) is fine
+        let _ = codec.decode(&corrupt);
+        let _ = name;
+    });
+}
+
+/// The session-level handshake: a v2 session over the simulated link
+/// negotiates, and the negotiated parameters round-trip the codec config.
+#[test]
+fn session_handshake_negotiates_and_bits_are_ledgered() {
+    let world = SyntheticWorld::new(64, 0.5, 3);
+    for policy in [
+        Policy::KSqs { k: 8 },
+        Policy::CSqs { beta0: 0.01, alpha: 0.001, eta: 0.01 },
+        Policy::DenseQs,
+    ] {
+        let mut sess = make_session(&world, policy, 0.9, 1, 8);
+        let res = sess.run(&[5]).unwrap();
+        assert_eq!(res.handshake_uplink_bits, HELLO_BITS as u64, "{}", policy.name());
+        assert_eq!(res.handshake_downlink_bits, HELLO_ACK_BITS as u64);
+        assert!(res.uplink_bits > res.handshake_uplink_bits);
+    }
 }

@@ -1,0 +1,127 @@
+//! End-to-end protocol-v2 sessions over a real TCP socket: handshake,
+//! prompt setup, draft/feedback rounds through `StreamTransport` on both
+//! ends, and the downlink-as-control-channel behavior (budget grants
+//! throttling an AIMD edge).
+
+use std::net::TcpStream;
+
+use sqs_sd::control::AdaptiveMode;
+use sqs_sd::model::synthetic::SyntheticDraft;
+use sqs_sd::protocol::StreamTransport;
+use sqs_sd::server::wire::{
+    WireEdge, WireEdgeConfig, WireRunReport, WireServer, WireServerConfig,
+};
+use sqs_sd::sqs::Policy;
+
+fn run_session(
+    grant: Option<u32>,
+    congestion_depth: usize,
+    adaptive: AdaptiveMode,
+    seed: u64,
+) -> WireRunReport {
+    let cfg = WireServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: Some(1),
+        congestion_depth,
+        grant_bits: grant,
+        seed,
+        ..Default::default()
+    };
+    let server = WireServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let world = server.world().clone();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut transport = StreamTransport::new(stream);
+    let draft = SyntheticDraft::new(world, 100_000);
+    let edge_cfg = WireEdgeConfig {
+        policy: Policy::KSqs { k: 8 },
+        adaptive,
+        seed,
+        ..Default::default()
+    };
+    let mut edge = WireEdge::new(draft, edge_cfg);
+    let report = edge.run(&mut transport, &[3, 1, 4], 32).unwrap();
+    handle.join().unwrap();
+    report
+}
+
+#[test]
+fn tcp_session_round_trips_and_is_deterministic() {
+    let r = run_session(None, usize::MAX, AdaptiveMode::Off, 42);
+    assert!(r.new_tokens() >= 32, "request completed: {} tokens", r.new_tokens());
+    assert!(r.batches > 0);
+    assert!(r.handshake_uplink_bits > 0, "Hello bits in the ledger");
+    assert!(r.handshake_downlink_bits > 0, "HelloAck bits in the ledger");
+    assert!(r.uplink_bits > r.handshake_uplink_bits, "prompt + drafts follow the Hello");
+    assert!(r.downlink_bits > r.handshake_downlink_bits, "feedback follows the ack");
+    assert_eq!(r.grants_seen, 0, "no grants configured");
+    assert_eq!(r.frame_bits.len(), r.batches);
+
+    // same seeds on both ends => bit-identical token stream and ledgers
+    let r2 = run_session(None, usize::MAX, AdaptiveMode::Off, 42);
+    assert_eq!(r.tokens, r2.tokens);
+    assert_eq!(r.uplink_bits, r2.uplink_bits);
+    assert_eq!(r.downlink_bits, r2.downlink_bits);
+
+    // a different seed must diverge
+    let r3 = run_session(None, usize::MAX, AdaptiveMode::Off, 43);
+    assert_ne!(r.tokens, r3.tokens);
+}
+
+#[test]
+fn tcp_budget_grant_throttles_an_aimd_edge() {
+    let grant = 400u32;
+    let aimd = AdaptiveMode::Aimd { target_bits: 5000 };
+    // congestion_depth 0: the server grants on every feedback frame
+    let granted = run_session(Some(grant), 0, aimd, 9);
+    assert!(granted.grants_seen > 0, "grants must reach the edge");
+    assert!(granted.batches >= 4, "enough rounds to converge: {}", granted.batches);
+
+    let free = run_session(None, usize::MAX, aimd, 9);
+
+    // after the first grant lands, every frame obeys the granted budget
+    // (plus header/token overhead the dist-bits budget does not cover)
+    let tail = &granted.frame_bits[1..];
+    let tail_mean = tail.iter().sum::<usize>() as f64 / tail.len() as f64;
+    assert!(
+        tail_mean <= grant as f64 * 1.6,
+        "granted session must converge near the {grant}b grant, got {tail_mean:.0}"
+    );
+    let free_tail = &free.frame_bits[1..];
+    let free_mean = free_tail.iter().sum::<usize>() as f64 / free_tail.len() as f64;
+    assert!(
+        tail_mean < free_mean,
+        "granted sessions ship fewer bits/round than ungranted ({tail_mean:.0} vs {free_mean:.0})"
+    );
+
+    // reproducible bit-identically from (config, seed)
+    let again = run_session(Some(grant), 0, aimd, 9);
+    assert_eq!(granted.tokens, again.tokens);
+    assert_eq!(granted.frame_bits, again.frame_bits);
+    assert_eq!(granted.uplink_bits, again.uplink_bits);
+}
+
+#[test]
+fn tcp_handshake_rejects_a_mismatched_vocab() {
+    let cfg = WireServerConfig {
+        addr: "127.0.0.1:0".into(),
+        vocab: 64,
+        max_conns: Some(1),
+        ..Default::default()
+    };
+    let server = WireServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+
+    // a client drafting over a 32-token world cannot join a 64-token server
+    let other_world = sqs_sd::model::synthetic::SyntheticWorld::new(32, 0.6, 1);
+    let draft = SyntheticDraft::new(other_world, 10_000);
+    let mut edge = WireEdge::new(draft, WireEdgeConfig::default());
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut transport = StreamTransport::new(stream);
+    let err = edge.run(&mut transport, &[1, 2], 8);
+    assert!(err.is_err(), "mismatched vocab must fail the handshake");
+    handle.join().unwrap();
+}
