@@ -1,0 +1,91 @@
+//! Pipelined speculative sessions quickstart: the same request runs the
+//! strictly alternating v2 protocol (one draft in flight) and then the
+//! protocol-v3 pipeline at depths 2 and 4 over a high-RTT link, where
+//! the round trip — not compute — dominates.  Depth 1 is bit-identical
+//! to the old protocol; deeper pipelines hide the RTT behind drafting
+//! at the price of some discarded speculation on rejections.
+//!
+//!   cargo run --release --example pipelined_demo
+//!
+//! Same knobs as `sqs-sd run --pipeline-depth 4` and
+//! `sqs-sd fleet --pipeline-depth 4`.
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::{SdSession, SessionConfig, TimingMode};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+
+fn main() -> anyhow::Result<()> {
+    // a 100 ms RTT link: every alternating round pays it in full
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.050,
+        jitter_s: 0.0,
+    };
+
+    println!("== one session, 100ms RTT, window 4 ==");
+    println!(
+        "{:<7} {:>10} {:>9} {:>9} {:>10} {:>10}",
+        "depth", "latency_s", "speedup", "batches", "discarded", "bits/tok"
+    );
+    let mut baseline = f64::NAN;
+    for depth in [1usize, 2, 4] {
+        let world = SyntheticWorld::new(64, 0.3, 2024);
+        let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+        let target = SyntheticTarget::new(world.clone(), 4, 1_000_000);
+        let cfg = SessionConfig {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.7,
+            max_new_tokens: 96,
+            max_batch_drafts: 4,
+            seed: 7,
+            timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let mut sess = SdSession::new(draft, target, SimulatedLink::new(link, 7), cfg);
+        let res = sess.run(&[7, 21, 42])?;
+        if depth == 1 {
+            baseline = res.total_time_s;
+        }
+        println!(
+            "{depth:<7} {:>10.3} {:>8.2}x {:>9} {:>10} {:>10.1}",
+            res.total_time_s,
+            baseline / res.total_time_s,
+            res.batches.len(),
+            res.discarded_batches,
+            res.bits_per_token()
+        );
+    }
+    println!("(depth 1 IS the v2 alternating protocol, bit for bit)");
+
+    println!("\n== 6-device fleet, shared 100ms-RTT uplink ==");
+    for depth in [1usize, 4] {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.7,
+            max_new_tokens: 24,
+            max_batch_drafts: 4,
+            workload: Workload::Poisson { rate_hz: 2.0 },
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(6, base);
+        cfg.uplink_bps = 1e6;
+        cfg.propagation_s = 0.050;
+        cfg.mismatch = 0.3;
+        cfg.requests_per_device = 4;
+        cfg.seed = 7;
+        let report = FleetSim::new(cfg).run()?;
+        println!(
+            "depth {depth}: latency mean {:.3}s p99 {:.3}s | uplink {:>5.1}% | {} discarded",
+            report.latency.mean(),
+            report.latency.p99(),
+            100.0 * report.uplink_utilization,
+            report.discarded_batches
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! PIPE — pipelined speculative sessions: in-flight depth vs link RTT.
+//!
+//!   cargo bench --bench pipelining
+//!
+//! The v2 protocol is strictly alternating, so every speculative round
+//! pays a full uplink + verify + downlink round trip before the edge may
+//! draft again; protocol v3 keeps up to `pipeline_depth` sequenced
+//! drafts in flight and hides the round trip behind drafting.  This
+//! bench sweeps depth x link scenario for single sessions (small draft
+//! windows + a gentle draft-target mismatch, the regime where
+//! speculation survives), then runs a small fleet on the WAN scenario.
+//! Expected shape: depth 1 is the v2 baseline bit-for-bit; depth >= 2
+//! cuts end-to-end latency roughly in proportion to depth until the
+//! draft/verify stages (not the RTT) become the bottleneck, with the
+//! discard column showing what speculation cost.  Everything runs in
+//! virtual time — results are bit-reproducible.
+//!
+//! Outputs: results/pipelining.csv (per-session rows) and
+//! results/BENCH_pipelining.json (p50/p95 latency + speedup vs depth 1
+//! per scenario — the cross-PR perf trajectory).
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::{SdSession, SessionConfig, SessionResult, TimingMode};
+use sqs_sd::exp::{fast_mode, write_json_summary, CsvOut};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+use sqs_sd::util::json::Json;
+use sqs_sd::util::stats::Summary;
+
+const DEPTHS: [usize; 3] = [1, 2, 4];
+
+/// (name, one-way propagation seconds): LAN, WAN, satellite-ish.
+const SCENARIOS: [(&str, f64); 3] = [("lan", 0.005), ("wan", 0.050), ("sat", 0.200)];
+
+fn run_session(depth: usize, propagation_s: f64, seed: u64, max_new: usize)
+               -> anyhow::Result<SessionResult> {
+    let world = SyntheticWorld::new(64, 0.3, 2024);
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 4, 1_000_000);
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s,
+        jitter_s: 0.0,
+    };
+    let cfg = SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.7,
+        max_new_tokens: max_new,
+        max_batch_drafts: 4,
+        seed,
+        timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
+        pipeline_depth: depth,
+        ..Default::default()
+    };
+    let mut sess = SdSession::new(draft, target, SimulatedLink::new(link, seed), cfg);
+    sess.run(&[7, 21, 42])
+}
+
+fn main() -> anyhow::Result<()> {
+    let sessions = if fast_mode() { 3 } else { 8 };
+    let max_new = if fast_mode() { 48 } else { 128 };
+
+    println!("== PIPE: in-flight depth x link scenario ==");
+    println!(
+        "{:<6} {:<6} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "depth", "link", "latency_s", "speedup", "bits/tok", "batches", "discarded"
+    );
+    let mut csv = CsvOut::new(
+        "pipelining.csv",
+        "depth,scenario,seed,latency_s,ms_per_token,bits_per_token,\
+         batches,discarded,acceptance",
+    );
+    let mut points = Vec::new();
+    let mut wan_latency = std::collections::BTreeMap::new();
+
+    for (scen_name, prop) in &SCENARIOS {
+        let mut baseline = f64::NAN;
+        for &depth in &DEPTHS {
+            let mut lat = Summary::new();
+            let mut bpt = Summary::new();
+            let mut batches = Summary::new();
+            let mut disc = Summary::new();
+            for s in 0..sessions {
+                let seed = 5000 + s as u64 * 7919;
+                let r = run_session(depth, *prop, seed, max_new)?;
+                lat.add(r.total_time_s);
+                bpt.add(r.bits_per_token());
+                batches.add(r.batches.len() as f64);
+                disc.add(r.discarded_batches as f64);
+                csv.row(format!(
+                    "{depth},{scen_name},{seed},{},{},{},{},{},{}",
+                    r.total_time_s,
+                    1e3 * r.latency_per_token(),
+                    r.bits_per_token(),
+                    r.batches.len(),
+                    r.discarded_batches,
+                    r.acceptance_rate(),
+                ));
+            }
+            if depth == 1 {
+                baseline = lat.mean();
+            }
+            let speedup = baseline / lat.mean();
+            println!(
+                "{depth:<6} {scen_name:<6} {:>12.4} {:>9.2}x {:>10.1} {:>10.1} {:>10.1}",
+                lat.mean(),
+                speedup,
+                bpt.mean(),
+                batches.mean(),
+                disc.mean()
+            );
+            if *scen_name == "wan" {
+                wan_latency.insert(depth, lat.mean());
+            }
+            points.push(Json::obj(vec![
+                ("depth", Json::Num(depth as f64)),
+                ("scenario", Json::Str(scen_name.to_string())),
+                ("latency_p50_s", Json::Num(lat.p50())),
+                ("latency_p95_s", Json::Num(lat.percentile(95.0))),
+                ("latency_mean_s", Json::Num(lat.mean())),
+                ("speedup_vs_depth1", Json::Num(speedup)),
+                ("bits_per_token", Json::Num(bpt.mean())),
+                ("discarded_mean", Json::Num(disc.mean())),
+            ]));
+        }
+    }
+
+    // ---- fleet: pipelined devices on a WAN shared uplink ---------------
+    println!("\n== PIPE-FLEET: 6 devices, 100ms-RTT shared uplink ==");
+    let mut fleet_points = Vec::new();
+    for &depth in &[1usize, 4] {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.7,
+            max_new_tokens: 24,
+            max_batch_drafts: 4,
+            workload: Workload::Poisson { rate_hz: 2.0 },
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(6, base);
+        cfg.uplink_bps = 1e6;
+        cfg.propagation_s = 0.050;
+        cfg.mismatch = 0.3;
+        cfg.requests_per_device = if fast_mode() { 2 } else { 4 };
+        cfg.verifier = VerifierConfig { concurrency: 4, batch_max: 4, ..Default::default() };
+        cfg.seed = 4242;
+        let r = FleetSim::new(cfg).run()?;
+        println!(
+            "depth {depth}: latency mean {:.4}s p99 {:.4}s | uplink {:.1}% | {} discarded",
+            r.latency.mean(),
+            r.latency.p99(),
+            100.0 * r.uplink_utilization,
+            r.discarded_batches
+        );
+        fleet_points.push(Json::obj(vec![
+            ("depth", Json::Num(depth as f64)),
+            ("latency_p50_s", Json::Num(r.latency.p50())),
+            ("latency_p95_s", Json::Num(r.latency.percentile(95.0))),
+            ("latency_mean_s", Json::Num(r.latency.mean())),
+            ("uplink_utilization", Json::Num(r.uplink_utilization)),
+            ("discarded_batches", Json::Num(r.discarded_batches as f64)),
+        ]));
+    }
+    csv.finish();
+
+    write_json_summary(
+        "BENCH_pipelining.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("pipelining".into())),
+            ("sessions_per_point", Json::Num(sessions as f64)),
+            ("points", Json::Arr(points)),
+            ("fleet", Json::Arr(fleet_points)),
+        ]),
+    );
+
+    // ---- shape check: depth >= 2 must win on the high-RTT link ---------
+    println!("\n-- shape check: WAN latency vs in-flight depth --");
+    let d1 = wan_latency.get(&1).copied().unwrap_or(f64::NAN);
+    for (&depth, &lat) in wan_latency.iter().filter(|(d, _)| **d > 1) {
+        let verdict = if lat < d1 { "— HIDES THE RTT" } else { "— ANOMALY (no speedup)" };
+        println!("depth {depth}: {lat:.4}s vs depth-1 {d1:.4}s ({:.2}x) {verdict}", d1 / lat);
+    }
+    Ok(())
+}

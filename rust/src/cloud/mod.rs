@@ -74,6 +74,24 @@ impl<T: TargetLm> CloudNode<T> {
     /// coordinator (which owns the canonical token sequence).
     pub fn verify_with_prev(&mut self, frame: &DraftFrame, prev: u16, temp: f32)
                             -> Result<Verdict> {
+        self.verify_inner(frame, prev, temp, true)
+    }
+
+    /// Pipelined-session verification (protocol v3): identical acceptance
+    /// rule, but on full acceptance NO bonus token is sampled or
+    /// committed.  The edge speculatively drafted the continuation from
+    /// its own draft tokens; committing a cloud-sampled bonus here would
+    /// fork the contexts and waste every in-flight draft.  The exactness
+    /// guarantee is untouched — accepted and resampled tokens still
+    /// follow the target distribution; the session merely forgoes the
+    /// free bonus token in exchange for overlap.
+    pub fn verify_pipelined(&mut self, frame: &DraftFrame, prev: u16, temp: f32)
+                            -> Result<Verdict> {
+        self.verify_inner(frame, prev, temp, false)
+    }
+
+    fn verify_inner(&mut self, frame: &DraftFrame, prev: u16, temp: f32, bonus: bool)
+                    -> Result<Verdict> {
         let l = frame.tokens.len();
         if l == 0 {
             bail!("empty draft frame");
@@ -117,21 +135,27 @@ impl<T: TargetLm> CloudNode<T> {
             break;
         }
 
+        // full acceptance: sample the bonus token from p directly — unless
+        // the session is pipelined, where the edge already speculated the
+        // continuation and a bonus would fork the contexts
         let new_token = match new_token {
-            Some(t) => t,
-            None => sample(&probs[l], &mut self.rng) as u16,
+            Some(t) => Some(t),
+            None if bonus => Some(sample(&probs[l], &mut self.rng) as u16),
+            None => None,
         };
 
         let mut committed: Vec<u16> =
             frame.tokens[..accepted].iter().map(|t| t.token).collect();
-        committed.push(new_token);
+        if let Some(t) = new_token {
+            committed.push(t);
+        }
         self.target.commit_tokens(&committed)?;
 
         Ok(Verdict {
             feedback: FeedbackFrame {
                 batch_id: frame.batch_id,
                 accepted: accepted as u16,
-                new_token,
+                new_token: new_token.unwrap_or(0),
             },
             accepted,
             rejected,

@@ -114,6 +114,73 @@ impl Windowed {
     }
 }
 
+/// Windowed (frame bits, air seconds) samples with an ordinary
+/// least-squares fit of `air_s ~= bits / R + P`: the slope recovers the
+/// raw channel rate R and the intercept the propagation delay P, so the
+/// throughput estimate no longer folds constant propagation into the
+/// per-bit cost (ROADMAP "estimator upgrades").  Needs frame-size
+/// variety: with every frame the same size the slope is unidentifiable
+/// and `fit` returns None (callers fall back to the EWMA ratio).
+#[derive(Clone, Debug)]
+pub struct WireFit {
+    cap: usize,
+    buf: Vec<(f64, f64)>,
+    next: usize,
+}
+
+impl WireFit {
+    pub fn new(cap: usize) -> WireFit {
+        assert!(cap >= 2, "a line needs at least two samples");
+        WireFit { cap, buf: Vec::new(), next: 0 }
+    }
+
+    pub fn observe(&mut self, bits: f64, air_s: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push((bits, air_s));
+        } else {
+            self.buf[self.next] = (bits, air_s);
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// `(throughput_bps, propagation_s)` from the OLS fit over the
+    /// current window, or None when the slope is unidentifiable
+    /// (fewer than two samples, no size variety) or non-positive
+    /// (noise dominated).  The propagation estimate is clamped at 0.
+    pub fn fit(&self) -> Option<(f64, f64)> {
+        let n = self.buf.len();
+        if n < 2 {
+            return None;
+        }
+        let nf = n as f64;
+        let mean_x = self.buf.iter().map(|s| s.0).sum::<f64>() / nf;
+        let mean_y = self.buf.iter().map(|s| s.1).sum::<f64>() / nf;
+        let var_x = self.buf.iter().map(|s| (s.0 - mean_x) * (s.0 - mean_x)).sum::<f64>();
+        if var_x <= 0.0 {
+            return None;
+        }
+        let cov = self
+            .buf
+            .iter()
+            .map(|s| (s.0 - mean_x) * (s.1 - mean_y))
+            .sum::<f64>();
+        let slope = cov / var_x;
+        if !(slope.is_finite() && slope > 0.0) {
+            return None;
+        }
+        let intercept = mean_y - slope * mean_x;
+        Some((1.0 / slope, intercept.max(0.0)))
+    }
+}
+
 /// Snapshot of the estimator handed to `AdaptivePolicy::begin_batch`.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkState {
@@ -121,6 +188,13 @@ pub struct LinkState {
     /// air time excluding queueing; includes propagation, so it is a
     /// conservative lower bound on raw channel rate).
     pub throughput_bps: f64,
+    /// Propagation-discounted channel rate, bits/s: the inverse slope of
+    /// the windowed (bits, air seconds) fit.  Falls back to
+    /// `throughput_bps` while the fit is unidentifiable.
+    pub wire_throughput_bps: f64,
+    /// Estimated one-way propagation delay, seconds (the fit's
+    /// intercept; 0 while unidentifiable).
+    pub propagation_s: f64,
     /// Shared-uplink queueing delay estimate, seconds (0 on private links).
     pub queue_wait_s: f64,
     /// p95 queue wait over the last `QUEUE_WAIT_WINDOW` rounds, seconds —
@@ -140,11 +214,22 @@ pub const DEFAULT_GAMMA: f64 = 0.7;
 /// Rounds retained for the windowed queue-wait percentile.
 pub const QUEUE_WAIT_WINDOW: usize = 64;
 
+/// Rounds retained for the propagation-discounting throughput fit.
+pub const WIRE_FIT_WINDOW: usize = 64;
+
 /// Channel estimator fed once per speculative round: EWMAs for the
-/// smooth signals plus a windowed percentile for the queue-wait tail.
+/// smooth signals, a windowed percentile for the queue-wait tail, and a
+/// windowed regression that separates channel rate from propagation.
+///
+/// Pipelined sessions feed one outcome per sequence number, in sequence
+/// order, including rounds whose frames the cloud discarded as stale:
+/// discarded rounds still crossed the wire, so their bits count toward
+/// throughput and bits/round, but they carry no acceptance information
+/// (nothing was verified) and are excluded from the acceptance EWMA.
 #[derive(Clone, Debug)]
 pub struct LinkEstimator {
     throughput: Ewma,
+    wire_fit: WireFit,
     queue_wait: Ewma,
     queue_wait_window: Windowed,
     acceptance: Ewma,
@@ -156,6 +241,7 @@ impl LinkEstimator {
     pub fn new(gamma: f64) -> LinkEstimator {
         LinkEstimator {
             throughput: Ewma::new(gamma),
+            wire_fit: WireFit::new(WIRE_FIT_WINDOW),
             queue_wait: Ewma::new(gamma),
             queue_wait_window: Windowed::new(QUEUE_WAIT_WINDOW),
             acceptance: Ewma::new(gamma),
@@ -169,10 +255,11 @@ impl LinkEstimator {
         let air_s = o.t_uplink_s - o.queue_wait_s;
         if air_s > 0.0 && o.frame_bits > 0 {
             self.throughput.observe(o.frame_bits as f64 / air_s);
+            self.wire_fit.observe(o.frame_bits as f64, air_s);
         }
         self.queue_wait.observe(o.queue_wait_s.max(0.0));
         self.queue_wait_window.observe(o.queue_wait_s.max(0.0));
-        if o.drafted > 0 {
+        if o.drafted > 0 && !o.discarded {
             self.acceptance.observe(o.accepted as f64 / o.drafted as f64);
         }
         self.bits_per_round.observe(o.frame_bits as f64);
@@ -185,8 +272,15 @@ impl LinkEstimator {
         } else {
             self.queue_wait_window.percentile(95.0)
         };
+        let ewma_bps = self.throughput.get_or(f64::INFINITY);
+        let (wire_bps, prop_s) = match self.wire_fit.fit() {
+            Some((r, p)) => (r, p),
+            None => (ewma_bps, 0.0),
+        };
         LinkState {
-            throughput_bps: self.throughput.get_or(f64::INFINITY),
+            throughput_bps: ewma_bps,
+            wire_throughput_bps: wire_bps,
+            propagation_s: prop_s,
             queue_wait_s: self.queue_wait.get_or(0.0),
             queue_wait_p95_s: p95,
             acceptance: self.acceptance.get_or(1.0),
@@ -212,6 +306,7 @@ mod tests {
             queue_wait_s,
             congestion: false,
             grant_bits: None,
+            discarded: false,
         }
     }
 
@@ -360,6 +455,102 @@ mod tests {
             s.queue_wait_p95_s,
             s.queue_wait_s
         );
+    }
+
+    #[test]
+    fn wire_fit_recovers_rate_and_propagation_exactly_on_linear_data() {
+        // property: for any (R, P) and any varied frame sizes, feeding
+        // air_s = bits/R + P recovers both parameters to float precision
+        check("wire fit recovers (R, P)", 100, |g, _| {
+            let rate = g.f64(1e4, 1e8);
+            let prop = g.f64(0.0, 0.2);
+            let n = g.usize(2, 80);
+            let mut fit = WireFit::new(WIRE_FIT_WINDOW);
+            let mut sizes = Vec::new();
+            for i in 0..n {
+                // spread sizes so the slope is identifiable
+                let bits = 100.0 + 97.0 * (i % 17) as f64 + g.f64(0.0, 50.0);
+                sizes.push(bits);
+                fit.observe(bits, bits / rate + prop);
+            }
+            let distinct = sizes.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9);
+            if !distinct {
+                return; // degenerate draw: nothing to assert
+            }
+            let (r, p) = fit.fit().expect("identifiable slope");
+            assert!(
+                (r - rate).abs() <= rate * 1e-6,
+                "rate {r} != {rate} (prop {prop})"
+            );
+            assert!((p - prop).abs() <= 1e-6 + prop * 1e-6, "prop {p} != {prop}");
+        });
+    }
+
+    #[test]
+    fn wire_fit_unidentifiable_without_size_variety() {
+        let mut fit = WireFit::new(8);
+        assert!(fit.fit().is_none(), "empty window");
+        fit.observe(500.0, 1e-3);
+        assert!(fit.fit().is_none(), "one sample");
+        for _ in 0..7 {
+            fit.observe(500.0, 1e-3);
+        }
+        assert!(fit.fit().is_none(), "constant frame size: slope unidentifiable");
+        // the estimator falls back to the EWMA ratio in that regime
+        let mut est = LinkEstimator::new(DEFAULT_GAMMA);
+        for _ in 0..10 {
+            est.observe(&outcome(8, 8, 500, 5e-4 + 0.01, 0.0));
+        }
+        let s = est.state();
+        assert_eq!(s.wire_throughput_bps.to_bits(), s.throughput_bps.to_bits());
+        assert_eq!(s.propagation_s, 0.0);
+    }
+
+    #[test]
+    fn estimator_discounts_propagation_where_the_ewma_cannot() {
+        // 1 Mbit/s channel, 10 ms propagation, small varied frames: the
+        // EWMA ratio is dominated by propagation, the fit is not
+        let mut est = LinkEstimator::new(DEFAULT_GAMMA);
+        for i in 0..40usize {
+            let bits = 300 + 140 * (i % 5);
+            let air = bits as f64 / 1e6 + 0.010;
+            est.observe(&outcome(8, 6, bits, air, 0.0));
+        }
+        let s = est.state();
+        assert!(
+            s.throughput_bps < 1.5e5,
+            "EWMA folds 10ms propagation into the rate: {}",
+            s.throughput_bps
+        );
+        assert!(
+            (s.wire_throughput_bps - 1e6).abs() < 1e6 * 1e-6,
+            "fit recovers the raw 1 Mbit/s channel: {}",
+            s.wire_throughput_bps
+        );
+        assert!((s.propagation_s - 0.010).abs() < 1e-8);
+    }
+
+    #[test]
+    fn discarded_rounds_count_bits_but_not_acceptance() {
+        let mut a = LinkEstimator::new(DEFAULT_GAMMA);
+        let mut b = LinkEstimator::new(DEFAULT_GAMMA);
+        for _ in 0..10 {
+            a.observe(&outcome(10, 9, 700, 1e-3, 0.0));
+            b.observe(&outcome(10, 9, 700, 1e-3, 0.0));
+        }
+        // a stale, discarded round: shipped bits, verified nothing
+        let mut stale = outcome(10, 0, 700, 1e-3, 0.0);
+        stale.discarded = true;
+        b.observe(&stale);
+        let (sa, sb) = (a.state(), b.state());
+        assert_eq!(
+            sa.acceptance.to_bits(),
+            sb.acceptance.to_bits(),
+            "discarded rounds must not drag the acceptance EWMA"
+        );
+        assert_eq!(sb.rounds, sa.rounds + 1);
+        assert_eq!(sb.bits_per_round.to_bits(), sa.bits_per_round.to_bits(),
+                   "same-size frame keeps the bits EWMA (but it was observed)");
     }
 
     #[test]

@@ -77,19 +77,31 @@ impl ControlLoop {
     /// Build the loop for a session's config: `mode` selects the policy,
     /// the remaining arguments supply today's static knobs as the fixed
     /// point (`Off`) or the adaptation range (`Aimd` / `Window`).
+    /// `pipeline_depth` is the configured in-flight ceiling: `Off` echoes
+    /// it verbatim, the adaptive policies treat it as the recovery target
+    /// of their own depth sawtooth.
     pub fn for_session(mode: AdaptiveMode, policy: Policy, window: usize,
-                       budget_bits: usize, vocab: usize) -> ControlLoop {
+                       budget_bits: usize, vocab: usize, pipeline_depth: usize) -> ControlLoop {
+        let depth = pipeline_depth.max(1);
         let boxed: Box<dyn AdaptivePolicy> = match mode {
-            AdaptiveMode::Off => Box::new(Static::new(policy, window, budget_bits)),
+            AdaptiveMode::Off => {
+                Box::new(Static::new(policy, window, budget_bits).with_pipeline_depth(depth))
+            }
             AdaptiveMode::Aimd { target_bits } => {
                 let k0 = match policy {
                     Policy::KSqs { k } => k,
                     _ => 8,
                 };
-                Box::new(BudgetAimd::new(target_bits, k0, vocab.max(1), window))
+                Box::new(
+                    BudgetAimd::new(target_bits, k0, vocab.max(1), window)
+                        .with_pipeline_depth(depth),
+                )
             }
             AdaptiveMode::Window { grow, shrink } => {
-                Box::new(AdaptiveWindow::new(window, budget_bits, grow, shrink))
+                Box::new(
+                    AdaptiveWindow::new(window, budget_bits, grow, shrink)
+                        .with_pipeline_depth(depth),
+                )
             }
         };
         ControlLoop::new(boxed)
@@ -134,15 +146,19 @@ mod tests {
             queue_wait_s: 0.0,
             congestion: false,
             grant_bits: None,
+            discarded: false,
         }
     }
 
     #[test]
     fn off_mode_yields_static_config_knobs_forever() {
         let mut cl = ControlLoop::for_session(
-            AdaptiveMode::Off, Policy::KSqs { k: 8 }, 15, 5000, 64);
+            AdaptiveMode::Off, Policy::KSqs { k: 8 }, 15, 5000, 64, 1);
         let first = cl.begin_batch();
-        assert_eq!(first, Knobs { sparsifier: None, ell: 15, budget_bits: 5000 });
+        assert_eq!(
+            first,
+            Knobs { sparsifier: None, ell: 15, budget_bits: 5000, pipeline_depth: 1 }
+        );
         for i in 0..30 {
             cl.feedback(&outcome(15, i % 16, 2000 + 100 * i));
             assert_eq!(cl.begin_batch(), first, "static knobs must never move");
@@ -156,7 +172,7 @@ mod tests {
         // Idealized plant: wire bits per round = 48 + 80 * K (monotone in
         // K), target 600 -> equilibrium K around 6-7.
         let mut cl = ControlLoop::for_session(
-            AdaptiveMode::Aimd { target_bits: 600 }, Policy::KSqs { k: 32 }, 15, 5000, 64);
+            AdaptiveMode::Aimd { target_bits: 600 }, Policy::KSqs { k: 32 }, 15, 5000, 64, 1);
         let mut bits = Vec::new();
         for _ in 0..60 {
             let knobs = cl.begin_batch();
@@ -183,7 +199,7 @@ mod tests {
         let mut cl = ControlLoop::for_session(
             AdaptiveMode::Window { grow: 0.8, shrink: 0.5 },
             Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
-            15, 5000, 64);
+            15, 5000, 64, 1);
         let k0 = cl.begin_batch();
         assert_eq!(k0.sparsifier, None, "conformal threshold stays in charge");
         assert_eq!(k0.budget_bits, 5000);

@@ -38,10 +38,15 @@ pub struct Knobs {
     pub ell: usize,
     /// Per-batch uplink budget B, in distribution-payload bits.
     pub budget_bits: usize,
+    /// In-flight pipeline depth D^t: how many unacknowledged drafts the
+    /// edge may keep in flight (1 = strict alternation; effective only
+    /// once the handshake lands on protocol v3, and never above the
+    /// session's configured depth).
+    pub pipeline_depth: usize,
 }
 
-/// One per-round knob sample (K^t, ℓ^t, B^t) — the convergence traces
-/// the benches export next to the steady-state means.
+/// One per-round knob sample (K^t, ℓ^t, B^t, D^t) — the convergence
+/// traces the benches export next to the steady-state means.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KnobPoint {
     /// speculative round index within the trace
@@ -51,6 +56,7 @@ pub struct KnobPoint {
     pub k: Option<usize>,
     pub ell: usize,
     pub budget_bits: usize,
+    pub pipeline_depth: usize,
 }
 
 impl KnobPoint {
@@ -59,17 +65,24 @@ impl KnobPoint {
             Some(Sparsifier::TopK(k)) => Some(k),
             _ => None,
         };
-        KnobPoint { round, k, ell: knobs.ell, budget_bits: knobs.budget_bits }
+        KnobPoint {
+            round,
+            k,
+            ell: knobs.ell,
+            budget_bits: knobs.budget_bits,
+            pipeline_depth: knobs.pipeline_depth,
+        }
     }
 
-    /// CSV cell: `round,k,ell,budget` (k = -1 when policy-owned).
+    /// CSV cell: `round,k,ell,budget,depth` (k = -1 when policy-owned).
     pub fn csv(&self) -> String {
         format!(
-            "{},{},{},{}",
+            "{},{},{},{},{}",
             self.round,
             self.k.map_or(-1, |k| k as i64),
             self.ell,
-            self.budget_bits
+            self.budget_bits,
+            self.pipeline_depth
         )
     }
 }
@@ -96,6 +109,10 @@ pub struct BatchOutcome {
     /// explicit per-round uplink budget grant from the feedback frame's
     /// v2 extension, bits (None: no grant rode this round)
     pub grant_bits: Option<u32>,
+    /// the cloud discarded this round's frame as stale (protocol-v3
+    /// pipelining): its bits crossed the wire but nothing was verified,
+    /// so it carries no acceptance information
+    pub discarded: bool,
 }
 
 /// A per-session knob controller.  `begin_batch` picks the knobs for the
@@ -118,17 +135,29 @@ pub struct Static {
     pub policy: crate::sqs::Policy,
     pub ell: usize,
     pub budget_bits: usize,
+    pub pipeline_depth: usize,
 }
 
 impl Static {
     pub fn new(policy: crate::sqs::Policy, ell: usize, budget_bits: usize) -> Static {
-        Static { policy, ell, budget_bits }
+        Static { policy, ell, budget_bits, pipeline_depth: 1 }
+    }
+
+    /// Echo a fixed pipeline depth on every round's knobs.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> Static {
+        self.pipeline_depth = depth.max(1);
+        self
     }
 }
 
 impl AdaptivePolicy for Static {
     fn begin_batch(&mut self, _link: &LinkState) -> Knobs {
-        Knobs { sparsifier: None, ell: self.ell, budget_bits: self.budget_bits }
+        Knobs {
+            sparsifier: None,
+            ell: self.ell,
+            budget_bits: self.budget_bits,
+            pipeline_depth: self.pipeline_depth,
+        }
     }
 
     fn feedback(&mut self, _outcome: &BatchOutcome) {}
@@ -177,6 +206,13 @@ pub struct BudgetAimd {
     pub ell: usize,
     /// multiplicative-decrease factor in (0, 1)
     pub md: f64,
+    /// current pipeline depth D^t (the fourth knob): collapses to 1 on a
+    /// congestion event — speculating deep into a congested channel only
+    /// queues more stale bits — and recovers additively (+1 per calm
+    /// round) back to `depth_max`
+    pub depth: usize,
+    /// configured ceiling on the in-flight window
+    pub depth_max: usize,
     /// wire bits of the round awaiting an AIMD decision
     last_frame_bits: Option<usize>,
     /// standing budget grant from the cloud (v2 feedback extension)
@@ -196,10 +232,19 @@ impl BudgetAimd {
             k_max,
             ell,
             md: 0.75,
+            depth: 1,
+            depth_max: 1,
             last_frame_bits: None,
             grant_bits: None,
             congested: false,
         }
+    }
+
+    /// Let the sawtooth also steer the in-flight window, up to `depth`.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> BudgetAimd {
+        self.depth_max = depth.max(1);
+        self.depth = self.depth_max;
+        self
     }
 
     /// The target in force this round: the configured budget, capped by
@@ -231,18 +276,24 @@ impl AdaptivePolicy for BudgetAimd {
         let signal = self.congested && self.grant_bits.is_none();
         if let Some(frame) = self.last_frame_bits.take() {
             if frame > target || signal || self.queue_congested(link, target) {
-                // congestion event: multiplicative decrease
+                // congestion event: multiplicative decrease on K, and the
+                // pipeline collapses to strict alternation — keeping a deep
+                // window open against a congested channel only queues more
+                // soon-to-be-stale speculation
                 self.k =
                     ((self.k as f64 * self.md).floor() as usize).clamp(self.k_min, self.k_max);
+                self.depth = 1;
             } else if link.bits_per_round <= target as f64 {
                 // additive increase, gated on the EWMA having headroom too
                 self.k = (self.k + 1).min(self.k_max);
+                self.depth = (self.depth + 1).min(self.depth_max);
             }
         }
         Knobs {
             sparsifier: Some(Sparsifier::top_k(self.k)),
             ell: self.ell,
             budget_bits: target,
+            pipeline_depth: self.depth,
         }
     }
 
@@ -276,6 +327,11 @@ pub struct AdaptiveWindow {
     /// EWMA acceptance at or below this shrinks ℓ
     pub shrink: f64,
     pub budget_bits: usize,
+    /// in-flight window: high EWMA acceptance speculates at the full
+    /// configured depth, low acceptance falls back to alternation (deep
+    /// pipelines only pay off when speculation survives)
+    pub pipeline_depth: usize,
+    depth_max: usize,
 }
 
 impl AdaptiveWindow {
@@ -290,7 +346,16 @@ impl AdaptiveWindow {
             grow,
             shrink,
             budget_bits,
+            pipeline_depth: 1,
+            depth_max: 1,
         }
+    }
+
+    /// Let acceptance also steer the in-flight window, up to `depth`.
+    pub fn with_pipeline_depth(mut self, depth: usize) -> AdaptiveWindow {
+        self.depth_max = depth.max(1);
+        self.pipeline_depth = self.depth_max;
+        self
     }
 }
 
@@ -301,11 +366,18 @@ impl AdaptivePolicy for AdaptiveWindow {
         if link.rounds > 0 {
             if link.acceptance >= self.grow {
                 self.ell = (self.ell + 1).min(self.ell_max);
+                self.pipeline_depth = (self.pipeline_depth + 1).min(self.depth_max);
             } else if link.acceptance <= self.shrink {
                 self.ell = self.ell.saturating_sub(1).max(self.ell_min);
+                self.pipeline_depth = 1;
             }
         }
-        Knobs { sparsifier: None, ell: self.ell, budget_bits: self.budget_bits }
+        Knobs {
+            sparsifier: None,
+            ell: self.ell,
+            budget_bits: self.budget_bits,
+            pipeline_depth: self.pipeline_depth,
+        }
     }
 
     fn feedback(&mut self, _outcome: &BatchOutcome) {}
@@ -327,6 +399,8 @@ mod tests {
     fn idle_link() -> LinkState {
         LinkState {
             throughput_bps: 1e6,
+            wire_throughput_bps: 1e6,
+            propagation_s: 0.0,
             queue_wait_s: 0.0,
             queue_wait_p95_s: 0.0,
             acceptance: 1.0,
@@ -345,6 +419,7 @@ mod tests {
             queue_wait_s: 0.0,
             congestion: false,
             grant_bits: None,
+            discarded: false,
         }
     }
 
@@ -352,7 +427,10 @@ mod tests {
     fn static_policy_echoes_config_knobs() {
         let mut s = Static::new(Policy::KSqs { k: 8 }, 15, 5000);
         let k = s.begin_batch(&idle_link());
-        assert_eq!(k, Knobs { sparsifier: None, ell: 15, budget_bits: 5000 });
+        assert_eq!(
+            k,
+            Knobs { sparsifier: None, ell: 15, budget_bits: 5000, pipeline_depth: 1 }
+        );
         for _ in 0..10 {
             s.feedback(&outcome(15, 3, 9999));
         }
@@ -467,12 +545,54 @@ mod tests {
 
     #[test]
     fn knob_points_snapshot_the_knobs() {
-        let knobs = Knobs { sparsifier: Some(Sparsifier::top_k(5)), ell: 12, budget_bits: 700 };
+        let knobs = Knobs {
+            sparsifier: Some(Sparsifier::top_k(5)),
+            ell: 12,
+            budget_bits: 700,
+            pipeline_depth: 4,
+        };
         let kp = KnobPoint::from_knobs(3, &knobs);
-        assert_eq!(kp, KnobPoint { round: 3, k: Some(5), ell: 12, budget_bits: 700 });
-        assert_eq!(kp.csv(), "3,5,12,700");
-        let deferred = Knobs { sparsifier: None, ell: 15, budget_bits: 5000 };
-        assert_eq!(KnobPoint::from_knobs(0, &deferred).csv(), "0,-1,15,5000");
+        assert_eq!(
+            kp,
+            KnobPoint { round: 3, k: Some(5), ell: 12, budget_bits: 700, pipeline_depth: 4 }
+        );
+        assert_eq!(kp.csv(), "3,5,12,700,4");
+        let deferred =
+            Knobs { sparsifier: None, ell: 15, budget_bits: 5000, pipeline_depth: 1 };
+        assert_eq!(KnobPoint::from_knobs(0, &deferred).csv(), "0,-1,15,5000,1");
+    }
+
+    #[test]
+    fn aimd_depth_collapses_on_congestion_and_recovers() {
+        let mut p = BudgetAimd::new(600, 8, 64, 15).with_pipeline_depth(4);
+        assert_eq!(p.begin_batch(&idle_link()).pipeline_depth, 4, "starts at the ceiling");
+        p.feedback(&outcome(10, 10, 5000)); // overshoot: congestion event
+        let knobs = p.begin_batch(&idle_link());
+        assert_eq!(knobs.pipeline_depth, 1, "congestion collapses the pipeline");
+        // calm rounds recover the window additively, capped at the config
+        for want in [2usize, 3, 4, 4] {
+            p.feedback(&outcome(10, 10, 100));
+            assert_eq!(p.begin_batch(&idle_link()).pipeline_depth, want);
+        }
+        // without with_pipeline_depth the knob is pinned at 1
+        let mut q = BudgetAimd::new(600, 8, 64, 15);
+        q.feedback(&outcome(10, 10, 100));
+        assert_eq!(q.begin_batch(&idle_link()).pipeline_depth, 1);
+    }
+
+    #[test]
+    fn window_depth_follows_acceptance() {
+        let accepting = |acc: f64, rounds: u64| LinkState {
+            acceptance: acc,
+            rounds,
+            ..idle_link()
+        };
+        let mut p = AdaptiveWindow::new(15, 5000, 0.8, 0.5).with_pipeline_depth(3);
+        assert_eq!(p.begin_batch(&accepting(1.0, 0)).pipeline_depth, 3);
+        assert_eq!(p.begin_batch(&accepting(0.2, 1)).pipeline_depth, 1, "collapse");
+        assert_eq!(p.begin_batch(&accepting(0.9, 2)).pipeline_depth, 2, "recover");
+        assert_eq!(p.begin_batch(&accepting(0.9, 3)).pipeline_depth, 3);
+        assert_eq!(p.begin_batch(&accepting(0.9, 4)).pipeline_depth, 3, "capped");
     }
 
     #[test]

@@ -16,15 +16,34 @@
 //! no codec call in the session itself.  The one-time handshake bits are
 //! ledgered in `uplink_bits`/`downlink_bits` (broken out in
 //! `SessionResult` so bit-accounting tests stay exact).
+//!
+//! Since protocol v3 the loop is a *pipelined state machine* rather than
+//! a lock-step request/reply exchange: the edge keeps up to
+//! `pipeline_depth` sequenced drafts in flight, speculatively continuing
+//! from its own draft tokens (the cloud forgoes the bonus token on full
+//! acceptance so both contexts stay aligned), and a rejection rolls the
+//! speculated KV/context back and bumps the speculation epoch so the
+//! cloud discards every stale in-flight draft.  The engine runs on an
+//! in-flight ledger in virtual time — uplink, verify, and downlink
+//! stages each serialize on their own resource, so drafting overlaps
+//! verification and the high-RTT round trip is hidden.  `pipeline_depth
+//! = 1` reproduces the v2 alternating protocol bit for bit (pinned by
+//! `tests/pipelining.rs` against [`SdSession::run_reference_lockstep`]),
+//! and every pipelined run stays a pure function of (config, seed).
+
+use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
 use crate::channel::SimulatedLink;
-use crate::cloud::CloudNode;
-use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint};
+use crate::cloud::{CloudNode, Verdict};
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint, Knobs};
 use crate::edge::EdgeNode;
 use crate::model::{DraftLm, TargetLm};
-use crate::protocol::{negotiate, Direction, Frame, LinkTransport, Transport};
+use crate::protocol::{
+    negotiate, Direction, Ext, FeedbackV2, Frame, LinkTransport, SeqAck, SeqDraft, Transport,
+    PROTOCOL_V3,
+};
 use crate::sqs::Policy;
 use crate::util::stats::Summary;
 
@@ -50,6 +69,9 @@ pub struct SessionConfig {
     pub timing: TimingMode,
     /// link-adaptive control plane (Off = today's fixed knobs, bit-exact)
     pub adaptive: AdaptiveMode,
+    /// maximum unacknowledged drafts in flight (1 = the v2 alternating
+    /// protocol, bit-exact; >= 2 negotiates protocol v3 and pipelines)
+    pub pipeline_depth: usize,
 }
 
 impl Default for SessionConfig {
@@ -64,6 +86,7 @@ impl Default for SessionConfig {
             seed: 0,
             timing: TimingMode::Measured,
             adaptive: AdaptiveMode::Off,
+            pipeline_depth: 1,
         }
     }
 }
@@ -94,6 +117,16 @@ pub struct SessionResult {
     pub tokens: Vec<u16>,
     pub batches: Vec<BatchRecord>,
     pub n_rej: usize,
+    /// in-flight depth the session ran at (1 = alternating)
+    pub pipeline_depth: usize,
+    /// speculative batches the cloud discarded as stale (pipelined
+    /// sessions; their wire bits still count in the ledgers, but they
+    /// produce no `BatchRecord`)
+    pub discarded_batches: usize,
+    /// End-to-end virtual time.  At depth 1 this is the exact sum of the
+    /// four stage components (the alternating protocol serializes them);
+    /// at depth >= 2 it is the pipeline makespan, which overlap makes
+    /// *smaller* than the component sum.
     pub total_time_s: f64,
     pub t_slm_s: f64,
     pub t_uplink_s: f64,
@@ -188,12 +221,19 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         if matches!(cfg.adaptive, AdaptiveMode::Aimd { .. }) {
             edge.use_adaptive_scheme();
         }
+        // a depth >= 2 session wants sequenced drafts: advertise v3 in
+        // the handshake (a v2 peer negotiates the session back down and
+        // the engine falls back to strict alternation)
+        if cfg.pipeline_depth > 1 {
+            edge.wire.set_version(PROTOCOL_V3);
+        }
         let control = ControlLoop::for_session(
             cfg.adaptive,
             cfg.policy,
             cfg.max_batch_drafts,
             cfg.budget_bits,
             vocab,
+            cfg.pipeline_depth,
         );
         let cloud = CloudNode::new(target, cfg.seed ^ 0xC);
         SdSession {
@@ -207,7 +247,19 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
     }
 
     /// Run the speculative-decoding loop to completion.
+    ///
+    /// Every depth runs through the protocol-v3 in-flight ledger engine;
+    /// at `pipeline_depth = 1` the engine degenerates to the v2
+    /// alternating protocol and is bit-identical to
+    /// [`Self::run_reference_lockstep`] (pinned by `tests/pipelining.rs`).
     pub fn run(&mut self, prompt: &[u16]) -> Result<SessionResult> {
+        let hs = self.start_and_handshake(prompt)?;
+        self.run_engine(prompt, hs)
+    }
+
+    /// Start both contexts and run the Hello/HelloAck exchange over the
+    /// link, returning the one-time handshake ledger entries.
+    fn start_and_handshake(&mut self, prompt: &[u16]) -> Result<HandshakeLedger> {
         self.edge.start(prompt)?;
         self.cloud.start(prompt)?;
         self.seq = prompt.to_vec();
@@ -244,14 +296,340 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         if !self.edge.wire.matches(&ack) {
             bail!("handshake: ack does not match the advertised codec config");
         }
+        Ok(HandshakeLedger {
+            up_bits: d_hello.bits as u64,
+            down_bits: d_ack.bits as u64,
+            t_up: d_hello.latency_s(),
+            t_down: d_ack.latency_s(),
+        })
+    }
 
-        let hs_up = d_hello.bits as u64;
-        let hs_down = d_ack.bits as u64;
-        let mut uplink_bits = hs_up;
-        let mut downlink_bits = hs_down;
+    /// The pipelined in-flight ledger engine (protocol v3).
+    ///
+    /// The edge drafts while up to `pipeline_depth` sequenced drafts are
+    /// unacknowledged, speculatively continuing from its own draft
+    /// tokens; the cloud forgoes the bonus token on full acceptance so
+    /// the contexts stay aligned, and a rejection bumps the speculation
+    /// epoch so stale in-flight drafts are discarded on both ends.
+    ///
+    /// Virtual time: the cloud half of each round is evaluated eagerly
+    /// when the frame is sent — legal because frames are served in FIFO
+    /// order and no information reaches the edge before the feedback's
+    /// computed arrival time — while the uplink transmitter, verify
+    /// server, and downlink transmitter each serialize on their own
+    /// `busy-until` clock, which is what lets draft compute overlap the
+    /// round trip.
+    fn run_engine(&mut self, prompt: &[u16], hs: HandshakeLedger) -> Result<SessionResult> {
+        let depth_cfg = self.cfg.pipeline_depth.max(1);
+        let pipelined = depth_cfg > 1 && self.edge.wire.pipelining();
+
+        let mut uplink_bits = hs.up_bits;
+        let mut downlink_bits = hs.down_bits;
         let (mut t_slm, mut t_llm) = (0.0, 0.0);
-        let mut t_up = d_hello.latency_s();
-        let mut t_down = d_ack.latency_s();
+        let mut t_up = hs.t_up;
+        let mut t_down = hs.t_down;
+        let mut batches: Vec<BatchRecord> = Vec::new();
+        let mut n_rej = 0usize;
+        let mut discarded = 0usize;
+
+        // virtual timeline (handshake is sequential: up then down)
+        let hs_done = hs.t_up + hs.t_down;
+        let mut t_edge = hs_done; // when the edge is next free
+        let mut up_busy = hs_done; // uplink transmitter busy-until
+        let mut cloud_free = hs_done; // verify server busy-until
+        let mut down_busy = hs_done; // downlink transmitter busy-until
+        let mut last_arrival = hs_done; // FIFO downlink: arrivals monotone
+
+        let mut in_flight: VecDeque<InFlightBatch> = VecDeque::new();
+        let mut speculated = 0usize; // uncommitted speculative tokens in flight
+        let mut next_seq: u16 = 0;
+        let mut edge_epoch: u8 = 0;
+        let mut cloud_epoch: u8 = 0;
+        let mut cloud_prev = *prompt.last().unwrap();
+        let mut window = depth_cfg; // live depth knob D^t
+        let mut exhausted = false; // draft context ran out mid-request
+
+        loop {
+            let produced = self.seq.len() - prompt.len();
+            let window_eff = if pipelined { window.clamp(1, depth_cfg) } else { 1 };
+            let can_draft = !exhausted
+                && in_flight.len() < window_eff
+                && produced + speculated < self.cfg.max_new_tokens
+                && self.room_left_at(self.seq.len() + speculated);
+
+            if can_draft {
+                // ---- draft the next batch (possibly speculative) --------
+                let ctx_before = self.edge.context_len();
+                let knobs = self.control.begin_batch();
+                window = knobs.pipeline_depth.max(1);
+                let remaining = self.cfg.max_new_tokens - (produced + speculated);
+                let drafted = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
+                let l = drafted.frame.tokens.len();
+                if l == 0 {
+                    exhausted = true; // context full: drain what is in flight
+                    continue;
+                }
+                let slm_time = match self.cfg.timing {
+                    TimingMode::Measured => drafted.t_slm,
+                    TimingMode::Modeled { slm_step_s, .. } => slm_step_s * l as f64,
+                };
+                let draft_done = t_edge + slm_time;
+                t_edge = draft_done;
+
+                let seq = next_seq;
+                next_seq = next_seq.wrapping_add(1);
+                let dist_bits: usize = drafted.dist_bits.iter().sum();
+                let mean_k = drafted.ks.iter().sum::<usize>() as f64 / l as f64;
+
+                // ---- uplink: encode once, serialize on the channel ------
+                let up_frame = if pipelined {
+                    Frame::DraftSeq(SeqDraft { seq, epoch: edge_epoch, frame: drafted.frame })
+                } else {
+                    Frame::Draft(drafted.frame)
+                };
+                let d_up = self.transport.send_frame(
+                    Direction::Up,
+                    &up_frame,
+                    &mut self.edge.wire,
+                    0.0,
+                )?;
+                let up_time = d_up.latency_s();
+                uplink_bits += d_up.bits as u64;
+                let air_s = d_up.bits as f64 / self.transport.link.cfg.uplink_bps;
+                let send_start = draft_done.max(up_busy);
+                up_busy = send_start + air_s;
+                let queue_wait_s = send_start - draft_done;
+                let delivered_at = send_start + up_time;
+
+                // ---- cloud: decode the wire bytes + verify.  Evaluated
+                // eagerly at send time (FIFO service order == send order;
+                // nothing reaches the edge before `arrive_at`) ------------
+                let (verdict, llm_time, fb_out) = match self
+                    .transport
+                    .recv_frame(Direction::Up, &mut self.edge.wire)?
+                {
+                    Frame::Draft(f) if !pipelined => {
+                        let prev = *self.seq.last().unwrap();
+                        let v = self.cloud.verify_with_prev(&f, prev, self.cfg.temp)?;
+                        let llm = match self.cfg.timing {
+                            TimingMode::Measured => v.t_llm,
+                            TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
+                        };
+                        let fb = v.feedback_v2(Vec::new());
+                        (Some(v), llm, fb)
+                    }
+                    Frame::DraftSeq(sd) if pipelined => {
+                        if sd.epoch != cloud_epoch {
+                            // stale: drafted on a branch a rejection killed
+                            (None, 0.0, FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch))
+                        } else {
+                            let v = self
+                                .cloud
+                                .verify_pipelined(&sd.frame, cloud_prev, self.cfg.temp)?;
+                            if v.rejected {
+                                cloud_epoch = cloud_epoch.wrapping_add(1);
+                            }
+                            cloud_prev = *v.committed.last().unwrap();
+                            let llm = match self.cfg.timing {
+                                TimingMode::Measured => v.t_llm,
+                                TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
+                            };
+                            let mut fb = v.feedback_v2(Vec::new());
+                            fb.exts.push(Ext::Ack(SeqAck {
+                                seq: sd.seq,
+                                epoch: sd.epoch,
+                                discard: false,
+                            }));
+                            (Some(v), llm, fb)
+                        }
+                    }
+                    other => {
+                        bail!("expected a draft frame on the uplink, got {}", other.name())
+                    }
+                };
+                let verify_start = delivered_at.max(cloud_free);
+                let verify_done = verify_start + llm_time;
+                cloud_free = verify_done;
+
+                // ---- downlink feedback ----------------------------------
+                let d_down = self.transport.send_frame(
+                    Direction::Down,
+                    &Frame::Feedback(fb_out),
+                    &mut self.edge.wire,
+                    0.0,
+                )?;
+                let down_time = d_down.latency_s();
+                downlink_bits += d_down.bits as u64;
+                let fb_air_s = d_down.bits as f64 / self.transport.link.cfg.downlink_bps;
+                let fb_start = verify_done.max(down_busy);
+                down_busy = fb_start + fb_air_s;
+                let arrive_at = fb_start + down_time;
+                let fb = match self.transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+                    Frame::Feedback(f) => f,
+                    other => bail!("expected a Feedback frame, got {}", other.name()),
+                };
+
+                in_flight.push_back(InFlightBatch {
+                    seq,
+                    ctx_before,
+                    drafted: l,
+                    dist_bits,
+                    mean_k,
+                    knobs,
+                    frame_bits: d_up.bits,
+                    feedback_bits: d_down.bits,
+                    queue_wait_s,
+                    t_slm: slm_time,
+                    t_uplink: up_time,
+                    t_llm: llm_time,
+                    t_downlink: down_time,
+                    verdict,
+                    fb,
+                    arrive_at,
+                });
+                speculated += l;
+                continue;
+            }
+
+            // ---- window full / nothing left to draft: consume the oldest
+            // feedback (FIFO downlink: strictly by sequence) --------------
+            let Some(p) = in_flight.pop_front() else { break };
+            let arrive = p.arrive_at.max(last_arrival);
+            last_arrival = arrive;
+            t_edge = t_edge.max(arrive);
+            speculated -= p.drafted;
+
+            match p.verdict {
+                None => {
+                    // stale frame, discarded by the cloud: retire the seq;
+                    // its wire time and bits were still spent
+                    debug_assert!(pipelined);
+                    debug_assert_eq!(p.fb.ack().map(|a| a.seq), Some(p.seq));
+                    discarded += 1;
+                    t_slm += p.t_slm;
+                    t_up += p.t_uplink;
+                    t_down += p.t_downlink;
+                    self.control.feedback(&BatchOutcome {
+                        drafted: p.drafted,
+                        accepted: 0,
+                        rejected: false,
+                        frame_bits: p.frame_bits,
+                        t_uplink_s: p.t_uplink,
+                        queue_wait_s: p.queue_wait_s,
+                        congestion: p.fb.congestion(),
+                        grant_bits: p.fb.grant(),
+                        discarded: true,
+                    });
+                }
+                Some(verdict) => {
+                    let accepted = p.fb.accepted as usize;
+                    if pipelined {
+                        debug_assert_eq!(p.fb.ack().map(|a| a.seq), Some(p.seq));
+                        self.edge.apply_feedback_pipelined(
+                            p.ctx_before,
+                            p.drafted,
+                            accepted,
+                            p.fb.new_token,
+                        )?;
+                        if accepted < p.drafted {
+                            // rejection: the rollback above discarded every
+                            // speculated token past the accepted prefix; the
+                            // epoch bump makes the cloud discard the
+                            // corresponding in-flight frames
+                            edge_epoch = edge_epoch.wrapping_add(1);
+                            exhausted = false; // rollback freed context room
+                        }
+                    } else {
+                        self.edge.apply_feedback(
+                            p.ctx_before,
+                            p.drafted,
+                            accepted,
+                            p.fb.new_token,
+                        )?;
+                    }
+                    self.seq.extend_from_slice(&verdict.committed);
+
+                    // ---- control plane: fold the round's ledger back in -
+                    self.control.feedback(&BatchOutcome {
+                        drafted: p.drafted,
+                        accepted: verdict.accepted,
+                        rejected: verdict.rejected,
+                        frame_bits: p.frame_bits,
+                        t_uplink_s: p.t_uplink,
+                        queue_wait_s: p.queue_wait_s,
+                        congestion: p.fb.congestion(),
+                        grant_bits: p.fb.grant(),
+                        discarded: false,
+                    });
+
+                    // consistency: edge and cloud contexts must match the
+                    // canonical sequence whenever nothing is speculated
+                    if !pipelined {
+                        debug_assert_eq!(self.edge.context_len(), self.seq.len());
+                        debug_assert_eq!(self.cloud.context_len(), self.seq.len());
+                    } else if in_flight.is_empty() {
+                        debug_assert_eq!(self.edge.context_len(), self.seq.len());
+                    }
+
+                    if verdict.rejected {
+                        n_rej += 1;
+                    }
+                    t_slm += p.t_slm;
+                    t_up += p.t_uplink;
+                    t_llm += p.t_llm;
+                    t_down += p.t_downlink;
+
+                    let round = batches.len() as u64;
+                    batches.push(BatchRecord {
+                        drafted: p.drafted,
+                        accepted: verdict.accepted,
+                        rejected: verdict.rejected,
+                        dist_bits: p.dist_bits,
+                        frame_bits: p.frame_bits,
+                        feedback_bits: p.feedback_bits,
+                        mean_k: p.mean_k,
+                        knobs: KnobPoint::from_knobs(round, &p.knobs),
+                        t_slm: p.t_slm,
+                        t_uplink: p.t_uplink,
+                        t_llm: p.t_llm,
+                        t_downlink: p.t_downlink,
+                    });
+                }
+            }
+        }
+
+        // the alternating protocol serializes the four stages, so their
+        // sum IS the end-to-end time (bit-identical to the v2 loop); a
+        // pipelined run overlaps stages and reports the makespan instead
+        let total_time_s = if pipelined { t_edge } else { t_slm + t_up + t_llm + t_down };
+        Ok(self.assemble(
+            prompt.len(),
+            batches,
+            n_rej,
+            discarded,
+            total_time_s,
+            t_slm,
+            t_up,
+            t_llm,
+            t_down,
+            uplink_bits,
+            downlink_bits,
+            &hs,
+        ))
+    }
+
+    /// The frozen protocol-v2 strictly alternating loop, exactly as it
+    /// shipped before pipelining.  Kept as the regression reference:
+    /// `tests/pipelining.rs` pins `run()` at `pipeline_depth = 1` to be
+    /// bit-identical to this method (tokens, ledgers, and every latency
+    /// component).  Not used by any production path.
+    pub fn run_reference_lockstep(&mut self, prompt: &[u16]) -> Result<SessionResult> {
+        let hs = self.start_and_handshake(prompt)?;
+        let mut uplink_bits = hs.up_bits;
+        let mut downlink_bits = hs.down_bits;
+        let (mut t_slm, mut t_llm) = (0.0, 0.0);
+        let mut t_up = hs.t_up;
+        let mut t_down = hs.t_down;
 
         let mut batches = Vec::new();
         let mut n_rej = 0usize;
@@ -332,6 +710,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 queue_wait_s: 0.0, // private link: no shared-uplink queue
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
+                discarded: false,
             });
 
             // consistency: edge and cloud contexts must match ours
@@ -363,6 +742,39 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             });
         }
 
+        Ok(self.assemble(
+            prompt.len(),
+            batches,
+            n_rej,
+            0,
+            t_slm + t_up + t_llm + t_down,
+            t_slm,
+            t_up,
+            t_llm,
+            t_down,
+            uplink_bits,
+            downlink_bits,
+            &hs,
+        ))
+    }
+
+    /// Shared result assembly (conformal certificate gating + ledgers).
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        &self,
+        prompt_len: usize,
+        batches: Vec<BatchRecord>,
+        n_rej: usize,
+        discarded: usize,
+        total_time_s: f64,
+        t_slm: f64,
+        t_up: f64,
+        t_llm: f64,
+        t_down: f64,
+        uplink_bits: u64,
+        downlink_bits: u64,
+        hs: &HandshakeLedger,
+    ) -> SessionResult {
         // AIMD pins a top-K sparsifier on every token, so the conformal
         // controller — though it kept observing — was never in control:
         // reporting its Theorem 2 certificate would be misleading
@@ -371,36 +783,77 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         } else {
             self.edge.conformal.as_ref()
         };
-        Ok(SessionResult {
-            prompt_len: prompt.len(),
+        SessionResult {
+            prompt_len,
             tokens: self.seq.clone(),
             batches,
             n_rej,
-            total_time_s: t_slm + t_up + t_llm + t_down,
+            pipeline_depth: self.cfg.pipeline_depth.max(1),
+            discarded_batches: discarded,
+            total_time_s,
             t_slm_s: t_slm,
             t_uplink_s: t_up,
             t_llm_s: t_llm,
             t_downlink_s: t_down,
             uplink_bits,
             downlink_bits,
-            handshake_uplink_bits: hs_up,
-            handshake_downlink_bits: hs_down,
+            handshake_uplink_bits: hs.up_bits,
+            handshake_downlink_bits: hs.down_bits,
             conformal_empirical_alpha: conformal.map(|c| c.empirical_alpha()),
             conformal_bound: conformal.map(|c| c.theorem2_bound()),
             conformal_t: conformal.map(|c| c.t()),
-        })
+        }
     }
 
     fn room_left(&self) -> bool {
-        // need room for a full verify window on the target and a token on
-        // the draft side
-        self.seq.len() + self.cfg.max_batch_drafts + 2 < self.cloud.target.max_len()
-            && self.seq.len() + self.cfg.max_batch_drafts + 2 < self.edge_max_len()
+        self.room_left_at(self.seq.len())
+    }
+
+    /// Room check at an arbitrary context length (committed + speculated):
+    /// need room for a full verify window on the target and a token on
+    /// the draft side.
+    fn room_left_at(&self, ctx: usize) -> bool {
+        ctx + self.cfg.max_batch_drafts + 2 < self.cloud.target.max_len()
+            && ctx + self.cfg.max_batch_drafts + 2 < self.edge_max_len()
     }
 
     fn edge_max_len(&self) -> usize {
         self.edge.draft.max_len()
     }
+}
+
+/// One-time handshake ledger entries (bits + one-way latencies).
+struct HandshakeLedger {
+    up_bits: u64,
+    down_bits: u64,
+    t_up: f64,
+    t_down: f64,
+}
+
+/// One unacknowledged speculative batch in the session engine's
+/// in-flight ledger.  The cloud half (verdict, feedback frame, arrival
+/// time) is evaluated eagerly at send time; the edge acts on it only
+/// when the loop's virtual clock reaches `arrive_at`.
+struct InFlightBatch {
+    seq: u16,
+    ctx_before: usize,
+    drafted: usize,
+    dist_bits: usize,
+    mean_k: f64,
+    knobs: Knobs,
+    frame_bits: usize,
+    feedback_bits: usize,
+    /// time the frame waited for the serialized uplink transmitter
+    queue_wait_s: f64,
+    t_slm: f64,
+    t_uplink: f64,
+    t_llm: f64,
+    t_downlink: f64,
+    /// None: the cloud discarded the frame as stale
+    verdict: Option<Verdict>,
+    fb: FeedbackV2,
+    /// virtual time the feedback reaches the edge
+    arrive_at: f64,
 }
 
 /// Cloud-only autoregressive baseline over the same latency model: the
@@ -448,6 +901,8 @@ impl<T: TargetLm> ArBaseline<T> {
             tokens: seq,
             batches: Vec::new(),
             n_rej: 0,
+            pipeline_depth: 1,
+            discarded_batches: 0,
             total_time_s: t_up + t_llm + t_down,
             t_slm_s: 0.0,
             t_uplink_s: t_up,

@@ -119,6 +119,7 @@ impl<D: DraftLm> EdgeNode<D> {
             sparsifier: None,
             ell: self.max_batch_drafts,
             budget_bits: self.budget_bits,
+            pipeline_depth: 1,
         };
         self.draft_batch_knobs(temp, cap, &knobs)
     }
@@ -195,6 +196,28 @@ impl<D: DraftLm> EdgeNode<D> {
                           accepted: usize, new_token: u16) -> Result<()> {
         self.draft.rollback(ctx_len_before + accepted)?;
         self.draft.commit(new_token)?;
+        if let Some(c) = self.conformal.as_mut() {
+            c.feedback(drafted, accepted);
+        }
+        Ok(())
+    }
+
+    /// Apply cloud feedback for a pipelined (protocol-v3) batch.
+    ///
+    /// Full acceptance commits no bonus token, so the edge's speculated
+    /// continuation — drafted from exactly these tokens — stays valid:
+    /// the context is left untouched and only the conformal controller
+    /// hears about the round.  Partial acceptance rolls the draft KV and
+    /// context back to the accepted prefix (discarding every speculated
+    /// token drafted past this batch along the way, via the same
+    /// truncation the alternating protocol uses) and commits the cloud's
+    /// resampled token.
+    pub fn apply_feedback_pipelined(&mut self, ctx_len_before: usize, drafted: usize,
+                                    accepted: usize, new_token: u16) -> Result<()> {
+        if accepted < drafted {
+            self.draft.rollback(ctx_len_before + accepted)?;
+            self.draft.commit(new_token)?;
+        }
         if let Some(c) = self.conformal.as_mut() {
             c.feedback(drafted, accepted);
         }
@@ -284,6 +307,7 @@ mod tests {
                     sparsifier: None,
                     ell: knobbed.max_batch_drafts,
                     budget_bits: knobbed.budget_bits,
+                    pipeline_depth: 1,
                 };
                 let b = knobbed.draft_batch_knobs(0.9, 10, &static_knobs).unwrap();
                 let (a_bytes, a_bits) = wire_bytes(&mut legacy, &a);
@@ -311,6 +335,7 @@ mod tests {
                 sparsifier: Some(Sparsifier::top_k(k)),
                 ell: 4,
                 budget_bits: 5000,
+                pipeline_depth: 1,
             };
             let b = e.draft_batch_knobs(1.0, 10, &knobs).unwrap();
             assert!(!b.frame.tokens.is_empty());
@@ -334,10 +359,34 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_feedback_keeps_speculation_on_full_accept() {
+        let mut e = edge(Policy::KSqs { k: 8 }, 5000);
+        e.start(&[1, 2, 3]).unwrap();
+        let a = e.draft_batch_capped(0.9, 4).unwrap();
+        let la = a.frame.tokens.len();
+        let ctx_a = 3;
+        // speculate a second batch from the first one's tokens
+        let b = e.draft_batch_capped(0.9, 4).unwrap();
+        let lb = b.frame.tokens.len();
+        let speculated = e.context_len();
+        assert_eq!(speculated, 3 + la + lb);
+
+        // full accept of batch a: context untouched, speculation lives
+        e.apply_feedback_pipelined(ctx_a, la, la, 0).unwrap();
+        assert_eq!(e.context_len(), speculated);
+
+        // partial accept of batch b: rollback to the accepted prefix +
+        // the cloud's resampled token, speculation past it is gone
+        let acc = lb - 1;
+        e.apply_feedback_pipelined(3 + la, lb, acc, 7).unwrap();
+        assert_eq!(e.context_len(), 3 + la + acc + 1);
+    }
+
+    #[test]
     fn knobs_budget_overrides_config_budget() {
         let mut e = edge(Policy::KSqs { k: 8 }, 5000);
         e.start(&[1]).unwrap();
-        let knobs = Knobs { sparsifier: None, ell: 15, budget_bits: 150 };
+        let knobs = Knobs { sparsifier: None, ell: 15, budget_bits: 150, pipeline_depth: 1 };
         let b = e.draft_batch_knobs(0.9, 15, &knobs).unwrap();
         let total: usize = b.dist_bits.iter().sum();
         assert!(total <= 150 || b.frame.tokens.len() == 1, "knob budget enforced");

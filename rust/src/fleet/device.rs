@@ -14,6 +14,15 @@
 //! Compute enters virtual time via the profile's modeled costs (exactly
 //! like `TimingMode::Modeled`), which keeps fleet runs reproducible
 //! regardless of host load.
+//!
+//! With `pipeline_depth >= 2` the device runs the protocol-v3 pipelined
+//! state machine: the single `pending` slot becomes an in-flight ledger
+//! of sequenced batches, the device keeps drafting speculative
+//! continuations while the window has room, the verify side discards
+//! stale frames by speculation epoch, and feedback is matched back to
+//! its batch by the `Ext::Ack` sequence number.  Depth 1 follows the
+//! exact pre-pipelining event sequence (regression-pinned by
+//! `tests/pipelining.rs`).
 
 use std::collections::VecDeque;
 
@@ -25,7 +34,9 @@ use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint};
 use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
-use crate::protocol::{Delivery, Direction, Ext, Frame, SharedPort, Transport};
+use crate::protocol::{
+    Delivery, Direction, Ext, FeedbackV2, Frame, SeqAck, SeqDraft, SharedPort, Transport,
+};
 use crate::sqs::Policy;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -53,6 +64,9 @@ pub struct DeviceProfile {
     pub workload: Workload,
     /// link-adaptive control plane (Off = fixed knobs, pre-PR behavior)
     pub adaptive: AdaptiveMode,
+    /// unacknowledged drafts the device may keep in flight (1 = the v2
+    /// alternating protocol, bit-exact; >= 2 pipelines with protocol v3)
+    pub pipeline_depth: usize,
 }
 
 impl Default for DeviceProfile {
@@ -70,6 +84,7 @@ impl Default for DeviceProfile {
             downlink_bps: 1e7,
             workload: Workload::ClosedLoop { think_s: 0.0 },
             adaptive: AdaptiveMode::Off,
+            pipeline_depth: 1,
         }
     }
 }
@@ -82,8 +97,14 @@ pub struct ActiveRequest {
     pub seq: Vec<u16>,
 }
 
-/// In-flight batch scratch between protocol phases.
+/// One sequenced batch in the device's in-flight ledger.
 struct PendingBatch {
+    /// wrapping sequence number (unique within the in-flight window)
+    seq: u16,
+    /// speculation epoch the batch was drafted at
+    epoch: u8,
+    /// the v1 frame's batch id (echoed in discard feedback)
+    batch_id: u32,
     ctx_before: usize,
     drafted: usize,
     /// the structured frame, held until the uplink send encodes it
@@ -91,6 +112,10 @@ struct PendingBatch {
     /// wire size of the sent frame, bits (set by `send_draft`)
     frame_bits: usize,
     verdict: Option<Verdict>,
+    /// the cloud discarded the frame as stale (pipelined sessions)
+    discard: bool,
+    /// verify side has handled the frame (verdict or discard)
+    served: bool,
     /// feedback extensions decided at verify time (verifier queue state)
     exts: Vec<Ext>,
     /// time the frame waited in the shared-uplink queue, seconds
@@ -106,12 +131,17 @@ pub struct DeviceStats {
     pub tokens: u64,
     pub batches: u64,
     pub rejected_batches: u64,
+    /// speculative batches the cloud discarded as stale (pipelined)
+    pub discarded_batches: u64,
+    /// tokens inside those discarded batches (never verified, so they
+    /// are excluded from the acceptance denominator)
+    pub discarded_tokens: u64,
     pub drafted_tokens: u64,
     pub accepted_tokens: u64,
     pub uplink_bits: u64,
     pub downlink_bits: u64,
     pub latency: Summary,
-    /// per-round knob trajectory (K^t, ℓ^t, B^t) for convergence plots
+    /// per-round knob trajectory (K^t, ℓ^t, B^t, D^t) for convergence plots
     pub knob_trace: Vec<KnobPoint>,
 }
 
@@ -130,7 +160,24 @@ pub struct Device {
     pub stats: DeviceStats,
     /// arrivals generated so far (bounded by requests_per_device)
     pub generated: usize,
-    pending: Option<PendingBatch>,
+    /// a batch has been drafted but not yet shipped (its modeled draft
+    /// time is still elapsing in the event queue)
+    pub drafting: bool,
+    /// sequenced in-flight ledger, oldest first (depth 1: at most one)
+    in_flight: VecDeque<PendingBatch>,
+    /// verified batches queued for feedback send, in verify order
+    ready_feedback: VecDeque<u16>,
+    next_seq: u16,
+    /// rejections the edge has consumed (wrapping)
+    edge_epoch: u8,
+    /// rejections the verify side has produced (wrapping)
+    cloud_epoch: u8,
+    /// last token committed to the cloud context (pipelined verify)
+    cloud_prev: u16,
+    /// uncommitted speculative tokens across the in-flight ledger
+    speculated: usize,
+    /// live depth knob D^t from the control plane
+    window: usize,
     /// prompt generation
     rng: Pcg64,
     /// workload inter-arrival stream (isolated so arrival times do not
@@ -162,12 +209,21 @@ impl Device {
         if matches!(profile.adaptive, AdaptiveMode::Aimd { .. }) {
             edge.use_adaptive_scheme();
         }
+        let depth = profile.pipeline_depth.max(1);
+        // a depth >= 2 device speaks protocol-v3 sequenced drafts; its
+        // port must admit a pipeline's worth of frames per direction
+        if depth > 1 {
+            edge.wire.set_version(crate::protocol::PROTOCOL_V3);
+        }
+        let mut port = port;
+        port.set_window(depth);
         let control = ControlLoop::for_session(
             profile.adaptive,
             profile.policy,
             profile.max_batch_drafts,
             profile.budget_bits,
             vocab,
+            depth,
         );
         let cloud = CloudNode::new(target, seed ^ 0xC);
         Device {
@@ -181,11 +237,39 @@ impl Device {
             active: None,
             stats: DeviceStats { latency: Summary::new(), ..Default::default() },
             generated: 0,
-            pending: None,
+            drafting: false,
+            in_flight: VecDeque::new(),
+            ready_feedback: VecDeque::new(),
+            next_seq: 0,
+            edge_epoch: 0,
+            cloud_epoch: 0,
+            cloud_prev: 0,
+            speculated: 0,
+            window: depth,
             rng: Pcg64::new(seed, 0xF1EE7),
             arrival_rng: Pcg64::new(seed, 0xA441),
             vocab,
         }
+    }
+
+    /// Does this device run the protocol-v3 pipelined state machine?
+    fn pipelined(&self) -> bool {
+        self.profile.pipeline_depth.max(1) > 1
+    }
+
+    /// Batches currently in the in-flight ledger (sent or drafting).
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// The in-flight window in force right now: the control plane's live
+    /// depth knob, clamped to the configured ceiling (1 when the device
+    /// is not pipelining).
+    pub fn pipeline_window(&self) -> usize {
+        if !self.pipelined() {
+            return 1;
+        }
+        self.window.clamp(1, self.profile.pipeline_depth.max(1))
     }
 
     /// Draw the next inter-arrival/think gap from this device's workload.
@@ -199,6 +283,7 @@ impl Device {
     /// empty.
     pub fn start_next_request(&mut self, _now: f64) -> Result<Option<f64>> {
         debug_assert!(self.active.is_none());
+        debug_assert!(self.in_flight.is_empty());
         let Some(arrived_at) = self.queue.pop_front() else {
             return Ok(None);
         };
@@ -208,6 +293,15 @@ impl Device {
             .collect();
         self.edge.start(&prompt)?;
         self.cloud.start(&prompt)?;
+        // pipeline state is per-request: fresh sequences and epochs
+        self.next_seq = 0;
+        self.edge_epoch = 0;
+        self.cloud_epoch = 0;
+        self.speculated = 0;
+        self.window = self.profile.pipeline_depth.max(1);
+        self.drafting = false;
+        self.ready_feedback.clear();
+        self.cloud_prev = *prompt.last().unwrap();
         self.active = Some(ActiveRequest {
             arrived_at,
             prompt_len: prompt.len(),
@@ -221,21 +315,23 @@ impl Device {
         }
     }
 
-    /// Draft the next batch of the active request.  Returns the modeled
-    /// SLM time, or None when the request has nothing left to draft
-    /// (finished / out of context room).
+    /// Draft the next batch of the active request (a speculative
+    /// continuation when drafts are already in flight).  Returns the
+    /// modeled SLM time, or None when the request has nothing left to
+    /// draft right now (token budget spoken for / out of context room).
     pub fn begin_batch(&mut self) -> Result<Option<f64>> {
         let req = self
             .active
             .as_ref()
             .ok_or_else(|| anyhow!("begin_batch without active request"))?;
         let produced = req.seq.len() - req.prompt_len;
-        if produced >= self.profile.max_new_tokens || !self.room_left() {
+        if produced + self.speculated >= self.profile.max_new_tokens || !self.room_left() {
             return Ok(None);
         }
-        let ctx_before = req.seq.len();
-        let remaining = self.profile.max_new_tokens - produced;
+        let ctx_before = self.edge.context_len();
+        let remaining = self.profile.max_new_tokens - (produced + self.speculated);
         let knobs = self.control.begin_batch();
+        self.window = knobs.pipeline_depth.max(1);
         let drafted = self.edge.draft_batch_knobs(self.profile.temp, remaining, &knobs)?;
         let l = drafted.frame.tokens.len();
         if l == 0 {
@@ -243,38 +339,57 @@ impl Device {
         }
         let round = self.stats.knob_trace.len() as u64;
         self.stats.knob_trace.push(KnobPoint::from_knobs(round, &knobs));
-        self.pending = Some(PendingBatch {
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        let batch_id = drafted.frame.batch_id;
+        self.in_flight.push_back(PendingBatch {
+            seq,
+            epoch: self.edge_epoch,
+            batch_id,
             ctx_before,
             drafted: l,
             frame: Some(drafted.frame),
             frame_bits: 0,
             verdict: None,
+            discard: false,
+            served: false,
             exts: Vec::new(),
             queue_wait_s: 0.0,
             uplink_s: 0.0,
         });
+        self.speculated += l;
+        self.drafting = true;
         self.stats.drafted_tokens += l as u64;
         Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * l as f64))
     }
 
-    /// Ship the pending draft frame through this device's port onto the
-    /// shared uplink at virtual time `now`.  The transport encodes the
-    /// frame (charging exact wire bits) and reserves the FIFO channel;
-    /// the returned delivery tells the simulator when the cloud sees it.
+    /// Ship the oldest unsent draft frame through this device's port
+    /// onto the shared uplink at virtual time `now`.  The transport
+    /// encodes the frame (charging exact wire bits) and reserves the
+    /// FIFO channel; the returned delivery tells the simulator when the
+    /// cloud sees it.  Pipelined devices ship sequenced (`DraftSeq`)
+    /// frames stamped with their speculation epoch.
     pub fn send_draft(&mut self, now: f64) -> Result<Delivery> {
-        let pending = self
-            .pending
-            .as_mut()
+        let idx = self
+            .in_flight
+            .iter()
+            .position(|p| p.frame.is_some())
             .ok_or_else(|| anyhow!("send_draft without pending batch"))?;
-        let frame = pending
-            .frame
-            .take()
-            .ok_or_else(|| anyhow!("draft frame already sent"))?;
-        let d =
-            self.port.send_frame(Direction::Up, &Frame::Draft(frame), &mut self.edge.wire, now)?;
-        pending.frame_bits = d.bits;
-        pending.queue_wait_s = d.queue_wait_s;
-        pending.uplink_s = d.latency_s();
+        let (frame, seq, epoch) = {
+            let p = &mut self.in_flight[idx];
+            (p.frame.take().unwrap(), p.seq, p.epoch)
+        };
+        let up_frame = if self.pipelined() {
+            Frame::DraftSeq(SeqDraft { seq, epoch, frame })
+        } else {
+            Frame::Draft(frame)
+        };
+        let d = self.port.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, now)?;
+        let p = &mut self.in_flight[idx];
+        p.frame_bits = d.bits;
+        p.queue_wait_s = d.queue_wait_s;
+        p.uplink_s = d.latency_s();
+        self.drafting = false;
         self.stats.uplink_bits += d.bits as u64;
         Ok(d)
     }
@@ -283,94 +398,198 @@ impl Device {
     /// against this device's cloud context, stamping the feedback
     /// extensions the verifier chose (congestion / budget grant).
     /// Returns the verify-window length (drafts + 1) so the verifier can
-    /// model batched service time.
+    /// model batched service time — 0 for a stale sequenced frame the
+    /// verify side discards without touching the target model.
     pub fn verify_now(&mut self, exts: Vec<Ext>) -> Result<usize> {
-        let req = self
-            .active
-            .as_ref()
-            .ok_or_else(|| anyhow!("verify without active request"))?;
-        let prev = *req.seq.last().unwrap();
-        let frame = match self.port.recv_frame(Direction::Up, &mut self.edge.wire)? {
-            Frame::Draft(f) => f,
-            other => bail!("device {}: expected a Draft frame, got {}", self.id, other.name()),
-        };
         let temp = self.profile.temp;
-        let verdict = self.cloud.verify_with_prev(&frame, prev, temp)?;
-        let pending = self
-            .pending
-            .as_mut()
-            .ok_or_else(|| anyhow!("verify without pending batch"))?;
-        let window = pending.drafted + 1;
-        pending.verdict = Some(verdict);
-        pending.exts = exts;
-        Ok(window)
+        match self.port.recv_frame(Direction::Up, &mut self.edge.wire)? {
+            Frame::Draft(frame) => {
+                // v2 alternating path (depth 1), unchanged
+                let req = self
+                    .active
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("verify without active request"))?;
+                let prev = *req.seq.last().unwrap();
+                let verdict = self.cloud.verify_with_prev(&frame, prev, temp)?;
+                let pending = self
+                    .in_flight
+                    .front_mut()
+                    .ok_or_else(|| anyhow!("verify without pending batch"))?;
+                let window = pending.drafted + 1;
+                pending.verdict = Some(verdict);
+                pending.exts = exts;
+                pending.served = true;
+                self.ready_feedback.push_back(pending.seq);
+                Ok(window)
+            }
+            Frame::DraftSeq(sd) => {
+                let idx = self
+                    .in_flight
+                    .iter()
+                    .position(|p| p.seq == sd.seq && !p.served)
+                    .ok_or_else(|| {
+                        anyhow!("device {}: sequenced draft {} not in flight", self.id, sd.seq)
+                    })?;
+                if sd.epoch != self.cloud_epoch {
+                    // stale: drafted on a branch a rejection already killed
+                    let p = &mut self.in_flight[idx];
+                    p.discard = true;
+                    p.served = true;
+                    p.exts = exts;
+                    self.ready_feedback.push_back(sd.seq);
+                    return Ok(0);
+                }
+                let verdict = self.cloud.verify_pipelined(&sd.frame, self.cloud_prev, temp)?;
+                if verdict.rejected {
+                    self.cloud_epoch = self.cloud_epoch.wrapping_add(1);
+                }
+                self.cloud_prev = *verdict.committed.last().unwrap();
+                let p = &mut self.in_flight[idx];
+                let window = p.drafted + 1;
+                p.verdict = Some(verdict);
+                p.exts = exts;
+                p.served = true;
+                self.ready_feedback.push_back(sd.seq);
+                Ok(window)
+            }
+            other => bail!("device {}: expected a Draft frame, got {}", self.id, other.name()),
+        }
     }
 
-    /// Ship the v2 feedback frame (verdict + extensions) down this
-    /// device's dedicated link at virtual time `now`.
+    /// Ship the oldest verified batch's v2 feedback frame (verdict +
+    /// extensions, plus the `Ext::Ack` sequence ack on pipelined
+    /// sessions) down this device's dedicated link at virtual time `now`.
     pub fn send_feedback(&mut self, now: f64) -> Result<Delivery> {
-        let pending = self
-            .pending
-            .as_ref()
+        let seq = self
+            .ready_feedback
+            .pop_front()
             .ok_or_else(|| anyhow!("feedback without pending batch"))?;
-        let verdict = pending
-            .verdict
-            .as_ref()
-            .ok_or_else(|| anyhow!("feedback before verify"))?;
-        let fb = verdict.feedback_v2(pending.exts.clone());
+        let fb = {
+            let p = self
+                .in_flight
+                .iter()
+                .find(|p| p.seq == seq && p.served)
+                .ok_or_else(|| anyhow!("feedback for unknown seq {seq}"))?;
+            if p.discard {
+                let mut fb = FeedbackV2::discard(p.batch_id, p.seq, p.epoch);
+                fb.exts.extend(p.exts.iter().cloned());
+                fb
+            } else {
+                let verdict = p
+                    .verdict
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("feedback before verify"))?;
+                let mut fb = verdict.feedback_v2(p.exts.clone());
+                if self.pipelined() {
+                    fb.exts.push(Ext::Ack(SeqAck { seq: p.seq, epoch: p.epoch, discard: false }));
+                }
+                fb
+            }
+        };
         let d =
             self.port.send_frame(Direction::Down, &Frame::Feedback(fb), &mut self.edge.wire, now)?;
         self.stats.downlink_bits += d.bits as u64;
         Ok(d)
     }
 
-    /// Receive the feedback frame, sync the edge with the verdict, and
-    /// commit tokens.  Returns true when the active request has produced
-    /// all its tokens.
+    /// Receive the oldest feedback frame, sync the edge with the
+    /// verdict, and commit tokens.  A discard ack just retires the
+    /// sequence number (its tokens were rolled back when the rejection
+    /// that doomed it was processed).  Returns true when the active
+    /// request has produced all its tokens and nothing is left in
+    /// flight.
     pub fn apply_feedback(&mut self) -> Result<bool> {
         let fb = match self.port.recv_frame(Direction::Down, &mut self.edge.wire)? {
             Frame::Feedback(f) => f,
             other => bail!("device {}: expected a Feedback frame, got {}", self.id, other.name()),
         };
+        let pipelined = self.pipelined();
         let pending = self
-            .pending
-            .take()
+            .in_flight
+            .pop_front()
             .ok_or_else(|| anyhow!("apply_feedback without pending batch"))?;
-        let verdict = pending
-            .verdict
-            .ok_or_else(|| anyhow!("apply_feedback before verify"))?;
-        debug_assert_eq!(fb.accepted as usize, verdict.accepted);
-        self.edge.apply_feedback(
-            pending.ctx_before,
-            pending.drafted,
-            fb.accepted as usize,
-            fb.new_token,
-        )?;
+        if let Some(ack) = fb.ack() {
+            debug_assert_eq!(ack.seq, pending.seq, "FIFO downlink: acks arrive in seq order");
+        }
+        self.speculated -= pending.drafted;
+
+        if fb.ack().map(|a| a.discard).unwrap_or(false) {
+            // stale frame the cloud discarded: retire the seq; the wire
+            // bits were still spent, so the estimator hears about them
+            self.stats.discarded_batches += 1;
+            self.stats.discarded_tokens += pending.drafted as u64;
+            self.control.feedback(&BatchOutcome {
+                drafted: pending.drafted,
+                accepted: 0,
+                rejected: false,
+                frame_bits: pending.frame_bits,
+                t_uplink_s: pending.uplink_s,
+                queue_wait_s: pending.queue_wait_s,
+                congestion: fb.congestion(),
+                grant_bits: fb.grant(),
+                discarded: true,
+            });
+        } else {
+            let verdict = pending
+                .verdict
+                .ok_or_else(|| anyhow!("apply_feedback before verify"))?;
+            debug_assert_eq!(fb.accepted as usize, verdict.accepted);
+            let accepted = fb.accepted as usize;
+            if pipelined {
+                self.edge.apply_feedback_pipelined(
+                    pending.ctx_before,
+                    pending.drafted,
+                    accepted,
+                    fb.new_token,
+                )?;
+                if accepted < pending.drafted {
+                    // rejection: every speculated token past the accepted
+                    // prefix was rolled back with the context; the epoch
+                    // bump turns the in-flight remainder into discards
+                    self.edge_epoch = self.edge_epoch.wrapping_add(1);
+                }
+            } else {
+                self.edge.apply_feedback(
+                    pending.ctx_before,
+                    pending.drafted,
+                    accepted,
+                    fb.new_token,
+                )?;
+            }
+            let req = self
+                .active
+                .as_mut()
+                .ok_or_else(|| anyhow!("apply_feedback without active request"))?;
+            req.seq.extend_from_slice(&verdict.committed);
+            if !pipelined {
+                debug_assert_eq!(self.edge.context_len(), req.seq.len());
+                debug_assert_eq!(self.cloud.context_len(), req.seq.len());
+            }
+
+            self.stats.batches += 1;
+            self.stats.accepted_tokens += verdict.accepted as u64;
+            if verdict.rejected {
+                self.stats.rejected_batches += 1;
+            }
+            self.control.feedback(&BatchOutcome {
+                drafted: pending.drafted,
+                accepted: verdict.accepted,
+                rejected: verdict.rejected,
+                frame_bits: pending.frame_bits,
+                t_uplink_s: pending.uplink_s,
+                queue_wait_s: pending.queue_wait_s,
+                congestion: fb.congestion(),
+                grant_bits: fb.grant(),
+                discarded: false,
+            });
+        }
         let req = self
             .active
-            .as_mut()
+            .as_ref()
             .ok_or_else(|| anyhow!("apply_feedback without active request"))?;
-        req.seq.extend_from_slice(&verdict.committed);
-        debug_assert_eq!(self.edge.context_len(), req.seq.len());
-        debug_assert_eq!(self.cloud.context_len(), req.seq.len());
-
-        self.stats.batches += 1;
-        self.stats.accepted_tokens += verdict.accepted as u64;
-        if verdict.rejected {
-            self.stats.rejected_batches += 1;
-        }
-        self.control.feedback(&BatchOutcome {
-            drafted: pending.drafted,
-            accepted: verdict.accepted,
-            rejected: verdict.rejected,
-            frame_bits: pending.frame_bits,
-            t_uplink_s: pending.uplink_s,
-            queue_wait_s: pending.queue_wait_s,
-            congestion: fb.congestion(),
-            grant_bits: fb.grant(),
-        });
         let produced = req.seq.len() - req.prompt_len;
-        Ok(produced >= self.profile.max_new_tokens || !self.room_left())
+        Ok((produced >= self.profile.max_new_tokens || !self.room_left())
+            && self.in_flight.is_empty())
     }
 
     /// Record the finished request and free the device.
@@ -383,12 +602,18 @@ impl Device {
         self.stats.completed += 1;
         self.stats.tokens += (req.seq.len() - req.prompt_len) as u64;
         self.stats.latency.add(latency);
-        self.pending = None;
+        self.in_flight.clear();
+        self.ready_feedback.clear();
+        self.speculated = 0;
+        self.drafting = false;
         Ok(latency)
     }
 
     fn room_left(&self) -> bool {
-        let len = self.active.as_ref().map(|r| r.seq.len()).unwrap_or(0);
+        // committed + speculated: the edge context already holds the
+        // speculation, and the cloud may commit up to the same tokens
+        let len =
+            self.active.as_ref().map(|r| r.seq.len()).unwrap_or(0) + self.speculated;
         len + self.profile.max_batch_drafts + 2 < self.cloud.target.max_len()
             && len + self.profile.max_batch_drafts + 2 < self.edge.draft.max_len()
     }
@@ -547,5 +772,121 @@ mod tests {
         let mut d = device(Policy::KSqs { k: 4 });
         assert!(d.start_next_request(0.0).unwrap().is_none());
         assert!(d.send_draft(0.0).is_err(), "no pending batch to send");
+    }
+
+    #[test]
+    fn pipelined_device_speculates_rolls_back_and_accounts_every_seq() {
+        let profile = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 48,
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let mut d = mk_device(profile);
+        d.queue.push_back(0.0);
+        d.start_next_request(0.0).unwrap().unwrap();
+        assert_eq!(d.in_flight_len(), 1);
+        assert!(d.drafting);
+
+        // a zero-latency cloud driver: ship one frame, speculate ahead
+        // while the window allows, verify/feedback/apply in FIFO order
+        let mut now = 0.0;
+        let mut applied = 0u64;
+        let mut max_in_flight = 0usize;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "driver wedged");
+            now = d.send_draft(now).unwrap().delivered_at;
+            if d.active.is_some() && d.in_flight_len() < d.pipeline_window() {
+                let _ = d.begin_batch().unwrap();
+            }
+            max_in_flight = max_in_flight.max(d.in_flight_len());
+            d.verify_now(Vec::new()).unwrap();
+            now = d.send_feedback(now).unwrap().delivered_at;
+            applied += 1;
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            if d.in_flight_len() == 0 && !d.drafting && d.begin_batch().unwrap().is_none() {
+                break;
+            }
+        }
+        d.complete_request(now).unwrap();
+        assert_eq!(d.stats.completed, 1);
+        assert!(d.stats.tokens >= 48, "request completed: {} tokens", d.stats.tokens);
+        assert_eq!(
+            d.stats.batches + d.stats.discarded_batches,
+            applied,
+            "every sequence number is acked exactly once"
+        );
+        assert_eq!(
+            d.stats.knob_trace.len() as u64,
+            applied,
+            "one knob point per drafted batch, discarded or not"
+        );
+        assert!(max_in_flight >= 2, "the window actually pipelined");
+        assert_eq!(d.in_flight_len(), 0);
+    }
+
+    #[test]
+    fn sequence_numbers_wrap_without_confusing_the_ledger() {
+        // start the counter 3 below the u16 ceiling: the request's
+        // batches straddle the wraparound and every ack still matches
+        let profile = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 64,
+            pipeline_depth: 3,
+            ..Default::default()
+        };
+        let mut d = mk_device(profile);
+        d.queue.push_back(0.0);
+        d.start_next_request(0.0).unwrap().unwrap();
+        // rewrite the freshly assigned seq and the counter to the edge
+        // of the space (epoch likewise, one below its ceiling)
+        d.next_seq = u16::MAX - 2;
+        d.edge_epoch = u8::MAX;
+        d.cloud_epoch = u8::MAX;
+        for p in d.in_flight.iter_mut() {
+            p.seq = u16::MAX - 3;
+            p.epoch = u8::MAX;
+        }
+        let mut now = 0.0;
+        let mut applied = 0u64;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "driver wedged");
+            now = d.send_draft(now).unwrap().delivered_at;
+            if d.active.is_some() && d.in_flight_len() < d.pipeline_window() {
+                let _ = d.begin_batch().unwrap();
+            }
+            d.verify_now(Vec::new()).unwrap();
+            now = d.send_feedback(now).unwrap().delivered_at;
+            applied += 1;
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            if d.in_flight_len() == 0 && !d.drafting && d.begin_batch().unwrap().is_none() {
+                break;
+            }
+        }
+        d.complete_request(now).unwrap();
+        assert_eq!(d.stats.completed, 1);
+        assert!(applied as usize > 4, "enough batches to cross the wrap: {applied}");
+        assert_eq!(d.stats.batches + d.stats.discarded_batches, applied);
+        assert!(d.next_seq < u16::MAX - 2, "the counter wrapped");
+    }
+
+    #[test]
+    fn depth_one_device_still_speaks_plain_v2_drafts() {
+        // the pipelined refactor must not change the depth-1 wire format
+        let mut d = device(Policy::KSqs { k: 8 });
+        d.queue.push_back(0.0);
+        d.start_next_request(0.0).unwrap().unwrap();
+        d.send_draft(0.0).unwrap();
+        // the frame on the port decodes as a plain (unsequenced) Draft
+        let frame = d.port.recv_frame(Direction::Up, &mut d.edge.wire).unwrap();
+        assert!(matches!(frame, Frame::Draft(_)), "depth 1 ships v2 frames, got {}", frame.name());
     }
 }

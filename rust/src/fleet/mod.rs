@@ -13,7 +13,11 @@
 //!   Arrival -> [queue at device] -> DraftDone -> [queue at SharedUplink]
 //!   -> UplinkDelivered -> [queue at CloudVerifier] -> VerifyDone
 //!   -> FeedbackDelivered -> next DraftDone | request complete
-//! plus SlotFree events that drive the verifier's admission loop.
+//! plus SlotFree events that drive the verifier's admission loop.  With
+//! `pipeline_depth >= 2` a device also drafts a speculative continuation
+//! right after shipping a frame (and after every feedback that frees a
+//! window slot), so several sequenced drafts of one request overlap on
+//! the uplink and in the verify queue.
 
 pub mod device;
 pub mod events;
@@ -142,12 +146,14 @@ pub struct DeviceReport {
     pub tokens: u64,
     pub batches: u64,
     pub rejected_batches: u64,
+    /// speculative batches the cloud discarded as stale (pipelined)
+    pub discarded_batches: u64,
     pub mean_latency_s: f64,
     pub p99_latency_s: f64,
     pub uplink_bits: u64,
     pub downlink_bits: u64,
-    /// per-round knob trajectory (K^t, ℓ^t, B^t) — convergence traces
-    /// for the benches' CSV export
+    /// per-round knob trajectory (K^t, ℓ^t, B^t, D^t) — convergence
+    /// traces for the benches' CSV export
     pub knob_trace: Vec<KnobPoint>,
 }
 
@@ -168,6 +174,8 @@ pub struct FleetReport {
     pub verify_calls: u64,
     pub verify_mean_batch: f64,
     pub verify_utilization: f64,
+    /// fleet-wide stale speculative batches discarded by the verifier
+    pub discarded_batches: u64,
     /// (policy name, rejected batches, total batches)
     pub rejection_by_policy: Vec<(String, u64, u64)>,
     /// drafted-token acceptance across the fleet
@@ -218,9 +226,9 @@ impl FleetReport {
         );
         for d in &self.per_device {
             s.push_str(&format!(
-                "\ndev{} {} c={} t={} b={} r={} lat={:016x}",
+                "\ndev{} {} c={} t={} b={} r={} disc={} lat={:016x}",
                 d.id, d.policy, d.completed, d.tokens, d.batches, d.rejected_batches,
-                d.mean_latency_s.to_bits()
+                d.discarded_batches, d.mean_latency_s.to_bits()
             ));
         }
         s
@@ -257,6 +265,12 @@ impl FleetReport {
             self.verify_mean_batch,
             100.0 * self.verify_utilization
         ));
+        if self.discarded_batches > 0 {
+            out.push_str(&format!(
+                "pipelining: {} stale speculative batches discarded\n",
+                self.discarded_batches
+            ));
+        }
         out.push_str(&format!("acceptance: {:.3}\n", self.acceptance));
         out.push_str("rejection rate by policy:\n");
         for (name, rej, total) in &self.rejection_by_policy {
@@ -378,6 +392,9 @@ impl FleetSim {
                 let delivery = self.devices[d].send_draft(now)?;
                 self.metrics.observe("fleet.uplink_wait_s", delivery.queue_wait_s);
                 self.events.push(delivery.delivered_at, d, EventKind::UplinkDelivered);
+                // pipelining: keep drafting speculative continuations
+                // while the in-flight window has room (no-op at depth 1)
+                self.try_pipeline_draft(d, now)?;
             }
             EventKind::UplinkDelivered => {
                 self.verifier.enqueue(d);
@@ -392,11 +409,16 @@ impl FleetSim {
                 self.start_verifies(now)?;
             }
             EventKind::FeedbackDelivered => {
+                let discards_before = self.devices[d].stats.discarded_batches;
                 let done = self.devices[d].apply_feedback()?;
-                self.metrics.inc("fleet.batches", 1);
+                // a discard ack retires a stale seq without a verified
+                // batch: keep the metric aligned with DeviceStats.batches
+                if self.devices[d].stats.discarded_batches == discards_before {
+                    self.metrics.inc("fleet.batches", 1);
+                }
                 if done {
                     self.finish_request(d, now)?;
-                } else {
+                } else if self.devices[d].in_flight_len() == 0 && !self.devices[d].drafting {
                     match self.devices[d].begin_batch()? {
                         Some(draft_s) => {
                             self.events.push(now + draft_s, d, EventKind::DraftDone)
@@ -404,19 +426,43 @@ impl FleetSim {
                         // out of context room mid-request: close it out
                         None => self.finish_request(d, now)?,
                     }
+                } else {
+                    // feedback freed a window slot: refill the pipeline
+                    self.try_pipeline_draft(d, now)?;
                 }
             }
         }
         Ok(())
     }
 
+    /// Draft a speculative continuation if the device's in-flight window
+    /// has room (and it is not already drafting).  No-op at depth 1: the
+    /// window is full from `send_draft` until `apply_feedback`, so the
+    /// pre-pipelining event sequence is preserved exactly.
+    fn try_pipeline_draft(&mut self, d: usize, now: f64) -> Result<()> {
+        let dev = &mut self.devices[d];
+        if dev.active.is_none() || dev.drafting {
+            return Ok(());
+        }
+        if dev.in_flight_len() >= dev.pipeline_window() {
+            return Ok(());
+        }
+        if let Some(draft_s) = dev.begin_batch()? {
+            self.events.push(now + draft_s, d, EventKind::DraftDone);
+        }
+        Ok(())
+    }
+
     /// Admission loop: start coalesced verify calls while slots are free.
     fn start_verifies(&mut self, now: f64) -> Result<()> {
+        // adaptive grants divide the verifier's bit pool fairly across
+        // the sessions being served right now
+        let live = self.devices.iter().filter(|dev| dev.active.is_some()).count();
         while self.verifier.slot_free() {
             let batch = self.verifier.take_batch();
             // feedback extensions reflect the backlog left *behind* this
             // call: what is still queued is what the edges should react to
-            let exts = self.verifier.feedback_exts();
+            let exts = self.verifier.feedback_exts(live);
             let mut total_window = 0usize;
             for &dev in &batch {
                 total_window += self.devices[dev].verify_now(exts.clone())?;
@@ -462,13 +508,18 @@ impl FleetSim {
         let (mut completed, mut tokens) = (0usize, 0u64);
         let (mut drafted, mut accepted) = (0u64, 0u64);
         let mut downlink_bits = 0u64;
+        let mut discarded_batches = 0u64;
         for dev in &devices {
             let st = &dev.stats;
             completed += st.completed;
             tokens += st.tokens;
-            drafted += st.drafted_tokens;
+            // discarded speculation was never verified: like the
+            // estimator's acceptance EWMA, the fleet-wide acceptance
+            // rate covers verified drafts only
+            drafted += st.drafted_tokens - st.discarded_tokens;
             accepted += st.accepted_tokens;
             downlink_bits += st.downlink_bits;
+            discarded_batches += st.discarded_batches;
             let label = policy_label(&dev.profile.policy, dev.profile.adaptive);
             let entry = by_policy.entry(label.clone()).or_insert((0, 0));
             entry.0 += st.rejected_batches;
@@ -480,6 +531,7 @@ impl FleetSim {
                 tokens: st.tokens,
                 batches: st.batches,
                 rejected_batches: st.rejected_batches,
+                discarded_batches: st.discarded_batches,
                 mean_latency_s: st.latency.mean(),
                 p99_latency_s: st.latency.p99(),
                 uplink_bits: st.uplink_bits,
@@ -491,6 +543,7 @@ impl FleetSim {
         metrics.inc("fleet.uplink_bits", uplink.ledger.bits);
         metrics.inc("fleet.downlink_bits", downlink_bits);
         metrics.inc("fleet.verify_calls", verifier.calls);
+        metrics.inc("fleet.discarded_batches", discarded_batches);
         FleetReport {
             devices: devices.len(),
             horizon_s: horizon,
@@ -505,6 +558,7 @@ impl FleetSim {
             verify_calls: verifier.calls,
             verify_mean_batch: verifier.mean_batch(),
             verify_utilization: verifier.utilization(horizon),
+            discarded_batches,
             rejection_by_policy: by_policy
                 .into_iter()
                 .map(|(k, (r, t))| (k, r, t))
@@ -669,6 +723,41 @@ mod tests {
             assert_eq!(d.knob_trace.len() as u64, d.batches, "device {}", d.id);
         }
         assert_eq!(report.metrics.counter("fleet.downlink_bits"), report.downlink_bits);
+    }
+
+    #[test]
+    fn pipelined_fleet_completes_and_accounts_every_batch() {
+        let profile = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 16,
+            workload: Workload::ClosedLoop { think_s: 0.01 },
+            pipeline_depth: 3,
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(4, profile);
+        cfg.requests_per_device = 3;
+        cfg.seed = 11;
+        let report = FleetSim::new(cfg).run().unwrap();
+        assert_eq!(report.completed, 12, "4 devices x 3 requests");
+        assert!(report.tokens >= 12 * 16, "every request fills its budget");
+        for d in &report.per_device {
+            assert_eq!(
+                d.knob_trace.len() as u64,
+                d.batches + d.discarded_batches,
+                "device {}: every drafted batch is acked exactly once",
+                d.id
+            );
+        }
+        assert_eq!(
+            report.metrics.counter("fleet.discarded_batches"),
+            report.discarded_batches
+        );
+        let dev_batches: u64 = report.per_device.iter().map(|d| d.batches).sum();
+        assert_eq!(
+            report.metrics.counter("fleet.batches"),
+            dev_batches,
+            "the batches metric excludes discard acks"
+        );
     }
 
     #[test]

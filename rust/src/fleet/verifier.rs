@@ -13,7 +13,7 @@
 
 use std::collections::VecDeque;
 
-use crate::protocol::Ext;
+use crate::protocol::{fair_share_grant, Ext};
 
 /// Cloud service-time and admission parameters.
 #[derive(Clone, Copy, Debug)]
@@ -33,6 +33,16 @@ pub struct VerifierConfig {
     /// per-round uplink budget granted on congested feedback frames,
     /// bits (None: signal congestion only, grant nothing)
     pub grant_bits: Option<u32>,
+    /// adaptive grants: an aggregate uplink-bit pool per round that the
+    /// verifier divides fairly across live sessions — the grant each
+    /// congested feedback frame carries is `pool / live`, scaled down
+    /// further by `congestion_depth / backlog` once the queue grows past
+    /// the congestion threshold.  Overrides `grant_bits` when set,
+    /// turning the cloud into an actual admission controller instead of
+    /// a configured constant (ROADMAP "adaptive grants").
+    pub grant_pool_bits: Option<u32>,
+    /// floor for adaptive grants, bits (keeps starved sessions alive)
+    pub grant_min_bits: u32,
 }
 
 impl Default for VerifierConfig {
@@ -46,6 +56,8 @@ impl Default for VerifierConfig {
             per_token_s: 2.0e-4,
             congestion_depth: 4,
             grant_bits: None,
+            grant_pool_bits: None,
+            grant_min_bits: 64,
         }
     }
 }
@@ -95,16 +107,33 @@ impl CloudVerifier {
     /// now: when the remaining backlog is at/above `congestion_depth`,
     /// every feedback frame of the batch carries the congestion bit —
     /// and, when configured, an explicit uplink budget grant that
-    /// `BudgetAimd` consumes directly.
-    pub fn feedback_exts(&self) -> Vec<Ext> {
+    /// `BudgetAimd` consumes directly.  `live_sessions` is the number of
+    /// sessions currently being served (devices with an active request):
+    /// the adaptive grant pool is divided fairly across them.
+    pub fn feedback_exts(&self, live_sessions: usize) -> Vec<Ext> {
         let mut exts = Vec::new();
         if self.pending.len() >= self.cfg.congestion_depth {
             exts.push(Ext::Congestion(true));
-            if let Some(g) = self.cfg.grant_bits {
+            if let Some(g) = self.grant_for(live_sessions) {
                 exts.push(Ext::BudgetGrant(g));
             }
         }
         exts
+    }
+
+    /// The per-round uplink budget grant under the current load: the
+    /// fair share of the adaptive pool (scaled down by queue pressure
+    /// past the congestion threshold, floored at `grant_min_bits`), or
+    /// the configured constant, or nothing.
+    pub fn grant_for(&self, live_sessions: usize) -> Option<u32> {
+        let Some(pool) = self.cfg.grant_pool_bits else {
+            return self.cfg.grant_bits;
+        };
+        let depth = self.cfg.congestion_depth.max(1) as f64;
+        let backlog = self.pending.len() as f64;
+        // the deeper the backlog, the tighter the admission
+        let scale = if backlog > depth { depth / backlog } else { 1.0 };
+        Some(fair_share_grant(pool, live_sessions, self.cfg.grant_min_bits, scale))
     }
 
     /// Modeled service seconds for a call over `total_window_tokens`.
@@ -183,12 +212,12 @@ mod tests {
             grant_bits: Some(600),
             ..Default::default()
         });
-        assert!(v.feedback_exts().is_empty(), "idle queue: no extensions");
+        assert!(v.feedback_exts(1).is_empty(), "idle queue: no extensions");
         v.enqueue(0);
-        assert!(v.feedback_exts().is_empty(), "below depth");
+        assert!(v.feedback_exts(1).is_empty(), "below depth");
         v.enqueue(1);
         v.enqueue(2);
-        let exts = v.feedback_exts();
+        let exts = v.feedback_exts(1);
         assert!(exts.contains(&Ext::Congestion(true)));
         assert!(exts.contains(&Ext::BudgetGrant(600)));
         // without a configured grant only the bit rides
@@ -197,9 +226,40 @@ mod tests {
             grant_bits: None,
             ..Default::default()
         });
-        assert_eq!(bare.feedback_exts(), vec![Ext::Congestion(true)]);
+        assert_eq!(bare.feedback_exts(1), vec![Ext::Congestion(true)]);
         bare.enqueue(0);
-        assert_eq!(bare.feedback_exts(), vec![Ext::Congestion(true)]);
+        assert_eq!(bare.feedback_exts(4), vec![Ext::Congestion(true)]);
+    }
+
+    #[test]
+    fn adaptive_grants_divide_the_pool_across_live_sessions() {
+        let mut v = CloudVerifier::new(VerifierConfig {
+            congestion_depth: 2,
+            grant_bits: Some(9999), // pool overrides the constant
+            grant_pool_bits: Some(6000),
+            grant_min_bits: 100,
+            ..Default::default()
+        });
+        // fair share: pool / live sessions
+        assert_eq!(v.grant_for(1), Some(6000));
+        assert_eq!(v.grant_for(6), Some(1000));
+        assert_eq!(v.grant_for(0), Some(6000), "live floor of 1");
+        // the floor keeps starved sessions alive
+        assert_eq!(v.grant_for(100_000), Some(100));
+
+        // backlog past the congestion threshold tightens the grant
+        for d in 0..4 {
+            v.enqueue(d);
+        }
+        // backlog 4 > depth 2: share scaled by 2/4
+        assert_eq!(v.grant_for(6), Some(500));
+        let exts = v.feedback_exts(6);
+        assert!(exts.contains(&Ext::Congestion(true)));
+        assert!(exts.contains(&Ext::BudgetGrant(500)));
+
+        // draining the queue relaxes the grant again
+        v.take_batch();
+        assert!(v.grant_for(6).unwrap() >= 500);
     }
 
     #[test]

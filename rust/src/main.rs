@@ -80,6 +80,11 @@ fn policy_opts(a: Args) -> Args {
             "0",
             "AIMD wire-bits-per-round target (0 = use --budget)",
         )
+        .opt(
+            "pipeline-depth",
+            "1",
+            "unacknowledged drafts in flight (1 = alternating v2, >=2 pipelines via v3)",
+        )
         .opt("uplink-bps", "1000000", "uplink bandwidth, bits/s")
         .opt("downlink-bps", "0", "downlink bandwidth, bits/s (0 = 10x uplink)")
         .opt("rtt-ms", "20", "round-trip propagation, milliseconds")
@@ -129,6 +134,14 @@ fn link_from(a: &Args) -> Result<LinkConfig> {
     })
 }
 
+fn parse_pipeline_depth(a: &Args) -> Result<usize> {
+    let depth = a.get_usize("pipeline-depth").map_err(|e| anyhow!(e))?;
+    if depth == 0 {
+        bail!("--pipeline-depth must be >= 1");
+    }
+    Ok(depth)
+}
+
 fn session_cfg(a: &Args, max_new: usize) -> Result<SessionConfig> {
     Ok(SessionConfig {
         policy: parse_policy(a)?,
@@ -139,6 +152,7 @@ fn session_cfg(a: &Args, max_new: usize) -> Result<SessionConfig> {
         seed: a.get_u64("seed").map_err(|e| anyhow!(e))?,
         timing: TimingMode::Measured,
         adaptive: parse_adaptive(a)?,
+        pipeline_depth: parse_pipeline_depth(a)?,
         ..Default::default()
     })
 }
@@ -182,6 +196,12 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     println!("{}", decode(&res.tokens[res.prompt_len..]));
     if adaptive != AdaptiveMode::Off {
         println!("--- control plane: {}", sess.control.describe());
+    }
+    if res.pipeline_depth > 1 {
+        println!(
+            "--- pipelining: depth {} | {} stale speculative batches discarded",
+            res.pipeline_depth, res.discarded_batches
+        );
     }
     println!(
         "--- {}: {} tokens in {} batches | latency {:.3}s ({:.1} ms/tok) \
@@ -324,6 +344,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         downlink_bps: link.downlink_bps,
         workload,
         adaptive: parse_adaptive(&a)?,
+        pipeline_depth: parse_pipeline_depth(&a)?,
         ..Default::default()
     };
     // --heterogeneous and --mixed compose: vary the hardware, then

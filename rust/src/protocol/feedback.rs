@@ -22,6 +22,10 @@
 //! * `BudgetGrant` (tag 2, 24 bits) — an explicit per-round uplink budget
 //!   grant in bits; `BudgetAimd` caps its target at the grant until a
 //!   feedback frame arrives without one.
+//! * `Ack` (tag 3, 25 bits) — protocol-v3 pipelining: the sequence
+//!   number and speculation epoch of the draft this verdict answers,
+//!   plus a discard bit for stale drafts the cloud never verified.
+//!   v2 peers skip it like any unknown TLV.
 //!
 //! Extension bits ride the downlink ledger like every other wire bit, so
 //! `downlink_bits` stays exact.
@@ -38,11 +42,41 @@ pub const MAX_EXTS: usize = (1 << EXT_COUNT_BITS) - 1;
 /// Widest extension value, bits (fits comfortably in a u64 read).
 pub const MAX_EXT_WIDTH: usize = 56;
 
+/// Fair-share admission grant: `scale * pool / live` sessions, floored
+/// at `min_bits` and capped at the wire-representable maximum.  Shared
+/// by the fleet verifier (which passes a backlog-pressure `scale`) and
+/// the TCP wire server (`scale = 1.0` — the threaded server has no
+/// verify queue to measure), so the two admission controllers cannot
+/// drift apart on the arithmetic.
+pub fn fair_share_grant(pool: u32, live_sessions: usize, min_bits: u32, scale: f64) -> u32 {
+    let floor = min_bits.min(MAX_GRANT_BITS) as f64;
+    let share = pool as f64 / live_sessions.max(1) as f64 * scale;
+    share.floor().clamp(floor, MAX_GRANT_BITS as f64) as u32
+}
+
 pub const EXT_TAG_CONGESTION: u8 = 1;
 pub const EXT_TAG_BUDGET_GRANT: u8 = 2;
+/// Sequence acknowledgement for pipelined sessions (protocol v3).
+pub const EXT_TAG_ACK: u8 = 3;
 const GRANT_WIDTH: usize = 24;
+/// Ack layout: | seq:16 | epoch:8 | discard:1 | (low to high bits).
+const ACK_WIDTH: usize = 25;
 /// Largest representable budget grant, bits per round.
 pub const MAX_GRANT_BITS: u32 = (1 << GRANT_WIDTH) - 1;
+
+/// Sequence acknowledgement riding a feedback frame (protocol v3
+/// pipelining): which draft this verdict answers, the speculation epoch
+/// the cloud saw on it, and whether the frame was discarded as stale
+/// (conditioned on a branch a rejection already killed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqAck {
+    /// sequence number of the acknowledged draft (wraps at u16)
+    pub seq: u16,
+    /// speculation epoch the draft carried (wraps at u8)
+    pub epoch: u8,
+    /// true: the cloud discarded the draft unverified (stale epoch)
+    pub discard: bool,
+}
 
 /// One TLV extension on a v2 feedback frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +85,8 @@ pub enum Ext {
     Congestion(bool),
     /// Explicit per-round uplink budget grant, bits (cloud -> edge).
     BudgetGrant(u32),
+    /// Sequence ack for pipelined sessions (protocol v3).
+    Ack(SeqAck),
     /// Well-formed extension with an unrecognized tag: skipped by
     /// consumers, preserved bit-exactly on re-encode.
     Unknown { tag: u8, width: u8, value: u64 },
@@ -66,6 +102,11 @@ impl Ext {
                     return Err(format!("budget grant {g} exceeds {MAX_GRANT_BITS} bits"));
                 }
                 Ok((EXT_TAG_BUDGET_GRANT, GRANT_WIDTH as u8, g as u64))
+            }
+            Ext::Ack(a) => {
+                let value =
+                    a.seq as u64 | ((a.epoch as u64) << 16) | ((a.discard as u64) << 24);
+                Ok((EXT_TAG_ACK, ACK_WIDTH as u8, value))
             }
             Ext::Unknown { tag, width, value } => {
                 if tag as usize >= 1 << EXT_TAG_BITS {
@@ -87,6 +128,7 @@ impl Ext {
         let width = match *self {
             Ext::Congestion(_) => 1,
             Ext::BudgetGrant(_) => GRANT_WIDTH,
+            Ext::Ack(_) => ACK_WIDTH,
             Ext::Unknown { width, .. } => width as usize,
         };
         EXT_TAG_BITS + EXT_WIDTH_BITS + width
@@ -136,6 +178,25 @@ impl FeedbackV2 {
         })
     }
 
+    /// The sequence ack, if one rode this frame (pipelined sessions).
+    pub fn ack(&self) -> Option<SeqAck> {
+        self.exts.iter().find_map(|e| match e {
+            Ext::Ack(a) => Some(*a),
+            _ => None,
+        })
+    }
+
+    /// A discard verdict for a stale sequenced draft: nothing accepted,
+    /// nothing resampled — the edge just retires the sequence number.
+    pub fn discard(batch_id: u32, seq: u16, epoch: u8) -> FeedbackV2 {
+        FeedbackV2 {
+            batch_id,
+            accepted: 0,
+            new_token: 0,
+            exts: vec![Ext::Ack(SeqAck { seq, epoch, discard: true })],
+        }
+    }
+
     /// Body size on the wire, bits (excluding the protocol frame header).
     pub fn body_bits(&self) -> usize {
         32 + 16 + 16 + EXT_COUNT_BITS + self.exts.iter().map(Ext::bit_len).sum::<usize>()
@@ -180,6 +241,12 @@ impl FeedbackV2 {
                 EXT_TAG_BUDGET_GRANT => {
                     return Err(format!("budget-grant extension must be {GRANT_WIDTH} bits"))
                 }
+                EXT_TAG_ACK if width == ACK_WIDTH => Ext::Ack(SeqAck {
+                    seq: (value & 0xFFFF) as u16,
+                    epoch: ((value >> 16) & 0xFF) as u8,
+                    discard: (value >> 24) & 1 == 1,
+                }),
+                EXT_TAG_ACK => return Err(format!("ack extension must be {ACK_WIDTH} bits")),
                 t => Ext::Unknown { tag: t, width: width as u8, value },
             });
         }
@@ -231,6 +298,46 @@ mod tests {
         assert!(back.congestion());
         assert_eq!(back.grant(), Some(4321));
         assert_eq!(fb.body_bits(), 68 + (4 + 6 + 1) + (4 + 6 + 24));
+    }
+
+    #[test]
+    fn ack_extension_roundtrips_at_every_corner() {
+        // wraparound corners on both fields, discard both ways
+        for (seq, epoch, discard) in [
+            (0u16, 0u8, false),
+            (u16::MAX, u8::MAX, true),
+            (u16::MAX, 0, false),
+            (1, 255, true),
+        ] {
+            let fb = FeedbackV2 {
+                batch_id: 7,
+                accepted: 3,
+                new_token: 11,
+                exts: vec![Ext::Ack(SeqAck { seq, epoch, discard })],
+            };
+            let back = roundtrip(&fb);
+            assert_eq!(back, fb);
+            assert_eq!(back.ack(), Some(SeqAck { seq, epoch, discard }));
+        }
+        let discard = FeedbackV2::discard(9, 500, 3);
+        assert_eq!(discard.accepted, 0);
+        let back = roundtrip(&discard);
+        assert_eq!(back.ack(), Some(SeqAck { seq: 500, epoch: 3, discard: true }));
+        assert_eq!(back.body_bits(), 68 + (4 + 6 + 25));
+    }
+
+    #[test]
+    fn ack_extension_wrong_width_rejected() {
+        // a 24-bit TLV under the ack tag is malformed, not an Unknown
+        let mut w = BitWriter::new();
+        w.write_bits_u64(0, 64); // core
+        w.write_bits_u64(1, 4); // one ext
+        w.write_bits_u64(EXT_TAG_ACK as u64, 4);
+        w.write_bits_u64(24, 6); // wrong width
+        w.write_bits_u64(0, 24);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(FeedbackV2::decode_from(&mut r).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   Draft    (2): the v1 draft-frame layout, bit-for-bit (see codec::frame)
 //!   Feedback (3): the v2 feedback layout (see protocol::feedback)
 //!   Control  (4): | op:4 | op-specific |   (Prompt: | len:16 | token:16 * len |)
+//!   DraftSeq (5): | seq:16 | epoch:8 | v1 draft body |   (protocol v3 only)
 //! ```
 //!
 //! The `Draft` body *is* the v1 byte layout: because the header is
@@ -18,13 +19,20 @@
 //! The `Hello`/`HelloAck` exchange negotiates what v1 assumed out of
 //! band: protocol version, vocabulary size, lattice resolution ell, bit
 //! scheme, and the fixed K of the FixedK scheme.
+//!
+//! Protocol v3 adds `DraftSeq`: the v1 draft body prefixed with a 16-bit
+//! wrapping sequence number and an 8-bit speculation epoch, so an edge
+//! may pipeline several drafts ahead of feedback (see
+//! `coordinator::session`).  A codec only speaks `DraftSeq` once the
+//! handshake lands on v3 — a v2 peer negotiates the session down and the
+//! edge falls back to strict alternation.
 
 use crate::codec::{DraftFrame, FrameCodec, TokenBits};
 use crate::sqs::bits::SchemeBits;
 use crate::util::bitio::{BitReader, BitWriter};
 
 use super::feedback::FeedbackV2;
-use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2};
+use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2, PROTOCOL_V3};
 
 /// Self-describing per-frame header: 4-bit version + 4-bit type tag.
 pub const FRAME_HEADER_BITS: usize = 8;
@@ -36,6 +44,10 @@ const TAG_HELLO_ACK: u64 = 1;
 const TAG_DRAFT: u64 = 2;
 const TAG_FEEDBACK: u64 = 3;
 const TAG_CONTROL: u64 = 4;
+const TAG_DRAFT_SEQ: u64 = 5;
+
+/// Extra bits a sequenced draft carries over a plain one (seq + epoch).
+pub const SEQ_PREFIX_BITS: usize = 16 + 8;
 
 const CONTROL_OP_BITS: usize = 4;
 const OP_PROMPT: u64 = 0;
@@ -79,6 +91,19 @@ pub enum Control {
     Bye,
 }
 
+/// A sequenced draft (protocol v3): the v1 draft body plus the wrapping
+/// sequence number and speculation epoch the pipelined session keys its
+/// in-flight ledger on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeqDraft {
+    /// wrapping sequence number (unique within any in-flight window)
+    pub seq: u16,
+    /// wrapping speculation epoch: bumped by every rejection, so the
+    /// cloud can discard drafts conditioned on a dead branch
+    pub epoch: u8,
+    pub frame: DraftFrame,
+}
+
 /// One protocol-v2 frame on the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -87,6 +112,8 @@ pub enum Frame {
     Draft(DraftFrame),
     Feedback(FeedbackV2),
     Control(Control),
+    /// Sequenced draft — protocol v3 pipelined sessions only.
+    DraftSeq(SeqDraft),
 }
 
 impl Frame {
@@ -97,6 +124,7 @@ impl Frame {
             Frame::Draft(_) => "draft",
             Frame::Feedback(_) => "feedback",
             Frame::Control(_) => "control",
+            Frame::DraftSeq(_) => "draft_seq",
         }
     }
 }
@@ -144,7 +172,9 @@ impl WireCodec {
         }
     }
 
-    /// Build the session codec from a successful handshake.
+    /// Build the session codec from a successful handshake.  The codec
+    /// adopts the acked version: a v3 ack unlocks sequenced drafts, a v2
+    /// ack keeps the session strictly alternating.
     pub fn negotiated(ack: &HelloAck) -> Result<WireCodec, String> {
         if !ack.ok {
             return Err("peer rejected the handshake".into());
@@ -155,14 +185,33 @@ impl WireCodec {
                 ack.version
             ));
         }
-        Ok(WireCodec::for_config(ack.vocab as usize, ack.ell, ack.scheme, ack.fixed_k as usize))
+        let mut wc =
+            WireCodec::for_config(ack.vocab as usize, ack.ell, ack.scheme, ack.fixed_k as usize);
+        wc.version = ack.version;
+        Ok(wc)
+    }
+
+    /// Switch the protocol version this codec stamps and accepts
+    /// (clamped to the supported range).  Both ends of an in-process
+    /// session share one codec, so a single call moves the session to
+    /// v3; TCP peers instead adopt the handshake's acked version.
+    pub fn set_version(&mut self, version: u8) {
+        self.version = version.clamp(MIN_SUPPORTED, MAX_SUPPORTED);
+    }
+
+    /// Does this codec speak protocol-v3 sequenced drafts?
+    pub fn pipelining(&self) -> bool {
+        self.version >= PROTOCOL_V3
     }
 
     pub fn has_payload_codec(&self) -> bool {
         self.payload.is_some()
     }
 
-    /// The Hello advertising this codec's payload parameters.
+    /// The Hello advertising this codec's payload parameters.  The top
+    /// of the advertised range is the codec's own version: an edge that
+    /// stayed on v2 (no pipelining) advertises 2..2 exactly as before,
+    /// while a pipelining edge advertises 2..3 and lets the peer pick.
     pub fn hello(&self) -> Result<Hello, String> {
         let p = self.payload.as_ref().ok_or("no payload config to advertise")?;
         if p.vocab > u32::MAX as usize || p.fixed_k > u16::MAX as usize {
@@ -173,7 +222,7 @@ impl WireCodec {
         }
         Ok(Hello {
             min_version: MIN_SUPPORTED,
-            max_version: MAX_SUPPORTED,
+            max_version: self.version.max(MIN_SUPPORTED),
             vocab: p.vocab as u32,
             ell: p.ell,
             scheme: p.scheme,
@@ -237,6 +286,26 @@ impl WireCodec {
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
                 p.encode_into(d, &mut w);
+            }
+            Frame::DraftSeq(sd) => {
+                if self.version < PROTOCOL_V3 {
+                    return Err(format!(
+                        "sequenced draft needs protocol v{PROTOCOL_V3}, session is v{}",
+                        self.version
+                    ));
+                }
+                w.write_bits_u64(TAG_DRAFT_SEQ, TAG_BITS);
+                w.write_bits_u64(sd.seq as u64, 16);
+                w.write_bits_u64(sd.epoch as u64, 8);
+                if sd.frame.tokens.len() > u8::MAX as usize {
+                    let n = sd.frame.tokens.len();
+                    return Err(format!("draft of {n} tokens overflows the 8-bit count"));
+                }
+                let p = self
+                    .payload
+                    .as_mut()
+                    .ok_or("draft frame before the handshake negotiated a codec")?;
+                p.encode_into(&sd.frame, &mut w);
             }
             Frame::Feedback(f) => {
                 w.write_bits_u64(TAG_FEEDBACK, TAG_BITS);
@@ -305,6 +374,21 @@ impl WireCodec {
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
                 Ok(Frame::Draft(p.decode_from(&mut r)?))
+            }
+            TAG_DRAFT_SEQ => {
+                if self.version < PROTOCOL_V3 {
+                    return Err(format!(
+                        "sequenced draft needs protocol v{PROTOCOL_V3}, session is v{}",
+                        self.version
+                    ));
+                }
+                let seq = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+                let epoch = r.read_bits_u64(8).map_err(|e| e.to_string())? as u8;
+                let p = self
+                    .payload
+                    .as_mut()
+                    .ok_or("draft frame before the handshake negotiated a codec")?;
+                Ok(Frame::DraftSeq(SeqDraft { seq, epoch, frame: p.decode_from(&mut r)? }))
             }
             TAG_FEEDBACK => Ok(Frame::Feedback(FeedbackV2::decode_from(&mut r)?)),
             TAG_CONTROL => {
@@ -411,6 +495,47 @@ mod tests {
         }
         let back = wc.decode(&v2_bytes).unwrap();
         assert_eq!(back, Frame::Draft(frame));
+    }
+
+    #[test]
+    fn sequenced_draft_roundtrips_at_v3_only() {
+        let mut g = Gen { rng: Pcg64::new(11, 2) };
+        let frame = sample_draft(&mut g, 64, 4, 100, 3);
+        let sd = SeqDraft { seq: u16::MAX, epoch: 200, frame };
+
+        // a v2 codec must refuse to encode or decode sequenced drafts
+        let mut v2 = codec();
+        assert!(v2.encode(&Frame::DraftSeq(sd.clone())).is_err());
+
+        let mut v3 = codec();
+        v3.set_version(PROTOCOL_V3);
+        assert!(v3.pipelining());
+        let (bytes, bits) = v3.encode(&Frame::DraftSeq(sd.clone())).unwrap();
+        // a sequenced draft costs exactly the seq prefix over a plain one
+        let (_, plain_bits) = v3.encode(&Frame::Draft(sd.frame.clone())).unwrap();
+        assert_eq!(bits, plain_bits + SEQ_PREFIX_BITS);
+        assert_eq!(v3.decode(&bytes).unwrap(), Frame::DraftSeq(sd));
+        assert!(v2.decode(&bytes).is_err(), "v2 peers cannot read v3 drafts");
+    }
+
+    #[test]
+    fn hello_advertises_the_codec_version() {
+        let wc = codec();
+        assert_eq!(wc.hello().unwrap().max_version, PROTOCOL_V2, "v2 codec: 2..2 as before");
+        let mut v3 = codec();
+        v3.set_version(PROTOCOL_V3);
+        let h = v3.hello().unwrap();
+        assert_eq!(h.min_version, MIN_SUPPORTED);
+        assert_eq!(h.max_version, PROTOCOL_V3);
+        // negotiated codecs adopt the acked version
+        let ack = crate::protocol::negotiate(&h).unwrap();
+        assert_eq!(ack.version, PROTOCOL_V3);
+        let wc = WireCodec::negotiated(&ack).unwrap();
+        assert!(wc.pipelining());
+        // a v2-only peer's ack keeps the session alternating
+        let ack2 = HelloAck { version: PROTOCOL_V2, ..ack };
+        let wc2 = WireCodec::negotiated(&ack2).unwrap();
+        assert!(!wc2.pipelining());
     }
 
     #[test]

@@ -28,9 +28,10 @@ pub mod feedback;
 pub mod frame;
 pub mod transport;
 
-pub use feedback::{Ext, FeedbackV2, MAX_GRANT_BITS};
+pub use feedback::{fair_share_grant, Ext, FeedbackV2, SeqAck, MAX_GRANT_BITS};
 pub use frame::{
-    Control, Frame, Hello, HelloAck, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS, HELLO_BITS,
+    Control, Frame, Hello, HelloAck, SeqDraft, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS,
+    HELLO_BITS, SEQ_PREFIX_BITS,
 };
 pub use transport::{
     Delivery, Direction, LinkTransport, SharedPort, StreamTransport, Transport,
@@ -38,11 +39,15 @@ pub use transport::{
 
 /// The legacy headerless layout (codec::FrameCodec alone).
 pub const PROTOCOL_V1: u8 = 1;
-/// Current protocol: versioned headers, handshake, extensible feedback.
+/// Versioned headers, handshake, extensible feedback; strictly
+/// alternating (one draft in flight per session).
 pub const PROTOCOL_V2: u8 = 2;
+/// v2 plus pipelined sessions: sequenced drafts (`Frame::DraftSeq`),
+/// per-seq feedback acks (`Ext::Ack`), and speculation epochs.
+pub const PROTOCOL_V3: u8 = 3;
 /// Version range this build speaks.
 pub const MIN_SUPPORTED: u8 = PROTOCOL_V2;
-pub const MAX_SUPPORTED: u8 = PROTOCOL_V2;
+pub const MAX_SUPPORTED: u8 = PROTOCOL_V3;
 
 /// Protocol-level cap on the lattice resolution a peer may propose.
 /// The binomial tables behind the codec are dense in ell, so an
@@ -110,7 +115,7 @@ mod tests {
     fn negotiate_accepts_a_valid_hello() {
         let ack = negotiate(&hello()).unwrap();
         assert!(ack.ok);
-        assert_eq!(ack.version, PROTOCOL_V2);
+        assert_eq!(ack.version, MAX_SUPPORTED);
         assert_eq!(ack.vocab, 256);
         assert_eq!(ack.fixed_k, 8);
         let wc = WireCodec::negotiated(&ack).unwrap();
@@ -123,6 +128,16 @@ mod tests {
         // a future peer speaking v2..v7 still lands on our v2
         let h = Hello { min_version: 2, max_version: 7, ..hello() };
         assert_eq!(negotiate(&h).unwrap().version, MAX_SUPPORTED);
+    }
+
+    #[test]
+    fn negotiate_lands_a_v2_only_peer_on_v2() {
+        // interop: an alternating-only peer keeps the session at v2, so
+        // the pipelining side must fall back to one draft in flight
+        let h = Hello { min_version: PROTOCOL_V2, max_version: PROTOCOL_V2, ..hello() };
+        let ack = negotiate(&h).unwrap();
+        assert_eq!(ack.version, PROTOCOL_V2);
+        assert!(!WireCodec::negotiated(&ack).unwrap().pipelining());
     }
 
     #[test]

@@ -83,18 +83,30 @@ pub trait Transport {
     fn ledger(&self, dir: Direction) -> (u64, u64);
 }
 
-/// One-frame-in-flight pipe pair shared by the simulated transports:
-/// `send_frame` stores the encoded bytes, `recv_frame` drains them.
-/// The strict-alternation invariant (and its error messages) live here
-/// once, so the timing models cannot diverge on it.
-#[derive(Default)]
+/// Bounded FIFO pipe pair shared by the simulated transports:
+/// `send_frame` enqueues the encoded bytes, `recv_frame` dequeues and
+/// decodes them in order.  The window invariant (and its error messages)
+/// lives here once, so the timing models cannot diverge on it.  The
+/// default window of 1 is the strictly alternating v2 protocol; a
+/// pipelined v3 session widens it to its in-flight depth.
 struct InflightPipes {
-    up: Option<Vec<u8>>,
-    down: Option<Vec<u8>>,
+    up: std::collections::VecDeque<Vec<u8>>,
+    down: std::collections::VecDeque<Vec<u8>>,
+    window: usize,
+}
+
+impl Default for InflightPipes {
+    fn default() -> Self {
+        InflightPipes {
+            up: std::collections::VecDeque::new(),
+            down: std::collections::VecDeque::new(),
+            window: 1,
+        }
+    }
 }
 
 impl InflightPipes {
-    fn slot(&mut self, dir: Direction) -> &mut Option<Vec<u8>> {
+    fn slot(&mut self, dir: Direction) -> &mut std::collections::VecDeque<Vec<u8>> {
         match dir {
             Direction::Up => &mut self.up,
             Direction::Down => &mut self.down,
@@ -103,21 +115,25 @@ impl InflightPipes {
 
     /// The occupancy check, run *before* any channel time is charged.
     fn ensure_clear(&mut self, dir: Direction) -> Result<()> {
-        if self.slot(dir).is_some() {
-            bail!("{dir:?} frame already in flight (protocol is strictly alternating)");
+        let window = self.window;
+        if self.slot(dir).len() >= window {
+            if window == 1 {
+                bail!("{dir:?} frame already in flight (protocol is strictly alternating)");
+            }
+            bail!("{dir:?} pipeline window full ({window} frames in flight)");
         }
         Ok(())
     }
 
     fn store(&mut self, dir: Direction, bytes: Vec<u8>) {
-        debug_assert!(self.slot(dir).is_none());
-        *self.slot(dir) = Some(bytes);
+        debug_assert!(self.slot(dir).len() < self.window);
+        self.slot(dir).push_back(bytes);
     }
 
     fn take(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame> {
         let bytes = self
             .slot(dir)
-            .take()
+            .pop_front()
             .ok_or_else(|| anyhow!("no {dir:?} frame in flight"))?;
         codec.decode(&bytes).map_err(|e| anyhow!("frame decode: {e}"))
     }
@@ -133,6 +149,12 @@ pub struct LinkTransport {
 impl LinkTransport {
     pub fn new(link: SimulatedLink) -> LinkTransport {
         LinkTransport { link, pipes: InflightPipes::default() }
+    }
+
+    /// Widen the in-flight window to `frames` per direction (pipelined
+    /// v3 sessions; 1 = the strictly alternating default).
+    pub fn set_window(&mut self, frames: usize) {
+        self.pipes.window = frames.max(1);
     }
 }
 
@@ -200,6 +222,12 @@ impl SharedPort {
             up: (0, 0),
             down: (0, 0),
         }
+    }
+
+    /// Widen the in-flight window to `frames` per direction (pipelined
+    /// v3 sessions; 1 = the strictly alternating default).
+    pub fn set_window(&mut self, frames: usize) {
+        self.pipes.window = frames.max(1);
     }
 }
 
@@ -366,6 +394,29 @@ mod tests {
         assert!(tr.send_frame(Direction::Up, &f, &mut wc, 0.0).is_err());
         // the other direction is an independent pipe
         tr.send_frame(Direction::Down, &f, &mut wc, 0.0).unwrap();
+    }
+
+    #[test]
+    fn widened_window_admits_a_pipeline_and_preserves_fifo_order() {
+        let mut tr = LinkTransport::new(SimulatedLink::new(LinkConfig::default(), 0));
+        tr.set_window(3);
+        let mut wc = wire();
+        let frames = [
+            Frame::Feedback(FeedbackV2::plain(0, 0, 0)),
+            Frame::Feedback(FeedbackV2::plain(1, 1, 1)),
+            Frame::Control(Control::Bye),
+        ];
+        for f in &frames {
+            tr.send_frame(Direction::Up, f, &mut wc, 0.0).unwrap();
+        }
+        // fourth frame overflows the 3-deep window
+        assert!(tr
+            .send_frame(Direction::Up, &Frame::Control(Control::Bye), &mut wc, 0.0)
+            .is_err());
+        for f in &frames {
+            assert_eq!(&tr.recv_frame(Direction::Up, &mut wc).unwrap(), f, "FIFO order");
+        }
+        assert!(tr.recv_frame(Direction::Up, &mut wc).is_err(), "pipe drained");
     }
 
     #[test]

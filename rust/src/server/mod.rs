@@ -86,6 +86,11 @@ pub fn parse_request(line: &str) -> Result<(Vec<u16>, SessionConfig)> {
         temp: j.get("temp").and_then(|x| x.as_f64()).unwrap_or(0.8) as f32,
         max_new_tokens: j.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(32),
         seed: j.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+        pipeline_depth: j
+            .get("pipeline_depth")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(1)
+            .max(1),
         ..Default::default()
     };
     Ok((encode(prompt_s), cfg))
@@ -191,6 +196,8 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
                             ("uplink_bits", Json::Num(res.uplink_bits as f64)),
                             ("downlink_bits", Json::Num(res.downlink_bits as f64)),
                             ("mean_k", Json::Num(res.mean_k())),
+                            ("pipeline_depth", Json::Num(res.pipeline_depth as f64)),
+                            ("discarded_batches", Json::Num(res.discarded_batches as f64)),
                         ])
                     }
                 }

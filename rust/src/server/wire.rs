@@ -1,14 +1,17 @@
-//! Protocol-v2 TCP endpoint: the paper's edge–cloud split over a real
-//! socket instead of a simulated link.
+//! Protocol-v2/v3 TCP endpoint: the paper's edge–cloud split over a
+//! real socket instead of a simulated link.
 //!
 //! The JSON front-end (`server::serve`) runs the *whole* SD loop
 //! server-side and is a text API.  This endpoint is the wire protocol
 //! itself: a remote edge connects, handshakes (`Hello`/`HelloAck`),
 //! initializes its context with `Control::Prompt`, then streams `Draft`
-//! frames and receives v2 `Feedback` frames until `Control::Bye`.  Both
-//! ends speak through [`StreamTransport`] — length-prefixed frames over
-//! the stream — so the server has no codec calls of its own, and the
-//! per-connection ledgers count the actual bytes on the wire.
+//! frames and receives v2 `Feedback` frames until `Control::Bye`.  A
+//! client that negotiated protocol v3 may instead keep a window of
+//! sequenced `DraftSeq` frames on the stream (`pipeline_depth >= 2`);
+//! the server verifies them in stream order, discarding stale epochs.
+//! Both ends speak through [`StreamTransport`] — length-prefixed frames
+//! over the stream — so the server has no codec calls of its own, and
+//! the per-connection ledgers count the actual bytes on the wire.
 //!
 //! The downlink is an active control channel: when the number of live
 //! sessions reaches `congestion_depth`, every feedback frame carries the
@@ -19,6 +22,7 @@
 //! test suite does; swapping in the PJRT target is a backend change, not
 //! a protocol one.
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -32,8 +36,8 @@ use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticTarget, SyntheticWorld};
 use crate::model::DraftLm;
 use crate::protocol::{
-    negotiate, Control, Direction, Ext, Frame, HelloAck, StreamTransport, Transport, WireCodec,
-    MAX_SUPPORTED,
+    fair_share_grant, negotiate, Control, Direction, Ext, FeedbackV2, Frame, HelloAck, SeqAck,
+    SeqDraft, StreamTransport, Transport, WireCodec, MAX_SUPPORTED, PROTOCOL_V3,
 };
 use crate::sqs::Policy;
 
@@ -61,6 +65,15 @@ pub struct WireServerConfig {
     pub congestion_depth: usize,
     /// per-round uplink budget granted on congested feedback frames
     pub grant_bits: Option<u32>,
+    /// adaptive grants: an aggregate uplink-bit pool divided fairly
+    /// across live sessions (overrides `grant_bits` when set).  Same
+    /// fair-share rule as `fleet::VerifierConfig::grant_pool_bits`,
+    /// minus the fleet verifier's backlog scaling — the threaded server
+    /// serves each session synchronously and has no verify queue whose
+    /// depth could be measured.
+    pub grant_pool_bits: Option<u32>,
+    /// floor for adaptive grants, bits
+    pub grant_min_bits: u32,
     pub seed: u64,
 }
 
@@ -78,9 +91,29 @@ impl Default for WireServerConfig {
             max_conns: None,
             congestion_depth: 2,
             grant_bits: None,
+            grant_pool_bits: None,
+            grant_min_bits: 64,
             seed: 0,
         }
     }
+}
+
+/// Feedback extensions for the current load: congestion bit at/above
+/// `congestion_depth` live sessions, plus the grant — the fair share of
+/// the adaptive pool when one is configured, else the constant.
+fn feedback_exts(cfg: &WireServerConfig, live: usize) -> Vec<Ext> {
+    let mut exts = Vec::new();
+    if live >= cfg.congestion_depth {
+        exts.push(Ext::Congestion(true));
+        let grant = match cfg.grant_pool_bits {
+            Some(pool) => Some(fair_share_grant(pool, live, cfg.grant_min_bits, 1.0)),
+            None => cfg.grant_bits,
+        };
+        if let Some(g) = grant {
+            exts.push(Ext::BudgetGrant(g));
+        }
+    }
+    exts
 }
 
 /// A bound wire endpoint (bind first so tests can read the OS-assigned
@@ -206,6 +239,8 @@ fn serve_conn(
     let mut cloud = CloudNode::new(target, seed ^ 0xC);
     cloud.start(&prompt)?;
     let mut prev = *prompt.last().unwrap();
+    // protocol-v3 pipelining: rejections the verify side has produced
+    let mut cloud_epoch: u8 = 0;
 
     // ---- draft / feedback rounds ------------------------------------
     loop {
@@ -213,14 +248,31 @@ fn serve_conn(
             Frame::Draft(frame) => {
                 let verdict = cloud.verify_with_prev(&frame, prev, cfg.temp)?;
                 prev = *verdict.committed.last().unwrap();
-                let mut exts = Vec::new();
-                if active.load(Ordering::SeqCst) >= cfg.congestion_depth {
-                    exts.push(Ext::Congestion(true));
-                    if let Some(g) = cfg.grant_bits {
-                        exts.push(Ext::BudgetGrant(g));
-                    }
-                }
+                let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
                 let fb = verdict.feedback_v2(exts);
+                tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+            }
+            Frame::DraftSeq(sd) => {
+                if sd.epoch != cloud_epoch {
+                    // stale: drafted on a branch a rejection already
+                    // killed — discard unverified, ack the seq so the
+                    // edge's in-flight ledger drains.  Congestion/grant
+                    // extensions still ride the discard (as on the fleet
+                    // path): dropping them would erase the AIMD client's
+                    // standing signal mid-congestion.
+                    let mut fb = FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch);
+                    fb.exts.extend(feedback_exts(cfg, active.load(Ordering::SeqCst)));
+                    tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+                    continue;
+                }
+                let verdict = cloud.verify_pipelined(&sd.frame, prev, cfg.temp)?;
+                if verdict.rejected {
+                    cloud_epoch = cloud_epoch.wrapping_add(1);
+                }
+                prev = *verdict.committed.last().unwrap();
+                let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
+                let mut fb = verdict.feedback_v2(exts);
+                fb.exts.push(Ext::Ack(SeqAck { seq: sd.seq, epoch: sd.epoch, discard: false }));
                 tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
             }
             Frame::Control(Control::Bye) => break,
@@ -239,6 +291,9 @@ pub struct WireEdgeConfig {
     pub budget_bits: usize,
     pub max_batch_drafts: usize,
     pub adaptive: AdaptiveMode,
+    /// unacknowledged drafts kept in flight on the stream (1 = the v2
+    /// alternating client, bit-exact; >= 2 negotiates protocol v3)
+    pub pipeline_depth: usize,
     pub seed: u64,
 }
 
@@ -251,6 +306,7 @@ impl Default for WireEdgeConfig {
             budget_bits: 5000,
             max_batch_drafts: 15,
             adaptive: AdaptiveMode::Off,
+            pipeline_depth: 1,
             seed: 0,
         }
     }
@@ -274,6 +330,8 @@ pub struct WireRunReport {
     pub frame_bits: Vec<usize>,
     /// feedback frames that carried a budget grant
     pub grants_seen: usize,
+    /// speculative batches the server discarded as stale (pipelined)
+    pub discarded: usize,
 }
 
 impl WireRunReport {
@@ -304,54 +362,50 @@ impl<D: DraftLm> WireEdge<D> {
         if matches!(cfg.adaptive, AdaptiveMode::Aimd { .. }) {
             edge.use_adaptive_scheme();
         }
+        // a pipelining client advertises v3; the server's ack decides
+        if cfg.pipeline_depth > 1 {
+            edge.wire.set_version(PROTOCOL_V3);
+        }
         let control = ControlLoop::for_session(
             cfg.adaptive,
             cfg.policy,
             cfg.max_batch_drafts,
             cfg.budget_bits,
             vocab,
+            cfg.pipeline_depth,
         );
         WireEdge { edge, control, cfg }
     }
 
     /// Run one request over the transport: handshake, prompt, then the
     /// speculative loop until `max_new_tokens` tokens are committed.
+    /// With `pipeline_depth >= 2` (and a v3 server) the client keeps a
+    /// window of sequenced drafts on the stream instead of alternating.
     pub fn run<S: Read + Write>(
         &mut self,
         transport: &mut StreamTransport<S>,
         prompt: &[u16],
         max_new_tokens: usize,
     ) -> Result<WireRunReport> {
-        if prompt.is_empty() {
-            bail!("empty prompt");
+        if self.cfg.pipeline_depth.max(1) > 1 {
+            return self.run_pipelined(transport, prompt, max_new_tokens);
         }
-        self.edge.start(prompt)?;
+        let (hs_up, hs_down, _version) = self.handshake_and_prompt(transport, prompt)?;
+        self.run_alternating(transport, prompt, max_new_tokens, hs_up, hs_down)
+    }
 
-        // ---- handshake ----------------------------------------------
-        let hello = self.edge.wire.hello().map_err(|e| anyhow!("handshake: {e}"))?;
-        let d_hello =
-            transport.send_frame(Direction::Up, &Frame::Hello(hello), &mut self.edge.wire, 0.0)?;
-        let ack = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
-            Frame::HelloAck(a) => a,
-            other => bail!("expected HelloAck, got {}", other.name()),
-        };
-        let (_, hs_down) = transport.ledger(Direction::Down);
-        if !ack.ok {
-            bail!("server rejected the handshake");
-        }
-        if !self.edge.wire.matches(&ack) {
-            bail!("server negotiated a different codec config");
-        }
-
-        // ---- prompt -------------------------------------------------
-        transport.send_frame(
-            Direction::Up,
-            &Frame::Control(Control::Prompt(prompt.to_vec())),
-            &mut self.edge.wire,
-            0.0,
-        )?;
-
-        // ---- speculative loop ---------------------------------------
+    /// The strictly alternating (v2) loop, entered after the handshake
+    /// and prompt: one draft in flight, bonus token on full accept.
+    /// Also the fallback a pipelining client takes when the server
+    /// negotiated the session down to v2.
+    fn run_alternating<S: Read + Write>(
+        &mut self,
+        transport: &mut StreamTransport<S>,
+        prompt: &[u16],
+        max_new_tokens: usize,
+        hs_up: u64,
+        hs_down: u64,
+    ) -> Result<WireRunReport> {
         let mut seq = prompt.to_vec();
         let mut frame_bits = Vec::new();
         let mut grants_seen = 0usize;
@@ -397,6 +451,7 @@ impl<D: DraftLm> WireEdge<D> {
                 queue_wait_s: 0.0,
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
+                discarded: false,
             });
         }
         let _ = transport.send_frame(
@@ -413,11 +468,204 @@ impl<D: DraftLm> WireEdge<D> {
             batches: frame_bits.len(),
             uplink_bits: up_bits,
             downlink_bits: down_bits,
-            handshake_uplink_bits: d_hello.bits as u64,
+            handshake_uplink_bits: hs_up,
             handshake_downlink_bits: hs_down,
             frame_bits,
             grants_seen,
+            discarded: 0,
             tokens: seq,
+        })
+    }
+
+    /// Handshake + prompt setup shared by the alternating and pipelined
+    /// clients: start the edge context, run Hello/HelloAck (adopting the
+    /// acked version — a no-op for a v2-only client), and ship the
+    /// prompt.  Returns (Hello bits, downlink bits after the ack, acked
+    /// protocol version).
+    fn handshake_and_prompt<S: Read + Write>(
+        &mut self,
+        transport: &mut StreamTransport<S>,
+        prompt: &[u16],
+    ) -> Result<(u64, u64, u8)> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        self.edge.start(prompt)?;
+        let hello = self.edge.wire.hello().map_err(|e| anyhow!("handshake: {e}"))?;
+        let d_hello =
+            transport.send_frame(Direction::Up, &Frame::Hello(hello), &mut self.edge.wire, 0.0)?;
+        let ack = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+            Frame::HelloAck(a) => a,
+            other => bail!("expected HelloAck, got {}", other.name()),
+        };
+        let (_, hs_down) = transport.ledger(Direction::Down);
+        if !ack.ok {
+            bail!("server rejected the handshake");
+        }
+        if !self.edge.wire.matches(&ack) {
+            bail!("server negotiated a different codec config");
+        }
+        self.edge.wire.set_version(ack.version);
+        transport.send_frame(
+            Direction::Up,
+            &Frame::Control(Control::Prompt(prompt.to_vec())),
+            &mut self.edge.wire,
+            0.0,
+        )?;
+        Ok((d_hello.bits as u64, hs_down, ack.version))
+    }
+
+    /// The protocol-v3 pipelined client: up to `pipeline_depth`
+    /// sequenced drafts ride the stream unacknowledged; feedback is
+    /// consumed strictly in sequence order, a rejection rolls the edge
+    /// back and bumps the speculation epoch, and the server's discard
+    /// acks drain the stale remainder of the window.
+    fn run_pipelined<S: Read + Write>(
+        &mut self,
+        transport: &mut StreamTransport<S>,
+        prompt: &[u16],
+        max_new_tokens: usize,
+    ) -> Result<WireRunReport> {
+        let (hs_up, hs_down, _version) = self.handshake_and_prompt(transport, prompt)?;
+        if !self.edge.wire.pipelining() {
+            // a v2-only server negotiated the session down: run the one
+            // shared alternating loop instead of a pipelined window of 1
+            return self.run_alternating(transport, prompt, max_new_tokens, hs_up, hs_down);
+        }
+        let depth = self.cfg.pipeline_depth.max(1);
+
+        // ---- pipelined speculative loop -----------------------------
+        struct Pending {
+            seq: u16,
+            ctx_before: usize,
+            drafted: usize,
+            /// the draft tokens (committed locally on full accept)
+            tokens: Vec<u16>,
+            frame_bits: usize,
+        }
+        let mut seq_committed = prompt.to_vec();
+        let mut in_flight: VecDeque<Pending> = VecDeque::new();
+        let mut speculated = 0usize;
+        let mut next_seq: u16 = 0;
+        let mut edge_epoch: u8 = 0;
+        let mut frame_bits = Vec::new();
+        let mut grants_seen = 0usize;
+        let mut discarded = 0usize;
+        let mut window = depth;
+        let mut exhausted = false;
+
+        loop {
+            let produced = seq_committed.len() - prompt.len();
+            let can_draft = !exhausted
+                && in_flight.len() < window.clamp(1, depth)
+                && produced + speculated < max_new_tokens
+                && self.room_left(seq_committed.len() + speculated);
+            if can_draft {
+                let knobs = self.control.begin_batch();
+                window = knobs.pipeline_depth.max(1);
+                let ctx_before = self.edge.context_len();
+                let remaining = max_new_tokens - (produced + speculated);
+                let drafted = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
+                let l = drafted.frame.tokens.len();
+                if l == 0 {
+                    exhausted = true;
+                    continue;
+                }
+                let seq = next_seq;
+                next_seq = next_seq.wrapping_add(1);
+                let tokens: Vec<u16> = drafted.frame.tokens.iter().map(|t| t.token).collect();
+                let up_frame =
+                    Frame::DraftSeq(SeqDraft { seq, epoch: edge_epoch, frame: drafted.frame });
+                let d = transport.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, 0.0)?;
+                in_flight.push_back(Pending {
+                    seq,
+                    ctx_before,
+                    drafted: l,
+                    tokens,
+                    frame_bits: d.bits,
+                });
+                speculated += l;
+                continue;
+            }
+
+            let Some(p) = in_flight.pop_front() else { break };
+            speculated -= p.drafted;
+            let fb = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
+                Frame::Feedback(f) => f,
+                other => bail!("expected Feedback, got {}", other.name()),
+            };
+            if fb.grant().is_some() {
+                grants_seen += 1;
+            }
+            let ack = fb
+                .ack()
+                .ok_or_else(|| anyhow!("pipelined server sent feedback without a seq ack"))?;
+            if ack.seq != p.seq {
+                bail!("feedback acks seq {} while seq {} is oldest in flight", ack.seq, p.seq);
+            }
+
+            if ack.discard {
+                discarded += 1;
+                self.control.feedback(&BatchOutcome {
+                    drafted: p.drafted,
+                    accepted: 0,
+                    rejected: false,
+                    frame_bits: p.frame_bits,
+                    t_uplink_s: 0.0,
+                    queue_wait_s: 0.0,
+                    congestion: fb.congestion(),
+                    grant_bits: fb.grant(),
+                    discarded: true,
+                });
+                continue;
+            }
+
+            let accepted = fb.accepted as usize;
+            if accepted > p.drafted {
+                bail!("server accepted {accepted} of {} drafts", p.drafted);
+            }
+            self.edge.apply_feedback_pipelined(p.ctx_before, p.drafted, accepted, fb.new_token)?;
+            seq_committed.extend(p.tokens[..accepted].iter().copied());
+            if accepted < p.drafted {
+                // partial accept commits the resample (full accept gets
+                // no bonus token: the speculation already holds the rest)
+                seq_committed.push(fb.new_token);
+                edge_epoch = edge_epoch.wrapping_add(1);
+                exhausted = false; // rollback freed context room
+            }
+            frame_bits.push(p.frame_bits);
+            self.control.feedback(&BatchOutcome {
+                drafted: p.drafted,
+                accepted,
+                rejected: accepted < p.drafted,
+                frame_bits: p.frame_bits,
+                t_uplink_s: 0.0,
+                queue_wait_s: 0.0,
+                congestion: fb.congestion(),
+                grant_bits: fb.grant(),
+                discarded: false,
+            });
+        }
+        let _ = transport.send_frame(
+            Direction::Up,
+            &Frame::Control(Control::Bye),
+            &mut self.edge.wire,
+            0.0,
+        );
+
+        let (_, up_bits) = transport.ledger(Direction::Up);
+        let (_, down_bits) = transport.ledger(Direction::Down);
+        Ok(WireRunReport {
+            prompt_len: prompt.len(),
+            batches: frame_bits.len(),
+            uplink_bits: up_bits,
+            downlink_bits: down_bits,
+            handshake_uplink_bits: hs_up,
+            handshake_downlink_bits: hs_down,
+            frame_bits,
+            grants_seen,
+            discarded,
+            tokens: seq_committed,
         })
     }
 

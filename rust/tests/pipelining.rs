@@ -1,0 +1,342 @@
+//! Pipelined-session contract tests.
+//!
+//! (1) Regression: `pipeline_depth = 1` must be BIT-IDENTICAL to the
+//!     frozen protocol-v2 alternating loop — over the session engine
+//!     (vs `run_reference_lockstep`), the fleet simulator (explicit
+//!     depth 1 vs default profile), and the TCP wire path.
+//! (2) Pipelined runs stay a pure function of (config, seed).
+//! (3) On a high-RTT link, depth >= 2 reduces end-to-end latency by
+//!     overlapping draft compute with the verification round trip.
+//! (4) Stale/duplicate-feedback and discard accounting invariants hold.
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::control::AdaptiveMode;
+use sqs_sd::coordinator::session::{SdSession, SessionConfig, SessionResult, TimingMode};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+
+fn modeled() -> TimingMode {
+    TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 }
+}
+
+fn make_session(
+    world: &SyntheticWorld,
+    link: LinkConfig,
+    schedule: Vec<(u64, f64)>,
+    cfg: SessionConfig,
+) -> SdSession<SyntheticDraft, SyntheticTarget> {
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), cfg.max_batch_drafts, 1_000_000);
+    let link = SimulatedLink::new(link, cfg.seed).with_uplink_schedule(schedule);
+    SdSession::new(draft, target, link, cfg)
+}
+
+/// Field-by-field bit identity of two session results (floats via
+/// to_bits, so "close" is not good enough).
+fn assert_bit_identical(a: &SessionResult, b: &SessionResult, what: &str) {
+    assert_eq!(a.tokens, b.tokens, "{what}: tokens");
+    assert_eq!(a.prompt_len, b.prompt_len, "{what}: prompt_len");
+    assert_eq!(a.n_rej, b.n_rej, "{what}: n_rej");
+    assert_eq!(a.discarded_batches, b.discarded_batches, "{what}: discarded");
+    assert_eq!(a.uplink_bits, b.uplink_bits, "{what}: uplink_bits");
+    assert_eq!(a.downlink_bits, b.downlink_bits, "{what}: downlink_bits");
+    assert_eq!(a.handshake_uplink_bits, b.handshake_uplink_bits, "{what}: hs up");
+    assert_eq!(a.handshake_downlink_bits, b.handshake_downlink_bits, "{what}: hs down");
+    assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits(), "{what}: total");
+    assert_eq!(a.t_slm_s.to_bits(), b.t_slm_s.to_bits(), "{what}: t_slm");
+    assert_eq!(a.t_uplink_s.to_bits(), b.t_uplink_s.to_bits(), "{what}: t_uplink");
+    assert_eq!(a.t_llm_s.to_bits(), b.t_llm_s.to_bits(), "{what}: t_llm");
+    assert_eq!(a.t_downlink_s.to_bits(), b.t_downlink_s.to_bits(), "{what}: t_downlink");
+    assert_eq!(a.batches.len(), b.batches.len(), "{what}: batch count");
+    for (i, (x, y)) in a.batches.iter().zip(&b.batches).enumerate() {
+        assert_eq!(x.drafted, y.drafted, "{what}: batch {i} drafted");
+        assert_eq!(x.accepted, y.accepted, "{what}: batch {i} accepted");
+        assert_eq!(x.rejected, y.rejected, "{what}: batch {i} rejected");
+        assert_eq!(x.dist_bits, y.dist_bits, "{what}: batch {i} dist_bits");
+        assert_eq!(x.frame_bits, y.frame_bits, "{what}: batch {i} frame_bits");
+        assert_eq!(x.feedback_bits, y.feedback_bits, "{what}: batch {i} feedback_bits");
+        assert_eq!(x.knobs, y.knobs, "{what}: batch {i} knobs");
+        assert_eq!(x.mean_k.to_bits(), y.mean_k.to_bits(), "{what}: batch {i} mean_k");
+        assert_eq!(x.t_slm.to_bits(), y.t_slm.to_bits(), "{what}: batch {i} t_slm");
+        assert_eq!(x.t_uplink.to_bits(), y.t_uplink.to_bits(), "{what}: batch {i} t_uplink");
+        assert_eq!(x.t_llm.to_bits(), y.t_llm.to_bits(), "{what}: batch {i} t_llm");
+        assert_eq!(x.t_downlink.to_bits(), y.t_downlink.to_bits(), "{what}: batch {i} t_down");
+    }
+}
+
+/// THE regression the refactor hangs on: the in-flight ledger engine at
+/// depth 1 reproduces the frozen v2 alternating loop bit for bit —
+/// every policy, every adaptive mode, jittered links, mid-run bandwidth
+/// schedules.
+#[test]
+fn depth_one_engine_is_bit_identical_to_the_v2_reference() {
+    let world = SyntheticWorld::new(64, 0.6, 7);
+    let cases: Vec<(Policy, AdaptiveMode)> = vec![
+        (Policy::KSqs { k: 8 }, AdaptiveMode::Off),
+        (Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 }, AdaptiveMode::Off),
+        (Policy::DenseQs, AdaptiveMode::Off),
+        (Policy::KSqs { k: 8 }, AdaptiveMode::Aimd { target_bits: 600 }),
+        (Policy::KSqs { k: 8 }, AdaptiveMode::Window { grow: 0.8, shrink: 0.5 }),
+    ];
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.010,
+        jitter_s: 0.002, // exercise the seeded jitter RNG path too
+    };
+    for (policy, adaptive) in cases {
+        let cfg = SessionConfig {
+            policy,
+            temp: 0.9,
+            max_new_tokens: 48,
+            seed: 11,
+            timing: modeled(),
+            adaptive,
+            pipeline_depth: 1,
+            ..Default::default()
+        };
+        let schedule = vec![(10, 2.5e5)]; // mid-run bandwidth drop
+        let a = make_session(&world, link, schedule.clone(), cfg.clone())
+            .run(&[3, 1, 4])
+            .unwrap();
+        let b = make_session(&world, link, schedule, cfg)
+            .run_reference_lockstep(&[3, 1, 4])
+            .unwrap();
+        assert_eq!(a.pipeline_depth, 1);
+        assert_eq!(a.discarded_batches, 0, "depth 1 never discards");
+        assert_bit_identical(&a, &b, &format!("{policy:?}/{adaptive:?}"));
+    }
+}
+
+/// Pipelined sessions are a pure function of (config, seed).
+#[test]
+fn pipelined_session_is_deterministic() {
+    let world = SyntheticWorld::new(64, 0.4, 21);
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.050,
+        jitter_s: 0.001,
+    };
+    let run = |seed: u64| {
+        let cfg = SessionConfig {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.8,
+            max_new_tokens: 64,
+            max_batch_drafts: 4,
+            seed,
+            timing: modeled(),
+            pipeline_depth: 3,
+            ..Default::default()
+        };
+        make_session(&world, link, Vec::new(), cfg).run(&[9, 2]).unwrap()
+    };
+    let (a, b) = (run(5), run(5));
+    assert_bit_identical(&a, &b, "same seed");
+    let c = run(6);
+    assert_ne!(a.tokens, c.tokens, "seeds must matter");
+}
+
+/// The acceptance-criterion shape: on a high-RTT link, pipelining hides
+/// the verification round trip behind drafting, so depth >= 2 finishes
+/// the same request in less virtual time than the alternating protocol.
+/// Small windows keep full acceptance common, which is what makes the
+/// speculation survive.
+#[test]
+fn pipelining_reduces_latency_on_a_high_rtt_link() {
+    let world = SyntheticWorld::new(64, 0.3, 2024);
+    // 100 ms RTT: propagation dominates every round of the alternating
+    // protocol; drafting a 4-token window costs only ~5 ms
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.050,
+        jitter_s: 0.0,
+    };
+    let run = |depth: usize| {
+        let cfg = SessionConfig {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.7,
+            max_new_tokens: 64,
+            max_batch_drafts: 4,
+            seed: 3,
+            timing: modeled(),
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        make_session(&world, link, Vec::new(), cfg).run(&[7, 21]).unwrap()
+    };
+    let d1 = run(1);
+    let d2 = run(2);
+    let d4 = run(4);
+    assert!(d1.new_tokens() >= 64 && d2.new_tokens() >= 64 && d4.new_tokens() >= 64);
+    assert!(
+        d2.total_time_s < d1.total_time_s,
+        "depth 2 must beat alternating on a high-RTT link: {} !< {}",
+        d2.total_time_s,
+        d1.total_time_s
+    );
+    assert!(
+        d4.total_time_s < 0.9 * d1.total_time_s,
+        "depth 4 must hide most of the round trip: {} !< 0.9 * {}",
+        d4.total_time_s,
+        d1.total_time_s
+    );
+    // overlap means the makespan undercuts the serialized component sum
+    let serial = d4.t_slm_s + d4.t_uplink_s + d4.t_llm_s + d4.t_downlink_s;
+    assert!(
+        d4.total_time_s < serial,
+        "pipelined makespan {} should undercut the component sum {serial}",
+        d4.total_time_s
+    );
+    // every speculative batch is accounted: verified or discarded, and
+    // its wire bits are in the ledger either way
+    let batch_up: u64 = d4.batches.iter().map(|b| b.frame_bits as u64).sum();
+    assert!(
+        d4.uplink_bits >= d4.handshake_uplink_bits + batch_up,
+        "discarded batches' bits stay in the uplink ledger"
+    );
+}
+
+// ---------------------------------------------------------------------
+// fleet paths
+// ---------------------------------------------------------------------
+
+fn fleet_cfg(depth: Option<usize>, seed: u64, propagation_s: f64) -> FleetConfig {
+    let mut base = DeviceProfile {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.7,
+        max_new_tokens: 24,
+        max_batch_drafts: 4,
+        workload: Workload::ClosedLoop { think_s: 0.0 },
+        ..Default::default()
+    };
+    if let Some(d) = depth {
+        base.pipeline_depth = d;
+    }
+    let mut cfg = FleetConfig::uniform(3, base);
+    cfg.uplink_bps = 1e6;
+    cfg.propagation_s = propagation_s;
+    cfg.requests_per_device = 3;
+    // a gentle draft-target mismatch keeps full acceptance common, so
+    // small windows of speculation mostly survive
+    cfg.mismatch = 0.3;
+    cfg.verifier = VerifierConfig { concurrency: 3, batch_max: 2, ..Default::default() };
+    cfg.seed = seed;
+    cfg.record_trace = true;
+    cfg
+}
+
+/// Fleet regression: an explicit `pipeline_depth: 1` profile must take
+/// exactly the pre-pipelining event path — same trace, same digest — as
+/// the default profile.
+#[test]
+fn fleet_depth_one_is_bit_identical_to_default() {
+    let a = FleetSim::new(fleet_cfg(Some(1), 909, 0.010)).run().unwrap();
+    let b = FleetSim::new(fleet_cfg(None, 909, 0.010)).run().unwrap();
+    assert!(!a.trace.is_empty());
+    assert_eq!(a.trace, b.trace, "event traces diverge");
+    assert_eq!(a.digest(), b.digest(), "metrics digests diverge");
+    assert_eq!(a.discarded_batches, 0);
+}
+
+/// Pipelined fleets stay bit-reproducible and beat alternating fleets
+/// on a high-RTT shared link (uncontended verifier, roomy uplink: the
+/// round trip is the bottleneck pipelining removes).
+#[test]
+fn pipelined_fleet_is_deterministic_and_faster_on_high_rtt() {
+    let a = FleetSim::new(fleet_cfg(Some(3), 42, 0.050)).run().unwrap();
+    let b = FleetSim::new(fleet_cfg(Some(3), 42, 0.050)).run().unwrap();
+    assert_eq!(a.trace, b.trace, "pipelined event traces diverge");
+    assert_eq!(a.digest(), b.digest());
+
+    let c = FleetSim::new(fleet_cfg(Some(3), 43, 0.050)).run().unwrap();
+    assert_ne!(a.trace, c.trace, "seeds must matter");
+
+    let alternating = FleetSim::new(fleet_cfg(Some(1), 42, 0.050)).run().unwrap();
+    assert_eq!(a.completed, alternating.completed, "same workload either way");
+    assert!(
+        a.latency.mean() < alternating.latency.mean(),
+        "pipelined fleet must cut mean latency on a 100ms-RTT link: {} !< {}",
+        a.latency.mean(),
+        alternating.latency.mean()
+    );
+}
+
+/// Adaptive grants converge: a congested AIMD fleet under a fair-share
+/// grant pool settles near pool/N bits per round, and the grants relax
+/// as sessions drain (ROADMAP "adaptive grants" acceptance test).
+#[test]
+fn adaptive_grant_pool_converges_to_fair_share() {
+    let n = 6usize;
+    let pool = 3600u32; // fair share: 600 bits/round per live session
+    let mk = |congestion_depth: usize, pool_bits: Option<u32>| {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 32,
+            adaptive: AdaptiveMode::Aimd { target_bits: 5000 },
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(n, base);
+        cfg.uplink_bps = 1e6;
+        cfg.requests_per_device = 3;
+        cfg.seed = 77;
+        cfg.verifier = VerifierConfig {
+            concurrency: 2,
+            batch_max: 4,
+            congestion_depth,
+            grant_pool_bits: pool_bits,
+            grant_min_bits: 64,
+            ..Default::default()
+        };
+        cfg
+    };
+    // free: no congestion signal at all; pooled: grant on every frame
+    let free = FleetSim::new(mk(usize::MAX, None)).run().unwrap();
+    let pooled = FleetSim::new(mk(0, Some(pool))).run().unwrap();
+
+    let share = pool as f64 / n as f64;
+    let free_bpr = free.mean_bits_per_round();
+    let pooled_bpr = pooled.mean_bits_per_round();
+    assert!(
+        free_bpr > share * 2.0,
+        "without the pool, AIMD settles far above the fair share ({free_bpr:.0})"
+    );
+    assert!(
+        pooled_bpr < free_bpr,
+        "the grant pool must throttle the fleet ({pooled_bpr:.0} vs {free_bpr:.0})"
+    );
+    // convergence to the *neighborhood* of the fair share: grants move
+    // with load (scaled down by backlog pressure, up as sessions drain),
+    // so the mean sits near pool/N rather than exactly on it
+    assert!(
+        pooled_bpr <= share * 2.0 && pooled_bpr >= share * 0.2,
+        "fleet converges near the {share:.0}b fair share, got {pooled_bpr:.0}"
+    );
+    // every granted budget is a live fair share, never the configured
+    // 5000b target again (round 0 predates any feedback), bounded by
+    // the whole pool (live >= 1) and floored at grant_min_bits
+    for d in &pooled.per_device {
+        assert!(d.knob_trace.len() >= 2, "device {} ran {} rounds", d.id, d.knob_trace.len());
+        assert_eq!(d.knob_trace[0].budget_bits, 5000, "round 0 predates any grant");
+        for kp in &d.knob_trace[1..] {
+            assert!(
+                kp.budget_bits >= 64 && kp.budget_bits <= pool as usize,
+                "device {}: granted budget {} outside [64, {pool}]",
+                d.id,
+                kp.budget_bits
+            );
+        }
+    }
+    // the un-pooled fleet never sees a grant: configured target only
+    for d in &free.per_device {
+        for kp in &d.knob_trace {
+            assert_eq!(kp.budget_bits, 5000, "no pool: configured target everywhere");
+        }
+    }
+
+    // pure function of (config, seed)
+    let again = FleetSim::new(mk(0, Some(pool))).run().unwrap();
+    assert_eq!(pooled.digest(), again.digest());
+}

@@ -8,8 +8,8 @@ use sqs_sd::channel::{LinkConfig, SimulatedLink};
 use sqs_sd::coordinator::session::{SdSession, SessionConfig, TimingMode};
 use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use sqs_sd::protocol::{
-    Control, Ext, FeedbackV2, Frame, Hello, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS,
-    HELLO_BITS, MAX_SUPPORTED, MIN_SUPPORTED,
+    Control, Ext, FeedbackV2, Frame, Hello, SeqAck, SeqDraft, WireCodec, FRAME_HEADER_BITS,
+    HELLO_ACK_BITS, HELLO_BITS, MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V3,
 };
 use sqs_sd::sqs::bits::SchemeBits;
 use sqs_sd::sqs::Policy;
@@ -330,13 +330,23 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
             fixed_k: 8,
         })
         .unwrap()),
-        Frame::Draft(DraftFrame { batch_id: 77, tokens }),
+        Frame::Draft(DraftFrame { batch_id: 77, tokens: tokens.clone() }),
+        Frame::DraftSeq(SeqDraft {
+            seq: u16::MAX, // wraparound corner on the wire
+            epoch: u8::MAX,
+            frame: DraftFrame { batch_id: 78, tokens },
+        }),
         Frame::Feedback(FeedbackV2 {
             batch_id: 9,
             accepted: 2,
             new_token: 40,
-            exts: vec![Ext::Congestion(true), Ext::BudgetGrant(600)],
+            exts: vec![
+                Ext::Congestion(true),
+                Ext::BudgetGrant(600),
+                Ext::Ack(SeqAck { seq: u16::MAX, epoch: 3, discard: false }),
+            ],
         }),
+        Frame::Feedback(FeedbackV2::discard(10, 0, u8::MAX)),
         Frame::Control(Control::Prompt(vec![1, 2, 3])),
         Frame::Control(Control::Bye),
     ];
@@ -356,7 +366,9 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
 /// the verify layer rejects downstream).
 #[test]
 fn corrupted_v2_frames_error_never_panic() {
+    // a v3 codec decodes every frame type, sequenced drafts included
     let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    codec.set_version(PROTOCOL_V3);
     let frames = sample_frames(&mut codec);
 
     for (name, bytes) in &frames {
@@ -371,6 +383,7 @@ fn corrupted_v2_frames_error_never_panic() {
     // panics and reports the reproducing (seed, case)
     check("v2 frame corruption never panics", 300, |g, _| {
         let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+        codec.set_version(PROTOCOL_V3);
         let frames = sample_frames(&mut codec);
         let (name, bytes) = g.pick(&frames);
         let mut corrupt = bytes.clone();
@@ -382,6 +395,47 @@ fn corrupted_v2_frames_error_never_panic() {
         // decoding must terminate without panicking; Ok(garbage) is fine
         let _ = codec.decode(&corrupt);
         let _ = name;
+    });
+
+    // (c) a strictly-v2 codec must refuse sequenced frames outright —
+    // never panic, never misparse them as something else
+    let mut v2 = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    for (name, bytes) in &frames {
+        if *name == "draft_seq" {
+            assert!(v2.decode(bytes).is_err(), "v2 codec must reject sequenced drafts");
+        }
+    }
+}
+
+/// Sequence/epoch wraparound and stale/duplicate feedback never panic
+/// the codec layer: any (seq, epoch, discard) triple round-trips, and
+/// re-decoding the same feedback frame twice is harmless (the session
+/// layer is what rejects duplicates, by popping its in-flight ledger).
+#[test]
+fn seq_ack_wraparound_roundtrips_for_any_triple() {
+    check("seq ack wraparound", 200, |g, _| {
+        let seq = g.int(0, u16::MAX as u64) as u16;
+        let epoch = g.int(0, u8::MAX as u64) as u8;
+        let discard = g.bool();
+        let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+        codec.set_version(PROTOCOL_V3);
+        let fb = FeedbackV2 {
+            batch_id: 1,
+            accepted: 0,
+            new_token: 0,
+            exts: vec![Ext::Ack(SeqAck { seq, epoch, discard })],
+        };
+        let (bytes, _) = codec.encode(&Frame::Feedback(fb.clone())).unwrap();
+        for _ in 0..2 {
+            // decoding twice = a duplicated feedback frame on the wire
+            match codec.decode(&bytes).unwrap() {
+                Frame::Feedback(back) => {
+                    assert_eq!(back, fb);
+                    assert_eq!(back.ack(), Some(SeqAck { seq, epoch, discard }));
+                }
+                other => panic!("expected feedback, got {}", other.name()),
+            }
+        }
     });
 }
 

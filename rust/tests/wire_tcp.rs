@@ -13,11 +13,12 @@ use sqs_sd::server::wire::{
 };
 use sqs_sd::sqs::Policy;
 
-fn run_session(
+fn run_session_depth(
     grant: Option<u32>,
     congestion_depth: usize,
     adaptive: AdaptiveMode,
     seed: u64,
+    pipeline_depth: usize,
 ) -> WireRunReport {
     let cfg = WireServerConfig {
         addr: "127.0.0.1:0".into(),
@@ -38,6 +39,7 @@ fn run_session(
     let edge_cfg = WireEdgeConfig {
         policy: Policy::KSqs { k: 8 },
         adaptive,
+        pipeline_depth,
         seed,
         ..Default::default()
     };
@@ -45,6 +47,15 @@ fn run_session(
     let report = edge.run(&mut transport, &[3, 1, 4], 32).unwrap();
     handle.join().unwrap();
     report
+}
+
+fn run_session(
+    grant: Option<u32>,
+    congestion_depth: usize,
+    adaptive: AdaptiveMode,
+    seed: u64,
+) -> WireRunReport {
+    run_session_depth(grant, congestion_depth, adaptive, seed, 1)
 }
 
 #[test]
@@ -101,6 +112,41 @@ fn tcp_budget_grant_throttles_an_aimd_edge() {
     assert_eq!(granted.tokens, again.tokens);
     assert_eq!(granted.frame_bits, again.frame_bits);
     assert_eq!(granted.uplink_bits, again.uplink_bits);
+}
+
+#[test]
+fn tcp_depth_one_is_bit_identical_to_the_default_config() {
+    // the pipelining refactor must not move the default TCP path: an
+    // explicit depth-1 session produces the same tokens and the same
+    // stream ledgers as a default-config session
+    let a = run_session(None, usize::MAX, AdaptiveMode::Off, 17);
+    let b = run_session_depth(None, usize::MAX, AdaptiveMode::Off, 17, 1);
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.frame_bits, b.frame_bits);
+    assert_eq!(a.uplink_bits, b.uplink_bits);
+    assert_eq!(a.downlink_bits, b.downlink_bits);
+    assert_eq!(a.discarded, 0);
+    assert_eq!(b.discarded, 0);
+}
+
+#[test]
+fn tcp_pipelined_session_round_trips_and_is_deterministic() {
+    let r = run_session_depth(None, usize::MAX, AdaptiveMode::Off, 42, 3);
+    assert!(r.new_tokens() >= 32, "request completed: {} tokens", r.new_tokens());
+    assert!(r.batches > 0);
+    assert_eq!(r.frame_bits.len(), r.batches, "one size per verified batch");
+    assert!(r.uplink_bits > r.handshake_uplink_bits);
+
+    // bit-identical reruns from (config, seed); the pipelined stream
+    // path has no virtual clock, so determinism is purely protocol-level
+    let r2 = run_session_depth(None, usize::MAX, AdaptiveMode::Off, 42, 3);
+    assert_eq!(r.tokens, r2.tokens);
+    assert_eq!(r.uplink_bits, r2.uplink_bits);
+    assert_eq!(r.downlink_bits, r2.downlink_bits);
+    assert_eq!(r.discarded, r2.discarded);
+
+    let r3 = run_session_depth(None, usize::MAX, AdaptiveMode::Off, 43, 3);
+    assert_ne!(r.tokens, r3.tokens, "seeds must matter");
 }
 
 #[test]
