@@ -8,12 +8,16 @@
 //! dense-QS baseline, reporting tokens/batch, latency per token, and the
 //! share of time spent on the wire.
 
+// PJRT-only example: a `synthetic-only` build compiles a stub instead.
+
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
 use sqs_sd::channel::LinkConfig;
 use sqs_sd::coordinator::{PjrtStack, SessionConfig};
 use sqs_sd::model::encode;
 use sqs_sd::sqs::Policy;
 
-fn main() -> anyhow::Result<()> {
+pub fn main() -> anyhow::Result<()> {
     let stack = PjrtStack::load(1 << 30)?;
     let prompt = encode("A distributed system is");
 
@@ -60,4 +64,16 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
     Ok(())
+}
+
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    pjrt_only::main()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("this example needs the pjrt feature (default build)");
 }

@@ -7,6 +7,10 @@
 //! decomposition (SLM compute / uplink / LLM verify / downlink), the
 //! resampling rate, and the bandwidth ledger — a miniature of Figure 2.
 
+// PJRT-only example: a `synthetic-only` build compiles a stub instead.
+
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
 use sqs_sd::channel::LinkConfig;
 use sqs_sd::coordinator::{PjrtStack, SessionConfig, SessionResult, TimingMode};
 use sqs_sd::model::{decode, encode};
@@ -26,7 +30,7 @@ fn row(name: &str, temp: f32, r: &SessionResult) {
     );
 }
 
-fn main() -> anyhow::Result<()> {
+pub fn main() -> anyhow::Result<()> {
     let stack = PjrtStack::load(1 << 30)?;
     let prompt = encode("Once there was a fox who");
     let link = LinkConfig::default(); // 1 Mbit/s up, 10 ms propagation
@@ -77,4 +81,16 @@ fn main() -> anyhow::Result<()> {
     println!("C-SQS completion @T=0.5: {:?}",
              decode(&res.tokens[res.prompt_len..]));
     Ok(())
+}
+
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    pjrt_only::main()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("this example needs the pjrt feature (default build)");
 }

@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = FleetConfig {
         profiles,
         uplink_bps: 1e6,
+        uplink_schedule: Vec::new(),
         propagation_s: 0.010,
         jitter_s: 0.002,
         requests_per_device: 5,

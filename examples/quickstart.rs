@@ -9,12 +9,16 @@
 //! (B = 5000 bits, ell = 100, eta = 0.001, alpha = 0.0005), and one
 //! session over a simulated 1 Mbit/s uplink.
 
+// PJRT-only example: a `synthetic-only` build compiles a stub instead.
+
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
 use sqs_sd::channel::LinkConfig;
 use sqs_sd::coordinator::{PjrtStack, SessionConfig};
 use sqs_sd::model::{decode, encode};
 use sqs_sd::sqs::Policy;
 
-fn main() -> anyhow::Result<()> {
+pub fn main() -> anyhow::Result<()> {
     // PJRT engine + compiled HLO modules + device-resident weights
     let stack = PjrtStack::load(1 << 30)?;
     println!("platform: {} | slm {} params | llm {} params",
@@ -53,4 +57,16 @@ fn main() -> anyhow::Result<()> {
         println!("conformal  : empirical alpha {emp:.5} <= Theorem-2 bound {bound:.5}");
     }
     Ok(())
+}
+
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    pjrt_only::main()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("this example needs the pjrt feature (default build)");
 }

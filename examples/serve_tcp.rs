@@ -7,10 +7,14 @@
 //! handled by acceptor threads feeding a FIFO job queue (see
 //! rust/src/server/mod.rs for the protocol).
 
+// PJRT-only example: a `synthetic-only` build compiles a stub instead.
+
+#[cfg(feature = "pjrt")]
+mod pjrt_only {
 use sqs_sd::server::{serve, Client, ServerConfig};
 use sqs_sd::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+pub fn main() -> anyhow::Result<()> {
     let addr = "127.0.0.1:7171";
     let n_requests = 6;
 
@@ -65,4 +69,16 @@ fn main() -> anyhow::Result<()> {
 
     server.join().expect("server thread");
     Ok(())
+}
+
+}
+
+#[cfg(feature = "pjrt")]
+fn main() -> anyhow::Result<()> {
+    pjrt_only::main()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("this example needs the pjrt feature (default build)");
 }

@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     // per-round knob traces: convergence, not just steady-state means
     let mut knob_csv = CsvOut::new(
         "adaptive_knobs.csv",
-        "mode,scenario,seed,round,k,ell,budget_bits,pipeline_depth,frame_bits",
+        "mode,scenario,seed,round,k,ell,budget_bits,pipeline_depth,tree_branching,frame_bits",
     );
     let mut points = Vec::new();
     let mut drop_bpr = std::collections::BTreeMap::new();
@@ -156,7 +156,7 @@ fn main() -> anyhow::Result<()> {
     let mut fleet_points = Vec::new();
     let mut fleet_knob_csv = CsvOut::new(
         "adaptive_fleet_knobs.csv",
-        "mode,scenario,device,round,k,ell,budget_bits,pipeline_depth",
+        "mode,scenario,device,round,k,ell,budget_bits,pipeline_depth,tree_branching",
     );
     for (mode_name, mode) in &modes {
         for (scen_name, schedule) in &fleet_scenarios {

@@ -119,7 +119,10 @@ fn main() -> anyhow::Result<()> {
     });
     let _: &Quantized = &quant_k;
 
-    // PJRT model calls, if artifacts exist
+    // PJRT model calls, if artifacts exist (and the pjrt feature is on)
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("[micro] built without the pjrt feature; skipping PJRT rows");
+    #[cfg(feature = "pjrt")]
     if sqs_sd::runtime::Manifest::default_dir().join("manifest.json").exists() {
         use sqs_sd::coordinator::PjrtStack;
         use sqs_sd::model::lm::{PjrtDraft, PjrtTarget};

@@ -33,9 +33,9 @@ const DEPTHS: [usize; 3] = [1, 2, 4];
 /// (name, one-way propagation seconds): LAN, WAN, satellite-ish.
 const SCENARIOS: [(&str, f64); 3] = [("lan", 0.005), ("wan", 0.050), ("sat", 0.200)];
 
-fn run_session(depth: usize, propagation_s: f64, seed: u64, max_new: usize)
-               -> anyhow::Result<SessionResult> {
-    let world = SyntheticWorld::new(64, 0.3, 2024);
+fn run_session_tree(depth: usize, branching: usize, mismatch: f64, propagation_s: f64,
+                    seed: u64, max_new: usize) -> anyhow::Result<SessionResult> {
+    let world = SyntheticWorld::new(64, mismatch, 2024);
     let draft = SyntheticDraft::new(world.clone(), 1_000_000);
     let target = SyntheticTarget::new(world.clone(), 4, 1_000_000);
     let link = LinkConfig {
@@ -52,10 +52,16 @@ fn run_session(depth: usize, propagation_s: f64, seed: u64, max_new: usize)
         seed,
         timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
         pipeline_depth: depth,
+        tree_branching: branching,
         ..Default::default()
     };
     let mut sess = SdSession::new(draft, target, SimulatedLink::new(link, seed), cfg);
     sess.run(&[7, 21, 42])
+}
+
+fn run_session(depth: usize, propagation_s: f64, seed: u64, max_new: usize)
+               -> anyhow::Result<SessionResult> {
+    run_session_tree(depth, 1, 0.3, propagation_s, seed, max_new)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -69,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut csv = CsvOut::new(
         "pipelining.csv",
-        "depth,scenario,seed,latency_s,ms_per_token,bits_per_token,\
+        "depth,branching,scenario,seed,latency_s,ms_per_token,bits_per_token,\
          batches,discarded,acceptance",
     );
     let mut points = Vec::new();
@@ -90,7 +96,7 @@ fn main() -> anyhow::Result<()> {
                 batches.add(r.batches.len() as f64);
                 disc.add(r.discarded_batches as f64);
                 csv.row(format!(
-                    "{depth},{scen_name},{seed},{},{},{},{},{},{}",
+                    "{depth},1,{scen_name},{seed},{},{},{},{},{},{}",
                     r.total_time_s,
                     1e3 * r.latency_per_token(),
                     r.bits_per_token(),
@@ -125,6 +131,61 @@ fn main() -> anyhow::Result<()> {
                 ("discarded_mean", Json::Num(disc.mean())),
             ]));
         }
+    }
+
+    // ---- TREE: token-tree branching under heavy rejection --------------
+    // High draft-target mismatch (1.0) is the regime trees exist for:
+    // every extra candidate per level can convert a rejection into an
+    // accepted continuation.  Expected shape: discards and batch count
+    // fall monotonically with branching while bits/token climbs (the
+    // AIMD knob is what arbitrates that trade in production).
+    println!("\n== PIPE-TREE: branching x discards (depth 3, wan, mismatch 1.0) ==");
+    println!(
+        "{:<10} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "branching", "latency_s", "bits/tok", "batches", "discarded", "accept"
+    );
+    let mut tree_points = Vec::new();
+    for &branching in &[1usize, 2, 3] {
+        let mut lat = Summary::new();
+        let mut bpt = Summary::new();
+        let mut batches = Summary::new();
+        let mut disc = Summary::new();
+        let mut acc = Summary::new();
+        for s in 0..sessions {
+            let seed = 9000 + s as u64 * 7919;
+            let r = run_session_tree(3, branching, 1.0, 0.050, seed, max_new)?;
+            lat.add(r.total_time_s);
+            bpt.add(r.bits_per_token());
+            batches.add(r.batches.len() as f64);
+            disc.add(r.discarded_batches as f64);
+            acc.add(r.acceptance_rate());
+            csv.row(format!(
+                "3,{branching},tree-wan,{seed},{},{},{},{},{},{}",
+                r.total_time_s,
+                1e3 * r.latency_per_token(),
+                r.bits_per_token(),
+                r.batches.len(),
+                r.discarded_batches,
+                r.acceptance_rate(),
+            ));
+        }
+        println!(
+            "{branching:<10} {:>12.4} {:>10.1} {:>10.1} {:>10.1} {:>10.3}",
+            lat.mean(),
+            bpt.mean(),
+            batches.mean(),
+            disc.mean(),
+            acc.mean()
+        );
+        tree_points.push(Json::obj(vec![
+            ("branching", Json::Num(branching as f64)),
+            ("depth", Json::Num(3.0)),
+            ("latency_mean_s", Json::Num(lat.mean())),
+            ("bits_per_token", Json::Num(bpt.mean())),
+            ("batches_mean", Json::Num(batches.mean())),
+            ("discarded_mean", Json::Num(disc.mean())),
+            ("acceptance", Json::Num(acc.mean())),
+        ]));
     }
 
     // ---- fleet: pipelined devices on a WAN shared uplink ---------------
@@ -172,6 +233,7 @@ fn main() -> anyhow::Result<()> {
             ("bench", Json::Str("pipelining".into())),
             ("sessions_per_point", Json::Num(sessions as f64)),
             ("points", Json::Arr(points)),
+            ("tree", Json::Arr(tree_points)),
             ("fleet", Json::Arr(fleet_points)),
         ]),
     );

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         // by keeping the controller inside one session and generating many
         // tokens
         let (emp, bound, t) = match &backend {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(stack) => {
                 let cfg = SessionConfig {
                     policy: Policy::CSqs { beta0, alpha, eta },

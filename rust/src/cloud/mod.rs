@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::codec::{DraftFrame, FeedbackFrame};
 use crate::model::TargetLm;
-use crate::protocol::{Ext, FeedbackV2};
+use crate::protocol::{Ext, FeedbackV2, TreeDraft, NO_PARENT};
 use crate::sqs::probs::{residual, sample};
 use crate::util::rng::Pcg64;
 
@@ -36,6 +36,20 @@ impl Verdict {
         fb.exts = exts;
         fb
     }
+}
+
+/// Outcome of verifying one token tree at the cloud (protocol v4): the
+/// plain verdict plus the surviving path the tree walk took.
+pub struct TreeVerdict {
+    pub verdict: Verdict,
+    /// deepest accepted node index ([`NO_PARENT`]: nothing accepted)
+    pub survivor: u8,
+    /// accepted path length in draft tokens
+    pub depth: usize,
+    /// the surviving path token-equals the full trunk and nothing was
+    /// resampled — the edge's speculative continuation stays valid, so
+    /// neither side bumps its epoch
+    pub full_trunk: bool,
 }
 
 pub struct CloudNode<T: TargetLm> {
@@ -88,6 +102,166 @@ impl<T: TargetLm> CloudNode<T> {
     pub fn verify_pipelined(&mut self, frame: &DraftFrame, prev: u16, temp: f32)
                             -> Result<Verdict> {
         self.verify_inner(frame, prev, temp, false)
+    }
+
+    /// Token-tree verification (protocol v4): score every root-to-leaf
+    /// path in one pass over the tree, then walk it from the root with
+    /// multi-candidate residual acceptance — at each level the current
+    /// node's children are tried in node order, candidate `c` accepted
+    /// with prob `min(1, r(x_c)/q_hat_c(x_c))` where `r` starts at the
+    /// target distribution and sheds each rejected candidate's quantized
+    /// mass (`r <- norm((r - q_hat_c)+)`, the SpecInfer/SpecTr recursive
+    /// rejection-sampling scheme, exact for candidates sampled i.i.d.
+    /// from q_hat).  If every candidate at a level is rejected, the new
+    /// token is resampled from the final residual — exactly the linear
+    /// rule when the level has one candidate.  Like `verify_pipelined`,
+    /// a fully accepted path earns no bonus token: the edge already
+    /// speculated the trunk continuation.
+    ///
+    /// Distributions are conditioned per path: each leaf's root-to-leaf
+    /// window goes through `verify_window` once and shared prefixes are
+    /// memoized per node, so the pass costs one window per leaf (a real
+    /// backend would batch these into one tree-attention call; the
+    /// fleet's verifier models the cost as scaling with node count).
+    pub fn verify_tree(&mut self, tree: &TreeDraft, prev: u16, temp: f32)
+                       -> Result<TreeVerdict> {
+        tree.validate().map_err(|e| anyhow::anyhow!("tree frame: {e}"))?;
+        let frame = &tree.frame;
+        let n = frame.tokens.len();
+        let vocab = self.target.vocab();
+
+        // ---- score: one verify window per leaf, memoized per node ----
+        let mut dists: Vec<Option<Vec<f32>>> = vec![None; n];
+        let leaves: Vec<u8> = (0..n as u8)
+            .filter(|&i| !tree.parents.contains(&i))
+            .collect();
+        // the draft tokens of the most recent verify_window call: KV-
+        // coherent backends (PjrtTarget) overwrite cache rows in place
+        // per call, so after the walk the rows must be re-scored to the
+        // *surviving* path if it is not a prefix of this one
+        let mut last_scored: Vec<u16> = Vec::new();
+        let t0 = std::time::Instant::now();
+        for &leaf in &leaves {
+            let path = tree.path_to(leaf);
+            if path.len() > self.target.max_drafts() {
+                bail!(
+                    "tree path of {} drafts > window capacity {}",
+                    path.len(),
+                    self.target.max_drafts()
+                );
+            }
+            if path.iter().all(|&i| dists[i as usize].is_some()) {
+                continue;
+            }
+            let mut window = Vec::with_capacity(path.len() + 1);
+            window.push(prev);
+            window.extend(path.iter().map(|&i| frame.tokens[i as usize].token));
+            let probs = self.target.verify_window(&window, temp)?;
+            last_scored = window.split_off(1);
+            for (d, &i) in path.iter().enumerate() {
+                if dists[i as usize].is_none() {
+                    dists[i as usize] = Some(probs[d].clone());
+                }
+            }
+        }
+        let mut t_llm = t0.elapsed().as_secs_f64();
+
+        // ---- walk: multi-candidate residual acceptance per level ------
+        let mut committed: Vec<u16> = Vec::new();
+        let mut survivor = NO_PARENT;
+        let mut depth = 0usize;
+        let mut rejected = false;
+        let mut new_token = None;
+        let mut cur = NO_PARENT;
+        'walk: loop {
+            let children = tree.children(cur);
+            let Some(&first) = children.first() else { break };
+            let p_level = dists[first as usize]
+                .as_ref()
+                .expect("every node lies on a scored leaf path")
+                .clone();
+            let mut r = p_level.clone();
+            for &c in &children {
+                let dt = &frame.tokens[c as usize];
+                let x = dt.token as usize;
+                let q_hat = dt.quant.prob_of(x);
+                if q_hat <= 0.0 {
+                    bail!("tree node {c} token {x} has q_hat = 0 — corrupt frame?");
+                }
+                let ratio = (r[x] as f64 / q_hat as f64).min(1.0);
+                if self.rng.next_f64() < ratio {
+                    committed.push(dt.token);
+                    survivor = c;
+                    depth += 1;
+                    cur = c;
+                    continue 'walk;
+                }
+                match residual(&r, &dt.quant.to_dense_probs(vocab)) {
+                    Some(next) => r = next,
+                    None => {
+                        // residual mass exhausted: degenerate corner, fall
+                        // back to the level's target distribution (the
+                        // linear rule's p-fallback)
+                        rejected = true;
+                        new_token = Some(sample(&p_level, &mut self.rng) as u16);
+                        break 'walk;
+                    }
+                }
+            }
+            // every candidate at this level rejected: resample from the
+            // final residual
+            rejected = true;
+            new_token = Some(sample(&r, &mut self.rng) as u16);
+            break;
+        }
+
+        // ---- KV re-sync: make the cache rows match the survivors ------
+        // Stateful backends (PjrtTarget) overwrite KV rows in place on
+        // every verify_window call, so the cache currently holds the
+        // LAST scored leaf's K/V.  If the surviving path is not a prefix
+        // of that leaf's path, one final window over the survivors
+        // rewrites the rows the committed context will attend over (the
+        // resample token's row, like the linear path's, is refreshed by
+        // the next call re-processing window[0]).  Pure backends (the
+        // synthetic Markov world) are unaffected: the extra call draws
+        // no randomness and returns context-independent rows.
+        debug_assert_eq!(committed.len(), depth);
+        if !committed.is_empty() && !last_scored.starts_with(&committed) {
+            let t1 = std::time::Instant::now();
+            let mut window = Vec::with_capacity(committed.len() + 1);
+            window.push(prev);
+            window.extend_from_slice(&committed);
+            let _ = self.target.verify_window(&window, temp)?;
+            t_llm += t1.elapsed().as_secs_f64();
+        }
+
+        if let Some(t) = new_token {
+            committed.push(t);
+        }
+        self.target.commit_tokens(&committed)?;
+
+        // the surviving path token-equals the full trunk: the edge's
+        // speculative continuation (drafted from the trunk tip) stays
+        // valid, so neither side bumps its epoch.  Token values — not
+        // node ids — decide this, since contexts only see values.
+        let full_trunk = !rejected && committed == tree.trunk_tokens();
+
+        Ok(TreeVerdict {
+            verdict: Verdict {
+                feedback: FeedbackFrame {
+                    batch_id: frame.batch_id,
+                    accepted: depth as u16,
+                    new_token: new_token.unwrap_or(0),
+                },
+                accepted: depth,
+                rejected,
+                t_llm,
+                committed,
+            },
+            survivor,
+            depth,
+            full_trunk,
+        })
     }
 
     fn verify_inner(&mut self, frame: &DraftFrame, prev: u16, temp: f32, bonus: bool)

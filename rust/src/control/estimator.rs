@@ -204,6 +204,12 @@ pub struct LinkState {
     pub acceptance: f64,
     /// Wire bits per speculative round estimate.
     pub bits_per_round: f64,
+    /// Wire *nodes* per round estimate: equals the per-path drafted
+    /// count on linear frames and exceeds it on protocol-v4 trees, so
+    /// `nodes_per_round / max(1, drafted)` is the observed branching
+    /// overhead a joint bits/branching policy can steer on (0 before
+    /// any observation).
+    pub nodes_per_round: f64,
     /// Rounds observed so far (0 => all fields are priors).
     pub rounds: u64,
 }
@@ -234,6 +240,7 @@ pub struct LinkEstimator {
     queue_wait_window: Windowed,
     acceptance: Ewma,
     bits_per_round: Ewma,
+    nodes_per_round: Ewma,
     rounds: u64,
 }
 
@@ -246,6 +253,7 @@ impl LinkEstimator {
             queue_wait_window: Windowed::new(QUEUE_WAIT_WINDOW),
             acceptance: Ewma::new(gamma),
             bits_per_round: Ewma::new(gamma),
+            nodes_per_round: Ewma::new(gamma),
             rounds: 0,
         }
     }
@@ -260,9 +268,14 @@ impl LinkEstimator {
         self.queue_wait.observe(o.queue_wait_s.max(0.0));
         self.queue_wait_window.observe(o.queue_wait_s.max(0.0));
         if o.drafted > 0 && !o.discarded {
+            // per-path acceptance: `drafted` is the trunk length on tree
+            // frames, so branch nodes never bias the EWMA down
             self.acceptance.observe(o.accepted as f64 / o.drafted as f64);
         }
         self.bits_per_round.observe(o.frame_bits as f64);
+        // tree frames carry more wire nodes than their per-path drafted
+        // count; the gap is the observed branching overhead
+        self.nodes_per_round.observe(o.tree_nodes.max(o.drafted) as f64);
         self.rounds += 1;
     }
 
@@ -285,6 +298,7 @@ impl LinkEstimator {
             queue_wait_p95_s: p95,
             acceptance: self.acceptance.get_or(1.0),
             bits_per_round: self.bits_per_round.get_or(0.0),
+            nodes_per_round: self.nodes_per_round.get_or(0.0),
             rounds: self.rounds,
         }
     }
@@ -307,6 +321,7 @@ mod tests {
             congestion: false,
             grant_bits: None,
             discarded: false,
+            tree_nodes: drafted,
         }
     }
 
@@ -551,6 +566,30 @@ mod tests {
         assert_eq!(sb.rounds, sa.rounds + 1);
         assert_eq!(sb.bits_per_round.to_bits(), sa.bits_per_round.to_bits(),
                    "same-size frame keeps the bits EWMA (but it was observed)");
+    }
+
+    #[test]
+    fn tree_nodes_feed_the_node_ewma_not_the_acceptance() {
+        let mut lin = LinkEstimator::new(DEFAULT_GAMMA);
+        let mut tree = LinkEstimator::new(DEFAULT_GAMMA);
+        for _ in 0..10 {
+            lin.observe(&outcome(4, 3, 700, 1e-3, 0.0));
+            // same per-path outcome, but the frame carried a 14-node tree
+            let mut o = outcome(4, 3, 2100, 1e-3, 0.0);
+            o.tree_nodes = 14;
+            tree.observe(&o);
+        }
+        let (sl, st) = (lin.state(), tree.state());
+        assert_eq!(
+            sl.acceptance.to_bits(),
+            st.acceptance.to_bits(),
+            "branch nodes must not bias the per-path acceptance EWMA"
+        );
+        assert!((sl.nodes_per_round - 4.0).abs() < 1e-9, "linear: nodes == drafted");
+        assert!((st.nodes_per_round - 14.0).abs() < 1e-9, "tree: whole node table");
+        assert!(st.bits_per_round > sl.bits_per_round, "tree bits are visible");
+        // priors: no observation yet reports 0 nodes/round
+        assert_eq!(LinkEstimator::new(DEFAULT_GAMMA).state().nodes_per_round, 0.0);
     }
 
     #[test]

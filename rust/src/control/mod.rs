@@ -79,14 +79,22 @@ impl ControlLoop {
     /// point (`Off`) or the adaptation range (`Aimd` / `Window`).
     /// `pipeline_depth` is the configured in-flight ceiling: `Off` echoes
     /// it verbatim, the adaptive policies treat it as the recovery target
-    /// of their own depth sawtooth.
+    /// of their own depth sawtooth.  `tree_branching` is the v4 token-tree
+    /// ceiling the same way: `Off` echoes it, AIMD collapses it to 1
+    /// under congestion (tree bits multiply uplink cost), the window
+    /// policy grows it when acceptance collapses (rejection continuations
+    /// only pay off when rejections happen).
     pub fn for_session(mode: AdaptiveMode, policy: Policy, window: usize,
-                       budget_bits: usize, vocab: usize, pipeline_depth: usize) -> ControlLoop {
+                       budget_bits: usize, vocab: usize, pipeline_depth: usize,
+                       tree_branching: usize) -> ControlLoop {
         let depth = pipeline_depth.max(1);
+        let branching = tree_branching.max(1);
         let boxed: Box<dyn AdaptivePolicy> = match mode {
-            AdaptiveMode::Off => {
-                Box::new(Static::new(policy, window, budget_bits).with_pipeline_depth(depth))
-            }
+            AdaptiveMode::Off => Box::new(
+                Static::new(policy, window, budget_bits)
+                    .with_pipeline_depth(depth)
+                    .with_tree_branching(branching),
+            ),
             AdaptiveMode::Aimd { target_bits } => {
                 let k0 = match policy {
                     Policy::KSqs { k } => k,
@@ -94,13 +102,15 @@ impl ControlLoop {
                 };
                 Box::new(
                     BudgetAimd::new(target_bits, k0, vocab.max(1), window)
-                        .with_pipeline_depth(depth),
+                        .with_pipeline_depth(depth)
+                        .with_tree_branching(branching),
                 )
             }
             AdaptiveMode::Window { grow, shrink } => {
                 Box::new(
                     AdaptiveWindow::new(window, budget_bits, grow, shrink)
-                        .with_pipeline_depth(depth),
+                        .with_pipeline_depth(depth)
+                        .with_tree_branching(branching),
                 )
             }
         };
@@ -147,17 +157,24 @@ mod tests {
             congestion: false,
             grant_bits: None,
             discarded: false,
+            tree_nodes: drafted,
         }
     }
 
     #[test]
     fn off_mode_yields_static_config_knobs_forever() {
         let mut cl = ControlLoop::for_session(
-            AdaptiveMode::Off, Policy::KSqs { k: 8 }, 15, 5000, 64, 1);
+            AdaptiveMode::Off, Policy::KSqs { k: 8 }, 15, 5000, 64, 1, 1);
         let first = cl.begin_batch();
         assert_eq!(
             first,
-            Knobs { sparsifier: None, ell: 15, budget_bits: 5000, pipeline_depth: 1 }
+            Knobs {
+                sparsifier: None,
+                ell: 15,
+                budget_bits: 5000,
+                pipeline_depth: 1,
+                tree_branching: 1,
+            }
         );
         for i in 0..30 {
             cl.feedback(&outcome(15, i % 16, 2000 + 100 * i));
@@ -172,7 +189,7 @@ mod tests {
         // Idealized plant: wire bits per round = 48 + 80 * K (monotone in
         // K), target 600 -> equilibrium K around 6-7.
         let mut cl = ControlLoop::for_session(
-            AdaptiveMode::Aimd { target_bits: 600 }, Policy::KSqs { k: 32 }, 15, 5000, 64, 1);
+            AdaptiveMode::Aimd { target_bits: 600 }, Policy::KSqs { k: 32 }, 15, 5000, 64, 1, 1);
         let mut bits = Vec::new();
         for _ in 0..60 {
             let knobs = cl.begin_batch();
@@ -199,7 +216,7 @@ mod tests {
         let mut cl = ControlLoop::for_session(
             AdaptiveMode::Window { grow: 0.8, shrink: 0.5 },
             Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 },
-            15, 5000, 64, 1);
+            15, 5000, 64, 1, 1);
         let k0 = cl.begin_batch();
         assert_eq!(k0.sparsifier, None, "conformal threshold stays in charge");
         assert_eq!(k0.budget_bits, 5000);

@@ -43,10 +43,16 @@ pub struct Knobs {
     /// once the handshake lands on protocol v3, and never above the
     /// session's configured depth).
     pub pipeline_depth: usize,
+    /// Token-tree branching factor b^t: candidates per tree level
+    /// (1 = the linear v3 draft; >= 2 ships protocol-v4 `DraftTree`
+    /// frames, whose wire cost multiplies with the branch count —
+    /// effective only once the handshake lands on v4, and never above
+    /// the session's configured branching).
+    pub tree_branching: usize,
 }
 
-/// One per-round knob sample (K^t, ℓ^t, B^t, D^t) — the convergence
-/// traces the benches export next to the steady-state means.
+/// One per-round knob sample (K^t, ℓ^t, B^t, D^t, b^t) — the
+/// convergence traces the benches export next to the steady-state means.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KnobPoint {
     /// speculative round index within the trace
@@ -57,6 +63,7 @@ pub struct KnobPoint {
     pub ell: usize,
     pub budget_bits: usize,
     pub pipeline_depth: usize,
+    pub tree_branching: usize,
 }
 
 impl KnobPoint {
@@ -71,18 +78,21 @@ impl KnobPoint {
             ell: knobs.ell,
             budget_bits: knobs.budget_bits,
             pipeline_depth: knobs.pipeline_depth,
+            tree_branching: knobs.tree_branching,
         }
     }
 
-    /// CSV cell: `round,k,ell,budget,depth` (k = -1 when policy-owned).
+    /// CSV cell: `round,k,ell,budget,depth,branching` (k = -1 when
+    /// policy-owned).
     pub fn csv(&self) -> String {
         format!(
-            "{},{},{},{},{}",
+            "{},{},{},{},{},{}",
             self.round,
             self.k.map_or(-1, |k| k as i64),
             self.ell,
             self.budget_bits,
-            self.pipeline_depth
+            self.pipeline_depth,
+            self.tree_branching
         )
     }
 }
@@ -113,6 +123,13 @@ pub struct BatchOutcome {
     /// pipelining): its bits crossed the wire but nothing was verified,
     /// so it carries no acceptance information
     pub discarded: bool,
+    /// wire nodes this round's frame carried (== `drafted` for linear
+    /// frames; larger for protocol-v4 trees).  `drafted`/`accepted`
+    /// stay *per-path* quantities — the trunk length and the surviving
+    /// depth — so the estimator's acceptance EWMA is unbiased against
+    /// branch nodes the walk never examined, while the full wire cost
+    /// still lands in `frame_bits`.
+    pub tree_nodes: usize,
 }
 
 /// A per-session knob controller.  `begin_batch` picks the knobs for the
@@ -136,16 +153,23 @@ pub struct Static {
     pub ell: usize,
     pub budget_bits: usize,
     pub pipeline_depth: usize,
+    pub tree_branching: usize,
 }
 
 impl Static {
     pub fn new(policy: crate::sqs::Policy, ell: usize, budget_bits: usize) -> Static {
-        Static { policy, ell, budget_bits, pipeline_depth: 1 }
+        Static { policy, ell, budget_bits, pipeline_depth: 1, tree_branching: 1 }
     }
 
     /// Echo a fixed pipeline depth on every round's knobs.
     pub fn with_pipeline_depth(mut self, depth: usize) -> Static {
         self.pipeline_depth = depth.max(1);
+        self
+    }
+
+    /// Echo a fixed tree branching factor on every round's knobs.
+    pub fn with_tree_branching(mut self, branching: usize) -> Static {
+        self.tree_branching = branching.max(1);
         self
     }
 }
@@ -157,6 +181,7 @@ impl AdaptivePolicy for Static {
             ell: self.ell,
             budget_bits: self.budget_bits,
             pipeline_depth: self.pipeline_depth,
+            tree_branching: self.tree_branching,
         }
     }
 
@@ -213,6 +238,13 @@ pub struct BudgetAimd {
     pub depth: usize,
     /// configured ceiling on the in-flight window
     pub depth_max: usize,
+    /// current tree branching b^t (the fifth knob): collapses to 1 on a
+    /// congestion event — every extra branch multiplies the frame's
+    /// uplink bits, the very resource that is congested — and recovers
+    /// additively back to `branching_max`
+    pub branching: usize,
+    /// configured ceiling on the tree branching factor
+    pub branching_max: usize,
     /// wire bits of the round awaiting an AIMD decision
     last_frame_bits: Option<usize>,
     /// standing budget grant from the cloud (v2 feedback extension)
@@ -234,6 +266,8 @@ impl BudgetAimd {
             md: 0.75,
             depth: 1,
             depth_max: 1,
+            branching: 1,
+            branching_max: 1,
             last_frame_bits: None,
             grant_bits: None,
             congested: false,
@@ -244,6 +278,13 @@ impl BudgetAimd {
     pub fn with_pipeline_depth(mut self, depth: usize) -> BudgetAimd {
         self.depth_max = depth.max(1);
         self.depth = self.depth_max;
+        self
+    }
+
+    /// Let the sawtooth also steer the tree branching, up to `branching`.
+    pub fn with_tree_branching(mut self, branching: usize) -> BudgetAimd {
+        self.branching_max = branching.max(1);
+        self.branching = self.branching_max;
         self
     }
 
@@ -276,17 +317,21 @@ impl AdaptivePolicy for BudgetAimd {
         let signal = self.congested && self.grant_bits.is_none();
         if let Some(frame) = self.last_frame_bits.take() {
             if frame > target || signal || self.queue_congested(link, target) {
-                // congestion event: multiplicative decrease on K, and the
-                // pipeline collapses to strict alternation — keeping a deep
-                // window open against a congested channel only queues more
-                // soon-to-be-stale speculation
+                // congestion event: multiplicative decrease on K, the
+                // pipeline collapses to strict alternation, and the tree
+                // collapses to its linear trunk — keeping a deep window
+                // open against a congested channel only queues more
+                // soon-to-be-stale speculation, and every extra branch
+                // multiplies the uplink bits that congested it
                 self.k =
                     ((self.k as f64 * self.md).floor() as usize).clamp(self.k_min, self.k_max);
                 self.depth = 1;
+                self.branching = 1;
             } else if link.bits_per_round <= target as f64 {
                 // additive increase, gated on the EWMA having headroom too
                 self.k = (self.k + 1).min(self.k_max);
                 self.depth = (self.depth + 1).min(self.depth_max);
+                self.branching = (self.branching + 1).min(self.branching_max);
             }
         }
         Knobs {
@@ -294,6 +339,7 @@ impl AdaptivePolicy for BudgetAimd {
             ell: self.ell,
             budget_bits: target,
             pipeline_depth: self.depth,
+            tree_branching: self.branching,
         }
     }
 
@@ -332,6 +378,12 @@ pub struct AdaptiveWindow {
     /// pipelines only pay off when speculation survives)
     pub pipeline_depth: usize,
     depth_max: usize,
+    /// tree branching: steered *inversely* to acceptance — rejection
+    /// continuations only pay off when rejections actually happen, so
+    /// low acceptance grows the branch count and high acceptance
+    /// collapses the tree back to its linear trunk (saving the bits)
+    pub tree_branching: usize,
+    branching_max: usize,
 }
 
 impl AdaptiveWindow {
@@ -348,6 +400,8 @@ impl AdaptiveWindow {
             budget_bits,
             pipeline_depth: 1,
             depth_max: 1,
+            tree_branching: 1,
+            branching_max: 1,
         }
     }
 
@@ -355,6 +409,15 @@ impl AdaptiveWindow {
     pub fn with_pipeline_depth(mut self, depth: usize) -> AdaptiveWindow {
         self.depth_max = depth.max(1);
         self.pipeline_depth = self.depth_max;
+        self
+    }
+
+    /// Let acceptance also steer the tree branching, up to `branching`
+    /// (starts at 1: branches are only worth their bits once rejections
+    /// are actually observed).
+    pub fn with_tree_branching(mut self, branching: usize) -> AdaptiveWindow {
+        self.branching_max = branching.max(1);
+        self.tree_branching = 1;
         self
     }
 }
@@ -367,9 +430,13 @@ impl AdaptivePolicy for AdaptiveWindow {
             if link.acceptance >= self.grow {
                 self.ell = (self.ell + 1).min(self.ell_max);
                 self.pipeline_depth = (self.pipeline_depth + 1).min(self.depth_max);
+                // speculation is surviving: stop paying for hedges
+                self.tree_branching = 1;
             } else if link.acceptance <= self.shrink {
                 self.ell = self.ell.saturating_sub(1).max(self.ell_min);
                 self.pipeline_depth = 1;
+                // frequent rejections: hedge with more continuations
+                self.tree_branching = (self.tree_branching + 1).min(self.branching_max);
             }
         }
         Knobs {
@@ -377,6 +444,7 @@ impl AdaptivePolicy for AdaptiveWindow {
             ell: self.ell,
             budget_bits: self.budget_bits,
             pipeline_depth: self.pipeline_depth,
+            tree_branching: self.tree_branching,
         }
     }
 
@@ -405,6 +473,7 @@ mod tests {
             queue_wait_p95_s: 0.0,
             acceptance: 1.0,
             bits_per_round: 0.0,
+            nodes_per_round: 0.0,
             rounds: 0,
         }
     }
@@ -420,6 +489,7 @@ mod tests {
             congestion: false,
             grant_bits: None,
             discarded: false,
+            tree_nodes: drafted,
         }
     }
 
@@ -429,7 +499,13 @@ mod tests {
         let k = s.begin_batch(&idle_link());
         assert_eq!(
             k,
-            Knobs { sparsifier: None, ell: 15, budget_bits: 5000, pipeline_depth: 1 }
+            Knobs {
+                sparsifier: None,
+                ell: 15,
+                budget_bits: 5000,
+                pipeline_depth: 1,
+                tree_branching: 1,
+            }
         );
         for _ in 0..10 {
             s.feedback(&outcome(15, 3, 9999));
@@ -550,16 +626,29 @@ mod tests {
             ell: 12,
             budget_bits: 700,
             pipeline_depth: 4,
+            tree_branching: 2,
         };
         let kp = KnobPoint::from_knobs(3, &knobs);
         assert_eq!(
             kp,
-            KnobPoint { round: 3, k: Some(5), ell: 12, budget_bits: 700, pipeline_depth: 4 }
+            KnobPoint {
+                round: 3,
+                k: Some(5),
+                ell: 12,
+                budget_bits: 700,
+                pipeline_depth: 4,
+                tree_branching: 2,
+            }
         );
-        assert_eq!(kp.csv(), "3,5,12,700,4");
-        let deferred =
-            Knobs { sparsifier: None, ell: 15, budget_bits: 5000, pipeline_depth: 1 };
-        assert_eq!(KnobPoint::from_knobs(0, &deferred).csv(), "0,-1,15,5000,1");
+        assert_eq!(kp.csv(), "3,5,12,700,4,2");
+        let deferred = Knobs {
+            sparsifier: None,
+            ell: 15,
+            budget_bits: 5000,
+            pipeline_depth: 1,
+            tree_branching: 1,
+        };
+        assert_eq!(KnobPoint::from_knobs(0, &deferred).csv(), "0,-1,15,5000,1,1");
     }
 
     #[test]
@@ -593,6 +682,37 @@ mod tests {
         assert_eq!(p.begin_batch(&accepting(0.9, 2)).pipeline_depth, 2, "recover");
         assert_eq!(p.begin_batch(&accepting(0.9, 3)).pipeline_depth, 3);
         assert_eq!(p.begin_batch(&accepting(0.9, 4)).pipeline_depth, 3, "capped");
+    }
+
+    #[test]
+    fn aimd_branching_collapses_on_congestion_and_recovers() {
+        let mut p = BudgetAimd::new(600, 8, 64, 15).with_tree_branching(3);
+        assert_eq!(p.begin_batch(&idle_link()).tree_branching, 3, "starts at the ceiling");
+        p.feedback(&outcome(10, 10, 5000)); // overshoot: congestion event
+        assert_eq!(p.begin_batch(&idle_link()).tree_branching, 1, "tree collapses to its trunk");
+        for want in [2usize, 3, 3] {
+            p.feedback(&outcome(10, 10, 100));
+            assert_eq!(p.begin_batch(&idle_link()).tree_branching, want);
+        }
+        // without with_tree_branching the knob is pinned at 1
+        let mut q = BudgetAimd::new(600, 8, 64, 15);
+        q.feedback(&outcome(10, 10, 100));
+        assert_eq!(q.begin_batch(&idle_link()).tree_branching, 1);
+    }
+
+    #[test]
+    fn window_branching_hedges_low_acceptance() {
+        let accepting = |acc: f64, rounds: u64| LinkState {
+            acceptance: acc,
+            rounds,
+            ..idle_link()
+        };
+        let mut p = AdaptiveWindow::new(15, 5000, 0.8, 0.5).with_tree_branching(3);
+        assert_eq!(p.begin_batch(&accepting(1.0, 0)).tree_branching, 1, "starts linear");
+        assert_eq!(p.begin_batch(&accepting(0.2, 1)).tree_branching, 2, "rejections hedge");
+        assert_eq!(p.begin_batch(&accepting(0.2, 2)).tree_branching, 3);
+        assert_eq!(p.begin_batch(&accepting(0.2, 3)).tree_branching, 3, "capped");
+        assert_eq!(p.begin_batch(&accepting(0.95, 4)).tree_branching, 1, "survival collapses");
     }
 
     #[test]

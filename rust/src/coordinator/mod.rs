@@ -8,14 +8,20 @@ pub use metrics::Metrics;
 pub use scheduler::{Request, Response, Scheduler, Worker, WorkerFactory};
 pub use session::{ArBaseline, BatchRecord, SdSession, SessionConfig, SessionResult, TimingMode};
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
+#[cfg(feature = "pjrt")]
 use crate::channel::{LinkConfig, SimulatedLink};
+#[cfg(feature = "pjrt")]
 use crate::model::lm::{ModelAssets, PjrtDraft, PjrtTarget};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Manifest};
 
 /// Everything needed to run PJRT-backed sessions on one thread.
+#[cfg(feature = "pjrt")]
 pub struct PjrtStack {
     pub engine: Arc<Engine>,
     pub manifest: Manifest,
@@ -23,6 +29,7 @@ pub struct PjrtStack {
     pub llm: Arc<ModelAssets>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtStack {
     /// Load artifacts + weights and compile all modules (once per thread).
     pub fn load(kv_budget_bytes: u64) -> Result<PjrtStack> {

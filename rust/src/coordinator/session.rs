@@ -30,6 +30,14 @@
 //! = 1` reproduces the v2 alternating protocol bit for bit (pinned by
 //! `tests/pipelining.rs` against [`SdSession::run_reference_lockstep`]),
 //! and every pipelined run stays a pure function of (config, seed).
+//!
+//! Since protocol v4 a pipelined session may additionally speculate
+//! *token trees* (`tree_branching >= 2`): each frame carries rejection
+//! continuations around the linear trunk, the cloud's tree walk can
+//! survive a rejection into a sibling chain, and the edge branches its
+//! rollback to the surviving node instead of the epoch root.
+//! `tree_branching = 1` is the v3 linear pipeline bit for bit (pinned
+//! by `tests/tree_speculation.rs`).
 
 use std::collections::VecDeque;
 
@@ -42,7 +50,7 @@ use crate::edge::EdgeNode;
 use crate::model::{DraftLm, TargetLm};
 use crate::protocol::{
     negotiate, Direction, Ext, FeedbackV2, Frame, LinkTransport, SeqAck, SeqDraft, Transport,
-    PROTOCOL_V3,
+    TreeAck, TreeDraft, PROTOCOL_V3, PROTOCOL_V4,
 };
 use crate::sqs::Policy;
 use crate::util::stats::Summary;
@@ -72,6 +80,11 @@ pub struct SessionConfig {
     /// maximum unacknowledged drafts in flight (1 = the v2 alternating
     /// protocol, bit-exact; >= 2 negotiates protocol v3 and pipelines)
     pub pipeline_depth: usize,
+    /// token-tree branching factor (1 = the v3 linear pipeline,
+    /// bit-exact; >= 2 with `pipeline_depth >= 2` negotiates protocol
+    /// v4 and ships `DraftTree` frames whose rejection continuations
+    /// the cloud can survive into)
+    pub tree_branching: usize,
 }
 
 impl Default for SessionConfig {
@@ -87,6 +100,7 @@ impl Default for SessionConfig {
             timing: TimingMode::Measured,
             adaptive: AdaptiveMode::Off,
             pipeline_depth: 1,
+            tree_branching: 1,
         }
     }
 }
@@ -102,6 +116,10 @@ pub struct BatchRecord {
     /// downlink feedback frame size, bits (v2: varies with extensions)
     pub feedback_bits: usize,
     pub mean_k: f64,
+    /// wire nodes the round's frame carried (== `drafted` on linear
+    /// frames; larger for protocol-v4 trees, whose `drafted` stays the
+    /// per-path trunk length)
+    pub tree_nodes: usize,
     /// the control-plane knobs (K^t, ℓ^t, B^t) in force this round
     pub knobs: KnobPoint,
     pub t_slm: f64,
@@ -119,6 +137,8 @@ pub struct SessionResult {
     pub n_rej: usize,
     /// in-flight depth the session ran at (1 = alternating)
     pub pipeline_depth: usize,
+    /// token-tree branching ceiling the session ran at (1 = linear)
+    pub tree_branching: usize,
     /// speculative batches the cloud discarded as stale (pipelined
     /// sessions; their wire bits still count in the ledgers, but they
     /// produce no `BatchRecord`)
@@ -223,9 +243,15 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         }
         // a depth >= 2 session wants sequenced drafts: advertise v3 in
         // the handshake (a v2 peer negotiates the session back down and
-        // the engine falls back to strict alternation)
+        // the engine falls back to strict alternation); with a tree
+        // branching factor on top it advertises v4 (a v3 peer lands the
+        // session back on the linear pipeline)
         if cfg.pipeline_depth > 1 {
-            edge.wire.set_version(PROTOCOL_V3);
+            edge.wire.set_version(if cfg.tree_branching > 1 {
+                PROTOCOL_V4
+            } else {
+                PROTOCOL_V3
+            });
         }
         let control = ControlLoop::for_session(
             cfg.adaptive,
@@ -234,6 +260,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             cfg.budget_bits,
             vocab,
             cfg.pipeline_depth,
+            cfg.tree_branching,
         );
         let cloud = CloudNode::new(target, cfg.seed ^ 0xC);
         SdSession {
@@ -322,6 +349,10 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
     fn run_engine(&mut self, prompt: &[u16], hs: HandshakeLedger) -> Result<SessionResult> {
         let depth_cfg = self.cfg.pipeline_depth.max(1);
         let pipelined = depth_cfg > 1 && self.edge.wire.pipelining();
+        // token trees need a pipelined v4 session; the per-round knob can
+        // still collapse an eligible session to linear DraftSeq frames
+        let branching_cfg = self.cfg.tree_branching.max(1);
+        let tree_capable = pipelined && branching_cfg > 1 && self.edge.wire.trees();
 
         let mut uplink_bits = hs.up_bits;
         let mut downlink_bits = hs.down_bits;
@@ -362,30 +393,60 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 let ctx_before = self.edge.context_len();
                 let knobs = self.control.begin_batch();
                 window = knobs.pipeline_depth.max(1);
+                let branching = if tree_capable {
+                    knobs.tree_branching.clamp(1, branching_cfg)
+                } else {
+                    1
+                };
                 let remaining = self.cfg.max_new_tokens - (produced + speculated);
-                let drafted = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
-                let l = drafted.frame.tokens.len();
+                // a v4 session whose branching knob collapsed to 1 drafts
+                // (and ships) exactly the linear v3 shape for that round
+                let (body, parents, trunk, node_dist_bits, node_ks, leaf_count, t_slm_raw) =
+                    if branching >= 2 {
+                        let dt = self.edge.draft_tree_knobs(self.cfg.temp, remaining, &knobs)?;
+                        let trunk = dt.trunk_tokens();
+                        let leaves = dt.leaf_count();
+                        (
+                            dt.frame,
+                            Some(dt.parents),
+                            Some(trunk),
+                            dt.dist_bits,
+                            dt.ks,
+                            leaves,
+                            dt.t_slm,
+                        )
+                    } else {
+                        let db = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
+                        (db.frame, None, None, db.dist_bits, db.ks, 1, db.t_slm)
+                    };
+                let tree_nodes = body.tokens.len();
+                let l = trunk.as_ref().map_or(tree_nodes, Vec::len);
                 if l == 0 {
                     exhausted = true; // context full: drain what is in flight
                     continue;
                 }
+                // compute scales with the whole node table, not the trunk
                 let slm_time = match self.cfg.timing {
-                    TimingMode::Measured => drafted.t_slm,
-                    TimingMode::Modeled { slm_step_s, .. } => slm_step_s * l as f64,
+                    TimingMode::Measured => t_slm_raw,
+                    TimingMode::Modeled { slm_step_s, .. } => slm_step_s * tree_nodes as f64,
                 };
                 let draft_done = t_edge + slm_time;
                 t_edge = draft_done;
 
                 let seq = next_seq;
                 next_seq = next_seq.wrapping_add(1);
-                let dist_bits: usize = drafted.dist_bits.iter().sum();
-                let mean_k = drafted.ks.iter().sum::<usize>() as f64 / l as f64;
+                let dist_bits: usize = node_dist_bits.iter().sum();
+                let mean_k = node_ks.iter().sum::<usize>() as f64 / tree_nodes as f64;
 
                 // ---- uplink: encode once, serialize on the channel ------
-                let up_frame = if pipelined {
-                    Frame::DraftSeq(SeqDraft { seq, epoch: edge_epoch, frame: drafted.frame })
-                } else {
-                    Frame::Draft(drafted.frame)
+                let up_frame = match parents {
+                    Some(parents) => {
+                        Frame::DraftTree(TreeDraft { seq, epoch: edge_epoch, parents, frame: body })
+                    }
+                    None if pipelined => {
+                        Frame::DraftSeq(SeqDraft { seq, epoch: edge_epoch, frame: body })
+                    }
+                    None => Frame::Draft(body),
                 };
                 let d_up = self.transport.send_frame(
                     Direction::Up,
@@ -404,7 +465,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 // ---- cloud: decode the wire bytes + verify.  Evaluated
                 // eagerly at send time (FIFO service order == send order;
                 // nothing reaches the edge before `arrive_at`) ------------
-                let (verdict, llm_time, fb_out) = match self
+                let (verdict, llm_time, fb_out, full_trunk) = match self
                     .transport
                     .recv_frame(Direction::Up, &mut self.edge.wire)?
                 {
@@ -416,12 +477,17 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                             TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
                         };
                         let fb = v.feedback_v2(Vec::new());
-                        (Some(v), llm, fb)
+                        (Some(v), llm, fb, false)
                     }
                     Frame::DraftSeq(sd) if pipelined => {
                         if sd.epoch != cloud_epoch {
                             // stale: drafted on a branch a rejection killed
-                            (None, 0.0, FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch))
+                            (
+                                None,
+                                0.0,
+                                FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch),
+                                false,
+                            )
                         } else {
                             let v = self
                                 .cloud
@@ -440,7 +506,45 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                                 epoch: sd.epoch,
                                 discard: false,
                             }));
-                            (Some(v), llm, fb)
+                            (Some(v), llm, fb, false)
+                        }
+                    }
+                    Frame::DraftTree(td) if tree_capable => {
+                        if td.epoch != cloud_epoch {
+                            // stale tree: same linear discard ack, so the
+                            // edge's ledger drains uniformly
+                            (
+                                None,
+                                0.0,
+                                FeedbackV2::discard(td.frame.batch_id, td.seq, td.epoch),
+                                false,
+                            )
+                        } else {
+                            let tv = self.cloud.verify_tree(&td, cloud_prev, self.cfg.temp)?;
+                            // the epoch moves unless the full trunk held:
+                            // any divergence invalidates the speculative
+                            // continuation drafted past the trunk tip
+                            if !tv.full_trunk {
+                                cloud_epoch = cloud_epoch.wrapping_add(1);
+                            }
+                            cloud_prev = *tv.verdict.committed.last().unwrap();
+                            let llm = match self.cfg.timing {
+                                TimingMode::Measured => tv.verdict.t_llm,
+                                // one verify window per root-to-leaf path
+                                TimingMode::Modeled { llm_call_s, .. } => {
+                                    llm_call_s * leaf_count as f64
+                                }
+                            };
+                            let mut fb = tv.verdict.feedback_v2(Vec::new());
+                            fb.exts.push(Ext::TreeAck(TreeAck {
+                                seq: td.seq,
+                                epoch: td.epoch,
+                                discard: false,
+                                resampled: tv.verdict.rejected,
+                                node: tv.survivor,
+                                depth: tv.depth as u8,
+                            }));
+                            (Some(tv.verdict), llm, fb, tv.full_trunk)
                         }
                     }
                     other => {
@@ -473,6 +577,9 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     seq,
                     ctx_before,
                     drafted: l,
+                    tree_nodes,
+                    trunk,
+                    full_trunk,
                     dist_bits,
                     mean_k,
                     knobs,
@@ -504,7 +611,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     // stale frame, discarded by the cloud: retire the seq;
                     // its wire time and bits were still spent
                     debug_assert!(pipelined);
-                    debug_assert_eq!(p.fb.ack().map(|a| a.seq), Some(p.seq));
+                    debug_assert_eq!(p.fb.acked_seq().map(|(s, _)| s), Some(p.seq));
                     discarded += 1;
                     t_slm += p.t_slm;
                     t_up += p.t_uplink;
@@ -519,11 +626,33 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                         congestion: p.fb.congestion(),
                         grant_bits: p.fb.grant(),
                         discarded: true,
+                        tree_nodes: p.tree_nodes,
                     });
                 }
                 Some(verdict) => {
                     let accepted = p.fb.accepted as usize;
-                    if pipelined {
+                    if let Some(trunk) = &p.trunk {
+                        // token tree: branch the rollback to the surviving
+                        // node instead of the epoch root
+                        debug_assert_eq!(p.fb.tree_ack().map(|a| a.seq), Some(p.seq));
+                        let survivor =
+                            &verdict.committed[..verdict.committed.len()
+                                - verdict.rejected as usize];
+                        let full = self.edge.apply_feedback_tree(
+                            p.ctx_before,
+                            trunk,
+                            survivor,
+                            verdict.rejected,
+                            p.fb.new_token,
+                        )?;
+                        debug_assert_eq!(full, p.full_trunk, "edge/cloud trunk verdicts agree");
+                        if !full {
+                            // any divergence from the trunk invalidates the
+                            // continuation drafted past its tip
+                            edge_epoch = edge_epoch.wrapping_add(1);
+                            exhausted = false; // rollback freed context room
+                        }
+                    } else if pipelined {
                         debug_assert_eq!(p.fb.ack().map(|a| a.seq), Some(p.seq));
                         self.edge.apply_feedback_pipelined(
                             p.ctx_before,
@@ -550,6 +679,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     self.seq.extend_from_slice(&verdict.committed);
 
                     // ---- control plane: fold the round's ledger back in -
+                    // (per-path quantities: trunk drafted, path accepted)
                     self.control.feedback(&BatchOutcome {
                         drafted: p.drafted,
                         accepted: verdict.accepted,
@@ -560,6 +690,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                         congestion: p.fb.congestion(),
                         grant_bits: p.fb.grant(),
                         discarded: false,
+                        tree_nodes: p.tree_nodes,
                     });
 
                     // consistency: edge and cloud contexts must match the
@@ -588,6 +719,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                         frame_bits: p.frame_bits,
                         feedback_bits: p.feedback_bits,
                         mean_k: p.mean_k,
+                        tree_nodes: p.tree_nodes,
                         knobs: KnobPoint::from_knobs(round, &p.knobs),
                         t_slm: p.t_slm,
                         t_uplink: p.t_uplink,
@@ -711,6 +843,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
                 discarded: false,
+                tree_nodes: l,
             });
 
             // consistency: edge and cloud contexts must match ours
@@ -734,6 +867,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 frame_bits: d_up.bits,
                 feedback_bits: d_down.bits,
                 mean_k: drafted.ks.iter().sum::<usize>() as f64 / l as f64,
+                tree_nodes: l,
                 knobs: KnobPoint::from_knobs(round, &knobs),
                 t_slm: slm_time,
                 t_uplink: up_time,
@@ -789,6 +923,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             batches,
             n_rej,
             pipeline_depth: self.cfg.pipeline_depth.max(1),
+            tree_branching: self.cfg.tree_branching.max(1),
             discarded_batches: discarded,
             total_time_s,
             t_slm_s: t_slm,
@@ -837,7 +972,14 @@ struct HandshakeLedger {
 struct InFlightBatch {
     seq: u16,
     ctx_before: usize,
+    /// per-path drafted basis: the trunk length for tree frames
     drafted: usize,
+    /// wire nodes the frame carried (== drafted for linear frames)
+    tree_nodes: usize,
+    /// token-tree trunk values (None: linear frame)
+    trunk: Option<Vec<u16>>,
+    /// cloud-side verdict on whether the full trunk held (tree frames)
+    full_trunk: bool,
     dist_bits: usize,
     mean_k: f64,
     knobs: Knobs,
@@ -902,6 +1044,7 @@ impl<T: TargetLm> ArBaseline<T> {
             batches: Vec::new(),
             n_rej: 0,
             pipeline_depth: 1,
+            tree_branching: 1,
             discarded_batches: 0,
             total_time_s: t_up + t_llm + t_down,
             t_slm_s: 0.0,

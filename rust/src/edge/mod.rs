@@ -7,12 +7,12 @@
 //! (iv) stops when the uplink bit budget B is exhausted — the paper's
 //! L^t = max{L : sum b_n^t(K_n^t, ell) <= B}, enforced sequentially.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::codec::{DraftFrame, DraftToken};
 use crate::control::Knobs;
 use crate::model::DraftLm;
-use crate::protocol::WireCodec;
+use crate::protocol::{WireCodec, NO_PARENT};
 use crate::sqs::probs::sample_lattice;
 use crate::sqs::{ConformalController, Policy, Sparsifier};
 use crate::util::rng::Pcg64;
@@ -32,6 +32,41 @@ pub struct DraftedBatch {
     pub t_slm: f64,
     /// dense draft distributions (diagnostics; Theorem 1 tracking)
     pub probs: Vec<Vec<f32>>,
+}
+
+/// Outcome of drafting one token tree at the edge (protocol v4): the
+/// node table plus its parent pointers, with the trunk — the linear
+/// draft the edge's context actually follows — at nodes `0..trunk_len`.
+pub struct DraftedTree {
+    /// `parents[i]` < i, or [`NO_PARENT`] for roots
+    pub parents: Vec<u8>,
+    /// node table in node order (trunk first, then branch chains)
+    pub frame: DraftFrame,
+    /// distribution-payload bits per node (whole-tree wire cost basis)
+    pub dist_bits: Vec<usize>,
+    /// support size K_n per node
+    pub ks: Vec<usize>,
+    /// dropped mass alpha_n per node
+    pub alphas: Vec<f32>,
+    /// measured SLM compute seconds over the whole tree
+    pub t_slm: f64,
+    /// trunk length (the per-path accounting basis; the edge context
+    /// ends at the trunk tip)
+    pub trunk_len: usize,
+}
+
+impl DraftedTree {
+    /// Trunk token values (nodes `0..trunk_len`, in order).
+    pub fn trunk_tokens(&self) -> Vec<u16> {
+        self.frame.tokens[..self.trunk_len].iter().map(|t| t.token).collect()
+    }
+
+    /// Number of root-to-leaf paths (cloud verify windows the tree
+    /// costs; the modeled-time basis for tree verification).
+    pub fn leaf_count(&self) -> usize {
+        let n = self.frame.tokens.len();
+        (0..n as u8).filter(|i| !self.parents.contains(i)).count()
+    }
 }
 
 pub struct EdgeNode<D: DraftLm> {
@@ -120,6 +155,7 @@ impl<D: DraftLm> EdgeNode<D> {
             ell: self.max_batch_drafts,
             budget_bits: self.budget_bits,
             pipeline_depth: 1,
+            tree_branching: 1,
         };
         self.draft_batch_knobs(temp, cap, &knobs)
     }
@@ -187,6 +223,158 @@ impl<D: DraftLm> EdgeNode<D> {
             t_slm,
             probs: probs_log,
         })
+    }
+
+    /// Draft one token tree under per-batch knobs (protocol v4).
+    ///
+    /// The *trunk* is exactly the linear budgeted draft
+    /// ([`Self::draft_batch_knobs`] — same RNG draws, same budget rule,
+    /// same conformal observations), and the edge's context ends at the
+    /// trunk tip so speculative continuations hang off it unchanged.
+    /// Around the trunk, `knobs.tree_branching - 1` *rejection
+    /// continuations* are added per trunk depth: a sibling token sampled
+    /// i.i.d. from that depth's quantized distribution (the i.i.d. draw
+    /// is what keeps the cloud's recursive rejection sampling exact —
+    /// duplicates of the trunk token are allowed and simply burn a
+    /// candidate), continued as a fresh linear chain down to the trunk's
+    /// depth, then rolled back.  If the cloud rejects the trunk at depth
+    /// d, the walk can survive into the sibling chain instead of
+    /// resampling and discarding, which is what converts rejections into
+    /// useful verification.
+    ///
+    /// Costs scale with node count on purpose: every node carries its
+    /// own distribution payload (tree bits multiply uplink cost — the
+    /// AIMD branching knob reacts to exactly that), and branch drafting
+    /// adds SLM compute.  The budget rule bounds the *trunk* like the
+    /// linear path; branch nodes ride on top, capped only by the 8-bit
+    /// node id space, so `frame_bits` overshoot is visible to the
+    /// control plane rather than silently clipped.
+    pub fn draft_tree_knobs(&mut self, temp: f32, cap: usize, knobs: &Knobs)
+                            -> Result<DraftedTree> {
+        let branching = knobs.tree_branching.max(1);
+        if branching < 2 {
+            bail!("tree drafting needs tree_branching >= 2 (linear drafts use draft_batch_knobs)");
+        }
+        let ctx_before = self.draft.len();
+        // ---- trunk: the linear budgeted draft, verbatim ----------------
+        let trunk = self.draft_batch_knobs(temp, cap, knobs)?;
+        let trunk_len = trunk.frame.tokens.len();
+        let mut frame = trunk.frame;
+        let mut dist_bits = trunk.dist_bits;
+        let mut ks = trunk.ks;
+        let mut alphas = trunk.alphas;
+        let mut t_slm = trunk.t_slm;
+        if trunk_len == 0 {
+            return Ok(DraftedTree {
+                parents: Vec::new(),
+                frame,
+                dist_bits,
+                ks,
+                alphas,
+                t_slm,
+                trunk_len: 0,
+            });
+        }
+        let mut parents: Vec<u8> = (0..trunk_len)
+            .map(|i| if i == 0 { NO_PARENT } else { (i - 1) as u8 })
+            .collect();
+
+        // ---- rejection continuations: sibling + chain per trunk depth --
+        let sp = match knobs.sparsifier {
+            Some(s) => s,
+            None => self.sparsifier(),
+        };
+        'branches: for depth in 1..=trunk_len {
+            for _ in 1..branching {
+                // a whole branch must fit in the 8-bit node id space
+                let branch_nodes = trunk_len - depth + 1;
+                if frame.tokens.len() + branch_nodes > NO_PARENT as usize {
+                    break 'branches;
+                }
+                // sibling: an i.i.d. alternative draw from the trunk
+                // node's own quantized distribution (same context)
+                let level_quant = frame.tokens[depth - 1].quant.clone();
+                let sib_parent =
+                    if depth == 1 { NO_PARENT } else { (depth - 2) as u8 };
+                let dense = level_quant.to_dense_counts(self.draft.vocab());
+                let sib_token = sample_lattice(&dense, self.ell, &mut self.rng) as u16;
+                self.draft.rollback(ctx_before + depth - 1)?;
+                self.draft.commit(sib_token)?;
+                let b_n = self.wire.token_bits(level_quant.k()).dist_bits();
+                dist_bits.push(b_n);
+                ks.push(level_quant.k());
+                alphas.push(level_quant.alpha);
+                parents.push(sib_parent);
+                frame.tokens.push(DraftToken { quant: level_quant, token: sib_token });
+                let mut prev_node = (frame.tokens.len() - 1) as u8;
+                // chain the sibling forward to the trunk's full depth
+                for _ in depth..trunk_len {
+                    if self.draft.len() + 1 >= self.draft.max_len() {
+                        break;
+                    }
+                    let t0 = std::time::Instant::now();
+                    let step = self.draft.next_sqs(temp, &sp, self.ell)?;
+                    t_slm += t0.elapsed().as_secs_f64();
+                    let k = step.quant.k();
+                    let b_n = self.wire.token_bits(k).dist_bits();
+                    let dense = step.quant.to_dense_counts(self.draft.vocab());
+                    let token = sample_lattice(&dense, self.ell, &mut self.rng) as u16;
+                    self.draft.commit(token)?;
+                    dist_bits.push(b_n);
+                    ks.push(k);
+                    alphas.push(step.quant.alpha);
+                    parents.push(prev_node);
+                    frame.tokens.push(DraftToken { quant: step.quant, token });
+                    prev_node = (frame.tokens.len() - 1) as u8;
+                }
+            }
+        }
+
+        // ---- restore the trunk context: speculation hangs off its tip -
+        // (KV-coherent backends handle the replay: PjrtDraft's rollback
+        // lowers kv_valid, so catch_up re-decodes the trunk rows before
+        // the next fused step attends over them)
+        self.draft.rollback(ctx_before)?;
+        for dt in &frame.tokens[..trunk_len] {
+            self.draft.commit(dt.token)?;
+        }
+
+        Ok(DraftedTree { parents, frame, dist_bits, ks, alphas, t_slm, trunk_len })
+    }
+
+    /// Apply cloud feedback for a token-tree (protocol-v4) batch: branch
+    /// the KV/context rollback to the *surviving node* instead of the
+    /// epoch root.  `survivor` is the accepted root-to-node path's token
+    /// values; the context keeps the prefix it shares with the trunk,
+    /// replays the divergent suffix, and appends the residual resample
+    /// when one was drawn.  When the survivor IS the full trunk (token
+    /// values) and nothing was resampled, the context — and the
+    /// speculation drafted past it — is left untouched.  Returns whether
+    /// that full-trunk case held, i.e. whether the epoch may stay put.
+    pub fn apply_feedback_tree(&mut self, ctx_len_before: usize, trunk: &[u16],
+                               survivor: &[u16], resampled: bool, new_token: u16)
+                               -> Result<bool> {
+        let full_trunk = !resampled && survivor == trunk;
+        if !full_trunk {
+            let lcp = survivor
+                .iter()
+                .zip(trunk)
+                .take_while(|(a, b)| a == b)
+                .count();
+            self.draft.rollback(ctx_len_before + lcp)?;
+            for &t in &survivor[lcp..] {
+                self.draft.commit(t)?;
+            }
+            if resampled {
+                self.draft.commit(new_token)?;
+            }
+        }
+        if let Some(c) = self.conformal.as_mut() {
+            // per-path acceptance: the trunk is the drafted basis, the
+            // surviving depth (capped at it) is what got accepted
+            c.feedback(trunk.len(), survivor.len().min(trunk.len()));
+        }
+        Ok(full_trunk)
     }
 
     /// Apply cloud feedback: roll the draft context back to the accepted
@@ -308,6 +496,7 @@ mod tests {
                     ell: knobbed.max_batch_drafts,
                     budget_bits: knobbed.budget_bits,
                     pipeline_depth: 1,
+                    tree_branching: 1,
                 };
                 let b = knobbed.draft_batch_knobs(0.9, 10, &static_knobs).unwrap();
                 let (a_bytes, a_bits) = wire_bytes(&mut legacy, &a);
@@ -336,6 +525,7 @@ mod tests {
                 ell: 4,
                 budget_bits: 5000,
                 pipeline_depth: 1,
+                tree_branching: 1,
             };
             let b = e.draft_batch_knobs(1.0, 10, &knobs).unwrap();
             assert!(!b.frame.tokens.is_empty());
@@ -383,10 +573,69 @@ mod tests {
     }
 
     #[test]
+    fn tree_drafting_builds_a_comb_and_restores_the_trunk() {
+        let mut e = edge(Policy::KSqs { k: 8 }, 5000);
+        e.start(&[1, 2, 3]).unwrap();
+        let knobs = Knobs {
+            sparsifier: None,
+            ell: 4,
+            budget_bits: 5000,
+            pipeline_depth: 2,
+            tree_branching: 2,
+        };
+        let dt = e.draft_tree_knobs(0.9, 4, &knobs).unwrap();
+        let l = dt.trunk_len;
+        assert!(l >= 1 && l <= 4);
+        // comb shape: trunk + (b-1) branch chains per depth, each chain
+        // reaching the trunk's full depth
+        let expect_nodes = l + (1..=l).map(|d| l - d + 1).sum::<usize>();
+        assert_eq!(dt.frame.tokens.len(), expect_nodes);
+        assert_eq!(dt.parents.len(), expect_nodes);
+        // trunk is nodes 0..l in a parent chain
+        for i in 0..l {
+            let want = if i == 0 { NO_PARENT } else { (i - 1) as u8 };
+            assert_eq!(dt.parents[i], want, "trunk node {i}");
+        }
+        // the context ends at the trunk tip (branches were rolled back)
+        assert_eq!(e.context_len(), 3 + l);
+        assert_eq!(dt.trunk_tokens().len(), l);
+        assert!(dt.leaf_count() >= 2, "at least trunk tip + one branch leaf");
+        // per-node payload accounting covers every node
+        assert_eq!(dt.dist_bits.len(), expect_nodes);
+        assert_eq!(dt.ks.len(), expect_nodes);
+
+        // survivor-branch rollback: diverge at depth 1
+        let trunk = dt.trunk_tokens();
+        let mut survivor = trunk.clone();
+        survivor[l - 1] ^= 1; // force a divergent tip
+        let full =
+            e.apply_feedback_tree(3, &trunk, &survivor, true, 9).unwrap();
+        assert!(!full);
+        // context = shared prefix + divergent suffix + resample
+        assert_eq!(e.context_len(), 3 + l + 1);
+
+        // full-trunk accept leaves the context (and speculation) alone
+        let mut e2 = edge(Policy::KSqs { k: 8 }, 5000);
+        e2.start(&[1, 2, 3]).unwrap();
+        let dt2 = e2.draft_tree_knobs(0.9, 4, &knobs).unwrap();
+        let trunk2 = dt2.trunk_tokens();
+        let before = e2.context_len();
+        let full = e2.apply_feedback_tree(3, &trunk2, &trunk2, false, 0).unwrap();
+        assert!(full);
+        assert_eq!(e2.context_len(), before);
+    }
+
+    #[test]
     fn knobs_budget_overrides_config_budget() {
         let mut e = edge(Policy::KSqs { k: 8 }, 5000);
         e.start(&[1]).unwrap();
-        let knobs = Knobs { sparsifier: None, ell: 15, budget_bits: 150, pipeline_depth: 1 };
+        let knobs = Knobs {
+            sparsifier: None,
+            ell: 15,
+            budget_bits: 150,
+            pipeline_depth: 1,
+            tree_branching: 1,
+        };
         let b = e.draft_batch_knobs(0.9, 15, &knobs).unwrap();
         let total: usize = b.dist_bits.iter().sum();
         assert!(total <= 150 || b.frame.tokens.len() == 1, "knob budget enforced");

@@ -6,15 +6,19 @@
 use anyhow::Result;
 
 use crate::channel::{LinkConfig, SimulatedLink};
-use crate::coordinator::{PjrtStack, SdSession, SessionConfig, SessionResult, TimingMode};
-use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+#[cfg(feature = "pjrt")]
+use crate::coordinator::PjrtStack;
+use crate::coordinator::{SdSession, SessionConfig, SessionResult, TimingMode};
+#[cfg(feature = "pjrt")]
 use crate::model::encode;
+use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::sqs::Policy;
 use crate::util::stats::Summary;
 
 /// Which model stack drives the experiment.
 pub enum Backend {
     /// Real AOT artifacts over PJRT (wall-clock compute in the ledger).
+    #[cfg(feature = "pjrt")]
     Pjrt(PjrtStack),
     /// Synthetic Markov models (modeled compute; fast, exactly
     /// reproducible — used for the large hyperparameter grids).
@@ -22,6 +26,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    #[cfg(feature = "pjrt")]
     pub fn pjrt() -> Result<Backend> {
         Ok(Backend::Pjrt(PjrtStack::load(1 << 30)?))
     }
@@ -38,6 +43,7 @@ impl Backend {
 
     pub fn name(&self) -> &'static str {
         match self {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
             Backend::Synthetic { .. } => "synthetic",
         }
@@ -45,6 +51,7 @@ impl Backend {
 
     fn prompts(&self) -> Vec<Vec<u16>> {
         match self {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(stack) => {
                 stack.manifest.prompts.iter().map(|p| encode(p)).collect()
             }
@@ -58,6 +65,7 @@ impl Backend {
     fn run_one(&self, prompt: &[u16], link: LinkConfig, cfg: SessionConfig)
                -> Result<SessionResult> {
         match self {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(stack) => {
                 let mut sess = stack.session(link, cfg);
                 sess.run(prompt)
@@ -212,19 +220,32 @@ pub fn temp_grid(full: bool) -> Vec<f32> {
 }
 
 /// Decide PJRT vs synthetic from argv/env: benches accept `--synthetic`.
+/// A `synthetic-only` build has no PJRT path at all, so it always
+/// returns the synthetic backend.
 pub fn backend_from_args() -> Result<Backend> {
     let synth = std::env::args().any(|a| a == "--synthetic")
         || matches!(std::env::var("SQS_BACKEND").as_deref(), Ok("synthetic"));
-    if synth {
-        Ok(Backend::synthetic_default())
-    } else if manifest_exists() {
-        Backend::pjrt()
-    } else {
-        eprintln!("[bench] artifacts not found -> synthetic backend");
+    #[cfg(feature = "pjrt")]
+    {
+        if synth {
+            Ok(Backend::synthetic_default())
+        } else if manifest_exists() {
+            Backend::pjrt()
+        } else {
+            eprintln!("[bench] artifacts not found -> synthetic backend");
+            Ok(Backend::synthetic_default())
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        if !synth {
+            eprintln!("[bench] built without the pjrt feature -> synthetic backend");
+        }
         Ok(Backend::synthetic_default())
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn manifest_exists() -> bool {
     crate::runtime::Manifest::default_dir().join("manifest.json").exists()
 }

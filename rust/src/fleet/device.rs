@@ -22,7 +22,11 @@
 //! stale frames by speculation epoch, and feedback is matched back to
 //! its batch by the `Ext::Ack` sequence number.  Depth 1 follows the
 //! exact pre-pipelining event sequence (regression-pinned by
-//! `tests/pipelining.rs`).
+//! `tests/pipelining.rs`).  With `tree_branching >= 2` on top, the
+//! device ships protocol-v4 `DraftTree` frames — verify cost scales
+//! with the node count, feedback rides `Ext::TreeAck`, and the edge
+//! branches its rollback to the surviving node (branching 1 is the
+//! linear pipeline bit for bit, pinned by `tests/tree_speculation.rs`).
 
 use std::collections::VecDeque;
 
@@ -36,6 +40,7 @@ use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
 use crate::protocol::{
     Delivery, Direction, Ext, FeedbackV2, Frame, SeqAck, SeqDraft, SharedPort, Transport,
+    TreeAck, TreeDraft,
 };
 use crate::sqs::Policy;
 use crate::util::rng::Pcg64;
@@ -67,6 +72,10 @@ pub struct DeviceProfile {
     /// unacknowledged drafts the device may keep in flight (1 = the v2
     /// alternating protocol, bit-exact; >= 2 pipelines with protocol v3)
     pub pipeline_depth: usize,
+    /// token-tree branching factor (1 = the v3 linear pipeline,
+    /// bit-exact; >= 2 with `pipeline_depth >= 2` ships protocol-v4
+    /// `DraftTree` frames)
+    pub tree_branching: usize,
 }
 
 impl Default for DeviceProfile {
@@ -85,6 +94,7 @@ impl Default for DeviceProfile {
             workload: Workload::ClosedLoop { think_s: 0.0 },
             adaptive: AdaptiveMode::Off,
             pipeline_depth: 1,
+            tree_branching: 1,
         }
     }
 }
@@ -106,12 +116,22 @@ struct PendingBatch {
     /// the v1 frame's batch id (echoed in discard feedback)
     batch_id: u32,
     ctx_before: usize,
+    /// per-path drafted basis: the trunk length for tree frames
     drafted: usize,
+    /// wire nodes the frame carries (== drafted for linear frames)
+    tree_nodes: usize,
     /// the structured frame, held until the uplink send encodes it
     frame: Option<DraftFrame>,
+    /// token-tree parent table, held alongside `frame` (None: linear)
+    parents: Option<Vec<u8>>,
+    /// token-tree trunk values (None: linear)
+    trunk: Option<Vec<u16>>,
     /// wire size of the sent frame, bits (set by `send_draft`)
     frame_bits: usize,
     verdict: Option<Verdict>,
+    /// tree-walk outcome set at verify time: (survivor node, depth,
+    /// full_trunk) — what the `TreeAck` feedback carries
+    tree_walk: Option<(u8, usize, bool)>,
     /// the cloud discarded the frame as stale (pipelined sessions)
     discard: bool,
     /// verify side has handled the frame (verdict or discard)
@@ -210,10 +230,15 @@ impl Device {
             edge.use_adaptive_scheme();
         }
         let depth = profile.pipeline_depth.max(1);
-        // a depth >= 2 device speaks protocol-v3 sequenced drafts; its
-        // port must admit a pipeline's worth of frames per direction
+        // a depth >= 2 device speaks protocol-v3 sequenced drafts — v4
+        // with a tree branching factor on top; its port must admit a
+        // pipeline's worth of frames per direction
         if depth > 1 {
-            edge.wire.set_version(crate::protocol::PROTOCOL_V3);
+            edge.wire.set_version(if profile.tree_branching > 1 {
+                crate::protocol::PROTOCOL_V4
+            } else {
+                crate::protocol::PROTOCOL_V3
+            });
         }
         let mut port = port;
         port.set_window(depth);
@@ -224,6 +249,7 @@ impl Device {
             profile.budget_bits,
             vocab,
             depth,
+            profile.tree_branching,
         );
         let cloud = CloudNode::new(target, seed ^ 0xC);
         Device {
@@ -255,6 +281,11 @@ impl Device {
     /// Does this device run the protocol-v3 pipelined state machine?
     fn pipelined(&self) -> bool {
         self.profile.pipeline_depth.max(1) > 1
+    }
+
+    /// May this device ship protocol-v4 token trees?
+    fn tree_capable(&self) -> bool {
+        self.pipelined() && self.profile.tree_branching.max(1) > 1
     }
 
     /// Batches currently in the in-flight ledger (sent or drafting).
@@ -332,8 +363,24 @@ impl Device {
         let remaining = self.profile.max_new_tokens - (produced + self.speculated);
         let knobs = self.control.begin_batch();
         self.window = knobs.pipeline_depth.max(1);
-        let drafted = self.edge.draft_batch_knobs(self.profile.temp, remaining, &knobs)?;
-        let l = drafted.frame.tokens.len();
+        let branching = if self.tree_capable() {
+            knobs.tree_branching.clamp(1, self.profile.tree_branching.max(1))
+        } else {
+            1
+        };
+        // a tree-capable device whose branching knob collapsed to 1
+        // drafts (and ships) the linear v3 shape for that round
+        let (frame, parents, trunk, l, nodes) = if branching >= 2 {
+            let dt = self.edge.draft_tree_knobs(self.profile.temp, remaining, &knobs)?;
+            let l = dt.trunk_len;
+            let nodes = dt.frame.tokens.len();
+            let trunk = dt.trunk_tokens();
+            (dt.frame, Some(dt.parents), Some(trunk), l, nodes)
+        } else {
+            let db = self.edge.draft_batch_knobs(self.profile.temp, remaining, &knobs)?;
+            let l = db.frame.tokens.len();
+            (db.frame, None, None, l, l)
+        };
         if l == 0 {
             return Ok(None);
         }
@@ -341,16 +388,20 @@ impl Device {
         self.stats.knob_trace.push(KnobPoint::from_knobs(round, &knobs));
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
-        let batch_id = drafted.frame.batch_id;
+        let batch_id = frame.batch_id;
         self.in_flight.push_back(PendingBatch {
             seq,
             epoch: self.edge_epoch,
             batch_id,
             ctx_before,
             drafted: l,
-            frame: Some(drafted.frame),
+            tree_nodes: nodes,
+            frame: Some(frame),
+            parents,
+            trunk,
             frame_bits: 0,
             verdict: None,
+            tree_walk: None,
             discard: false,
             served: false,
             exts: Vec::new(),
@@ -359,8 +410,10 @@ impl Device {
         });
         self.speculated += l;
         self.drafting = true;
+        // per-path accounting: the trunk is the drafted basis; branch
+        // nodes still cost modeled SLM time below
         self.stats.drafted_tokens += l as u64;
-        Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * l as f64))
+        Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * nodes as f64))
     }
 
     /// Ship the oldest unsent draft frame through this device's port
@@ -375,14 +428,14 @@ impl Device {
             .iter()
             .position(|p| p.frame.is_some())
             .ok_or_else(|| anyhow!("send_draft without pending batch"))?;
-        let (frame, seq, epoch) = {
+        let (frame, parents, seq, epoch) = {
             let p = &mut self.in_flight[idx];
-            (p.frame.take().unwrap(), p.seq, p.epoch)
+            (p.frame.take().unwrap(), p.parents.take(), p.seq, p.epoch)
         };
-        let up_frame = if self.pipelined() {
-            Frame::DraftSeq(SeqDraft { seq, epoch, frame })
-        } else {
-            Frame::Draft(frame)
+        let up_frame = match parents {
+            Some(parents) => Frame::DraftTree(TreeDraft { seq, epoch, parents, frame }),
+            None if self.pipelined() => Frame::DraftSeq(SeqDraft { seq, epoch, frame }),
+            None => Frame::Draft(frame),
         };
         let d = self.port.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, now)?;
         let p = &mut self.in_flight[idx];
@@ -452,6 +505,40 @@ impl Device {
                 self.ready_feedback.push_back(sd.seq);
                 Ok(window)
             }
+            Frame::DraftTree(td) => {
+                let idx = self
+                    .in_flight
+                    .iter()
+                    .position(|p| p.seq == td.seq && !p.served)
+                    .ok_or_else(|| {
+                        anyhow!("device {}: draft tree {} not in flight", self.id, td.seq)
+                    })?;
+                if td.epoch != self.cloud_epoch {
+                    // stale tree: discarded unverified like a stale DraftSeq
+                    let p = &mut self.in_flight[idx];
+                    p.discard = true;
+                    p.served = true;
+                    p.exts = exts;
+                    self.ready_feedback.push_back(td.seq);
+                    return Ok(0);
+                }
+                let nodes = td.frame.tokens.len();
+                let tv = self.cloud.verify_tree(&td, self.cloud_prev, temp)?;
+                if !tv.full_trunk {
+                    self.cloud_epoch = self.cloud_epoch.wrapping_add(1);
+                }
+                self.cloud_prev = *tv.verdict.committed.last().unwrap();
+                let p = &mut self.in_flight[idx];
+                // verify cost scales with the whole node table, not the
+                // trunk: the verifier's busy-until clock sees every node
+                let window = nodes + 1;
+                p.verdict = Some(tv.verdict);
+                p.tree_walk = Some((tv.survivor, tv.depth, tv.full_trunk));
+                p.exts = exts;
+                p.served = true;
+                self.ready_feedback.push_back(td.seq);
+                Ok(window)
+            }
             other => bail!("device {}: expected a Draft frame, got {}", self.id, other.name()),
         }
     }
@@ -480,7 +567,16 @@ impl Device {
                     .as_ref()
                     .ok_or_else(|| anyhow!("feedback before verify"))?;
                 let mut fb = verdict.feedback_v2(p.exts.clone());
-                if self.pipelined() {
+                if let Some((survivor, depth, _)) = p.tree_walk {
+                    fb.exts.push(Ext::TreeAck(TreeAck {
+                        seq: p.seq,
+                        epoch: p.epoch,
+                        discard: false,
+                        resampled: verdict.rejected,
+                        node: survivor,
+                        depth: depth as u8,
+                    }));
+                } else if self.pipelined() {
                     fb.exts.push(Ext::Ack(SeqAck { seq: p.seq, epoch: p.epoch, discard: false }));
                 }
                 fb
@@ -508,12 +604,12 @@ impl Device {
             .in_flight
             .pop_front()
             .ok_or_else(|| anyhow!("apply_feedback without pending batch"))?;
-        if let Some(ack) = fb.ack() {
-            debug_assert_eq!(ack.seq, pending.seq, "FIFO downlink: acks arrive in seq order");
+        if let Some((seq, _)) = fb.acked_seq() {
+            debug_assert_eq!(seq, pending.seq, "FIFO downlink: acks arrive in seq order");
         }
         self.speculated -= pending.drafted;
 
-        if fb.ack().map(|a| a.discard).unwrap_or(false) {
+        if fb.acked_seq().map(|(_, d)| d).unwrap_or(false) {
             // stale frame the cloud discarded: retire the seq; the wire
             // bits were still spent, so the estimator hears about them
             self.stats.discarded_batches += 1;
@@ -528,6 +624,7 @@ impl Device {
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
                 discarded: true,
+                tree_nodes: pending.tree_nodes,
             });
         } else {
             let verdict = pending
@@ -535,7 +632,26 @@ impl Device {
                 .ok_or_else(|| anyhow!("apply_feedback before verify"))?;
             debug_assert_eq!(fb.accepted as usize, verdict.accepted);
             let accepted = fb.accepted as usize;
-            if pipelined {
+            if let Some(trunk) = &pending.trunk {
+                // token tree: branch the rollback to the surviving node
+                let survivor = &verdict.committed
+                    [..verdict.committed.len() - verdict.rejected as usize];
+                let full = self.edge.apply_feedback_tree(
+                    pending.ctx_before,
+                    trunk,
+                    survivor,
+                    verdict.rejected,
+                    fb.new_token,
+                )?;
+                debug_assert_eq!(
+                    Some(full),
+                    pending.tree_walk.map(|(_, _, f)| f),
+                    "edge/cloud trunk verdicts agree"
+                );
+                if !full {
+                    self.edge_epoch = self.edge_epoch.wrapping_add(1);
+                }
+            } else if pipelined {
                 self.edge.apply_feedback_pipelined(
                     pending.ctx_before,
                     pending.drafted,
@@ -567,6 +683,8 @@ impl Device {
             }
 
             self.stats.batches += 1;
+            // per-path accounting: a tree's accepted depth never exceeds
+            // its trunk, so fleet acceptance stays a per-path rate
             self.stats.accepted_tokens += verdict.accepted as u64;
             if verdict.rejected {
                 self.stats.rejected_batches += 1;
@@ -581,6 +699,7 @@ impl Device {
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
                 discarded: false,
+                tree_nodes: pending.tree_nodes,
             });
         }
         let req = self
@@ -827,6 +946,62 @@ mod tests {
         );
         assert!(max_in_flight >= 2, "the window actually pipelined");
         assert_eq!(d.in_flight_len(), 0);
+    }
+
+    #[test]
+    fn tree_device_speculates_and_accounts_every_seq() {
+        let profile = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            max_new_tokens: 48,
+            max_batch_drafts: 4,
+            pipeline_depth: 2,
+            tree_branching: 2,
+            ..Default::default()
+        };
+        let mut d = mk_device(profile);
+        d.queue.push_back(0.0);
+        d.start_next_request(0.0).unwrap().unwrap();
+        let mut now = 0.0;
+        let mut applied = 0u64;
+        let mut saw_tree_window = false;
+        let mut guard = 0;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "driver wedged");
+            now = d.send_draft(now).unwrap().delivered_at;
+            if d.active.is_some() && d.in_flight_len() < d.pipeline_window() {
+                let _ = d.begin_batch().unwrap();
+            }
+            let window = d.verify_now(Vec::new()).unwrap();
+            // a verified tree's window covers all its nodes: with any
+            // branching this exceeds trunk + 1 (discards return 0)
+            if window > 5 {
+                saw_tree_window = true;
+            }
+            now = d.send_feedback(now).unwrap().delivered_at;
+            applied += 1;
+            if d.apply_feedback().unwrap() {
+                break;
+            }
+            if d.in_flight_len() == 0 && !d.drafting && d.begin_batch().unwrap().is_none() {
+                break;
+            }
+        }
+        d.complete_request(now).unwrap();
+        assert_eq!(d.stats.completed, 1);
+        assert!(d.stats.tokens >= 48, "request completed: {} tokens", d.stats.tokens);
+        assert!(saw_tree_window, "tree frames reached the verifier");
+        assert_eq!(
+            d.stats.batches + d.stats.discarded_batches,
+            applied,
+            "every sequence number is acked exactly once"
+        );
+        // per-path acceptance stays a rate: accepted never exceeds the
+        // verified (non-discarded) trunk tokens
+        assert!(
+            d.stats.accepted_tokens <= d.stats.drafted_tokens - d.stats.discarded_tokens,
+            "acceptance accounting is per-path"
+        );
     }
 
     #[test]

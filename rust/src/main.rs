@@ -13,13 +13,19 @@ use anyhow::{anyhow, bail, Result};
 
 use sqs_sd::channel::LinkConfig;
 use sqs_sd::control::AdaptiveMode;
-use sqs_sd::coordinator::{PjrtStack, SessionConfig, TimingMode};
+#[cfg(feature = "pjrt")]
+use sqs_sd::coordinator::PjrtStack;
+#[cfg(feature = "pjrt")]
+use sqs_sd::coordinator::{SessionConfig, TimingMode};
 use sqs_sd::fleet::{
     heterogeneous_profiles, mixed_policy_profiles, DeviceProfile, FleetConfig, FleetSim,
     VerifierConfig, Workload,
 };
+#[cfg(feature = "pjrt")]
 use sqs_sd::model::{decode, encode};
+#[cfg(feature = "pjrt")]
 use sqs_sd::runtime::Manifest;
+#[cfg(feature = "pjrt")]
 use sqs_sd::server::{serve, ServerConfig};
 use sqs_sd::sqs::Policy;
 use sqs_sd::util::cli::Args;
@@ -85,6 +91,12 @@ fn policy_opts(a: Args) -> Args {
             "1",
             "unacknowledged drafts in flight (1 = alternating v2, >=2 pipelines via v3)",
         )
+        .opt(
+            "tree-branching",
+            "1",
+            "token-tree candidates per level (1 = linear; >=2 with depth >=2 speculates \
+             trees via protocol v4)",
+        )
         .opt("uplink-bps", "1000000", "uplink bandwidth, bits/s")
         .opt("downlink-bps", "0", "downlink bandwidth, bits/s (0 = 10x uplink)")
         .opt("rtt-ms", "20", "round-trip propagation, milliseconds")
@@ -142,6 +154,18 @@ fn parse_pipeline_depth(a: &Args) -> Result<usize> {
     Ok(depth)
 }
 
+fn parse_tree_branching(a: &Args) -> Result<usize> {
+    let b = a.get_usize("tree-branching").map_err(|e| anyhow!(e))?;
+    if b == 0 {
+        bail!("--tree-branching must be >= 1");
+    }
+    if b > 1 && parse_pipeline_depth(a)? < 2 {
+        bail!("--tree-branching >= 2 needs --pipeline-depth >= 2 (trees ride the v4 pipeline)");
+    }
+    Ok(b)
+}
+
+#[cfg(feature = "pjrt")]
 fn session_cfg(a: &Args, max_new: usize) -> Result<SessionConfig> {
     Ok(SessionConfig {
         policy: parse_policy(a)?,
@@ -153,10 +177,32 @@ fn session_cfg(a: &Args, max_new: usize) -> Result<SessionConfig> {
         timing: TimingMode::Measured,
         adaptive: parse_adaptive(a)?,
         pipeline_depth: parse_pipeline_depth(a)?,
+        tree_branching: parse_tree_branching(a)?,
         ..Default::default()
     })
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_run(_argv: Vec<String>) -> Result<()> {
+    bail!("this build has no PJRT backend (synthetic-only feature set); use `fleet`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_argv: Vec<String>) -> Result<()> {
+    bail!("this build has no PJRT backend (synthetic-only feature set); use `fleet`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_sweep(_argv: Vec<String>) -> Result<()> {
+    bail!("this build has no PJRT backend (synthetic-only feature set); use `fleet`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_inspect(_argv: Vec<String>) -> Result<()> {
+    bail!("this build has no PJRT backend (synthetic-only feature set)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_run(argv: Vec<String>) -> Result<()> {
     let a = policy_opts(Args::new("sqs-sd run", "generate a completion"))
         .opt("prompt", "The capital of France is", "prompt text")
@@ -199,8 +245,8 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     }
     if res.pipeline_depth > 1 {
         println!(
-            "--- pipelining: depth {} | {} stale speculative batches discarded",
-            res.pipeline_depth, res.discarded_batches
+            "--- pipelining: depth {} | branching {} | {} stale speculative batches discarded",
+            res.pipeline_depth, res.tree_branching, res.discarded_batches
         );
     }
     println!(
@@ -222,6 +268,7 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let a = Args::new("sqs-sd serve", "TCP serving front-end")
         .opt("addr", "127.0.0.1:7077", "listen address")
@@ -236,6 +283,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_sweep(argv: Vec<String>) -> Result<()> {
     let a = policy_opts(Args::new("sqs-sd sweep", "temperature sweep, CSV to stdout"))
         .opt("temps", "0.1,0.3,0.5,0.7,0.9", "comma-separated temperatures")
@@ -345,6 +393,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         workload,
         adaptive: parse_adaptive(&a)?,
         pipeline_depth: parse_pipeline_depth(&a)?,
+        tree_branching: parse_tree_branching(&a)?,
         ..Default::default()
     };
     // --heterogeneous and --mixed compose: vary the hardware, then
@@ -394,6 +443,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_inspect(argv: Vec<String>) -> Result<()> {
     let _a = Args::new("sqs-sd inspect", "print the artifact manifest")
         .parse_from(argv)

@@ -7,6 +7,8 @@
 //! the PJRT backend is the real serving path.
 
 pub mod kv;
+/// PJRT-backed models — only with the `pjrt` feature (the default).
+#[cfg(feature = "pjrt")]
 pub mod lm;
 pub mod synthetic;
 pub mod tokenizer;

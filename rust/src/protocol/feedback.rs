@@ -26,6 +26,12 @@
 //!   number and speculation epoch of the draft this verdict answers,
 //!   plus a discard bit for stale drafts the cloud never verified.
 //!   v2 peers skip it like any unknown TLV.
+//! * `TreeAck` (tag 4, 42 bits) — protocol-v4 token trees: the v3 ack
+//!   fields plus the surviving path — deepest accepted node index
+//!   (0xFF: none) and accepted depth — and a resampled bit saying
+//!   whether `new_token` carries a residual resample.  The edge uses
+//!   the node index to branch its KV/context rollback to the surviving
+//!   node instead of the epoch root.  v3 peers skip it.
 //!
 //! Extension bits ride the downlink ledger like every other wire bit, so
 //! `downlink_bits` stays exact.
@@ -58,9 +64,14 @@ pub const EXT_TAG_CONGESTION: u8 = 1;
 pub const EXT_TAG_BUDGET_GRANT: u8 = 2;
 /// Sequence acknowledgement for pipelined sessions (protocol v3).
 pub const EXT_TAG_ACK: u8 = 3;
+/// Tree acknowledgement for token-tree sessions (protocol v4).
+pub const EXT_TAG_TREE_ACK: u8 = 4;
 const GRANT_WIDTH: usize = 24;
 /// Ack layout: | seq:16 | epoch:8 | discard:1 | (low to high bits).
 const ACK_WIDTH: usize = 25;
+/// TreeAck layout: | seq:16 | epoch:8 | discard:1 | resampled:1 |
+/// node:8 | depth:8 | (low to high bits).
+const TREE_ACK_WIDTH: usize = 42;
 /// Largest representable budget grant, bits per round.
 pub const MAX_GRANT_BITS: u32 = (1 << GRANT_WIDTH) - 1;
 
@@ -78,6 +89,27 @@ pub struct SeqAck {
     pub discard: bool,
 }
 
+/// Tree acknowledgement riding a feedback frame (protocol v4): the v3
+/// ack fields plus the surviving path the cloud's tree walk took —
+/// which node survived deepest, how many draft tokens that path
+/// accepted, and whether a residual resample (`new_token`) follows it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeAck {
+    /// sequence number of the acknowledged tree (wraps at u16)
+    pub seq: u16,
+    /// speculation epoch the tree carried (wraps at u8)
+    pub epoch: u8,
+    /// true: the cloud discarded the tree unverified (stale epoch)
+    pub discard: bool,
+    /// true: the walk ended in rejection and `new_token` is a residual
+    /// resample appended after the surviving path
+    pub resampled: bool,
+    /// deepest accepted node index (0xFF: nothing accepted)
+    pub node: u8,
+    /// accepted path length in draft tokens (0 when nothing accepted)
+    pub depth: u8,
+}
+
 /// One TLV extension on a v2 feedback frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Ext {
@@ -87,6 +119,8 @@ pub enum Ext {
     BudgetGrant(u32),
     /// Sequence ack for pipelined sessions (protocol v3).
     Ack(SeqAck),
+    /// Tree ack for token-tree sessions (protocol v4).
+    TreeAck(TreeAck),
     /// Well-formed extension with an unrecognized tag: skipped by
     /// consumers, preserved bit-exactly on re-encode.
     Unknown { tag: u8, width: u8, value: u64 },
@@ -107,6 +141,15 @@ impl Ext {
                 let value =
                     a.seq as u64 | ((a.epoch as u64) << 16) | ((a.discard as u64) << 24);
                 Ok((EXT_TAG_ACK, ACK_WIDTH as u8, value))
+            }
+            Ext::TreeAck(a) => {
+                let value = a.seq as u64
+                    | ((a.epoch as u64) << 16)
+                    | ((a.discard as u64) << 24)
+                    | ((a.resampled as u64) << 25)
+                    | ((a.node as u64) << 26)
+                    | ((a.depth as u64) << 34);
+                Ok((EXT_TAG_TREE_ACK, TREE_ACK_WIDTH as u8, value))
             }
             Ext::Unknown { tag, width, value } => {
                 if tag as usize >= 1 << EXT_TAG_BITS {
@@ -129,6 +172,7 @@ impl Ext {
             Ext::Congestion(_) => 1,
             Ext::BudgetGrant(_) => GRANT_WIDTH,
             Ext::Ack(_) => ACK_WIDTH,
+            Ext::TreeAck(_) => TREE_ACK_WIDTH,
             Ext::Unknown { width, .. } => width as usize,
         };
         EXT_TAG_BITS + EXT_WIDTH_BITS + width
@@ -186,8 +230,29 @@ impl FeedbackV2 {
         })
     }
 
+    /// The tree ack, if one rode this frame (token-tree sessions).
+    pub fn tree_ack(&self) -> Option<TreeAck> {
+        self.exts.iter().find_map(|e| match e {
+            Ext::TreeAck(a) => Some(*a),
+            _ => None,
+        })
+    }
+
+    /// The sequence number this frame acknowledges, regardless of ack
+    /// flavor (linear `Ack` or v4 `TreeAck`), plus the discard bit —
+    /// what the edge's in-flight ledger keys on.
+    pub fn acked_seq(&self) -> Option<(u16, bool)> {
+        if let Some(a) = self.ack() {
+            return Some((a.seq, a.discard));
+        }
+        self.tree_ack().map(|a| (a.seq, a.discard))
+    }
+
     /// A discard verdict for a stale sequenced draft: nothing accepted,
     /// nothing resampled — the edge just retires the sequence number.
+    /// Stale *trees* are discarded with the same linear `Ack` (there is
+    /// no surviving path to report), so discard handling stays uniform
+    /// across v3 and v4 frames on every FIFO path.
     pub fn discard(batch_id: u32, seq: u16, epoch: u8) -> FeedbackV2 {
         FeedbackV2 {
             batch_id,
@@ -247,6 +312,17 @@ impl FeedbackV2 {
                     discard: (value >> 24) & 1 == 1,
                 }),
                 EXT_TAG_ACK => return Err(format!("ack extension must be {ACK_WIDTH} bits")),
+                EXT_TAG_TREE_ACK if width == TREE_ACK_WIDTH => Ext::TreeAck(TreeAck {
+                    seq: (value & 0xFFFF) as u16,
+                    epoch: ((value >> 16) & 0xFF) as u8,
+                    discard: (value >> 24) & 1 == 1,
+                    resampled: (value >> 25) & 1 == 1,
+                    node: ((value >> 26) & 0xFF) as u8,
+                    depth: ((value >> 34) & 0xFF) as u8,
+                }),
+                EXT_TAG_TREE_ACK => {
+                    return Err(format!("tree-ack extension must be {TREE_ACK_WIDTH} bits"))
+                }
                 t => Ext::Unknown { tag: t, width: width as u8, value },
             });
         }
@@ -324,6 +400,46 @@ mod tests {
         let back = roundtrip(&discard);
         assert_eq!(back.ack(), Some(SeqAck { seq: 500, epoch: 3, discard: true }));
         assert_eq!(back.body_bits(), 68 + (4 + 6 + 25));
+    }
+
+    #[test]
+    fn tree_ack_extension_roundtrips_at_every_corner() {
+        for (seq, epoch, discard, resampled, node, depth) in [
+            (0u16, 0u8, false, false, 0u8, 0u8),
+            (u16::MAX, u8::MAX, true, true, 0xFF, u8::MAX),
+            (500, 3, false, true, 7, 4),
+            (1, 255, true, false, 0xFF, 0),
+        ] {
+            let ta = TreeAck { seq, epoch, discard, resampled, node, depth };
+            let fb = FeedbackV2 {
+                batch_id: 21,
+                accepted: depth as u16,
+                new_token: 9,
+                exts: vec![Ext::TreeAck(ta)],
+            };
+            let back = roundtrip(&fb);
+            assert_eq!(back, fb);
+            assert_eq!(back.tree_ack(), Some(ta));
+            assert_eq!(back.acked_seq(), Some((seq, discard)));
+            assert_eq!(back.ack(), None, "tree acks are not linear acks");
+            assert_eq!(fb.body_bits(), 68 + (4 + 6 + 42));
+        }
+        // a linear discard still answers acked_seq for the tree path
+        let d = FeedbackV2::discard(1, 44, 2);
+        assert_eq!(d.acked_seq(), Some((44, true)));
+    }
+
+    #[test]
+    fn tree_ack_wrong_width_rejected() {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(0, 64); // core
+        w.write_bits_u64(1, 4); // one ext
+        w.write_bits_u64(EXT_TAG_TREE_ACK as u64, 4);
+        w.write_bits_u64(25, 6); // linear-ack width under the tree tag
+        w.write_bits_u64(0, 25);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(FeedbackV2::decode_from(&mut r).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   Feedback (3): the v2 feedback layout (see protocol::feedback)
 //!   Control  (4): | op:4 | op-specific |   (Prompt: | len:16 | token:16 * len |)
 //!   DraftSeq (5): | seq:16 | epoch:8 | v1 draft body |   (protocol v3 only)
+//!   DraftTree(6): | seq:16 | epoch:8 | n:8 | parent:8 * n | v1 draft body |   (v4 only)
 //! ```
 //!
 //! The `Draft` body *is* the v1 byte layout: because the header is
@@ -26,13 +27,29 @@
 //! `coordinator::session`).  A codec only speaks `DraftSeq` once the
 //! handshake lands on v3 — a v2 peer negotiates the session down and the
 //! edge falls back to strict alternation.
+//!
+//! Protocol v4 adds `DraftTree` (tag 6): a SpecInfer-style token tree
+//! over the same sequenced-frame layer —
+//!
+//! ```text
+//!   DraftTree (6): | seq:16 | epoch:8 | n:8 | parent:8 x n | v1 draft body |
+//! ```
+//!
+//! The v1 body's token list is the node table in node order; `parent[i]`
+//! points at an earlier node (`parent[i] < i`) or is [`NO_PARENT`]
+//! (0xFF), making node `i` a root hanging off the committed context.
+//! Node order encodes candidate priority: the cloud's path walk tries a
+//! level's children in node order, and the chain of first children is
+//! the *trunk* — the linear draft the edge speculatively continued from.
+//! Decode validates the pointer table (count mismatch or out-of-range
+//! parents `Err`, never panic; fuzzed in `tests/protocol.rs`).
 
 use crate::codec::{DraftFrame, FrameCodec, TokenBits};
 use crate::sqs::bits::SchemeBits;
 use crate::util::bitio::{BitReader, BitWriter};
 
 use super::feedback::FeedbackV2;
-use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2, PROTOCOL_V3};
+use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2, PROTOCOL_V3, PROTOCOL_V4};
 
 /// Self-describing per-frame header: 4-bit version + 4-bit type tag.
 pub const FRAME_HEADER_BITS: usize = 8;
@@ -45,9 +62,17 @@ const TAG_DRAFT: u64 = 2;
 const TAG_FEEDBACK: u64 = 3;
 const TAG_CONTROL: u64 = 4;
 const TAG_DRAFT_SEQ: u64 = 5;
+const TAG_DRAFT_TREE: u64 = 6;
 
 /// Extra bits a sequenced draft carries over a plain one (seq + epoch).
 pub const SEQ_PREFIX_BITS: usize = 16 + 8;
+/// Fixed tree-frame overhead over a plain draft (seq + epoch + node
+/// count), before the 8 bits each parent pointer adds.
+pub const TREE_PREFIX_BITS: usize = SEQ_PREFIX_BITS + 8;
+/// Parent-pointer sentinel: the node is a root (child of the committed
+/// context).  Node ids therefore top out at 254, bounding a tree frame
+/// at 255 nodes.
+pub const NO_PARENT: u8 = 0xFF;
 
 const CONTROL_OP_BITS: usize = 4;
 const OP_PROMPT: u64 = 0;
@@ -104,6 +129,108 @@ pub struct SeqDraft {
     pub frame: DraftFrame,
 }
 
+/// A sequenced token tree (protocol v4): the v1 draft body reinterpreted
+/// as a node table, plus the parent pointers that give it tree shape.
+/// Nodes are in priority order — the chain of first children is the
+/// trunk the edge's speculative continuation hangs off.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeDraft {
+    /// wrapping sequence number (shared by every node in the tree)
+    pub seq: u16,
+    /// wrapping speculation epoch (shared by every node in the tree)
+    pub epoch: u8,
+    /// `parents[i]` is an earlier node index (`< i`) or [`NO_PARENT`]
+    pub parents: Vec<u8>,
+    /// node table in node order (`frame.tokens[i]` is node `i`)
+    pub frame: DraftFrame,
+}
+
+impl TreeDraft {
+    /// Structural validation shared by encode and decode: one parent per
+    /// node, every pointer earlier than its node or [`NO_PARENT`], at
+    /// least one root, and node ids representable in 8 bits.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.frame.tokens.len();
+        if n == 0 {
+            return Err("tree frame has no nodes".into());
+        }
+        if n > NO_PARENT as usize {
+            return Err(format!("tree of {n} nodes overflows the 8-bit id space"));
+        }
+        if self.parents.len() != n {
+            return Err(format!(
+                "parent table has {} entries for {n} nodes",
+                self.parents.len()
+            ));
+        }
+        for (i, &p) in self.parents.iter().enumerate() {
+            if p != NO_PARENT && p as usize >= i {
+                return Err(format!("node {i} has out-of-range parent {p}"));
+            }
+        }
+        if self.parents[0] != NO_PARENT {
+            return Err("node 0 must be a root".into());
+        }
+        Ok(())
+    }
+
+    /// Children of `parent` (or the roots, for [`NO_PARENT`]), in node
+    /// order — the cloud walk's candidate order at one tree level.
+    pub fn children(&self, parent: u8) -> Vec<u8> {
+        self.parents
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == parent)
+            .map(|(i, _)| i as u8)
+            .collect()
+    }
+
+    /// Root-to-`node` path as node indices (empty for [`NO_PARENT`]).
+    pub fn path_to(&self, node: u8) -> Vec<u8> {
+        if node == NO_PARENT {
+            return Vec::new();
+        }
+        let mut path = vec![node];
+        let mut cur = node;
+        while self.parents[cur as usize] != NO_PARENT {
+            cur = self.parents[cur as usize];
+            path.push(cur);
+        }
+        path.reverse();
+        path
+    }
+
+    /// Token values along the root-to-`node` path.
+    pub fn path_tokens(&self, node: u8) -> Vec<u16> {
+        self.path_to(node)
+            .into_iter()
+            .map(|i| self.frame.tokens[i as usize].token)
+            .collect()
+    }
+
+    /// The trunk: the chain of first children from the first root.
+    /// Node order puts the trunk at ids `0..trunk_len`, but this walks
+    /// the pointer table so decoded frames are validated structurally.
+    pub fn trunk(&self) -> Vec<u8> {
+        let mut trunk = Vec::new();
+        let mut cur = NO_PARENT;
+        loop {
+            let Some(&first) = self.children(cur).first() else { break };
+            trunk.push(first);
+            cur = first;
+        }
+        trunk
+    }
+
+    /// Token values along the trunk.
+    pub fn trunk_tokens(&self) -> Vec<u16> {
+        self.trunk()
+            .into_iter()
+            .map(|i| self.frame.tokens[i as usize].token)
+            .collect()
+    }
+}
+
 /// One protocol-v2 frame on the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -114,6 +241,8 @@ pub enum Frame {
     Control(Control),
     /// Sequenced draft — protocol v3 pipelined sessions only.
     DraftSeq(SeqDraft),
+    /// Sequenced token tree — protocol v4 only.
+    DraftTree(TreeDraft),
 }
 
 impl Frame {
@@ -125,6 +254,7 @@ impl Frame {
             Frame::Feedback(_) => "feedback",
             Frame::Control(_) => "control",
             Frame::DraftSeq(_) => "draft_seq",
+            Frame::DraftTree(_) => "draft_tree",
         }
     }
 }
@@ -202,6 +332,11 @@ impl WireCodec {
     /// Does this codec speak protocol-v3 sequenced drafts?
     pub fn pipelining(&self) -> bool {
         self.version >= PROTOCOL_V3
+    }
+
+    /// Does this codec speak protocol-v4 draft trees?
+    pub fn trees(&self) -> bool {
+        self.version >= PROTOCOL_V4
     }
 
     pub fn has_payload_codec(&self) -> bool {
@@ -307,6 +442,27 @@ impl WireCodec {
                     .ok_or("draft frame before the handshake negotiated a codec")?;
                 p.encode_into(&sd.frame, &mut w);
             }
+            Frame::DraftTree(td) => {
+                if self.version < PROTOCOL_V4 {
+                    return Err(format!(
+                        "draft tree needs protocol v{PROTOCOL_V4}, session is v{}",
+                        self.version
+                    ));
+                }
+                td.validate()?;
+                w.write_bits_u64(TAG_DRAFT_TREE, TAG_BITS);
+                w.write_bits_u64(td.seq as u64, 16);
+                w.write_bits_u64(td.epoch as u64, 8);
+                w.write_bits_u64(td.frame.tokens.len() as u64, 8);
+                for &p in &td.parents {
+                    w.write_bits_u64(p as u64, 8);
+                }
+                let pc = self
+                    .payload
+                    .as_mut()
+                    .ok_or("draft frame before the handshake negotiated a codec")?;
+                pc.encode_into(&td.frame, &mut w);
+            }
             Frame::Feedback(f) => {
                 w.write_bits_u64(TAG_FEEDBACK, TAG_BITS);
                 f.encode_into(&mut w)?;
@@ -389,6 +545,36 @@ impl WireCodec {
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
                 Ok(Frame::DraftSeq(SeqDraft { seq, epoch, frame: p.decode_from(&mut r)? }))
+            }
+            TAG_DRAFT_TREE => {
+                if self.version < PROTOCOL_V4 {
+                    return Err(format!(
+                        "draft tree needs protocol v{PROTOCOL_V4}, session is v{}",
+                        self.version
+                    ));
+                }
+                let seq = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+                let epoch = r.read_bits_u64(8).map_err(|e| e.to_string())? as u8;
+                let n = r.read_bits_u64(8).map_err(|e| e.to_string())? as usize;
+                let mut parents = Vec::with_capacity(n);
+                for _ in 0..n {
+                    parents.push(r.read_bits_u64(8).map_err(|e| e.to_string())? as u8);
+                }
+                let p = self
+                    .payload
+                    .as_mut()
+                    .ok_or("draft frame before the handshake negotiated a codec")?;
+                let frame = p.decode_from(&mut r)?;
+                if frame.tokens.len() != n {
+                    return Err(format!(
+                        "tree declares {n} nodes but its body carries {}",
+                        frame.tokens.len()
+                    ));
+                }
+                let td = TreeDraft { seq, epoch, parents, frame };
+                // out-of-range parents must Err, never panic or misparse
+                td.validate()?;
+                Ok(Frame::DraftTree(td))
             }
             TAG_FEEDBACK => Ok(Frame::Feedback(FeedbackV2::decode_from(&mut r)?)),
             TAG_CONTROL => {
@@ -516,6 +702,80 @@ mod tests {
         assert_eq!(bits, plain_bits + SEQ_PREFIX_BITS);
         assert_eq!(v3.decode(&bytes).unwrap(), Frame::DraftSeq(sd));
         assert!(v2.decode(&bytes).is_err(), "v2 peers cannot read v3 drafts");
+    }
+
+    fn sample_tree(g: &mut Gen) -> TreeDraft {
+        // trunk 0-1, sibling 2 under the context, 3 continuing the sibling
+        let frame = sample_draft(g, 64, 4, 100, 4);
+        TreeDraft {
+            seq: 7,
+            epoch: 1,
+            parents: vec![NO_PARENT, 0, NO_PARENT, 2],
+            frame,
+        }
+    }
+
+    #[test]
+    fn tree_draft_roundtrips_at_v4_only() {
+        let mut g = Gen { rng: Pcg64::new(17, 5) };
+        let td = sample_tree(&mut g);
+
+        // v3 codecs must refuse trees in both directions
+        let mut v3 = codec();
+        v3.set_version(PROTOCOL_V3);
+        assert!(v3.encode(&Frame::DraftTree(td.clone())).is_err());
+
+        let mut v4 = codec();
+        v4.set_version(super::PROTOCOL_V4);
+        assert!(v4.trees() && v4.pipelining());
+        let (bytes, bits) = v4.encode(&Frame::DraftTree(td.clone())).unwrap();
+        // a tree costs the fixed prefix plus one parent byte per node
+        // over the plain draft layout
+        let (_, plain_bits) = v4.encode(&Frame::Draft(td.frame.clone())).unwrap();
+        assert_eq!(bits, plain_bits + TREE_PREFIX_BITS + 8 * td.frame.tokens.len());
+        assert_eq!(v4.decode(&bytes).unwrap(), Frame::DraftTree(td.clone()));
+        assert!(v3.decode(&bytes).is_err(), "v3 peers cannot read v4 trees");
+
+        // structure helpers: trunk follows first children
+        assert_eq!(td.trunk(), vec![0, 1]);
+        assert_eq!(td.children(NO_PARENT), vec![0, 2]);
+        assert_eq!(td.path_to(3), vec![2, 3]);
+        assert_eq!(td.path_tokens(1).len(), 2);
+    }
+
+    #[test]
+    fn malformed_tree_tables_error_not_panic() {
+        let mut g = Gen { rng: Pcg64::new(23, 9) };
+        let mut v4 = codec();
+        v4.set_version(super::PROTOCOL_V4);
+
+        // forward parent pointer (node 1 -> node 2)
+        let mut td = sample_tree(&mut g);
+        td.parents = vec![NO_PARENT, 2, 0, 1];
+        assert!(v4.encode(&Frame::DraftTree(td)).is_err());
+
+        // parent table shorter than the node table
+        let mut td = sample_tree(&mut g);
+        td.parents.pop();
+        assert!(v4.encode(&Frame::DraftTree(td)).is_err());
+
+        // node 0 must be a root
+        let mut td = sample_tree(&mut g);
+        td.parents[0] = 0;
+        assert!(v4.encode(&Frame::DraftTree(td)).is_err());
+
+        // wire-level: corrupt a valid encoding's parent byte out of range
+        let td = sample_tree(&mut g);
+        let (bytes, _) = v4.encode(&Frame::DraftTree(td)).unwrap();
+        // layout: header(8) + seq(16) + epoch(8) + n(8) = 40 bits, then
+        // parents; parent of node 1 lives in byte 6
+        let mut corrupt = bytes.clone();
+        corrupt[6] = 200; // node 1's parent -> 200 (out of range, not 0xFF)
+        assert!(v4.decode(&corrupt).is_err(), "out-of-range parent must Err");
+        // truncations of a valid tree must Err, never panic
+        for cut in 0..bytes.len() {
+            assert!(v4.decode(&bytes[..cut]).is_err(), "truncation at {cut}");
+        }
     }
 
     #[test]

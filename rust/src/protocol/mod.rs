@@ -28,10 +28,10 @@ pub mod feedback;
 pub mod frame;
 pub mod transport;
 
-pub use feedback::{fair_share_grant, Ext, FeedbackV2, SeqAck, MAX_GRANT_BITS};
+pub use feedback::{fair_share_grant, Ext, FeedbackV2, SeqAck, TreeAck, MAX_GRANT_BITS};
 pub use frame::{
-    Control, Frame, Hello, HelloAck, SeqDraft, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS,
-    HELLO_BITS, SEQ_PREFIX_BITS,
+    Control, Frame, Hello, HelloAck, SeqDraft, TreeDraft, WireCodec, FRAME_HEADER_BITS,
+    HELLO_ACK_BITS, HELLO_BITS, NO_PARENT, SEQ_PREFIX_BITS, TREE_PREFIX_BITS,
 };
 pub use transport::{
     Delivery, Direction, LinkTransport, SharedPort, StreamTransport, Transport,
@@ -45,9 +45,15 @@ pub const PROTOCOL_V2: u8 = 2;
 /// v2 plus pipelined sessions: sequenced drafts (`Frame::DraftSeq`),
 /// per-seq feedback acks (`Ext::Ack`), and speculation epochs.
 pub const PROTOCOL_V3: u8 = 3;
+/// v3 plus token-tree speculation: parent-pointer draft trees
+/// (`Frame::DraftTree`) whose root-to-leaf paths the cloud scores in one
+/// pass, answered by `Ext::TreeAck` (surviving node + accepted depth).
+/// A v3 peer negotiates the session down and the edge falls back to
+/// linear `DraftSeq` pipelining.
+pub const PROTOCOL_V4: u8 = 4;
 /// Version range this build speaks.
 pub const MIN_SUPPORTED: u8 = PROTOCOL_V2;
-pub const MAX_SUPPORTED: u8 = PROTOCOL_V3;
+pub const MAX_SUPPORTED: u8 = PROTOCOL_V4;
 
 /// Protocol-level cap on the lattice resolution a peer may propose.
 /// The binomial tables behind the codec are dense in ell, so an
@@ -138,6 +144,22 @@ mod tests {
         let ack = negotiate(&h).unwrap();
         assert_eq!(ack.version, PROTOCOL_V2);
         assert!(!WireCodec::negotiated(&ack).unwrap().pipelining());
+    }
+
+    #[test]
+    fn negotiate_lands_a_v3_peer_on_linear_pipelining() {
+        // a v3-only peer keeps the session pipelined but tree-free: the
+        // v4 edge must fall back to linear DraftSeq frames
+        let h = Hello { min_version: PROTOCOL_V2, max_version: PROTOCOL_V3, ..hello() };
+        let ack = negotiate(&h).unwrap();
+        assert_eq!(ack.version, PROTOCOL_V3);
+        let wc = WireCodec::negotiated(&ack).unwrap();
+        assert!(wc.pipelining());
+        assert!(!wc.trees(), "v3 sessions must not speak draft trees");
+        // a full v4 peer unlocks trees
+        let ack4 = negotiate(&hello()).unwrap();
+        assert_eq!(ack4.version, PROTOCOL_V4);
+        assert!(WireCodec::negotiated(&ack4).unwrap().trees());
     }
 
     #[test]

@@ -25,15 +25,22 @@
 pub mod wire;
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
+#[cfg(feature = "pjrt")]
+use std::net::TcpListener;
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
 use crate::channel::LinkConfig;
-use crate::coordinator::{Metrics, PjrtStack, SessionConfig};
-use crate::model::{decode, encode};
+use crate::coordinator::SessionConfig;
+#[cfg(feature = "pjrt")]
+use crate::coordinator::{Metrics, PjrtStack};
+use crate::model::encode;
+#[cfg(feature = "pjrt")]
+use crate::model::decode;
 use crate::sqs::Policy;
 use crate::util::json::Json;
 
@@ -57,6 +64,7 @@ impl Default for ServerConfig {
     }
 }
 
+#[cfg(feature = "pjrt")]
 struct Job {
     line: String,
     reply: Sender<String>,
@@ -91,11 +99,25 @@ pub fn parse_request(line: &str) -> Result<(Vec<u16>, SessionConfig)> {
             .and_then(|x| x.as_usize())
             .unwrap_or(1)
             .max(1),
+        tree_branching: j
+            .get("tree_branching")
+            .and_then(|x| x.as_usize())
+            .unwrap_or(1)
+            .max(1),
         ..Default::default()
     };
+    // same precondition the CLI enforces: trees ride the v4 pipeline, so
+    // a branching request without a pipeline is an error, not a silent
+    // no-op the response would still echo back
+    if cfg.tree_branching > 1 && cfg.pipeline_depth < 2 {
+        return Err(anyhow!(
+            "tree_branching >= 2 needs pipeline_depth >= 2 (trees ride the v4 pipeline)"
+        ));
+    }
     Ok((encode(prompt_s), cfg))
 }
 
+#[cfg(feature = "pjrt")]
 fn handle_conn(stream: TcpStream, jobs: Sender<Job>) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut writer = match stream.try_clone() {
@@ -130,6 +152,10 @@ fn handle_conn(stream: TcpStream, jobs: Sender<Job>) {
 }
 
 /// Run the server (blocks).  Returns after `max_requests` if set.
+/// PJRT-only: the JSON front-end runs the whole SD loop server-side
+/// over the real model stack (the wire endpoint [`wire`] is
+/// backend-agnostic and works in synthetic-only builds).
+#[cfg(feature = "pjrt")]
 pub fn serve(cfg: ServerConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)?;
     crate::info!("sqs-sd serving on {}", cfg.addr);
@@ -197,6 +223,7 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
                             ("downlink_bits", Json::Num(res.downlink_bits as f64)),
                             ("mean_k", Json::Num(res.mean_k())),
                             ("pipeline_depth", Json::Num(res.pipeline_depth as f64)),
+                            ("tree_branching", Json::Num(res.tree_branching as f64)),
                             ("discarded_batches", Json::Num(res.discarded_batches as f64)),
                         ])
                     }
@@ -260,5 +287,15 @@ mod tests {
         assert!(parse_request(r#"{"policy": "ksqs"}"#).is_err());
         assert!(parse_request("not json").is_err());
         assert!(parse_request(r#"{"prompt":"x","policy":"bogus"}"#).is_err());
+
+        // trees need the v4 pipeline: branching without depth is an
+        // error, with depth it parses
+        assert!(parse_request(r#"{"prompt":"x","tree_branching":3}"#).is_err());
+        let (_, cfg) = parse_request(
+            r#"{"prompt":"x","pipeline_depth":2,"tree_branching":3}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.pipeline_depth, 2);
+        assert_eq!(cfg.tree_branching, 3);
     }
 }

@@ -37,7 +37,8 @@ use crate::model::synthetic::{SyntheticTarget, SyntheticWorld};
 use crate::model::DraftLm;
 use crate::protocol::{
     fair_share_grant, negotiate, Control, Direction, Ext, FeedbackV2, Frame, HelloAck, SeqAck,
-    SeqDraft, StreamTransport, Transport, WireCodec, MAX_SUPPORTED, PROTOCOL_V3,
+    SeqDraft, StreamTransport, Transport, TreeAck, TreeDraft, WireCodec, MAX_SUPPORTED,
+    NO_PARENT, PROTOCOL_V3, PROTOCOL_V4,
 };
 use crate::sqs::Policy;
 
@@ -275,6 +276,32 @@ fn serve_conn(
                 fb.exts.push(Ext::Ack(SeqAck { seq: sd.seq, epoch: sd.epoch, discard: false }));
                 tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
             }
+            Frame::DraftTree(td) => {
+                if td.epoch != cloud_epoch {
+                    // stale tree: same linear discard ack, so the client's
+                    // ledger drains uniformly across v3/v4 frames
+                    let mut fb = FeedbackV2::discard(td.frame.batch_id, td.seq, td.epoch);
+                    fb.exts.extend(feedback_exts(cfg, active.load(Ordering::SeqCst)));
+                    tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+                    continue;
+                }
+                let tv = cloud.verify_tree(&td, prev, cfg.temp)?;
+                if !tv.full_trunk {
+                    cloud_epoch = cloud_epoch.wrapping_add(1);
+                }
+                prev = *tv.verdict.committed.last().unwrap();
+                let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
+                let mut fb = tv.verdict.feedback_v2(exts);
+                fb.exts.push(Ext::TreeAck(TreeAck {
+                    seq: td.seq,
+                    epoch: td.epoch,
+                    discard: false,
+                    resampled: tv.verdict.rejected,
+                    node: tv.survivor,
+                    depth: tv.depth as u8,
+                }));
+                tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+            }
             Frame::Control(Control::Bye) => break,
             other => bail!("unexpected {} frame mid-session", other.name()),
         }
@@ -294,6 +321,9 @@ pub struct WireEdgeConfig {
     /// unacknowledged drafts kept in flight on the stream (1 = the v2
     /// alternating client, bit-exact; >= 2 negotiates protocol v3)
     pub pipeline_depth: usize,
+    /// token-tree branching factor (1 = the v3 linear pipeline,
+    /// bit-exact; >= 2 with `pipeline_depth >= 2` negotiates v4)
+    pub tree_branching: usize,
     pub seed: u64,
 }
 
@@ -307,6 +337,7 @@ impl Default for WireEdgeConfig {
             max_batch_drafts: 15,
             adaptive: AdaptiveMode::Off,
             pipeline_depth: 1,
+            tree_branching: 1,
             seed: 0,
         }
     }
@@ -362,9 +393,14 @@ impl<D: DraftLm> WireEdge<D> {
         if matches!(cfg.adaptive, AdaptiveMode::Aimd { .. }) {
             edge.use_adaptive_scheme();
         }
-        // a pipelining client advertises v3; the server's ack decides
+        // a pipelining client advertises v3 — v4 with a tree branching
+        // factor on top; the server's ack decides
         if cfg.pipeline_depth > 1 {
-            edge.wire.set_version(PROTOCOL_V3);
+            edge.wire.set_version(if cfg.tree_branching > 1 {
+                PROTOCOL_V4
+            } else {
+                PROTOCOL_V3
+            });
         }
         let control = ControlLoop::for_session(
             cfg.adaptive,
@@ -373,6 +409,7 @@ impl<D: DraftLm> WireEdge<D> {
             cfg.budget_bits,
             vocab,
             cfg.pipeline_depth,
+            cfg.tree_branching,
         );
         WireEdge { edge, control, cfg }
     }
@@ -452,6 +489,7 @@ impl<D: DraftLm> WireEdge<D> {
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
                 discarded: false,
+                tree_nodes: l,
             });
         }
         let _ = transport.send_frame(
@@ -538,10 +576,40 @@ impl<D: DraftLm> WireEdge<D> {
         struct Pending {
             seq: u16,
             ctx_before: usize,
+            /// per-path drafted basis: the trunk length for tree frames
             drafted: usize,
-            /// the draft tokens (committed locally on full accept)
+            /// the draft tokens (trunk, for tree frames; committed
+            /// locally on full accept)
             tokens: Vec<u16>,
+            /// tree shape for survivor reconstruction: (parents, node
+            /// tokens) — None for linear frames
+            tree: Option<(Vec<u8>, Vec<u16>)>,
+            /// wire nodes the frame carried (== drafted when linear)
+            tree_nodes: usize,
             frame_bits: usize,
+        }
+
+        /// Token values along the root-to-`node` path of a stored tree
+        /// shape (bounds-checked: the server names the node).
+        fn survivor_path(
+            parents: &[u8],
+            tokens: &[u16],
+            node: u8,
+        ) -> Result<Vec<u16>> {
+            if node == NO_PARENT {
+                return Ok(Vec::new());
+            }
+            if node as usize >= parents.len() {
+                bail!("server acked unknown tree node {node}");
+            }
+            let mut ids = vec![node];
+            let mut cur = node;
+            while parents[cur as usize] != NO_PARENT {
+                cur = parents[cur as usize];
+                ids.push(cur);
+            }
+            ids.reverse();
+            Ok(ids.into_iter().map(|i| tokens[i as usize]).collect())
         }
         let mut seq_committed = prompt.to_vec();
         let mut in_flight: VecDeque<Pending> = VecDeque::new();
@@ -563,25 +631,56 @@ impl<D: DraftLm> WireEdge<D> {
             if can_draft {
                 let knobs = self.control.begin_batch();
                 window = knobs.pipeline_depth.max(1);
+                let branching = if self.edge.wire.trees() {
+                    knobs.tree_branching.clamp(1, self.cfg.tree_branching.max(1))
+                } else {
+                    1
+                };
                 let ctx_before = self.edge.context_len();
                 let remaining = max_new_tokens - (produced + speculated);
-                let drafted = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
-                let l = drafted.frame.tokens.len();
+                // a v4 client whose branching knob collapsed to 1 ships
+                // the linear v3 frame shape for that round
+                let (body, parents, l) = if branching >= 2 {
+                    let dt = self.edge.draft_tree_knobs(self.cfg.temp, remaining, &knobs)?;
+                    let l = dt.trunk_len;
+                    (dt.frame, Some(dt.parents), l)
+                } else {
+                    let db = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
+                    let l = db.frame.tokens.len();
+                    (db.frame, None, l)
+                };
                 if l == 0 {
                     exhausted = true;
                     continue;
                 }
                 let seq = next_seq;
                 next_seq = next_seq.wrapping_add(1);
-                let tokens: Vec<u16> = drafted.frame.tokens.iter().map(|t| t.token).collect();
-                let up_frame =
-                    Frame::DraftSeq(SeqDraft { seq, epoch: edge_epoch, frame: drafted.frame });
+                let nodes = body.tokens.len();
+                let node_tokens: Vec<u16> = body.tokens.iter().map(|t| t.token).collect();
+                let trunk: Vec<u16> = node_tokens[..l].to_vec();
+                let (up_frame, tree) = match parents {
+                    Some(parents) => (
+                        Frame::DraftTree(TreeDraft {
+                            seq,
+                            epoch: edge_epoch,
+                            parents: parents.clone(),
+                            frame: body,
+                        }),
+                        Some((parents, node_tokens)),
+                    ),
+                    None => (
+                        Frame::DraftSeq(SeqDraft { seq, epoch: edge_epoch, frame: body }),
+                        None,
+                    ),
+                };
                 let d = transport.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, 0.0)?;
                 in_flight.push_back(Pending {
                     seq,
                     ctx_before,
                     drafted: l,
-                    tokens,
+                    tokens: trunk,
+                    tree,
+                    tree_nodes: nodes,
                     frame_bits: d.bits,
                 });
                 speculated += l;
@@ -597,14 +696,14 @@ impl<D: DraftLm> WireEdge<D> {
             if fb.grant().is_some() {
                 grants_seen += 1;
             }
-            let ack = fb
-                .ack()
+            let (acked, discard) = fb
+                .acked_seq()
                 .ok_or_else(|| anyhow!("pipelined server sent feedback without a seq ack"))?;
-            if ack.seq != p.seq {
-                bail!("feedback acks seq {} while seq {} is oldest in flight", ack.seq, p.seq);
+            if acked != p.seq {
+                bail!("feedback acks seq {acked} while seq {} is oldest in flight", p.seq);
             }
 
-            if ack.discard {
+            if discard {
                 discarded += 1;
                 self.control.feedback(&BatchOutcome {
                     drafted: p.drafted,
@@ -616,6 +715,7 @@ impl<D: DraftLm> WireEdge<D> {
                     congestion: fb.congestion(),
                     grant_bits: fb.grant(),
                     discarded: true,
+                    tree_nodes: p.tree_nodes,
                 });
                 continue;
             }
@@ -623,6 +723,51 @@ impl<D: DraftLm> WireEdge<D> {
             let accepted = fb.accepted as usize;
             if accepted > p.drafted {
                 bail!("server accepted {accepted} of {} drafts", p.drafted);
+            }
+            if let Some((parents, node_tokens)) = &p.tree {
+                // token tree: the TreeAck names the surviving node; the
+                // client reconstructs the path from its stored shape and
+                // branches the rollback to it
+                let ta = fb
+                    .tree_ack()
+                    .ok_or_else(|| anyhow!("tree frame acked without a tree ack"))?;
+                let survivor = survivor_path(parents, node_tokens, ta.node)?;
+                if survivor.len() != ta.depth as usize {
+                    bail!(
+                        "tree ack depth {} disagrees with its node path ({})",
+                        ta.depth,
+                        survivor.len()
+                    );
+                }
+                let full = self.edge.apply_feedback_tree(
+                    p.ctx_before,
+                    &p.tokens,
+                    &survivor,
+                    ta.resampled,
+                    fb.new_token,
+                )?;
+                seq_committed.extend(survivor.iter().copied());
+                if ta.resampled {
+                    seq_committed.push(fb.new_token);
+                }
+                if !full {
+                    edge_epoch = edge_epoch.wrapping_add(1);
+                    exhausted = false; // rollback freed context room
+                }
+                frame_bits.push(p.frame_bits);
+                self.control.feedback(&BatchOutcome {
+                    drafted: p.drafted,
+                    accepted,
+                    rejected: ta.resampled,
+                    frame_bits: p.frame_bits,
+                    t_uplink_s: 0.0,
+                    queue_wait_s: 0.0,
+                    congestion: fb.congestion(),
+                    grant_bits: fb.grant(),
+                    discarded: false,
+                    tree_nodes: p.tree_nodes,
+                });
+                continue;
             }
             self.edge.apply_feedback_pipelined(p.ctx_before, p.drafted, accepted, fb.new_token)?;
             seq_committed.extend(p.tokens[..accepted].iter().copied());
@@ -644,6 +789,7 @@ impl<D: DraftLm> WireEdge<D> {
                 congestion: fb.congestion(),
                 grant_bits: fb.grant(),
                 discarded: false,
+                tree_nodes: p.tree_nodes,
             });
         }
         let _ = transport.send_frame(

@@ -1,6 +1,8 @@
 //! End-to-end speculative decoding over the real PJRT stack (requires
 //! `make artifacts`; run with --test-threads=1, see Makefile).
 
+#![cfg(feature = "pjrt")]
+
 use sqs_sd::channel::LinkConfig;
 use sqs_sd::coordinator::{PjrtStack, SessionConfig, TimingMode};
 use sqs_sd::model::encode;

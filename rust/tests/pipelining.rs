@@ -38,6 +38,7 @@ fn assert_bit_identical(a: &SessionResult, b: &SessionResult, what: &str) {
     assert_eq!(a.tokens, b.tokens, "{what}: tokens");
     assert_eq!(a.prompt_len, b.prompt_len, "{what}: prompt_len");
     assert_eq!(a.n_rej, b.n_rej, "{what}: n_rej");
+    assert_eq!(a.tree_branching, b.tree_branching, "{what}: tree_branching");
     assert_eq!(a.discarded_batches, b.discarded_batches, "{what}: discarded");
     assert_eq!(a.uplink_bits, b.uplink_bits, "{what}: uplink_bits");
     assert_eq!(a.downlink_bits, b.downlink_bits, "{what}: downlink_bits");
@@ -54,6 +55,7 @@ fn assert_bit_identical(a: &SessionResult, b: &SessionResult, what: &str) {
         assert_eq!(x.accepted, y.accepted, "{what}: batch {i} accepted");
         assert_eq!(x.rejected, y.rejected, "{what}: batch {i} rejected");
         assert_eq!(x.dist_bits, y.dist_bits, "{what}: batch {i} dist_bits");
+        assert_eq!(x.tree_nodes, y.tree_nodes, "{what}: batch {i} tree_nodes");
         assert_eq!(x.frame_bits, y.frame_bits, "{what}: batch {i} frame_bits");
         assert_eq!(x.feedback_bits, y.feedback_bits, "{what}: batch {i} feedback_bits");
         assert_eq!(x.knobs, y.knobs, "{what}: batch {i} knobs");

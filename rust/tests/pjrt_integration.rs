@@ -4,6 +4,8 @@
 //! through HLO, model generation quality, and KV-cache coherence through
 //! the prefill/decode/verify serving phases.
 
+#![cfg(feature = "pjrt")]
+
 use std::sync::Arc;
 
 use sqs_sd::model::lm::{ModelAssets, PjrtDraft, PjrtTarget};

@@ -8,8 +8,9 @@ use sqs_sd::channel::{LinkConfig, SimulatedLink};
 use sqs_sd::coordinator::session::{SdSession, SessionConfig, TimingMode};
 use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use sqs_sd::protocol::{
-    Control, Ext, FeedbackV2, Frame, Hello, SeqAck, SeqDraft, WireCodec, FRAME_HEADER_BITS,
-    HELLO_ACK_BITS, HELLO_BITS, MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V3,
+    Control, Ext, FeedbackV2, Frame, Hello, SeqAck, SeqDraft, TreeAck, TreeDraft, WireCodec,
+    FRAME_HEADER_BITS, HELLO_ACK_BITS, HELLO_BITS, MAX_SUPPORTED, MIN_SUPPORTED, NO_PARENT,
+    PROTOCOL_V3, PROTOCOL_V4,
 };
 use sqs_sd::sqs::bits::SchemeBits;
 use sqs_sd::sqs::Policy;
@@ -334,7 +335,14 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
         Frame::DraftSeq(SeqDraft {
             seq: u16::MAX, // wraparound corner on the wire
             epoch: u8::MAX,
-            frame: DraftFrame { batch_id: 78, tokens },
+            frame: DraftFrame { batch_id: 78, tokens: tokens.clone() },
+        }),
+        Frame::DraftTree(TreeDraft {
+            seq: u16::MAX,
+            epoch: u8::MAX,
+            // trunk 0-1 plus a root sibling: the smallest non-chain tree
+            parents: vec![NO_PARENT, 0, NO_PARENT],
+            frame: DraftFrame { batch_id: 79, tokens },
         }),
         Frame::Feedback(FeedbackV2 {
             batch_id: 9,
@@ -345,6 +353,19 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
                 Ext::BudgetGrant(600),
                 Ext::Ack(SeqAck { seq: u16::MAX, epoch: 3, discard: false }),
             ],
+        }),
+        Frame::Feedback(FeedbackV2 {
+            batch_id: 11,
+            accepted: 2,
+            new_token: 40,
+            exts: vec![Ext::TreeAck(TreeAck {
+                seq: u16::MAX,
+                epoch: u8::MAX,
+                discard: false,
+                resampled: true,
+                node: 2,
+                depth: 2,
+            })],
         }),
         Frame::Feedback(FeedbackV2::discard(10, 0, u8::MAX)),
         Frame::Control(Control::Prompt(vec![1, 2, 3])),
@@ -366,9 +387,10 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
 /// the verify layer rejects downstream).
 #[test]
 fn corrupted_v2_frames_error_never_panic() {
-    // a v3 codec decodes every frame type, sequenced drafts included
+    // a v4 codec decodes every frame type, sequenced drafts and trees
+    // included
     let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
-    codec.set_version(PROTOCOL_V3);
+    codec.set_version(PROTOCOL_V4);
     let frames = sample_frames(&mut codec);
 
     for (name, bytes) in &frames {
@@ -380,10 +402,12 @@ fn corrupted_v2_frames_error_never_panic() {
     }
 
     // (b) seeded bit-flip storm over every frame type; util/check catches
-    // panics and reports the reproducing (seed, case)
+    // panics and reports the reproducing (seed, case).  For tree frames
+    // this storm also lands flips in the parent-pointer table, so
+    // out-of-range pointers must come back as Err, never a panic.
     check("v2 frame corruption never panics", 300, |g, _| {
         let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
-        codec.set_version(PROTOCOL_V3);
+        codec.set_version(PROTOCOL_V4);
         let frames = sample_frames(&mut codec);
         let (name, bytes) = g.pick(&frames);
         let mut corrupt = bytes.clone();
@@ -397,13 +421,34 @@ fn corrupted_v2_frames_error_never_panic() {
         let _ = name;
     });
 
-    // (c) a strictly-v2 codec must refuse sequenced frames outright —
-    // never panic, never misparse them as something else
+    // (c) down-version codecs must refuse newer frames outright — never
+    // panic, never misparse them as something else
     let mut v2 = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    let mut v3 = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    v3.set_version(PROTOCOL_V3);
     for (name, bytes) in &frames {
         if *name == "draft_seq" {
             assert!(v2.decode(bytes).is_err(), "v2 codec must reject sequenced drafts");
         }
+        if *name == "draft_tree" {
+            assert!(v2.decode(bytes).is_err(), "v2 codec must reject draft trees");
+            assert!(v3.decode(bytes).is_err(), "v3 codec must reject draft trees");
+        }
+    }
+
+    // (d) every parent byte of a valid tree forced out of range must Err
+    let (_, tree_bytes) = frames
+        .iter()
+        .find(|(n, _)| *n == "draft_tree")
+        .expect("sample set includes a tree");
+    // layout: header(8) seq(16) epoch(8) n(8) then one parent byte/node
+    for node in 0..3usize {
+        let mut corrupt = tree_bytes.clone();
+        corrupt[5 + node] = 0x80 | node as u8; // >= node index, not 0xFF
+        assert!(
+            codec.decode(&corrupt).is_err(),
+            "node {node}: out-of-range parent must Err"
+        );
     }
 }
 

@@ -1,0 +1,405 @@
+//! Token-tree speculation (protocol v4) contract tests.
+//!
+//! (1) Regression: `tree_branching = 1` must be BIT-IDENTICAL to the v3
+//!     linear pipeline at the same depth — over the session engine, the
+//!     fleet simulator (explicit branching-1 profile vs default), and
+//!     the TCP wire path — exactly the way depth 1 is pinned to v2.
+//! (2) Tree sessions stay a pure function of (config, seed).
+//! (3) THE tentpole claim: in a high-rejection regime at equal depth,
+//!     tree speculation strictly reduces discarded batches vs. the
+//!     linear pipeline — surviving into a rejection continuation
+//!     commits more tokens per round, so the request takes fewer
+//!     rounds and fewer epoch bumps kill fewer in-flight frames.
+//! (4) Exactness: the multi-candidate residual walk still emits tokens
+//!     from the target distribution.
+//! (5) Stale-epoch trees are discarded (uplink in, discard ack out) on
+//!     the session, fleet, and TCP FIFO paths.
+
+use std::net::TcpStream;
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::codec::{DraftFrame, DraftToken};
+use sqs_sd::coordinator::session::{SdSession, SessionConfig, SessionResult, TimingMode};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, VerifierConfig, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::protocol::{
+    Control, Direction, Frame, StreamTransport, Transport, TreeDraft, WireCodec, NO_PARENT,
+    PROTOCOL_V4,
+};
+use sqs_sd::server::wire::{WireEdge, WireEdgeConfig, WireServer, WireServerConfig};
+use sqs_sd::sqs::bits::SchemeBits;
+use sqs_sd::sqs::{sparse_quantize, Policy, Sparsifier};
+use sqs_sd::util::stats::tv_distance;
+
+fn modeled() -> TimingMode {
+    TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 }
+}
+
+fn make_session(
+    world: &SyntheticWorld,
+    link: LinkConfig,
+    cfg: SessionConfig,
+) -> SdSession<SyntheticDraft, SyntheticTarget> {
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), cfg.max_batch_drafts, 1_000_000);
+    let link = SimulatedLink::new(link, cfg.seed);
+    SdSession::new(draft, target, link, cfg)
+}
+
+fn wan() -> LinkConfig {
+    LinkConfig { uplink_bps: 1e6, downlink_bps: 1e7, propagation_s: 0.050, jitter_s: 0.0 }
+}
+
+fn session_cfg(depth: usize, branching: usize, seed: u64, max_new: usize) -> SessionConfig {
+    SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.8,
+        max_new_tokens: max_new,
+        max_batch_drafts: 4,
+        seed,
+        timing: modeled(),
+        pipeline_depth: depth,
+        tree_branching: branching,
+        ..Default::default()
+    }
+}
+
+/// Field-by-field bit identity (floats via to_bits), minus the
+/// `tree_branching` echo itself — the configs intentionally differ on
+/// that knob while every observable must agree.
+fn assert_same_run(a: &SessionResult, b: &SessionResult, what: &str) {
+    assert_eq!(a.tokens, b.tokens, "{what}: tokens");
+    assert_eq!(a.n_rej, b.n_rej, "{what}: n_rej");
+    assert_eq!(a.discarded_batches, b.discarded_batches, "{what}: discarded");
+    assert_eq!(a.uplink_bits, b.uplink_bits, "{what}: uplink_bits");
+    assert_eq!(a.downlink_bits, b.downlink_bits, "{what}: downlink_bits");
+    assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits(), "{what}: total");
+    assert_eq!(a.batches.len(), b.batches.len(), "{what}: batch count");
+    for (i, (x, y)) in a.batches.iter().zip(&b.batches).enumerate() {
+        assert_eq!(x.drafted, y.drafted, "{what}: batch {i} drafted");
+        assert_eq!(x.accepted, y.accepted, "{what}: batch {i} accepted");
+        assert_eq!(x.tree_nodes, y.tree_nodes, "{what}: batch {i} nodes");
+        assert_eq!(x.frame_bits, y.frame_bits, "{what}: batch {i} frame_bits");
+        assert_eq!(x.feedback_bits, y.feedback_bits, "{what}: batch {i} fb bits");
+    }
+}
+
+/// (1a) Session path: a `tree_branching: 1` session at depth >= 2 takes
+/// exactly the v3 linear pipeline — same frames, same bits, same times
+/// — as a session that never heard of the knob.
+#[test]
+fn branching_one_session_is_bit_identical_to_the_v3_pipeline() {
+    let world = SyntheticWorld::new(64, 0.6, 7);
+    for depth in [2usize, 3] {
+        let explicit = make_session(&world, wan(), session_cfg(depth, 1, 11, 48))
+            .run(&[3, 1, 4])
+            .unwrap();
+        let default_cfg = SessionConfig {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.8,
+            max_new_tokens: 48,
+            max_batch_drafts: 4,
+            seed: 11,
+            timing: modeled(),
+            pipeline_depth: depth,
+            ..Default::default() // no tree_branching mention at all
+        };
+        let plain = make_session(&world, wan(), default_cfg).run(&[3, 1, 4]).unwrap();
+        assert_same_run(&explicit, &plain, &format!("depth {depth}"));
+        // linear pipelines never carry extra wire nodes
+        for b in &explicit.batches {
+            assert_eq!(b.tree_nodes, b.drafted, "branching 1 ships linear frames");
+        }
+    }
+}
+
+/// (2) Tree sessions are a pure function of (config, seed), and the
+/// seed matters.
+#[test]
+fn tree_session_is_deterministic() {
+    let world = SyntheticWorld::new(64, 0.6, 21);
+    let run = |seed: u64| {
+        make_session(&world, wan(), session_cfg(3, 3, seed, 64)).run(&[9, 2]).unwrap()
+    };
+    let (a, b) = (run(5), run(5));
+    assert_same_run(&a, &b, "same seed");
+    assert_eq!(a.tree_branching, 3);
+    let c = run(6);
+    assert_ne!(a.tokens, c.tokens, "seeds must matter");
+    // the tree actually went on the wire: some verified round carried
+    // more nodes than its trunk
+    assert!(
+        a.batches.iter().any(|r| r.tree_nodes > r.drafted),
+        "no tree frame was ever shipped"
+    );
+    assert!(a.new_tokens() >= 64, "request completed: {} tokens", a.new_tokens());
+}
+
+/// (3) THE acceptance criterion: in a high-rejection regime, trees
+/// strictly reduce discarded batches vs. linear at equal depth.  A
+/// rejection that survives into a sibling chain commits up to a full
+/// window instead of `accepted + 1` tokens, so the same request takes
+/// fewer rounds — and each epoch bump therefore kills fewer frames.
+/// Summed over seeds so one lucky trajectory cannot mask the effect.
+#[test]
+fn trees_strictly_reduce_discards_under_high_rejection() {
+    let world = SyntheticWorld::new(64, 1.0, 404); // heavy draft-target mismatch
+    let total = |branching: usize| -> (u64, u64, usize) {
+        let mut discards = 0u64;
+        let mut batches = 0u64;
+        let mut tokens = 0usize;
+        for seed in 0..6u64 {
+            let r = make_session(&world, wan(), session_cfg(3, branching, 100 + seed, 96))
+                .run(&[5, 9])
+                .unwrap();
+            assert!(r.new_tokens() >= 96, "branching {branching}: request completed");
+            discards += r.discarded_batches as u64;
+            batches += r.batches.len() as u64;
+            tokens += r.new_tokens();
+        }
+        (discards, batches, tokens)
+    };
+    let (lin_disc, lin_batches, lin_tokens) = total(1);
+    let (tree_disc, tree_batches, tree_tokens) = total(3);
+    assert!(lin_disc > 0, "scenario must actually discard (got {lin_disc})");
+    assert!(
+        tree_disc < lin_disc,
+        "tree speculation must strictly reduce discards: {tree_disc} !< {lin_disc}"
+    );
+    // the mechanism: more tokens per verified round => fewer rounds
+    let lin_tpb = lin_tokens as f64 / lin_batches as f64;
+    let tree_tpb = tree_tokens as f64 / tree_batches as f64;
+    assert!(
+        tree_tpb > lin_tpb,
+        "trees must commit more per round: {tree_tpb:.3} !> {lin_tpb:.3}"
+    );
+}
+
+/// (4) Exactness: the multi-candidate residual walk still emits the
+/// target distribution.  The synthetic world is Markov, so the first
+/// generated token after prompt [s] across many seeded tree sessions
+/// must be distributed as p(. | s).
+#[test]
+fn tree_outputs_follow_target_distribution() {
+    let world = SyntheticWorld::new(32, 0.8, 99);
+    let temp = 0.9f32;
+    let prev = 5u16;
+    let p_ref = world.target_probs(prev, temp);
+
+    let n = 20_000usize;
+    let mut freq = vec![0u64; 32];
+    for seed in 0..n {
+        let cfg = SessionConfig {
+            policy: Policy::KSqs { k: 4 },
+            temp,
+            max_new_tokens: 1,
+            max_batch_drafts: 4,
+            seed: seed as u64,
+            timing: modeled(),
+            pipeline_depth: 2,
+            tree_branching: 3,
+            ..Default::default()
+        };
+        let res = make_session(&world, LinkConfig::default(), cfg).run(&[prev]).unwrap();
+        freq[res.tokens[1] as usize] += 1;
+    }
+    let emp: Vec<f32> = freq.iter().map(|&c| c as f32 / n as f32).collect();
+    let tv = tv_distance(&emp, &p_ref);
+    // TV of an n-sample empirical distribution over 32 outcomes
+    // concentrates near sqrt(V/(2*pi*n)) ~ 0.016; 0.035 is ~3 sigma.
+    assert!(tv < 0.035, "tree walk broke the SD guarantee: TV {tv:.4}");
+}
+
+// ---------------------------------------------------------------------
+// fleet paths
+// ---------------------------------------------------------------------
+
+fn fleet_cfg(branching: Option<usize>, seed: u64) -> FleetConfig {
+    let mut base = DeviceProfile {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.8,
+        max_new_tokens: 24,
+        max_batch_drafts: 4,
+        workload: Workload::ClosedLoop { think_s: 0.0 },
+        pipeline_depth: 3,
+        ..Default::default()
+    };
+    if let Some(b) = branching {
+        base.tree_branching = b;
+    }
+    let mut cfg = FleetConfig::uniform(3, base);
+    cfg.uplink_bps = 1e6;
+    cfg.propagation_s = 0.050;
+    cfg.requests_per_device = 3;
+    cfg.mismatch = 0.8;
+    cfg.verifier = VerifierConfig { concurrency: 3, batch_max: 2, ..Default::default() };
+    cfg.seed = seed;
+    cfg.record_trace = true;
+    cfg
+}
+
+/// (1b) Fleet path: an explicit branching-1 profile takes exactly the
+/// linear-pipeline event path — same trace, same digest — as a profile
+/// that never mentions the knob.
+#[test]
+fn fleet_branching_one_is_bit_identical_to_default() {
+    let a = FleetSim::new(fleet_cfg(Some(1), 909)).run().unwrap();
+    let b = FleetSim::new(fleet_cfg(None, 909)).run().unwrap();
+    assert!(!a.trace.is_empty());
+    assert_eq!(a.trace, b.trace, "event traces diverge");
+    assert_eq!(a.digest(), b.digest(), "metrics digests diverge");
+}
+
+/// (5, fleet direction) Tree fleets complete, stay bit-reproducible,
+/// and account every stale tree the verifier discarded.
+#[test]
+fn tree_fleet_is_deterministic_and_accounts_discards() {
+    let a = FleetSim::new(fleet_cfg(Some(2), 42)).run().unwrap();
+    let b = FleetSim::new(fleet_cfg(Some(2), 42)).run().unwrap();
+    assert_eq!(a.trace, b.trace, "tree event traces diverge");
+    assert_eq!(a.digest(), b.digest());
+    assert_eq!(a.completed, 9, "3 devices x 3 requests");
+    for d in &a.per_device {
+        assert_eq!(
+            d.knob_trace.len() as u64,
+            d.batches + d.discarded_batches,
+            "device {}: every drafted tree is acked exactly once",
+            d.id
+        );
+    }
+    let c = FleetSim::new(fleet_cfg(Some(2), 43)).run().unwrap();
+    assert_ne!(a.trace, c.trace, "seeds must matter");
+}
+
+// ---------------------------------------------------------------------
+// TCP wire path
+// ---------------------------------------------------------------------
+
+fn run_tcp(seed: u64, depth: usize, branching: usize) -> sqs_sd::server::wire::WireRunReport {
+    let cfg = WireServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: Some(1),
+        congestion_depth: usize::MAX,
+        seed,
+        ..Default::default()
+    };
+    let server = WireServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let world = server.world().clone();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut transport = StreamTransport::new(stream);
+    let draft = SyntheticDraft::new(world, 100_000);
+    let edge_cfg = WireEdgeConfig {
+        policy: Policy::KSqs { k: 8 },
+        max_batch_drafts: 4,
+        pipeline_depth: depth,
+        tree_branching: branching,
+        seed,
+        ..Default::default()
+    };
+    let mut edge = WireEdge::new(draft, edge_cfg);
+    let report = edge.run(&mut transport, &[3, 1, 4], 32).unwrap();
+    handle.join().unwrap();
+    report
+}
+
+/// (1c) TCP path: a branching-1 client is bit-identical to a linear
+/// pipelined client — tokens, per-frame sizes, stream ledgers.
+#[test]
+fn tcp_branching_one_is_bit_identical_to_the_linear_client() {
+    let a = run_tcp(17, 3, 1);
+    let b = run_tcp(17, 3, 0); // 0 is clamped to 1: the knob's off state
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.frame_bits, b.frame_bits);
+    assert_eq!(a.uplink_bits, b.uplink_bits);
+    assert_eq!(a.downlink_bits, b.downlink_bits);
+}
+
+/// Tree sessions over a real socket: negotiation lands on v4, the
+/// session completes, and reruns are bit-identical from (config, seed).
+#[test]
+fn tcp_tree_session_round_trips_and_is_deterministic() {
+    let r = run_tcp(42, 3, 2);
+    assert!(r.new_tokens() >= 32, "request completed: {} tokens", r.new_tokens());
+    assert!(r.batches > 0);
+    // trees multiply wire cost: the tree client ships more uplink bits
+    // than the linear client for the same request shape
+    let lin = run_tcp(42, 3, 1);
+    assert!(
+        r.uplink_bits > lin.uplink_bits,
+        "tree frames must cost more uplink bits ({} !> {})",
+        r.uplink_bits,
+        lin.uplink_bits
+    );
+    let r2 = run_tcp(42, 3, 2);
+    assert_eq!(r.tokens, r2.tokens);
+    assert_eq!(r.uplink_bits, r2.uplink_bits);
+    assert_eq!(r.downlink_bits, r2.downlink_bits);
+    assert_eq!(r.discarded, r2.discarded);
+    let r3 = run_tcp(43, 3, 2);
+    assert_ne!(r.tokens, r3.tokens, "seeds must matter");
+}
+
+/// (5, TCP direction) A stale-epoch tree is discarded by the server
+/// and the discard ack retires the seq at the client: uplink in,
+/// linear discard ack out — both FIFO directions exercised with a
+/// hand-rolled v4 client.
+#[test]
+fn tcp_stale_epoch_tree_is_discarded() {
+    let cfg = WireServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: Some(1),
+        congestion_depth: usize::MAX,
+        seed: 3,
+        ..Default::default()
+    };
+    let server = WireServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut tr = StreamTransport::new(stream);
+    let mut wire = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    wire.set_version(PROTOCOL_V4);
+
+    // handshake + prompt
+    let hello = wire.hello().unwrap();
+    tr.send_frame(Direction::Up, &Frame::Hello(hello), &mut wire, 0.0).unwrap();
+    let ack = match tr.recv_frame(Direction::Down, &mut wire).unwrap() {
+        Frame::HelloAck(a) => a,
+        other => panic!("expected HelloAck, got {}", other.name()),
+    };
+    assert!(ack.ok);
+    assert_eq!(ack.version, PROTOCOL_V4, "server speaks v4");
+    tr.send_frame(Direction::Up, &Frame::Control(Control::Prompt(vec![1, 2])), &mut wire, 0.0)
+        .unwrap();
+
+    // a syntactically valid tree stamped with a future epoch: the
+    // server's cloud epoch is 0, so this must come back as a discard
+    let mut g = sqs_sd::util::check::Gen { rng: sqs_sd::util::rng::Pcg64::new(8, 8) };
+    let tokens: Vec<DraftToken> = (0..2)
+        .map(|_| {
+            let q = g.probs(64, 2.0);
+            let quant = sparse_quantize(&q, &Sparsifier::top_k(8), 100);
+            let token = quant.support[0];
+            DraftToken { quant, token }
+        })
+        .collect();
+    let td = TreeDraft {
+        seq: 7,
+        epoch: 1, // stale: server is at epoch 0
+        parents: vec![NO_PARENT, 0],
+        frame: DraftFrame { batch_id: 1, tokens },
+    };
+    tr.send_frame(Direction::Up, &Frame::DraftTree(td), &mut wire, 0.0).unwrap();
+    let fb = match tr.recv_frame(Direction::Down, &mut wire).unwrap() {
+        Frame::Feedback(f) => f,
+        other => panic!("expected Feedback, got {}", other.name()),
+    };
+    assert_eq!(fb.acked_seq(), Some((7, true)), "stale tree must be discard-acked");
+    assert_eq!(fb.accepted, 0);
+    let _ = tr.send_frame(Direction::Up, &Frame::Control(Control::Bye), &mut wire, 0.0);
+    handle.join().unwrap();
+}
