@@ -1,0 +1,93 @@
+//! Flight-recorder quickstart: run one deliberately turbulent session —
+//! high draft/target mismatch, a depth-3 pipeline, and protocol-v4 token
+//! trees — with a `JsonlTracer` installed, then read the recording back
+//! out: print the rollback / survivor timeline and export the full trace
+//! as JSONL plus Chrome `trace_event` JSON you can drop into Perfetto
+//! (<https://ui.perfetto.dev>) to see drafts, frames in the air, and
+//! verify windows on one virtual-time canvas.
+//!
+//!   cargo run --release --example trace_demo
+//!
+//! The same recording is available from the CLI via
+//! `sqs-sd fleet --trace-out trace.jsonl` (and `run --trace-out` on a
+//! PJRT build); traces are a pure function of (config, seed).
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::{SdSession, SessionConfig, TimingMode};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+use sqs_sd::trace::{JsonlTracer, TraceData, TraceSink};
+
+fn main() -> anyhow::Result<()> {
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.030,
+        jitter_s: 0.0,
+    };
+    // high mismatch: rejections are common, so the pipeline rolls back
+    // epochs and the trees rarely survive along their trunk
+    let world = SyntheticWorld::new(64, 0.8, 2024);
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 6, 1_000_000);
+    let cfg = SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.9,
+        max_new_tokens: 64,
+        max_batch_drafts: 6,
+        seed: 11,
+        timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
+        pipeline_depth: 3,
+        tree_branching: 2,
+        ..Default::default()
+    };
+    let mut sess = SdSession::new(draft, target, SimulatedLink::new(link, 11), cfg);
+    let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+    sess.set_tracer(sink);
+    let res = sess.run(&[7, 21, 42])?;
+
+    let tr = tracer.lock().unwrap();
+    let mut events = tr.events().to_vec();
+    events.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq)));
+
+    println!("== rollback / survivor timeline ==");
+    for ev in &events {
+        match &ev.data {
+            TraceData::EpochRollback { epoch } => {
+                println!("{:>9.4}s  rollback -> epoch {epoch}", ev.t);
+            }
+            TraceData::TreeSurvivor { node, depth, resampled } => {
+                println!(
+                    "{:>9.4}s  tree survivor: node {node} at depth {depth}{}",
+                    ev.t,
+                    if *resampled { " (+resample)" } else { "" }
+                );
+            }
+            TraceData::FeedbackApplied { batch_seq, discarded: true, .. } => {
+                println!("{:>9.4}s  batch {batch_seq} discarded (stale epoch)", ev.t);
+            }
+            _ => {}
+        }
+    }
+
+    let count = |k: &str| events.iter().filter(|e| e.data.kind() == k).count();
+    println!(
+        "\n{} events | {} drafts | {} rollbacks | {} survivors",
+        events.len(),
+        count("draft_sent"),
+        count("epoch_rollback"),
+        count("tree_survivor"),
+    );
+    println!(
+        "session: {} tokens in {:.3}s virtual | {} batches, {} discarded",
+        res.new_tokens(),
+        res.total_time_s,
+        res.batches.len(),
+        res.discarded_batches
+    );
+
+    std::fs::write("trace_demo.jsonl", tr.jsonl())?;
+    std::fs::write("trace_demo.trace.json", tr.chrome_json())?;
+    println!("\nwrote trace_demo.jsonl + trace_demo.trace.json (open at https://ui.perfetto.dev)");
+    Ok(())
+}

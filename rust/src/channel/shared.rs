@@ -12,6 +12,7 @@
 //! The ledger extends `channel::Ledger` with the two quantities contention
 //! studies need: total busy time (-> utilization) and total queue wait.
 
+use crate::trace::{TraceData, TraceSink, ACTOR_LINK};
 use crate::util::rng::Pcg64;
 
 use super::Ledger;
@@ -37,6 +38,9 @@ pub struct SharedUplink {
     /// wall clock).
     schedule: Vec<(u64, f64)>,
     next_step: usize,
+    /// flight-recorder sink (disabled by default); `reserve` stamps
+    /// `QueueWait` events in this channel's own clock domain
+    tracer: TraceSink,
 }
 
 impl SharedUplink {
@@ -51,7 +55,13 @@ impl SharedUplink {
             rng: Pcg64::new(seed, 0x5A4ED),
             schedule: Vec::new(),
             next_step: 0,
+            tracer: TraceSink::null(),
         }
+    }
+
+    /// Install a flight-recorder sink (shared with the fleet's devices).
+    pub fn set_tracer(&mut self, sink: TraceSink) {
+        self.tracer = sink;
     }
 
     /// Attach a capacity schedule: step `(n, bps)` caps the shared
@@ -87,6 +97,12 @@ impl SharedUplink {
         self.ledger.bits += bits as u64;
         self.ledger.time_s += tx;
         self.queue_wait_s += start - now;
+        if start > now {
+            self.tracer.emit(now, ACTOR_LINK, || TraceData::QueueWait {
+                wait_s: start - now,
+                bits,
+            });
+        }
         (start, finish + self.propagation_s + jitter)
     }
 

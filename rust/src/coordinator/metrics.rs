@@ -1,16 +1,190 @@
-//! Serving-metrics registry: named counters and latency summaries,
-//! rendered as a table or exported as JSON for the bench harness.
+//! Serving-metrics plane: pre-registered counter / histogram handles.
+//!
+//! The old registry took a global `Mutex` and allocated a `String` key
+//! on every `inc`/`observe` — measurable overhead on the fleet event
+//! loop's hot path.  The rebuilt plane splits registration from
+//! recording:
+//!
+//! - **Registration** (`counter_handle`, `histogram_handle`) is
+//!   name-keyed, locks the registry map, and hands back a cheap
+//!   cloneable handle.  Do it once, at construction time.
+//! - **Recording** (`Counter::inc`, `Histogram::observe`) touches only
+//!   relaxed atomics behind an `Arc` — no lock, no allocation, no
+//!   string hashing.
+//! - **Export** (`counter`, `histogram`, `render_table`, `to_json`) is
+//!   name-keyed again; it walks the registry, which is off the hot
+//!   path by construction.
+//!
+//! Histograms use fixed ascending bucket upper bounds (value lands in
+//! the first bucket whose bound is >= it; anything above the last bound
+//! lands in an implicit overflow bucket).  Percentiles are rank-based
+//! with linear interpolation inside the containing bucket, clamped to
+//! the observed `[min, max]`, so p50/p95/p99 are exact to within one
+//! bucket width — pick bounds accordingly (`log_bounds` /
+//! `linear_bounds`).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
-use crate::util::stats::Summary;
 
+/// Pre-registered counter: one relaxed atomic add per `inc`.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self, by: u64) {
+        self.0.fetch_add(by, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Log-spaced bucket bounds from `lo` to at least `hi`,
+/// `per_decade` bounds per factor of 10.  Suits latency-like values.
+pub fn log_bounds(lo: f64, hi: f64, per_decade: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && per_decade > 0);
+    let mut v = Vec::new();
+    let mut i = 0usize;
+    loop {
+        let b = lo * 10f64.powf(i as f64 / per_decade as f64);
+        v.push(b);
+        if b >= hi {
+            return v;
+        }
+        i += 1;
+    }
+}
+
+/// `n` equal-width bucket bounds covering `(lo, hi]`.
+pub fn linear_bounds(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(hi > lo && n > 0);
+    (1..=n).map(|i| lo + (hi - lo) * i as f64 / n as f64).collect()
+}
+
+struct HistCore {
+    bounds: Vec<f64>,
+    /// bounds.len() + 1 slots; the last is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    n: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+fn cas_f64(cell: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = cell.load(Relaxed);
+    loop {
+        let new = f(f64::from_bits(cur)).to_bits();
+        match cell.compare_exchange_weak(cur, new, Relaxed, Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Pre-registered fixed-bucket histogram: per-`observe` cost is a
+/// bucket binary search plus a handful of relaxed atomics.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bucket bounds must be strictly ascending"
+        );
+        Histogram(Arc::new(HistCore {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            n: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let i = c.bounds.partition_point(|&b| b < v);
+        c.counts[i].fetch_add(1, Relaxed);
+        c.n.fetch_add(1, Relaxed);
+        cas_f64(&c.sum_bits, |s| s + v);
+        cas_f64(&c.min_bits, |m| m.min(v));
+        cas_f64(&c.max_bits, |m| m.max(v));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.n.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { 0.0 } else { self.sum() / n as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count() == 0 { 0.0 } else { f64::from_bits(self.0.min_bits.load(Relaxed)) }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count() == 0 { 0.0 } else { f64::from_bits(self.0.max_bits.load(Relaxed)) }
+    }
+
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0.counts.iter().map(|c| c.load(Relaxed)).collect()
+    }
+
+    /// Rank-based percentile (p in [0, 100]) with linear interpolation
+    /// inside the containing bucket, clamped to the observed range.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let (min, max) = (self.min(), self.max());
+        let target = (p.clamp(0.0, 100.0) / 100.0 * n as f64).ceil().max(1.0);
+        let mut cum = 0u64;
+        for (i, c) in self.0.counts.iter().enumerate() {
+            let c = c.load(Relaxed);
+            if c > 0 && (cum + c) as f64 >= target {
+                let lo = if i == 0 { min } else { self.0.bounds[i - 1].max(min) };
+                let hi = if i == self.0.bounds.len() { max } else { self.0.bounds[i].min(max) };
+                let frac = (target - cum as f64) / c as f64;
+                return (lo + frac * (hi - lo)).clamp(min, max);
+            }
+            cum += c;
+        }
+        max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Registry: name -> handle.  Lock scope is registration and export
+/// only; recording goes through the handles.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
-    summaries: Mutex<BTreeMap<String, Summary>>,
+    counters: Mutex<BTreeMap<String, Counter>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
 }
 
 impl Metrics {
@@ -18,25 +192,36 @@ impl Metrics {
         Self::default()
     }
 
-    pub fn inc(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
-    }
-
-    pub fn observe(&self, name: &str, value: f64) {
-        self.summaries
+    /// Register (or look up) a counter and return its handle.
+    pub fn counter_handle(&self, name: &str) -> Counter {
+        self.counters
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(Summary::new)
-            .add(value);
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
     }
 
+    /// Register (or look up) a histogram.  The bounds of the first
+    /// registration win; later calls under the same name return the
+    /// existing handle.
+    pub fn histogram_handle(&self, name: &str, bounds: &[f64]) -> Histogram {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .clone()
+    }
+
+    /// Name-keyed counter read (0 when unregistered) — export path.
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        self.counters.lock().unwrap().get(name).map(|c| c.get()).unwrap_or(0)
     }
 
-    pub fn summary(&self, name: &str) -> Option<Summary> {
-        self.summaries.lock().unwrap().get(name).cloned()
+    /// Name-keyed histogram read — export path.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.histograms.lock().unwrap().get(name).cloned()
     }
 
     pub fn render_table(&self) -> String {
@@ -44,20 +229,20 @@ impl Metrics {
         let counters = self.counters.lock().unwrap();
         if !counters.is_empty() {
             out.push_str(&format!("{:<36} {:>14}\n", "counter", "value"));
-            for (k, v) in counters.iter() {
-                out.push_str(&format!("{k:<36} {v:>14}\n"));
+            for (k, c) in counters.iter() {
+                out.push_str(&format!("{k:<36} {:>14}\n", c.get()));
             }
         }
-        let summaries = self.summaries.lock().unwrap();
-        if !summaries.is_empty() {
+        let histograms = self.histograms.lock().unwrap();
+        if !histograms.is_empty() {
             out.push_str(&format!(
                 "{:<36} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
-                "summary", "n", "mean", "p50", "p99", "max"
+                "histogram", "n", "mean", "p50", "p95", "p99"
             ));
-            for (k, s) in summaries.iter() {
+            for (k, h) in histograms.iter() {
                 out.push_str(&format!(
                     "{k:<36} {:>8} {:>12.6} {:>12.6} {:>12.6} {:>12.6}\n",
-                    s.count(), s.mean(), s.p50(), s.p99(), s.max()
+                    h.count(), h.mean(), h.p50(), h.p95(), h.p99()
                 ));
             }
         }
@@ -66,19 +251,22 @@ impl Metrics {
 
     pub fn to_json(&self) -> Json {
         let counters = self.counters.lock().unwrap();
-        let summaries = self.summaries.lock().unwrap();
+        let histograms = self.histograms.lock().unwrap();
         let mut obj = BTreeMap::new();
-        for (k, v) in counters.iter() {
-            obj.insert(format!("counter.{k}"), Json::Num(*v as f64));
+        for (k, c) in counters.iter() {
+            obj.insert(format!("counter.{k}"), Json::Num(c.get() as f64));
         }
-        for (k, s) in summaries.iter() {
+        for (k, h) in histograms.iter() {
             obj.insert(
-                format!("summary.{k}"),
+                format!("hist.{k}"),
                 Json::obj(vec![
-                    ("n", Json::Num(s.count() as f64)),
-                    ("mean", Json::Num(s.mean())),
-                    ("p50", Json::Num(s.p50())),
-                    ("p99", Json::Num(s.p99())),
+                    ("n", Json::Num(h.count() as f64)),
+                    ("mean", Json::Num(h.mean())),
+                    ("min", Json::Num(h.min())),
+                    ("max", Json::Num(h.max())),
+                    ("p50", Json::Num(h.p50())),
+                    ("p95", Json::Num(h.p95())),
+                    ("p99", Json::Num(h.p99())),
                 ]),
             );
         }
@@ -89,22 +277,113 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::check;
+    use crate::util::stats::Summary;
 
     #[test]
-    fn counters_and_summaries() {
+    fn handles_record_without_the_registry() {
         let m = Metrics::new();
-        m.inc("requests", 1);
-        m.inc("requests", 2);
-        m.observe("latency_s", 0.5);
-        m.observe("latency_s", 1.5);
+        let requests = m.counter_handle("requests");
+        let latency = m.histogram_handle("latency_s", &log_bounds(1e-4, 10.0, 8));
+        requests.inc(1);
+        requests.inc(2);
+        latency.observe(0.5);
+        latency.observe(1.5);
         assert_eq!(m.counter("requests"), 3);
-        let s = m.summary("latency_s").unwrap();
-        assert_eq!(s.count(), 2);
-        assert!((s.mean() - 1.0).abs() < 1e-12);
+        let h = m.histogram("latency_s").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 1.0).abs() < 1e-12);
         let table = m.render_table();
         assert!(table.contains("requests"));
         assert!(table.contains("latency_s"));
         let j = m.to_json();
         assert_eq!(j.get("counter.requests").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("hist.latency_s").unwrap().get("n").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn re_registration_returns_the_same_handle() {
+        let m = Metrics::new();
+        let a = m.counter_handle("x");
+        let b = m.counter_handle("x");
+        a.inc(2);
+        b.inc(3);
+        assert_eq!(m.counter("x"), 5);
+    }
+
+    #[test]
+    fn empty_histogram_exports_zeros() {
+        let m = Metrics::new();
+        let _h = m.histogram_handle("idle", &[1.0]);
+        let h = m.histogram("idle").unwrap();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 9.0] {
+            h.observe(v);
+        }
+        // <=1 | <=2 | <=4 | overflow
+        assert_eq!(h.bucket_counts(), vec![2, 2, 2, 1]);
+        assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn single_value_histogram_pins_all_percentiles() {
+        let h = Histogram::new(&linear_bounds(0.0, 10.0, 10));
+        for _ in 0..5 {
+            h.observe(3.25);
+        }
+        for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 3.25);
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_property() {
+        check("histogram percentiles", 60, |g, _| {
+            let n_bounds = g.usize(2, 40);
+            let hi = g.f64(1.0, 100.0);
+            let bounds = linear_bounds(0.0, hi, n_bounds);
+            let width = hi / n_bounds as f64;
+            let h = Histogram::new(&bounds);
+            let mut exact = Summary::new();
+            let n = g.usize(1, 300);
+            for _ in 0..n {
+                let v = g.f64(0.0, hi);
+                h.observe(v);
+                exact.add(v);
+            }
+            // count preservation: buckets account for every sample
+            assert_eq!(h.bucket_counts().iter().sum::<u64>(), n as u64);
+            assert_eq!(h.count(), n as u64);
+            // percentiles are monotone in p and live inside [min, max]
+            let ps = [10.0, 50.0, 90.0, 95.0, 99.0];
+            let vals: Vec<f64> = ps.iter().map(|&p| h.percentile(p)).collect();
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12, "percentiles must be monotone: {vals:?}");
+            }
+            for &v in &vals {
+                assert!(v >= h.min() - 1e-12 && v <= h.max() + 1e-12);
+            }
+            // bucketed percentile tracks the exact one to ~bucket width
+            for &p in &ps {
+                let err = (h.percentile(p) - exact.percentile(p)).abs();
+                assert!(
+                    err <= 2.0 * width + 1e-9,
+                    "p{p}: hist {} vs exact {} (width {width})",
+                    h.percentile(p),
+                    exact.percentile(p)
+                );
+            }
+            // mean is exact (running sum, not bucketed)
+            assert!((h.mean() - exact.mean()).abs() < 1e-9 * n as f64);
+        });
     }
 }

@@ -53,6 +53,7 @@ use crate::protocol::{
     TreeAck, TreeDraft, PROTOCOL_V3, PROTOCOL_V4,
 };
 use crate::sqs::Policy;
+use crate::trace::{Dir, TraceData, TraceSink, ACTOR_CLOUD, ACTOR_LINK};
 use crate::util::stats::Summary;
 
 /// How compute time enters the latency ledger.
@@ -222,6 +223,10 @@ pub struct SdSession<D: DraftLm, T: TargetLm> {
     pub cfg: SessionConfig,
     /// link-adaptive control plane, consulted once per batch
     pub control: ControlLoop,
+    /// flight recorder (disabled by default: no event is constructed);
+    /// only [`Self::run`]'s engine emits — the frozen reference lockstep
+    /// stays untouched
+    pub tracer: TraceSink,
     /// canonical committed sequence (prompt + verified tokens)
     seq: Vec<u16>,
 }
@@ -269,8 +274,15 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             transport: LinkTransport::new(link),
             cfg,
             control,
+            tracer: TraceSink::null(),
             seq: Vec::new(),
         }
+    }
+
+    /// Install a flight-recorder sink (events stamped in the engine's
+    /// virtual clock; the edge is actor 0).
+    pub fn set_tracer(&mut self, sink: TraceSink) {
+        self.tracer = sink;
     }
 
     /// Run the speculative-decoding loop to completion.
@@ -379,6 +391,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         let mut cloud_prev = *prompt.last().unwrap();
         let mut window = depth_cfg; // live depth knob D^t
         let mut exhausted = false; // draft context ran out mid-request
+        let mut last_knobs: Option<Knobs> = None; // KnobChange on change only
 
         loop {
             let produced = self.seq.len() - prompt.len();
@@ -392,6 +405,19 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 // ---- draft the next batch (possibly speculative) --------
                 let ctx_before = self.edge.context_len();
                 let knobs = self.control.begin_batch();
+                if last_knobs != Some(knobs) {
+                    last_knobs = Some(knobs);
+                    self.tracer.emit(t_edge, 0, || TraceData::KnobChange {
+                        k: match knobs.sparsifier {
+                            Some(crate::sqs::Sparsifier::TopK(k)) => k as i64,
+                            _ => -1,
+                        },
+                        ell: knobs.ell,
+                        budget_bits: knobs.budget_bits,
+                        depth: knobs.pipeline_depth,
+                        branching: knobs.tree_branching,
+                    });
+                }
                 window = knobs.pipeline_depth.max(1);
                 let branching = if tree_capable {
                     knobs.tree_branching.clamp(1, branching_cfg)
@@ -461,6 +487,35 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 up_busy = send_start + air_s;
                 let queue_wait_s = send_start - draft_done;
                 let delivered_at = send_start + up_time;
+                let up_kind: &'static str = match &up_frame {
+                    Frame::DraftTree(_) => "draft_tree",
+                    Frame::DraftSeq(_) => "draft_seq",
+                    _ => "draft",
+                };
+                self.tracer.emit(draft_done, 0, || TraceData::DraftSent {
+                    batch_seq: seq,
+                    epoch: edge_epoch,
+                    drafted: l,
+                    nodes: tree_nodes,
+                    slm_s: slm_time,
+                });
+                if queue_wait_s > 0.0 {
+                    self.tracer.emit(draft_done, ACTOR_LINK, || TraceData::QueueWait {
+                        wait_s: queue_wait_s,
+                        bits: d_up.bits,
+                    });
+                }
+                self.tracer.emit(send_start, 0, || TraceData::FrameTx {
+                    dir: Dir::Up,
+                    frame: up_kind,
+                    bits: d_up.bits,
+                    air_s,
+                });
+                self.tracer.emit(delivered_at, ACTOR_CLOUD, || TraceData::FrameRx {
+                    dir: Dir::Up,
+                    frame: up_kind,
+                    bits: d_up.bits,
+                });
 
                 // ---- cloud: decode the wire bytes + verify.  Evaluated
                 // eagerly at send time (FIFO service order == send order;
@@ -554,6 +609,19 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 let verify_start = delivered_at.max(cloud_free);
                 let verify_done = verify_start + llm_time;
                 cloud_free = verify_done;
+                if let Some(v) = &verdict {
+                    let vwindow = tree_nodes + 1;
+                    self.tracer
+                        .emit(verify_start, ACTOR_CLOUD, || TraceData::VerifyStart {
+                            window: vwindow,
+                        });
+                    let (accepted, rejected) = (v.accepted, v.rejected);
+                    self.tracer
+                        .emit(verify_done, ACTOR_CLOUD, || TraceData::VerifyEnd {
+                            accepted,
+                            rejected,
+                        });
+                }
 
                 // ---- downlink feedback ----------------------------------
                 let d_down = self.transport.send_frame(
@@ -568,6 +636,17 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 let fb_start = verify_done.max(down_busy);
                 down_busy = fb_start + fb_air_s;
                 let arrive_at = fb_start + down_time;
+                self.tracer.emit(fb_start, ACTOR_CLOUD, || TraceData::FrameTx {
+                    dir: Dir::Down,
+                    frame: "feedback",
+                    bits: d_down.bits,
+                    air_s: fb_air_s,
+                });
+                self.tracer.emit(arrive_at, 0, || TraceData::FrameRx {
+                    dir: Dir::Down,
+                    frame: "feedback",
+                    bits: d_down.bits,
+                });
                 let fb = match self.transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
                     Frame::Feedback(f) => f,
                     other => bail!("expected a Feedback frame, got {}", other.name()),
@@ -605,6 +684,9 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             last_arrival = arrive;
             t_edge = t_edge.max(arrive);
             speculated -= p.drafted;
+            if let Some(bits) = p.fb.grant() {
+                self.tracer.emit(arrive, 0, || TraceData::GrantIssued { bits });
+            }
 
             match p.verdict {
                 None => {
@@ -612,6 +694,11 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     // its wire time and bits were still spent
                     debug_assert!(pipelined);
                     debug_assert_eq!(p.fb.acked_seq().map(|(s, _)| s), Some(p.seq));
+                    self.tracer.emit(arrive, 0, || TraceData::FeedbackApplied {
+                        batch_seq: p.seq,
+                        accepted: 0,
+                        discarded: true,
+                    });
                     discarded += 1;
                     t_slm += p.t_slm;
                     t_up += p.t_uplink;
@@ -631,6 +718,19 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 }
                 Some(verdict) => {
                     let accepted = p.fb.accepted as usize;
+                    self.tracer.emit(arrive, 0, || TraceData::FeedbackApplied {
+                        batch_seq: p.seq,
+                        accepted,
+                        discarded: false,
+                    });
+                    if let Some(a) = p.fb.tree_ack() {
+                        let (node, depth, resampled) = (a.node, a.depth as usize, a.resampled);
+                        self.tracer.emit(arrive, 0, || TraceData::TreeSurvivor {
+                            node,
+                            depth,
+                            resampled,
+                        });
+                    }
                     if let Some(trunk) = &p.trunk {
                         // token tree: branch the rollback to the surviving
                         // node instead of the epoch root
@@ -651,6 +751,8 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                             // continuation drafted past its tip
                             edge_epoch = edge_epoch.wrapping_add(1);
                             exhausted = false; // rollback freed context room
+                            let epoch = edge_epoch;
+                            self.tracer.emit(arrive, 0, || TraceData::EpochRollback { epoch });
                         }
                     } else if pipelined {
                         debug_assert_eq!(p.fb.ack().map(|a| a.seq), Some(p.seq));
@@ -667,6 +769,8 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                             // corresponding in-flight frames
                             edge_epoch = edge_epoch.wrapping_add(1);
                             exhausted = false; // rollback freed context room
+                            let epoch = edge_epoch;
+                            self.tracer.emit(arrive, 0, || TraceData::EpochRollback { epoch });
                         }
                     } else {
                         self.edge.apply_feedback(

@@ -34,7 +34,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cloud::{CloudNode, Verdict};
 use crate::codec::DraftFrame;
-use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint};
+use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint, Knobs};
 use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
@@ -42,7 +42,8 @@ use crate::protocol::{
     Delivery, Direction, Ext, FeedbackV2, Frame, SeqAck, SeqDraft, SharedPort, Transport,
     TreeAck, TreeDraft,
 };
-use crate::sqs::Policy;
+use crate::sqs::{Policy, Sparsifier};
+use crate::trace::{Dir, TraceData, TraceSink, ACTOR_CLOUD};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
@@ -142,6 +143,8 @@ struct PendingBatch {
     queue_wait_s: f64,
     /// queue + air + propagation time for the frame, seconds
     uplink_s: f64,
+    /// modeled SLM seconds spent drafting the batch (trace span width)
+    draft_s: f64,
 }
 
 /// Per-device tallies surfaced in the fleet report.
@@ -204,6 +207,13 @@ pub struct Device {
     /// depend on how many prompts/jitters were drawn)
     arrival_rng: Pcg64,
     vocab: usize,
+    /// flight-recorder sink (disabled by default — no events constructed)
+    tracer: TraceSink,
+    /// virtual time of the event being dispatched; trace stamping only,
+    /// never read by protocol logic
+    trace_now: f64,
+    /// last knobs emitted as a `KnobChange` (emit on change only)
+    last_knobs: Option<Knobs>,
 }
 
 impl Device {
@@ -275,7 +285,24 @@ impl Device {
             rng: Pcg64::new(seed, 0xF1EE7),
             arrival_rng: Pcg64::new(seed, 0xA441),
             vocab,
+            tracer: TraceSink::null(),
+            trace_now: 0.0,
+            last_knobs: None,
         }
+    }
+
+    /// Install a flight-recorder sink (the fleet simulator clones its
+    /// sink into every device so all events share one sequence counter).
+    pub fn set_tracer(&mut self, sink: TraceSink) {
+        self.tracer = sink;
+    }
+
+    /// Stamp the virtual time of the event being dispatched.  Methods
+    /// without a time parameter (`begin_batch`, `apply_feedback`) keep
+    /// their signatures and timestamp trace events from this instead.
+    #[inline]
+    pub fn trace_tick(&mut self, now: f64) {
+        self.trace_now = now;
     }
 
     /// Does this device run the protocol-v3 pipelined state machine?
@@ -386,9 +413,23 @@ impl Device {
         }
         let round = self.stats.knob_trace.len() as u64;
         self.stats.knob_trace.push(KnobPoint::from_knobs(round, &knobs));
+        if self.last_knobs != Some(knobs) {
+            self.last_knobs = Some(knobs);
+            self.tracer.emit(self.trace_now, self.id as u32, || TraceData::KnobChange {
+                k: match knobs.sparsifier {
+                    Some(Sparsifier::TopK(k)) => k as i64,
+                    _ => -1,
+                },
+                ell: knobs.ell,
+                budget_bits: knobs.budget_bits,
+                depth: knobs.pipeline_depth,
+                branching: knobs.tree_branching,
+            });
+        }
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
         let batch_id = frame.batch_id;
+        let draft_s = self.profile.draft_overhead_s + self.profile.draft_token_s * nodes as f64;
         self.in_flight.push_back(PendingBatch {
             seq,
             epoch: self.edge_epoch,
@@ -407,13 +448,14 @@ impl Device {
             exts: Vec::new(),
             queue_wait_s: 0.0,
             uplink_s: 0.0,
+            draft_s,
         });
         self.speculated += l;
         self.drafting = true;
         // per-path accounting: the trunk is the drafted basis; branch
         // nodes still cost modeled SLM time below
         self.stats.drafted_tokens += l as u64;
-        Ok(Some(self.profile.draft_overhead_s + self.profile.draft_token_s * nodes as f64))
+        Ok(Some(draft_s))
     }
 
     /// Ship the oldest unsent draft frame through this device's port
@@ -438,12 +480,39 @@ impl Device {
             None => Frame::Draft(frame),
         };
         let d = self.port.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, now)?;
-        let p = &mut self.in_flight[idx];
-        p.frame_bits = d.bits;
-        p.queue_wait_s = d.queue_wait_s;
-        p.uplink_s = d.latency_s();
+        let kind: &'static str = match &up_frame {
+            Frame::DraftTree(_) => "draft_tree",
+            Frame::DraftSeq(_) => "draft_seq",
+            _ => "draft",
+        };
+        let (drafted, nodes, draft_s) = {
+            let p = &mut self.in_flight[idx];
+            p.frame_bits = d.bits;
+            p.queue_wait_s = d.queue_wait_s;
+            p.uplink_s = d.latency_s();
+            (p.drafted, p.tree_nodes, p.draft_s)
+        };
         self.drafting = false;
         self.stats.uplink_bits += d.bits as u64;
+        let actor = self.id as u32;
+        self.tracer.emit(now, actor, || TraceData::DraftSent {
+            batch_seq: seq,
+            epoch,
+            drafted,
+            nodes,
+            slm_s: draft_s,
+        });
+        self.tracer.emit(now + d.queue_wait_s, actor, || TraceData::FrameTx {
+            dir: Dir::Up,
+            frame: kind,
+            bits: d.bits,
+            air_s: d.delivered_at - now - d.queue_wait_s,
+        });
+        self.tracer.emit(d.delivered_at, ACTOR_CLOUD, || TraceData::FrameRx {
+            dir: Dir::Up,
+            frame: kind,
+            bits: d.bits,
+        });
         Ok(d)
     }
 
@@ -551,7 +620,7 @@ impl Device {
             .ready_feedback
             .pop_front()
             .ok_or_else(|| anyhow!("feedback without pending batch"))?;
-        let fb = {
+        let (fb, verify_end) = {
             let p = self
                 .in_flight
                 .iter()
@@ -560,7 +629,7 @@ impl Device {
             if p.discard {
                 let mut fb = FeedbackV2::discard(p.batch_id, p.seq, p.epoch);
                 fb.exts.extend(p.exts.iter().cloned());
-                fb
+                (fb, None)
             } else {
                 let verdict = p
                     .verdict
@@ -579,12 +648,26 @@ impl Device {
                 } else if self.pipelined() {
                     fb.exts.push(Ext::Ack(SeqAck { seq: p.seq, epoch: p.epoch, discard: false }));
                 }
-                fb
+                (fb, Some((verdict.accepted, verdict.rejected)))
             }
         };
         let d =
             self.port.send_frame(Direction::Down, &Frame::Feedback(fb), &mut self.edge.wire, now)?;
         self.stats.downlink_bits += d.bits as u64;
+        if let Some((accepted, rejected)) = verify_end {
+            self.tracer.emit(now, self.id as u32, || TraceData::VerifyEnd { accepted, rejected });
+        }
+        self.tracer.emit(now, ACTOR_CLOUD, || TraceData::FrameTx {
+            dir: Dir::Down,
+            frame: "feedback",
+            bits: d.bits,
+            air_s: d.delivered_at - now,
+        });
+        self.tracer.emit(d.delivered_at, self.id as u32, || TraceData::FrameRx {
+            dir: Dir::Down,
+            frame: "feedback",
+            bits: d.bits,
+        });
         Ok(d)
     }
 
@@ -608,10 +691,20 @@ impl Device {
             debug_assert_eq!(seq, pending.seq, "FIFO downlink: acks arrive in seq order");
         }
         self.speculated -= pending.drafted;
+        let t = self.trace_now;
+        let actor = self.id as u32;
+        if let Some(bits) = fb.grant() {
+            self.tracer.emit(t, actor, || TraceData::GrantIssued { bits });
+        }
 
         if fb.acked_seq().map(|(_, d)| d).unwrap_or(false) {
             // stale frame the cloud discarded: retire the seq; the wire
             // bits were still spent, so the estimator hears about them
+            self.tracer.emit(t, actor, || TraceData::FeedbackApplied {
+                batch_seq: pending.seq,
+                accepted: 0,
+                discarded: true,
+            });
             self.stats.discarded_batches += 1;
             self.stats.discarded_tokens += pending.drafted as u64;
             self.control.feedback(&BatchOutcome {
@@ -632,6 +725,15 @@ impl Device {
                 .ok_or_else(|| anyhow!("apply_feedback before verify"))?;
             debug_assert_eq!(fb.accepted as usize, verdict.accepted);
             let accepted = fb.accepted as usize;
+            self.tracer.emit(t, actor, || TraceData::FeedbackApplied {
+                batch_seq: pending.seq,
+                accepted,
+                discarded: false,
+            });
+            if let Some((node, depth, _)) = pending.tree_walk {
+                let resampled = verdict.rejected;
+                self.tracer.emit(t, actor, || TraceData::TreeSurvivor { node, depth, resampled });
+            }
             if let Some(trunk) = &pending.trunk {
                 // token tree: branch the rollback to the surviving node
                 let survivor = &verdict.committed
@@ -650,6 +752,8 @@ impl Device {
                 );
                 if !full {
                     self.edge_epoch = self.edge_epoch.wrapping_add(1);
+                    let epoch = self.edge_epoch;
+                    self.tracer.emit(t, actor, || TraceData::EpochRollback { epoch });
                 }
             } else if pipelined {
                 self.edge.apply_feedback_pipelined(
@@ -663,6 +767,8 @@ impl Device {
                     // prefix was rolled back with the context; the epoch
                     // bump turns the in-flight remainder into discards
                     self.edge_epoch = self.edge_epoch.wrapping_add(1);
+                    let epoch = self.edge_epoch;
+                    self.tracer.emit(t, actor, || TraceData::EpochRollback { epoch });
                 }
             } else {
                 self.edge.apply_feedback(

@@ -37,10 +37,11 @@ use anyhow::{bail, Result};
 
 use crate::channel::SharedUplink;
 use crate::control::{AdaptiveMode, KnobPoint};
-use crate::coordinator::Metrics;
+use crate::coordinator::{linear_bounds, log_bounds, Counter, Histogram, Metrics};
 use crate::model::synthetic::SyntheticWorld;
 use crate::protocol::SharedPort;
 use crate::sqs::Policy;
+use crate::trace::{TraceData, TraceSink};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 
@@ -281,6 +282,42 @@ impl FleetReport {
     }
 }
 
+/// Pre-registered metric handles for the event loop's hot path: records
+/// go straight to the atomics, never through a name lookup or the
+/// registry lock (those are registration/export-time only).
+struct FleetMetrics {
+    arrivals: Counter,
+    batches: Counter,
+    requests_completed: Counter,
+    uplink_bits: Counter,
+    downlink_bits: Counter,
+    verify_calls: Counter,
+    discarded_batches: Counter,
+    uplink_wait_s: Histogram,
+    verify_batch_windows: Histogram,
+    request_latency_s: Histogram,
+}
+
+impl FleetMetrics {
+    fn register(metrics: &Metrics) -> FleetMetrics {
+        FleetMetrics {
+            arrivals: metrics.counter_handle("fleet.arrivals"),
+            batches: metrics.counter_handle("fleet.batches"),
+            requests_completed: metrics.counter_handle("fleet.requests_completed"),
+            uplink_bits: metrics.counter_handle("fleet.uplink_bits"),
+            downlink_bits: metrics.counter_handle("fleet.downlink_bits"),
+            verify_calls: metrics.counter_handle("fleet.verify_calls"),
+            discarded_batches: metrics.counter_handle("fleet.discarded_batches"),
+            uplink_wait_s: metrics
+                .histogram_handle("fleet.uplink_wait_s", &log_bounds(1e-6, 10.0, 6)),
+            verify_batch_windows: metrics
+                .histogram_handle("fleet.verify_batch_windows", &linear_bounds(0.0, 32.0, 32)),
+            request_latency_s: metrics
+                .histogram_handle("fleet.request_latency_s", &log_bounds(1e-4, 100.0, 8)),
+        }
+    }
+}
+
 /// The simulator: owns devices, the shared channel, the verifier, the
 /// event queue, and the metrics registry.
 pub struct FleetSim {
@@ -291,6 +328,8 @@ pub struct FleetSim {
     verifier: CloudVerifier,
     events: EventQueue,
     metrics: Metrics,
+    m: FleetMetrics,
+    tracer: TraceSink,
     latency: Summary,
     trace: Vec<String>,
     horizon: f64,
@@ -324,17 +363,33 @@ impl FleetSim {
             })
             .collect();
         let verifier = CloudVerifier::new(cfg.verifier);
+        let metrics = Metrics::new();
+        let m = FleetMetrics::register(&metrics);
         FleetSim {
             cfg,
             devices,
             uplink,
             verifier,
             events: EventQueue::new(),
-            metrics: Metrics::new(),
+            metrics,
+            m,
+            tracer: TraceSink::null(),
             latency: Summary::new(),
             trace: Vec::new(),
             horizon: 0.0,
         }
+    }
+
+    /// Install a flight-recorder sink.  The sink is cloned into every
+    /// device and the shared uplink so all emitters stamp events through
+    /// one shared sequence counter (the exporters' stable sort key).
+    pub fn with_tracer(mut self, sink: TraceSink) -> FleetSim {
+        for dev in &mut self.devices {
+            dev.set_tracer(sink.clone());
+        }
+        self.uplink.borrow_mut().set_tracer(sink.clone());
+        self.tracer = sink;
+        self
     }
 
     /// Run to completion (all devices drain their request budget).
@@ -370,11 +425,14 @@ impl FleetSim {
     fn dispatch(&mut self, ev: Event) -> Result<()> {
         let now = ev.t;
         let d = ev.device;
+        // stamp the device's trace clock so methods without a time
+        // parameter (`begin_batch`, `apply_feedback`) can timestamp
+        self.devices[d].trace_tick(now);
         match ev.kind {
             EventKind::Arrival => {
                 self.devices[d].generated += 1;
                 self.devices[d].queue.push_back(now);
-                self.metrics.inc("fleet.arrivals", 1);
+                self.m.arrivals.inc(1);
                 if self.devices[d].profile.workload.is_open_loop()
                     && self.devices[d].generated < self.cfg.requests_per_device
                 {
@@ -390,7 +448,7 @@ impl FleetSim {
                 // shared channel; queue wait + total uplink time feed its
                 // link estimator when the round completes
                 let delivery = self.devices[d].send_draft(now)?;
-                self.metrics.observe("fleet.uplink_wait_s", delivery.queue_wait_s);
+                self.m.uplink_wait_s.observe(delivery.queue_wait_s);
                 self.events.push(delivery.delivered_at, d, EventKind::UplinkDelivered);
                 // pipelining: keep drafting speculative continuations
                 // while the in-flight window has room (no-op at depth 1)
@@ -414,7 +472,7 @@ impl FleetSim {
                 // a discard ack retires a stale seq without a verified
                 // batch: keep the metric aligned with DeviceStats.batches
                 if self.devices[d].stats.discarded_batches == discards_before {
-                    self.metrics.inc("fleet.batches", 1);
+                    self.m.batches.inc(1);
                 }
                 if done {
                     self.finish_request(d, now)?;
@@ -465,7 +523,12 @@ impl FleetSim {
             let exts = self.verifier.feedback_exts(live);
             let mut total_window = 0usize;
             for &dev in &batch {
-                total_window += self.devices[dev].verify_now(exts.clone())?;
+                let window = self.devices[dev].verify_now(exts.clone())?;
+                if window > 0 {
+                    self.tracer
+                        .emit(now, dev as u32, || TraceData::VerifyStart { window });
+                }
+                total_window += window;
             }
             let service = self.verifier.service_s(total_window);
             let t_done = now + service;
@@ -473,7 +536,7 @@ impl FleetSim {
                 self.events.push(t_done, dev, EventKind::VerifyDone);
             }
             self.events.push(t_done, batch[0], EventKind::SlotFree);
-            self.metrics.observe("fleet.verify_batch_windows", batch.len() as f64);
+            self.m.verify_batch_windows.observe(batch.len() as f64);
         }
         Ok(())
     }
@@ -483,8 +546,8 @@ impl FleetSim {
     fn finish_request(&mut self, d: usize, now: f64) -> Result<()> {
         let latency = self.devices[d].complete_request(now)?;
         self.latency.add(latency);
-        self.metrics.observe("fleet.request_latency_s", latency);
-        self.metrics.inc("fleet.requests_completed", 1);
+        self.m.request_latency_s.observe(latency);
+        self.m.requests_completed.inc(1);
         if !self.devices[d].profile.workload.is_open_loop()
             && self.devices[d].generated < self.cfg.requests_per_device
         {
@@ -502,7 +565,7 @@ impl FleetSim {
     }
 
     fn report(self) -> FleetReport {
-        let FleetSim { devices, uplink, verifier, metrics, latency, trace, horizon, .. } = self;
+        let FleetSim { devices, uplink, verifier, metrics, m, latency, trace, horizon, .. } = self;
         let mut per_device = Vec::with_capacity(devices.len());
         let mut by_policy: BTreeMap<String, (u64, u64)> = BTreeMap::new();
         let (mut completed, mut tokens) = (0usize, 0u64);
@@ -540,10 +603,10 @@ impl FleetSim {
             });
         }
         let uplink = uplink.borrow();
-        metrics.inc("fleet.uplink_bits", uplink.ledger.bits);
-        metrics.inc("fleet.downlink_bits", downlink_bits);
-        metrics.inc("fleet.verify_calls", verifier.calls);
-        metrics.inc("fleet.discarded_batches", discarded_batches);
+        m.uplink_bits.inc(uplink.ledger.bits);
+        m.downlink_bits.inc(downlink_bits);
+        m.verify_calls.inc(verifier.calls);
+        m.discarded_batches.inc(discarded_batches);
         FleetReport {
             devices: devices.len(),
             horizon_s: horizon,

@@ -26,4 +26,5 @@ pub mod protocol;
 pub mod runtime;
 pub mod server;
 pub mod sqs;
+pub mod trace;
 pub mod util;

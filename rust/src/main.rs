@@ -16,7 +16,7 @@ use sqs_sd::control::AdaptiveMode;
 #[cfg(feature = "pjrt")]
 use sqs_sd::coordinator::PjrtStack;
 #[cfg(feature = "pjrt")]
-use sqs_sd::coordinator::{SessionConfig, TimingMode};
+use sqs_sd::coordinator::{linear_bounds, log_bounds, Metrics, SessionConfig, TimingMode};
 use sqs_sd::fleet::{
     heterogeneous_profiles, mixed_policy_profiles, DeviceProfile, FleetConfig, FleetSim,
     VerifierConfig, Workload,
@@ -28,7 +28,28 @@ use sqs_sd::runtime::Manifest;
 #[cfg(feature = "pjrt")]
 use sqs_sd::server::{serve, ServerConfig};
 use sqs_sd::sqs::Policy;
+use sqs_sd::trace::{JsonlTracer, TraceSink};
 use sqs_sd::util::cli::Args;
+
+/// Write a recorded trace as JSONL plus a Perfetto-loadable
+/// `<path>.chrome.json` (https://ui.perfetto.dev).
+fn write_trace(path: &str, tracer: &std::sync::Mutex<JsonlTracer>) -> Result<()> {
+    let t = tracer.lock().unwrap();
+    std::fs::write(path, t.jsonl())?;
+    std::fs::write(format!("{path}.chrome.json"), t.chrome_json())?;
+    eprintln!("trace: {path} (+ {path}.chrome.json for Perfetto)");
+    Ok(())
+}
+
+fn observability_opts(a: Args) -> Args {
+    a.opt(
+        "trace-out",
+        "",
+        "record a flight-recorder trace to this JSONL file (plus \
+         <path>.chrome.json, loadable at https://ui.perfetto.dev)",
+    )
+    .opt("metrics-json", "", "write the metrics registry as JSON to this file")
+}
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -207,9 +228,8 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
     let a = policy_opts(Args::new("sqs-sd run", "generate a completion"))
         .opt("prompt", "The capital of France is", "prompt text")
         .opt("max-tokens", "48", "tokens to generate")
-        .flag("ar", "run the cloud-only autoregressive baseline instead")
-        .parse_from(argv)
-        .map_err(|e| anyhow!("{e}"))?;
+        .flag("ar", "run the cloud-only autoregressive baseline instead");
+    let a = observability_opts(a).parse_from(argv).map_err(|e| anyhow!("{e}"))?;
 
     let stack = PjrtStack::load(1 << 30)?;
     let prompt = encode(&a.get("prompt"));
@@ -238,7 +258,38 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         warn_aimd_overrides_csqs();
     }
     let mut sess = stack.session(link, cfg);
+    let trace_out = a.get("trace-out");
+    let recording = if trace_out.is_empty() {
+        None
+    } else {
+        let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+        sess.set_tracer(sink);
+        Some(tracer)
+    };
     let res = sess.run(&prompt)?;
+    if let Some(tracer) = recording {
+        write_trace(&trace_out, &tracer)?;
+    }
+    let metrics_json = a.get("metrics-json");
+    if !metrics_json.is_empty() {
+        // single sessions have no live registry; export the result's
+        // aggregates through the same metrics plane so the JSON schema
+        // matches the fleet path
+        let m = Metrics::new();
+        m.counter_handle("session.batches").inc(res.batches.len() as u64);
+        m.counter_handle("session.new_tokens").inc(res.new_tokens() as u64);
+        m.counter_handle("session.discarded_batches").inc(res.discarded_batches as u64);
+        m.counter_handle("session.uplink_bits").inc(res.uplink_bits);
+        m.counter_handle("session.downlink_bits").inc(res.downlink_bits);
+        let frame_bits = m.histogram_handle("session.frame_bits", &log_bounds(8.0, 1e6, 4));
+        let accepted = m.histogram_handle("session.accepted", &linear_bounds(0.0, 32.0, 32));
+        for b in &res.batches {
+            frame_bits.observe(b.frame_bits as f64);
+            accepted.observe(b.accepted as f64);
+        }
+        std::fs::write(&metrics_json, m.to_json().to_string_pretty())?;
+        eprintln!("metrics: {metrics_json}");
+    }
     println!("{}", decode(&res.tokens[res.prompt_len..]));
     if adaptive != AdaptiveMode::Off {
         println!("--- control plane: {}", sess.control.describe());
@@ -341,9 +392,8 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     .opt("mismatch", "0.6", "draft-target mismatch (synthetic world)")
     .flag("heterogeneous", "vary draft speed / downlink / rate per device")
     .flag("mixed", "round-robin ksqs/csqs/dense policies (overrides --policy)")
-    .flag("trace", "print the exact event trace before the summary")
-    .parse_from(argv)
-    .map_err(|e| anyhow!("{e}"))?;
+    .flag("trace", "print the exact event trace before the summary");
+    let a = observability_opts(a).parse_from(argv).map_err(|e| anyhow!("{e}"))?;
 
     let link = link_from(&a)?;
     let seed = a.get_u64("seed").map_err(|e| anyhow!(e))?;
@@ -431,11 +481,28 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         seed,
         record_trace: a.get_flag("trace"),
     };
-    let report = FleetSim::new(cfg).run()?;
+    let trace_out = a.get("trace-out");
+    let mut sim = FleetSim::new(cfg);
+    let recording = if trace_out.is_empty() {
+        None
+    } else {
+        let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+        sim = sim.with_tracer(sink);
+        Some(tracer)
+    };
+    let report = sim.run()?;
     if a.get_flag("trace") {
         for line in &report.trace {
             println!("{line}");
         }
+    }
+    if let Some(tracer) = recording {
+        write_trace(&trace_out, &tracer)?;
+    }
+    let metrics_json = a.get("metrics-json");
+    if !metrics_json.is_empty() {
+        std::fs::write(&metrics_json, report.metrics.to_json().to_string_pretty())?;
+        eprintln!("metrics: {metrics_json}");
     }
     print!("{}", report.render());
     println!("--- metrics ---");

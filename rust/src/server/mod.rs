@@ -37,7 +37,7 @@ use anyhow::{anyhow, Result};
 use crate::channel::LinkConfig;
 use crate::coordinator::SessionConfig;
 #[cfg(feature = "pjrt")]
-use crate::coordinator::{Metrics, PjrtStack};
+use crate::coordinator::{linear_bounds, log_bounds, Metrics, PjrtStack};
 use crate::model::encode;
 #[cfg(feature = "pjrt")]
 use crate::model::decode;
@@ -181,6 +181,11 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
     // inference thread = this thread (owns the PJRT stack)
     let stack = PjrtStack::load(cfg.kv_budget_bytes)?;
     let metrics = Metrics::new();
+    let m_requests_ok = metrics.counter_handle("requests_ok");
+    let m_wall_s = metrics.histogram_handle("wall_s", &log_bounds(1e-4, 100.0, 8));
+    let m_sim_latency_s = metrics.histogram_handle("sim_latency_s", &log_bounds(1e-4, 100.0, 8));
+    let m_resampling_rate =
+        metrics.histogram_handle("resampling_rate", &linear_bounds(0.0, 1.0, 20));
     let mut served = 0usize;
     let mut next_id = 0u64;
 
@@ -202,10 +207,10 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
                         ("error", Json::Str(e.to_string())),
                     ]),
                     Ok(res) => {
-                        metrics.inc("requests_ok", 1);
-                        metrics.observe("wall_s", t0.elapsed().as_secs_f64());
-                        metrics.observe("sim_latency_s", res.total_time_s);
-                        metrics.observe("resampling_rate", res.resampling_rate());
+                        m_requests_ok.inc(1);
+                        m_wall_s.observe(t0.elapsed().as_secs_f64());
+                        m_sim_latency_s.observe(res.total_time_s);
+                        m_resampling_rate.observe(res.resampling_rate());
                         Json::obj(vec![
                             ("id", Json::Num(id as f64)),
                             ("text", Json::Str(decode(&res.tokens[res.prompt_len..]))),

@@ -25,7 +25,7 @@
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
@@ -41,6 +41,43 @@ use crate::protocol::{
     NO_PARENT, PROTOCOL_V3, PROTOCOL_V4,
 };
 use crate::sqs::Policy;
+use crate::trace::{Dir, TraceData, TraceSink};
+
+/// Aggregate wire-endpoint counters, shared across session threads.
+/// This is the wall-clock domain: the counters are exact, but they are
+/// *not* part of the determinism contract the virtual-time tracers pin.
+#[derive(Default)]
+pub struct WireStats {
+    /// sessions served to completion (success or error)
+    pub sessions: AtomicU64,
+    /// uplink frames received mid-session (drafts + control)
+    pub frames: AtomicU64,
+    /// target-model verify calls (stale discards excluded)
+    pub verify_calls: AtomicU64,
+    /// stale sequenced/tree frames discarded by epoch
+    pub discards: AtomicU64,
+    /// stream bits up/down across all sessions (length prefixes incl.)
+    pub uplink_bits: AtomicU64,
+    pub downlink_bits: AtomicU64,
+}
+
+impl WireStats {
+    /// One-line snapshot for the server log.
+    pub fn snapshot(&self) -> String {
+        format!(
+            "sessions={} frames={} verifies={} discards={} up_bits={} down_bits={}",
+            self.sessions.load(Ordering::Relaxed),
+            self.frames.load(Ordering::Relaxed),
+            self.verify_calls.load(Ordering::Relaxed),
+            self.discards.load(Ordering::Relaxed),
+            self.uplink_bits.load(Ordering::Relaxed),
+            self.downlink_bits.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// How many uplink frames between periodic metrics lines in the log.
+const SNAPSHOT_EVERY: u64 = 64;
 
 /// Wire-endpoint configuration.
 #[derive(Clone, Debug)]
@@ -123,13 +160,19 @@ pub struct WireServer {
     listener: TcpListener,
     cfg: WireServerConfig,
     world: SyntheticWorld,
+    stats: Arc<WireStats>,
 }
 
 impl WireServer {
     pub fn bind(cfg: WireServerConfig) -> Result<WireServer> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.world_seed);
-        Ok(WireServer { listener, cfg, world })
+        Ok(WireServer { listener, cfg, world, stats: Arc::new(WireStats::default()) })
+    }
+
+    /// Shared counters (clone the Arc before `serve` consumes self).
+    pub fn stats(&self) -> Arc<WireStats> {
+        self.stats.clone()
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -153,11 +196,14 @@ impl WireServer {
             let world = self.world.clone();
             let cfg = self.cfg.clone();
             let counter = active.clone();
+            let stats = self.stats.clone();
             let conn_seed = self.cfg.seed ^ (served as u64).wrapping_mul(0x9E3779B97F4A7C15);
             let handle = std::thread::spawn(move || {
                 counter.fetch_add(1, Ordering::SeqCst);
-                let outcome = serve_conn(stream, world, &cfg, &counter, conn_seed);
+                let outcome = serve_conn(stream, world, &cfg, &counter, &stats, conn_seed);
                 counter.fetch_sub(1, Ordering::SeqCst);
+                stats.sessions.fetch_add(1, Ordering::Relaxed);
+                crate::debug!("wire metrics: {}", stats.snapshot());
                 if let Err(e) = outcome {
                     crate::debug!("wire session error: {e}");
                 }
@@ -188,6 +234,7 @@ fn serve_conn(
     world: SyntheticWorld,
     cfg: &WireServerConfig,
     active: &AtomicUsize,
+    stats: &WireStats,
     seed: u64,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -244,9 +291,20 @@ fn serve_conn(
     let mut cloud_epoch: u8 = 0;
 
     // ---- draft / feedback rounds ------------------------------------
-    loop {
-        match tr.recv_frame(Direction::Up, &mut wire)? {
+    let mut session_frames = 0u64;
+    let outcome = loop {
+        let frame = match tr.recv_frame(Direction::Up, &mut wire) {
+            Ok(f) => f,
+            Err(e) => break Err(e),
+        };
+        stats.frames.fetch_add(1, Ordering::Relaxed);
+        session_frames += 1;
+        if session_frames % SNAPSHOT_EVERY == 0 {
+            crate::debug!("wire metrics: {}", stats.snapshot());
+        }
+        match frame {
             Frame::Draft(frame) => {
+                stats.verify_calls.fetch_add(1, Ordering::Relaxed);
                 let verdict = cloud.verify_with_prev(&frame, prev, cfg.temp)?;
                 prev = *verdict.committed.last().unwrap();
                 let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
@@ -264,8 +322,10 @@ fn serve_conn(
                     let mut fb = FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch);
                     fb.exts.extend(feedback_exts(cfg, active.load(Ordering::SeqCst)));
                     tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+                    stats.discards.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
+                stats.verify_calls.fetch_add(1, Ordering::Relaxed);
                 let verdict = cloud.verify_pipelined(&sd.frame, prev, cfg.temp)?;
                 if verdict.rejected {
                     cloud_epoch = cloud_epoch.wrapping_add(1);
@@ -283,8 +343,10 @@ fn serve_conn(
                     let mut fb = FeedbackV2::discard(td.frame.batch_id, td.seq, td.epoch);
                     fb.exts.extend(feedback_exts(cfg, active.load(Ordering::SeqCst)));
                     tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
+                    stats.discards.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
+                stats.verify_calls.fetch_add(1, Ordering::Relaxed);
                 let tv = cloud.verify_tree(&td, prev, cfg.temp)?;
                 if !tv.full_trunk {
                     cloud_epoch = cloud_epoch.wrapping_add(1);
@@ -302,11 +364,15 @@ fn serve_conn(
                 }));
                 tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
             }
-            Frame::Control(Control::Bye) => break,
-            other => bail!("unexpected {} frame mid-session", other.name()),
+            Frame::Control(Control::Bye) => break Ok(()),
+            other => break Err(anyhow!("unexpected {} frame mid-session", other.name())),
         }
-    }
-    Ok(())
+    };
+    let (_, up_bits) = tr.ledger(Direction::Up);
+    let (_, down_bits) = tr.ledger(Direction::Down);
+    stats.uplink_bits.fetch_add(up_bits, Ordering::Relaxed);
+    stats.downlink_bits.fetch_add(down_bits, Ordering::Relaxed);
+    outcome
 }
 
 /// Per-session edge-side configuration for [`WireEdge`].
@@ -377,6 +443,11 @@ pub struct WireEdge<D: DraftLm> {
     pub edge: EdgeNode<D>,
     pub control: ControlLoop,
     pub cfg: WireEdgeConfig,
+    /// flight-recorder sink (disabled by default).  The wire client has
+    /// no virtual clock, so events are stamped `t = 0.0` and ordered by
+    /// emission sequence — frame kinds and bit counts are deterministic,
+    /// wall time is deliberately excluded (see DESIGN.md §12).
+    pub tracer: TraceSink,
 }
 
 impl<D: DraftLm> WireEdge<D> {
@@ -411,7 +482,12 @@ impl<D: DraftLm> WireEdge<D> {
             cfg.pipeline_depth,
             cfg.tree_branching,
         );
-        WireEdge { edge, control, cfg }
+        WireEdge { edge, control, cfg, tracer: TraceSink::null() }
+    }
+
+    /// Install a flight-recorder sink.
+    pub fn set_tracer(&mut self, sink: TraceSink) {
+        self.tracer = sink;
     }
 
     /// Run one request over the transport: handshake, prompt, then the
@@ -461,10 +537,23 @@ impl<D: DraftLm> WireEdge<D> {
                 &mut self.edge.wire,
                 0.0,
             )?;
+            self.tracer.emit(0.0, 0, || TraceData::FrameTx {
+                dir: Dir::Up,
+                frame: "draft",
+                bits: d.bits,
+                air_s: 0.0,
+            });
+            let (_, down_before) = transport.ledger(Direction::Down);
             let fb = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
                 Frame::Feedback(f) => f,
                 other => bail!("expected Feedback, got {}", other.name()),
             };
+            let (_, down_after) = transport.ledger(Direction::Down);
+            self.tracer.emit(0.0, 0, || TraceData::FrameRx {
+                dir: Dir::Down,
+                frame: "feedback",
+                bits: (down_after - down_before) as usize,
+            });
             let accepted = fb.accepted as usize;
             if accepted > l {
                 bail!("server accepted {accepted} of {l} drafts");
@@ -673,7 +762,17 @@ impl<D: DraftLm> WireEdge<D> {
                         None,
                     ),
                 };
+                let kind = match &up_frame {
+                    Frame::DraftTree(_) => "draft_tree",
+                    _ => "draft_seq",
+                };
                 let d = transport.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, 0.0)?;
+                self.tracer.emit(0.0, 0, || TraceData::FrameTx {
+                    dir: Dir::Up,
+                    frame: kind,
+                    bits: d.bits,
+                    air_s: 0.0,
+                });
                 in_flight.push_back(Pending {
                     seq,
                     ctx_before,
@@ -689,10 +788,17 @@ impl<D: DraftLm> WireEdge<D> {
 
             let Some(p) = in_flight.pop_front() else { break };
             speculated -= p.drafted;
+            let (_, down_before) = transport.ledger(Direction::Down);
             let fb = match transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
                 Frame::Feedback(f) => f,
                 other => bail!("expected Feedback, got {}", other.name()),
             };
+            let (_, down_after) = transport.ledger(Direction::Down);
+            self.tracer.emit(0.0, 0, || TraceData::FrameRx {
+                dir: Dir::Down,
+                frame: "feedback",
+                bits: (down_after - down_before) as usize,
+            });
             if fb.grant().is_some() {
                 grants_seen += 1;
             }

@@ -1,0 +1,532 @@
+//! Flight recorder: deterministic, virtual-time-aware event tracing.
+//!
+//! The stack's forensics gap is between per-run aggregates
+//! (`SessionResult`, `FleetReport`) and "what actually happened at
+//! t = 3.82s": which frame was in the air, which epoch got rolled back,
+//! when the AIMD sawtooth collapsed the tree branching.  This module
+//! records that timeline as typed events stamped with *virtual* time, so
+//! a trace is a pure function of (config, seed) on every simulated path
+//! and doubles as a regression diff: two runs diverge exactly at the
+//! first differing event line.
+//!
+//! Three tiers share one `Tracer` trait:
+//!
+//! - [`NullTracer`] / a disabled [`TraceSink`] — the default.  `emit`
+//!   takes the event payload as a closure, so when no sink is installed
+//!   nothing is constructed: no allocation, no formatting, one branch.
+//! - [`RingTracer`] — bounded ring buffer for always-on flight
+//!   recording; `dump()` yields the last N events (oldest first) when
+//!   something goes wrong.
+//! - [`JsonlTracer`] — records everything for export as JSONL (one
+//!   compact JSON object per event) and as Chrome `trace_event` JSON,
+//!   loadable in Perfetto (<https://ui.perfetto.dev>) as a
+//!   per-device/per-resource timeline.
+//!
+//! Ordering contract: events may be *emitted* out of timestamp order
+//! (the in-flight session engine evaluates the cloud eagerly at send
+//! time, stamping events in the future), so every event also carries a
+//! global emission sequence number and exporters stably sort by
+//! `(t, seq)` before writing.  Exported timestamps are therefore
+//! non-decreasing by construction, and the `tb` field carries the raw
+//! `f64::to_bits` hex of `t` so diffs are bit-exact rather than
+//! round-trip-formatted.
+//!
+//! Clock domains: engines (session `run_engine`, the fleet event loop)
+//! stamp events with their own virtual clocks; transports and the
+//! shared uplink stamp `QueueWait` in *their* clock domain (the session
+//! passes `now = 0` to its transport — see DESIGN.md §12).  Wire-layer
+//! (TCP) events are wall-clock and excluded from the determinism
+//! contract.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Reserved actor id for the cloud verifier timeline.
+pub const ACTOR_CLOUD: u32 = 0xFFFF;
+/// Reserved actor id for the shared-uplink resource timeline.
+pub const ACTOR_LINK: u32 = 0xFFFE;
+
+/// Frame direction as seen from the edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Up,
+    Down,
+}
+
+impl Dir {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dir::Up => "up",
+            Dir::Down => "down",
+        }
+    }
+}
+
+/// Typed event payloads.  Numeric fields mirror the engine quantities
+/// they are sampled from verbatim — no trace-side arithmetic beyond
+/// copying, so instrumentation cannot perturb the run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceData {
+    /// A draft batch left the edge (stamped at draft completion).
+    DraftSent { batch_seq: u16, epoch: u8, drafted: usize, nodes: usize, slm_s: f64 },
+    /// A frame started transmission; `air_s` is its serialization time.
+    FrameTx { dir: Dir, frame: &'static str, bits: usize, air_s: f64 },
+    /// A frame finished arriving at the receiver.
+    FrameRx { dir: Dir, frame: &'static str, bits: usize },
+    /// A send waited for the link/uplink to drain before starting.
+    QueueWait { wait_s: f64, bits: usize },
+    /// Cloud verification of a window began.
+    VerifyStart { window: usize },
+    /// Cloud verification finished.
+    VerifyEnd { accepted: usize, rejected: bool },
+    /// The edge consumed a feedback frame (stamped at arrival).
+    FeedbackApplied { batch_seq: u16, accepted: usize, discarded: bool },
+    /// The edge's speculation epoch advanced (in-flight work invalidated).
+    EpochRollback { epoch: u8 },
+    /// A v4 token tree resolved to a surviving branch.
+    TreeSurvivor { node: u8, depth: usize, resampled: bool },
+    /// The control plane moved a knob (k = -1 means conformal threshold
+    /// stays in charge).
+    KnobChange { k: i64, ell: usize, budget_bits: usize, depth: usize, branching: usize },
+    /// The verifier granted uplink budget to this actor.
+    GrantIssued { bits: usize },
+}
+
+impl TraceData {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceData::DraftSent { .. } => "draft_sent",
+            TraceData::FrameTx { .. } => "frame_tx",
+            TraceData::FrameRx { .. } => "frame_rx",
+            TraceData::QueueWait { .. } => "queue_wait",
+            TraceData::VerifyStart { .. } => "verify_start",
+            TraceData::VerifyEnd { .. } => "verify_end",
+            TraceData::FeedbackApplied { .. } => "feedback_applied",
+            TraceData::EpochRollback { .. } => "epoch_rollback",
+            TraceData::TreeSurvivor { .. } => "tree_survivor",
+            TraceData::KnobChange { .. } => "knob_change",
+            TraceData::GrantIssued { .. } => "grant_issued",
+        }
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Json)> {
+        let n = |x: usize| Json::Num(x as f64);
+        match self {
+            TraceData::DraftSent { batch_seq, epoch, drafted, nodes, slm_s } => vec![
+                ("batch_seq", n(*batch_seq as usize)),
+                ("epoch", n(*epoch as usize)),
+                ("drafted", n(*drafted)),
+                ("nodes", n(*nodes)),
+                ("slm_s", Json::Num(*slm_s)),
+            ],
+            TraceData::FrameTx { dir, frame, bits, air_s } => vec![
+                ("dir", Json::Str(dir.name().into())),
+                ("frame", Json::Str((*frame).into())),
+                ("bits", n(*bits)),
+                ("air_s", Json::Num(*air_s)),
+            ],
+            TraceData::FrameRx { dir, frame, bits } => vec![
+                ("dir", Json::Str(dir.name().into())),
+                ("frame", Json::Str((*frame).into())),
+                ("bits", n(*bits)),
+            ],
+            TraceData::QueueWait { wait_s, bits } => {
+                vec![("wait_s", Json::Num(*wait_s)), ("bits", n(*bits))]
+            }
+            TraceData::VerifyStart { window } => vec![("window", n(*window))],
+            TraceData::VerifyEnd { accepted, rejected } => {
+                vec![("accepted", n(*accepted)), ("rejected", Json::Bool(*rejected))]
+            }
+            TraceData::FeedbackApplied { batch_seq, accepted, discarded } => vec![
+                ("batch_seq", n(*batch_seq as usize)),
+                ("accepted", n(*accepted)),
+                ("discarded", Json::Bool(*discarded)),
+            ],
+            TraceData::EpochRollback { epoch } => vec![("epoch", n(*epoch as usize))],
+            TraceData::TreeSurvivor { node, depth, resampled } => vec![
+                ("node", n(*node as usize)),
+                ("depth", n(*depth)),
+                ("resampled", Json::Bool(*resampled)),
+            ],
+            TraceData::KnobChange { k, ell, budget_bits, depth, branching } => vec![
+                ("k", Json::Num(*k as f64)),
+                ("ell", n(*ell)),
+                ("budget_bits", n(*budget_bits)),
+                ("depth", n(*depth)),
+                ("branching", n(*branching)),
+            ],
+            TraceData::GrantIssued { bits } => vec![("bits", n(*bits))],
+        }
+    }
+}
+
+/// One recorded event: global emission sequence, virtual timestamp,
+/// actor (device id, [`ACTOR_CLOUD`], [`ACTOR_LINK`], or 0 for a
+/// single-session run), payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub t: f64,
+    pub actor: u32,
+    pub data: TraceData,
+}
+
+impl TraceEvent {
+    /// One compact JSON object; `tb` is `t.to_bits()` as hex so traces
+    /// diff bit-exactly.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("actor", Json::Num(self.actor as f64)),
+            ("kind", Json::Str(self.data.kind().into())),
+            ("seq", Json::Num(self.seq as f64)),
+            ("t", Json::Num(self.t)),
+            ("tb", Json::Str(format!("{:016x}", self.t.to_bits()))),
+        ];
+        pairs.extend(self.data.fields());
+        Json::obj(pairs)
+    }
+}
+
+/// Event consumer.  Implementations must not observe wall clock or draw
+/// randomness — the determinism contract covers the recorded stream.
+pub trait Tracer {
+    fn record(&mut self, ev: TraceEvent);
+}
+
+/// Discards everything (useful as an explicit sink in tests; the usual
+/// zero-cost path is a [`TraceSink`] with no sink installed, which never
+/// constructs the event at all).
+#[derive(Default)]
+pub struct NullTracer;
+
+impl Tracer for NullTracer {
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// Bounded flight recorder: keeps the most recent `cap` events in
+/// emission order and counts what it shed.
+pub struct RingTracer {
+    cap: usize,
+    ring: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+impl RingTracer {
+    pub fn new(cap: usize) -> RingTracer {
+        RingTracer { cap: cap.max(1), ring: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.ring.iter()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// JSONL of the retained window, oldest event first (emission
+    /// order — the order things went wrong in).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for ev in &self.ring {
+            s.push_str(&ev.to_json().to_string_compact());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+impl Tracer for RingTracer {
+    fn record(&mut self, ev: TraceEvent) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+}
+
+/// Records every event for JSONL / Chrome-trace export.
+#[derive(Default)]
+pub struct JsonlTracer {
+    events: Vec<TraceEvent>,
+}
+
+impl JsonlTracer {
+    pub fn new() -> JsonlTracer {
+        JsonlTracer::default()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Events stably sorted by `(t, seq)` — the export order.
+    fn sorted(&self) -> Vec<&TraceEvent> {
+        let mut evs: Vec<&TraceEvent> = self.events.iter().collect();
+        evs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq)));
+        evs
+    }
+
+    /// One compact JSON object per line, timestamps non-decreasing.
+    pub fn jsonl(&self) -> String {
+        let mut s = String::new();
+        for ev in self.sorted() {
+            s.push_str(&ev.to_json().to_string_compact());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Chrome `trace_event` JSON (the `{"traceEvents": [...]}` form),
+    /// loadable at <https://ui.perfetto.dev>.  Drafts and frame
+    /// transmissions render as duration slices, verify windows as
+    /// begin/end pairs, everything else as instants; `pid` is the actor.
+    pub fn chrome_json(&self) -> String {
+        let us = |t: f64| Json::Num(t * 1e6);
+        let mut out: Vec<Json> = Vec::new();
+        let actors: BTreeSet<u32> = self.events.iter().map(|e| e.actor).collect();
+        for a in &actors {
+            let name = match *a {
+                ACTOR_CLOUD => "cloud".to_string(),
+                ACTOR_LINK => "uplink".to_string(),
+                i => format!("edge-{i}"),
+            };
+            out.push(Json::obj(vec![
+                ("name", Json::Str("process_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(*a as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![("name", Json::Str(name))])),
+            ]));
+        }
+        for ev in self.sorted() {
+            let args = Json::obj(ev.data.fields());
+            let base = |name: &str, ph: &str, ts: Json| {
+                vec![
+                    ("name", Json::Str(name.into())),
+                    ("ph", Json::Str(ph.into())),
+                    ("ts", ts),
+                    ("pid", Json::Num(ev.actor as f64)),
+                    ("tid", Json::Num(0.0)),
+                ]
+            };
+            let obj = match &ev.data {
+                TraceData::DraftSent { slm_s, .. } => {
+                    let mut o = base("draft", "X", us(ev.t - slm_s));
+                    o.push(("dur", us(*slm_s)));
+                    o.push(("args", args));
+                    o
+                }
+                TraceData::FrameTx { dir, air_s, .. } => {
+                    let name = match dir {
+                        Dir::Up => "tx.up",
+                        Dir::Down => "tx.down",
+                    };
+                    let mut o = base(name, "X", us(ev.t));
+                    o.push(("dur", us(*air_s)));
+                    o.push(("args", args));
+                    o
+                }
+                TraceData::VerifyStart { .. } => {
+                    let mut o = base("verify", "B", us(ev.t));
+                    o.push(("args", args));
+                    o
+                }
+                TraceData::VerifyEnd { .. } => {
+                    let mut o = base("verify", "E", us(ev.t));
+                    o.push(("args", args));
+                    o
+                }
+                _ => {
+                    let mut o = base(ev.data.kind(), "i", us(ev.t));
+                    o.push(("s", Json::Str("t".into())));
+                    o.push(("args", args));
+                    o
+                }
+            };
+            out.push(Json::obj(obj));
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(out))]).to_string_compact()
+    }
+}
+
+impl Tracer for JsonlTracer {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// Cloneable handle the instrumented layers hold.  Disabled by default;
+/// [`TraceSink::emit`] takes the payload as a closure so a disabled sink
+/// constructs nothing (the acceptance criterion for the default path).
+/// Clones share both the sink and the emission-sequence counter, so one
+/// run's events interleave into a single totally-ordered stream no
+/// matter how many components hold handles.
+#[derive(Clone, Default)]
+pub struct TraceSink {
+    inner: Option<Arc<Mutex<dyn Tracer + Send>>>,
+    seq: Arc<AtomicU64>,
+}
+
+impl TraceSink {
+    /// The disabled sink (same as `Default`).
+    pub fn null() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// Install `tracer` as the sink; returns the sink handle plus the
+    /// shared tracer so the caller can read the recording back out.
+    pub fn shared<T: Tracer + Send + 'static>(tracer: T) -> (TraceSink, Arc<Mutex<T>>) {
+        let arc = Arc::new(Mutex::new(tracer));
+        let dy: Arc<Mutex<dyn Tracer + Send>> = arc.clone();
+        (TraceSink { inner: Some(dy), seq: Arc::new(AtomicU64::new(0)) }, arc)
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Record one event at virtual time `t` for `actor`.  The payload
+    /// closure only runs when a sink is installed.
+    #[inline]
+    pub fn emit(&self, t: f64, actor: u32, data: impl FnOnce() -> TraceData) {
+        if let Some(tr) = &self.inner {
+            let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+            tr.lock().unwrap().record(TraceEvent { seq, t, actor, data: data() });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64, t: f64) -> TraceEvent {
+        TraceEvent {
+            seq: i,
+            t,
+            actor: 0,
+            data: TraceData::VerifyStart { window: i as usize },
+        }
+    }
+
+    #[test]
+    fn disabled_sink_never_constructs_the_event() {
+        let sink = TraceSink::null();
+        let mut called = false;
+        sink.emit(1.0, 0, || {
+            called = true;
+            TraceData::EpochRollback { epoch: 1 }
+        });
+        assert!(!called, "payload closure must not run without a sink");
+        assert!(!sink.on());
+    }
+
+    #[test]
+    fn sink_clones_share_the_sequence_counter() {
+        let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+        let clone = sink.clone();
+        sink.emit(0.0, 0, || TraceData::EpochRollback { epoch: 1 });
+        clone.emit(0.0, 1, || TraceData::EpochRollback { epoch: 2 });
+        sink.emit(0.0, 0, || TraceData::EpochRollback { epoch: 3 });
+        let seqs: Vec<u64> = tracer.lock().unwrap().events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_in_emission_order() {
+        let mut ring = RingTracer::new(4);
+        for i in 0..10 {
+            ring.record(ev(i, i as f64));
+        }
+        assert_eq!(ring.dropped(), 6);
+        let seqs: Vec<u64> = ring.events().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        let dump = ring.dump();
+        assert_eq!(dump.lines().count(), 4);
+        // dump preserves emission order: seq strictly increasing
+        let pos: Vec<usize> = (6..10)
+            .map(|i| dump.find(&format!("\"seq\":{i}")).expect("seq present"))
+            .collect();
+        assert!(pos.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn jsonl_is_sorted_by_time_then_seq() {
+        let mut tr = JsonlTracer::new();
+        // emitted out of timestamp order, as the eager engine does
+        tr.record(ev(0, 5.0));
+        tr.record(ev(1, 1.0));
+        tr.record(ev(2, 5.0));
+        tr.record(ev(3, 3.0));
+        let lines: Vec<&str> = tr.jsonl().lines().collect();
+        assert_eq!(lines.len(), 4);
+        let ts: Vec<f64> = lines
+            .iter()
+            .map(|l| {
+                Json::parse(l).unwrap().get("t").unwrap().as_f64().unwrap()
+            })
+            .collect();
+        assert_eq!(ts, vec![1.0, 3.0, 5.0, 5.0]);
+        // equal timestamps break ties by emission seq
+        assert!(lines[2].contains("\"seq\":0") && lines[3].contains("\"seq\":2"));
+    }
+
+    #[test]
+    fn jsonl_lines_carry_bit_exact_timestamps() {
+        let mut tr = JsonlTracer::new();
+        let t = 0.1 + 0.2; // not exactly representable
+        tr.record(ev(0, t));
+        let line = tr.jsonl();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            j.get("tb").unwrap().as_str().unwrap(),
+            format!("{:016x}", t.to_bits())
+        );
+    }
+
+    #[test]
+    fn chrome_export_parses_and_spans_drafts() {
+        let mut tr = JsonlTracer::new();
+        tr.record(TraceEvent {
+            seq: 0,
+            t: 2.0,
+            actor: 3,
+            data: TraceData::DraftSent {
+                batch_seq: 1,
+                epoch: 0,
+                drafted: 4,
+                nodes: 4,
+                slm_s: 0.5,
+            },
+        });
+        tr.record(TraceEvent {
+            seq: 1,
+            t: 2.1,
+            actor: ACTOR_CLOUD,
+            data: TraceData::VerifyStart { window: 5 },
+        });
+        let j = Json::parse(&tr.chrome_json()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 actors' metadata + 2 events
+        assert_eq!(evs.len(), 4);
+        let draft = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("draft"))
+            .unwrap();
+        assert_eq!(draft.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(draft.get("ts").unwrap().as_f64(), Some(1.5e6));
+        assert_eq!(draft.get("dur").unwrap().as_f64(), Some(0.5e6));
+        let verify = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("verify"))
+            .unwrap();
+        assert_eq!(verify.get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(verify.get("pid").unwrap().as_f64(), Some(ACTOR_CLOUD as f64));
+    }
+}

@@ -299,6 +299,6 @@ fn report_aggregates_are_consistent() {
     // metrics registry agrees with the report
     assert_eq!(r.metrics.counter("fleet.requests_completed") as usize, r.completed);
     assert_eq!(r.metrics.counter("fleet.uplink_bits"), r.uplink_bits);
-    let lat = r.metrics.summary("fleet.request_latency_s").unwrap();
+    let lat = r.metrics.histogram("fleet.request_latency_s").unwrap();
     assert_eq!(lat.count(), r.completed as u64);
 }

@@ -1,0 +1,163 @@
+//! Flight-recorder determinism: a trace is a pure function of
+//! (config, seed) on every simulated path.  Two identically-configured
+//! runs must export bit-identical JSONL — the `tb` field carries raw
+//! `f64::to_bits`, so even formatting cannot hide a divergence — and a
+//! different seed must change the recording.  Also pins the export
+//! schema the CI smoke job checks (required keys, required event kinds,
+//! non-decreasing timestamps, parseable Chrome JSON).
+
+use std::collections::BTreeSet;
+
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::{SdSession, SessionConfig, TimingMode};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetSim, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+use sqs_sd::trace::{JsonlTracer, TraceSink};
+use sqs_sd::util::json::Json;
+
+/// Run a small contended fleet (pipelined, with trees) under a
+/// `JsonlTracer` and return (JSONL, chrome JSON).
+fn fleet_trace(seed: u64) -> (String, String) {
+    let base = DeviceProfile {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.8,
+        max_new_tokens: 16,
+        max_batch_drafts: 4,
+        workload: Workload::Poisson { rate_hz: 4.0 },
+        pipeline_depth: 2,
+        tree_branching: 2,
+        ..Default::default()
+    };
+    let mut cfg = FleetConfig::uniform(4, base);
+    cfg.mismatch = 0.6;
+    cfg.requests_per_device = 2;
+    cfg.seed = seed;
+    let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+    FleetSim::new(cfg).with_tracer(sink).run().unwrap();
+    let tr = tracer.lock().unwrap();
+    (tr.jsonl(), tr.chrome_json())
+}
+
+/// Run one pipelined tree session under a tracer and return its JSONL.
+fn session_trace(seed: u64) -> String {
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.030,
+        jitter_s: 0.0,
+    };
+    let world = SyntheticWorld::new(64, 0.6, 2024);
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 6, 1_000_000);
+    let cfg = SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.9,
+        max_new_tokens: 48,
+        max_batch_drafts: 6,
+        seed,
+        timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
+        pipeline_depth: 3,
+        tree_branching: 2,
+        ..Default::default()
+    };
+    let mut sess = SdSession::new(draft, target, SimulatedLink::new(link, seed), cfg);
+    let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+    sess.set_tracer(sink);
+    sess.run(&[7, 21, 42]).unwrap();
+    let out = tracer.lock().unwrap().jsonl();
+    out
+}
+
+/// Schema every exported line must satisfy; returns the kinds seen.
+fn check_jsonl_schema(jsonl: &str) -> BTreeSet<String> {
+    assert!(!jsonl.is_empty(), "trace must not be empty");
+    let mut kinds = BTreeSet::new();
+    let mut last_t = f64::NEG_INFINITY;
+    for line in jsonl.lines() {
+        let j = Json::parse(line).expect("every trace line parses as JSON");
+        for key in ["actor", "kind", "seq", "t", "tb"] {
+            assert!(j.get(key).is_some(), "trace line missing '{key}': {line}");
+        }
+        let t = j.get("t").unwrap().as_f64().unwrap();
+        assert!(t >= last_t, "exported timestamps must be non-decreasing");
+        last_t = t;
+        kinds.insert(j.get("kind").unwrap().as_str().unwrap().to_string());
+    }
+    kinds
+}
+
+#[test]
+fn fleet_trace_is_bit_identical_across_runs() {
+    let (a_jsonl, a_chrome) = fleet_trace(3);
+    let (b_jsonl, b_chrome) = fleet_trace(3);
+    assert!(!a_jsonl.is_empty());
+    assert_eq!(a_jsonl, b_jsonl, "same (config, seed) must replay bit-identically");
+    assert_eq!(a_chrome, b_chrome);
+}
+
+#[test]
+fn fleet_trace_depends_on_the_seed() {
+    let (a, _) = fleet_trace(3);
+    let (b, _) = fleet_trace(4);
+    assert_ne!(a, b, "different seeds must produce different recordings");
+}
+
+#[test]
+fn fleet_trace_covers_the_event_taxonomy() {
+    let (jsonl, chrome) = fleet_trace(3);
+    let kinds = check_jsonl_schema(&jsonl);
+    for k in ["draft_sent", "frame_tx", "frame_rx", "verify_start", "verify_end", "feedback_applied"]
+    {
+        assert!(kinds.contains(k), "fleet trace missing kind '{k}' (saw {kinds:?})");
+    }
+    let j = Json::parse(&chrome).expect("chrome export parses");
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(evs.len() > kinds.len(), "chrome export must carry the events");
+}
+
+#[test]
+fn session_trace_is_bit_identical_across_runs() {
+    let a = session_trace(11);
+    let b = session_trace(11);
+    assert_eq!(a, b, "session trace must be a pure function of (config, seed)");
+    let kinds = check_jsonl_schema(&a);
+    for k in ["draft_sent", "frame_tx", "frame_rx", "verify_start", "verify_end", "feedback_applied"]
+    {
+        assert!(kinds.contains(k), "session trace missing kind '{k}' (saw {kinds:?})");
+    }
+    assert_ne!(a, session_trace(12));
+}
+
+#[test]
+fn untraced_runs_are_unperturbed_by_a_tracer() {
+    // the same fleet with and without a sink must produce the same
+    // report — instrumentation is observational by construction
+    let cfg = || {
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: 8 },
+            temp: 0.8,
+            max_new_tokens: 16,
+            max_batch_drafts: 4,
+            workload: Workload::Poisson { rate_hz: 4.0 },
+            pipeline_depth: 2,
+            tree_branching: 2,
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(3, base);
+        cfg.mismatch = 0.6;
+        cfg.requests_per_device = 2;
+        cfg.seed = 5;
+        cfg
+    };
+    let plain = FleetSim::new(cfg()).run().unwrap();
+    let (sink, _tracer) = TraceSink::shared(JsonlTracer::new());
+    let traced = FleetSim::new(cfg()).with_tracer(sink).run().unwrap();
+    assert_eq!(plain.completed, traced.completed);
+    assert_eq!(plain.latency.count(), traced.latency.count());
+    assert_eq!(
+        plain.latency.mean().to_bits(),
+        traced.latency.mean().to_bits(),
+        "tracing must not perturb the simulation"
+    );
+}
