@@ -1,10 +1,12 @@
 //! Flight-recorder quickstart: run one deliberately turbulent session —
 //! high draft/target mismatch, a depth-3 pipeline, and protocol-v4 token
 //! trees — with a `JsonlTracer` installed, then read the recording back
-//! out: print the rollback / survivor timeline and export the full trace
+//! out: print the rollback / survivor timeline, export the full trace
 //! as JSONL plus Chrome `trace_event` JSON you can drop into Perfetto
 //! (<https://ui.perfetto.dev>) to see drafts, frames in the air, and
-//! verify windows on one virtual-time canvas.
+//! verify windows on one virtual-time canvas — then feed the JSONL to
+//! the offline analyzer (`sqs-sd analyze`) for the critical-path and
+//! rejection-attribution breakdown.
 //!
 //!   cargo run --release --example trace_demo
 //!
@@ -86,8 +88,18 @@ fn main() -> anyhow::Result<()> {
         res.discarded_batches
     );
 
-    std::fs::write("trace_demo.jsonl", tr.jsonl())?;
+    let jsonl = tr.jsonl();
+    std::fs::write("trace_demo.jsonl", &jsonl)?;
     std::fs::write("trace_demo.trace.json", tr.chrome_json())?;
     println!("\nwrote trace_demo.jsonl + trace_demo.trace.json (open at https://ui.perfetto.dev)");
+
+    // close the loop: the offline analyzer over the recording we just
+    // made — same breakdown `sqs-sd analyze --trace trace_demo.jsonl`
+    // prints, bit-identical on every rerun of this example
+    let report = sqs_sd::analysis::analyze_jsonl(&jsonl).map_err(anyhow::Error::msg)?;
+    println!("\n== offline analyzer ==\n{}", report.render());
+    std::fs::write("trace_demo.report.json", report.to_json().to_string_pretty())?;
+    std::fs::write("trace_demo.report.csv", report.to_csv())?;
+    println!("wrote trace_demo.report.json + trace_demo.report.csv");
     Ok(())
 }

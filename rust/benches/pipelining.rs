@@ -231,6 +231,16 @@ fn main() -> anyhow::Result<()> {
         "BENCH_pipelining.json",
         &Json::obj(vec![
             ("bench", Json::Str("pipelining".into())),
+            (
+                "provenance",
+                Json::Str(
+                    "measured: virtual-time bench (bit-reproducible); CI bench-smoke \
+                     runs this with SQS_BENCH_FAST=1 on the synthetic-only build and \
+                     uploads the outputs as the bench-results artifact — refresh the \
+                     checked-in results/ copies from that artifact"
+                        .into(),
+                ),
+            ),
             ("sessions_per_point", Json::Num(sessions as f64)),
             ("points", Json::Arr(points)),
             ("tree", Json::Arr(tree_points)),

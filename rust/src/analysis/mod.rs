@@ -1,0 +1,626 @@
+//! Offline trace analyzer: turns a recorded flight-recorder trace
+//! (JSONL, one event per line — see the `trace` module) into a
+//! critical-path / queueing breakdown per actor, plus discard/rollback
+//! accounting, a control-plane knob timeline, and the rejection
+//! decomposition carried by `reject_attrib` events.
+//!
+//! Determinism contract: the report is a *pure function of the input
+//! bytes*.  No clocks, no randomness, BTreeMap-ordered JSON objects,
+//! and fixed-precision CSV floats — so two `analyze` invocations over
+//! the same trace are bit-identical, and CI can diff the exports
+//! against checked-in baselines (see DESIGN.md §13).
+//!
+//! Stage taxonomy per actor over its span `[first_t, last_t]`:
+//!
+//! - `draft_s`     — SLM drafting time (`draft_sent.slm_s`)
+//! - `queue_wait_s`— waits for the link/uplink to drain (`queue_wait`)
+//! - `uplink_air_s` / `downlink_air_s` — serialization time of frames
+//!   this actor put on the wire (`frame_tx.air_s` by direction)
+//! - `verify_s`    — verify service time, FIFO-paired
+//!   `verify_start`/`verify_end` (the cloud actor's stage)
+//! - `bubble_s`    — the remainder: span minus the stages above,
+//!   clamped at zero.  For an edge actor this aggregates propagation,
+//!   cloud service, and scheduling stalls — the pipeline bubble that
+//!   `pipeline_depth` exists to fill.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::trace::{ACTOR_CLOUD, ACTOR_LINK, ACTOR_TRACER};
+use crate::util::json::Json;
+
+/// Report schema tag; bump when the exported key set changes.
+pub const SCHEMA: &str = "sqs-sd/analysis/v1";
+
+/// Per-actor critical-path and event accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ActorBreakdown {
+    pub actor: u32,
+    pub first_t: f64,
+    pub last_t: f64,
+    pub events: u64,
+    pub draft_s: f64,
+    pub drafts: u64,
+    pub drafted_tokens: u64,
+    pub tree_nodes: u64,
+    pub queue_wait_s: f64,
+    pub queue_waits: u64,
+    pub uplink_air_s: f64,
+    pub downlink_air_s: f64,
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    pub verify_s: f64,
+    pub verify_calls: u64,
+    pub accepted_tokens: u64,
+    pub rejections: u64,
+    pub feedbacks: u64,
+    pub discards: u64,
+    pub rollbacks: u64,
+    pub tree_survivors: u64,
+    pub knob_changes: u64,
+    pub attrib_events: u64,
+    pub attrib_mismatch_mass: f64,
+    pub attrib_distortion_mass: f64,
+    /// open verify windows awaiting their `verify_end` (FIFO pairing)
+    verify_open: VecDeque<f64>,
+}
+
+impl ActorBreakdown {
+    pub fn span_s(&self) -> f64 {
+        (self.last_t - self.first_t).max(0.0)
+    }
+
+    /// Span time not attributed to any measured stage (clamped at 0).
+    pub fn bubble_s(&self) -> f64 {
+        let busy = self.draft_s
+            + self.queue_wait_s
+            + self.uplink_air_s
+            + self.downlink_air_s
+            + self.verify_s;
+        (self.span_s() - busy).max(0.0)
+    }
+
+    /// Role label, matching the Chrome-export process names.
+    pub fn role(&self) -> &'static str {
+        match self.actor {
+            ACTOR_CLOUD => "cloud",
+            ACTOR_LINK => "uplink",
+            ACTOR_TRACER => "tracer",
+            _ => "edge",
+        }
+    }
+
+    fn observe(&mut self, t: f64) {
+        if self.events == 0 {
+            self.first_t = t;
+            self.last_t = t;
+        } else {
+            self.first_t = self.first_t.min(t);
+            self.last_t = self.last_t.max(t);
+        }
+        self.events += 1;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("actor", Json::Num(self.actor as f64)),
+            ("role", Json::Str(self.role().into())),
+            ("events", Json::Num(self.events as f64)),
+            ("span_s", Json::Num(self.span_s())),
+            ("draft_s", Json::Num(self.draft_s)),
+            ("drafts", Json::Num(self.drafts as f64)),
+            ("drafted_tokens", Json::Num(self.drafted_tokens as f64)),
+            ("tree_nodes", Json::Num(self.tree_nodes as f64)),
+            ("queue_wait_s", Json::Num(self.queue_wait_s)),
+            ("queue_waits", Json::Num(self.queue_waits as f64)),
+            ("uplink_air_s", Json::Num(self.uplink_air_s)),
+            ("downlink_air_s", Json::Num(self.downlink_air_s)),
+            ("uplink_bits", Json::Num(self.uplink_bits as f64)),
+            ("downlink_bits", Json::Num(self.downlink_bits as f64)),
+            ("verify_s", Json::Num(self.verify_s)),
+            ("verify_calls", Json::Num(self.verify_calls as f64)),
+            ("accepted_tokens", Json::Num(self.accepted_tokens as f64)),
+            ("rejections", Json::Num(self.rejections as f64)),
+            ("feedbacks", Json::Num(self.feedbacks as f64)),
+            ("discards", Json::Num(self.discards as f64)),
+            ("rollbacks", Json::Num(self.rollbacks as f64)),
+            ("tree_survivors", Json::Num(self.tree_survivors as f64)),
+            ("knob_changes", Json::Num(self.knob_changes as f64)),
+            ("attrib_events", Json::Num(self.attrib_events as f64)),
+            ("attrib_mismatch_mass", Json::Num(self.attrib_mismatch_mass)),
+            ("attrib_distortion_mass", Json::Num(self.attrib_distortion_mass)),
+            ("bubble_s", Json::Num(self.bubble_s())),
+        ])
+    }
+}
+
+/// One control-plane move, kept in trace order for the knob timeline.
+#[derive(Clone, Debug)]
+pub struct KnobMove {
+    pub t: f64,
+    pub actor: u32,
+    pub k: i64,
+    pub ell: usize,
+    pub budget_bits: usize,
+    pub depth: usize,
+    pub branching: usize,
+}
+
+/// The analyzer's output: per-actor breakdowns plus trace-wide rollups.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub events: u64,
+    /// events the (ring) recorder shed before export, from the
+    /// `trace_dropped` marker line (0 = complete recording)
+    pub trace_dropped: u64,
+    pub actors: BTreeMap<u32, ActorBreakdown>,
+    pub knob_timeline: Vec<KnobMove>,
+    pub alpha_sum: f64,
+    pub tv_sum: f64,
+    pub rhat_sum: f64,
+}
+
+impl Report {
+    fn actor(&mut self, id: u32) -> &mut ActorBreakdown {
+        self.actors.entry(id).or_insert_with(|| ActorBreakdown {
+            actor: id,
+            ..Default::default()
+        })
+    }
+
+    fn total<F: Fn(&ActorBreakdown) -> f64>(&self, f: F) -> f64 {
+        self.actors.values().map(f).sum()
+    }
+
+    pub fn span_s(&self) -> f64 {
+        let first = self.actors.values().filter(|a| a.events > 0).map(|a| a.first_t);
+        let last = self.actors.values().filter(|a| a.events > 0).map(|a| a.last_t);
+        match (first.fold(None::<f64>, |m, x| Some(m.map_or(x, |m| m.min(x)))),
+               last.fold(None::<f64>, |m, x| Some(m.map_or(x, |m| m.max(x)))))
+        {
+            (Some(a), Some(b)) => (b - a).max(0.0),
+            _ => 0.0,
+        }
+    }
+
+    pub fn attributed(&self) -> u64 {
+        self.actors.values().map(|a| a.attrib_events).sum()
+    }
+
+    /// Deterministic report JSON (schema `sqs-sd/analysis/v1`).
+    pub fn to_json(&self) -> Json {
+        let actors: Vec<Json> = self.actors.values().map(|a| a.to_json()).collect();
+        let totals = Json::obj(vec![
+            ("draft_s", Json::Num(self.total(|a| a.draft_s))),
+            ("drafts", Json::Num(self.total(|a| a.drafts as f64))),
+            ("drafted_tokens", Json::Num(self.total(|a| a.drafted_tokens as f64))),
+            ("queue_wait_s", Json::Num(self.total(|a| a.queue_wait_s))),
+            ("uplink_air_s", Json::Num(self.total(|a| a.uplink_air_s))),
+            ("downlink_air_s", Json::Num(self.total(|a| a.downlink_air_s))),
+            ("uplink_bits", Json::Num(self.total(|a| a.uplink_bits as f64))),
+            ("downlink_bits", Json::Num(self.total(|a| a.downlink_bits as f64))),
+            ("verify_s", Json::Num(self.total(|a| a.verify_s))),
+            ("verify_calls", Json::Num(self.total(|a| a.verify_calls as f64))),
+            ("accepted_tokens", Json::Num(self.total(|a| a.accepted_tokens as f64))),
+            ("rejections", Json::Num(self.total(|a| a.rejections as f64))),
+            ("feedbacks", Json::Num(self.total(|a| a.feedbacks as f64))),
+            ("discards", Json::Num(self.total(|a| a.discards as f64))),
+            ("rollbacks", Json::Num(self.total(|a| a.rollbacks as f64))),
+            ("tree_survivors", Json::Num(self.total(|a| a.tree_survivors as f64))),
+            ("bubble_s", Json::Num(self.total(|a| a.bubble_s()))),
+        ]);
+        let attributed = self.attributed();
+        let mean = |sum: f64| if attributed == 0 { 0.0 } else { sum / attributed as f64 };
+        let rejection = Json::obj(vec![
+            ("attributed", Json::Num(attributed as f64)),
+            ("mass_mismatch", Json::Num(self.total(|a| a.attrib_mismatch_mass))),
+            ("mass_distortion", Json::Num(self.total(|a| a.attrib_distortion_mass))),
+            ("mean_alpha", Json::Num(mean(self.alpha_sum))),
+            ("mean_tv", Json::Num(mean(self.tv_sum))),
+            ("mean_rhat", Json::Num(mean(self.rhat_sum))),
+        ]);
+        let knobs: Vec<Json> = self
+            .knob_timeline
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("t", Json::Num(m.t)),
+                    ("actor", Json::Num(m.actor as f64)),
+                    ("k", Json::Num(m.k as f64)),
+                    ("ell", Json::Num(m.ell as f64)),
+                    ("budget_bits", Json::Num(m.budget_bits as f64)),
+                    ("depth", Json::Num(m.depth as f64)),
+                    ("branching", Json::Num(m.branching as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("events", Json::Num(self.events as f64)),
+            ("trace_dropped", Json::Num(self.trace_dropped as f64)),
+            ("span_s", Json::Num(self.span_s())),
+            ("actors", Json::Arr(actors)),
+            ("totals", totals),
+            ("rejection", rejection),
+            ("knob_timeline", Json::Arr(knobs)),
+        ])
+    }
+
+    /// Per-actor breakdown as CSV (fixed 6-decimal floats, `total` row
+    /// last) — the spreadsheet-side companion of `to_json`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "actor,role,span_s,draft_s,queue_wait_s,uplink_air_s,downlink_air_s,\
+             verify_s,bubble_s,drafts,feedbacks,discards,rollbacks,rejections,\
+             attrib_events,attrib_mismatch_mass,attrib_distortion_mass\n",
+        );
+        let mut row = |name: &str,
+                       role: &str,
+                       span: f64,
+                       draft: f64,
+                       qw: f64,
+                       up: f64,
+                       down: f64,
+                       verify: f64,
+                       bubble: f64,
+                       drafts: u64,
+                       feedbacks: u64,
+                       discards: u64,
+                       rollbacks: u64,
+                       rejections: u64,
+                       attrib: u64,
+                       mm: f64,
+                       dm: f64| {
+            s.push_str(&format!(
+                "{name},{role},{span:.6},{draft:.6},{qw:.6},{up:.6},{down:.6},\
+                 {verify:.6},{bubble:.6},{drafts},{feedbacks},{discards},\
+                 {rollbacks},{rejections},{attrib},{mm:.6},{dm:.6}\n"
+            ));
+        };
+        for a in self.actors.values() {
+            row(
+                &a.actor.to_string(),
+                a.role(),
+                a.span_s(),
+                a.draft_s,
+                a.queue_wait_s,
+                a.uplink_air_s,
+                a.downlink_air_s,
+                a.verify_s,
+                a.bubble_s(),
+                a.drafts,
+                a.feedbacks,
+                a.discards,
+                a.rollbacks,
+                a.rejections,
+                a.attrib_events,
+                a.attrib_mismatch_mass,
+                a.attrib_distortion_mass,
+            );
+        }
+        row(
+            "total",
+            "all",
+            self.span_s(),
+            self.total(|a| a.draft_s),
+            self.total(|a| a.queue_wait_s),
+            self.total(|a| a.uplink_air_s),
+            self.total(|a| a.downlink_air_s),
+            self.total(|a| a.verify_s),
+            self.total(|a| a.bubble_s()),
+            self.actors.values().map(|a| a.drafts).sum(),
+            self.actors.values().map(|a| a.feedbacks).sum(),
+            self.actors.values().map(|a| a.discards).sum(),
+            self.actors.values().map(|a| a.rollbacks).sum(),
+            self.actors.values().map(|a| a.rejections).sum(),
+            self.attributed(),
+            self.total(|a| a.attrib_mismatch_mass),
+            self.total(|a| a.attrib_distortion_mass),
+        );
+        s
+    }
+
+    /// Few-line human summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "trace: {} events over {:.3}s virtual across {} actors",
+            self.events,
+            self.span_s(),
+            self.actors.len()
+        );
+        if self.trace_dropped > 0 {
+            s.push_str(&format!(" ({} events dropped before export)", self.trace_dropped));
+        }
+        s.push('\n');
+        s.push_str(&format!(
+            "stages: draft {:.3}s | queue wait {:.3}s | air up/down {:.3}/{:.3}s | \
+             verify {:.3}s | bubbles {:.3}s\n",
+            self.total(|a| a.draft_s),
+            self.total(|a| a.queue_wait_s),
+            self.total(|a| a.uplink_air_s),
+            self.total(|a| a.downlink_air_s),
+            self.total(|a| a.verify_s),
+            self.total(|a| a.bubble_s()),
+        ));
+        s.push_str(&format!(
+            "outcomes: {} drafts, {} rejections, {} discards, {} rollbacks, {} survivors\n",
+            self.actors.values().map(|a| a.drafts).sum::<u64>(),
+            self.actors.values().map(|a| a.rejections).sum::<u64>(),
+            self.actors.values().map(|a| a.discards).sum::<u64>(),
+            self.actors.values().map(|a| a.rollbacks).sum::<u64>(),
+            self.actors.values().map(|a| a.tree_survivors).sum::<u64>(),
+        ));
+        let attributed = self.attributed();
+        if attributed > 0 {
+            s.push_str(&format!(
+                "rejection decomposition: {} attributed | mass {:.3} mismatch / {:.3} \
+                 distortion | mean alpha {:.5}\n",
+                attributed,
+                self.total(|a| a.attrib_mismatch_mass),
+                self.total(|a| a.attrib_distortion_mass),
+                self.alpha_sum / attributed as f64,
+            ));
+        }
+        if !self.knob_timeline.is_empty() {
+            s.push_str(&format!("knob moves: {}\n", self.knob_timeline.len()));
+        }
+        s
+    }
+}
+
+fn f(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn u(j: &Json, key: &str) -> u64 {
+    f(j, key).max(0.0) as u64
+}
+
+/// Analyze one JSONL trace (the `--trace-out` export).  Pure function of
+/// the input string; the only error is a malformed line.
+pub fn analyze_jsonl(src: &str) -> Result<Report, String> {
+    let mut report = Report::default();
+    for (i, line) in src.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let kind = j
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| format!("line {}: missing 'kind'", i + 1))?
+            .to_string();
+        let actor = j
+            .get("actor")
+            .and_then(|a| a.as_f64())
+            .ok_or_else(|| format!("line {}: missing 'actor'", i + 1))? as u32;
+        let t = j
+            .get("t")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("line {}: missing 't'", i + 1))?;
+        report.events += 1;
+        if kind == "trace_dropped" {
+            // ring-recorder truncation marker: the window is incomplete
+            report.trace_dropped += u(&j, "dropped");
+            continue;
+        }
+        let a = report.actor(actor);
+        a.observe(t);
+        match kind.as_str() {
+            "draft_sent" => {
+                a.drafts += 1;
+                a.drafted_tokens += u(&j, "drafted");
+                a.tree_nodes += u(&j, "nodes");
+                a.draft_s += f(&j, "slm_s");
+            }
+            "frame_tx" => {
+                let air = f(&j, "air_s");
+                let bits = u(&j, "bits");
+                if j.get("dir").and_then(|d| d.as_str()) == Some("up") {
+                    a.uplink_air_s += air;
+                    a.uplink_bits += bits;
+                } else {
+                    a.downlink_air_s += air;
+                    a.downlink_bits += bits;
+                }
+            }
+            "queue_wait" => {
+                a.queue_waits += 1;
+                a.queue_wait_s += f(&j, "wait_s");
+            }
+            "verify_start" => a.verify_open.push_back(t),
+            "verify_end" => {
+                a.verify_calls += 1;
+                a.accepted_tokens += u(&j, "accepted");
+                if j.get("rejected").and_then(|r| r.as_bool()) == Some(true) {
+                    a.rejections += 1;
+                }
+                if let Some(start) = a.verify_open.pop_front() {
+                    a.verify_s += (t - start).max(0.0);
+                }
+            }
+            "feedback_applied" => {
+                a.feedbacks += 1;
+                if j.get("discarded").and_then(|d| d.as_bool()) == Some(true) {
+                    a.discards += 1;
+                }
+            }
+            "epoch_rollback" => a.rollbacks += 1,
+            "tree_survivor" => a.tree_survivors += 1,
+            "knob_change" => {
+                a.knob_changes += 1;
+                report.knob_timeline.push(KnobMove {
+                    t,
+                    actor,
+                    k: j.get("k").and_then(|v| v.as_i64()).unwrap_or(-1),
+                    ell: u(&j, "ell") as usize,
+                    budget_bits: u(&j, "budget_bits") as usize,
+                    depth: u(&j, "depth") as usize,
+                    branching: u(&j, "branching") as usize,
+                });
+            }
+            "reject_attrib" => {
+                a.attrib_events += 1;
+                a.attrib_mismatch_mass += f(&j, "mismatch");
+                a.attrib_distortion_mass += f(&j, "distortion");
+                report.alpha_sum += f(&j, "alpha");
+                report.tv_sum += f(&j, "tv");
+                report.rhat_sum += f(&j, "rhat");
+            }
+            // frame_rx / grant_issued and future kinds: span-only
+            _ => {}
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(kv: Vec<(&str, Json)>) -> String {
+        Json::obj(kv).to_string_compact()
+    }
+
+    fn base(actor: u32, kind: &str, t: f64, seq: u64) -> Vec<(&'static str, Json)> {
+        vec![
+            ("actor", Json::Num(actor as f64)),
+            ("kind", Json::Str(kind.into())),
+            ("seq", Json::Num(seq as f64)),
+            ("t", Json::Num(t)),
+            ("tb", Json::Str(format!("{:016x}", t.to_bits()))),
+        ]
+    }
+
+    fn synthetic_trace() -> String {
+        let mut lines = Vec::new();
+        let mut ev = base(0, "draft_sent", 0.10, 0);
+        ev.extend(vec![
+            ("batch_seq", Json::Num(0.0)),
+            ("epoch", Json::Num(0.0)),
+            ("drafted", Json::Num(4.0)),
+            ("nodes", Json::Num(6.0)),
+            ("slm_s", Json::Num(0.05)),
+        ]);
+        lines.push(line(ev));
+        let mut ev = base(0, "queue_wait", 0.11, 1);
+        ev.extend(vec![("wait_s", Json::Num(0.02)), ("bits", Json::Num(600.0))]);
+        lines.push(line(ev));
+        let mut ev = base(0, "frame_tx", 0.13, 2);
+        ev.extend(vec![
+            ("dir", Json::Str("up".into())),
+            ("frame", Json::Str("seq_draft".into())),
+            ("bits", Json::Num(600.0)),
+            ("air_s", Json::Num(0.0006)),
+        ]);
+        lines.push(line(ev));
+        let mut ev = base(crate::trace::ACTOR_CLOUD, "verify_start", 0.15, 3);
+        ev.push(("window", Json::Num(4.0)));
+        lines.push(line(ev));
+        let mut ev = base(crate::trace::ACTOR_CLOUD, "verify_end", 0.16, 4);
+        ev.extend(vec![("accepted", Json::Num(2.0)), ("rejected", Json::Bool(true))]);
+        lines.push(line(ev));
+        let mut ev = base(0, "reject_attrib", 0.17, 5);
+        ev.extend(vec![
+            ("batch_seq", Json::Num(0.0)),
+            ("pos", Json::Num(2.0)),
+            ("alpha", Json::Num(0.01)),
+            ("tv", Json::Num(0.012)),
+            ("rhat", Json::Num(0.4)),
+            ("mismatch", Json::Num(0.97)),
+            ("distortion", Json::Num(0.03)),
+        ]);
+        lines.push(line(ev));
+        let mut ev = base(0, "feedback_applied", 0.17, 6);
+        ev.extend(vec![
+            ("batch_seq", Json::Num(0.0)),
+            ("accepted", Json::Num(2.0)),
+            ("discarded", Json::Bool(false)),
+        ]);
+        lines.push(line(ev));
+        let mut ev = base(0, "knob_change", 0.18, 7);
+        ev.extend(vec![
+            ("k", Json::Num(8.0)),
+            ("ell", Json::Num(100.0)),
+            ("budget_bits", Json::Num(5000.0)),
+            ("depth", Json::Num(2.0)),
+            ("branching", Json::Num(2.0)),
+        ]);
+        lines.push(line(ev));
+        lines.join("\n") + "\n"
+    }
+
+    #[test]
+    fn aggregates_the_stage_taxonomy() {
+        let r = analyze_jsonl(&synthetic_trace()).unwrap();
+        assert_eq!(r.events, 8);
+        assert_eq!(r.trace_dropped, 0);
+        let edge = &r.actors[&0];
+        assert_eq!(edge.drafts, 1);
+        assert_eq!(edge.drafted_tokens, 4);
+        assert_eq!(edge.tree_nodes, 6);
+        assert!((edge.draft_s - 0.05).abs() < 1e-12);
+        assert!((edge.queue_wait_s - 0.02).abs() < 1e-12);
+        assert!((edge.uplink_air_s - 0.0006).abs() < 1e-12);
+        assert_eq!(edge.uplink_bits, 600);
+        assert_eq!(edge.feedbacks, 1);
+        assert_eq!(edge.discards, 0);
+        assert_eq!(edge.attrib_events, 1);
+        assert!((edge.attrib_mismatch_mass + edge.attrib_distortion_mass - 1.0).abs() < 1e-12);
+        let cloud = &r.actors[&crate::trace::ACTOR_CLOUD];
+        assert_eq!(cloud.verify_calls, 1);
+        assert_eq!(cloud.rejections, 1);
+        assert!((cloud.verify_s - 0.01).abs() < 1e-12);
+        assert_eq!(r.knob_timeline.len(), 1);
+        assert_eq!(r.knob_timeline[0].depth, 2);
+        // bubble = span - stages, never negative
+        assert!(edge.bubble_s() >= 0.0);
+        assert!(r.span_s() > 0.0);
+    }
+
+    #[test]
+    fn report_exports_are_bit_identical() {
+        let src = synthetic_trace();
+        let a = analyze_jsonl(&src).unwrap();
+        let b = analyze_jsonl(&src).unwrap();
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+        assert_eq!(a.to_csv(), b.to_csv());
+        let j = a.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+        for key in ["events", "trace_dropped", "span_s", "actors", "totals", "rejection",
+                    "knob_timeline"]
+        {
+            assert!(j.get(key).is_some(), "report missing '{key}'");
+        }
+    }
+
+    #[test]
+    fn trace_dropped_marker_is_surfaced() {
+        let mut src = synthetic_trace();
+        let mut marker = base(crate::trace::ACTOR_TRACER, "trace_dropped", 0.2, 8);
+        marker.push(("dropped", Json::Num(17.0)));
+        src.push_str(&line(marker));
+        src.push('\n');
+        let r = analyze_jsonl(&src).unwrap();
+        assert_eq!(r.trace_dropped, 17);
+        // the marker is bookkeeping, not an actor timeline
+        assert!(!r.actors.contains_key(&crate::trace::ACTOR_TRACER));
+    }
+
+    #[test]
+    fn malformed_lines_are_reported_with_position() {
+        let err = analyze_jsonl("{\"actor\":0}\nnot json\n").unwrap_err();
+        assert!(err.contains("line 1") || err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn csv_has_fixed_header_and_total_row() {
+        let r = analyze_jsonl(&synthetic_trace()).unwrap();
+        let csv = r.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("actor,role,span_s,draft_s,queue_wait_s"));
+        assert!(csv.lines().last().unwrap().starts_with("total,all,"));
+        // one row per actor + header + total
+        assert_eq!(csv.lines().count(), r.actors.len() + 2);
+    }
+}

@@ -26,6 +26,12 @@ pub struct Verdict {
     pub t_llm: f64,
     /// the tokens committed to the target context this batch
     pub committed: Vec<u16>,
+    /// rejection attribution sample: the frame-node index where the walk
+    /// rejected and the dense-vs-compressed rejection estimate
+    /// `r̂ = 1 - Σ_x min(p(x), q̂(x))` at that position (pure arithmetic
+    /// over already-computed distributions — no extra RNG draws, so the
+    /// bit-identity pins are untouched).  None on full acceptance.
+    pub reject_at: Option<(usize, f64)>,
 }
 
 impl Verdict {
@@ -55,6 +61,21 @@ pub struct TreeVerdict {
 pub struct CloudNode<T: TargetLm> {
     pub target: T,
     rng: Pcg64,
+}
+
+/// Dense-vs-compressed rejection estimate at one position:
+/// `r̂ = 1 - Σ_x min(p(x), q̂(x))` — the probability the acceptance test
+/// rejects a draft sampled from q̂ against target p.  Pure arithmetic
+/// over the support (q̂ is 0 off it), no RNG.
+fn reject_estimate(p: &[f32], quant: &crate::sqs::Quantized) -> f64 {
+    let ell = quant.ell as f64;
+    let overlap: f64 = quant
+        .support
+        .iter()
+        .zip(&quant.counts)
+        .map(|(&i, &c)| (p[i as usize] as f64).min(c as f64 / ell))
+        .sum();
+    (1.0 - overlap).clamp(0.0, 1.0)
 }
 
 impl<T: TargetLm> CloudNode<T> {
@@ -172,6 +193,7 @@ impl<T: TargetLm> CloudNode<T> {
         let mut depth = 0usize;
         let mut rejected = false;
         let mut new_token = None;
+        let mut reject_at = None;
         let mut cur = NO_PARENT;
         'walk: loop {
             let children = tree.children(cur);
@@ -203,14 +225,21 @@ impl<T: TargetLm> CloudNode<T> {
                         // back to the level's target distribution (the
                         // linear rule's p-fallback)
                         rejected = true;
+                        reject_at =
+                            Some((c as usize, reject_estimate(&p_level, &dt.quant)));
                         new_token = Some(sample(&p_level, &mut self.rng) as u16);
                         break 'walk;
                     }
                 }
             }
             // every candidate at this level rejected: resample from the
-            // final residual
+            // final residual.  Attribute at the level's first candidate:
+            // the trunk node whose edge-side α/tv the session holds.
             rejected = true;
+            reject_at = Some((
+                first as usize,
+                reject_estimate(&p_level, &frame.tokens[first as usize].quant),
+            ));
             new_token = Some(sample(&r, &mut self.rng) as u16);
             break;
         }
@@ -257,6 +286,7 @@ impl<T: TargetLm> CloudNode<T> {
                 rejected,
                 t_llm,
                 committed,
+                reject_at,
             },
             survivor,
             depth,
@@ -286,6 +316,7 @@ impl<T: TargetLm> CloudNode<T> {
         let mut accepted = 0usize;
         let mut rejected = false;
         let mut new_token = None;
+        let mut reject_at = None;
 
         for (n, dt) in frame.tokens.iter().enumerate() {
             let p_n = &probs[n];
@@ -300,6 +331,7 @@ impl<T: TargetLm> CloudNode<T> {
                 continue;
             }
             rejected = true;
+            reject_at = Some((n, reject_estimate(p_n, &dt.quant)));
             let q_dense = dt.quant.to_dense_probs(vocab);
             let tok = match residual(p_n, &q_dense) {
                 Some(r) => sample(&r, &mut self.rng),
@@ -335,6 +367,7 @@ impl<T: TargetLm> CloudNode<T> {
             rejected,
             t_llm,
             committed,
+            reject_at,
         })
     }
 }

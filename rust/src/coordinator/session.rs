@@ -117,6 +117,8 @@ pub struct BatchRecord {
     /// downlink feedback frame size, bits (v2: varies with extensions)
     pub feedback_bits: usize,
     pub mean_k: f64,
+    /// mean dropped mass alpha_n over the round's drafted nodes
+    pub mean_alpha: f64,
     /// wire nodes the round's frame carried (== `drafted` on linear
     /// frames; larger for protocol-v4 trees, whose `drafted` stays the
     /// per-path trunk length)
@@ -162,6 +164,18 @@ pub struct SessionResult {
     pub conformal_empirical_alpha: Option<f64>,
     pub conformal_bound: Option<f64>,
     pub conformal_t: Option<u64>,
+    /// rejections attributed (by dominant share) to SLM-LLM mismatch
+    /// (engine path only; lockstep reports 0)
+    pub reject_mismatch: u64,
+    /// rejections attributed to sparsification/quantization distortion
+    pub reject_distortion: u64,
+    /// summed mismatch share over attributed rejections (the paper's
+    /// decomposition: mismatch mass + distortion mass == #attributed)
+    pub reject_mass_mismatch: f64,
+    /// summed distortion share over attributed rejections
+    pub reject_mass_distortion: f64,
+    /// unweighted mean of the per-round `mean_alpha` diagnostics
+    pub mean_alpha: f64,
 }
 
 impl SessionResult {
@@ -374,6 +388,12 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         let mut batches: Vec<BatchRecord> = Vec::new();
         let mut n_rej = 0usize;
         let mut discarded = 0usize;
+        // rejection-attribution rollups (paper's mismatch/distortion
+        // decomposition; observational — no extra RNG draws anywhere)
+        let mut reject_mismatch = 0u64;
+        let mut reject_distortion = 0u64;
+        let mut reject_mass_mismatch = 0.0f64;
+        let mut reject_mass_distortion = 0.0f64;
 
         // virtual timeline (handshake is sequential: up then down)
         let hs_done = hs.t_up + hs.t_down;
@@ -427,7 +447,8 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 let remaining = self.cfg.max_new_tokens - (produced + speculated);
                 // a v4 session whose branching knob collapsed to 1 drafts
                 // (and ships) exactly the linear v3 shape for that round
-                let (body, parents, trunk, node_dist_bits, node_ks, leaf_count, t_slm_raw) =
+                let (body, parents, trunk, node_dist_bits, node_ks, node_alphas, node_tvs,
+                     leaf_count, t_slm_raw) =
                     if branching >= 2 {
                         let dt = self.edge.draft_tree_knobs(self.cfg.temp, remaining, &knobs)?;
                         let trunk = dt.trunk_tokens();
@@ -438,12 +459,15 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                             Some(trunk),
                             dt.dist_bits,
                             dt.ks,
+                            dt.alphas,
+                            dt.tvs,
                             leaves,
                             dt.t_slm,
                         )
                     } else {
                         let db = self.edge.draft_batch_knobs(self.cfg.temp, remaining, &knobs)?;
-                        (db.frame, None, None, db.dist_bits, db.ks, 1, db.t_slm)
+                        (db.frame, None, None, db.dist_bits, db.ks, db.alphas, db.tvs, 1,
+                         db.t_slm)
                     };
                 let tree_nodes = body.tokens.len();
                 let l = trunk.as_ref().map_or(tree_nodes, Vec::len);
@@ -463,6 +487,8 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 next_seq = next_seq.wrapping_add(1);
                 let dist_bits: usize = node_dist_bits.iter().sum();
                 let mean_k = node_ks.iter().sum::<usize>() as f64 / tree_nodes as f64;
+                let mean_alpha =
+                    node_alphas.iter().map(|&a| a as f64).sum::<f64>() / tree_nodes as f64;
 
                 // ---- uplink: encode once, serialize on the channel ------
                 let up_frame = match parents {
@@ -661,6 +687,9 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     full_trunk,
                     dist_bits,
                     mean_k,
+                    mean_alpha,
+                    alphas: node_alphas,
+                    tvs: node_tvs,
                     knobs,
                     frame_bits: d_up.bits,
                     feedback_bits: d_down.bits,
@@ -729,6 +758,34 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                             node,
                             depth,
                             resampled,
+                        });
+                    }
+                    // ---- rejection attribution (paper's decomposition) --
+                    // distortion share = TV(q, q̂) / r̂ at the rejection
+                    // position, capped at 1: the compression-induced part
+                    // of the dense-vs-compressed rejection estimate.  The
+                    // remainder is SLM-LLM mismatch.
+                    if let Some((pos, rhat)) = verdict.reject_at {
+                        let alpha = p.alphas.get(pos).copied().unwrap_or(0.0) as f64;
+                        let tv = p.tvs.get(pos).copied().unwrap_or(0.0) as f64;
+                        let distortion = (tv / rhat.max(1e-12)).min(1.0);
+                        let mismatch = 1.0 - distortion;
+                        if distortion > 0.5 {
+                            reject_distortion += 1;
+                        } else {
+                            reject_mismatch += 1;
+                        }
+                        reject_mass_distortion += distortion;
+                        reject_mass_mismatch += mismatch;
+                        let batch_seq = p.seq;
+                        self.tracer.emit(arrive, 0, || TraceData::RejectAttrib {
+                            batch_seq,
+                            pos,
+                            alpha,
+                            tv,
+                            rhat,
+                            mismatch,
+                            distortion,
                         });
                     }
                     if let Some(trunk) = &p.trunk {
@@ -823,6 +880,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                         frame_bits: p.frame_bits,
                         feedback_bits: p.feedback_bits,
                         mean_k: p.mean_k,
+                        mean_alpha: p.mean_alpha,
                         tree_nodes: p.tree_nodes,
                         knobs: KnobPoint::from_knobs(round, &p.knobs),
                         t_slm: p.t_slm,
@@ -838,7 +896,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         // sum IS the end-to-end time (bit-identical to the v2 loop); a
         // pipelined run overlaps stages and reports the makespan instead
         let total_time_s = if pipelined { t_edge } else { t_slm + t_up + t_llm + t_down };
-        Ok(self.assemble(
+        let mut res = self.assemble(
             prompt.len(),
             batches,
             n_rej,
@@ -851,7 +909,12 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             uplink_bits,
             downlink_bits,
             &hs,
-        ))
+        );
+        res.reject_mismatch = reject_mismatch;
+        res.reject_distortion = reject_distortion;
+        res.reject_mass_mismatch = reject_mass_mismatch;
+        res.reject_mass_distortion = reject_mass_distortion;
+        Ok(res)
     }
 
     /// The frozen protocol-v2 strictly alternating loop, exactly as it
@@ -971,6 +1034,7 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 frame_bits: d_up.bits,
                 feedback_bits: d_down.bits,
                 mean_k: drafted.ks.iter().sum::<usize>() as f64 / l as f64,
+                mean_alpha: drafted.alphas.iter().map(|&a| a as f64).sum::<f64>() / l as f64,
                 tree_nodes: l,
                 knobs: KnobPoint::from_knobs(round, &knobs),
                 t_slm: slm_time,
@@ -1021,6 +1085,11 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         } else {
             self.edge.conformal.as_ref()
         };
+        let mean_alpha = if batches.is_empty() {
+            0.0
+        } else {
+            batches.iter().map(|b| b.mean_alpha).sum::<f64>() / batches.len() as f64
+        };
         SessionResult {
             prompt_len,
             tokens: self.seq.clone(),
@@ -1041,6 +1110,11 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             conformal_empirical_alpha: conformal.map(|c| c.empirical_alpha()),
             conformal_bound: conformal.map(|c| c.theorem2_bound()),
             conformal_t: conformal.map(|c| c.t()),
+            reject_mismatch: 0,
+            reject_distortion: 0,
+            reject_mass_mismatch: 0.0,
+            reject_mass_distortion: 0.0,
+            mean_alpha,
         }
     }
 
@@ -1086,6 +1160,11 @@ struct InFlightBatch {
     full_trunk: bool,
     dist_bits: usize,
     mean_k: f64,
+    mean_alpha: f64,
+    /// per-node dropped mass (edge side; never rides the wire)
+    alphas: Vec<f32>,
+    /// per-node compression distortion TV(q, q̂) (edge side)
+    tvs: Vec<f32>,
     knobs: Knobs,
     frame_bits: usize,
     feedback_bits: usize,
@@ -1162,6 +1241,11 @@ impl<T: TargetLm> ArBaseline<T> {
             conformal_empirical_alpha: None,
             conformal_bound: None,
             conformal_t: None,
+            reject_mismatch: 0,
+            reject_distortion: 0,
+            reject_mass_mismatch: 0.0,
+            reject_mass_distortion: 0.0,
+            mean_alpha: 0.0,
         })
     }
 }

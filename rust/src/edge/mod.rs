@@ -26,6 +26,9 @@ pub struct DraftedBatch {
     pub dist_bits: Vec<usize>,
     /// dropped mass alpha_n per drafted token
     pub alphas: Vec<f32>,
+    /// end-to-end compression distortion TV(q, q̂) per drafted token
+    /// (rejection-attribution basis; within K/(4ℓ) of alpha_n)
+    pub tvs: Vec<f32>,
     /// support size K_n per drafted token
     pub ks: Vec<usize>,
     /// measured SLM compute seconds
@@ -48,6 +51,8 @@ pub struct DraftedTree {
     pub ks: Vec<usize>,
     /// dropped mass alpha_n per node
     pub alphas: Vec<f32>,
+    /// end-to-end compression distortion TV(q, q̂) per node
+    pub tvs: Vec<f32>,
     /// measured SLM compute seconds over the whole tree
     pub t_slm: f64,
     /// trunk length (the per-path accounting basis; the edge context
@@ -177,6 +182,7 @@ impl<D: DraftLm> EdgeNode<D> {
 
         let mut dist_bits = Vec::new();
         let mut alphas = Vec::new();
+        let mut tvs = Vec::new();
         let mut ks = Vec::new();
         let mut probs_log = Vec::new();
         let mut used_bits = 0usize;
@@ -210,6 +216,7 @@ impl<D: DraftLm> EdgeNode<D> {
 
             dist_bits.push(b_n);
             alphas.push(step.quant.alpha);
+            tvs.push(step.quant.tv_from_dense(&step.probs));
             ks.push(k);
             probs_log.push(step.probs.clone());
             frame.tokens.push(DraftToken { quant: step.quant, token });
@@ -219,6 +226,7 @@ impl<D: DraftLm> EdgeNode<D> {
             frame,
             dist_bits,
             alphas,
+            tvs,
             ks,
             t_slm,
             probs: probs_log,
@@ -263,6 +271,7 @@ impl<D: DraftLm> EdgeNode<D> {
         let mut dist_bits = trunk.dist_bits;
         let mut ks = trunk.ks;
         let mut alphas = trunk.alphas;
+        let mut tvs = trunk.tvs;
         let mut t_slm = trunk.t_slm;
         if trunk_len == 0 {
             return Ok(DraftedTree {
@@ -271,6 +280,7 @@ impl<D: DraftLm> EdgeNode<D> {
                 dist_bits,
                 ks,
                 alphas,
+                tvs,
                 t_slm,
                 trunk_len: 0,
             });
@@ -304,6 +314,9 @@ impl<D: DraftLm> EdgeNode<D> {
                 dist_bits.push(b_n);
                 ks.push(level_quant.k());
                 alphas.push(level_quant.alpha);
+                // same quantized distribution as the trunk node at this
+                // depth, so the distortion is that node's verbatim
+                tvs.push(tvs[depth - 1]);
                 parents.push(sib_parent);
                 frame.tokens.push(DraftToken { quant: level_quant, token: sib_token });
                 let mut prev_node = (frame.tokens.len() - 1) as u8;
@@ -323,6 +336,7 @@ impl<D: DraftLm> EdgeNode<D> {
                     dist_bits.push(b_n);
                     ks.push(k);
                     alphas.push(step.quant.alpha);
+                    tvs.push(step.quant.tv_from_dense(&step.probs));
                     parents.push(prev_node);
                     frame.tokens.push(DraftToken { quant: step.quant, token });
                     prev_node = (frame.tokens.len() - 1) as u8;
@@ -339,7 +353,7 @@ impl<D: DraftLm> EdgeNode<D> {
             self.draft.commit(dt.token)?;
         }
 
-        Ok(DraftedTree { parents, frame, dist_bits, ks, alphas, t_slm, trunk_len })
+        Ok(DraftedTree { parents, frame, dist_bits, ks, alphas, tvs, t_slm, trunk_len })
     }
 
     /// Apply cloud feedback for a token-tree (protocol-v4) batch: branch

@@ -35,6 +35,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::cloud::{CloudNode, Verdict};
 use crate::codec::DraftFrame;
 use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint, Knobs};
+use crate::coordinator::{Counter, Histogram};
 use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
@@ -127,6 +128,10 @@ struct PendingBatch {
     parents: Option<Vec<u8>>,
     /// token-tree trunk values (None: linear)
     trunk: Option<Vec<u16>>,
+    /// per-node dropped mass alpha_n (edge side; never rides the wire)
+    alphas: Vec<f32>,
+    /// per-node compression distortion TV(q, q̂) (edge side)
+    tvs: Vec<f32>,
     /// wire size of the sent frame, bits (set by `send_draft`)
     frame_bits: usize,
     verdict: Option<Verdict>,
@@ -166,6 +171,24 @@ pub struct DeviceStats {
     pub latency: Summary,
     /// per-round knob trajectory (K^t, ℓ^t, B^t, D^t) for convergence plots
     pub knob_trace: Vec<KnobPoint>,
+    /// rejections attributed (by dominant share) to SLM-LLM mismatch
+    pub reject_mismatch: u64,
+    /// rejections attributed to sparsification/quantization distortion
+    pub reject_distortion: u64,
+    /// summed mismatch share over attributed rejections
+    pub reject_mass_mismatch: f64,
+    /// summed distortion share over attributed rejections
+    pub reject_mass_distortion: f64,
+    /// dropped mass alpha_n over every drafted node
+    pub alpha: Summary,
+}
+
+/// Pre-registered metric handles for the rejection-attribution plane
+/// (installed by the fleet simulator; absent in unit-test drivers).
+pub struct AttribSinks {
+    pub mismatch: Counter,
+    pub distortion: Counter,
+    pub alpha: Histogram,
 }
 
 pub struct Device {
@@ -214,6 +237,8 @@ pub struct Device {
     trace_now: f64,
     /// last knobs emitted as a `KnobChange` (emit on change only)
     last_knobs: Option<Knobs>,
+    /// fleet-level attribution metric handles (None in unit drivers)
+    attrib: Option<AttribSinks>,
 }
 
 impl Device {
@@ -288,6 +313,7 @@ impl Device {
             tracer: TraceSink::null(),
             trace_now: 0.0,
             last_knobs: None,
+            attrib: None,
         }
     }
 
@@ -295,6 +321,12 @@ impl Device {
     /// sink into every device so all events share one sequence counter).
     pub fn set_tracer(&mut self, sink: TraceSink) {
         self.tracer = sink;
+    }
+
+    /// Install the fleet's pre-registered attribution metric handles
+    /// (counter.reject.mismatch / counter.reject.distortion / hist.alpha).
+    pub fn set_attrib_sinks(&mut self, sinks: AttribSinks) {
+        self.attrib = Some(sinks);
     }
 
     /// Stamp the virtual time of the event being dispatched.  Methods
@@ -397,19 +429,25 @@ impl Device {
         };
         // a tree-capable device whose branching knob collapsed to 1
         // drafts (and ships) the linear v3 shape for that round
-        let (frame, parents, trunk, l, nodes) = if branching >= 2 {
+        let (frame, parents, trunk, alphas, tvs, l, nodes) = if branching >= 2 {
             let dt = self.edge.draft_tree_knobs(self.profile.temp, remaining, &knobs)?;
             let l = dt.trunk_len;
             let nodes = dt.frame.tokens.len();
             let trunk = dt.trunk_tokens();
-            (dt.frame, Some(dt.parents), Some(trunk), l, nodes)
+            (dt.frame, Some(dt.parents), Some(trunk), dt.alphas, dt.tvs, l, nodes)
         } else {
             let db = self.edge.draft_batch_knobs(self.profile.temp, remaining, &knobs)?;
             let l = db.frame.tokens.len();
-            (db.frame, None, None, l, l)
+            (db.frame, None, None, db.alphas, db.tvs, l, l)
         };
         if l == 0 {
             return Ok(None);
+        }
+        for &a in &alphas {
+            self.stats.alpha.add(a as f64);
+            if let Some(s) = &self.attrib {
+                s.alpha.observe(a as f64);
+            }
         }
         let round = self.stats.knob_trace.len() as u64;
         self.stats.knob_trace.push(KnobPoint::from_knobs(round, &knobs));
@@ -440,6 +478,8 @@ impl Device {
             frame: Some(frame),
             parents,
             trunk,
+            alphas,
+            tvs,
             frame_bits: 0,
             verdict: None,
             tree_walk: None,
@@ -733,6 +773,38 @@ impl Device {
             if let Some((node, depth, _)) = pending.tree_walk {
                 let resampled = verdict.rejected;
                 self.tracer.emit(t, actor, || TraceData::TreeSurvivor { node, depth, resampled });
+            }
+            // ---- rejection attribution (paper's decomposition): the
+            // distortion share is TV(q, q̂)/r̂ at the rejection position,
+            // capped at 1; the remainder is SLM-LLM mismatch
+            if let Some((pos, rhat)) = verdict.reject_at {
+                let alpha = pending.alphas.get(pos).copied().unwrap_or(0.0) as f64;
+                let tv = pending.tvs.get(pos).copied().unwrap_or(0.0) as f64;
+                let distortion = (tv / rhat.max(1e-12)).min(1.0);
+                let mismatch = 1.0 - distortion;
+                if distortion > 0.5 {
+                    self.stats.reject_distortion += 1;
+                    if let Some(s) = &self.attrib {
+                        s.distortion.inc(1);
+                    }
+                } else {
+                    self.stats.reject_mismatch += 1;
+                    if let Some(s) = &self.attrib {
+                        s.mismatch.inc(1);
+                    }
+                }
+                self.stats.reject_mass_distortion += distortion;
+                self.stats.reject_mass_mismatch += mismatch;
+                let batch_seq = pending.seq;
+                self.tracer.emit(t, actor, || TraceData::RejectAttrib {
+                    batch_seq,
+                    pos,
+                    alpha,
+                    tv,
+                    rhat,
+                    mismatch,
+                    distortion,
+                });
             }
             if let Some(trunk) = &pending.trunk {
                 // token tree: branch the rollback to the surviving node

@@ -24,7 +24,7 @@ pub mod events;
 pub mod verifier;
 pub mod workload;
 
-pub use device::{Device, DeviceProfile, DeviceStats};
+pub use device::{AttribSinks, Device, DeviceProfile, DeviceStats};
 pub use events::{Event, EventKind, EventQueue};
 pub use verifier::{CloudVerifier, VerifierConfig};
 pub use workload::Workload;
@@ -181,6 +181,18 @@ pub struct FleetReport {
     pub rejection_by_policy: Vec<(String, u64, u64)>,
     /// drafted-token acceptance across the fleet
     pub acceptance: f64,
+    /// fleet-wide rejections attributed to SLM-LLM mismatch
+    pub reject_mismatch: u64,
+    /// fleet-wide rejections attributed to compression distortion
+    pub reject_distortion: u64,
+    /// summed mismatch share over attributed rejections
+    pub reject_mass_mismatch: f64,
+    /// summed distortion share over attributed rejections
+    pub reject_mass_distortion: f64,
+    /// mean dropped mass alpha_n over every drafted node in the fleet
+    pub mean_alpha: f64,
+    /// deepest backlog the verify queue reached during the run
+    pub verify_peak_queue: usize,
     pub trace: Vec<String>,
     pub metrics: Metrics,
 }
@@ -273,6 +285,18 @@ impl FleetReport {
             ));
         }
         out.push_str(&format!("acceptance: {:.3}\n", self.acceptance));
+        let attributed = self.reject_mismatch + self.reject_distortion;
+        if attributed > 0 {
+            out.push_str(&format!(
+                "rejection attribution: {} mismatch / {} distortion \
+                 (mass {:.3}/{:.3}) | mean alpha {:.4}\n",
+                self.reject_mismatch,
+                self.reject_distortion,
+                self.reject_mass_mismatch,
+                self.reject_mass_distortion,
+                self.mean_alpha
+            ));
+        }
         out.push_str("rejection rate by policy:\n");
         for (name, rej, total) in &self.rejection_by_policy {
             let rate = if *total == 0 { 0.0 } else { *rej as f64 / *total as f64 };
@@ -296,6 +320,9 @@ struct FleetMetrics {
     uplink_wait_s: Histogram,
     verify_batch_windows: Histogram,
     request_latency_s: Histogram,
+    reject_mismatch: Counter,
+    reject_distortion: Counter,
+    alpha: Histogram,
 }
 
 impl FleetMetrics {
@@ -314,6 +341,9 @@ impl FleetMetrics {
                 .histogram_handle("fleet.verify_batch_windows", &linear_bounds(0.0, 32.0, 32)),
             request_latency_s: metrics
                 .histogram_handle("fleet.request_latency_s", &log_bounds(1e-4, 100.0, 8)),
+            reject_mismatch: metrics.counter_handle("reject.mismatch"),
+            reject_distortion: metrics.counter_handle("reject.distortion"),
+            alpha: metrics.histogram_handle("alpha", &log_bounds(1e-6, 1.0, 4)),
         }
     }
 }
@@ -365,6 +395,14 @@ impl FleetSim {
         let verifier = CloudVerifier::new(cfg.verifier);
         let metrics = Metrics::new();
         let m = FleetMetrics::register(&metrics);
+        let mut devices = devices;
+        for dev in &mut devices {
+            dev.set_attrib_sinks(device::AttribSinks {
+                mismatch: m.reject_mismatch.clone(),
+                distortion: m.reject_distortion.clone(),
+                alpha: m.alpha.clone(),
+            });
+        }
         FleetSim {
             cfg,
             devices,
@@ -572,10 +610,21 @@ impl FleetSim {
         let (mut drafted, mut accepted) = (0u64, 0u64);
         let mut downlink_bits = 0u64;
         let mut discarded_batches = 0u64;
+        let (mut reject_mismatch, mut reject_distortion) = (0u64, 0u64);
+        let (mut reject_mass_mismatch, mut reject_mass_distortion) = (0.0f64, 0.0f64);
+        let (mut alpha_sum, mut alpha_n) = (0.0f64, 0u64);
         for dev in &devices {
             let st = &dev.stats;
             completed += st.completed;
             tokens += st.tokens;
+            reject_mismatch += st.reject_mismatch;
+            reject_distortion += st.reject_distortion;
+            reject_mass_mismatch += st.reject_mass_mismatch;
+            reject_mass_distortion += st.reject_mass_distortion;
+            if st.alpha.count() > 0 {
+                alpha_sum += st.alpha.sum();
+                alpha_n += st.alpha.count();
+            }
             // discarded speculation was never verified: like the
             // estimator's acceptance EWMA, the fleet-wide acceptance
             // rate covers verified drafts only
@@ -627,6 +676,12 @@ impl FleetSim {
                 .map(|(k, (r, t))| (k, r, t))
                 .collect(),
             acceptance: if drafted == 0 { 0.0 } else { accepted as f64 / drafted as f64 },
+            reject_mismatch,
+            reject_distortion,
+            reject_mass_mismatch,
+            reject_mass_distortion,
+            mean_alpha: if alpha_n == 0 { 0.0 } else { alpha_sum / alpha_n as f64 },
+            verify_peak_queue: verifier.peak_queue,
             trace,
             metrics,
         }

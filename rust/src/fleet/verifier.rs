@@ -73,17 +73,28 @@ pub struct CloudVerifier {
     pub windows: u64,
     /// busy seconds summed over slots (utilization vs concurrency*horizon)
     pub busy_s: f64,
+    /// deepest pending backlog reached (queueing-headroom diagnostic)
+    pub peak_queue: usize,
 }
 
 impl CloudVerifier {
     pub fn new(cfg: VerifierConfig) -> CloudVerifier {
         assert!(cfg.concurrency >= 1, "verifier needs >= 1 slot");
         assert!(cfg.batch_max >= 1, "batch_max must be >= 1");
-        CloudVerifier { cfg, pending: VecDeque::new(), in_flight: 0, calls: 0, windows: 0, busy_s: 0.0 }
+        CloudVerifier {
+            cfg,
+            pending: VecDeque::new(),
+            in_flight: 0,
+            calls: 0,
+            windows: 0,
+            busy_s: 0.0,
+            peak_queue: 0,
+        }
     }
 
     pub fn enqueue(&mut self, device: usize) {
         self.pending.push_back(device);
+        self.peak_queue = self.peak_queue.max(self.pending.len());
     }
 
     /// Can a new call start right now?

@@ -7,6 +7,7 @@
 //! speculative-decoding protocol — K-SQS and C-SQS sparsified,
 //! lattice-quantized draft distributions over a simulated uplink.
 
+pub mod analysis;
 pub mod channel;
 pub mod cloud;
 pub mod control;

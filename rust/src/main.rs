@@ -5,6 +5,7 @@
 //!   serve    TCP serving front-end (see server module for the protocol)
 //!   sweep    temperature sweep for a policy, CSV to stdout
 //!   fleet    multi-device discrete-event simulation on a shared uplink
+//!   analyze  offline critical-path / rejection analysis of a JSONL trace
 //!   inspect  print the artifact manifest / model card
 //!
 //! `sqs-sd <subcommand> --help` lists options.
@@ -59,6 +60,7 @@ fn main() {
         "serve" => cmd_serve(argv),
         "sweep" => cmd_sweep(argv),
         "fleet" => cmd_fleet(argv),
+        "analyze" => cmd_analyze(argv),
         "inspect" => cmd_inspect(argv),
         "help" | "--help" | "-h" => {
             println!(
@@ -66,6 +68,7 @@ fn main() {
                  subcommands:\n  run      generate a completion for a prompt\n  \
                  serve    TCP serving front-end\n  sweep    temperature sweep (CSV)\n  \
                  fleet    multi-device fleet simulation (shared uplink)\n  \
+                 analyze  offline analysis of a recorded trace (JSON + CSV report)\n  \
                  inspect  print the artifact manifest\n\n\
                  run `sqs-sd <subcommand> --help` for options"
             );
@@ -281,11 +284,15 @@ fn cmd_run(argv: Vec<String>) -> Result<()> {
         m.counter_handle("session.discarded_batches").inc(res.discarded_batches as u64);
         m.counter_handle("session.uplink_bits").inc(res.uplink_bits);
         m.counter_handle("session.downlink_bits").inc(res.downlink_bits);
+        m.counter_handle("session.reject.mismatch").inc(res.reject_mismatch);
+        m.counter_handle("session.reject.distortion").inc(res.reject_distortion);
         let frame_bits = m.histogram_handle("session.frame_bits", &log_bounds(8.0, 1e6, 4));
         let accepted = m.histogram_handle("session.accepted", &linear_bounds(0.0, 32.0, 32));
+        let alpha = m.histogram_handle("session.alpha", &log_bounds(1e-6, 1.0, 4));
         for b in &res.batches {
             frame_bits.observe(b.frame_bits as f64);
             accepted.observe(b.accepted as f64);
+            alpha.observe(b.mean_alpha);
         }
         std::fs::write(&metrics_json, m.to_json().to_string_pretty())?;
         eprintln!("metrics: {metrics_json}");
@@ -324,12 +331,15 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let a = Args::new("sqs-sd serve", "TCP serving front-end")
         .opt("addr", "127.0.0.1:7077", "listen address")
         .opt("max-requests", "0", "exit after N requests (0 = forever)")
+        .opt("metrics-json", "", "write the metrics registry as JSON here on exit")
         .parse_from(argv)
         .map_err(|e| anyhow!("{e}"))?;
     let max = a.get_usize("max-requests").map_err(|e| anyhow!(e))?;
+    let metrics_json = a.get("metrics-json");
     serve(ServerConfig {
         addr: a.get("addr"),
         max_requests: if max == 0 { None } else { Some(max) },
+        metrics_json: if metrics_json.is_empty() { None } else { Some(metrics_json) },
         ..Default::default()
     })
 }
@@ -507,6 +517,40 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     print!("{}", report.render());
     println!("--- metrics ---");
     print!("{}", report.metrics.render_table());
+    Ok(())
+}
+
+/// Offline analyzer: pure function of the trace bytes (see analysis
+/// module), so reports are bit-identical across runs and CI can diff
+/// them against checked-in baselines.  Works on every build flavor.
+fn cmd_analyze(argv: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "sqs-sd analyze",
+        "offline analysis of a recorded JSONL trace: critical-path / queueing \
+         breakdown per actor, discard/rollback accounting, knob timeline, and \
+         the rejection decomposition (mismatch vs compression distortion)",
+    )
+    .opt("trace", "trace.jsonl", "input trace (a --trace-out export)")
+    .opt("report-json", "", "report JSON path (default: <trace>.report.json)")
+    .opt("report-csv", "", "per-actor CSV path (default: <trace>.report.csv)")
+    .parse_from(argv)
+    .map_err(|e| anyhow!("{e}"))?;
+    let trace = a.get("trace");
+    let src = std::fs::read_to_string(&trace)
+        .map_err(|e| anyhow!("cannot read trace '{trace}': {e}"))?;
+    let report = sqs_sd::analysis::analyze_jsonl(&src).map_err(|e| anyhow!(e))?;
+    let json_path = match a.get("report-json") {
+        p if p.is_empty() => format!("{trace}.report.json"),
+        p => p,
+    };
+    let csv_path = match a.get("report-csv") {
+        p if p.is_empty() => format!("{trace}.report.csv"),
+        p => p,
+    };
+    std::fs::write(&json_path, report.to_json().to_string_pretty())?;
+    std::fs::write(&csv_path, report.to_csv())?;
+    print!("{}", report.render());
+    eprintln!("report: {json_path} + {csv_path}");
     Ok(())
 }
 

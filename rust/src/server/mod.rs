@@ -51,6 +51,9 @@ pub struct ServerConfig {
     /// serve at most this many requests then exit (None = forever);
     /// used by tests and the serve_tcp example
     pub max_requests: Option<usize>,
+    /// write the metrics registry as JSON here when the server exits
+    /// (same schema as the fleet / run `--metrics-json` exports)
+    pub metrics_json: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +63,7 @@ impl Default for ServerConfig {
             kv_budget_bytes: 1 << 30,
             link: LinkConfig::default(),
             max_requests: None,
+            metrics_json: None,
         }
     }
 }
@@ -242,6 +246,10 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
                 break;
             }
         }
+    }
+    if let Some(path) = &cfg.metrics_json {
+        std::fs::write(path, metrics.to_json().to_string_pretty())?;
+        crate::info!("metrics: {path}");
     }
     crate::info!("server done after {served} requests\n{}", metrics.render_table());
     drop(acceptor);

@@ -59,20 +59,31 @@ pub struct WireStats {
     /// stream bits up/down across all sessions (length prefixes incl.)
     pub uplink_bits: AtomicU64,
     pub downlink_bits: AtomicU64,
+    /// flight-recorder events shed before export (drivers fold
+    /// `RingTracer::dropped()` in via [`WireStats::note_trace_dropped`]);
+    /// nonzero means recorded windows in the log are truncated
+    pub trace_dropped: AtomicU64,
 }
 
 impl WireStats {
     /// One-line snapshot for the server log.
     pub fn snapshot(&self) -> String {
         format!(
-            "sessions={} frames={} verifies={} discards={} up_bits={} down_bits={}",
+            "sessions={} frames={} verifies={} discards={} up_bits={} down_bits={} \
+             trace_dropped={}",
             self.sessions.load(Ordering::Relaxed),
             self.frames.load(Ordering::Relaxed),
             self.verify_calls.load(Ordering::Relaxed),
             self.discards.load(Ordering::Relaxed),
             self.uplink_bits.load(Ordering::Relaxed),
             self.downlink_bits.load(Ordering::Relaxed),
+            self.trace_dropped.load(Ordering::Relaxed),
         )
+    }
+
+    /// Fold a bounded recorder's shed-event count into the snapshot.
+    pub fn note_trace_dropped(&self, n: u64) {
+        self.trace_dropped.fetch_add(n, Ordering::Relaxed);
     }
 }
 
@@ -923,5 +934,30 @@ impl<D: DraftLm> WireEdge<D> {
 
     fn room_left(&self, seq_len: usize) -> bool {
         seq_len + self.cfg.max_batch_drafts + 2 < self.edge.draft.max_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{RingTracer, TraceEvent, Tracer};
+
+    #[test]
+    fn snapshot_surfaces_trace_dropped() {
+        let stats = WireStats::default();
+        assert!(stats.snapshot().contains("trace_dropped=0"));
+        // fold a truncated flight recorder's shed count in, as a
+        // session driver running a bounded RingTracer would
+        let mut ring = RingTracer::new(2);
+        for i in 0..5 {
+            ring.record(TraceEvent {
+                seq: i,
+                t: i as f64,
+                actor: 0,
+                data: TraceData::EpochRollback { epoch: i as u8 },
+            });
+        }
+        stats.note_trace_dropped(ring.dropped());
+        assert!(stats.snapshot().contains("trace_dropped=3"), "{}", stats.snapshot());
     }
 }

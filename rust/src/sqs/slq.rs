@@ -55,6 +55,29 @@ impl Quantized {
             Err(_) => 0.0,
         }
     }
+
+    /// TV(q, q_hat) against the dense distribution this step quantized —
+    /// the end-to-end compression distortion at one drafted position.
+    /// By the triangle inequality over Lemma 1 (TV(q, q̄) = α) and eq.
+    /// (20) (TV(q̄, q̂) ≤ K/(4ℓ)) this lies within K/(4ℓ) of α.  Walks
+    /// the dense slice once with a cursor into the sorted support, so no
+    /// dense reconstruction is allocated.
+    pub fn tv_from_dense(&self, dense: &[f32]) -> f32 {
+        let ell_f = self.ell as f32;
+        let mut acc = 0.0f64;
+        let mut cursor = 0usize;
+        for (i, &q) in dense.iter().enumerate() {
+            let qhat = if cursor < self.support.len() && self.support[cursor] as usize == i {
+                let c = self.counts[cursor];
+                cursor += 1;
+                c as f32 / ell_f
+            } else {
+                0.0
+            };
+            acc += (q as f64 - qhat as f64).abs();
+        }
+        (0.5 * acc) as f32
+    }
 }
 
 /// Project the probabilities on `support` onto the lattice
@@ -211,6 +234,30 @@ mod tests {
         assert_eq!(z.counts.iter().sum::<u32>(), 10);
         // zeta = 3 - 3.333 = -0.333 for all; tie-break -> index 0 incremented
         assert_eq!(z.counts, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn tv_from_dense_matches_reconstruction_and_lemma_bounds() {
+        // tv_from_dense(q) must equal TV(q, to_dense_probs) exactly, and
+        // sit within K/(4ℓ) of the dropped mass α (Lemma 1 + eq. (20)).
+        check("tv_from_dense = TV(q, qhat) within alpha ± K/4ell", 200, |g, _| {
+            let q = gen_probs(g);
+            let v = q.len();
+            let ell = g.int(8, 2000) as u32;
+            let k = g.usize(1, v);
+            let z = sparse_quantize(&q, &Sparsifier::top_k(k), ell);
+            let tv = z.tv_from_dense(&q);
+            let recon = tv_distance(&q, &z.to_dense_probs(v));
+            assert!(
+                (tv as f64 - recon).abs() < 1e-6,
+                "cursor walk {tv} != dense reconstruction {recon}"
+            );
+            let slack = z.k() as f64 / (4.0 * ell as f64) + 3e-4;
+            assert!(
+                (tv as f64 - z.alpha as f64).abs() <= slack,
+                "tv={tv} alpha={} K={} ell={ell}", z.alpha, z.k()
+            );
+        });
     }
 
     #[test]

@@ -48,6 +48,9 @@ use crate::util::json::Json;
 pub const ACTOR_CLOUD: u32 = 0xFFFF;
 /// Reserved actor id for the shared-uplink resource timeline.
 pub const ACTOR_LINK: u32 = 0xFFFE;
+/// Reserved actor id for tracer-generated bookkeeping lines (the ring
+/// recorder's drop marker).
+pub const ACTOR_TRACER: u32 = 0xFFFD;
 
 /// Frame direction as seen from the edge.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +96,20 @@ pub enum TraceData {
     KnobChange { k: i64, ell: usize, budget_bits: usize, depth: usize, branching: usize },
     /// The verifier granted uplink budget to this actor.
     GrantIssued { bits: usize },
+    /// A rejection decomposed per the paper's bound: `alpha` is the
+    /// dropped mass at the rejected position, `tv` the measured TV(q, q̂)
+    /// compression distortion, `rhat` the dense-vs-compressed rejection
+    /// estimate 1 - Σ min(p, q̂) at that position, and
+    /// `mismatch`/`distortion` the resulting shares (they sum to 1).
+    RejectAttrib {
+        batch_seq: u16,
+        pos: usize,
+        alpha: f64,
+        tv: f64,
+        rhat: f64,
+        mismatch: f64,
+        distortion: f64,
+    },
 }
 
 impl TraceData {
@@ -109,6 +126,7 @@ impl TraceData {
             TraceData::TreeSurvivor { .. } => "tree_survivor",
             TraceData::KnobChange { .. } => "knob_change",
             TraceData::GrantIssued { .. } => "grant_issued",
+            TraceData::RejectAttrib { .. } => "reject_attrib",
         }
     }
 
@@ -159,6 +177,17 @@ impl TraceData {
                 ("branching", n(*branching)),
             ],
             TraceData::GrantIssued { bits } => vec![("bits", n(*bits))],
+            TraceData::RejectAttrib { batch_seq, pos, alpha, tv, rhat, mismatch, distortion } => {
+                vec![
+                    ("batch_seq", n(*batch_seq as usize)),
+                    ("pos", n(*pos)),
+                    ("alpha", Json::Num(*alpha)),
+                    ("tv", Json::Num(*tv)),
+                    ("rhat", Json::Num(*rhat)),
+                    ("mismatch", Json::Num(*mismatch)),
+                    ("distortion", Json::Num(*distortion)),
+                ]
+            }
         }
     }
 }
@@ -228,14 +257,44 @@ impl RingTracer {
     }
 
     /// JSONL of the retained window, oldest event first (emission
-    /// order — the order things went wrong in).
+    /// order — the order things went wrong in).  When the ring shed
+    /// events, the dump ends with one schema-conforming `trace_dropped`
+    /// marker line so consumers can tell the window is truncated.
     pub fn dump(&self) -> String {
         let mut s = String::new();
         for ev in &self.ring {
             s.push_str(&ev.to_json().to_string_compact());
             s.push('\n');
         }
+        if self.dropped > 0 {
+            let (seq, t) = self
+                .ring
+                .back()
+                .map(|ev| (ev.seq + 1, ev.t))
+                .unwrap_or((self.dropped, 0.0));
+            let marker = Json::obj(vec![
+                ("actor", Json::Num(ACTOR_TRACER as f64)),
+                ("kind", Json::Str("trace_dropped".into())),
+                ("seq", Json::Num(seq as f64)),
+                ("t", Json::Num(t)),
+                ("tb", Json::Str(format!("{:016x}", t.to_bits()))),
+                ("dropped", Json::Num(self.dropped as f64)),
+            ]);
+            s.push_str(&marker.to_string_compact());
+            s.push('\n');
+        }
         s
+    }
+}
+
+impl RingTracer {
+    /// Chrome `trace_event` JSON of the retained window.  When events
+    /// were shed, the export carries a `trace_dropped` instant on the
+    /// reserved tracer track so the truncation is visible in Perfetto.
+    pub fn chrome_json(&self) -> String {
+        let mut evs: Vec<&TraceEvent> = self.ring.iter().collect();
+        evs.sort_by(|a, b| a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq)));
+        chrome_trace(&evs, self.dropped)
     }
 }
 
@@ -243,6 +302,12 @@ impl Tracer for RingTracer {
     fn record(&mut self, ev: TraceEvent) {
         if self.ring.len() == self.cap {
             self.ring.pop_front();
+            if self.dropped == 0 {
+                eprintln!(
+                    "trace: ring capacity {} exceeded — oldest events are being dropped",
+                    self.cap
+                );
+            }
             self.dropped += 1;
         }
         self.ring.push_back(ev);
@@ -286,72 +351,97 @@ impl JsonlTracer {
     /// transmissions render as duration slices, verify windows as
     /// begin/end pairs, everything else as instants; `pid` is the actor.
     pub fn chrome_json(&self) -> String {
-        let us = |t: f64| Json::Num(t * 1e6);
-        let mut out: Vec<Json> = Vec::new();
-        let actors: BTreeSet<u32> = self.events.iter().map(|e| e.actor).collect();
-        for a in &actors {
-            let name = match *a {
-                ACTOR_CLOUD => "cloud".to_string(),
-                ACTOR_LINK => "uplink".to_string(),
-                i => format!("edge-{i}"),
-            };
-            out.push(Json::obj(vec![
-                ("name", Json::Str("process_name".into())),
-                ("ph", Json::Str("M".into())),
-                ("pid", Json::Num(*a as f64)),
-                ("tid", Json::Num(0.0)),
-                ("args", Json::obj(vec![("name", Json::Str(name))])),
-            ]));
-        }
-        for ev in self.sorted() {
-            let args = Json::obj(ev.data.fields());
-            let base = |name: &str, ph: &str, ts: Json| {
-                vec![
-                    ("name", Json::Str(name.into())),
-                    ("ph", Json::Str(ph.into())),
-                    ("ts", ts),
-                    ("pid", Json::Num(ev.actor as f64)),
-                    ("tid", Json::Num(0.0)),
-                ]
-            };
-            let obj = match &ev.data {
-                TraceData::DraftSent { slm_s, .. } => {
-                    let mut o = base("draft", "X", us(ev.t - slm_s));
-                    o.push(("dur", us(*slm_s)));
-                    o.push(("args", args));
-                    o
-                }
-                TraceData::FrameTx { dir, air_s, .. } => {
-                    let name = match dir {
-                        Dir::Up => "tx.up",
-                        Dir::Down => "tx.down",
-                    };
-                    let mut o = base(name, "X", us(ev.t));
-                    o.push(("dur", us(*air_s)));
-                    o.push(("args", args));
-                    o
-                }
-                TraceData::VerifyStart { .. } => {
-                    let mut o = base("verify", "B", us(ev.t));
-                    o.push(("args", args));
-                    o
-                }
-                TraceData::VerifyEnd { .. } => {
-                    let mut o = base("verify", "E", us(ev.t));
-                    o.push(("args", args));
-                    o
-                }
-                _ => {
-                    let mut o = base(ev.data.kind(), "i", us(ev.t));
-                    o.push(("s", Json::Str("t".into())));
-                    o.push(("args", args));
-                    o
-                }
-            };
-            out.push(Json::obj(obj));
-        }
-        Json::obj(vec![("traceEvents", Json::Arr(out))]).to_string_compact()
+        chrome_trace(&self.sorted(), 0)
     }
+}
+
+/// Shared Chrome-export body over `(t, seq)`-sorted events.  `dropped`
+/// is the recorder's shed-event count ([`RingTracer::dropped`]); when
+/// nonzero the export ends with a `trace_dropped` instant on the
+/// reserved tracer track.
+fn chrome_trace(sorted: &[&TraceEvent], dropped: u64) -> String {
+    let us = |t: f64| Json::Num(t * 1e6);
+    let mut out: Vec<Json> = Vec::new();
+    let mut actors: BTreeSet<u32> = sorted.iter().map(|e| e.actor).collect();
+    if dropped > 0 {
+        actors.insert(ACTOR_TRACER);
+    }
+    for a in &actors {
+        let name = match *a {
+            ACTOR_CLOUD => "cloud".to_string(),
+            ACTOR_LINK => "uplink".to_string(),
+            ACTOR_TRACER => "tracer".to_string(),
+            i => format!("edge-{i}"),
+        };
+        out.push(Json::obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(*a as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(name))])),
+        ]));
+    }
+    for ev in sorted {
+        let args = Json::obj(ev.data.fields());
+        let base = |name: &str, ph: &str, ts: Json| {
+            vec![
+                ("name", Json::Str(name.into())),
+                ("ph", Json::Str(ph.into())),
+                ("ts", ts),
+                ("pid", Json::Num(ev.actor as f64)),
+                ("tid", Json::Num(0.0)),
+            ]
+        };
+        let obj = match &ev.data {
+            TraceData::DraftSent { slm_s, .. } => {
+                let mut o = base("draft", "X", us(ev.t - slm_s));
+                o.push(("dur", us(*slm_s)));
+                o.push(("args", args));
+                o
+            }
+            TraceData::FrameTx { dir, air_s, .. } => {
+                let name = match dir {
+                    Dir::Up => "tx.up",
+                    Dir::Down => "tx.down",
+                };
+                let mut o = base(name, "X", us(ev.t));
+                o.push(("dur", us(*air_s)));
+                o.push(("args", args));
+                o
+            }
+            TraceData::VerifyStart { .. } => {
+                let mut o = base("verify", "B", us(ev.t));
+                o.push(("args", args));
+                o
+            }
+            TraceData::VerifyEnd { .. } => {
+                let mut o = base("verify", "E", us(ev.t));
+                o.push(("args", args));
+                o
+            }
+            _ => {
+                let mut o = base(ev.data.kind(), "i", us(ev.t));
+                o.push(("s", Json::Str("t".into())));
+                o.push(("args", args));
+                o
+            }
+        };
+        out.push(Json::obj(obj));
+    }
+    if dropped > 0 {
+        let t = sorted.last().map(|e| e.t).unwrap_or(0.0);
+        let mut o = vec![
+            ("name", Json::Str("trace_dropped".into())),
+            ("ph", Json::Str("i".into())),
+            ("ts", us(t)),
+            ("pid", Json::Num(ACTOR_TRACER as f64)),
+            ("tid", Json::Num(0.0)),
+        ];
+        o.push(("s", Json::Str("t".into())));
+        o.push(("args", Json::obj(vec![("dropped", Json::Num(dropped as f64))])));
+        out.push(Json::obj(o));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(out))]).to_string_compact()
 }
 
 impl Tracer for JsonlTracer {
@@ -448,12 +538,53 @@ mod tests {
         let seqs: Vec<u64> = ring.events().map(|e| e.seq).collect();
         assert_eq!(seqs, vec![6, 7, 8, 9]);
         let dump = ring.dump();
-        assert_eq!(dump.lines().count(), 4);
+        // 4 retained events + 1 trace_dropped marker line
+        assert_eq!(dump.lines().count(), 5);
         // dump preserves emission order: seq strictly increasing
         let pos: Vec<usize> = (6..10)
             .map(|i| dump.find(&format!("\"seq\":{i}")).expect("seq present"))
             .collect();
         assert!(pos.windows(2).all(|w| w[0] < w[1]));
+        // the marker parses, carries the export schema keys, and reports
+        // the shed count on the reserved tracer actor
+        let marker = Json::parse(dump.lines().last().unwrap()).unwrap();
+        for key in ["actor", "kind", "seq", "t", "tb", "dropped"] {
+            assert!(marker.get(key).is_some(), "marker missing '{key}'");
+        }
+        assert_eq!(marker.get("kind").unwrap().as_str(), Some("trace_dropped"));
+        assert_eq!(marker.get("actor").unwrap().as_f64(), Some(ACTOR_TRACER as f64));
+        assert_eq!(marker.get("dropped").unwrap().as_f64(), Some(6.0));
+    }
+
+    #[test]
+    fn ring_chrome_export_marks_truncation() {
+        let mut ring = RingTracer::new(4);
+        for i in 0..10 {
+            ring.record(ev(i, i as f64));
+        }
+        let j = Json::parse(&ring.chrome_json()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let marker = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("trace_dropped"))
+            .expect("truncated ring must carry a trace_dropped instant");
+        assert_eq!(marker.path(&["args", "dropped"]).unwrap().as_f64(), Some(6.0));
+        assert_eq!(marker.get("pid").unwrap().as_f64(), Some(ACTOR_TRACER as f64));
+        // and a complete ring carries none
+        let mut small = RingTracer::new(16);
+        small.record(ev(0, 0.0));
+        assert!(!small.chrome_json().contains("trace_dropped"));
+    }
+
+    #[test]
+    fn ring_without_drops_emits_no_marker() {
+        let mut ring = RingTracer::new(8);
+        for i in 0..3 {
+            ring.record(ev(i, i as f64));
+        }
+        assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.dump().lines().count(), 3);
+        assert!(!ring.dump().contains("trace_dropped"));
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Offline-analyzer and rejection-attribution contracts.
+//!
+//! - The analyzer is a pure function of the trace bytes: two passes over
+//!   the same recording produce bit-identical report JSON and CSV, and
+//!   the report schema is pinned (CI diffs the key set against a
+//!   checked-in baseline).
+//! - Attribution is consistent end-to-end: every `reject_attrib` event
+//!   splits one rejection into mismatch + distortion shares that sum to
+//!   1, the session/fleet rollups agree with the event stream, and the
+//!   measured compression distortion stays within the paper's bound
+//!   |TV(q, q̂) − α| ≤ K/(4ℓ) (Lemma 1 + eq. 20), pinned here across
+//!   random synthetic configs.
+
+use sqs_sd::analysis::{analyze_jsonl, SCHEMA};
+use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::coordinator::{SdSession, SessionConfig, TimingMode};
+use sqs_sd::fleet::{DeviceProfile, FleetConfig, FleetReport, FleetSim, Workload};
+use sqs_sd::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
+use sqs_sd::sqs::Policy;
+use sqs_sd::trace::{JsonlTracer, TraceSink};
+use sqs_sd::util::check::check;
+use sqs_sd::util::json::Json;
+
+/// Contended fleet under a tracer; returns (JSONL, report).
+fn fleet_trace(seed: u64) -> (String, FleetReport) {
+    let base = DeviceProfile {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.8,
+        max_new_tokens: 16,
+        max_batch_drafts: 4,
+        workload: Workload::Poisson { rate_hz: 4.0 },
+        pipeline_depth: 2,
+        tree_branching: 2,
+        ..Default::default()
+    };
+    let mut cfg = FleetConfig::uniform(4, base);
+    cfg.mismatch = 0.6;
+    cfg.requests_per_device = 2;
+    cfg.seed = seed;
+    let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+    let report = FleetSim::new(cfg).with_tracer(sink).run().unwrap();
+    let jsonl = tracer.lock().unwrap().jsonl();
+    (jsonl, report)
+}
+
+fn count_kind(jsonl: &str, kind: &str) -> u64 {
+    jsonl.lines().filter(|l| l.contains(&format!("\"kind\":\"{kind}\""))).count() as u64
+}
+
+#[test]
+fn analyzer_report_is_bit_identical_and_schema_pinned() {
+    let (jsonl, _) = fleet_trace(3);
+    let a = analyze_jsonl(&jsonl).unwrap();
+    let b = analyze_jsonl(&jsonl).unwrap();
+    let (aj, bj) = (a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+    assert_eq!(aj, bj, "report JSON must be a pure function of the trace bytes");
+    assert_eq!(a.to_csv(), b.to_csv());
+
+    let j = Json::parse(&aj).unwrap();
+    assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+    for key in ["events", "trace_dropped", "span_s", "actors", "totals", "rejection",
+                "knob_timeline"]
+    {
+        assert!(j.get(key).is_some(), "report missing '{key}'");
+    }
+    let totals = j.get("totals").unwrap();
+    for key in ["draft_s", "queue_wait_s", "uplink_air_s", "verify_s", "bubble_s",
+                "discards", "rollbacks"]
+    {
+        assert!(totals.get(key).is_some(), "totals missing '{key}'");
+    }
+    // the contended fleet exercises the whole stage taxonomy
+    assert!(totals.get("draft_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(totals.get("verify_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("events").unwrap().as_f64().unwrap() as u64
+            == jsonl.lines().count() as u64);
+}
+
+#[test]
+fn analyzer_rejection_rollup_matches_fleet_report() {
+    let (jsonl, report) = fleet_trace(3);
+    let attribs = count_kind(&jsonl, "reject_attrib");
+    assert!(attribs > 0, "contended fleet must attribute some rejections");
+    assert_eq!(report.reject_mismatch + report.reject_distortion, attribs);
+
+    let r = analyze_jsonl(&jsonl).unwrap();
+    assert_eq!(r.attributed(), attribs);
+    let j = r.to_json();
+    let rej = j.get("rejection").unwrap();
+    let mm = rej.get("mass_mismatch").unwrap().as_f64().unwrap();
+    let dm = rej.get("mass_distortion").unwrap().as_f64().unwrap();
+    assert!((mm - report.reject_mass_mismatch).abs() < 1e-9);
+    assert!((dm - report.reject_mass_distortion).abs() < 1e-9);
+    // shares split whole rejections: the masses sum back to the count
+    assert!((mm + dm - attribs as f64).abs() < 1e-6, "{mm} + {dm} != {attribs}");
+
+    // the metrics plane carries the same pre-registered rollups
+    let m = report.metrics.to_json();
+    assert_eq!(
+        m.get("counter.reject.mismatch").unwrap().as_f64().unwrap() as u64,
+        report.reject_mismatch
+    );
+    assert_eq!(
+        m.get("counter.reject.distortion").unwrap().as_f64().unwrap() as u64,
+        report.reject_distortion
+    );
+    let alpha_n = m.path(&["hist.alpha", "n"]).unwrap().as_f64().unwrap() as u64;
+    assert!(alpha_n > 0, "every drafted node observes hist.alpha");
+}
+
+#[test]
+fn session_engine_rollup_matches_its_trace() {
+    let link = LinkConfig {
+        uplink_bps: 1e6,
+        downlink_bps: 1e7,
+        propagation_s: 0.030,
+        jitter_s: 0.0,
+    };
+    let world = SyntheticWorld::new(64, 0.8, 2024);
+    let draft = SyntheticDraft::new(world.clone(), 1_000_000);
+    let target = SyntheticTarget::new(world.clone(), 6, 1_000_000);
+    let cfg = SessionConfig {
+        policy: Policy::KSqs { k: 8 },
+        temp: 0.9,
+        max_new_tokens: 48,
+        max_batch_drafts: 6,
+        seed: 11,
+        timing: TimingMode::Modeled { slm_step_s: 1.2e-3, llm_call_s: 4.0e-3 },
+        pipeline_depth: 3,
+        tree_branching: 2,
+        ..Default::default()
+    };
+    let mut sess = SdSession::new(draft, target, SimulatedLink::new(link, 11), cfg);
+    let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+    sess.set_tracer(sink);
+    let res = sess.run(&[7, 21, 42]).unwrap();
+    let jsonl = tracer.lock().unwrap().jsonl();
+
+    let attribs = count_kind(&jsonl, "reject_attrib");
+    assert!(attribs > 0, "high-mismatch session must attribute rejections");
+    assert_eq!(res.reject_mismatch + res.reject_distortion, attribs);
+    assert!(
+        (res.reject_mass_mismatch + res.reject_mass_distortion - attribs as f64).abs() < 1e-6
+    );
+    assert!(res.mean_alpha >= 0.0 && res.mean_alpha < 1.0);
+
+    let r = analyze_jsonl(&jsonl).unwrap();
+    assert_eq!(r.attributed(), attribs);
+}
+
+/// Property (Lemma 1 + eq. 20, end to end): every attributed rejection
+/// decomposes into shares that sum to one, the rollups agree with the
+/// event stream, and the measured distortion basis tv = TV(q, q̂) stays
+/// within K/(4ℓ) of the dropped mass α at the rejected position.
+#[test]
+fn attribution_mass_is_conserved_across_synthetic_configs() {
+    check("attribution mass conserved", 10, |g, case| {
+        let vocab = *g.pick(&[32usize, 64]);
+        let ell = g.usize(50, 400) as u32;
+        let depth = g.usize(1, 3);
+        let branching = if depth >= 2 && g.bool() { 2 } else { 1 };
+        let base = DeviceProfile {
+            policy: Policy::KSqs { k: g.usize(4, 16) },
+            temp: g.f32(0.6, 1.0),
+            ell,
+            max_new_tokens: 12,
+            max_batch_drafts: 4,
+            workload: Workload::Poisson { rate_hz: 4.0 },
+            pipeline_depth: depth,
+            tree_branching: branching,
+            ..Default::default()
+        };
+        let n = g.usize(2, 3);
+        let mut cfg = FleetConfig::uniform(n, base);
+        cfg.vocab = vocab;
+        cfg.mismatch = g.f64(0.4, 0.9);
+        cfg.requests_per_device = 2;
+        cfg.seed = 0xA11A ^ case as u64;
+        let (sink, tracer) = TraceSink::shared(JsonlTracer::new());
+        let report = FleetSim::new(cfg).with_tracer(sink).run().unwrap();
+        let jsonl = tracer.lock().unwrap().jsonl();
+
+        let mut attribs = 0u64;
+        let mut mass_mismatch = 0.0f64;
+        let mut mass_distortion = 0.0f64;
+        let slack = vocab as f64 / (4.0 * ell as f64) + 3e-3;
+        for line in jsonl.lines() {
+            let j = Json::parse(line).unwrap();
+            if j.get("kind").unwrap().as_str() != Some("reject_attrib") {
+                continue;
+            }
+            attribs += 1;
+            let alpha = j.get("alpha").unwrap().as_f64().unwrap();
+            let tv = j.get("tv").unwrap().as_f64().unwrap();
+            let rhat = j.get("rhat").unwrap().as_f64().unwrap();
+            let mm = j.get("mismatch").unwrap().as_f64().unwrap();
+            let dm = j.get("distortion").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&mm), "mismatch share {mm}");
+            assert!((0.0..=1.0).contains(&dm), "distortion share {dm}");
+            assert!((mm + dm - 1.0).abs() < 1e-9, "shares must sum to 1: {mm} + {dm}");
+            assert!((0.0..=1.0).contains(&rhat), "rhat {rhat}");
+            assert!(alpha >= 0.0 && tv >= 0.0);
+            // |TV(q, q̂) − α| ≤ TV(q̄, q̂) ≤ K/(4ℓ), plus f32 headroom
+            assert!(
+                (tv - alpha).abs() <= slack,
+                "|tv − alpha| = |{tv} − {alpha}| > K/(4ℓ) slack {slack}"
+            );
+            mass_mismatch += mm;
+            mass_distortion += dm;
+        }
+        // rollups agree with the event stream exactly (same arithmetic)
+        assert_eq!(report.reject_mismatch + report.reject_distortion, attribs);
+        assert!((report.reject_mass_mismatch - mass_mismatch).abs() < 1e-9);
+        assert!((report.reject_mass_distortion - mass_distortion).abs() < 1e-9);
+        // and the attributed mass reproduces the attributed-rejection
+        // count: nothing over- or under-counted
+        assert!(
+            (mass_mismatch + mass_distortion - attribs as f64).abs() < 1e-6,
+            "mass {mass_mismatch}+{mass_distortion} != attributed {attribs}"
+        );
+    });
+}
