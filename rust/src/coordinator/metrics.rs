@@ -24,7 +24,7 @@
 //! `linear_bounds`).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
@@ -40,6 +40,42 @@ impl Counter {
 
     pub fn get(&self) -> u64 {
         self.0.load(Relaxed)
+    }
+}
+
+struct GaugeCore {
+    value: AtomicI64,
+    peak: AtomicI64,
+}
+
+/// Pre-registered gauge: a settable level (live sessions, queue depth)
+/// with a high-water mark.  `add`/`sub` are relaxed atomics; `peak`
+/// tracks the largest value ever set.
+#[derive(Clone)]
+pub struct Gauge(Arc<GaugeCore>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.value.store(v, Relaxed);
+        self.0.peak.fetch_max(v, Relaxed);
+    }
+
+    pub fn add(&self, d: i64) -> i64 {
+        let v = self.0.value.fetch_add(d, Relaxed) + d;
+        self.0.peak.fetch_max(v, Relaxed);
+        v
+    }
+
+    pub fn sub(&self, d: i64) -> i64 {
+        self.add(-d)
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.value.load(Relaxed)
+    }
+
+    pub fn peak(&self) -> i64 {
+        self.0.peak.load(Relaxed)
     }
 }
 
@@ -185,6 +221,7 @@ impl Histogram {
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, Counter>>,
     histograms: Mutex<BTreeMap<String, Histogram>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
 }
 
 impl Metrics {
@@ -214,9 +251,26 @@ impl Metrics {
             .clone()
     }
 
+    /// Register (or look up) a gauge and return its handle.
+    pub fn gauge_handle(&self, name: &str) -> Gauge {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                Gauge(Arc::new(GaugeCore { value: AtomicI64::new(0), peak: AtomicI64::new(0) }))
+            })
+            .clone()
+    }
+
     /// Name-keyed counter read (0 when unregistered) — export path.
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).map(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Name-keyed gauge read — export path.
+    pub fn gauge(&self, name: &str) -> Option<Gauge> {
+        self.gauges.lock().unwrap().get(name).cloned()
     }
 
     /// Name-keyed histogram read — export path.
@@ -231,6 +285,13 @@ impl Metrics {
             out.push_str(&format!("{:<36} {:>14}\n", "counter", "value"));
             for (k, c) in counters.iter() {
                 out.push_str(&format!("{k:<36} {:>14}\n", c.get()));
+            }
+        }
+        let gauges = self.gauges.lock().unwrap();
+        if !gauges.is_empty() {
+            out.push_str(&format!("{:<36} {:>14} {:>14}\n", "gauge", "value", "peak"));
+            for (k, g) in gauges.iter() {
+                out.push_str(&format!("{k:<36} {:>14} {:>14}\n", g.get(), g.peak()));
             }
         }
         let histograms = self.histograms.lock().unwrap();
@@ -252,9 +313,19 @@ impl Metrics {
     pub fn to_json(&self) -> Json {
         let counters = self.counters.lock().unwrap();
         let histograms = self.histograms.lock().unwrap();
+        let gauges = self.gauges.lock().unwrap();
         let mut obj = BTreeMap::new();
         for (k, c) in counters.iter() {
             obj.insert(format!("counter.{k}"), Json::Num(c.get() as f64));
+        }
+        for (k, g) in gauges.iter() {
+            obj.insert(
+                format!("gauge.{k}"),
+                Json::obj(vec![
+                    ("value", Json::Num(g.get() as f64)),
+                    ("peak", Json::Num(g.peak() as f64)),
+                ]),
+            );
         }
         for (k, h) in histograms.iter() {
             obj.insert(
@@ -299,6 +370,25 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("counter.requests").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("hist.latency_s").unwrap().get("n").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn gauges_track_level_and_peak() {
+        let m = Metrics::new();
+        let g = m.gauge_handle("sessions.live");
+        assert_eq!(g.add(1), 1);
+        assert_eq!(g.add(2), 3);
+        assert_eq!(g.sub(1), 2);
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.peak(), 3);
+        g.set(1);
+        assert_eq!(m.gauge("sessions.live").unwrap().get(), 1);
+        assert_eq!(m.gauge("sessions.live").unwrap().peak(), 3);
+        let j = m.to_json();
+        let gj = j.get("gauge.sessions.live").unwrap();
+        assert_eq!(gj.get("value").unwrap().as_f64(), Some(1.0));
+        assert_eq!(gj.get("peak").unwrap().as_f64(), Some(3.0));
+        assert!(m.render_table().contains("sessions.live"));
     }
 
     #[test]

@@ -4,7 +4,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
-pub use metrics::{log_bounds, linear_bounds, Counter, Histogram, Metrics};
+pub use metrics::{log_bounds, linear_bounds, Counter, Gauge, Histogram, Metrics};
 pub use scheduler::{Request, Response, Scheduler, Worker, WorkerFactory};
 pub use session::{ArBaseline, BatchRecord, SdSession, SessionConfig, SessionResult, TimingMode};
 

@@ -37,9 +37,10 @@ use anyhow::{bail, Result};
 
 use crate::channel::SharedUplink;
 use crate::control::{AdaptiveMode, KnobPoint};
-use crate::coordinator::{linear_bounds, log_bounds, Counter, Histogram, Metrics};
+use crate::coordinator::{linear_bounds, log_bounds, Counter, Gauge, Histogram, Metrics};
 use crate::model::synthetic::SyntheticWorld;
 use crate::protocol::SharedPort;
+use crate::serve::QueueMetrics;
 use crate::sqs::Policy;
 use crate::trace::{TraceData, TraceSink};
 use crate::util::rng::Pcg64;
@@ -323,6 +324,10 @@ struct FleetMetrics {
     reject_mismatch: Counter,
     reject_distortion: Counter,
     alpha: Histogram,
+    /// shared-queue instrumentation (same names on the socket path)
+    verify_batch_size: Histogram,
+    verify_queue_wait: Histogram,
+    sessions_live: Gauge,
 }
 
 impl FleetMetrics {
@@ -344,6 +349,11 @@ impl FleetMetrics {
             reject_mismatch: metrics.counter_handle("reject.mismatch"),
             reject_distortion: metrics.counter_handle("reject.distortion"),
             alpha: metrics.histogram_handle("alpha", &log_bounds(1e-6, 1.0, 4)),
+            verify_batch_size: metrics
+                .histogram_handle("verify.batch_size", &linear_bounds(0.0, 32.0, 32)),
+            verify_queue_wait: metrics
+                .histogram_handle("verify.queue_wait", &log_bounds(1e-6, 10.0, 6)),
+            sessions_live: metrics.gauge_handle("sessions.live"),
         }
     }
 }
@@ -392,9 +402,13 @@ impl FleetSim {
                 Device::new(i, *p, &world, cfg.seed, port)
             })
             .collect();
-        let verifier = CloudVerifier::new(cfg.verifier);
+        let mut verifier = CloudVerifier::new(cfg.verifier);
         let metrics = Metrics::new();
         let m = FleetMetrics::register(&metrics);
+        verifier.set_metrics(QueueMetrics {
+            batch_size: m.verify_batch_size.clone(),
+            queue_wait: m.verify_queue_wait.clone(),
+        });
         let mut devices = devices;
         for dev in &mut devices {
             dev.set_attrib_sinks(device::AttribSinks {
@@ -493,7 +507,7 @@ impl FleetSim {
                 self.try_pipeline_draft(d, now)?;
             }
             EventKind::UplinkDelivered => {
-                self.verifier.enqueue(d);
+                self.verifier.enqueue_at(d, now);
                 self.start_verifies(now)?;
             }
             EventKind::VerifyDone => {
@@ -554,8 +568,9 @@ impl FleetSim {
         // adaptive grants divide the verifier's bit pool fairly across
         // the sessions being served right now
         let live = self.devices.iter().filter(|dev| dev.active.is_some()).count();
+        self.m.sessions_live.set(live as i64);
         while self.verifier.slot_free() {
-            let batch = self.verifier.take_batch();
+            let batch = self.verifier.take_batch_at(now);
             // feedback extensions reflect the backlog left *behind* this
             // call: what is still queued is what the edges should react to
             let exts = self.verifier.feedback_exts(live);

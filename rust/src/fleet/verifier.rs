@@ -10,170 +10,73 @@
 //!   base_s + per_token_s * (w_1 + ... + w_m)
 //! i.e. the fixed call overhead is paid once per slot, the token-parallel
 //! verify cost scales with the combined window.
+//!
+//! The admission/coalescing/grant arithmetic itself lives in
+//! [`serve::queue::VerifyQueue`](crate::serve::VerifyQueue) so the TCP
+//! wire server batches across live sessions with the exact same rules;
+//! `CloudVerifier` is the fleet-simulator face of that queue, pending
+//! device ids on the virtual clock.
 
-use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
 
-use crate::protocol::{fair_share_grant, Ext};
+use crate::serve::{QueueConfig, QueueMetrics, VerifyQueue};
 
-/// Cloud service-time and admission parameters.
-#[derive(Clone, Copy, Debug)]
-pub struct VerifierConfig {
-    /// max verify calls in flight (cloud replicas / streams)
-    pub concurrency: usize,
-    /// max pending windows coalesced into one call (1 = no batching)
-    pub batch_max: usize,
-    /// fixed seconds per verify call
-    pub base_s: f64,
-    /// seconds per window token in a call
-    pub per_token_s: f64,
-    /// pending-window backlog at/above which feedback frames carry the
-    /// protocol-v2 congestion bit (the verifier sees queue depth before
-    /// any device does — ROADMAP "cloud-to-edge congestion signaling")
-    pub congestion_depth: usize,
-    /// per-round uplink budget granted on congested feedback frames,
-    /// bits (None: signal congestion only, grant nothing)
-    pub grant_bits: Option<u32>,
-    /// adaptive grants: an aggregate uplink-bit pool per round that the
-    /// verifier divides fairly across live sessions — the grant each
-    /// congested feedback frame carries is `pool / live`, scaled down
-    /// further by `congestion_depth / backlog` once the queue grows past
-    /// the congestion threshold.  Overrides `grant_bits` when set,
-    /// turning the cloud into an actual admission controller instead of
-    /// a configured constant (ROADMAP "adaptive grants").
-    pub grant_pool_bits: Option<u32>,
-    /// floor for adaptive grants, bits (keeps starved sessions alive)
-    pub grant_min_bits: u32,
-}
-
-impl Default for VerifierConfig {
-    fn default() -> Self {
-        // base cost matches exp::synthetic_default's llm_call_s; the
-        // per-token term makes batched calls cost more than lone ones
-        VerifierConfig {
-            concurrency: 1,
-            batch_max: 4,
-            base_s: 4.0e-3,
-            per_token_s: 2.0e-4,
-            congestion_depth: 4,
-            grant_bits: None,
-            grant_pool_bits: None,
-            grant_min_bits: 64,
-        }
-    }
-}
+/// Cloud service-time and admission parameters (shared with the wire
+/// server's verify queue).
+pub type VerifierConfig = QueueConfig;
 
 /// Admission state: FIFO of devices whose frames reached the cloud.
 pub struct CloudVerifier {
-    pub cfg: VerifierConfig,
-    pub pending: VecDeque<usize>,
-    pub in_flight: usize,
-    /// verify calls issued (slots used)
-    pub calls: u64,
-    /// windows served (>= calls when coalescing happens)
-    pub windows: u64,
-    /// busy seconds summed over slots (utilization vs concurrency*horizon)
-    pub busy_s: f64,
-    /// deepest pending backlog reached (queueing-headroom diagnostic)
-    pub peak_queue: usize,
+    core: VerifyQueue<usize>,
 }
 
 impl CloudVerifier {
     pub fn new(cfg: VerifierConfig) -> CloudVerifier {
-        assert!(cfg.concurrency >= 1, "verifier needs >= 1 slot");
-        assert!(cfg.batch_max >= 1, "batch_max must be >= 1");
-        CloudVerifier {
-            cfg,
-            pending: VecDeque::new(),
-            in_flight: 0,
-            calls: 0,
-            windows: 0,
-            busy_s: 0.0,
-            peak_queue: 0,
-        }
+        CloudVerifier { core: VerifyQueue::new(cfg) }
     }
 
     pub fn enqueue(&mut self, device: usize) {
-        self.pending.push_back(device);
-        self.peak_queue = self.peak_queue.max(self.pending.len());
+        self.core.enqueue(device, 0.0);
     }
 
-    /// Can a new call start right now?
-    pub fn slot_free(&self) -> bool {
-        self.in_flight < self.cfg.concurrency && !self.pending.is_empty()
+    /// Enqueue stamped with the simulator's virtual clock so the shared
+    /// queue-wait histogram reports virtual seconds.
+    pub fn enqueue_at(&mut self, device: usize, now: f64) {
+        self.core.enqueue(device, now);
     }
 
     /// Claim up to `batch_max` pending devices for one coalesced call.
     pub fn take_batch(&mut self) -> Vec<usize> {
-        let m = self.pending.len().min(self.cfg.batch_max);
-        let batch: Vec<usize> = self.pending.drain(..m).collect();
-        if !batch.is_empty() {
-            self.in_flight += 1;
-            self.calls += 1;
-            self.windows += batch.len() as u64;
-        }
-        batch
+        self.core.take_batch(0.0)
     }
 
-    /// Protocol-v2 feedback extensions for verdicts being served right
-    /// now: when the remaining backlog is at/above `congestion_depth`,
-    /// every feedback frame of the batch carries the congestion bit —
-    /// and, when configured, an explicit uplink budget grant that
-    /// `BudgetAimd` consumes directly.  `live_sessions` is the number of
-    /// sessions currently being served (devices with an active request):
-    /// the adaptive grant pool is divided fairly across them.
-    pub fn feedback_exts(&self, live_sessions: usize) -> Vec<Ext> {
-        let mut exts = Vec::new();
-        if self.pending.len() >= self.cfg.congestion_depth {
-            exts.push(Ext::Congestion(true));
-            if let Some(g) = self.grant_for(live_sessions) {
-                exts.push(Ext::BudgetGrant(g));
-            }
-        }
-        exts
-    }
-
-    /// The per-round uplink budget grant under the current load: the
-    /// fair share of the adaptive pool (scaled down by queue pressure
-    /// past the congestion threshold, floored at `grant_min_bits`), or
-    /// the configured constant, or nothing.
-    pub fn grant_for(&self, live_sessions: usize) -> Option<u32> {
-        let Some(pool) = self.cfg.grant_pool_bits else {
-            return self.cfg.grant_bits;
-        };
-        let depth = self.cfg.congestion_depth.max(1) as f64;
-        let backlog = self.pending.len() as f64;
-        // the deeper the backlog, the tighter the admission
-        let scale = if backlog > depth { depth / backlog } else { 1.0 };
-        Some(fair_share_grant(pool, live_sessions, self.cfg.grant_min_bits, scale))
-    }
-
-    /// Modeled service seconds for a call over `total_window_tokens`.
-    pub fn service_s(&mut self, total_window_tokens: usize) -> f64 {
-        let s = self.cfg.base_s + self.cfg.per_token_s * total_window_tokens as f64;
-        self.busy_s += s;
-        s
-    }
-
-    pub fn release_slot(&mut self) {
-        debug_assert!(self.in_flight > 0);
-        self.in_flight -= 1;
-    }
-
-    /// Mean windows per verify call (batching amortization achieved).
-    pub fn mean_batch(&self) -> f64 {
-        if self.calls == 0 { 0.0 } else { self.windows as f64 / self.calls as f64 }
-    }
-
-    /// Fraction of slot-seconds busy over `[0, horizon_s]`.
-    pub fn utilization(&self, horizon_s: f64) -> f64 {
-        let denom = horizon_s * self.cfg.concurrency as f64;
-        if denom > 0.0 { (self.busy_s / denom).min(1.0) } else { 0.0 }
+    /// `take_batch` stamped with the virtual clock (feeds queue-wait).
+    pub fn take_batch_at(&mut self, now: f64) -> Vec<usize> {
+        self.core.take_batch(now)
     }
 }
+
+impl Deref for CloudVerifier {
+    type Target = VerifyQueue<usize>;
+    fn deref(&self) -> &VerifyQueue<usize> {
+        &self.core
+    }
+}
+
+impl DerefMut for CloudVerifier {
+    fn deref_mut(&mut self) -> &mut VerifyQueue<usize> {
+        &mut self.core
+    }
+}
+
+// Re-exported so fleet users keep one import path for the queue's
+// metric handles.
+pub use crate::serve::QueueMetrics as VerifierMetrics;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::protocol::Ext;
 
     #[test]
     fn admission_respects_concurrency() {

@@ -25,6 +25,7 @@ pub mod protocol;
 /// builds and tests on stock runners.
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod sqs;
 pub mod trace;

@@ -5,6 +5,7 @@
 //!   serve    TCP serving front-end (see server module for the protocol)
 //!   sweep    temperature sweep for a policy, CSV to stdout
 //!   fleet    multi-device discrete-event simulation on a shared uplink
+//!   soak     loopback load test of the sharded TCP wire endpoint
 //!   analyze  offline critical-path / rejection analysis of a JSONL trace
 //!   inspect  print the artifact manifest / model card
 //!
@@ -26,6 +27,7 @@ use sqs_sd::fleet::{
 use sqs_sd::model::{decode, encode};
 #[cfg(feature = "pjrt")]
 use sqs_sd::runtime::Manifest;
+use sqs_sd::serve::{run_soak, SoakConfig, WireServerConfig};
 #[cfg(feature = "pjrt")]
 use sqs_sd::server::{serve, ServerConfig};
 use sqs_sd::sqs::Policy;
@@ -60,6 +62,7 @@ fn main() {
         "serve" => cmd_serve(argv),
         "sweep" => cmd_sweep(argv),
         "fleet" => cmd_fleet(argv),
+        "soak" => cmd_soak(argv),
         "analyze" => cmd_analyze(argv),
         "inspect" => cmd_inspect(argv),
         "help" | "--help" | "-h" => {
@@ -68,6 +71,7 @@ fn main() {
                  subcommands:\n  run      generate a completion for a prompt\n  \
                  serve    TCP serving front-end\n  sweep    temperature sweep (CSV)\n  \
                  fleet    multi-device fleet simulation (shared uplink)\n  \
+                 soak     loopback load test of the sharded wire endpoint\n  \
                  analyze  offline analysis of a recorded trace (JSON + CSV report)\n  \
                  inspect  print the artifact manifest\n\n\
                  run `sqs-sd <subcommand> --help` for options"
@@ -517,6 +521,116 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     print!("{}", report.render());
     println!("--- metrics ---");
     print!("{}", report.metrics.render_table());
+    Ok(())
+}
+
+/// Loopback soak: spawn real `WireEdge` clients against the sharded
+/// TCP endpoint and report serving-tier telemetry.  Works on every
+/// build flavor (synthetic verify backend).
+fn cmd_soak(argv: Vec<String>) -> Result<()> {
+    let a = policy_opts(Args::new(
+        "sqs-sd soak",
+        "loopback load test: N concurrent WireEdge sessions against the \
+         sharded wire endpoint with cross-session verify batching",
+    ))
+    .opt("sessions", "256", "total sessions to run")
+    .opt("concurrency", "128", "client threads (live sessions at a time)")
+    .opt("max-tokens", "24", "tokens per session")
+    .opt("shards", "4", "server shard workers (session tables)")
+    .opt("verify-workers", "2", "server verify workers (queue concurrency)")
+    .opt("verify-batch", "16", "max windows coalesced per verify call")
+    .opt("verify-base-ms", "0.5", "modeled fixed cost per verify call, ms (0 = full speed)")
+    .opt("verify-token-ms", "0.01", "modeled cost per window token, ms")
+    .opt("congestion-depth", "8", "verify backlog at/above which feedback signals congestion")
+    .opt("grant-bits", "0", "constant uplink grant on congested feedback, bits (0 = off)")
+    .opt("grant-pool-bits", "0", "adaptive fair-share grant pool, bits/round (0 = off)")
+    .opt("max-backlog", "0", "verify queue backlog bound (0 = unbounded)")
+    .opt("max-sessions", "0", "live-session admission cap (0 = unbounded)")
+    .opt("vocab", "64", "synthetic vocabulary size")
+    .opt("mismatch", "0.6", "draft-target mismatch (synthetic world)")
+    .opt("metrics-json", "", "write the server metrics registry as JSON here");
+    let a = a.parse_from(argv).map_err(|e| anyhow!("{e}"))?;
+
+    let sessions = a.get_usize("sessions").map_err(|e| anyhow!(e))?;
+    let concurrency = a.get_usize("concurrency").map_err(|e| anyhow!(e))?;
+    if sessions == 0 || concurrency == 0 {
+        bail!("--sessions and --concurrency must be >= 1");
+    }
+    let vocab = a.get_usize("vocab").map_err(|e| anyhow!(e))?;
+    if vocab == 0 {
+        bail!("--vocab must be >= 1");
+    }
+    let policy = parse_policy(&a)?;
+    let adaptive = parse_adaptive(&a)?;
+    if aimd_overrides_csqs(policy, adaptive) {
+        warn_aimd_overrides_csqs();
+    }
+    let grant_bits = a.get_usize("grant-bits").map_err(|e| anyhow!(e))?;
+    let grant_pool = a.get_usize("grant-pool-bits").map_err(|e| anyhow!(e))?;
+    let server_cfg = WireServerConfig {
+        vocab,
+        mismatch: a.get_f64("mismatch").map_err(|e| anyhow!(e))?,
+        temp: a.get_f64("temp").map_err(|e| anyhow!(e))? as f32,
+        congestion_depth: a.get_usize("congestion-depth").map_err(|e| anyhow!(e))?,
+        grant_bits: if grant_bits > 0 { Some(grant_bits as u32) } else { None },
+        grant_pool_bits: if grant_pool > 0 { Some(grant_pool as u32) } else { None },
+        seed: a.get_u64("seed").map_err(|e| anyhow!(e))?,
+        shards: a.get_usize("shards").map_err(|e| anyhow!(e))?,
+        verify_workers: a.get_usize("verify-workers").map_err(|e| anyhow!(e))?,
+        verify_batch: a.get_usize("verify-batch").map_err(|e| anyhow!(e))?,
+        verify_base_s: a.get_f64("verify-base-ms").map_err(|e| anyhow!(e))? / 1e3,
+        verify_token_s: a.get_f64("verify-token-ms").map_err(|e| anyhow!(e))? / 1e3,
+        max_backlog: a.get_usize("max-backlog").map_err(|e| anyhow!(e))?,
+        max_sessions: a.get_usize("max-sessions").map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    let soak_cfg = SoakConfig {
+        sessions,
+        concurrency,
+        max_new_tokens: a.get_usize("max-tokens").map_err(|e| anyhow!(e))?,
+        pipeline_depth: parse_pipeline_depth(&a)?,
+        tree_branching: parse_tree_branching(&a)?,
+        policy,
+        ell: a.get_usize("ell").map_err(|e| anyhow!(e))? as u32,
+        budget_bits: a.get_usize("budget").map_err(|e| anyhow!(e))?,
+        adaptive,
+        seed: a.get_u64("seed").map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    // run_soak folds the server's registry into the report; re-running
+    // a second server just for JSON export would skew it, so export
+    // from the report's source registry is not offered here — the
+    // report itself carries every serving-tier number
+    let report = run_soak(server_cfg, soak_cfg)?;
+    println!("{}", report.render());
+    let metrics_json = a.get("metrics-json");
+    if !metrics_json.is_empty() {
+        use sqs_sd::util::json::Json;
+        let j = Json::obj(vec![
+            ("sessions", Json::Num(report.sessions as f64)),
+            ("completed", Json::Num(report.completed as f64)),
+            ("failed", Json::Num(report.failed as f64)),
+            ("wall_s", Json::Num(report.wall_s)),
+            ("sessions_per_s", Json::Num(report.sessions_per_s)),
+            ("tokens_per_s", Json::Num(report.tokens_per_s)),
+            ("verify_calls", Json::Num(report.verify_calls as f64)),
+            ("verify_windows", Json::Num(report.verify_windows as f64)),
+            ("batch_mean", Json::Num(report.batch_mean)),
+            ("batch_p50", Json::Num(report.batch_p50)),
+            ("batch_p95", Json::Num(report.batch_p95)),
+            ("batch_max", Json::Num(report.batch_max)),
+            ("wait_p50_s", Json::Num(report.wait_p50_s)),
+            ("wait_p99_s", Json::Num(report.wait_p99_s)),
+            ("peak_backlog", Json::Num(report.peak_backlog as f64)),
+            ("enqueue_refused", Json::Num(report.enqueue_refused as f64)),
+            ("live_peak", Json::Num(report.live_peak as f64)),
+            ("grants_seen", Json::Num(report.grants_seen as f64)),
+            ("discarded", Json::Num(report.discarded as f64)),
+            ("grant_round_max_bits", Json::Num(report.grant_round_max_bits as f64)),
+        ]);
+        std::fs::write(&metrics_json, j.to_string_pretty())?;
+        eprintln!("metrics: {metrics_json}");
+    }
     Ok(())
 }
 

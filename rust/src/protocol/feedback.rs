@@ -49,10 +49,11 @@ pub const MAX_EXTS: usize = (1 << EXT_COUNT_BITS) - 1;
 pub const MAX_EXT_WIDTH: usize = 56;
 
 /// Fair-share admission grant: `scale * pool / live` sessions, floored
-/// at `min_bits` and capped at the wire-representable maximum.  Shared
-/// by the fleet verifier (which passes a backlog-pressure `scale`) and
-/// the TCP wire server (`scale = 1.0` — the threaded server has no
-/// verify queue to measure), so the two admission controllers cannot
+/// at `min_bits` and capped at the wire-representable maximum.  Both the
+/// fleet verifier and the TCP wire server reach this through one
+/// [`serve::VerifyQueue`](crate::serve::VerifyQueue), which passes
+/// `scale = congestion_depth / backlog` once its pending queue grows
+/// past the congestion threshold — the two admission controllers cannot
 /// drift apart on the arithmetic.
 pub fn fair_share_grant(pool: u32, live_sessions: usize, min_bits: u32, scale: f64) -> u32 {
     let floor = min_bits.min(MAX_GRANT_BITS) as f64;

@@ -1,0 +1,278 @@
+//! Socket-driving load generator: the fleet simulator's many-session
+//! story, replayed against the *real* sharded TCP endpoint.
+//!
+//! `run_soak` binds a [`WireServer`](super::WireServer), spawns a pool
+//! of loopback [`WireEdge`](crate::server::wire::WireEdge) clients
+//! (hundreds to thousands of sessions, `concurrency` live at a time),
+//! and folds the server's shared-queue metrics into one
+//! [`SoakReport`]: sessions/sec, the coalesced verify batch-size
+//! distribution, and queue-wait percentiles versus live-session count.
+//! The `serving_soak` bench sweeps live-session counts over this and
+//! writes `BENCH_serving.json`; the CI smoke job replays a small grid.
+
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::control::AdaptiveMode;
+use crate::model::synthetic::SyntheticDraft;
+use crate::protocol::StreamTransport;
+use crate::server::wire::{WireEdge, WireEdgeConfig};
+use crate::sqs::Policy;
+use crate::util::stats::Summary;
+
+use super::{WireServer, WireServerConfig};
+
+/// Load-generator knobs (the server side is a [`WireServerConfig`]).
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// total sessions to run
+    pub sessions: usize,
+    /// client threads = live sessions at a time (each runs its share
+    /// of the total back to back)
+    pub concurrency: usize,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    /// drafts kept in flight per session (>= 2 negotiates v3)
+    pub pipeline_depth: usize,
+    /// token-tree branching (>= 2 with pipelining negotiates v4)
+    pub tree_branching: usize,
+    pub policy: Policy,
+    pub ell: u32,
+    pub budget_bits: usize,
+    pub adaptive: AdaptiveMode,
+    pub seed: u64,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            sessions: 64,
+            concurrency: 64,
+            prompt: vec![3, 1, 4],
+            max_new_tokens: 24,
+            pipeline_depth: 2,
+            tree_branching: 1,
+            policy: Policy::KSqs { k: 8 },
+            ell: 100,
+            budget_bits: 5000,
+            adaptive: AdaptiveMode::Off,
+            seed: 0,
+        }
+    }
+}
+
+/// What a soak run measured, client and server side combined.
+#[derive(Clone, Debug)]
+pub struct SoakReport {
+    pub sessions: usize,
+    pub completed: usize,
+    pub failed: usize,
+    /// committed tokens summed over completed sessions
+    pub tokens: usize,
+    pub wall_s: f64,
+    pub sessions_per_s: f64,
+    pub tokens_per_s: f64,
+    /// per-session wall latency (connect -> Bye), seconds
+    pub session_latency: Summary,
+    /// feedback frames that carried a budget grant, summed
+    pub grants_seen: usize,
+    /// stale speculative batches the server discarded, summed
+    pub discarded: usize,
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    /// shared-queue telemetry (server side)
+    pub verify_calls: u64,
+    pub verify_windows: u64,
+    pub batch_mean: f64,
+    pub batch_p50: f64,
+    pub batch_p95: f64,
+    pub batch_max: f64,
+    pub wait_p50_s: f64,
+    pub wait_p99_s: f64,
+    pub peak_backlog: u64,
+    pub enqueue_refused: u64,
+    /// high-water mark of concurrently live sessions (gauge peak)
+    pub live_peak: i64,
+    /// max over grant emissions of `grant * live` (pool conservation)
+    pub grant_round_max_bits: u64,
+}
+
+impl SoakReport {
+    /// One-paragraph human rendering for CLI / bench logs.
+    pub fn render(&self) -> String {
+        format!(
+            "soak: {}/{} sessions ok ({} failed) in {:.2}s  ({:.1} sessions/s, \
+             {:.0} tok/s)\n\
+             verify: {} calls / {} windows  batch mean {:.2} p50 {:.1} p95 {:.1} \
+             max {:.0}\n\
+             queue: wait p50 {:.1}us p99 {:.1}us  peak backlog {}  refused {}\n\
+             sessions: live peak {}  latency p50 {:.1}ms p99 {:.1}ms  \
+             grants {}  discards {}",
+            self.completed,
+            self.sessions,
+            self.failed,
+            self.wall_s,
+            self.sessions_per_s,
+            self.tokens_per_s,
+            self.verify_calls,
+            self.verify_windows,
+            self.batch_mean,
+            self.batch_p50,
+            self.batch_p95,
+            self.batch_max,
+            self.wait_p50_s * 1e6,
+            self.wait_p99_s * 1e6,
+            self.peak_backlog,
+            self.enqueue_refused,
+            self.live_peak,
+            self.session_latency.p50() * 1e3,
+            self.session_latency.p99() * 1e3,
+            self.grants_seen,
+            self.discarded,
+        )
+    }
+}
+
+/// One client session against the live endpoint.  Returns (new tokens,
+/// grants seen, discards seen, wall seconds).
+fn run_one(
+    addr: std::net::SocketAddr,
+    world: &crate::model::synthetic::SyntheticWorld,
+    cfg: &SoakConfig,
+    sid: u64,
+) -> Result<(usize, usize, usize, f64)> {
+    // the listener's accept backlog can lag hundreds of simultaneous
+    // connects; retry briefly instead of failing the session
+    let mut stream = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    let stream = stream.ok_or_else(|| anyhow::anyhow!("connect retries exhausted"))?;
+    stream.set_nodelay(true).ok();
+    let mut transport = StreamTransport::new(stream);
+    let draft = SyntheticDraft::new(world.clone(), 100_000);
+    let edge_cfg = WireEdgeConfig {
+        policy: cfg.policy,
+        ell: cfg.ell,
+        budget_bits: cfg.budget_bits,
+        adaptive: cfg.adaptive,
+        pipeline_depth: cfg.pipeline_depth,
+        tree_branching: cfg.tree_branching,
+        seed: cfg.seed ^ sid.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x50AC,
+        ..Default::default()
+    };
+    let mut edge = WireEdge::new(draft, edge_cfg);
+    let t0 = Instant::now();
+    let report = edge.run(&mut transport, &cfg.prompt, cfg.max_new_tokens)?;
+    Ok((report.new_tokens(), report.grants_seen, report.discarded, t0.elapsed().as_secs_f64()))
+}
+
+/// Bind the server, drive `cfg.sessions` loopback sessions through it,
+/// and join everything into a [`SoakReport`].
+pub fn run_soak(mut server_cfg: WireServerConfig, cfg: SoakConfig) -> Result<SoakReport> {
+    assert!(cfg.sessions > 0 && cfg.concurrency > 0);
+    // the server serves exactly the soak's session count then exits
+    server_cfg.max_conns = Some(cfg.sessions);
+    let server = WireServer::bind(server_cfg)?;
+    let addr = server.local_addr()?;
+    let world = server.world().clone();
+    let stats = server.stats();
+    let metrics = server.metrics();
+    let server_thread = std::thread::spawn(move || server.serve());
+
+    let t0 = Instant::now();
+    let workers = cfg.concurrency.min(cfg.sessions);
+    let (tx, rx) = mpsc::channel::<Result<(usize, usize, usize, f64)>>();
+    let mut clients = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let tx = tx.clone();
+        let world = world.clone();
+        let cfg = cfg.clone();
+        clients.push(std::thread::spawn(move || {
+            // session w, w + workers, w + 2*workers, ... keeps every
+            // worker busy until the tail
+            let mut sid = w;
+            while sid < cfg.sessions {
+                let r = run_one(addr, &world, &cfg, sid as u64 + 1);
+                if tx.send(r).is_err() {
+                    return;
+                }
+                sid += workers;
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut tokens = 0usize;
+    let mut grants_seen = 0usize;
+    let mut discarded = 0usize;
+    let mut session_latency = Summary::new();
+    for r in rx {
+        match r {
+            Ok((toks, grants, disc, secs)) => {
+                completed += 1;
+                tokens += toks;
+                grants_seen += grants;
+                discarded += disc;
+                session_latency.add(secs);
+            }
+            Err(e) => {
+                failed += 1;
+                crate::debug!("soak session failed: {e}");
+            }
+        }
+    }
+    for c in clients {
+        let _ = c.join();
+    }
+    // a failed session may never have reached the accept loop; feed the
+    // server dummy connects so it still reaches max_conns and returns
+    // (they handshake nothing and close immediately)
+    for _ in 0..failed {
+        if let Ok(s) = TcpStream::connect(addr) {
+            drop(s);
+        }
+    }
+    server_thread.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let batch = metrics.histogram("verify.batch_size");
+    let wait = metrics.histogram("verify.queue_wait");
+    Ok(SoakReport {
+        sessions: cfg.sessions,
+        completed,
+        failed,
+        tokens,
+        wall_s,
+        sessions_per_s: completed as f64 / wall_s,
+        tokens_per_s: tokens as f64 / wall_s,
+        session_latency,
+        grants_seen,
+        discarded,
+        uplink_bits: stats.uplink_bits.load(std::sync::atomic::Ordering::Relaxed),
+        downlink_bits: stats.downlink_bits.load(std::sync::atomic::Ordering::Relaxed),
+        verify_calls: metrics.counter("verify.calls"),
+        verify_windows: metrics.counter("verify.windows"),
+        batch_mean: batch.as_ref().map_or(0.0, |h| h.mean()),
+        batch_p50: batch.as_ref().map_or(0.0, |h| h.p50()),
+        batch_p95: batch.as_ref().map_or(0.0, |h| h.p95()),
+        batch_max: batch.as_ref().map_or(0.0, |h| h.max()),
+        wait_p50_s: wait.as_ref().map_or(0.0, |h| h.p50()),
+        wait_p99_s: wait.as_ref().map_or(0.0, |h| h.p99()),
+        peak_backlog: metrics.counter("verify.peak_backlog"),
+        enqueue_refused: metrics.counter("verify.enqueue_refused"),
+        live_peak: metrics.gauge("sessions.live").map_or(0, |g| g.peak()),
+        grant_round_max_bits: metrics.counter("verify.grant_round_max_bits"),
+    })
+}

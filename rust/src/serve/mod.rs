@@ -1,0 +1,702 @@
+//! Many-session serving tier: a sharded TCP wire endpoint with
+//! cross-session continuous verify batching.
+//!
+//! The thread-per-session `WireServer` verified each session's windows
+//! in isolation; this tier replaces it with three cooperating pools
+//! (DESIGN.md §14):
+//!
+//! - an **accept loop** (the caller's thread) that assigns connection
+//!   ids and pins each connection to a shard (`id % shards`),
+//! - **shard workers**, each owning a session table of nonblocking
+//!   sockets: they reassemble length-prefixed frames, run the
+//!   per-session protocol state machine ([`session::Session`]), and
+//!   feed verify jobs into the shared queue,
+//! - **verify workers** draining one [`VerifyQueue`] of jobs from *all*
+//!   live sessions: a free slot coalesces up to `verify_batch` windows
+//!   (continuous batching), pays the modeled service time once, and
+//!   routes each verdict back to its shard.
+//!
+//! The queue is the exact admission/coalescing core the fleet
+//! simulator's `CloudVerifier` wraps, so congestion bits and fair-share
+//! grants follow one implementation — including the
+//! `congestion_depth / backlog` scaling the threaded server used to
+//! skip.  Overload policy: new sessions are rejected at the handshake
+//! (`max_sessions`), admitted sessions only ever *wait* (bounded queue
+//! refusals keep frames in the session's FIFO), and the only frames
+//! dropped unverified are stale-epoch speculation the client has
+//! already rolled back.
+
+pub mod load;
+pub mod queue;
+mod session;
+
+pub use load::{run_soak, SoakConfig, SoakReport};
+pub use queue::{QueueConfig, QueueMetrics, VerifyQueue};
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cloud::CloudNode;
+use crate::coordinator::{linear_bounds, log_bounds, Gauge, Metrics};
+use crate::model::synthetic::{SyntheticTarget, SyntheticWorld};
+use crate::protocol::{negotiate, Ext, Hello, HelloAck};
+
+use session::{run_verify, Session, SessionCtx, SessionEvent, VerifyCtx, VerifyDone, VerifyJob};
+
+/// Aggregate wire-endpoint counters, shared across shard threads.
+/// This is the wall-clock domain: the counters are exact, but they are
+/// *not* part of the determinism contract the virtual-time tracers pin.
+#[derive(Default)]
+pub struct WireStats {
+    /// sessions served to completion (success or error)
+    pub sessions: AtomicU64,
+    /// uplink frames received mid-session (drafts + control)
+    pub frames: AtomicU64,
+    /// target-model verify calls (stale discards excluded)
+    pub verify_calls: AtomicU64,
+    /// stale sequenced/tree frames discarded by epoch
+    pub discards: AtomicU64,
+    /// stream bits up/down across all sessions (length prefixes incl.)
+    pub uplink_bits: AtomicU64,
+    pub downlink_bits: AtomicU64,
+    /// flight-recorder events shed before export (drivers fold
+    /// `RingTracer::dropped()` in via [`WireStats::note_trace_dropped`]);
+    /// nonzero means recorded windows in the log are truncated
+    pub trace_dropped: AtomicU64,
+}
+
+impl WireStats {
+    /// One-line snapshot for the server log.
+    pub fn snapshot(&self) -> String {
+        format!(
+            "sessions={} frames={} verifies={} discards={} up_bits={} down_bits={} \
+             trace_dropped={}",
+            self.sessions.load(Ordering::Relaxed),
+            self.frames.load(Ordering::Relaxed),
+            self.verify_calls.load(Ordering::Relaxed),
+            self.discards.load(Ordering::Relaxed),
+            self.uplink_bits.load(Ordering::Relaxed),
+            self.downlink_bits.load(Ordering::Relaxed),
+            self.trace_dropped.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Fold a bounded recorder's shed-event count into the snapshot.
+    pub fn note_trace_dropped(&self, n: u64) {
+        self.trace_dropped.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// How many uplink frames between periodic metrics lines in the log.
+const SNAPSHOT_EVERY: u64 = 64;
+
+/// How long a closing connection may keep flushing its tail output
+/// (nacks, final feedback) before the shard gives up on the peer.
+const CLOSE_FLUSH: Duration = Duration::from_millis(100);
+
+/// Shard idle backoff: how long to block on the completion channel when
+/// there is nothing to read, write, or verify.
+const IDLE_WAIT: Duration = Duration::from_micros(500);
+
+/// Wire-endpoint configuration.
+#[derive(Clone, Debug)]
+pub struct WireServerConfig {
+    pub addr: String,
+    /// synthetic-world parameters (must match the clients' draft models)
+    pub vocab: usize,
+    pub mismatch: f64,
+    pub world_seed: u64,
+    /// shared SLM/LLM sampling temperature
+    pub temp: f32,
+    /// verify-window capacity per draft frame
+    pub max_batch_drafts: usize,
+    /// target-context capacity per session
+    pub max_len: usize,
+    /// largest lattice resolution accepted from a client Hello (the
+    /// binomial tables are dense in ell; see `protocol::MAX_ELL`)
+    pub max_ell: u32,
+    /// serve at most this many connections then return (None = forever)
+    pub max_conns: Option<usize>,
+    /// verify-queue backlog at/above which feedback carries the
+    /// congestion bit (0 = always congested; useful in tests).  Same
+    /// queue-depth semantics as `fleet::VerifierConfig` now that both
+    /// paths share one [`VerifyQueue`].
+    pub congestion_depth: usize,
+    /// per-round uplink budget granted on congested feedback frames
+    pub grant_bits: Option<u32>,
+    /// adaptive grants: an aggregate uplink-bit pool divided fairly
+    /// across live sessions (overrides `grant_bits` when set), scaled
+    /// down by `congestion_depth / backlog` under queue pressure — the
+    /// same rule as `fleet::VerifierConfig::grant_pool_bits`.
+    pub grant_pool_bits: Option<u32>,
+    /// floor for adaptive grants, bits
+    pub grant_min_bits: u32,
+    pub seed: u64,
+    /// shard workers owning the session tables (sessions pin by id)
+    pub shards: usize,
+    /// verify workers draining the shared queue (queue concurrency)
+    pub verify_workers: usize,
+    /// max windows coalesced into one verify call
+    pub verify_batch: usize,
+    /// modeled verify service time `base + per_token * Σ tokens`: when
+    /// either term is nonzero the worker sleeps it (capped at 250 ms),
+    /// making coalescing observable on loopback soaks.  Zero (default)
+    /// verifies at full speed.
+    pub verify_base_s: f64,
+    pub verify_token_s: f64,
+    /// bound on the shared verify backlog (0 = unbounded).  Refused
+    /// enqueues stay in the session's own FIFO — backpressure, not loss.
+    pub max_backlog: usize,
+    /// live-session cap: Hellos beyond it are nacked (0 = unbounded)
+    pub max_sessions: usize,
+}
+
+impl Default for WireServerConfig {
+    fn default() -> Self {
+        WireServerConfig {
+            addr: "127.0.0.1:0".into(),
+            vocab: 64,
+            mismatch: 0.6,
+            world_seed: 2024,
+            temp: 0.9,
+            max_batch_drafts: 15,
+            max_len: 100_000,
+            max_ell: 10_000,
+            max_conns: None,
+            congestion_depth: 2,
+            grant_bits: None,
+            grant_pool_bits: None,
+            grant_min_bits: 64,
+            seed: 0,
+            shards: 2,
+            verify_workers: 1,
+            verify_batch: 8,
+            verify_base_s: 0.0,
+            verify_token_s: 0.0,
+            max_backlog: 0,
+            max_sessions: 0,
+        }
+    }
+}
+
+/// State shared by the accept loop, every shard, and every verify
+/// worker: the one queue, its wakeup, and the live-session gauge.
+struct Shared {
+    queue: Mutex<VerifyQueue<VerifyJob>>,
+    cv: Condvar,
+    live: Gauge,
+    shutdown: AtomicBool,
+    t0: Instant,
+    temp: f32,
+    /// sleep the modeled service time (verify_base_s/verify_token_s set)
+    pace: bool,
+}
+
+impl Shared {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// A bound wire endpoint (bind first so tests can read the OS-assigned
+/// port before serving).
+pub struct WireServer {
+    listener: TcpListener,
+    cfg: WireServerConfig,
+    world: SyntheticWorld,
+    stats: Arc<WireStats>,
+    metrics: Arc<Metrics>,
+}
+
+impl WireServer {
+    pub fn bind(cfg: WireServerConfig) -> Result<WireServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.world_seed);
+        Ok(WireServer {
+            listener,
+            cfg,
+            world,
+            stats: Arc::new(WireStats::default()),
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// Shared counters (clone the Arc before `serve` consumes self).
+    pub fn stats(&self) -> Arc<WireStats> {
+        self.stats.clone()
+    }
+
+    /// The metrics registry the shared queue feeds (`verify.batch_size`,
+    /// `verify.queue_wait` histograms, `sessions.live` gauge; final
+    /// queue counters on exit).  Same `--metrics-json` schema as the
+    /// sim paths.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// The world clients must build their draft models from.
+    pub fn world(&self) -> &SyntheticWorld {
+        &self.world
+    }
+
+    /// Accept and serve connections through the shard/verify pools.
+    /// Returns after `max_conns` sessions, with every pool joined and
+    /// the final queue counters exported into the metrics registry.
+    pub fn serve(self) -> Result<()> {
+        let WireServer { listener, cfg, world, stats, metrics } = self;
+        let mut q = VerifyQueue::new(QueueConfig {
+            concurrency: cfg.verify_workers.max(1),
+            batch_max: cfg.verify_batch.max(1),
+            base_s: cfg.verify_base_s,
+            per_token_s: cfg.verify_token_s,
+            congestion_depth: cfg.congestion_depth,
+            grant_bits: cfg.grant_bits,
+            grant_pool_bits: cfg.grant_pool_bits,
+            grant_min_bits: cfg.grant_min_bits,
+            max_backlog: cfg.max_backlog,
+        });
+        q.set_metrics(QueueMetrics {
+            batch_size: metrics
+                .histogram_handle("verify.batch_size", &linear_bounds(0.0, 32.0, 32)),
+            queue_wait: metrics.histogram_handle("verify.queue_wait", &log_bounds(1e-6, 10.0, 6)),
+        });
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(q),
+            cv: Condvar::new(),
+            live: metrics.gauge_handle("sessions.live"),
+            shutdown: AtomicBool::new(false),
+            t0: Instant::now(),
+            temp: cfg.temp,
+            pace: cfg.verify_base_s > 0.0 || cfg.verify_token_s > 0.0,
+        });
+
+        let workers: Vec<_> = (0..cfg.verify_workers.max(1))
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || verify_worker(&sh))
+            })
+            .collect();
+
+        let n_shards = cfg.shards.max(1);
+        let mut shard_txs = Vec::with_capacity(n_shards);
+        let mut shard_handles = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<(u64, TcpStream)>();
+            shard_txs.push(tx);
+            let sh = shared.clone();
+            let cfg = cfg.clone();
+            let world = world.clone();
+            let stats = stats.clone();
+            shard_handles.push(std::thread::spawn(move || {
+                shard_loop(&rx, &sh, &cfg, &world, &stats)
+            }));
+        }
+
+        // the accept loop: connection ids count from 1 (the same
+        // per-connection seed schedule as the thread-per-session server)
+        let mut served = 0u64;
+        for stream in listener.incoming() {
+            let stream = stream?;
+            served += 1;
+            let _ = shard_txs[(served % n_shards as u64) as usize].send((served, stream));
+            if let Some(max) = cfg.max_conns {
+                if served as usize >= max {
+                    break;
+                }
+            }
+        }
+        drop(shard_txs);
+        for h in shard_handles {
+            let _ = h.join();
+        }
+        shared.shutdown.store(true, Ordering::SeqCst);
+        shared.cv.notify_all();
+        for h in workers {
+            let _ = h.join();
+        }
+
+        // fold the queue's lifetime counters into the exported registry
+        let q = shared.queue.lock().unwrap();
+        metrics.counter_handle("verify.calls").inc(q.calls);
+        metrics.counter_handle("verify.windows").inc(q.windows);
+        metrics.counter_handle("verify.enqueue_refused").inc(q.refused);
+        metrics.counter_handle("verify.peak_backlog").inc(q.peak_queue as u64);
+        metrics.counter_handle("verify.grant_round_max_bits").inc(q.grant_round_max_bits);
+        crate::debug!("wire metrics: {}", stats.snapshot());
+        Ok(())
+    }
+}
+
+/// Drain the shared queue: coalesce, pay the modeled service time once
+/// per call, verify each job against its own context, route verdicts
+/// home.  Feedback extensions reflect the backlog left *behind* the
+/// call (the fleet verifier's ordering).
+fn verify_worker(shared: &Shared) {
+    loop {
+        let (batch, exts, svc) = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.slot_free() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) && q.backlog() == 0 {
+                    return;
+                }
+                let (guard, _timeout) =
+                    shared.cv.wait_timeout(q, Duration::from_millis(20)).unwrap();
+                q = guard;
+            }
+            let now = shared.now();
+            let batch = q.take_batch(now);
+            let tokens: usize = batch.iter().map(VerifyJob::window_tokens).sum();
+            let svc = q.service_s(tokens);
+            let live = shared.live.get().max(0) as usize;
+            let exts = q.feedback_exts(live);
+            (batch, exts, svc)
+        };
+        if shared.pace && svc > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(svc.min(0.25)));
+        }
+        for job in batch {
+            let done_tx = job.done_tx.clone();
+            let done = run_verify(job, exts.clone(), shared.temp);
+            // a send error means the owning shard already exited; the
+            // context is simply dropped with the session gone
+            let _ = done_tx.send(done);
+        }
+        shared.queue.lock().unwrap().release_slot();
+        shared.cv.notify_all();
+    }
+}
+
+/// Everything a session may ask of its shard (see [`SessionCtx`]).
+struct ShardCtx<'a> {
+    shared: &'a Shared,
+    cfg: &'a WireServerConfig,
+    world: &'a SyntheticWorld,
+    stats: &'a WireStats,
+    done_tx: Sender<VerifyDone>,
+}
+
+impl SessionCtx for ShardCtx<'_> {
+    fn exts(&self) -> Vec<Ext> {
+        let live = self.shared.live.get().max(0) as usize;
+        self.shared.queue.lock().unwrap().feedback_exts(live)
+    }
+
+    fn submit(&self, job: VerifyJob) -> Result<(), VerifyJob> {
+        let now = self.shared.now();
+        let r = self.shared.queue.lock().unwrap().try_enqueue(job, now);
+        if r.is_ok() {
+            self.shared.cv.notify_one();
+        }
+        r
+    }
+
+    fn done_tx(&self) -> Sender<VerifyDone> {
+        self.done_tx.clone()
+    }
+
+    fn admit_hello(&self, hello: &Hello) -> Result<HelloAck, String> {
+        if hello.vocab as usize != self.world.vocab {
+            return Err(format!(
+                "client vocab {} != server world vocab {}",
+                hello.vocab, self.world.vocab
+            ));
+        }
+        if hello.ell > self.cfg.max_ell {
+            return Err(format!(
+                "client ell {} exceeds the server cap {}",
+                hello.ell, self.cfg.max_ell
+            ));
+        }
+        // `live` counts this connection already (intake incremented it)
+        if self.cfg.max_sessions > 0 && self.shared.live.get() > self.cfg.max_sessions as i64 {
+            return Err(format!("server at max_sessions={}", self.cfg.max_sessions));
+        }
+        negotiate(hello)
+    }
+
+    fn build_vctx(&self, seed: u64, prompt: &[u16]) -> Result<VerifyCtx, String> {
+        let target =
+            SyntheticTarget::new(self.world.clone(), self.cfg.max_batch_drafts, self.cfg.max_len);
+        let mut cloud = CloudNode::new(target, seed ^ 0xC);
+        cloud.start(prompt).map_err(|e| e.to_string())?;
+        Ok(VerifyCtx { cloud, prev: *prompt.last().expect("prompt checked non-empty") })
+    }
+
+    fn note_frame(&self) {
+        let n = self.stats.frames.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % SNAPSHOT_EVERY == 0 {
+            crate::debug!("wire metrics: {}", self.stats.snapshot());
+        }
+    }
+
+    fn note_discard(&self) {
+        self.stats.discards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_verify(&self) {
+        self.stats.verify_calls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One connection in a shard's session table.
+struct Conn {
+    stream: TcpStream,
+    session: Session,
+    /// unparsed inbound bytes (length-prefix reassembly)
+    rd: Vec<u8>,
+    /// pending outbound bytes and the flush cursor into them
+    wr: Vec<u8>,
+    wr_pos: usize,
+    closing: bool,
+    error: Option<String>,
+    close_deadline: Option<Instant>,
+    up_bits: u64,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, session: Session) -> Conn {
+        Conn {
+            stream,
+            session,
+            rd: Vec::new(),
+            wr: Vec::new(),
+            wr_pos: 0,
+            closing: false,
+            error: None,
+            close_deadline: None,
+            up_bits: 0,
+        }
+    }
+
+    fn apply(&mut self, ev: SessionEvent) {
+        match ev {
+            SessionEvent::Continue => {}
+            SessionEvent::Close => self.begin_close(None),
+            SessionEvent::Error(e) => self.begin_close(Some(e)),
+        }
+    }
+
+    fn begin_close(&mut self, error: Option<String>) {
+        if !self.closing {
+            self.closing = true;
+            self.close_deadline = Some(Instant::now() + CLOSE_FLUSH);
+        }
+        if self.error.is_none() {
+            self.error = error;
+        }
+    }
+
+    /// One nonblocking service pass: retry a backpressured pump, read +
+    /// parse inbound frames, flush outbound bytes.
+    fn poll(&mut self, ctx: &dyn SessionCtx) {
+        if !self.closing && self.session.wants_pump() {
+            let ev = self.session.pump(ctx, &mut self.wr);
+            self.apply(ev);
+        }
+        if !self.closing {
+            self.read_some();
+            self.parse(ctx);
+        }
+        self.flush();
+    }
+
+    fn read_some(&mut self) {
+        let mut buf = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    // peer closed; whatever was parsed still completes
+                    self.begin_close(None);
+                    break;
+                }
+                Ok(n) => {
+                    self.rd.extend_from_slice(&buf[..n]);
+                    if n < buf.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.begin_close(Some(format!("read: {e}")));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Reassemble 16-bit big-endian length-prefixed frames (the
+    /// `StreamTransport` framing) and feed them to the session.
+    fn parse(&mut self, ctx: &dyn SessionCtx) {
+        let mut off = 0usize;
+        while !self.closing {
+            if self.rd.len() < off + 2 {
+                break;
+            }
+            let n = u16::from_be_bytes([self.rd[off], self.rd[off + 1]]) as usize;
+            if self.rd.len() < off + 2 + n {
+                break;
+            }
+            let payload: Vec<u8> = self.rd[off + 2..off + 2 + n].to_vec();
+            off += 2 + n;
+            self.up_bits += ((2 + n) * 8) as u64;
+            let ev = self.session.on_frame(&payload, ctx, &mut self.wr);
+            self.apply(ev);
+        }
+        if off > 0 {
+            self.rd.drain(..off);
+        }
+    }
+
+    fn flush(&mut self) {
+        while self.wr_pos < self.wr.len() {
+            match self.stream.write(&self.wr[self.wr_pos..]) {
+                Ok(0) => break,
+                Ok(n) => self.wr_pos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // peer gone: drop the tail, the close path handles it
+                    self.wr_pos = self.wr.len();
+                    break;
+                }
+            }
+        }
+        if self.wr_pos > 0 && self.wr_pos == self.wr.len() {
+            self.wr.clear();
+            self.wr_pos = 0;
+        }
+    }
+
+    /// Ready to leave the table?  A clean close waits for the tail
+    /// output (nack / final feedback) to flush, bounded by the close
+    /// deadline; an in-flight verify job keeps the conn resident so the
+    /// completion can still find it.
+    fn finished(&self) -> bool {
+        if !self.closing {
+            return false;
+        }
+        if self.session.job_outstanding() {
+            return false;
+        }
+        self.wr_pos >= self.wr.len() || self.close_deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+fn deliver(conns: &mut HashMap<u64, Conn>, done: VerifyDone, ctx: &dyn SessionCtx) {
+    if let Some(conn) = conns.get_mut(&done.conn) {
+        let ev = conn.session.on_verify_done(done, ctx, &mut conn.wr);
+        conn.apply(ev);
+        conn.flush();
+    }
+    // else: the conn died while its job was out; the context drops here
+}
+
+/// One shard: a session table of nonblocking sockets multiplexed on a
+/// poll loop, with the completion channel doubling as the idle wakeup.
+fn shard_loop(
+    intake: &Receiver<(u64, TcpStream)>,
+    shared: &Shared,
+    cfg: &WireServerConfig,
+    world: &SyntheticWorld,
+    stats: &WireStats,
+) {
+    let (done_tx, done_rx) = mpsc::channel::<VerifyDone>();
+    let ctx = ShardCtx { shared, cfg, world, stats, done_tx };
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut intake_open = true;
+    loop {
+        while intake_open {
+            match intake.try_recv() {
+                Ok((id, stream)) => {
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // dead on arrival
+                    }
+                    shared.live.add(1);
+                    let seed = cfg.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15);
+                    conns.insert(id, Conn::new(stream, Session::new(id, seed)));
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => intake_open = false,
+            }
+        }
+        while let Ok(done) = done_rx.try_recv() {
+            deliver(&mut conns, done, &ctx);
+        }
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        for id in ids {
+            let finished = {
+                let conn = conns.get_mut(&id).expect("id from the table");
+                conn.poll(&ctx);
+                conn.finished()
+            };
+            if finished {
+                let conn = conns.remove(&id).expect("checked");
+                finish_conn(conn, shared, stats);
+            }
+        }
+        if conns.is_empty() && !intake_open {
+            break;
+        }
+        // idle wait: a verify completion is the usual wakeup; the
+        // timeout bounds the latency of fresh socket bytes and intake
+        if let Ok(done) = done_rx.recv_timeout(IDLE_WAIT) {
+            deliver(&mut conns, done, &ctx);
+        }
+    }
+}
+
+/// Fold a departed connection into the aggregate stats and release its
+/// live-session slot promptly (departed sessions must stop diluting the
+/// fair-share grant pool).
+fn finish_conn(conn: Conn, shared: &Shared, stats: &WireStats) {
+    let _ = conn.stream.shutdown(Shutdown::Both);
+    stats.uplink_bits.fetch_add(conn.up_bits, Ordering::Relaxed);
+    stats.downlink_bits.fetch_add(conn.session.down_bits, Ordering::Relaxed);
+    stats.sessions.fetch_add(1, Ordering::Relaxed);
+    shared.live.sub(1);
+    crate::debug!("wire metrics: {}", stats.snapshot());
+    if let Some(e) = conn.error {
+        crate::debug!("wire session error: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{RingTracer, TraceData, TraceEvent, Tracer};
+
+    #[test]
+    fn snapshot_surfaces_trace_dropped() {
+        let stats = WireStats::default();
+        assert!(stats.snapshot().contains("trace_dropped=0"));
+        // fold a truncated flight recorder's shed count in, as a
+        // session driver running a bounded RingTracer would
+        let mut ring = RingTracer::new(2);
+        for i in 0..5 {
+            ring.record(TraceEvent {
+                seq: i,
+                t: i as f64,
+                actor: 0,
+                data: TraceData::EpochRollback { epoch: i as u8 },
+            });
+        }
+        stats.note_trace_dropped(ring.dropped());
+        assert!(stats.snapshot().contains("trace_dropped=3"), "{}", stats.snapshot());
+    }
+}

@@ -1,0 +1,246 @@
+//! The shared continuous-batching verify queue: admission (at most
+//! `concurrency` verify calls in flight), batch coalescing (a free slot
+//! takes up to `batch_max` pending windows and serves them together),
+//! and the fair-share grant pool with backlog scaling.
+//!
+//! This is the admission/coalescing core extracted from
+//! `fleet::verifier::CloudVerifier` so the fleet simulator (virtual
+//! time, single thread) and the TCP wire server (wall clock, shard +
+//! worker threads) run the *same* arithmetic: FIFO drain order, the
+//! service-time model `base_s + per_token_s * Σ window tokens`, the
+//! congestion threshold against the pending backlog, and
+//! `fair_share_grant(pool, live, min, congestion_depth / backlog)`.
+//! `CloudVerifier` is now a thin wrapper over `VerifyQueue<usize>`
+//! (device ids); the wire server queues owned verify jobs.  The queue
+//! itself is transport-agnostic and does no locking — callers wrap it in
+//! a `Mutex` when threads share it.
+//!
+//! Timestamps are caller-supplied (`now`), so the fleet feeds virtual
+//! time and the server feeds seconds since start; the optional
+//! [`QueueMetrics`] handles observe batch sizes and queue waits in
+//! whichever clock the caller runs.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::Histogram;
+use crate::protocol::{fair_share_grant, Ext};
+
+/// Verify service-time and admission parameters (the fleet re-exports
+/// this as `VerifierConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    /// max verify calls in flight (cloud replicas / streams / workers)
+    pub concurrency: usize,
+    /// max pending windows coalesced into one call (1 = no batching)
+    pub batch_max: usize,
+    /// fixed seconds per verify call
+    pub base_s: f64,
+    /// seconds per window token in a call
+    pub per_token_s: f64,
+    /// pending-window backlog at/above which feedback frames carry the
+    /// protocol-v2 congestion bit (the verifier sees queue depth before
+    /// any device does — 0 = always congested, useful in tests)
+    pub congestion_depth: usize,
+    /// per-round uplink budget granted on congested feedback frames,
+    /// bits (None: signal congestion only, grant nothing)
+    pub grant_bits: Option<u32>,
+    /// adaptive grants: an aggregate uplink-bit pool per round divided
+    /// fairly across live sessions — the grant each congested feedback
+    /// frame carries is `pool / live`, scaled down further by
+    /// `congestion_depth / backlog` once the queue grows past the
+    /// congestion threshold.  Overrides `grant_bits` when set, turning
+    /// the cloud into an actual admission controller instead of a
+    /// configured constant.
+    pub grant_pool_bits: Option<u32>,
+    /// floor for adaptive grants, bits (keeps starved sessions alive)
+    pub grant_min_bits: u32,
+    /// bound on the pending backlog for `try_enqueue` (0 = unbounded).
+    /// The fleet path enqueues unconditionally; the wire server bounds
+    /// the shared queue and keeps refused frames in their session's
+    /// FIFO (backpressure, never a dropped frame).
+    pub max_backlog: usize,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        // base cost matches exp::synthetic_default's llm_call_s; the
+        // per-token term makes batched calls cost more than lone ones
+        QueueConfig {
+            concurrency: 1,
+            batch_max: 4,
+            base_s: 4.0e-3,
+            per_token_s: 2.0e-4,
+            congestion_depth: 4,
+            grant_bits: None,
+            grant_pool_bits: None,
+            grant_min_bits: 64,
+            max_backlog: 0,
+        }
+    }
+}
+
+/// Optional pre-registered histogram handles the queue feeds on every
+/// `take_batch`: coalesced windows per call and per-item queue wait.
+#[derive(Clone)]
+pub struct QueueMetrics {
+    pub batch_size: Histogram,
+    pub queue_wait: Histogram,
+}
+
+/// Admission state: a FIFO of pending verify items (device ids in the
+/// fleet, owned jobs on the socket path) stamped with their enqueue
+/// time.
+pub struct VerifyQueue<T> {
+    pub cfg: QueueConfig,
+    pending: VecDeque<(T, f64)>,
+    pub in_flight: usize,
+    /// verify calls issued (slots used)
+    pub calls: u64,
+    /// windows served (>= calls when coalescing happens)
+    pub windows: u64,
+    /// busy seconds summed over slots (utilization vs concurrency*horizon)
+    pub busy_s: f64,
+    /// deepest pending backlog reached (queueing-headroom diagnostic)
+    pub peak_queue: usize,
+    /// enqueue attempts refused by the bounded backlog (`max_backlog`)
+    pub refused: u64,
+    /// max over grant emissions of `grant * live` — the pool-conservation
+    /// diagnostic the soak test pins (`Σ issued grants <= pool` per round
+    /// whenever the fair share stays above the floor)
+    pub grant_round_max_bits: u64,
+    metrics: Option<QueueMetrics>,
+}
+
+impl<T> VerifyQueue<T> {
+    pub fn new(cfg: QueueConfig) -> VerifyQueue<T> {
+        assert!(cfg.concurrency >= 1, "verify queue needs >= 1 slot");
+        assert!(cfg.batch_max >= 1, "batch_max must be >= 1");
+        VerifyQueue {
+            cfg,
+            pending: VecDeque::new(),
+            in_flight: 0,
+            calls: 0,
+            windows: 0,
+            busy_s: 0.0,
+            peak_queue: 0,
+            refused: 0,
+            grant_round_max_bits: 0,
+            metrics: None,
+        }
+    }
+
+    /// Install batch-size / queue-wait histogram handles.
+    pub fn set_metrics(&mut self, m: QueueMetrics) {
+        self.metrics = Some(m);
+    }
+
+    /// Pending windows not yet claimed by a call.
+    pub fn backlog(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn enqueue(&mut self, item: T, now: f64) {
+        self.pending.push_back((item, now));
+        self.peak_queue = self.peak_queue.max(self.pending.len());
+    }
+
+    /// Bounded enqueue: refuses (returning the item to the caller) once
+    /// the backlog reaches `max_backlog`.  Refusal is backpressure, not
+    /// loss — the wire server keeps the frame in its session FIFO and
+    /// retries; `refused` counts the pressure events.
+    pub fn try_enqueue(&mut self, item: T, now: f64) -> Result<(), T> {
+        if self.cfg.max_backlog > 0 && self.pending.len() >= self.cfg.max_backlog {
+            self.refused += 1;
+            return Err(item);
+        }
+        self.enqueue(item, now);
+        Ok(())
+    }
+
+    /// Can a new call start right now?
+    pub fn slot_free(&self) -> bool {
+        self.in_flight < self.cfg.concurrency && !self.pending.is_empty()
+    }
+
+    /// Claim up to `batch_max` pending items for one coalesced call,
+    /// observing batch size and per-item queue wait when metrics are
+    /// installed.
+    pub fn take_batch(&mut self, now: f64) -> Vec<T> {
+        let m = self.pending.len().min(self.cfg.batch_max);
+        let mut batch = Vec::with_capacity(m);
+        for (item, enq_t) in self.pending.drain(..m) {
+            if let Some(qm) = &self.metrics {
+                qm.queue_wait.observe((now - enq_t).max(0.0));
+            }
+            batch.push(item);
+        }
+        if !batch.is_empty() {
+            self.in_flight += 1;
+            self.calls += 1;
+            self.windows += batch.len() as u64;
+            if let Some(qm) = &self.metrics {
+                qm.batch_size.observe(batch.len() as f64);
+            }
+        }
+        batch
+    }
+
+    /// Protocol-v2 feedback extensions for verdicts being served right
+    /// now: when the remaining backlog is at/above `congestion_depth`,
+    /// every feedback frame of the batch carries the congestion bit —
+    /// and, when configured, an explicit uplink budget grant that
+    /// `BudgetAimd` consumes directly.  `live_sessions` is the number of
+    /// sessions currently being served: the adaptive grant pool is
+    /// divided fairly across them.
+    pub fn feedback_exts(&mut self, live_sessions: usize) -> Vec<Ext> {
+        let mut exts = Vec::new();
+        if self.pending.len() >= self.cfg.congestion_depth {
+            exts.push(Ext::Congestion(true));
+            if let Some(g) = self.grant_for(live_sessions) {
+                exts.push(Ext::BudgetGrant(g));
+            }
+        }
+        exts
+    }
+
+    /// The per-round uplink budget grant under the current load: the
+    /// fair share of the adaptive pool (scaled down by queue pressure
+    /// past the congestion threshold, floored at `grant_min_bits`), or
+    /// the configured constant, or nothing.
+    pub fn grant_for(&mut self, live_sessions: usize) -> Option<u32> {
+        let Some(pool) = self.cfg.grant_pool_bits else {
+            return self.cfg.grant_bits;
+        };
+        let depth = self.cfg.congestion_depth.max(1) as f64;
+        let backlog = self.pending.len() as f64;
+        // the deeper the backlog, the tighter the admission
+        let scale = if backlog > depth { depth / backlog } else { 1.0 };
+        let g = fair_share_grant(pool, live_sessions, self.cfg.grant_min_bits, scale);
+        self.grant_round_max_bits =
+            self.grant_round_max_bits.max(g as u64 * live_sessions.max(1) as u64);
+        Some(g)
+    }
+
+    /// Modeled service seconds for a call over `total_window_tokens`.
+    pub fn service_s(&mut self, total_window_tokens: usize) -> f64 {
+        let s = self.cfg.base_s + self.cfg.per_token_s * total_window_tokens as f64;
+        self.busy_s += s;
+        s
+    }
+
+    pub fn release_slot(&mut self) {
+        debug_assert!(self.in_flight > 0);
+        self.in_flight -= 1;
+    }
+
+    /// Mean windows per verify call (batching amortization achieved).
+    pub fn mean_batch(&self) -> f64 {
+        if self.calls == 0 { 0.0 } else { self.windows as f64 / self.calls as f64 }
+    }
+
+    /// Fraction of slot-seconds busy over `[0, horizon_s]`.
+    pub fn utilization(&self, horizon_s: f64) -> f64 {
+        let denom = horizon_s * self.cfg.concurrency as f64;
+        if denom > 0.0 { (self.busy_s / denom).min(1.0) } else { 0.0 }
+    }
+}

@@ -1,0 +1,388 @@
+//! Per-connection session state for the sharded wire endpoint, plus the
+//! owned verify jobs that travel through the shared
+//! [`VerifyQueue`](super::VerifyQueue).
+//!
+//! A session moves its verify context (`CloudNode` + last committed
+//! token) *into* each job and gets it back with the verdict, so at most
+//! one verify job per session is ever in flight.  That single invariant
+//! buys per-session FIFO (frames verify in arrival order, as the
+//! thread-per-session server did) while letting jobs from *different*
+//! sessions coalesce into one verify call.  Frames that arrive while a
+//! job is out wait in the session's own backlog — bounded by the
+//! client's negotiated pipeline depth, so no admission bookkeeping is
+//! needed per frame.
+//!
+//! Stale-epoch frames are discarded at dequeue time (after every prior
+//! verdict for the session has been applied), which reproduces the
+//! serial server's epoch semantics exactly.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+
+use crate::cloud::CloudNode;
+use crate::codec::DraftFrame;
+use crate::model::synthetic::SyntheticTarget;
+use crate::protocol::{
+    Control, Ext, FeedbackV2, Frame, Hello, HelloAck, SeqAck, SeqDraft, TreeAck, TreeDraft,
+    WireCodec, MAX_SUPPORTED,
+};
+
+/// The per-session verify state a job carries through the queue.
+pub(crate) struct VerifyCtx {
+    pub cloud: CloudNode<SyntheticTarget>,
+    /// last committed token (the window verifies against it)
+    pub prev: u16,
+}
+
+/// A draft frame awaiting verification, in wire-arrival order.
+pub(crate) enum JobFrame {
+    Plain(DraftFrame),
+    Seq(SeqDraft),
+    Tree(TreeDraft),
+}
+
+impl JobFrame {
+    /// Window tokens for the queue's service-time model (tree frames
+    /// count every node: each is a target forward pass).
+    pub(crate) fn window_tokens(&self) -> usize {
+        match self {
+            JobFrame::Plain(f) => f.tokens.len(),
+            JobFrame::Seq(sd) => sd.frame.tokens.len(),
+            JobFrame::Tree(td) => td.frame.tokens.len(),
+        }
+    }
+}
+
+/// One verify request in the shared queue: the session's context moves
+/// in, the verdict (and the context) come back on `done_tx`.
+pub(crate) struct VerifyJob {
+    pub conn: u64,
+    pub vctx: VerifyCtx,
+    pub frame: JobFrame,
+    pub done_tx: Sender<VerifyDone>,
+}
+
+impl VerifyJob {
+    pub(crate) fn window_tokens(&self) -> usize {
+        self.frame.window_tokens()
+    }
+}
+
+/// Completed verify: routed back to the owning shard by `conn`.
+pub(crate) struct VerifyDone {
+    pub conn: u64,
+    pub vctx: VerifyCtx,
+    pub result: Result<DoneOk, String>,
+}
+
+pub(crate) struct DoneOk {
+    pub fb: FeedbackV2,
+    /// the verdict killed the speculation branch: the session must bump
+    /// its epoch before examining any later frame
+    pub bump_epoch: bool,
+}
+
+/// Run one verify job (worker thread): the exact per-frame arms the
+/// thread-per-session server ran, minus the socket I/O.
+pub(crate) fn run_verify(mut job: VerifyJob, exts: Vec<Ext>, temp: f32) -> VerifyDone {
+    let result = (|| -> Result<DoneOk, String> {
+        match &job.frame {
+            JobFrame::Plain(frame) => {
+                let verdict = job
+                    .vctx
+                    .cloud
+                    .verify_with_prev(frame, job.vctx.prev, temp)
+                    .map_err(|e| e.to_string())?;
+                job.vctx.prev = verdict.committed.last().copied().unwrap_or(job.vctx.prev);
+                Ok(DoneOk { fb: verdict.feedback_v2(exts), bump_epoch: false })
+            }
+            JobFrame::Seq(sd) => {
+                let verdict = job
+                    .vctx
+                    .cloud
+                    .verify_pipelined(&sd.frame, job.vctx.prev, temp)
+                    .map_err(|e| e.to_string())?;
+                job.vctx.prev = verdict.committed.last().copied().unwrap_or(job.vctx.prev);
+                let mut fb = verdict.feedback_v2(exts);
+                fb.exts.push(Ext::Ack(SeqAck { seq: sd.seq, epoch: sd.epoch, discard: false }));
+                Ok(DoneOk { fb, bump_epoch: verdict.rejected })
+            }
+            JobFrame::Tree(td) => {
+                let tv = job
+                    .vctx
+                    .cloud
+                    .verify_tree(td, job.vctx.prev, temp)
+                    .map_err(|e| e.to_string())?;
+                job.vctx.prev = tv.verdict.committed.last().copied().unwrap_or(job.vctx.prev);
+                let mut fb = tv.verdict.feedback_v2(exts);
+                fb.exts.push(Ext::TreeAck(TreeAck {
+                    seq: td.seq,
+                    epoch: td.epoch,
+                    discard: false,
+                    resampled: tv.verdict.rejected,
+                    node: tv.survivor,
+                    depth: tv.depth as u8,
+                }));
+                Ok(DoneOk { fb, bump_epoch: !tv.full_trunk })
+            }
+        }
+    })();
+    VerifyDone { conn: job.conn, vctx: job.vctx, result }
+}
+
+pub(crate) enum Phase {
+    AwaitHello,
+    AwaitPrompt,
+    Streaming,
+}
+
+/// What a session asks its shard to do after handling an input.
+pub(crate) enum SessionEvent {
+    /// keep the connection open
+    Continue,
+    /// drain pending output then close (clean shutdown)
+    Close,
+    /// session error: drain output (a nack may be pending) then close
+    Error(String),
+}
+
+/// Everything the shard gives a session per call: the shared queue
+/// facade plus this shard's completion channel.
+pub(crate) trait SessionCtx {
+    /// feedback extensions reflecting the shared queue's backlog
+    fn exts(&self) -> Vec<Ext>;
+    /// bounded submit; `Err` hands the job back (backpressure)
+    fn submit(&self, job: VerifyJob) -> Result<(), VerifyJob>;
+    /// handle for completions to find their way back to this shard
+    fn done_tx(&self) -> Sender<VerifyDone>;
+    /// admission: protocol validation + the server's vocab/ell caps +
+    /// the live-session cap.  `Err` is the reject reason (nacked).
+    fn admit_hello(&self, hello: &Hello) -> Result<HelloAck, String>;
+    /// build a verify context for an admitted prompt
+    fn build_vctx(&self, seed: u64, prompt: &[u16]) -> Result<VerifyCtx, String>;
+    /// uplink frame accounting (stats + periodic snapshot)
+    fn note_frame(&self);
+    fn note_discard(&self);
+    fn note_verify(&self);
+}
+
+pub(crate) struct Session {
+    pub id: u64,
+    codec: WireCodec,
+    phase: Phase,
+    /// present between jobs; `None` exactly while a job is in flight
+    vctx: Option<VerifyCtx>,
+    epoch: u8,
+    backlog: VecDeque<JobFrame>,
+    bye: bool,
+    seed: u64,
+    /// downlink stream bits emitted (length prefixes included)
+    pub down_bits: u64,
+}
+
+impl Session {
+    pub(crate) fn new(id: u64, seed: u64) -> Session {
+        Session {
+            id,
+            codec: WireCodec::handshake_only(),
+            phase: Phase::AwaitHello,
+            vctx: None,
+            epoch: 0,
+            backlog: VecDeque::new(),
+            bye: false,
+            seed,
+            down_bits: 0,
+        }
+    }
+
+    /// Encode a frame onto the connection's write buffer with the
+    /// 16-bit BE length prefix (`StreamTransport` framing).
+    fn emit(&mut self, frame: &Frame, wr: &mut Vec<u8>) -> Result<(), String> {
+        let (bytes, _bits) = self.codec.encode(frame)?;
+        if bytes.len() > u16::MAX as usize {
+            return Err(format!("frame of {} bytes overflows the length prefix", bytes.len()));
+        }
+        wr.extend_from_slice(&(bytes.len() as u16).to_be_bytes());
+        wr.extend_from_slice(&bytes);
+        self.down_bits += ((2 + bytes.len()) * 8) as u64;
+        Ok(())
+    }
+
+    /// A complete uplink frame arrived (length prefix already stripped).
+    pub(crate) fn on_frame(
+        &mut self,
+        payload: &[u8],
+        ctx: &dyn SessionCtx,
+        wr: &mut Vec<u8>,
+    ) -> SessionEvent {
+        let frame = match self.codec.decode(payload) {
+            Ok(f) => f,
+            Err(e) => return SessionEvent::Error(format!("decode: {e}")),
+        };
+        match self.phase {
+            Phase::AwaitHello => self.on_hello(frame, ctx, wr),
+            Phase::AwaitPrompt => self.on_prompt(frame, ctx),
+            Phase::Streaming => self.on_stream(frame, ctx, wr),
+        }
+    }
+
+    fn on_hello(&mut self, frame: Frame, ctx: &dyn SessionCtx, wr: &mut Vec<u8>) -> SessionEvent {
+        let hello = match frame {
+            Frame::Hello(h) => h,
+            other => return SessionEvent::Error(format!("expected Hello, got {}", other.name())),
+        };
+        // server-side admission on top of protocol validation: one
+        // world, an ell cap bounding the binomial tables, and — new at
+        // this tier — a live-session cap (overload policy: reject at
+        // the door, never shed an admitted session's frames)
+        match ctx.admit_hello(&hello) {
+            Ok(ack) => {
+                if let Err(e) = self.emit(&Frame::HelloAck(ack), wr) {
+                    return SessionEvent::Error(e);
+                }
+                match WireCodec::negotiated(&ack) {
+                    Ok(c) => self.codec = c,
+                    Err(e) => return SessionEvent::Error(e),
+                }
+                self.phase = Phase::AwaitPrompt;
+                SessionEvent::Continue
+            }
+            Err(e) => {
+                // best effort: tell the peer why before closing
+                let nack = HelloAck {
+                    version: MAX_SUPPORTED,
+                    ok: false,
+                    vocab: hello.vocab,
+                    ell: hello.ell,
+                    scheme: hello.scheme,
+                    fixed_k: hello.fixed_k,
+                };
+                let _ = self.emit(&Frame::HelloAck(nack), wr);
+                SessionEvent::Error(format!("handshake rejected: {e}"))
+            }
+        }
+    }
+
+    fn on_prompt(&mut self, frame: Frame, ctx: &dyn SessionCtx) -> SessionEvent {
+        let prompt = match frame {
+            Frame::Control(Control::Prompt(tokens)) => tokens,
+            other => {
+                return SessionEvent::Error(format!("expected Control::Prompt, got {}", other.name()))
+            }
+        };
+        if prompt.is_empty() {
+            return SessionEvent::Error("empty prompt".into());
+        }
+        match ctx.build_vctx(self.seed, &prompt) {
+            Ok(vctx) => {
+                self.vctx = Some(vctx);
+                self.phase = Phase::Streaming;
+                SessionEvent::Continue
+            }
+            Err(e) => SessionEvent::Error(e),
+        }
+    }
+
+    fn on_stream(&mut self, frame: Frame, ctx: &dyn SessionCtx, wr: &mut Vec<u8>) -> SessionEvent {
+        ctx.note_frame();
+        match frame {
+            Frame::Draft(f) => self.backlog.push_back(JobFrame::Plain(f)),
+            Frame::DraftSeq(sd) => self.backlog.push_back(JobFrame::Seq(sd)),
+            Frame::DraftTree(td) => self.backlog.push_back(JobFrame::Tree(td)),
+            Frame::Control(Control::Bye) => {
+                self.bye = true;
+                return self.close_if_drained();
+            }
+            other => {
+                return SessionEvent::Error(format!("unexpected {} frame mid-session", other.name()))
+            }
+        }
+        self.pump(ctx, wr)
+    }
+
+    /// Feed the shared queue while the session's context is home and
+    /// frames wait: discard stale epochs inline, move the context into
+    /// the next live frame, stop on backpressure (the shard retries).
+    pub(crate) fn pump(&mut self, ctx: &dyn SessionCtx, wr: &mut Vec<u8>) -> SessionEvent {
+        while self.vctx.is_some() {
+            let Some(frame) = self.backlog.pop_front() else { break };
+            // stale: drafted on a branch a rejection already killed —
+            // discard unverified, ack the seq so the edge's in-flight
+            // ledger drains.  Congestion/grant extensions still ride the
+            // discard (as on the fleet path).
+            let stale = match &frame {
+                JobFrame::Seq(sd) => {
+                    (sd.epoch != self.epoch).then_some((sd.frame.batch_id, sd.seq, sd.epoch))
+                }
+                JobFrame::Tree(td) => {
+                    (td.epoch != self.epoch).then_some((td.frame.batch_id, td.seq, td.epoch))
+                }
+                JobFrame::Plain(_) => None,
+            };
+            if let Some((batch_id, seq, epoch)) = stale {
+                // the discard echoes the frame's own epoch, as the
+                // serial server did
+                let mut fb = FeedbackV2::discard(batch_id, seq, epoch);
+                fb.exts.extend(ctx.exts());
+                ctx.note_discard();
+                if let Err(e) = self.emit(&Frame::Feedback(fb), wr) {
+                    return SessionEvent::Error(e);
+                }
+                continue;
+            }
+            let vctx = self.vctx.take().expect("checked above");
+            let job = VerifyJob { conn: self.id, vctx, frame, done_tx: ctx.done_tx() };
+            if let Err(job) = ctx.submit(job) {
+                // bounded queue refused: restore state and retry later
+                self.vctx = Some(job.vctx);
+                self.backlog.push_front(job.frame);
+                break;
+            }
+        }
+        self.close_if_drained()
+    }
+
+    /// A verdict came home: apply it, emit the feedback, refill.
+    pub(crate) fn on_verify_done(
+        &mut self,
+        done: VerifyDone,
+        ctx: &dyn SessionCtx,
+        wr: &mut Vec<u8>,
+    ) -> SessionEvent {
+        self.vctx = Some(done.vctx);
+        match done.result {
+            Ok(ok) => {
+                ctx.note_verify();
+                if ok.bump_epoch {
+                    self.epoch = self.epoch.wrapping_add(1);
+                }
+                if let Err(e) = self.emit(&Frame::Feedback(ok.fb), wr) {
+                    return SessionEvent::Error(e);
+                }
+                self.pump(ctx, wr)
+            }
+            Err(e) => SessionEvent::Error(e),
+        }
+    }
+
+    /// A verify job carrying this session's context is out at a worker
+    /// (the shard must keep the connection resident until it returns).
+    pub(crate) fn job_outstanding(&self) -> bool {
+        matches!(self.phase, Phase::Streaming) && self.vctx.is_none()
+    }
+
+    /// The session still owes (or is owed) work?
+    fn close_if_drained(&self) -> SessionEvent {
+        if self.bye && self.backlog.is_empty() && !self.job_outstanding() {
+            SessionEvent::Close
+        } else {
+            SessionEvent::Continue
+        }
+    }
+
+    /// True when a completed verify could unblock this session (the
+    /// shard polls `pump` for sessions with queued frames).
+    pub(crate) fn wants_pump(&self) -> bool {
+        self.vctx.is_some() && !self.backlog.is_empty()
+    }
+}

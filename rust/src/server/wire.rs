@@ -1,8 +1,8 @@
-//! Protocol-v2/v3 TCP endpoint: the paper's edge–cloud split over a
-//! real socket instead of a simulated link.
+//! Protocol-v2/v3/v4 TCP wire layer: the paper's edge–cloud split over
+//! a real socket instead of a simulated link.
 //!
 //! The JSON front-end (`server::serve`) runs the *whole* SD loop
-//! server-side and is a text API.  This endpoint is the wire protocol
+//! server-side and is a text API.  This module is the wire protocol
 //! itself: a remote edge connects, handshakes (`Hello`/`HelloAck`),
 //! initializes its context with `Control::Prompt`, then streams `Draft`
 //! frames and receives v2 `Feedback` frames until `Control::Bye`.  A
@@ -10,381 +10,32 @@
 //! sequenced `DraftSeq` frames on the stream (`pipeline_depth >= 2`);
 //! the server verifies them in stream order, discarding stale epochs.
 //! Both ends speak through [`StreamTransport`] — length-prefixed frames
-//! over the stream — so the server has no codec calls of its own, and
-//! the per-connection ledgers count the actual bytes on the wire.
+//! over the stream — so the per-connection ledgers count the actual
+//! bytes on the wire.
 //!
-//! The downlink is an active control channel: when the number of live
-//! sessions reaches `congestion_depth`, every feedback frame carries the
-//! congestion bit and (when configured) an explicit uplink budget grant,
-//! which an AIMD edge consumes directly (tests/wire_tcp.rs pins the
-//! convergence).  The verify backend is the synthetic world — the same
-//! models the fleet simulator uses — so the endpoint runs anywhere the
-//! test suite does; swapping in the PJRT target is a backend change, not
-//! a protocol one.
+//! The server half lives in [`crate::serve`]: a sharded session table
+//! feeding shared continuous-batching verify queues (DESIGN.md §14),
+//! re-exported here so existing callers keep their import paths.  This
+//! file keeps the edge-side client, [`WireEdge`], which the soak load
+//! generator (`serve::run_soak`) spawns by the hundred against the
+//! sharded endpoint.
+
+pub use crate::serve::{WireServer, WireServerConfig, WireStats};
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cloud::CloudNode;
 use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop};
 use crate::edge::EdgeNode;
-use crate::model::synthetic::{SyntheticTarget, SyntheticWorld};
 use crate::model::DraftLm;
 use crate::protocol::{
-    fair_share_grant, negotiate, Control, Direction, Ext, FeedbackV2, Frame, HelloAck, SeqAck,
-    SeqDraft, StreamTransport, Transport, TreeAck, TreeDraft, WireCodec, MAX_SUPPORTED,
-    NO_PARENT, PROTOCOL_V3, PROTOCOL_V4,
+    Control, Direction, Frame, SeqDraft, StreamTransport, Transport, TreeDraft, NO_PARENT,
+    PROTOCOL_V3, PROTOCOL_V4,
 };
 use crate::sqs::Policy;
 use crate::trace::{Dir, TraceData, TraceSink};
-
-/// Aggregate wire-endpoint counters, shared across session threads.
-/// This is the wall-clock domain: the counters are exact, but they are
-/// *not* part of the determinism contract the virtual-time tracers pin.
-#[derive(Default)]
-pub struct WireStats {
-    /// sessions served to completion (success or error)
-    pub sessions: AtomicU64,
-    /// uplink frames received mid-session (drafts + control)
-    pub frames: AtomicU64,
-    /// target-model verify calls (stale discards excluded)
-    pub verify_calls: AtomicU64,
-    /// stale sequenced/tree frames discarded by epoch
-    pub discards: AtomicU64,
-    /// stream bits up/down across all sessions (length prefixes incl.)
-    pub uplink_bits: AtomicU64,
-    pub downlink_bits: AtomicU64,
-    /// flight-recorder events shed before export (drivers fold
-    /// `RingTracer::dropped()` in via [`WireStats::note_trace_dropped`]);
-    /// nonzero means recorded windows in the log are truncated
-    pub trace_dropped: AtomicU64,
-}
-
-impl WireStats {
-    /// One-line snapshot for the server log.
-    pub fn snapshot(&self) -> String {
-        format!(
-            "sessions={} frames={} verifies={} discards={} up_bits={} down_bits={} \
-             trace_dropped={}",
-            self.sessions.load(Ordering::Relaxed),
-            self.frames.load(Ordering::Relaxed),
-            self.verify_calls.load(Ordering::Relaxed),
-            self.discards.load(Ordering::Relaxed),
-            self.uplink_bits.load(Ordering::Relaxed),
-            self.downlink_bits.load(Ordering::Relaxed),
-            self.trace_dropped.load(Ordering::Relaxed),
-        )
-    }
-
-    /// Fold a bounded recorder's shed-event count into the snapshot.
-    pub fn note_trace_dropped(&self, n: u64) {
-        self.trace_dropped.fetch_add(n, Ordering::Relaxed);
-    }
-}
-
-/// How many uplink frames between periodic metrics lines in the log.
-const SNAPSHOT_EVERY: u64 = 64;
-
-/// Wire-endpoint configuration.
-#[derive(Clone, Debug)]
-pub struct WireServerConfig {
-    pub addr: String,
-    /// synthetic-world parameters (must match the clients' draft models)
-    pub vocab: usize,
-    pub mismatch: f64,
-    pub world_seed: u64,
-    /// shared SLM/LLM sampling temperature
-    pub temp: f32,
-    /// verify-window capacity per draft frame
-    pub max_batch_drafts: usize,
-    /// target-context capacity per session
-    pub max_len: usize,
-    /// largest lattice resolution accepted from a client Hello (the
-    /// binomial tables are dense in ell; see `protocol::MAX_ELL`)
-    pub max_ell: u32,
-    /// serve at most this many connections then return (None = forever)
-    pub max_conns: Option<usize>,
-    /// live-session count at/above which feedback carries the
-    /// congestion bit (0 = always congested; useful in tests)
-    pub congestion_depth: usize,
-    /// per-round uplink budget granted on congested feedback frames
-    pub grant_bits: Option<u32>,
-    /// adaptive grants: an aggregate uplink-bit pool divided fairly
-    /// across live sessions (overrides `grant_bits` when set).  Same
-    /// fair-share rule as `fleet::VerifierConfig::grant_pool_bits`,
-    /// minus the fleet verifier's backlog scaling — the threaded server
-    /// serves each session synchronously and has no verify queue whose
-    /// depth could be measured.
-    pub grant_pool_bits: Option<u32>,
-    /// floor for adaptive grants, bits
-    pub grant_min_bits: u32,
-    pub seed: u64,
-}
-
-impl Default for WireServerConfig {
-    fn default() -> Self {
-        WireServerConfig {
-            addr: "127.0.0.1:0".into(),
-            vocab: 64,
-            mismatch: 0.6,
-            world_seed: 2024,
-            temp: 0.9,
-            max_batch_drafts: 15,
-            max_len: 100_000,
-            max_ell: 10_000,
-            max_conns: None,
-            congestion_depth: 2,
-            grant_bits: None,
-            grant_pool_bits: None,
-            grant_min_bits: 64,
-            seed: 0,
-        }
-    }
-}
-
-/// Feedback extensions for the current load: congestion bit at/above
-/// `congestion_depth` live sessions, plus the grant — the fair share of
-/// the adaptive pool when one is configured, else the constant.
-fn feedback_exts(cfg: &WireServerConfig, live: usize) -> Vec<Ext> {
-    let mut exts = Vec::new();
-    if live >= cfg.congestion_depth {
-        exts.push(Ext::Congestion(true));
-        let grant = match cfg.grant_pool_bits {
-            Some(pool) => Some(fair_share_grant(pool, live, cfg.grant_min_bits, 1.0)),
-            None => cfg.grant_bits,
-        };
-        if let Some(g) = grant {
-            exts.push(Ext::BudgetGrant(g));
-        }
-    }
-    exts
-}
-
-/// A bound wire endpoint (bind first so tests can read the OS-assigned
-/// port before serving).
-pub struct WireServer {
-    listener: TcpListener,
-    cfg: WireServerConfig,
-    world: SyntheticWorld,
-    stats: Arc<WireStats>,
-}
-
-impl WireServer {
-    pub fn bind(cfg: WireServerConfig) -> Result<WireServer> {
-        let listener = TcpListener::bind(&cfg.addr)?;
-        let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.world_seed);
-        Ok(WireServer { listener, cfg, world, stats: Arc::new(WireStats::default()) })
-    }
-
-    /// Shared counters (clone the Arc before `serve` consumes self).
-    pub fn stats(&self) -> Arc<WireStats> {
-        self.stats.clone()
-    }
-
-    pub fn local_addr(&self) -> Result<SocketAddr> {
-        Ok(self.listener.local_addr()?)
-    }
-
-    /// The world clients must build their draft models from.
-    pub fn world(&self) -> &SyntheticWorld {
-        &self.world
-    }
-
-    /// Accept and serve connections (one thread per session).  Returns
-    /// after `max_conns` sessions, with all session threads joined.
-    pub fn serve(self) -> Result<()> {
-        let active = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::new();
-        let mut served = 0usize;
-        for stream in self.listener.incoming() {
-            let stream = stream?;
-            served += 1;
-            let world = self.world.clone();
-            let cfg = self.cfg.clone();
-            let counter = active.clone();
-            let stats = self.stats.clone();
-            let conn_seed = self.cfg.seed ^ (served as u64).wrapping_mul(0x9E3779B97F4A7C15);
-            let handle = std::thread::spawn(move || {
-                counter.fetch_add(1, Ordering::SeqCst);
-                let outcome = serve_conn(stream, world, &cfg, &counter, &stats, conn_seed);
-                counter.fetch_sub(1, Ordering::SeqCst);
-                stats.sessions.fetch_add(1, Ordering::Relaxed);
-                crate::debug!("wire metrics: {}", stats.snapshot());
-                if let Err(e) = outcome {
-                    crate::debug!("wire session error: {e}");
-                }
-            });
-            // bounded mode (tests) joins every session before returning;
-            // serve-forever detaches like the JSON front-end, so handles
-            // do not accumulate without bound
-            match self.cfg.max_conns {
-                Some(max) => {
-                    handles.push(handle);
-                    if served >= max {
-                        break;
-                    }
-                }
-                None => drop(handle),
-            }
-        }
-        for h in handles {
-            let _ = h.join();
-        }
-        Ok(())
-    }
-}
-
-/// One session: handshake, prompt, then draft/feedback rounds.
-fn serve_conn(
-    stream: TcpStream,
-    world: SyntheticWorld,
-    cfg: &WireServerConfig,
-    active: &AtomicUsize,
-    stats: &WireStats,
-    seed: u64,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut tr = StreamTransport::new(stream);
-    let mut wire = WireCodec::handshake_only();
-
-    // ---- handshake --------------------------------------------------
-    let hello = match tr.recv_frame(Direction::Up, &mut wire)? {
-        Frame::Hello(h) => h,
-        other => bail!("expected Hello, got {}", other.name()),
-    };
-    // server-side admission on top of protocol validation: the backend
-    // serves one world, and ell bounds the binomial tables this session
-    // may make the server build
-    let admitted = if hello.vocab as usize != world.vocab {
-        Err(format!("client vocab {} != server world vocab {}", hello.vocab, world.vocab))
-    } else if hello.ell > cfg.max_ell {
-        Err(format!("client ell {} exceeds the server cap {}", hello.ell, cfg.max_ell))
-    } else {
-        negotiate(&hello)
-    };
-    let ack = match admitted {
-        Ok(a) => a,
-        Err(e) => {
-            // best effort: tell the peer why before closing
-            let nack = HelloAck {
-                version: MAX_SUPPORTED,
-                ok: false,
-                vocab: hello.vocab,
-                ell: hello.ell,
-                scheme: hello.scheme,
-                fixed_k: hello.fixed_k,
-            };
-            let _ = tr.send_frame(Direction::Down, &Frame::HelloAck(nack), &mut wire, 0.0);
-            bail!("handshake rejected: {e}");
-        }
-    };
-    tr.send_frame(Direction::Down, &Frame::HelloAck(ack), &mut wire, 0.0)?;
-    let mut wire = WireCodec::negotiated(&ack).map_err(|e| anyhow!(e))?;
-
-    // ---- prompt -----------------------------------------------------
-    let prompt = match tr.recv_frame(Direction::Up, &mut wire)? {
-        Frame::Control(Control::Prompt(tokens)) => tokens,
-        other => bail!("expected Control::Prompt, got {}", other.name()),
-    };
-    if prompt.is_empty() {
-        bail!("empty prompt");
-    }
-    let target = SyntheticTarget::new(world, cfg.max_batch_drafts, cfg.max_len);
-    let mut cloud = CloudNode::new(target, seed ^ 0xC);
-    cloud.start(&prompt)?;
-    let mut prev = *prompt.last().unwrap();
-    // protocol-v3 pipelining: rejections the verify side has produced
-    let mut cloud_epoch: u8 = 0;
-
-    // ---- draft / feedback rounds ------------------------------------
-    let mut session_frames = 0u64;
-    let outcome = loop {
-        let frame = match tr.recv_frame(Direction::Up, &mut wire) {
-            Ok(f) => f,
-            Err(e) => break Err(e),
-        };
-        stats.frames.fetch_add(1, Ordering::Relaxed);
-        session_frames += 1;
-        if session_frames % SNAPSHOT_EVERY == 0 {
-            crate::debug!("wire metrics: {}", stats.snapshot());
-        }
-        match frame {
-            Frame::Draft(frame) => {
-                stats.verify_calls.fetch_add(1, Ordering::Relaxed);
-                let verdict = cloud.verify_with_prev(&frame, prev, cfg.temp)?;
-                prev = *verdict.committed.last().unwrap();
-                let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
-                let fb = verdict.feedback_v2(exts);
-                tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
-            }
-            Frame::DraftSeq(sd) => {
-                if sd.epoch != cloud_epoch {
-                    // stale: drafted on a branch a rejection already
-                    // killed — discard unverified, ack the seq so the
-                    // edge's in-flight ledger drains.  Congestion/grant
-                    // extensions still ride the discard (as on the fleet
-                    // path): dropping them would erase the AIMD client's
-                    // standing signal mid-congestion.
-                    let mut fb = FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch);
-                    fb.exts.extend(feedback_exts(cfg, active.load(Ordering::SeqCst)));
-                    tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
-                    stats.discards.fetch_add(1, Ordering::Relaxed);
-                    continue;
-                }
-                stats.verify_calls.fetch_add(1, Ordering::Relaxed);
-                let verdict = cloud.verify_pipelined(&sd.frame, prev, cfg.temp)?;
-                if verdict.rejected {
-                    cloud_epoch = cloud_epoch.wrapping_add(1);
-                }
-                prev = *verdict.committed.last().unwrap();
-                let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
-                let mut fb = verdict.feedback_v2(exts);
-                fb.exts.push(Ext::Ack(SeqAck { seq: sd.seq, epoch: sd.epoch, discard: false }));
-                tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
-            }
-            Frame::DraftTree(td) => {
-                if td.epoch != cloud_epoch {
-                    // stale tree: same linear discard ack, so the client's
-                    // ledger drains uniformly across v3/v4 frames
-                    let mut fb = FeedbackV2::discard(td.frame.batch_id, td.seq, td.epoch);
-                    fb.exts.extend(feedback_exts(cfg, active.load(Ordering::SeqCst)));
-                    tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
-                    stats.discards.fetch_add(1, Ordering::Relaxed);
-                    continue;
-                }
-                stats.verify_calls.fetch_add(1, Ordering::Relaxed);
-                let tv = cloud.verify_tree(&td, prev, cfg.temp)?;
-                if !tv.full_trunk {
-                    cloud_epoch = cloud_epoch.wrapping_add(1);
-                }
-                prev = *tv.verdict.committed.last().unwrap();
-                let exts = feedback_exts(cfg, active.load(Ordering::SeqCst));
-                let mut fb = tv.verdict.feedback_v2(exts);
-                fb.exts.push(Ext::TreeAck(TreeAck {
-                    seq: td.seq,
-                    epoch: td.epoch,
-                    discard: false,
-                    resampled: tv.verdict.rejected,
-                    node: tv.survivor,
-                    depth: tv.depth as u8,
-                }));
-                tr.send_frame(Direction::Down, &Frame::Feedback(fb), &mut wire, 0.0)?;
-            }
-            Frame::Control(Control::Bye) => break Ok(()),
-            other => break Err(anyhow!("unexpected {} frame mid-session", other.name())),
-        }
-    };
-    let (_, up_bits) = tr.ledger(Direction::Up);
-    let (_, down_bits) = tr.ledger(Direction::Down);
-    stats.uplink_bits.fetch_add(up_bits, Ordering::Relaxed);
-    stats.downlink_bits.fetch_add(down_bits, Ordering::Relaxed);
-    outcome
-}
 
 /// Per-session edge-side configuration for [`WireEdge`].
 #[derive(Clone, Copy, Debug)]
@@ -934,30 +585,5 @@ impl<D: DraftLm> WireEdge<D> {
 
     fn room_left(&self, seq_len: usize) -> bool {
         seq_len + self.cfg.max_batch_drafts + 2 < self.edge.draft.max_len()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::trace::{RingTracer, TraceEvent, Tracer};
-
-    #[test]
-    fn snapshot_surfaces_trace_dropped() {
-        let stats = WireStats::default();
-        assert!(stats.snapshot().contains("trace_dropped=0"));
-        // fold a truncated flight recorder's shed count in, as a
-        // session driver running a bounded RingTracer would
-        let mut ring = RingTracer::new(2);
-        for i in 0..5 {
-            ring.record(TraceEvent {
-                seq: i,
-                t: i as f64,
-                actor: 0,
-                data: TraceData::EpochRollback { epoch: i as u8 },
-            });
-        }
-        stats.note_trace_dropped(ring.dropped());
-        assert!(stats.snapshot().contains("trace_dropped=3"), "{}", stats.snapshot());
     }
 }

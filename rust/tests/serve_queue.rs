@@ -1,0 +1,136 @@
+//! Pins on the extracted admission/coalescing core: the shared
+//! [`VerifyQueue`] must behave bit-identically to the `CloudVerifier`
+//! wrapper the fleet simulator keeps (same drain order, same counters,
+//! same congestion/grant extensions), and the wire-server-only features
+//! (bounded enqueue, metrics handles) must compose with it without
+//! disturbing that arithmetic.
+
+use sqs_sd::coordinator::{linear_bounds, log_bounds, Metrics};
+use sqs_sd::fleet::{CloudVerifier, VerifierConfig};
+use sqs_sd::protocol::Ext;
+use sqs_sd::serve::{QueueConfig, QueueMetrics, VerifyQueue};
+
+/// One shared shape for the equivalence drives below.
+fn cfg() -> QueueConfig {
+    QueueConfig {
+        concurrency: 2,
+        batch_max: 3,
+        base_s: 4e-3,
+        per_token_s: 1e-4,
+        congestion_depth: 2,
+        grant_pool_bits: Some(6000),
+        grant_min_bits: 100,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn queue_matches_the_fleet_wrapper_step_for_step() {
+    // `VerifierConfig` *is* `QueueConfig`: one knob set, two faces
+    let mut fleet = CloudVerifier::new(cfg());
+    let mut wire: VerifyQueue<usize> = VerifyQueue::new(cfg());
+
+    for d in [3usize, 1, 4, 1, 5, 9, 2, 6] {
+        fleet.enqueue(d);
+        wire.enqueue(d, 0.0);
+    }
+    while fleet.slot_free() || wire.slot_free() {
+        assert_eq!(fleet.slot_free(), wire.slot_free());
+        let a = fleet.take_batch();
+        let b = wire.take_batch(0.0);
+        assert_eq!(a, b, "identical drain order and coalescing");
+        let tokens = 16 * a.len();
+        assert_eq!(fleet.service_s(tokens), wire.service_s(tokens));
+        assert_eq!(fleet.feedback_exts(6), wire.feedback_exts(6));
+        fleet.release_slot();
+        wire.release_slot();
+    }
+    assert_eq!(fleet.calls, wire.calls);
+    assert_eq!(fleet.windows, wire.windows);
+    assert_eq!(fleet.busy_s, wire.busy_s);
+    assert_eq!(fleet.peak_queue, wire.peak_queue);
+    assert_eq!(fleet.mean_batch(), wire.mean_batch());
+    assert_eq!(fleet.grant_round_max_bits, wire.grant_round_max_bits);
+}
+
+#[test]
+fn grants_scale_with_backlog_on_both_faces() {
+    let mut fleet = CloudVerifier::new(VerifierConfig {
+        congestion_depth: 2,
+        grant_pool_bits: Some(6000),
+        grant_min_bits: 100,
+        ..Default::default()
+    });
+    let mut wire: VerifyQueue<usize> = VerifyQueue::new(QueueConfig {
+        congestion_depth: 2,
+        grant_pool_bits: Some(6000),
+        grant_min_bits: 100,
+        ..Default::default()
+    });
+    for d in 0..4 {
+        fleet.enqueue(d);
+        wire.enqueue(d, 0.0);
+    }
+    // backlog 4 > depth 2: the fair share is scaled by 2/4 on BOTH
+    // paths — the threaded server used to skip this scaling (scale 1.0)
+    assert_eq!(fleet.grant_for(6), Some(500));
+    assert_eq!(wire.grant_for(6), Some(500));
+    let exts = wire.feedback_exts(6);
+    assert!(exts.contains(&Ext::Congestion(true)));
+    assert!(exts.contains(&Ext::BudgetGrant(500)));
+    // the conservation diagnostic records grant * live at each emission
+    assert!(wire.grant_round_max_bits <= 6000);
+    assert!(wire.grant_round_max_bits >= 500 * 6);
+}
+
+#[test]
+fn bounded_enqueue_refuses_backpressure_not_loss() {
+    let mut q: VerifyQueue<usize> =
+        VerifyQueue::new(QueueConfig { max_backlog: 2, ..Default::default() });
+    assert!(q.try_enqueue(7, 0.0).is_ok());
+    assert!(q.try_enqueue(8, 0.1).is_ok());
+    // full: the item comes back to the caller (who keeps it queued in
+    // the session FIFO), and the pressure event is counted
+    assert_eq!(q.try_enqueue(9, 0.2), Err(9));
+    assert_eq!(q.refused, 1);
+    assert_eq!(q.backlog(), 2);
+    // draining makes room again
+    let batch = q.take_batch(0.3);
+    assert_eq!(batch, vec![7, 8]);
+    q.release_slot();
+    assert!(q.try_enqueue(9, 0.4).is_ok());
+    assert_eq!(q.take_batch(0.5), vec![9]);
+
+    // max_backlog 0 never refuses (the fleet path's unconditional mode)
+    let mut open: VerifyQueue<usize> = VerifyQueue::new(QueueConfig::default());
+    for d in 0..100 {
+        assert!(open.try_enqueue(d, 0.0).is_ok());
+    }
+    assert_eq!(open.refused, 0);
+}
+
+#[test]
+fn metrics_handles_observe_batch_sizes_and_queue_waits() {
+    let metrics = Metrics::new();
+    let mut q: VerifyQueue<usize> =
+        VerifyQueue::new(QueueConfig { batch_max: 4, ..Default::default() });
+    q.set_metrics(QueueMetrics {
+        batch_size: metrics.histogram_handle("verify.batch_size", &linear_bounds(0.0, 32.0, 32)),
+        queue_wait: metrics.histogram_handle("verify.queue_wait", &log_bounds(1e-6, 10.0, 6)),
+    });
+    q.enqueue(1, 0.0);
+    q.enqueue(2, 0.25);
+    assert_eq!(q.take_batch(0.5), vec![1, 2]);
+
+    let bs = metrics.histogram("verify.batch_size").expect("registered");
+    assert_eq!(bs.count(), 1, "one coalesced call");
+    assert_eq!(bs.sum(), 2.0, "two windows in it");
+    let qw = metrics.histogram("verify.queue_wait").expect("registered");
+    assert_eq!(qw.count(), 2, "one wait sample per window");
+    assert!((qw.sum() - 0.75).abs() < 1e-12, "0.5s + 0.25s of waiting: {}", qw.sum());
+
+    // an empty take observes nothing (no zero-size batch samples)
+    q.release_slot();
+    assert!(q.take_batch(1.0).is_empty());
+    assert_eq!(bs.count(), 1);
+}

@@ -4,10 +4,12 @@
 //! throttling an AIMD edge).
 
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use sqs_sd::control::AdaptiveMode;
 use sqs_sd::model::synthetic::SyntheticDraft;
 use sqs_sd::protocol::StreamTransport;
+use sqs_sd::serve::{run_soak, SoakConfig};
 use sqs_sd::server::wire::{
     WireEdge, WireEdgeConfig, WireRunReport, WireServer, WireServerConfig,
 };
@@ -170,4 +172,85 @@ fn tcp_handshake_rejects_a_mismatched_vocab() {
     let err = edge.run(&mut transport, &[1, 2], 8);
     assert!(err.is_err(), "mismatched vocab must fail the handshake");
     handle.join().unwrap();
+}
+
+#[test]
+fn tcp_soak_many_sessions_coalesce_and_conserve_grants() {
+    let pool = 1u32 << 16;
+    let server_cfg = WireServerConfig {
+        shards: 4,
+        verify_workers: 1,
+        verify_batch: 16,
+        // a modeled service time makes drafts pile up behind the
+        // sleeping verify call, so cross-session coalescing must engage
+        verify_base_s: 5e-4,
+        // always-congested feedback: every frame carries a grant, so the
+        // pool-conservation diagnostic sees every emission
+        congestion_depth: 0,
+        grant_pool_bits: Some(pool),
+        seed: 11,
+        ..Default::default()
+    };
+    let soak = SoakConfig {
+        sessions: 64,
+        concurrency: 64,
+        max_new_tokens: 16,
+        pipeline_depth: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    let r = run_soak(server_cfg, soak).unwrap();
+    assert_eq!(r.completed, 64, "every session completes:\n{}", r.render());
+    assert_eq!(r.failed, 0, "no session may be shed:\n{}", r.render());
+    assert!(r.tokens >= 64 * 16, "each session decoded its request: {} tokens", r.tokens);
+    assert!(
+        r.batch_max >= 2.0,
+        "cross-session coalescing must engage: batch_max {}",
+        r.batch_max
+    );
+    assert!(r.verify_windows >= r.verify_calls, "windows per call >= 1");
+    assert!(r.grants_seen > 0, "adaptive grants reach the edges");
+    assert!(
+        r.grant_round_max_bits <= u64::from(pool),
+        "summed per-round grants stay within the pool: {} > {pool}",
+        r.grant_round_max_bits
+    );
+    assert!(r.live_peak >= 1 && r.live_peak <= 64, "live gauge bounded: {}", r.live_peak);
+}
+
+#[test]
+fn tcp_handshake_rejects_sessions_over_max_sessions() {
+    let cfg = WireServerConfig {
+        max_conns: Some(2),
+        max_sessions: 1,
+        ..Default::default()
+    };
+    let server = WireServer::bind(cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let world = server.world().clone();
+    let metrics = server.metrics();
+    let handle = std::thread::spawn(move || server.serve().unwrap());
+
+    // the first connection holds the only session slot: it is counted
+    // live from shard intake, before it even says Hello
+    let first = TcpStream::connect(addr).unwrap();
+    let t0 = Instant::now();
+    while !metrics.gauge("sessions.live").is_some_and(|g| g.get() >= 1) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "intake never counted the conn");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let draft = SyntheticDraft::new(world, 10_000);
+    let mut edge = WireEdge::new(draft, WireEdgeConfig::default());
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut transport = StreamTransport::new(stream);
+    let err = edge.run(&mut transport, &[1, 2], 8);
+    assert!(err.is_err(), "second session must be nacked at max_sessions=1");
+
+    // releasing the first slot lets the server drain and exit; its
+    // disconnect must also release the live-session gauge promptly
+    drop(first);
+    handle.join().unwrap();
+    let live = metrics.gauge("sessions.live").map_or(0, |g| g.get());
+    assert_eq!(live, 0, "disconnects release their live slot");
 }
