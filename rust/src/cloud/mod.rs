@@ -9,9 +9,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::codec::{DraftFrame, FeedbackFrame};
+use crate::codec::{DraftFrame, DraftToken, FeedbackFrame};
 use crate::model::TargetLm;
-use crate::protocol::{Ext, FeedbackV2, TreeDraft, NO_PARENT};
+use crate::protocol::{
+    tree_children, tree_first_child, tree_path_into, tree_trunk_tokens, tree_validate,
+    Ext, FeedbackV2, TreeDraft, TreeFrameRef, NO_PARENT,
+};
 use crate::sqs::probs::{residual, sample};
 use crate::util::rng::Pcg64;
 
@@ -109,7 +112,30 @@ impl<T: TargetLm> CloudNode<T> {
     /// coordinator (which owns the canonical token sequence).
     pub fn verify_with_prev(&mut self, frame: &DraftFrame, prev: u16, temp: f32)
                             -> Result<Verdict> {
-        self.verify_inner(frame, prev, temp, true)
+        self.verify_inner(frame.batch_id, &frame.tokens, prev, temp, true)
+    }
+
+    /// `verify_with_prev` over a borrowed token slice — what the
+    /// arena-decoded view paths call, skipping the owned-frame copy.
+    pub fn verify_with_prev_tokens(
+        &mut self,
+        batch_id: u32,
+        tokens: &[DraftToken],
+        prev: u16,
+        temp: f32,
+    ) -> Result<Verdict> {
+        self.verify_inner(batch_id, tokens, prev, temp, true)
+    }
+
+    /// `verify_pipelined` over a borrowed token slice (see above).
+    pub fn verify_pipelined_tokens(
+        &mut self,
+        batch_id: u32,
+        tokens: &[DraftToken],
+        prev: u16,
+        temp: f32,
+    ) -> Result<Verdict> {
+        self.verify_inner(batch_id, tokens, prev, temp, false)
     }
 
     /// Pipelined-session verification (protocol v3): identical acceptance
@@ -122,7 +148,7 @@ impl<T: TargetLm> CloudNode<T> {
     /// free bonus token in exchange for overlap.
     pub fn verify_pipelined(&mut self, frame: &DraftFrame, prev: u16, temp: f32)
                             -> Result<Verdict> {
-        self.verify_inner(frame, prev, temp, false)
+        self.verify_inner(frame.batch_id, &frame.tokens, prev, temp, false)
     }
 
     /// Token-tree verification (protocol v4): score every root-to-leaf
@@ -146,9 +172,17 @@ impl<T: TargetLm> CloudNode<T> {
     /// fleet's verifier models the cost as scaling with node count).
     pub fn verify_tree(&mut self, tree: &TreeDraft, prev: u16, temp: f32)
                        -> Result<TreeVerdict> {
-        tree.validate().map_err(|e| anyhow::anyhow!("tree frame: {e}"))?;
-        let frame = &tree.frame;
-        let n = frame.tokens.len();
+        self.verify_tree_ref(tree.as_ref(), prev, temp)
+    }
+
+    /// `verify_tree` over borrowed parent/token slices ([`TreeFrameRef`])
+    /// — what the arena-decoded view paths call, skipping the owned-tree
+    /// copy.  Scratch inside (windows, per-node dist memo) is cloud-side
+    /// model state, not codec hot path, and stays locally allocated.
+    pub fn verify_tree_ref(&mut self, tree: TreeFrameRef<'_>, prev: u16, temp: f32)
+                           -> Result<TreeVerdict> {
+        let n = tree.tokens.len();
+        tree_validate(tree.parents, n).map_err(|e| anyhow::anyhow!("tree frame: {e}"))?;
         let vocab = self.target.vocab();
 
         // ---- score: one verify window per leaf, memoized per node ----
@@ -161,9 +195,10 @@ impl<T: TargetLm> CloudNode<T> {
         // per call, so after the walk the rows must be re-scored to the
         // *surviving* path if it is not a prefix of this one
         let mut last_scored: Vec<u16> = Vec::new();
+        let mut path: Vec<u8> = Vec::new();
         let t0 = std::time::Instant::now();
         for &leaf in &leaves {
-            let path = tree.path_to(leaf);
+            tree_path_into(tree.parents, leaf, &mut path);
             if path.len() > self.target.max_drafts() {
                 bail!(
                     "tree path of {} drafts > window capacity {}",
@@ -176,7 +211,7 @@ impl<T: TargetLm> CloudNode<T> {
             }
             let mut window = Vec::with_capacity(path.len() + 1);
             window.push(prev);
-            window.extend(path.iter().map(|&i| frame.tokens[i as usize].token));
+            window.extend(path.iter().map(|&i| tree.tokens[i as usize].token));
             let probs = self.target.verify_window(&window, temp)?;
             last_scored = window.split_off(1);
             for (d, &i) in path.iter().enumerate() {
@@ -196,15 +231,14 @@ impl<T: TargetLm> CloudNode<T> {
         let mut reject_at = None;
         let mut cur = NO_PARENT;
         'walk: loop {
-            let children = tree.children(cur);
-            let Some(&first) = children.first() else { break };
+            let Some(first) = tree_first_child(tree.parents, cur) else { break };
             let p_level = dists[first as usize]
                 .as_ref()
                 .expect("every node lies on a scored leaf path")
                 .clone();
             let mut r = p_level.clone();
-            for &c in &children {
-                let dt = &frame.tokens[c as usize];
+            for c in tree_children(tree.parents, cur) {
+                let dt = &tree.tokens[c as usize];
                 let x = dt.token as usize;
                 let q_hat = dt.quant.prob_of(x);
                 if q_hat <= 0.0 {
@@ -238,7 +272,7 @@ impl<T: TargetLm> CloudNode<T> {
             rejected = true;
             reject_at = Some((
                 first as usize,
-                reject_estimate(&p_level, &frame.tokens[first as usize].quant),
+                reject_estimate(&p_level, &tree.tokens[first as usize].quant),
             ));
             new_token = Some(sample(&r, &mut self.rng) as u16);
             break;
@@ -273,12 +307,13 @@ impl<T: TargetLm> CloudNode<T> {
         // speculative continuation (drafted from the trunk tip) stays
         // valid, so neither side bumps its epoch.  Token values — not
         // node ids — decide this, since contexts only see values.
-        let full_trunk = !rejected && committed == tree.trunk_tokens();
+        let full_trunk =
+            !rejected && committed == tree_trunk_tokens(tree.parents, tree.tokens);
 
         Ok(TreeVerdict {
             verdict: Verdict {
                 feedback: FeedbackFrame {
-                    batch_id: frame.batch_id,
+                    batch_id: tree.batch_id,
                     accepted: depth as u16,
                     new_token: new_token.unwrap_or(0),
                 },
@@ -294,9 +329,15 @@ impl<T: TargetLm> CloudNode<T> {
         })
     }
 
-    fn verify_inner(&mut self, frame: &DraftFrame, prev: u16, temp: f32, bonus: bool)
-                    -> Result<Verdict> {
-        let l = frame.tokens.len();
+    fn verify_inner(
+        &mut self,
+        batch_id: u32,
+        tokens: &[DraftToken],
+        prev: u16,
+        temp: f32,
+        bonus: bool,
+    ) -> Result<Verdict> {
+        let l = tokens.len();
         if l == 0 {
             bail!("empty draft frame");
         }
@@ -307,7 +348,7 @@ impl<T: TargetLm> CloudNode<T> {
 
         let mut window = Vec::with_capacity(l + 1);
         window.push(prev);
-        window.extend(frame.tokens.iter().map(|t| t.token));
+        window.extend(tokens.iter().map(|t| t.token));
 
         let t0 = std::time::Instant::now();
         let probs = self.target.verify_window(&window, temp)?;
@@ -318,7 +359,7 @@ impl<T: TargetLm> CloudNode<T> {
         let mut new_token = None;
         let mut reject_at = None;
 
-        for (n, dt) in frame.tokens.iter().enumerate() {
+        for (n, dt) in tokens.iter().enumerate() {
             let p_n = &probs[n];
             let x = dt.token as usize;
             let q_hat = dt.quant.prob_of(x);
@@ -351,7 +392,7 @@ impl<T: TargetLm> CloudNode<T> {
         };
 
         let mut committed: Vec<u16> =
-            frame.tokens[..accepted].iter().map(|t| t.token).collect();
+            tokens[..accepted].iter().map(|t| t.token).collect();
         if let Some(t) = new_token {
             committed.push(t);
         }
@@ -359,7 +400,7 @@ impl<T: TargetLm> CloudNode<T> {
 
         Ok(Verdict {
             feedback: FeedbackFrame {
-                batch_id: frame.batch_id,
+                batch_id,
                 accepted: accepted as u16,
                 new_token: new_token.unwrap_or(0),
             },

@@ -6,6 +6,7 @@
 //! travels in exactly ceil(log2 C(V,K)) bits — the paper's b~(K) (eq. (5)).
 
 use crate::util::bigint::{BigUint, BinomialCache};
+use crate::util::binom_table::BinomTable;
 
 /// Rank a sorted ascending subset (colex order).
 pub fn subset_rank(subset: &[u16], cache: &mut BinomialCache) -> BigUint {
@@ -20,19 +21,61 @@ pub fn subset_rank(subset: &[u16], cache: &mut BinomialCache) -> BigUint {
 pub fn subset_unrank(mut rank: BigUint, v: usize, k: usize,
                      cache: &mut BinomialCache) -> Vec<u16> {
     let mut out = vec![0u16; k];
+    subset_unrank_into(&mut rank, v, k, cache, &mut out);
+    out
+}
+
+/// `subset_unrank` writing into a reused buffer (resized to k); consumes
+/// the rank in place so the fallback path borrows instead of cloning.
+pub fn subset_unrank_into(rank: &mut BigUint, v: usize, k: usize,
+                          cache: &mut BinomialCache, out: &mut Vec<u16>) {
+    out.clear();
+    out.resize(k, 0);
     let mut upper = v as u64; // exclusive bound for candidate element
     for i in (1..=k).rev() {
         // largest s < upper with C(s, i) <= rank (binary search; the
         // element itself is >= i-1 since i-1 smaller elements precede it)
         let s = cache
-            .max_n_le(i as u64, i as u64 - 1, upper, &rank)
+            .max_n_le(i as u64, i as u64 - 1, upper, rank)
             .expect("unrank underflow: rank out of range");
         let c = cache.get(s, i as u64).clone();
         rank.sub_assign(&c);
         out[i - 1] = s as u16;
         upper = s;
     }
-    out
+}
+
+/// Fixed-width fast path of `subset_rank`: same colex sum in u128 via the
+/// dense table.  Returns None when any term (or the sum) leaves u128 —
+/// callers fall back to the bigint path.  Exact where it applies: both
+/// paths compute the same integer, pinned by `tests/combinadics_table.rs`.
+pub fn subset_rank_u128(subset: &[u16], table: &mut BinomTable) -> Option<u128> {
+    let mut rank: u128 = 0;
+    for (i, &s) in subset.iter().enumerate() {
+        rank = rank.checked_add(table.get(s as u64, i as u64 + 1)?)?;
+    }
+    Some(rank)
+}
+
+/// Fixed-width fast path of `subset_unrank`, writing into a reused buffer.
+/// Precondition (enforced by callers): rank < C(v, k) and C(v, k) fits
+/// u128, so every probed C(s, i) <= rank also fits.
+pub fn subset_unrank_u128_into(mut rank: u128, v: usize, k: usize,
+                               table: &mut BinomTable, out: &mut Vec<u16>) {
+    out.clear();
+    out.resize(k, 0);
+    let mut upper = v as u64;
+    for i in (1..=k).rev() {
+        let s = table
+            .max_n_le(i as u64, i as u64 - 1, upper, rank)
+            .expect("unrank underflow: rank out of range");
+        let c = table
+            .get(s, i as u64)
+            .expect("table row materialized by max_n_le");
+        rank -= c;
+        out[i - 1] = s as u16;
+        upper = s;
+    }
 }
 
 #[cfg(test)]

@@ -11,11 +11,17 @@
 use crate::sqs::bits::SchemeBits;
 use crate::sqs::Quantized;
 use crate::util::bigint::with_binomials;
+use crate::util::binom_table::with_binom_table;
 use crate::util::bitio::{BitReader, BitWriter};
-use crate::util::ceil_log2_u64;
+use crate::util::{ceil_log2_u128, ceil_log2_u64};
 
-use super::combinadic::{subset_rank, subset_unrank};
-use super::multiset::{composition_rank, composition_unrank};
+use super::combinadic::{
+    subset_rank, subset_rank_u128, subset_unrank_into, subset_unrank_u128_into,
+};
+use super::multiset::{
+    composition_rank, composition_rank_u128, composition_unrank,
+    composition_unrank_u128_into,
+};
 
 /// One drafted token on the wire: its quantized distribution + the sample.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,6 +45,66 @@ pub struct FeedbackFrame {
     pub accepted: u16,
     /// the resampled (or bonus) token X_{T^t + 1}
     pub new_token: u16,
+}
+
+/// Scratch arena backing borrowed frame decodes: token slots (whose inner
+/// support/counts vectors keep their capacity across rounds) plus the
+/// divider scratch for composition unranking.  The protocol layer wraps
+/// this in a `WireArena` that adds tree-parent and feedback-extension
+/// scratch.  One arena per session/device/connection; decoding reuses the
+/// slots, so the steady-state decode path stops allocating (DESIGN.md §15).
+#[derive(Default)]
+pub struct FrameArena {
+    /// Slot pool: slots [0..live) hold the most recent decode's tokens.
+    pub(crate) tokens: Vec<DraftToken>,
+    pub(crate) live: usize,
+    /// Divider scratch for `composition_unrank_u128_into`.
+    pub(crate) divs: Vec<u16>,
+}
+
+impl FrameArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear the live region (capacity kept) and hand back a slot for
+    /// token `idx`, growing the pool on first use.
+    fn slot(&mut self, idx: usize, ell: u32) -> &mut DraftToken {
+        while self.tokens.len() <= idx {
+            self.tokens.push(DraftToken {
+                quant: Quantized {
+                    support: Vec::new(),
+                    counts: Vec::new(),
+                    ell,
+                    alpha: f32::NAN,
+                },
+                token: 0,
+            });
+        }
+        let slot = &mut self.tokens[idx];
+        slot.quant.support.clear();
+        slot.quant.counts.clear();
+        slot.quant.ell = ell;
+        slot.quant.alpha = f32::NAN;
+        slot.token = 0;
+        slot
+    }
+}
+
+/// A draft frame borrowed out of a `FrameArena` — same shape as
+/// `DraftFrame` but the tokens live in reused arena slots.  Persisting
+/// state must go through `to_frame()` (the explicit ownership step).
+#[derive(Clone, Copy, Debug)]
+pub struct DraftFrameView<'a> {
+    pub batch_id: u32,
+    pub tokens: &'a [DraftToken],
+}
+
+impl DraftFrameView<'_> {
+    /// Owned copy, for the (cold) paths that must outlive the arena.
+    pub fn to_frame(&self) -> DraftFrame {
+        DraftFrame { batch_id: self.batch_id, tokens: self.tokens.to_vec() }
+    }
 }
 
 /// Per-token bit breakdown (for metrics and the TBL-BITS bench).
@@ -69,54 +135,51 @@ pub struct FrameCodec {
     pub scheme: SchemeBits,
     /// K for the FixedK scheme (known to both ends, not transmitted).
     pub fixed_k: usize,
+    /// Reused per-token breakdown buffer (`encode_into` returns a slice
+    /// into it so steady-state encodes stay allocation-free).
+    breakdown: Vec<TokenBits>,
 }
 
 impl FrameCodec {
     pub fn new(vocab: usize, ell: u32, scheme: SchemeBits, fixed_k: usize) -> Self {
-        FrameCodec { vocab, ell, scheme, fixed_k }
+        FrameCodec { vocab, ell, scheme, fixed_k, breakdown: Vec::new() }
+    }
+
+    /// ceil(log2 C(n, k)) — u128 table when the binomial fits, bigint
+    /// bit-scan otherwise.  Both branches compute the same integer width.
+    fn binom_field_bits(n: u64, k: u64) -> usize {
+        if let Some(c) = with_binom_table(|t| t.get(n, k)) {
+            return ceil_log2_u128(c);
+        }
+        with_binomials(|cache| {
+            let c = cache.get(n, k);
+            let bits = c.bits();
+            if bits == 0 {
+                return 0;
+            }
+            // ceil(log2 c): bits-1 when c is a power of two
+            let mut ones = 0;
+            for i in 0..bits {
+                if c.bit(i) {
+                    ones += 1;
+                    if ones > 1 {
+                        break;
+                    }
+                }
+            }
+            if ones == 1 { bits - 1 } else { bits }
+        })
     }
 
     fn support_field_bits(&mut self, k: usize) -> usize {
-        let vocab = self.vocab as u64;
-        with_binomials(|cache| {
-        let c = cache.get(vocab, k as u64);
-        let bits = c.bits();
-        if bits == 0 {
-            return 0;
-        }
-        // ceil(log2 c)
-        let mut ones = 0;
-        for i in 0..bits {
-            if c.bit(i) {
-                ones += 1;
-                if ones > 1 {
-                    break;
-                }
-            }
-        }
-        if ones == 1 { bits - 1 } else { bits }
-        })
+        Self::binom_field_bits(self.vocab as u64, k as u64)
     }
 
     fn lattice_field_bits(&mut self, k: usize) -> usize {
         if k <= 1 {
             return 0;
         }
-        let ell = self.ell as u64;
-        with_binomials(|cache| {
-        let c = cache.get(ell + k as u64 - 1, k as u64 - 1);
-        let bits = c.bits();
-        let mut ones = 0;
-        for i in 0..bits {
-            if c.bit(i) {
-                ones += 1;
-                if ones > 1 {
-                    break;
-                }
-            }
-        }
-        if ones == 1 { bits - 1 } else { bits }
-        })
+        Self::binom_field_bits(self.ell as u64 + k as u64 - 1, k as u64 - 1)
     }
 
     /// Bits one token will occupy on the wire (before encoding it).
@@ -152,14 +215,15 @@ impl FrameCodec {
     /// Serialize a frame; returns (bytes, total bits, per-token breakdown).
     pub fn encode(&mut self, frame: &DraftFrame) -> (Vec<u8>, usize, Vec<TokenBits>) {
         let mut w = BitWriter::new();
-        let breakdown = self.encode_into(frame, &mut w);
+        self.encode_into(frame, &mut w);
         let bits = w.bit_len();
-        (w.finish(), bits, breakdown)
+        (w.finish(), bits, self.breakdown.clone())
     }
 
     /// Serialize the v1 draft layout into an existing bit stream (the
-    /// protocol-v2 frame body); returns the per-token breakdown.
-    pub fn encode_into(&mut self, frame: &DraftFrame, w: &mut BitWriter) -> Vec<TokenBits> {
+    /// protocol-v2 frame body); returns the per-token breakdown (a slice
+    /// into a reused codec-owned buffer — clone it to persist).
+    pub fn encode_into(&mut self, frame: &DraftFrame, w: &mut BitWriter) -> &[TokenBits] {
         assert!(
             frame.tokens.len() <= u8::MAX as usize,
             "frame of {} tokens overflows the 8-bit count field",
@@ -168,7 +232,7 @@ impl FrameCodec {
         w.write_bits_u64(frame.batch_id as u64, 32);
         w.write_bits_u64(frame.tokens.len() as u64, 8);
         let tok_bits = ceil_log2_u64(self.vocab as u64);
-        let mut breakdown = Vec::with_capacity(frame.tokens.len());
+        self.breakdown.clear();
 
         for dt in &frame.tokens {
             let q = &dt.quant;
@@ -181,16 +245,14 @@ impl FrameCodec {
                 SchemeBits::FixedK => {
                     assert_eq!(k, self.fixed_k, "FixedK frame with k != K");
                     let nbits = self.support_field_bits(k);
-                    let rank = with_binomials(|c| subset_rank(&q.support, c));
-                    w.write_bits_big(&rank, nbits);
+                    Self::write_support_rank(&q.support, nbits, w);
                     tb.support = nbits;
                 }
                 SchemeBits::Adaptive => {
                     // k in 1..=V encoded as k-1 so it fits ceil(log2 V) bits
                     w.write_bits_u64(k as u64 - 1, tok_bits.max(1));
                     let nbits = self.support_field_bits(k);
-                    let rank = with_binomials(|c| subset_rank(&q.support, c));
-                    w.write_bits_big(&rank, nbits);
+                    Self::write_support_rank(&q.support, nbits, w);
                     tb.support = nbits + tok_bits.max(1);
                 }
                 SchemeBits::Dense => {
@@ -205,17 +267,42 @@ impl FrameCodec {
             };
             if lat_k > 1 {
                 let nbits = self.lattice_field_bits(lat_k);
-                let rank = with_binomials(|c| composition_rank(&q.counts, c));
-                w.write_bits_big(&rank, nbits);
+                Self::write_lattice_rank(&q.counts, nbits, w);
                 tb.lattice = nbits;
             }
 
             w.write_bits_u64(dt.token as u64, tok_bits.max(1));
             debug_assert_eq!(w.bit_len() - before, tb.total());
-            breakdown.push(tb);
+            self.breakdown.push(tb);
         }
 
-        breakdown
+        &self.breakdown
+    }
+
+    /// Write a support rank: table-driven u128 when it fits the field,
+    /// bigint otherwise.  Identical bits either way (the rank is the same
+    /// integer, written MSB-first at the same width).
+    fn write_support_rank(support: &[u16], nbits: usize, w: &mut BitWriter) {
+        if nbits <= 128 {
+            if let Some(rank) = with_binom_table(|t| subset_rank_u128(support, t)) {
+                w.write_bits_u128(rank, nbits);
+                return;
+            }
+        }
+        let rank = with_binomials(|c| subset_rank(support, c));
+        w.write_bits_big(&rank, nbits);
+    }
+
+    /// Write a lattice (composition) rank; same fast/fallback split.
+    fn write_lattice_rank(counts: &[u32], nbits: usize, w: &mut BitWriter) {
+        if nbits <= 128 {
+            if let Some(rank) = with_binom_table(|t| composition_rank_u128(counts, t)) {
+                w.write_bits_u128(rank, nbits);
+                return;
+            }
+        }
+        let rank = with_binomials(|c| composition_rank(counts, c));
+        w.write_bits_big(&rank, nbits);
     }
 
     /// Decode a frame previously produced by `encode` (same config).
@@ -225,93 +312,147 @@ impl FrameCodec {
     }
 
     /// Decode the v1 draft layout from a bit stream (the protocol-v2
-    /// frame body).  Malformed input — truncation, out-of-range ranks,
-    /// tokens beyond the vocabulary — returns `Err`, never panics: ranks
-    /// are range-checked against their binomial bounds *before* the
-    /// unrank (whose precondition would otherwise be violated).
+    /// frame body) into an owned frame.  Thin wrapper over `decode_view`
+    /// (the engine) — kept for the cold paths and tests that want owned
+    /// tokens without managing an arena.
     pub fn decode_from(&mut self, r: &mut BitReader) -> Result<DraftFrame, String> {
+        let mut arena = FrameArena::new();
+        let view = self.decode_view(r, &mut arena)?;
+        Ok(view.to_frame())
+    }
+
+    /// Borrowed decode: parse the v1 draft layout directly into `arena`'s
+    /// reused token slots and return a view of them.  This *is* the
+    /// decoder — the owned path is a `to_frame()` wrapper — so malformed
+    /// input (truncation, out-of-range ranks, tokens beyond the
+    /// vocabulary) returns `Err` and never panics: ranks are range-checked
+    /// against their binomial bounds *before* the unrank (whose
+    /// precondition would otherwise be violated).  Ranks whose bounding
+    /// binomial fits u128 take the table-driven fixed-width path; larger
+    /// fields fall back to bigint — both read the same bits and produce
+    /// the same tokens.
+    pub fn decode_view<'a>(&mut self, r: &mut BitReader,
+                           arena: &'a mut FrameArena)
+                           -> Result<DraftFrameView<'a>, String> {
         let batch_id = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
         let n = r.read_bits_u64(8).map_err(|e| e.to_string())? as usize;
         let tok_bits = ceil_log2_u64(self.vocab as u64).max(1);
-        let mut tokens = Vec::with_capacity(n);
+        let (vocab, ell) = (self.vocab, self.ell);
+        arena.live = 0;
 
-        for _ in 0..n {
-            let (support, k) = match self.scheme {
-                SchemeBits::FixedK => {
-                    let k = self.fixed_k;
-                    let nbits = self.support_field_bits(k);
-                    let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
-                    let in_range = with_binomials(|c| {
-                        rank.cmp_big(c.get(self.vocab as u64, k as u64))
-                            == std::cmp::Ordering::Less
-                    });
-                    if !in_range {
-                        return Err(format!("support rank out of range for K={k}"));
-                    }
-                    (with_binomials(|c| subset_unrank(rank, self.vocab, k, c)), k)
-                }
+        for idx in 0..n {
+            let k = match self.scheme {
+                SchemeBits::FixedK => self.fixed_k,
                 SchemeBits::Adaptive => {
                     let k = r.read_bits_u64(tok_bits).map_err(|e| e.to_string())? as usize + 1;
-                    if k > self.vocab {
+                    if k > vocab {
                         return Err(format!("bad adaptive k={k}"));
                     }
-                    let nbits = self.support_field_bits(k);
-                    let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
+                    k
+                }
+                SchemeBits::Dense => vocab,
+            };
+            let support_bits = match self.scheme {
+                SchemeBits::Dense => 0,
+                _ => self.support_field_bits(k),
+            };
+            let lattice_bits = self.lattice_field_bits(k);
+            arena.slot(idx, ell); // init/clear the slot, then split-borrow
+            let slot = &mut arena.tokens[idx];
+            let divs = &mut arena.divs;
+
+            // support set
+            match self.scheme {
+                SchemeBits::Dense => {
+                    slot.quant.support.extend(0..vocab as u16);
+                }
+                _ => {
+                    let fast = support_bits <= 128
+                        && with_binom_table(|t| t.get(vocab as u64, k as u64)).is_some();
+                    if fast {
+                        let rank = r.read_bits_u128(support_bits).map_err(|e| e.to_string())?;
+                        let total = with_binom_table(|t| t.get(vocab as u64, k as u64))
+                            .expect("checked above");
+                        if rank >= total {
+                            return Err(format!("support rank out of range for K={k}"));
+                        }
+                        with_binom_table(|t| {
+                            subset_unrank_u128_into(rank, vocab, k, t, &mut slot.quant.support)
+                        });
+                    } else {
+                        let mut rank = r.read_bits_big(support_bits).map_err(|e| e.to_string())?;
+                        let in_range = with_binomials(|c| {
+                            rank.cmp_big(c.get(vocab as u64, k as u64))
+                                == std::cmp::Ordering::Less
+                        });
+                        if !in_range {
+                            return Err(format!("support rank out of range for K={k}"));
+                        }
+                        with_binomials(|c| {
+                            subset_unrank_into(&mut rank, vocab, k, c, &mut slot.quant.support)
+                        });
+                    }
+                }
+            }
+
+            // lattice counts (over the support, which the decoder now knows)
+            if k > 1 {
+                let fast = lattice_bits <= 128
+                    && with_binom_table(|t| t.get(ell as u64 + k as u64 - 1, k as u64 - 1))
+                        .is_some();
+                if fast {
+                    let rank = r.read_bits_u128(lattice_bits).map_err(|e| e.to_string())?;
+                    let total = with_binom_table(|t| {
+                        t.get(ell as u64 + k as u64 - 1, k as u64 - 1)
+                    })
+                    .expect("checked above");
+                    if rank >= total {
+                        return Err(format!("lattice rank out of range for K={k}, ell={ell}"));
+                    }
+                    with_binom_table(|t| {
+                        composition_unrank_u128_into(rank, ell, k, t, divs, &mut slot.quant.counts)
+                    });
+                } else {
+                    let rank = r.read_bits_big(lattice_bits).map_err(|e| e.to_string())?;
                     let in_range = with_binomials(|c| {
-                        rank.cmp_big(c.get(self.vocab as u64, k as u64))
+                        rank.cmp_big(c.get(ell as u64 + k as u64 - 1, k as u64 - 1))
                             == std::cmp::Ordering::Less
                     });
                     if !in_range {
-                        return Err(format!("support rank out of range for k={k}"));
+                        return Err(format!("lattice rank out of range for K={k}, ell={ell}"));
                     }
-                    (with_binomials(|c| subset_unrank(rank, self.vocab, k, c)), k)
+                    slot.quant.counts = with_binomials(|c| composition_unrank(rank, ell, k, c));
                 }
-                SchemeBits::Dense => {
-                    ((0..self.vocab as u16).collect::<Vec<u16>>(), self.vocab)
-                }
-            };
-
-            let counts = if k > 1 {
-                let nbits = self.lattice_field_bits(k);
-                let rank = r.read_bits_big(nbits).map_err(|e| e.to_string())?;
-                let in_range = with_binomials(|c| {
-                    rank.cmp_big(c.get(self.ell as u64 + k as u64 - 1, k as u64 - 1))
-                        == std::cmp::Ordering::Less
-                });
-                if !in_range {
-                    return Err(format!("lattice rank out of range for K={k}, ell={}", self.ell));
-                }
-                with_binomials(|c| composition_unrank(rank, self.ell, k, c))
             } else {
-                vec![self.ell]
-            };
+                slot.quant.counts.push(ell);
+            }
 
             let token = r.read_bits_u64(tok_bits).map_err(|e| e.to_string())? as u16;
-            if token as usize >= self.vocab {
-                return Err(format!("draft token {token} outside vocab {}", self.vocab));
+            if token as usize >= vocab {
+                return Err(format!("draft token {token} outside vocab {vocab}"));
             }
-            tokens.push(DraftToken {
-                quant: Quantized {
-                    support,
-                    counts,
-                    ell: self.ell,
-                    // alpha is edge-local bookkeeping; not on the wire
-                    alpha: f32::NAN,
-                },
-                token,
-            });
+            slot.token = token;
+            arena.live = idx + 1;
         }
-        Ok(DraftFrame { batch_id, tokens })
+        Ok(DraftFrameView { batch_id, tokens: &arena.tokens[..arena.live] })
     }
 
     /// Feedback is tiny and fixed-size; encoded for completeness.
     pub fn encode_feedback(&self, fb: &FeedbackFrame) -> (Vec<u8>, usize) {
         let mut w = BitWriter::new();
+        let bits = self.encode_feedback_into(fb, &mut w);
+        (w.finish(), bits)
+    }
+
+    /// Serialize feedback into an existing writer (steady-state paths
+    /// recycle the writer's buffer instead of allocating per frame);
+    /// returns the bits written.
+    pub fn encode_feedback_into(&self, fb: &FeedbackFrame, w: &mut BitWriter) -> usize {
+        let before = w.bit_len();
         w.write_bits_u64(fb.batch_id as u64, 32);
         w.write_bits_u64(fb.accepted as u64, 16);
         w.write_bits_u64(fb.new_token as u64, 16);
-        let bits = w.bit_len();
-        (w.finish(), bits)
+        w.bit_len() - before
     }
 
     pub fn decode_feedback(&self, bytes: &[u8]) -> Result<FeedbackFrame, String> {
@@ -423,6 +564,45 @@ mod tests {
             let (bytes, _b, _tb) = codec.encode(&frame);
             let back = codec.decode(&bytes).unwrap();
             assert_eq!(back.tokens[0].quant.counts, frame.tokens[0].quant.counts);
+        });
+    }
+
+    #[test]
+    fn view_decode_matches_owned_across_schemes_and_reuse() {
+        check("view == owned decode", 60, |g, _| {
+            let vocab = 256;
+            let ell = *g.pick(&[10u32, 100, 500]);
+            let (scheme, sp, fixed_k) = match g.int(0, 2) {
+                0 => {
+                    let k = g.usize(1, 64);
+                    (SchemeBits::FixedK, Sparsifier::top_k(k), k)
+                }
+                1 => (SchemeBits::Adaptive, Sparsifier::threshold(g.f32(0.0, 0.3)), 0),
+                _ => (SchemeBits::Dense, Sparsifier::Dense, 0),
+            };
+            let mut codec = FrameCodec::new(vocab, ell, scheme, fixed_k);
+            let l = g.usize(1, 6);
+            let tokens: Vec<DraftToken> = (0..l)
+                .map(|_| {
+                    let quant = quantize_random(g, vocab, ell, &sp);
+                    let token = quant.support[0];
+                    DraftToken { quant, token }
+                })
+                .collect();
+            let frame = DraftFrame { batch_id: 42, tokens };
+            let (bytes, _bits, _tb) = codec.encode(&frame);
+            let owned = codec.decode(&bytes).unwrap();
+            assert_eq!(owned, frame, "decode must invert encode (wire equality)");
+            // decode twice through ONE arena: the second pass reuses the
+            // first pass's slots and must still agree with the owned path
+            let mut arena = FrameArena::new();
+            for _ in 0..2 {
+                let mut r = BitReader::new(&bytes);
+                let view = codec.decode_view(&mut r, &mut arena).unwrap();
+                assert_eq!(view.batch_id, owned.batch_id);
+                assert_eq!(view.tokens, &owned.tokens[..]);
+                assert_eq!(view.to_frame(), owned);
+            }
         });
     }
 

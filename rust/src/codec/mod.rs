@@ -10,4 +10,7 @@ pub mod combinadic;
 pub mod frame;
 pub mod multiset;
 
-pub use frame::{DraftFrame, DraftToken, FeedbackFrame, FrameCodec, TokenBits};
+pub use frame::{
+    DraftFrame, DraftFrameView, DraftToken, FeedbackFrame, FrameArena, FrameCodec,
+    TokenBits,
+};

@@ -3,8 +3,9 @@
 //! (eq. (2)).  A composition maps to a (K-1)-subset of {0..ell+K-2} via
 //! stars-and-bars (divider positions), reusing the combinadic codec.
 
-use super::combinadic::{subset_rank, subset_unrank};
+use super::combinadic::{subset_rank, subset_unrank, subset_unrank_u128_into};
 use crate::util::bigint::{BigUint, BinomialCache};
+use crate::util::binom_table::BinomTable;
 
 /// Divider positions of a composition: divider i sits after the first i
 /// parts, at position parts[0]+..+parts[i] + i.
@@ -50,6 +51,49 @@ pub fn composition_unrank(rank: BigUint, ell: u32, k: usize,
     }
     let divs = subset_unrank(rank, ell as usize + k - 1, k - 1, cache);
     from_dividers(&divs, ell, k)
+}
+
+/// Fixed-width fast path of `composition_rank`: divider positions are
+/// computed on the fly (no intermediate Vec) and ranked through the u128
+/// table.  None on overflow — fall back to the bigint path.
+pub fn composition_rank_u128(parts: &[u32], table: &mut BinomTable) -> Option<u128> {
+    assert!(!parts.is_empty());
+    let k = parts.len();
+    if k == 1 {
+        return Some(0); // single part is forced; zero information
+    }
+    let mut rank: u128 = 0;
+    let mut acc: u64 = 0;
+    for (i, &p) in parts.iter().take(k - 1).enumerate() {
+        acc += p as u64;
+        let d = acc + i as u64; // divider position, as in `to_dividers`
+        rank = rank.checked_add(table.get(d, i as u64 + 1)?)?;
+    }
+    Some(rank)
+}
+
+/// Fixed-width fast path of `composition_unrank`, writing the parts into a
+/// reused buffer via a caller-provided divider scratch.  Precondition:
+/// rank < C(ell+k-1, k-1), which fits u128.
+pub fn composition_unrank_u128_into(rank: u128, ell: u32, k: usize,
+                                    table: &mut BinomTable,
+                                    divs: &mut Vec<u16>, out: &mut Vec<u32>) {
+    assert!(k >= 1);
+    out.clear();
+    if k == 1 {
+        out.push(ell);
+        return;
+    }
+    subset_unrank_u128_into(rank, ell as usize + k - 1, k - 1, table, divs);
+    let mut prev: i64 = -1;
+    let mut total: u32 = 0;
+    for &d in divs.iter() {
+        let part = (d as i64 - prev - 1) as u32;
+        total += part;
+        out.push(part);
+        prev = d as i64;
+    }
+    out.push(ell - total);
 }
 
 #[cfg(test)]

@@ -49,8 +49,8 @@ use crate::control::{AdaptiveMode, BatchOutcome, ControlLoop, KnobPoint, Knobs};
 use crate::edge::EdgeNode;
 use crate::model::{DraftLm, TargetLm};
 use crate::protocol::{
-    negotiate, Direction, Ext, FeedbackV2, Frame, LinkTransport, SeqAck, SeqDraft, Transport,
-    TreeAck, TreeDraft, PROTOCOL_V3, PROTOCOL_V4,
+    negotiate, Direction, Ext, FeedbackV2, Frame, FrameView, LinkTransport, SeqAck, SeqDraft,
+    Transport, TreeAck, TreeDraft, WireArena, PROTOCOL_V3, PROTOCOL_V4,
 };
 use crate::sqs::Policy;
 use crate::trace::{Dir, TraceData, TraceSink, ACTOR_CLOUD, ACTOR_LINK};
@@ -404,6 +404,9 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         let mut last_arrival = hs_done; // FIFO downlink: arrivals monotone
 
         let mut in_flight: VecDeque<InFlightBatch> = VecDeque::new();
+        // per-session decode scratch: uplink frames parse into this arena
+        // as borrowed views, so steady-state verify allocates no frame
+        let mut arena = WireArena::new();
         let mut speculated = 0usize; // uncommitted speculative tokens in flight
         let mut next_seq: u16 = 0;
         let mut edge_epoch: u8 = 0;
@@ -545,14 +548,22 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
 
                 // ---- cloud: decode the wire bytes + verify.  Evaluated
                 // eagerly at send time (FIFO service order == send order;
-                // nothing reaches the edge before `arrive_at`) ------------
+                // nothing reaches the edge before `arrive_at`).  The
+                // frame parses as a borrowed view into the session arena
+                // — the cloud verifies straight off the borrowed token
+                // slices, so no owned frame is ever materialized --------
                 let (verdict, llm_time, fb_out, full_trunk) = match self
                     .transport
-                    .recv_frame(Direction::Up, &mut self.edge.wire)?
+                    .recv_frame_view(Direction::Up, &mut self.edge.wire, &mut arena)?
                 {
-                    Frame::Draft(f) if !pipelined => {
+                    FrameView::Draft(f) if !pipelined => {
                         let prev = *self.seq.last().unwrap();
-                        let v = self.cloud.verify_with_prev(&f, prev, self.cfg.temp)?;
+                        let v = self.cloud.verify_with_prev_tokens(
+                            f.batch_id,
+                            f.tokens,
+                            prev,
+                            self.cfg.temp,
+                        )?;
                         let llm = match self.cfg.timing {
                             TimingMode::Measured => v.t_llm,
                             TimingMode::Modeled { llm_call_s, .. } => llm_call_s,
@@ -560,19 +571,22 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                         let fb = v.feedback_v2(Vec::new());
                         (Some(v), llm, fb, false)
                     }
-                    Frame::DraftSeq(sd) if pipelined => {
-                        if sd.epoch != cloud_epoch {
+                    FrameView::DraftSeq { seq: sd_seq, epoch: sd_epoch, frame } if pipelined => {
+                        if sd_epoch != cloud_epoch {
                             // stale: drafted on a branch a rejection killed
                             (
                                 None,
                                 0.0,
-                                FeedbackV2::discard(sd.frame.batch_id, sd.seq, sd.epoch),
+                                FeedbackV2::discard(frame.batch_id, sd_seq, sd_epoch),
                                 false,
                             )
                         } else {
-                            let v = self
-                                .cloud
-                                .verify_pipelined(&sd.frame, cloud_prev, self.cfg.temp)?;
+                            let v = self.cloud.verify_pipelined_tokens(
+                                frame.batch_id,
+                                frame.tokens,
+                                cloud_prev,
+                                self.cfg.temp,
+                            )?;
                             if v.rejected {
                                 cloud_epoch = cloud_epoch.wrapping_add(1);
                             }
@@ -583,14 +597,14 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                             };
                             let mut fb = v.feedback_v2(Vec::new());
                             fb.exts.push(Ext::Ack(SeqAck {
-                                seq: sd.seq,
-                                epoch: sd.epoch,
+                                seq: sd_seq,
+                                epoch: sd_epoch,
                                 discard: false,
                             }));
                             (Some(v), llm, fb, false)
                         }
                     }
-                    Frame::DraftTree(td) if tree_capable => {
+                    FrameView::DraftTree(td) if tree_capable => {
                         if td.epoch != cloud_epoch {
                             // stale tree: same linear discard ack, so the
                             // edge's ledger drains uniformly
@@ -601,7 +615,8 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                                 false,
                             )
                         } else {
-                            let tv = self.cloud.verify_tree(&td, cloud_prev, self.cfg.temp)?;
+                            let tv =
+                                self.cloud.verify_tree_ref(td.tree_ref(), cloud_prev, self.cfg.temp)?;
                             // the epoch moves unless the full trunk held:
                             // any divergence invalidates the speculative
                             // continuation drafted past the trunk tip
@@ -673,8 +688,15 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     frame: "feedback",
                     bits: d_down.bits,
                 });
-                let fb = match self.transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
-                    Frame::Feedback(f) => f,
+                // the feedback outlives this round in the in-flight ledger,
+                // so it is the one piece promoted to an owned frame — but
+                // still parsed through the session arena, not a fresh one
+                let fb = match self.transport.recv_frame_view(
+                    Direction::Down,
+                    &mut self.edge.wire,
+                    &mut arena,
+                )? {
+                    FrameView::Feedback(f) => f.to_feedback(),
                     other => bail!("expected a Feedback frame, got {}", other.name()),
                 };
 

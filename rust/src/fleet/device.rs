@@ -40,8 +40,8 @@ use crate::edge::EdgeNode;
 use crate::model::synthetic::{SyntheticDraft, SyntheticTarget, SyntheticWorld};
 use crate::model::{DraftLm, TargetLm};
 use crate::protocol::{
-    Delivery, Direction, Ext, FeedbackV2, Frame, SeqAck, SeqDraft, SharedPort, Transport,
-    TreeAck, TreeDraft,
+    Delivery, Direction, Ext, FeedbackV2, Frame, FrameView, SeqAck, SeqDraft, SharedPort,
+    Transport, TreeAck, TreeDraft, WireArena,
 };
 use crate::sqs::{Policy, Sparsifier};
 use crate::trace::{Dir, TraceData, TraceSink, ACTOR_CLOUD};
@@ -239,6 +239,10 @@ pub struct Device {
     last_knobs: Option<Knobs>,
     /// fleet-level attribution metric handles (None in unit drivers)
     attrib: Option<AttribSinks>,
+    /// per-device decode scratch: frames off the port parse into this
+    /// arena as borrowed views, so steady-state verify/apply allocate
+    /// no frame structures
+    arena: WireArena,
 }
 
 impl Device {
@@ -314,6 +318,7 @@ impl Device {
             trace_now: 0.0,
             last_knobs: None,
             attrib: None,
+            arena: WireArena::new(),
         }
     }
 
@@ -564,15 +569,18 @@ impl Device {
     /// verify side discards without touching the target model.
     pub fn verify_now(&mut self, exts: Vec<Ext>) -> Result<usize> {
         let temp = self.profile.temp;
-        match self.port.recv_frame(Direction::Up, &mut self.edge.wire)? {
-            Frame::Draft(frame) => {
+        // the frame parses as a borrowed view into the device arena; the
+        // cloud verifies straight off the borrowed token slices
+        match self.port.recv_frame_view(Direction::Up, &mut self.edge.wire, &mut self.arena)? {
+            FrameView::Draft(frame) => {
                 // v2 alternating path (depth 1), unchanged
                 let req = self
                     .active
                     .as_ref()
                     .ok_or_else(|| anyhow!("verify without active request"))?;
                 let prev = *req.seq.last().unwrap();
-                let verdict = self.cloud.verify_with_prev(&frame, prev, temp)?;
+                let verdict =
+                    self.cloud.verify_with_prev_tokens(frame.batch_id, frame.tokens, prev, temp)?;
                 let pending = self
                     .in_flight
                     .front_mut()
@@ -584,24 +592,29 @@ impl Device {
                 self.ready_feedback.push_back(pending.seq);
                 Ok(window)
             }
-            Frame::DraftSeq(sd) => {
+            FrameView::DraftSeq { seq, epoch, frame } => {
                 let idx = self
                     .in_flight
                     .iter()
-                    .position(|p| p.seq == sd.seq && !p.served)
+                    .position(|p| p.seq == seq && !p.served)
                     .ok_or_else(|| {
-                        anyhow!("device {}: sequenced draft {} not in flight", self.id, sd.seq)
+                        anyhow!("device {}: sequenced draft {} not in flight", self.id, seq)
                     })?;
-                if sd.epoch != self.cloud_epoch {
+                if epoch != self.cloud_epoch {
                     // stale: drafted on a branch a rejection already killed
                     let p = &mut self.in_flight[idx];
                     p.discard = true;
                     p.served = true;
                     p.exts = exts;
-                    self.ready_feedback.push_back(sd.seq);
+                    self.ready_feedback.push_back(seq);
                     return Ok(0);
                 }
-                let verdict = self.cloud.verify_pipelined(&sd.frame, self.cloud_prev, temp)?;
+                let verdict = self.cloud.verify_pipelined_tokens(
+                    frame.batch_id,
+                    frame.tokens,
+                    self.cloud_prev,
+                    temp,
+                )?;
                 if verdict.rejected {
                     self.cloud_epoch = self.cloud_epoch.wrapping_add(1);
                 }
@@ -611,10 +624,10 @@ impl Device {
                 p.verdict = Some(verdict);
                 p.exts = exts;
                 p.served = true;
-                self.ready_feedback.push_back(sd.seq);
+                self.ready_feedback.push_back(seq);
                 Ok(window)
             }
-            Frame::DraftTree(td) => {
+            FrameView::DraftTree(td) => {
                 let idx = self
                     .in_flight
                     .iter()
@@ -632,7 +645,7 @@ impl Device {
                     return Ok(0);
                 }
                 let nodes = td.frame.tokens.len();
-                let tv = self.cloud.verify_tree(&td, self.cloud_prev, temp)?;
+                let tv = self.cloud.verify_tree_ref(td.tree_ref(), self.cloud_prev, temp)?;
                 if !tv.full_trunk {
                     self.cloud_epoch = self.cloud_epoch.wrapping_add(1);
                 }
@@ -718,8 +731,14 @@ impl Device {
     /// request has produced all its tokens and nothing is left in
     /// flight.
     pub fn apply_feedback(&mut self) -> Result<bool> {
-        let fb = match self.port.recv_frame(Direction::Down, &mut self.edge.wire)? {
-            Frame::Feedback(f) => f,
+        // parse through the device arena; the feedback is then promoted
+        // to an owned frame because it drives the whole sync below
+        let fb = match self.port.recv_frame_view(
+            Direction::Down,
+            &mut self.edge.wire,
+            &mut self.arena,
+        )? {
+            FrameView::Feedback(f) => f.to_feedback(),
             other => bail!("device {}: expected a Feedback frame, got {}", self.id, other.name()),
         };
         let pipelined = self.pipelined();

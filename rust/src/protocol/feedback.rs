@@ -191,6 +191,94 @@ pub struct FeedbackV2 {
     pub exts: Vec<Ext>,
 }
 
+/// A feedback frame borrowed out of a `WireArena`: the core fields by
+/// value, the extensions as a slice into the arena's reused buffer.
+/// Mirrors every [`FeedbackV2`] query; `to_feedback()` is the explicit
+/// ownership step for state that must outlive the arena.
+#[derive(Clone, Copy, Debug)]
+pub struct FeedbackView<'a> {
+    pub batch_id: u32,
+    pub accepted: u16,
+    pub new_token: u16,
+    pub exts: &'a [Ext],
+}
+
+// Extension queries shared by the owned frame and the borrowed view, so
+// the two paths cannot drift apart.
+fn find_congestion(exts: &[Ext]) -> bool {
+    exts.iter().any(|e| matches!(e, Ext::Congestion(true)))
+}
+
+fn find_grant(exts: &[Ext]) -> Option<u32> {
+    exts.iter().find_map(|e| match e {
+        Ext::BudgetGrant(g) => Some(*g),
+        _ => None,
+    })
+}
+
+fn find_ack(exts: &[Ext]) -> Option<SeqAck> {
+    exts.iter().find_map(|e| match e {
+        Ext::Ack(a) => Some(*a),
+        _ => None,
+    })
+}
+
+fn find_tree_ack(exts: &[Ext]) -> Option<TreeAck> {
+    exts.iter().find_map(|e| match e {
+        Ext::TreeAck(a) => Some(*a),
+        _ => None,
+    })
+}
+
+impl FeedbackView<'_> {
+    /// Owned copy, for the (cold) paths that must outlive the arena.
+    pub fn to_feedback(&self) -> FeedbackV2 {
+        FeedbackV2 {
+            batch_id: self.batch_id,
+            accepted: self.accepted,
+            new_token: self.new_token,
+            exts: self.exts.to_vec(),
+        }
+    }
+
+    /// The v1 view of the core fields.
+    pub fn core(&self) -> FeedbackFrame {
+        FeedbackFrame {
+            batch_id: self.batch_id,
+            accepted: self.accepted,
+            new_token: self.new_token,
+        }
+    }
+
+    /// True iff a congestion extension is set.
+    pub fn congestion(&self) -> bool {
+        find_congestion(self.exts)
+    }
+
+    /// The budget grant, if one rode this frame.
+    pub fn grant(&self) -> Option<u32> {
+        find_grant(self.exts)
+    }
+
+    /// The sequence ack, if one rode this frame (pipelined sessions).
+    pub fn ack(&self) -> Option<SeqAck> {
+        find_ack(self.exts)
+    }
+
+    /// The tree ack, if one rode this frame (token-tree sessions).
+    pub fn tree_ack(&self) -> Option<TreeAck> {
+        find_tree_ack(self.exts)
+    }
+
+    /// The acknowledged sequence number and discard bit, either flavor.
+    pub fn acked_seq(&self) -> Option<(u16, bool)> {
+        if let Some(a) = self.ack() {
+            return Some((a.seq, a.discard));
+        }
+        self.tree_ack().map(|a| (a.seq, a.discard))
+    }
+}
+
 impl FeedbackV2 {
     pub fn plain(batch_id: u32, accepted: u16, new_token: u16) -> FeedbackV2 {
         FeedbackV2 { batch_id, accepted, new_token, exts: Vec::new() }
@@ -212,31 +300,22 @@ impl FeedbackV2 {
 
     /// True iff a congestion extension is set.
     pub fn congestion(&self) -> bool {
-        self.exts.iter().any(|e| matches!(e, Ext::Congestion(true)))
+        find_congestion(&self.exts)
     }
 
     /// The budget grant, if one rode this frame.
     pub fn grant(&self) -> Option<u32> {
-        self.exts.iter().find_map(|e| match e {
-            Ext::BudgetGrant(g) => Some(*g),
-            _ => None,
-        })
+        find_grant(&self.exts)
     }
 
     /// The sequence ack, if one rode this frame (pipelined sessions).
     pub fn ack(&self) -> Option<SeqAck> {
-        self.exts.iter().find_map(|e| match e {
-            Ext::Ack(a) => Some(*a),
-            _ => None,
-        })
+        find_ack(&self.exts)
     }
 
     /// The tree ack, if one rode this frame (token-tree sessions).
     pub fn tree_ack(&self) -> Option<TreeAck> {
-        self.exts.iter().find_map(|e| match e {
-            Ext::TreeAck(a) => Some(*a),
-            _ => None,
-        })
+        find_tree_ack(&self.exts)
     }
 
     /// The sequence number this frame acknowledges, regardless of ack
@@ -286,11 +365,33 @@ impl FeedbackV2 {
     }
 
     pub(crate) fn decode_from(r: &mut BitReader) -> Result<FeedbackV2, String> {
+        let mut exts = Vec::new();
+        let (batch_id, accepted, new_token) = Self::decode_parts(r, &mut exts)?;
+        Ok(FeedbackV2 { batch_id, accepted, new_token, exts })
+    }
+
+    /// Decode into a borrowed view whose extensions land in the caller's
+    /// reused buffer — the zero-alloc steady-state path.  Same parser as
+    /// `decode_from`, so the two cannot diverge.
+    pub(crate) fn decode_view<'a>(
+        r: &mut BitReader,
+        exts: &'a mut Vec<Ext>,
+    ) -> Result<FeedbackView<'a>, String> {
+        let (batch_id, accepted, new_token) = Self::decode_parts(r, exts)?;
+        Ok(FeedbackView { batch_id, accepted, new_token, exts })
+    }
+
+    /// The one feedback parser: core fields returned, extensions pushed
+    /// into `exts` (cleared first; capacity kept).
+    fn decode_parts(
+        r: &mut BitReader,
+        exts: &mut Vec<Ext>,
+    ) -> Result<(u32, u16, u16), String> {
+        exts.clear();
         let batch_id = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
         let accepted = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
         let new_token = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
         let n = r.read_bits_u64(EXT_COUNT_BITS).map_err(|e| e.to_string())? as usize;
-        let mut exts = Vec::with_capacity(n);
         for _ in 0..n {
             let tag = r.read_bits_u64(EXT_TAG_BITS).map_err(|e| e.to_string())? as u8;
             let width = r.read_bits_u64(EXT_WIDTH_BITS).map_err(|e| e.to_string())? as usize;
@@ -327,7 +428,7 @@ impl FeedbackV2 {
                 t => Ext::Unknown { tag: t, width: width as u8, value },
             });
         }
-        Ok(FeedbackV2 { batch_id, accepted, new_token, exts })
+        Ok((batch_id, accepted, new_token))
     }
 }
 
@@ -455,6 +556,37 @@ mod tests {
         let bytes = w.finish();
         let mut r = BitReader::new(&bytes);
         assert!(FeedbackV2::decode_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn view_decode_matches_owned_through_dirty_reuse() {
+        let fb = FeedbackV2 {
+            batch_id: 77,
+            accepted: 2,
+            new_token: 5,
+            exts: vec![
+                Ext::Congestion(true),
+                Ext::Ack(SeqAck { seq: 9, epoch: 1, discard: false }),
+                Ext::Unknown { tag: 7, width: 13, value: 0x1ABC },
+            ],
+        };
+        let mut w = BitWriter::new();
+        fb.encode_into(&mut w).unwrap();
+        let bytes = w.finish();
+        // decode twice through one dirty scratch buffer: the view must
+        // equal the owned decode each pass, stale contents notwithstanding
+        let mut scratch = vec![Ext::BudgetGrant(1234); 9];
+        for _ in 0..2 {
+            let mut r = BitReader::new(&bytes);
+            let v = FeedbackV2::decode_view(&mut r, &mut scratch).unwrap();
+            assert_eq!(v.to_feedback(), fb);
+            assert_eq!(v.core(), fb.core());
+            assert!(v.congestion());
+            assert_eq!(v.grant(), None, "stale grant must not leak from the buffer");
+            assert_eq!(v.ack(), fb.ack());
+            assert_eq!(v.tree_ack(), None);
+            assert_eq!(v.acked_seq(), Some((9, false)));
+        }
     }
 
     #[test]

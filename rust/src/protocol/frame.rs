@@ -44,11 +44,11 @@
 //! Decode validates the pointer table (count mismatch or out-of-range
 //! parents `Err`, never panic; fuzzed in `tests/protocol.rs`).
 
-use crate::codec::{DraftFrame, FrameCodec, TokenBits};
+use crate::codec::{DraftFrame, DraftFrameView, FrameArena, FrameCodec, TokenBits};
 use crate::sqs::bits::SchemeBits;
 use crate::util::bitio::{BitReader, BitWriter};
 
-use super::feedback::FeedbackV2;
+use super::feedback::{Ext, FeedbackV2, FeedbackView};
 use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2, PROTOCOL_V3, PROTOCOL_V4};
 
 /// Self-describing per-frame header: 4-bit version + 4-bit type tag.
@@ -145,58 +145,107 @@ pub struct TreeDraft {
     pub frame: DraftFrame,
 }
 
+// ---- tree structure over a bare parent table -----------------------------
+//
+// The walk helpers are free functions over `parents: &[u8]` so the owned
+// `TreeDraft` and the borrowed view/verify paths share one implementation
+// (and the hot paths can iterate without materializing child lists).
+
+/// Structural validation shared by encode and decode: one parent per
+/// node, every pointer earlier than its node or [`NO_PARENT`], at least
+/// one root, and node ids representable in 8 bits.
+pub fn tree_validate(parents: &[u8], n_nodes: usize) -> Result<(), String> {
+    if n_nodes == 0 {
+        return Err("tree frame has no nodes".into());
+    }
+    if n_nodes > NO_PARENT as usize {
+        return Err(format!("tree of {n_nodes} nodes overflows the 8-bit id space"));
+    }
+    if parents.len() != n_nodes {
+        return Err(format!(
+            "parent table has {} entries for {n_nodes} nodes",
+            parents.len()
+        ));
+    }
+    for (i, &p) in parents.iter().enumerate() {
+        if p != NO_PARENT && p as usize >= i {
+            return Err(format!("node {i} has out-of-range parent {p}"));
+        }
+    }
+    if parents[0] != NO_PARENT {
+        return Err("node 0 must be a root".into());
+    }
+    Ok(())
+}
+
+/// Children of `parent` (or the roots, for [`NO_PARENT`]), in node order
+/// — the cloud walk's candidate order at one tree level.  Allocation-free.
+pub fn tree_children(parents: &[u8], parent: u8) -> impl Iterator<Item = u8> + '_ {
+    parents
+        .iter()
+        .enumerate()
+        .filter(move |&(_, &p)| p == parent)
+        .map(|(i, _)| i as u8)
+}
+
+/// First child of `parent` in node order, if any.
+pub fn tree_first_child(parents: &[u8], parent: u8) -> Option<u8> {
+    tree_children(parents, parent).next()
+}
+
+/// Root-to-`node` path as node indices, written into a reused buffer
+/// (cleared first; empty for [`NO_PARENT`]).
+pub fn tree_path_into(parents: &[u8], node: u8, out: &mut Vec<u8>) {
+    out.clear();
+    if node == NO_PARENT {
+        return;
+    }
+    out.push(node);
+    let mut cur = node;
+    while parents[cur as usize] != NO_PARENT {
+        cur = parents[cur as usize];
+        out.push(cur);
+    }
+    out.reverse();
+}
+
+/// Token values along the trunk (the chain of first children).
+pub fn tree_trunk_tokens(parents: &[u8], tokens: &[crate::codec::DraftToken]) -> Vec<u16> {
+    let mut out = Vec::new();
+    let mut cur = NO_PARENT;
+    while let Some(first) = tree_first_child(parents, cur) {
+        out.push(tokens[first as usize].token);
+        cur = first;
+    }
+    out
+}
+
 impl TreeDraft {
-    /// Structural validation shared by encode and decode: one parent per
-    /// node, every pointer earlier than its node or [`NO_PARENT`], at
-    /// least one root, and node ids representable in 8 bits.
+    /// Structural validation shared by encode and decode (see
+    /// [`tree_validate`]).
     pub fn validate(&self) -> Result<(), String> {
-        let n = self.frame.tokens.len();
-        if n == 0 {
-            return Err("tree frame has no nodes".into());
+        tree_validate(&self.parents, self.frame.tokens.len())
+    }
+
+    /// Borrowed view of this tree: what the cloud verifier walks.
+    pub fn as_ref(&self) -> TreeFrameRef<'_> {
+        TreeFrameRef {
+            batch_id: self.frame.batch_id,
+            parents: &self.parents,
+            tokens: &self.frame.tokens,
         }
-        if n > NO_PARENT as usize {
-            return Err(format!("tree of {n} nodes overflows the 8-bit id space"));
-        }
-        if self.parents.len() != n {
-            return Err(format!(
-                "parent table has {} entries for {n} nodes",
-                self.parents.len()
-            ));
-        }
-        for (i, &p) in self.parents.iter().enumerate() {
-            if p != NO_PARENT && p as usize >= i {
-                return Err(format!("node {i} has out-of-range parent {p}"));
-            }
-        }
-        if self.parents[0] != NO_PARENT {
-            return Err("node 0 must be a root".into());
-        }
-        Ok(())
     }
 
     /// Children of `parent` (or the roots, for [`NO_PARENT`]), in node
-    /// order — the cloud walk's candidate order at one tree level.
+    /// order.
     pub fn children(&self, parent: u8) -> Vec<u8> {
-        self.parents
-            .iter()
-            .enumerate()
-            .filter(|(_, &p)| p == parent)
-            .map(|(i, _)| i as u8)
-            .collect()
+        tree_children(&self.parents, parent).collect()
     }
 
     /// Root-to-`node` path as node indices (empty for [`NO_PARENT`]).
     pub fn path_to(&self, node: u8) -> Vec<u8> {
-        if node == NO_PARENT {
-            return Vec::new();
-        }
-        let mut path = vec![node];
-        let mut cur = node;
-        while self.parents[cur as usize] != NO_PARENT {
-            cur = self.parents[cur as usize];
-            path.push(cur);
-        }
-        path.reverse();
+        let mut path = Vec::new();
+        tree_path_into(&self.parents, node, &mut path);
         path
     }
 
@@ -214,8 +263,7 @@ impl TreeDraft {
     pub fn trunk(&self) -> Vec<u8> {
         let mut trunk = Vec::new();
         let mut cur = NO_PARENT;
-        loop {
-            let Some(&first) = self.children(cur).first() else { break };
+        while let Some(first) = tree_first_child(&self.parents, cur) {
             trunk.push(first);
             cur = first;
         }
@@ -224,11 +272,21 @@ impl TreeDraft {
 
     /// Token values along the trunk.
     pub fn trunk_tokens(&self) -> Vec<u16> {
-        self.trunk()
-            .into_iter()
-            .map(|i| self.frame.tokens[i as usize].token)
-            .collect()
+        tree_trunk_tokens(&self.parents, &self.frame.tokens)
     }
+}
+
+/// A token tree borrowed for verification: the node table and parent
+/// pointers without the sequencing envelope.  Both the owned `TreeDraft`
+/// (via [`TreeDraft::as_ref`]) and the arena-decoded [`FrameView`] lower
+/// to this, so the cloud's tree walk has one entry point.
+#[derive(Clone, Copy, Debug)]
+pub struct TreeFrameRef<'a> {
+    pub batch_id: u32,
+    /// `parents[i]` is an earlier node index (`< i`) or [`NO_PARENT`]
+    pub parents: &'a [u8],
+    /// node table in node order (`tokens[i]` is node `i`)
+    pub tokens: &'a [crate::codec::DraftToken],
 }
 
 /// One protocol-v2 frame on the wire.
@@ -255,6 +313,108 @@ impl Frame {
             Frame::Control(_) => "control",
             Frame::DraftSeq(_) => "draft_seq",
             Frame::DraftTree(_) => "draft_tree",
+        }
+    }
+}
+
+/// Scratch arena backing borrowed protocol decodes: the payload-layer
+/// [`FrameArena`] plus reused buffers for tree-parent bytes and feedback
+/// extensions.  One per session/device/connection; `decode_view` reuses
+/// it every round, so the steady-state receive path stops allocating.
+#[derive(Default)]
+pub struct WireArena {
+    /// Draft-token slot pool (support/counts capacity kept across rounds).
+    pub frame: FrameArena,
+    /// Parent bytes of the last tree frame (protocol v4).
+    pub(crate) parents: Vec<u8>,
+    /// Extensions of the last feedback frame.
+    pub(crate) exts: Vec<Ext>,
+}
+
+impl WireArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A sequenced token tree borrowed out of a [`WireArena`].
+#[derive(Clone, Copy, Debug)]
+pub struct TreeView<'a> {
+    pub seq: u16,
+    pub epoch: u8,
+    /// `parents[i]` is an earlier node index (`< i`) or [`NO_PARENT`]
+    pub parents: &'a [u8],
+    pub frame: DraftFrameView<'a>,
+}
+
+impl TreeView<'_> {
+    /// The verifier-facing borrow of this tree.
+    pub fn tree_ref(&self) -> TreeFrameRef<'_> {
+        TreeFrameRef {
+            batch_id: self.frame.batch_id,
+            parents: self.parents,
+            tokens: self.frame.tokens,
+        }
+    }
+
+    /// Owned copy, for the (cold) paths that must outlive the arena.
+    pub fn to_tree(&self) -> TreeDraft {
+        TreeDraft {
+            seq: self.seq,
+            epoch: self.epoch,
+            parents: self.parents.to_vec(),
+            frame: self.frame.to_frame(),
+        }
+    }
+}
+
+/// One protocol frame borrowed out of a [`WireArena`] — the zero-alloc
+/// steady-state mirror of [`Frame`].  Draft bodies, tree parents, and
+/// feedback extensions alias the arena's reused buffers; the cold
+/// handshake/control frames stay owned (their decode rate is once per
+/// session, not once per token).  Persisting state must go through
+/// [`FrameView::to_frame`] (the explicit ownership step).
+#[derive(Clone, Debug)]
+pub enum FrameView<'a> {
+    Hello(Hello),
+    HelloAck(HelloAck),
+    Draft(DraftFrameView<'a>),
+    Feedback(FeedbackView<'a>),
+    Control(Control),
+    /// Sequenced draft — protocol v3 pipelined sessions only.
+    DraftSeq { seq: u16, epoch: u8, frame: DraftFrameView<'a> },
+    /// Sequenced token tree — protocol v4 only.
+    DraftTree(TreeView<'a>),
+}
+
+impl FrameView<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameView::Hello(_) => "hello",
+            FrameView::HelloAck(_) => "hello_ack",
+            FrameView::Draft(_) => "draft",
+            FrameView::Feedback(_) => "feedback",
+            FrameView::Control(_) => "control",
+            FrameView::DraftSeq { .. } => "draft_seq",
+            FrameView::DraftTree(_) => "draft_tree",
+        }
+    }
+
+    /// Owned copy of the whole frame — what backlogged or deferred
+    /// frames go through before the arena is reused.
+    pub fn to_frame(&self) -> Frame {
+        match self {
+            FrameView::Hello(h) => Frame::Hello(*h),
+            FrameView::HelloAck(a) => Frame::HelloAck(*a),
+            FrameView::Draft(d) => Frame::Draft(d.to_frame()),
+            FrameView::Feedback(f) => Frame::Feedback(f.to_feedback()),
+            FrameView::Control(c) => Frame::Control(c.clone()),
+            FrameView::DraftSeq { seq, epoch, frame } => Frame::DraftSeq(SeqDraft {
+                seq: *seq,
+                epoch: *epoch,
+                frame: frame.to_frame(),
+            }),
+            FrameView::DraftTree(t) => Frame::DraftTree(t.to_tree()),
         }
     }
 }
@@ -389,8 +549,25 @@ impl WireCodec {
 
     /// Serialize a frame; returns (bytes, exact bit count).
     pub fn encode(&mut self, frame: &Frame) -> Result<(Vec<u8>, usize), String> {
-        let mut w = BitWriter::new();
+        let mut out = Vec::new();
+        let bits = self.encode_into(frame, &mut out)?;
+        Ok((out, bits))
+    }
+
+    /// Serialize a frame into a reused byte buffer (cleared first,
+    /// capacity kept) — the zero-alloc steady-state send path.  Returns
+    /// the exact bit count; on `Err` the buffer contents are unspecified
+    /// but its capacity is still retained.
+    pub fn encode_into(&mut self, frame: &Frame, out: &mut Vec<u8>) -> Result<usize, String> {
+        let mut w = BitWriter::from_vec(std::mem::take(out));
         w.write_bits_u64(self.version as u64, VERSION_BITS);
+        let res = self.write_frame(frame, &mut w);
+        let bits = w.bit_len();
+        *out = w.finish();
+        res.map(|()| bits)
+    }
+
+    fn write_frame(&mut self, frame: &Frame, w: &mut BitWriter) -> Result<(), String> {
         match frame {
             Frame::Hello(h) => {
                 w.write_bits_u64(TAG_HELLO, TAG_BITS);
@@ -420,7 +597,7 @@ impl WireCodec {
                     .payload
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
-                p.encode_into(d, &mut w);
+                p.encode_into(d, w);
             }
             Frame::DraftSeq(sd) => {
                 if self.version < PROTOCOL_V3 {
@@ -440,7 +617,7 @@ impl WireCodec {
                     .payload
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
-                p.encode_into(&sd.frame, &mut w);
+                p.encode_into(&sd.frame, w);
             }
             Frame::DraftTree(td) => {
                 if self.version < PROTOCOL_V4 {
@@ -461,11 +638,11 @@ impl WireCodec {
                     .payload
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
-                pc.encode_into(&td.frame, &mut w);
+                pc.encode_into(&td.frame, w);
             }
             Frame::Feedback(f) => {
                 w.write_bits_u64(TAG_FEEDBACK, TAG_BITS);
-                f.encode_into(&mut w)?;
+                f.encode_into(w)?;
             }
             Frame::Control(c) => {
                 w.write_bits_u64(TAG_CONTROL, TAG_BITS);
@@ -485,13 +662,30 @@ impl WireCodec {
                 }
             }
         }
-        let bits = w.bit_len();
-        Ok((w.finish(), bits))
+        Ok(())
     }
 
-    /// Decode any v2 frame.  Malformed or truncated input returns `Err`,
-    /// never panics (fuzzed in `tests/protocol.rs`).
+    /// Decode any v2 frame into an owned [`Frame`].  Thin wrapper over
+    /// [`WireCodec::decode_view`] (the engine) — kept for the cold paths
+    /// and tests that want owned frames without managing an arena.
+    /// Malformed or truncated input returns `Err`, never panics (fuzzed
+    /// in `tests/protocol.rs`).
     pub fn decode(&mut self, bytes: &[u8]) -> Result<Frame, String> {
+        let mut arena = WireArena::new();
+        Ok(self.decode_view(bytes, &mut arena)?.to_frame())
+    }
+
+    /// Decode any v2 frame into a borrowed [`FrameView`] whose hot-path
+    /// bodies (draft tokens, tree parents, feedback extensions) alias the
+    /// arena's reused buffers — the zero-alloc steady-state receive path.
+    /// Same version gating, same structural checks, same errors as the
+    /// owned decode (it IS the owned decode; `decode` wraps this).
+    pub fn decode_view<'a>(
+        &mut self,
+        bytes: &[u8],
+        arena: &'a mut WireArena,
+    ) -> Result<FrameView<'a>, String> {
+        let WireArena { frame: fa, parents, exts } = arena;
         let mut r = BitReader::new(bytes);
         let ver = r.read_bits_u64(VERSION_BITS).map_err(|e| e.to_string())? as u8;
         let tag = r.read_bits_u64(TAG_BITS).map_err(|e| e.to_string())?;
@@ -513,7 +707,14 @@ impl WireCodec {
                 let ell = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
                 let scheme = scheme_from(r.read_bits_u64(2).map_err(|e| e.to_string())?)?;
                 let fixed_k = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
-                Ok(Frame::Hello(Hello { min_version, max_version, vocab, ell, scheme, fixed_k }))
+                Ok(FrameView::Hello(Hello {
+                    min_version,
+                    max_version,
+                    vocab,
+                    ell,
+                    scheme,
+                    fixed_k,
+                }))
             }
             TAG_HELLO_ACK => {
                 let version = r.read_bits_u64(4).map_err(|e| e.to_string())? as u8;
@@ -522,14 +723,14 @@ impl WireCodec {
                 let ell = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
                 let scheme = scheme_from(r.read_bits_u64(2).map_err(|e| e.to_string())?)?;
                 let fixed_k = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
-                Ok(Frame::HelloAck(HelloAck { version, ok, vocab, ell, scheme, fixed_k }))
+                Ok(FrameView::HelloAck(HelloAck { version, ok, vocab, ell, scheme, fixed_k }))
             }
             TAG_DRAFT => {
                 let p = self
                     .payload
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
-                Ok(Frame::Draft(p.decode_from(&mut r)?))
+                Ok(FrameView::Draft(p.decode_view(&mut r, fa)?))
             }
             TAG_DRAFT_SEQ => {
                 if self.version < PROTOCOL_V3 {
@@ -544,7 +745,7 @@ impl WireCodec {
                     .payload
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
-                Ok(Frame::DraftSeq(SeqDraft { seq, epoch, frame: p.decode_from(&mut r)? }))
+                Ok(FrameView::DraftSeq { seq, epoch, frame: p.decode_view(&mut r, fa)? })
             }
             TAG_DRAFT_TREE => {
                 if self.version < PROTOCOL_V4 {
@@ -556,7 +757,7 @@ impl WireCodec {
                 let seq = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
                 let epoch = r.read_bits_u64(8).map_err(|e| e.to_string())? as u8;
                 let n = r.read_bits_u64(8).map_err(|e| e.to_string())? as usize;
-                let mut parents = Vec::with_capacity(n);
+                parents.clear();
                 for _ in 0..n {
                     parents.push(r.read_bits_u64(8).map_err(|e| e.to_string())? as u8);
                 }
@@ -564,19 +765,18 @@ impl WireCodec {
                     .payload
                     .as_mut()
                     .ok_or("draft frame before the handshake negotiated a codec")?;
-                let frame = p.decode_from(&mut r)?;
+                let frame = p.decode_view(&mut r, fa)?;
                 if frame.tokens.len() != n {
                     return Err(format!(
                         "tree declares {n} nodes but its body carries {}",
                         frame.tokens.len()
                     ));
                 }
-                let td = TreeDraft { seq, epoch, parents, frame };
                 // out-of-range parents must Err, never panic or misparse
-                td.validate()?;
-                Ok(Frame::DraftTree(td))
+                tree_validate(parents, n)?;
+                Ok(FrameView::DraftTree(TreeView { seq, epoch, parents, frame }))
             }
-            TAG_FEEDBACK => Ok(Frame::Feedback(FeedbackV2::decode_from(&mut r)?)),
+            TAG_FEEDBACK => Ok(FrameView::Feedback(FeedbackV2::decode_view(&mut r, exts)?)),
             TAG_CONTROL => {
                 let op = r.read_bits_u64(CONTROL_OP_BITS).map_err(|e| e.to_string())?;
                 match op {
@@ -586,9 +786,9 @@ impl WireCodec {
                         for _ in 0..n {
                             tokens.push(r.read_bits_u64(16).map_err(|e| e.to_string())? as u16);
                         }
-                        Ok(Frame::Control(Control::Prompt(tokens)))
+                        Ok(FrameView::Control(Control::Prompt(tokens)))
                     }
-                    OP_BYE => Ok(Frame::Control(Control::Bye)),
+                    OP_BYE => Ok(FrameView::Control(Control::Bye)),
                     other => Err(format!("unknown control op {other}")),
                 }
             }
@@ -775,6 +975,63 @@ mod tests {
         // truncations of a valid tree must Err, never panic
         for cut in 0..bytes.len() {
             assert!(v4.decode(&bytes[..cut]).is_err(), "truncation at {cut}");
+        }
+    }
+
+    #[test]
+    fn view_decode_matches_owned_across_kinds_and_reuse() {
+        let mut g = Gen { rng: Pcg64::new(41, 3) };
+        let mut v4 = codec();
+        v4.set_version(PROTOCOL_V4);
+        let fb = FeedbackV2 {
+            batch_id: 9,
+            accepted: 1,
+            new_token: 3,
+            exts: vec![Ext::Congestion(true), Ext::BudgetGrant(777)],
+        };
+        let frames = [
+            Frame::Draft(sample_draft(&mut g, 64, 4, 100, 3)),
+            Frame::DraftSeq(SeqDraft {
+                seq: 7,
+                epoch: 2,
+                frame: sample_draft(&mut g, 64, 4, 100, 2),
+            }),
+            Frame::DraftTree(sample_tree(&mut g)),
+            Frame::Feedback(fb),
+            Frame::Control(Control::Prompt(vec![1, 2, 3])),
+        ];
+        // two passes over every kind through ONE arena and ONE byte
+        // buffer: reuse must never leak state across frames, and the
+        // pooled encoder must match the allocating one byte-for-byte
+        let mut arena = WireArena::new();
+        let mut buf = Vec::new();
+        for _ in 0..2 {
+            for f in &frames {
+                let bits = v4.encode_into(f, &mut buf).unwrap();
+                let (fresh, fresh_bits) = v4.encode(f).unwrap();
+                assert_eq!(buf, fresh, "pooled encode must be byte-identical");
+                assert_eq!(bits, fresh_bits);
+                let owned = v4.decode(&buf).unwrap();
+                assert_eq!(&owned, f, "decode must invert encode");
+                let view = v4.decode_view(&buf, &mut arena).unwrap();
+                assert_eq!(view.name(), f.name());
+                assert_eq!(view.to_frame(), owned, "view must equal the owned decode");
+            }
+        }
+        // the tree view hands the verifier a borrowed parent table
+        let (tree_bytes, _) = v4.encode(&frames[2]).unwrap();
+        match v4.decode_view(&tree_bytes, &mut arena).unwrap() {
+            FrameView::DraftTree(tv) => {
+                assert_eq!(tv.parents, &[NO_PARENT, 0, NO_PARENT, 2][..]);
+                let tr = tv.tree_ref();
+                assert_eq!(tr.tokens.len(), 4);
+                assert_eq!(tr.batch_id, tv.frame.batch_id);
+                assert_eq!(
+                    tree_trunk_tokens(tr.parents, tr.tokens),
+                    tv.to_tree().trunk_tokens()
+                );
+            }
+            other => panic!("expected a tree view, got {}", other.name()),
         }
     }
 

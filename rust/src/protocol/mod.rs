@@ -28,10 +28,14 @@ pub mod feedback;
 pub mod frame;
 pub mod transport;
 
-pub use feedback::{fair_share_grant, Ext, FeedbackV2, SeqAck, TreeAck, MAX_GRANT_BITS};
+pub use feedback::{
+    fair_share_grant, Ext, FeedbackV2, FeedbackView, SeqAck, TreeAck, MAX_GRANT_BITS,
+};
 pub use frame::{
-    Control, Frame, Hello, HelloAck, SeqDraft, TreeDraft, WireCodec, FRAME_HEADER_BITS,
-    HELLO_ACK_BITS, HELLO_BITS, NO_PARENT, SEQ_PREFIX_BITS, TREE_PREFIX_BITS,
+    tree_children, tree_first_child, tree_path_into, tree_trunk_tokens, tree_validate,
+    Control, Frame, FrameView, Hello, HelloAck, SeqDraft, TreeDraft, TreeFrameRef,
+    TreeView, WireArena, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS, HELLO_BITS,
+    NO_PARENT, SEQ_PREFIX_BITS, TREE_PREFIX_BITS,
 };
 pub use transport::{
     Delivery, Direction, LinkTransport, SharedPort, StreamTransport, Transport,

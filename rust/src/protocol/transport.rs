@@ -33,7 +33,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::channel::{SharedUplink, SimulatedLink};
 use crate::util::rng::Pcg64;
 
-use super::frame::{Frame, WireCodec};
+use super::frame::{Frame, FrameView, WireArena, WireCodec};
 
 /// Which way a frame travels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +93,12 @@ struct InflightPipes {
     up: std::collections::VecDeque<Vec<u8>>,
     down: std::collections::VecDeque<Vec<u8>>,
     window: usize,
+    /// drained frame buffers waiting for the next encode — capacity
+    /// cycles send -> in flight -> recv -> spare -> send, so steady-state
+    /// traffic allocates no fresh byte buffers.  Bounded by the peak
+    /// in-flight population (spare only grows when a drain outpaces the
+    /// sends that would reclaim it).
+    spare: Vec<Vec<u8>>,
 }
 
 impl Default for InflightPipes {
@@ -101,6 +107,7 @@ impl Default for InflightPipes {
             up: std::collections::VecDeque::new(),
             down: std::collections::VecDeque::new(),
             window: 1,
+            spare: Vec::new(),
         }
     }
 }
@@ -125,6 +132,19 @@ impl InflightPipes {
         Ok(())
     }
 
+    /// Encode into a recycled buffer (fresh only until the free list
+    /// warms up).  On error the buffer goes straight back to the pool.
+    fn encode(&mut self, codec: &mut WireCodec, frame: &Frame) -> Result<(Vec<u8>, usize)> {
+        let mut buf = self.spare.pop().unwrap_or_default();
+        match codec.encode_into(frame, &mut buf) {
+            Ok(bits) => Ok((buf, bits)),
+            Err(e) => {
+                self.spare.push(buf);
+                Err(anyhow!("frame encode: {e}"))
+            }
+        }
+    }
+
     fn store(&mut self, dir: Direction, bytes: Vec<u8>) {
         debug_assert!(self.slot(dir).len() < self.window);
         self.slot(dir).push_back(bytes);
@@ -135,7 +155,26 @@ impl InflightPipes {
             .slot(dir)
             .pop_front()
             .ok_or_else(|| anyhow!("no {dir:?} frame in flight"))?;
-        codec.decode(&bytes).map_err(|e| anyhow!("frame decode: {e}"))
+        let res = codec.decode(&bytes).map_err(|e| anyhow!("frame decode: {e}"));
+        self.spare.push(bytes);
+        res
+    }
+
+    /// Borrowed-view drain: the frame parses into `arena` (views never
+    /// borrow the wire bytes, so the buffer recycles immediately).
+    fn take_view<'a>(
+        &mut self,
+        dir: Direction,
+        codec: &mut WireCodec,
+        arena: &'a mut WireArena,
+    ) -> Result<FrameView<'a>> {
+        let bytes = self
+            .slot(dir)
+            .pop_front()
+            .ok_or_else(|| anyhow!("no {dir:?} frame in flight"))?;
+        let res = codec.decode_view(&bytes, arena).map_err(|e| anyhow!("frame decode: {e}"));
+        self.spare.push(bytes);
+        res
     }
 }
 
@@ -156,6 +195,19 @@ impl LinkTransport {
     pub fn set_window(&mut self, frames: usize) {
         self.pipes.window = frames.max(1);
     }
+
+    /// Receive the next `dir` frame as a borrowed view into `arena` —
+    /// the steady-state path.  Inherent rather than on [`Transport`]
+    /// because the return type borrows the caller's arena; consumers
+    /// that own the concrete transport call this directly.
+    pub fn recv_frame_view<'a>(
+        &mut self,
+        dir: Direction,
+        codec: &mut WireCodec,
+        arena: &'a mut WireArena,
+    ) -> Result<FrameView<'a>> {
+        self.pipes.take_view(dir, codec, arena)
+    }
 }
 
 impl Transport for LinkTransport {
@@ -167,7 +219,7 @@ impl Transport for LinkTransport {
         now: f64,
     ) -> Result<Delivery> {
         self.pipes.ensure_clear(dir)?;
-        let (bytes, bits) = codec.encode(frame).map_err(|e| anyhow!("frame encode: {e}"))?;
+        let (bytes, bits) = self.pipes.encode(codec, frame)?;
         let t = match dir {
             Direction::Up => self.link.send_uplink(bits),
             Direction::Down => self.link.send_downlink(bits),
@@ -229,6 +281,16 @@ impl SharedPort {
     pub fn set_window(&mut self, frames: usize) {
         self.pipes.window = frames.max(1);
     }
+
+    /// Borrowed-view receive (see [`LinkTransport::recv_frame_view`]).
+    pub fn recv_frame_view<'a>(
+        &mut self,
+        dir: Direction,
+        codec: &mut WireCodec,
+        arena: &'a mut WireArena,
+    ) -> Result<FrameView<'a>> {
+        self.pipes.take_view(dir, codec, arena)
+    }
 }
 
 impl Transport for SharedPort {
@@ -240,7 +302,7 @@ impl Transport for SharedPort {
         now: f64,
     ) -> Result<Delivery> {
         self.pipes.ensure_clear(dir)?;
-        let (bytes, bits) = codec.encode(frame).map_err(|e| anyhow!("frame encode: {e}"))?;
+        let (bytes, bits) = self.pipes.encode(codec, frame)?;
         let delivery = match dir {
             Direction::Up => {
                 let (start, delivered) = self.channel.borrow_mut().reserve(now, bits);
@@ -290,11 +352,21 @@ pub struct StreamTransport<S: Read + Write> {
     stream: S,
     up: (u64, u64),
     down: (u64, u64),
+    /// reused encode buffer: steady-state sends allocate nothing
+    send_buf: Vec<u8>,
+    /// reused receive buffer, grown to the largest frame seen
+    recv_buf: Vec<u8>,
 }
 
 impl<S: Read + Write> StreamTransport<S> {
     pub fn new(stream: S) -> StreamTransport<S> {
-        StreamTransport { stream, up: (0, 0), down: (0, 0) }
+        StreamTransport {
+            stream,
+            up: (0, 0),
+            down: (0, 0),
+            send_buf: Vec::new(),
+            recv_buf: Vec::new(),
+        }
     }
 
     pub fn into_inner(self) -> S {
@@ -313,6 +385,31 @@ impl<S: Read + Write> StreamTransport<S> {
             }
         }
     }
+
+    /// Read one length-prefixed frame into the reused buffer; returns
+    /// the payload byte count.
+    fn read_frame_bytes(&mut self, dir: Direction) -> Result<usize> {
+        let mut len = [0u8; STREAM_LEN_PREFIX_BYTES];
+        self.stream.read_exact(&mut len)?;
+        let n = u16::from_be_bytes(len) as usize;
+        self.recv_buf.clear();
+        self.recv_buf.resize(n, 0);
+        self.stream.read_exact(&mut self.recv_buf)?;
+        self.tally(dir, (STREAM_LEN_PREFIX_BYTES + n) * 8);
+        Ok(n)
+    }
+
+    /// Borrowed-view receive over the stream: the frame parses into
+    /// `arena`; the wire bytes stay in the transport's reused buffer.
+    pub fn recv_frame_view<'a>(
+        &mut self,
+        dir: Direction,
+        codec: &mut WireCodec,
+        arena: &'a mut WireArena,
+    ) -> Result<FrameView<'a>> {
+        self.read_frame_bytes(dir)?;
+        codec.decode_view(&self.recv_buf, arena).map_err(|e| anyhow!("frame decode: {e}"))
+    }
 }
 
 impl<S: Read + Write> Transport for StreamTransport<S> {
@@ -323,26 +420,27 @@ impl<S: Read + Write> Transport for StreamTransport<S> {
         codec: &mut WireCodec,
         now: f64,
     ) -> Result<Delivery> {
-        let (bytes, _frame_bits) = codec.encode(frame).map_err(|e| anyhow!("frame encode: {e}"))?;
-        if bytes.len() > u16::MAX as usize {
-            bail!("frame of {} bytes overflows the 16-bit length prefix", bytes.len());
+        let mut buf = std::mem::take(&mut self.send_buf);
+        let res = codec.encode_into(frame, &mut buf);
+        self.send_buf = buf;
+        res.map_err(|e| anyhow!("frame encode: {e}"))?;
+        if self.send_buf.len() > u16::MAX as usize {
+            bail!(
+                "frame of {} bytes overflows the 16-bit length prefix",
+                self.send_buf.len()
+            );
         }
-        self.stream.write_all(&(bytes.len() as u16).to_be_bytes())?;
-        self.stream.write_all(&bytes)?;
+        self.stream.write_all(&(self.send_buf.len() as u16).to_be_bytes())?;
+        self.stream.write_all(&self.send_buf)?;
         self.stream.flush()?;
-        let bits = (STREAM_LEN_PREFIX_BYTES + bytes.len()) * 8;
+        let bits = (STREAM_LEN_PREFIX_BYTES + self.send_buf.len()) * 8;
         self.tally(dir, bits);
         Ok(Delivery { bits, submitted_at: now, queue_wait_s: 0.0, delivered_at: now })
     }
 
     fn recv_frame(&mut self, dir: Direction, codec: &mut WireCodec) -> Result<Frame> {
-        let mut len = [0u8; STREAM_LEN_PREFIX_BYTES];
-        self.stream.read_exact(&mut len)?;
-        let n = u16::from_be_bytes(len) as usize;
-        let mut buf = vec![0u8; n];
-        self.stream.read_exact(&mut buf)?;
-        self.tally(dir, (STREAM_LEN_PREFIX_BYTES + n) * 8);
-        codec.decode(&buf).map_err(|e| anyhow!("frame decode: {e}"))
+        self.read_frame_bytes(dir)?;
+        codec.decode(&self.recv_buf).map_err(|e| anyhow!("frame decode: {e}"))
     }
 
     fn ledger(&self, dir: Direction) -> (u64, u64) {
@@ -417,6 +515,28 @@ mod tests {
             assert_eq!(&tr.recv_frame(Direction::Up, &mut wc).unwrap(), f, "FIFO order");
         }
         assert!(tr.recv_frame(Direction::Up, &mut wc).is_err(), "pipe drained");
+    }
+
+    #[test]
+    fn view_recv_matches_owned_and_survives_arena_reuse() {
+        let mut tr = LinkTransport::new(SimulatedLink::new(LinkConfig::default(), 0));
+        let mut wc = wire();
+        let mut arena = WireArena::new();
+        let frames = [
+            Frame::Feedback(FeedbackV2::plain(7, 3, 11)),
+            Frame::Control(Control::Prompt(vec![1, 2, 3])),
+            Frame::Feedback(FeedbackV2::plain(8, 0, 42)),
+        ];
+        // one arena across heterogeneous frames: no stale state may leak
+        for f in &frames {
+            tr.send_frame(Direction::Down, f, &mut wc, 0.0).unwrap();
+            let view = tr.recv_frame_view(Direction::Down, &mut wc, &mut arena).unwrap();
+            assert_eq!(&view.to_frame(), f);
+        }
+        assert!(
+            tr.recv_frame_view(Direction::Down, &mut wc, &mut arena).is_err(),
+            "pipe drained"
+        );
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::codec::DraftFrame;
 use crate::model::synthetic::SyntheticTarget;
 use crate::protocol::{
     Control, Ext, FeedbackV2, Frame, Hello, HelloAck, SeqAck, SeqDraft, TreeAck, TreeDraft,
-    WireCodec, MAX_SUPPORTED,
+    WireArena, WireCodec, MAX_SUPPORTED,
 };
 
 /// The per-session verify state a job carries through the queue.
@@ -111,7 +111,7 @@ pub(crate) fn run_verify(mut job: VerifyJob, exts: Vec<Ext>, temp: f32) -> Verif
                 let tv = job
                     .vctx
                     .cloud
-                    .verify_tree(td, job.vctx.prev, temp)
+                    .verify_tree_ref(td.as_ref(), job.vctx.prev, temp)
                     .map_err(|e| e.to_string())?;
                 job.vctx.prev = tv.verdict.committed.last().copied().unwrap_or(job.vctx.prev);
                 let mut fb = tv.verdict.feedback_v2(exts);
@@ -178,6 +178,11 @@ pub(crate) struct Session {
     seed: u64,
     /// downlink stream bits emitted (length prefixes included)
     pub down_bits: u64,
+    /// decode scratch: uplink frames parse into this arena; only frames
+    /// that outlive the call (backlog drafts) are promoted to owned
+    arena: WireArena,
+    /// reused encode buffer for downlink frames
+    enc_buf: Vec<u8>,
 }
 
 impl Session {
@@ -192,19 +197,27 @@ impl Session {
             bye: false,
             seed,
             down_bits: 0,
+            arena: WireArena::new(),
+            enc_buf: Vec::new(),
         }
     }
 
     /// Encode a frame onto the connection's write buffer with the
-    /// 16-bit BE length prefix (`StreamTransport` framing).
+    /// 16-bit BE length prefix (`StreamTransport` framing).  The encode
+    /// goes through the session's reused buffer, so steady-state emits
+    /// allocate nothing.
     fn emit(&mut self, frame: &Frame, wr: &mut Vec<u8>) -> Result<(), String> {
-        let (bytes, _bits) = self.codec.encode(frame)?;
-        if bytes.len() > u16::MAX as usize {
-            return Err(format!("frame of {} bytes overflows the length prefix", bytes.len()));
+        let mut buf = std::mem::take(&mut self.enc_buf);
+        let res = self.codec.encode_into(frame, &mut buf);
+        self.enc_buf = buf;
+        res?;
+        let n = self.enc_buf.len();
+        if n > u16::MAX as usize {
+            return Err(format!("frame of {n} bytes overflows the length prefix"));
         }
-        wr.extend_from_slice(&(bytes.len() as u16).to_be_bytes());
-        wr.extend_from_slice(&bytes);
-        self.down_bits += ((2 + bytes.len()) * 8) as u64;
+        wr.extend_from_slice(&(n as u16).to_be_bytes());
+        wr.extend_from_slice(&self.enc_buf);
+        self.down_bits += ((2 + n) * 8) as u64;
         Ok(())
     }
 
@@ -215,8 +228,11 @@ impl Session {
         ctx: &dyn SessionCtx,
         wr: &mut Vec<u8>,
     ) -> SessionEvent {
-        let frame = match self.codec.decode(payload) {
-            Ok(f) => f,
+        // parse into the session arena (no per-call scratch), then
+        // promote to owned: every streaming frame enters the backlog,
+        // which outlives this call by design
+        let frame = match self.codec.decode_view(payload, &mut self.arena) {
+            Ok(v) => v.to_frame(),
             Err(e) => return SessionEvent::Error(format!("decode: {e}")),
         };
         match self.phase {

@@ -8,7 +8,10 @@ pub mod slq;
 pub mod sparsify;
 
 pub use conformal::ConformalController;
-pub use slq::{lattice_quantize, sparse_quantize, Quantized};
+pub use slq::{
+    lattice_quantize, lattice_quantize_into, sparse_quantize, sparse_quantize_into,
+    Quantized,
+};
 pub use sparsify::{Sparsifier, Support};
 
 /// Draft-compression policy for a speculative-decoding session — the

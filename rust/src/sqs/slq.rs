@@ -13,7 +13,7 @@
 use super::sparsify::{Sparsifier, Support};
 
 /// Result of sparsify+quantize on one next-token distribution.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Quantized {
     /// Sorted (ascending) vocabulary indices of the retained support.
     pub support: Vec<u16>,
@@ -23,6 +23,16 @@ pub struct Quantized {
     pub ell: u32,
     /// Probability mass dropped by sparsification (alpha_n in the paper).
     pub alpha: f32,
+}
+
+/// Wire equality: support, counts, and ell.  `alpha` is edge-local
+/// bookkeeping that never rides the wire — decoders reconstruct tokens
+/// with `alpha = NaN` — so including it would make every
+/// decoded-vs-original frame comparison false (NaN equals nothing).
+impl PartialEq for Quantized {
+    fn eq(&self, other: &Self) -> bool {
+        self.support == other.support && self.counts == other.counts && self.ell == other.ell
+    }
 }
 
 impl Quantized {
@@ -80,64 +90,126 @@ impl Quantized {
     }
 }
 
+/// Round/fix-up scratch reused across `lattice_quantize_into` calls:
+/// the per-token quantize stops allocating in steady state.
+#[derive(Default)]
+struct SlqScratch {
+    qbar: Vec<f32>,
+    b: Vec<i64>,
+    zeta: Vec<f32>,
+    order: Vec<usize>,
+    /// support scratch for `sparse_quantize` (the owned-return wrapper)
+    support: Support,
+}
+
+thread_local! {
+    static SLQ_SCRATCH: std::cell::RefCell<SlqScratch> =
+        std::cell::RefCell::new(SlqScratch::default());
+}
+
 /// Project the probabilities on `support` onto the lattice
 /// {b/ell : sum b = ell} (Algorithm 2: round then largest-remainder fix-up).
 pub fn lattice_quantize(q: &[f32], support: &Support, ell: u32) -> Quantized {
+    let mut out = Quantized {
+        support: Vec::new(),
+        counts: Vec::new(),
+        ell,
+        alpha: 0.0,
+    };
+    lattice_quantize_into(q, support, ell, &mut out);
+    out
+}
+
+/// `lattice_quantize` writing into a reused `Quantized` (support/counts
+/// keep capacity); intermediate buffers come from a thread-local scratch.
+/// Same arithmetic, same tie-breaks, same f32 op order as always — only
+/// the buffer ownership changed.
+pub fn lattice_quantize_into(q: &[f32], support: &Support, ell: u32,
+                             out: &mut Quantized) {
     let k = support.indices.len();
     assert!(k >= 1, "support must be non-empty");
     let ell_f = ell as f32;
 
-    // Renormalize over the support, f32 (matches the kernel).
-    let s: f32 = support.indices.iter().map(|&i| q[i as usize]).sum();
-    let qbar: Vec<f32> = support.indices.iter().map(|&i| q[i as usize] / s).collect();
+    SLQ_SCRATCH.with(|cell| {
+        let sc = &mut *cell.borrow_mut();
 
-    // Round.
-    let mut b: Vec<i64> = qbar.iter().map(|&x| (ell_f * x + 0.5).floor() as i64).collect();
-    let d: i64 = b.iter().sum::<i64>() - ell as i64;
+        // Renormalize over the support, f32 (matches the kernel).
+        let s: f32 = support.indices.iter().map(|&i| q[i as usize]).sum();
+        sc.qbar.clear();
+        sc.qbar.extend(support.indices.iter().map(|&i| q[i as usize] / s));
 
-    // Largest-remainder correction, tie-break by ascending vocabulary index
-    // (support is sorted ascending, so position order == index order).
-    if d != 0 {
-        let zeta: Vec<f32> = b
-            .iter()
-            .zip(&qbar)
-            .map(|(&bi, &qi)| bi as f32 - ell_f * qi)
-            .collect();
-        let mut order: Vec<usize> = (0..k).collect();
-        if d > 0 {
-            // decrement the d entries with the largest zeta
-            order.sort_by(|&a, &c| {
-                zeta[c].partial_cmp(&zeta[a]).unwrap().then(a.cmp(&c))
-            });
-            for &i in order.iter().take(d as usize) {
-                b[i] -= 1;
-            }
-        } else {
-            // increment the |d| entries with the smallest zeta
-            order.sort_by(|&a, &c| {
-                zeta[a].partial_cmp(&zeta[c]).unwrap().then(a.cmp(&c))
-            });
-            for &i in order.iter().take((-d) as usize) {
-                b[i] += 1;
+        // Round.
+        sc.b.clear();
+        sc.b.extend(sc.qbar.iter().map(|&x| (ell_f * x + 0.5).floor() as i64));
+        let d: i64 = sc.b.iter().sum::<i64>() - ell as i64;
+
+        // Largest-remainder correction, tie-break by ascending vocabulary
+        // index (support is sorted ascending, so position order == index
+        // order).
+        if d != 0 {
+            sc.zeta.clear();
+            sc.zeta.extend(
+                sc.b.iter().zip(&sc.qbar).map(|(&bi, &qi)| bi as f32 - ell_f * qi),
+            );
+            sc.order.clear();
+            sc.order.extend(0..k);
+            let zeta = &sc.zeta;
+            if d > 0 {
+                // decrement the d entries with the largest zeta
+                sc.order.sort_by(|&a, &c| {
+                    zeta[c].partial_cmp(&zeta[a]).unwrap().then(a.cmp(&c))
+                });
+                for &i in sc.order.iter().take(d as usize) {
+                    sc.b[i] -= 1;
+                }
+            } else {
+                // increment the |d| entries with the smallest zeta
+                sc.order.sort_by(|&a, &c| {
+                    zeta[a].partial_cmp(&zeta[c]).unwrap().then(a.cmp(&c))
+                });
+                for &i in sc.order.iter().take((-d) as usize) {
+                    sc.b[i] += 1;
+                }
             }
         }
-    }
 
-    debug_assert_eq!(b.iter().sum::<i64>(), ell as i64);
-    debug_assert!(b.iter().all(|&x| x >= 0), "negative lattice count");
+        debug_assert_eq!(sc.b.iter().sum::<i64>(), ell as i64);
+        debug_assert!(sc.b.iter().all(|&x| x >= 0), "negative lattice count");
 
-    Quantized {
-        support: support.indices.clone(),
-        counts: b.into_iter().map(|x| x as u32).collect(),
-        ell,
-        alpha: support.alpha,
-    }
+        out.support.clear();
+        out.support.extend_from_slice(&support.indices);
+        out.counts.clear();
+        out.counts.extend(sc.b.iter().map(|&x| x as u32));
+        out.ell = ell;
+        out.alpha = support.alpha;
+    });
 }
 
 /// Full SQS step: sparsify `q` with `sp`, then lattice-quantize.
 pub fn sparse_quantize(q: &[f32], sp: &Sparsifier, ell: u32) -> Quantized {
-    let support = sp.select(q);
-    lattice_quantize(q, &support, ell)
+    let mut out = Quantized {
+        support: Vec::new(),
+        counts: Vec::new(),
+        ell,
+        alpha: 0.0,
+    };
+    SLQ_SCRATCH.with(|cell| {
+        // take the support scratch out so `lattice_quantize_into` can
+        // re-borrow the cell for its own buffers
+        let mut sup = std::mem::take(&mut cell.borrow_mut().support);
+        sp.select_into(q, &mut sup);
+        lattice_quantize_into(q, &sup, ell, &mut out);
+        cell.borrow_mut().support = sup;
+    });
+    out
+}
+
+/// `sparse_quantize` writing into caller-owned support + output buffers —
+/// the fully zero-alloc steady-state path (gated by `micro_hotpath`).
+pub fn sparse_quantize_into(q: &[f32], sp: &Sparsifier, ell: u32,
+                            support: &mut Support, out: &mut Quantized) {
+    sp.select_into(q, support);
+    lattice_quantize_into(q, support, ell, out);
 }
 
 #[cfg(test)]
@@ -257,6 +329,36 @@ mod tests {
                 (tv as f64 - z.alpha as f64).abs() <= slack,
                 "tv={tv} alpha={} K={} ell={ell}", z.alpha, z.k()
             );
+        });
+    }
+
+    #[test]
+    fn into_variants_match_owned_through_dirty_reuse() {
+        check("sparse_quantize_into == sparse_quantize", 200, |g, _| {
+            let q = gen_probs(g);
+            let v = q.len();
+            let ell = g.int(1, 1000) as u32;
+            let sp = match g.int(0, 2) {
+                0 => Sparsifier::top_k(g.usize(1, v)),
+                1 => Sparsifier::threshold(g.f32(0.0, 1.1)),
+                _ => Sparsifier::Dense,
+            };
+            let want = sparse_quantize(&q, &sp, ell);
+            // reused (dirty) buffers must produce the identical result
+            let mut sup = Support { indices: vec![7; 300], alpha: 0.5 };
+            let mut out = Quantized {
+                support: vec![1, 2, 3],
+                counts: vec![9; 40],
+                ell: 0,
+                alpha: -2.0,
+            };
+            for _ in 0..2 {
+                sparse_quantize_into(&q, &sp, ell, &mut sup, &mut out);
+                assert_eq!(out.support, want.support);
+                assert_eq!(out.counts, want.counts);
+                assert_eq!(out.ell, want.ell);
+                assert_eq!(out.alpha, want.alpha);
+            }
         });
     }
 

@@ -6,7 +6,7 @@
 //! but the top outcome", never everything).
 
 /// Selected support of a next-token distribution.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Support {
     /// Sorted ascending vocabulary indices.
     pub indices: Vec<u16>,
@@ -45,39 +45,75 @@ impl Sparsifier {
     }
 
     pub fn select(&self, q: &[f32]) -> Support {
+        let mut out = Support { indices: Vec::new(), alpha: 0.0 };
+        self.select_into(q, &mut out);
+        out
+    }
+
+    /// `select` writing into a reused `Support` (indices keep capacity):
+    /// the zero-alloc steady-state path.  Dense reuses the buffer instead
+    /// of rebuilding `(0..V).collect()` per call.
+    pub fn select_into(&self, q: &[f32], out: &mut Support) {
         match *self {
-            Sparsifier::TopK(k) => select_top_k(q, k.min(q.len())),
-            Sparsifier::Threshold(beta) => select_threshold(q, beta),
-            Sparsifier::Dense => Support {
-                indices: (0..q.len() as u16).collect(),
-                alpha: 0.0,
-            },
+            Sparsifier::TopK(k) => select_top_k_into(q, k.min(q.len()), out),
+            Sparsifier::Threshold(beta) => select_threshold_into(q, beta, out),
+            Sparsifier::Dense => {
+                out.indices.clear();
+                out.indices.extend(0..q.len() as u16);
+                out.alpha = 0.0;
+            }
         }
     }
 }
 
-fn select_top_k(q: &[f32], k: usize) -> Support {
-    let mut order: Vec<u16> = (0..q.len() as u16).collect();
-    // (q desc, index asc) — identical ordering to the kernel's rank compute.
-    order.sort_by(|&a, &b| {
-        q[b as usize]
-            .partial_cmp(&q[a as usize])
-            .unwrap()
-            .then(a.cmp(&b))
-    });
-    let mut indices: Vec<u16> = order[..k].to_vec();
-    indices.sort_unstable();
-    Support { alpha: dropped_mass(q, &indices), indices }
+thread_local! {
+    /// Rank-order scratch for top-K selection, reused across calls so the
+    /// per-token hot path stops allocating a full-vocab vector.
+    static TOPK_ORDER: std::cell::RefCell<Vec<u16>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
-fn select_threshold(q: &[f32], beta: f32) -> Support {
-    let mut indices: Vec<u16> = Vec::new();
+fn select_top_k_into(q: &[f32], k: usize, out: &mut Support) {
+    TOPK_ORDER.with(|cell| {
+        let order = &mut *cell.borrow_mut();
+        order.clear();
+        order.extend(0..q.len() as u16);
+        // (q desc, index asc) — identical ordering to the kernel's rank
+        // compute.  The comparator is a total order (ties broken by
+        // index), so partial selection yields exactly the same top-k SET
+        // as the old full sort; the ascending re-sort then reproduces the
+        // same output order, making the switch bit-identical while
+        // skipping the full-vocab O(V log V) sort.
+        let cmp = |a: &u16, b: &u16| {
+            q[*b as usize]
+                .partial_cmp(&q[*a as usize])
+                .unwrap()
+                .then(a.cmp(b))
+        };
+        if k < order.len() {
+            order.select_nth_unstable_by(k - 1, cmp);
+        }
+        out.indices.clear();
+        out.indices.extend_from_slice(&order[..k]);
+        out.indices.sort_unstable();
+        out.alpha = dropped_mass(q, &out.indices);
+    });
+}
+
+fn select_threshold_into(q: &[f32], beta: f32, out: &mut Support) {
+    out.indices.clear();
+    // single pass: collect the support and accumulate alpha over dropped
+    // entries in index order — the same additions, in the same order, as
+    // the old separate `dropped_mass` walk
+    let mut alpha = 0.0f32;
     for (i, &p) in q.iter().enumerate() {
         if p >= beta {
-            indices.push(i as u16);
+            out.indices.push(i as u16);
+        } else {
+            alpha += p;
         }
     }
-    if indices.is_empty() {
+    if out.indices.is_empty() {
         // arg-max with lowest index (rank 0 in the kernel)
         let mut best = 0usize;
         for (i, &p) in q.iter().enumerate() {
@@ -85,9 +121,10 @@ fn select_threshold(q: &[f32], beta: f32) -> Support {
                 best = i;
             }
         }
-        indices.push(best as u16);
+        out.indices.push(best as u16);
+        alpha = dropped_mass(q, &out.indices);
     }
-    Support { alpha: dropped_mass(q, &indices), indices }
+    out.alpha = alpha;
 }
 
 /// alpha computed as the sum over dropped entries in index order (not as
@@ -148,6 +185,42 @@ mod tests {
         let s = Sparsifier::Dense.select(&q);
         assert_eq!(s.indices.len(), 4);
         assert_eq!(s.alpha, 0.0);
+    }
+
+    #[test]
+    fn partial_selection_matches_full_sort_and_reuse() {
+        check("select_nth top-k == full sort top-k", 200, |g, _| {
+            let v = g.usize(2, 256);
+            let sharp = g.f64(0.2, 5.0);
+            let mut q = g.probs(v, sharp);
+            if g.bool() {
+                // coarsen to force duplicate values (tie-break stress)
+                for p in q.iter_mut() {
+                    *p = (*p * 16.0).round() / 16.0;
+                }
+            }
+            let k = g.usize(1, v);
+            // reference: the old full-sort implementation
+            let mut order: Vec<u16> = (0..v as u16).collect();
+            order.sort_by(|&a, &b| {
+                q[b as usize].partial_cmp(&q[a as usize]).unwrap().then(a.cmp(&b))
+            });
+            let mut want: Vec<u16> = order[..k].to_vec();
+            want.sort_unstable();
+            let s = Sparsifier::top_k(k).select(&q);
+            assert_eq!(s.indices, want);
+            // select_into through a dirty reused buffer must agree exactly
+            let mut out = Support { indices: vec![999; 7], alpha: -1.0 };
+            Sparsifier::top_k(k).select_into(&q, &mut out);
+            assert_eq!(out, s);
+            // threshold single-pass == two-pass dropped_mass
+            let beta = g.f32(0.0, 1.1);
+            let t = Sparsifier::threshold(beta).select(&q);
+            assert_eq!(t.alpha, dropped_mass(&q, &t.indices));
+            let mut t2 = Support { indices: vec![1, 2, 3], alpha: 5.0 };
+            Sparsifier::threshold(beta).select_into(&q, &mut t2);
+            assert_eq!(t2, t);
+        });
     }
 
     #[test]

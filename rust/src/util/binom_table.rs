@@ -1,0 +1,186 @@
+//! Fixed-width binomial table: the zero-alloc fast path under the codec.
+//!
+//! `util::bigint::BinomialCache` is exact for any (n, k) but every value is
+//! a heap-backed limb vector, so rank/unrank allocate on the per-token hot
+//! path.  The (K, ℓ) envelope that dominates real runs (K ≤ ~32, V ≤ 64k,
+//! ℓ ≤ ~1k) has C(n, k) comfortably inside u128, so this table memoizes the
+//! same Pascal rows in plain u128 with a saturating sentinel for overflow.
+//! Ranks whose bounding binomial fits u128 take the fixed-width path;
+//! anything else falls back to bigint — the split is a pure representation
+//! choice, both paths produce bit-identical wire streams (pinned by
+//! `tests/combinadics_table.rs`).
+
+use std::cell::RefCell;
+
+/// Sentinel for "C(n, k) does not fit in u128".  Pascal sums saturate to
+/// it; a table probe returning it (or the astronomically unlikely exact
+/// value u128::MAX) reports overflow and the caller falls back to bigint —
+/// a false overflow only costs speed, never correctness.
+pub const BINOM_OVERFLOW: u128 = u128::MAX;
+
+/// Keep the dense rows bounded: probes beyond these caps report overflow
+/// (→ bigint fallback) instead of growing the table without limit.
+const MAX_N: u64 = 1 << 16;
+const MAX_K: u64 = 512;
+
+/// Dense per-k rows of C(n, k) in u128, grown lazily like
+/// `BinomialCache` but with fixed-width entries and sentinel saturation.
+pub struct BinomTable {
+    /// rows[k][n] = C(n, k), or `BINOM_OVERFLOW` once it exceeds u128.
+    rows: Vec<Vec<u128>>,
+}
+
+impl Default for BinomTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BinomTable {
+    pub fn new() -> Self {
+        BinomTable { rows: Vec::new() }
+    }
+
+    /// Extend every row up to k so each covers index n.
+    fn ensure(&mut self, n: u64, k: u64) {
+        let (n, k) = (n as usize, k as usize);
+        if self.rows.len() <= k {
+            self.rows.resize_with(k + 1, Vec::new);
+        }
+        if self.rows[0].len() <= n {
+            self.rows[0].resize(n + 1, 1);
+        }
+        for kk in 1..=k {
+            while self.rows[kk].len() <= n {
+                let m = self.rows[kk].len(); // computing C(m, kk)
+                let v = if m < kk {
+                    0
+                } else if m == kk {
+                    1
+                } else {
+                    let a = self.rows[kk][m - 1]; // C(m-1, kk)
+                    let b = self.rows[kk - 1][m - 1]; // C(m-1, kk-1)
+                    if a == BINOM_OVERFLOW || b == BINOM_OVERFLOW {
+                        BINOM_OVERFLOW
+                    } else {
+                        a.checked_add(b).unwrap_or(BINOM_OVERFLOW)
+                    }
+                };
+                self.rows[kk].push(v);
+            }
+        }
+    }
+
+    /// C(n, k) if it fits in u128; None on overflow or beyond the table
+    /// caps (callers must fall back to the bigint path).
+    pub fn get(&mut self, n: u64, k: u64) -> Option<u128> {
+        if k > n {
+            return Some(0);
+        }
+        if n > MAX_N || k > MAX_K {
+            return None;
+        }
+        self.ensure(n, k);
+        match self.rows[k as usize][n as usize] {
+            BINOM_OVERFLOW => None,
+            v => Some(v),
+        }
+    }
+
+    /// Largest n in [lo, hi) with C(n, k) <= r, or None if even
+    /// C(lo, k) > r — the unrank inner loop, mirroring
+    /// `BinomialCache::max_n_le` over the fixed-width rows.  Entries that
+    /// overflowed compare as u128::MAX > r, so the saturated row stays
+    /// monotone and the search stays correct near the overflow frontier.
+    pub fn max_n_le(&mut self, k: u64, lo: u64, hi: u64, r: u128) -> Option<u64> {
+        if lo >= hi {
+            return None;
+        }
+        self.ensure(hi - 1, k);
+        let row = &self.rows[k as usize];
+        if row[lo as usize] > r {
+            return None;
+        }
+        let (mut lo, mut hi) = (lo, hi - 1);
+        // invariant: C(lo, k) <= r
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if row[mid as usize] <= r {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        Some(lo)
+    }
+}
+
+thread_local! {
+    static BINOM_TABLE_TLS: RefCell<BinomTable> = RefCell::new(BinomTable::new());
+}
+
+/// Thread-shared fast table, amortized across a worker's lifetime exactly
+/// like `with_binomials` amortizes the bigint rows.
+pub fn with_binom_table<R>(f: impl FnOnce(&mut BinomTable) -> R) -> R {
+    BINOM_TABLE_TLS.with(|c| f(&mut c.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bigint::{binomial, BinomialCache};
+
+    fn big_to_u128(x: &crate::util::bigint::BigUint) -> Option<u128> {
+        if x.bits() > 128 {
+            return None;
+        }
+        let mut v = 0u128;
+        for i in (0..x.bits()).rev() {
+            v = (v << 1) | x.bit(i) as u128;
+        }
+        Some(v)
+    }
+
+    #[test]
+    fn matches_bigint_in_range() {
+        let mut t = BinomTable::new();
+        for n in 0..80u64 {
+            for k in 0..80u64 {
+                assert_eq!(
+                    t.get(n, k),
+                    big_to_u128(&binomial(n, k)),
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_reports_none() {
+        let mut t = BinomTable::new();
+        // C(128, 64) is ~2^124 and fits u128; C(140, 70) is ~2^136 and
+        // must report overflow
+        assert!(t.get(128, 64).is_some());
+        assert_eq!(t.get(140, 70), None);
+        assert!(binomial(140, 70).bits() > 128);
+        // beyond the caps → None, not growth
+        assert_eq!(t.get(MAX_N + 1, 2), None);
+        assert_eq!(t.get(1000, MAX_K + 1), None);
+    }
+
+    #[test]
+    fn max_n_le_matches_bigint_search() {
+        let mut t = BinomTable::new();
+        let mut c = BinomialCache::new();
+        for k in 1..8u64 {
+            for hi in k..40u64 {
+                for r in 0..200u64 {
+                    let big_r = crate::util::bigint::BigUint::from_u64(r);
+                    let want = c.max_n_le(k, k - 1, hi, &big_r);
+                    let got = t.max_n_le(k, k - 1, hi, r as u128);
+                    assert_eq!(got, want, "k={k} hi={hi} r={r}");
+                }
+            }
+        }
+    }
+}

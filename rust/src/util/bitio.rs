@@ -16,6 +16,20 @@ impl BitWriter {
         Self::default()
     }
 
+    /// Build a writer on top of a recycled byte buffer: the buffer is
+    /// cleared but its capacity is kept, so steady-state encode paths
+    /// (one writer per frame) stop allocating.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        BitWriter { buf, partial: 0 }
+    }
+
+    /// Reset to empty, keeping the allocated capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.partial = 0;
+    }
+
     pub fn bit_len(&self) -> usize {
         if self.partial == 0 {
             self.buf.len() * 8
@@ -40,6 +54,19 @@ impl BitWriter {
     /// Write the low `n` bits of `v`, MSB first.
     pub fn write_bits_u64(&mut self, v: u64, n: usize) {
         assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.write_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Write the low `n` bits of `v`, MSB first (fixed-width fast path
+    /// for table-driven combinadic ranks).
+    pub fn write_bits_u128(&mut self, v: u128, n: usize) {
+        assert!(n <= 128);
+        assert!(
+            n == 128 || v >> n == 0,
+            "value needs more than the field width of {n} bits"
+        );
         for i in (0..n).rev() {
             self.write_bit((v >> i) & 1 == 1);
         }
@@ -111,6 +138,15 @@ impl<'a> BitReader<'a> {
         Ok(v)
     }
 
+    pub fn read_bits_u128(&mut self, n: usize) -> Result<u128, BitUnderflow> {
+        assert!(n <= 128);
+        let mut v = 0u128;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit()? as u128;
+        }
+        Ok(v)
+    }
+
     pub fn read_bits_big(&mut self, n: usize) -> Result<BigUint, BitUnderflow> {
         let mut x = BigUint::zero();
         for i in (0..n).rev() {
@@ -174,6 +210,37 @@ mod tests {
             assert!(r.bits_remaining() < 8);
             assert_eq!(total + r.bits_remaining(), bytes.len() * 8);
         }
+    }
+
+    #[test]
+    fn u128_roundtrip_and_reuse() {
+        let big = (1u128 << 100) | 0xdead_beef;
+        let mut w = BitWriter::new();
+        w.write_bits_u128(big, 101);
+        w.write_bits_u128(3, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits_u128(101).unwrap(), big);
+        assert_eq!(r.read_bits_u128(2).unwrap(), 3);
+
+        // a recycled buffer produces the identical stream
+        let mut w2 = BitWriter::from_vec(vec![0xaa; 64]);
+        w2.write_bits_u128(big, 101);
+        w2.write_bits_u128(3, 2);
+        assert_eq!(w2.finish(), bytes);
+
+        // u128 fields agree bit-for-bit with the bigint writer
+        let mut wa = BitWriter::new();
+        let mut wb = BitWriter::new();
+        wa.write_bits_u128(big, 120);
+        let mut x = BigUint::zero();
+        for i in 0..128 {
+            if (big >> i) & 1 == 1 {
+                x.set_bit(i);
+            }
+        }
+        wb.write_bits_big(&x, 120);
+        assert_eq!(wa.finish(), wb.finish());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! what the serving stack needs.
 
 pub mod bigint;
+pub mod binom_table;
 pub mod bitio;
 pub mod check;
 pub mod cli;
@@ -97,6 +98,16 @@ pub fn ceil_log2_u64(n: u64) -> usize {
     }
 }
 
+/// ceil(log2(n)) over u128 (field widths for table-driven combinadic
+/// ranks; agrees with `BigUint`-derived widths on the shared range).
+pub fn ceil_log2_u128(n: u128) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        128 - (n - 1).leading_zeros() as usize
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +121,15 @@ mod tests {
         assert_eq!(ceil_log2_u64(5), 3);
         assert_eq!(ceil_log2_u64(256), 8);
         assert_eq!(ceil_log2_u64(257), 9);
+    }
+
+    #[test]
+    fn ceil_log2_u128_matches_u64_and_extends() {
+        for n in [0u64, 1, 2, 3, 4, 5, 255, 256, 257, u64::MAX] {
+            assert_eq!(ceil_log2_u128(n as u128), ceil_log2_u64(n), "n={n}");
+        }
+        assert_eq!(ceil_log2_u128(1u128 << 100), 100);
+        assert_eq!(ceil_log2_u128((1u128 << 100) + 1), 101);
+        assert_eq!(ceil_log2_u128(u128::MAX), 128);
     }
 }

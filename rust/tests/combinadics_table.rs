@@ -1,0 +1,177 @@
+//! Bit-identity pins for the table-driven (u128) combinadic fast paths
+//! against the bigint reference: the wire format is defined by the bigint
+//! arithmetic, so the u128 fast path must produce the *same integers* —
+//! not just valid ones — across randomized (V, K), plus the overflow
+//! handoff boundary where C(V, K) leaves the u128 range and the codec
+//! must fall back to bigint.
+
+use sqs_sd::codec::combinadic::{
+    subset_rank, subset_rank_u128, subset_unrank, subset_unrank_u128_into,
+};
+use sqs_sd::codec::multiset::{
+    composition_rank, composition_rank_u128, composition_unrank, composition_unrank_u128_into,
+};
+use sqs_sd::util::bigint::{with_binomials, BigUint};
+use sqs_sd::util::binom_table::with_binom_table;
+use sqs_sd::util::check::{check, Gen};
+
+/// Exact u128 value of a BigUint, if it fits.
+fn big_to_u128(x: &BigUint) -> Option<u128> {
+    if x.bits() > 128 {
+        return None;
+    }
+    let mut v: u128 = 0;
+    for i in (0..x.bits()).rev() {
+        v = (v << 1) | (x.bit(i) as u128);
+    }
+    Some(v)
+}
+
+/// Random composition of `ell` into `k` non-negative parts.
+fn random_parts(g: &mut Gen, ell: u32, k: usize) -> Vec<u32> {
+    let mut parts = vec![0u32; k];
+    for _ in 0..ell {
+        let i = g.usize(0, k - 1);
+        parts[i] += 1;
+    }
+    parts
+}
+
+/// Randomized (V, K): wherever the table path answers at all, its rank
+/// must equal the bigint rank exactly, and its unrank must reproduce the
+/// subset through a dirty reused buffer.
+#[test]
+fn table_subset_rank_unrank_bit_identical_to_bigint() {
+    check("u128 subset rank == bigint", 400, |g, _| {
+        let v = g.usize(2, 300);
+        let k = g.usize(1, v.min(64));
+        let subset: Vec<u16> = g.subset(v, k).into_iter().map(|x| x as u16).collect();
+
+        let big = with_binomials(|c| subset_rank(&subset, c));
+        let fast = with_binom_table(|t| subset_rank_u128(&subset, t));
+        match fast {
+            Some(r) => {
+                assert_eq!(
+                    Some(r),
+                    big_to_u128(&big),
+                    "V={v} K={k}: table rank != bigint rank"
+                );
+                // unrank through a dirty reused buffer must invert exactly
+                let mut out = vec![9999u16; 3];
+                with_binom_table(|t| subset_unrank_u128_into(r, v, k, t, &mut out));
+                assert_eq!(out, subset, "V={v} K={k}: u128 unrank broken");
+                let back = with_binomials(|c| subset_unrank(big, v, k, c));
+                assert_eq!(back, subset, "V={v} K={k}: bigint unrank broken");
+            }
+            None => {
+                // the fast path may only refuse when the rank space
+                // genuinely leaves u128 (or the table caps out)
+                let total_bits =
+                    with_binomials(|c| c.get(v as u64, k as u64).bits());
+                assert!(
+                    total_bits > 128,
+                    "V={v} K={k}: table refused a {total_bits}-bit rank space"
+                );
+            }
+        }
+    });
+}
+
+/// Randomized compositions: same contract for the stars-and-bars codes.
+#[test]
+fn table_composition_rank_unrank_bit_identical_to_bigint() {
+    check("u128 composition rank == bigint", 400, |g, _| {
+        let k = g.usize(1, 40);
+        let ell = g.int(1, 400) as u32;
+        let parts = random_parts(g, ell, k);
+
+        let big = with_binomials(|c| composition_rank(&parts, c));
+        let fast = with_binom_table(|t| composition_rank_u128(&parts, t));
+        match fast {
+            Some(r) => {
+                assert_eq!(
+                    Some(r),
+                    big_to_u128(&big),
+                    "ell={ell} k={k}: table rank != bigint rank"
+                );
+                let mut divs = vec![7u16; 2];
+                let mut out = vec![42u32; 5];
+                with_binom_table(|t| {
+                    composition_unrank_u128_into(r, ell, k, t, &mut divs, &mut out)
+                });
+                assert_eq!(out, parts, "ell={ell} k={k}: u128 unrank broken");
+                let back = with_binomials(|c| composition_unrank(big, ell, k, c));
+                assert_eq!(back, parts, "ell={ell} k={k}: bigint unrank broken");
+            }
+            None => {
+                let total_bits = with_binomials(|c| {
+                    c.get(ell as u64 + k as u64 - 1, k as u64 - 1).bits()
+                });
+                assert!(
+                    total_bits > 128,
+                    "ell={ell} k={k}: table refused a {total_bits}-bit rank space"
+                );
+            }
+        }
+    });
+}
+
+/// The overflow handoff: walk K upward at fixed V until C(V, K) crosses
+/// u128.  Below the boundary the table must answer (and agree with
+/// bigint); at and above it, it must return None and the bigint cache
+/// must confirm the rank space really is >128 bits.  This pins the exact
+/// handoff point — an off-by-one here would corrupt wire bits silently.
+#[test]
+fn overflow_handoff_boundary_is_exact() {
+    let v = 140usize;
+    let mut crossed = false;
+    for k in 1..=70usize {
+        let total_big = with_binomials(|c| c.get(v as u64, k as u64).clone());
+        let total_fast = with_binom_table(|t| t.get(v as u64, k as u64));
+        match total_fast {
+            Some(t) => {
+                assert!(!crossed, "table came back after overflow at K={k}");
+                assert_eq!(Some(t), big_to_u128(&total_big), "K={k}");
+                // the maximal subset {V-K..V-1} has the maximal rank
+                // C(V,K)-1; both paths must agree on it
+                let top: Vec<u16> = ((v - k) as u16..v as u16).collect();
+                let r_fast =
+                    with_binom_table(|tb| subset_rank_u128(&top, tb)).unwrap();
+                assert_eq!(r_fast, t - 1, "K={k}: max rank must be C(V,K)-1");
+                let r_big = with_binomials(|c| subset_rank(&top, c));
+                assert_eq!(Some(r_fast), big_to_u128(&r_big), "K={k}");
+            }
+            None => {
+                crossed = true;
+                assert!(
+                    total_big.bits() > 128,
+                    "K={k}: table refused a {}-bit binomial",
+                    total_big.bits()
+                );
+                // the codec-facing entry points must refuse too, so the
+                // frame codec falls back to bigint for these widths
+                let top: Vec<u16> = ((v - k) as u16..v as u16).collect();
+                assert_eq!(
+                    with_binom_table(|tb| subset_rank_u128(&top, tb)),
+                    None,
+                    "K={k}: subset_rank_u128 must hand off past the boundary"
+                );
+            }
+        }
+    }
+    assert!(crossed, "C(140, K) must cross u128 somewhere in K<=70");
+}
+
+/// Table caps (MAX_N / MAX_K): probes beyond the dense-row bounds report
+/// None (bigint fallback) instead of growing without limit — even when
+/// the value itself would fit u128 easily.
+#[test]
+fn table_caps_hand_off_even_when_value_fits() {
+    let over_n = (1u64 << 16) + 1;
+    assert_eq!(with_binom_table(|t| t.get(over_n, 1)), None);
+    assert_eq!(with_binom_table(|t| t.get(1000, 513)), None);
+    // in-cap probes still answer
+    assert_eq!(with_binom_table(|t| t.get(1000, 2)), Some(499_500));
+    // k > n stays a hard zero, not an overflow
+    assert_eq!(with_binom_table(|t| t.get(3, 7)), Some(0));
+}

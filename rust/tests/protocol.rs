@@ -484,6 +484,106 @@ fn seq_ack_wraparound_roundtrips_for_any_triple() {
     });
 }
 
+// ---------------------------------------------------------------------
+// borrowed decoder paths (decode_view / WireArena)
+// ---------------------------------------------------------------------
+
+/// The borrowed decoder must agree with the owned decoder on EVERY frame
+/// type, through a single reused arena — `decode_view(..).to_frame()`
+/// pinned equal to `decode(..)`, twice over (arena-reuse soundness).
+#[test]
+fn view_decode_pinned_equal_to_owned_for_all_frame_types() {
+    use sqs_sd::protocol::WireArena;
+
+    let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    codec.set_version(PROTOCOL_V4);
+    let frames = sample_frames(&mut codec);
+    let mut arena = WireArena::new();
+    for pass in 0..2 {
+        for (name, bytes) in &frames {
+            let owned = codec.decode(bytes).unwrap();
+            let view = codec.decode_view(bytes, &mut arena).unwrap();
+            assert_eq!(view.name(), *name, "pass {pass}");
+            assert_eq!(
+                view.to_frame(),
+                owned,
+                "{name} pass {pass}: view decode must equal owned decode"
+            );
+        }
+    }
+}
+
+/// Corruption fuzz over the borrowed path, mirroring
+/// `corrupted_v2_frames_error_never_panic`: (a) every truncation Errs,
+/// (b) bit-flip storms (which also land in DraftTree parent bytes) never
+/// panic, and wherever both decoders accept, they agree; (c) forced
+/// out-of-range tree parents Err through the view path too.
+#[test]
+fn corrupted_frames_through_view_decoder_error_never_panic() {
+    use sqs_sd::protocol::WireArena;
+
+    let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+    codec.set_version(PROTOCOL_V4);
+    let frames = sample_frames(&mut codec);
+    let mut arena = WireArena::new();
+
+    // (a) every strict prefix loses payload bits -> must Err, and the
+    // arena must remain usable for the next decode afterwards
+    for (name, bytes) in &frames {
+        for cut in 0..bytes.len() {
+            assert!(
+                codec.decode_view(&bytes[..cut], &mut arena).is_err(),
+                "{name}: view truncation to {cut}/{} bytes must fail",
+                bytes.len()
+            );
+        }
+        let view = codec.decode_view(bytes, &mut arena).unwrap();
+        assert_eq!(view.name(), *name, "arena must survive failed decodes");
+    }
+
+    // (b) seeded bit-flip storm: the view decoder must terminate without
+    // panicking, and on Ok both decoders must produce the same frame
+    // (garbage in, *identical* garbage out)
+    check("view decode corruption never panics", 300, |g, _| {
+        let mut codec = WireCodec::for_config(64, 100, SchemeBits::FixedK, 8);
+        codec.set_version(PROTOCOL_V4);
+        let frames = sample_frames(&mut codec);
+        let mut arena = WireArena::new();
+        let (_, bytes) = g.pick(&frames);
+        let mut corrupt = bytes.clone();
+        let flips = g.usize(1, 16);
+        for _ in 0..flips {
+            let bit = g.usize(0, corrupt.len() * 8 - 1);
+            corrupt[bit / 8] ^= 1 << (bit % 8);
+        }
+        let owned = codec.decode(&corrupt);
+        let viewed = codec.decode_view(&corrupt, &mut arena);
+        match (owned, viewed) {
+            (Ok(o), Ok(v)) => assert_eq!(o, v.to_frame(), "decoders disagree on Ok"),
+            (Err(_), Err(_)) => {}
+            (o, v) => panic!(
+                "decoders disagree on acceptance: owned {:?} vs view {:?}",
+                o.is_ok(),
+                v.is_ok()
+            ),
+        }
+    });
+
+    // (c) forced out-of-range parent bytes in a valid tree encoding
+    let (_, tree_bytes) = frames
+        .iter()
+        .find(|(n, _)| *n == "draft_tree")
+        .expect("sample set includes a tree");
+    for node in 0..3usize {
+        let mut corrupt = tree_bytes.clone();
+        corrupt[5 + node] = 0x80 | node as u8; // >= node index, not 0xFF
+        assert!(
+            codec.decode_view(&corrupt, &mut arena).is_err(),
+            "node {node}: out-of-range parent must Err through the view path"
+        );
+    }
+}
+
 /// The session-level handshake: a v2 session over the simulated link
 /// negotiates, and the negotiated parameters round-trip the codec config.
 #[test]

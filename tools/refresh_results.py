@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Refresh the checked-in results/ files from a CI bench-results artifact.
+
+The checked-in copies under results/ are analytic projections until they
+are replaced by measured rows from CI's bench-smoke job, which uploads
+everything it measures as the `bench-results` workflow artifact.  This
+tool performs that refresh as a *pure value swap*: it verifies that the
+artifact file carries exactly the key set (JSON) or header (CSV) of the
+checked-in copy — the same invariant CI's key-drift gates enforce — and
+only then overwrites the checked-in file.  Any schema difference aborts
+the swap, because it means the refresh would need a code review, not a
+value refresh.
+
+Usage:
+    python3 tools/refresh_results.py <artifact-dir> [--dry-run]
+
+where <artifact-dir> is the unpacked bench-results artifact (the
+directory holding pipelining.csv, BENCH_pipelining.json, ...).
+"""
+
+import json
+import shutil
+import sys
+from pathlib import Path
+
+# (artifact name, checked-in name, kind, array keys to key-check)
+TARGETS = [
+    ("pipelining.csv", "pipelining.csv", "csv", None),
+    ("BENCH_pipelining.json", "BENCH_pipelining.json", "json",
+     ["points", "tree", "fleet"]),
+    ("serving_soak.csv", "serving_soak.csv", "csv", None),
+    ("BENCH_serving.json", "BENCH_serving.json", "json", ["points"]),
+    ("BENCH_hotpath.json", "BENCH_hotpath.json", "json", ["stages"]),
+]
+
+
+def entry_keys(arr):
+    keys = set()
+    for e in arr:
+        keys |= set(e.keys())
+    return keys
+
+
+def check_json(artifact: Path, checked: Path, arrays):
+    with open(artifact) as f:
+        measured = json.load(f)
+    with open(checked) as f:
+        current = json.load(f)
+    if set(measured) != set(current):
+        return f"top-level keys differ: {sorted(set(measured) ^ set(current))}"
+    for arr in arrays or []:
+        mk = entry_keys(measured[arr])
+        ck = entry_keys(current[arr])
+        if mk != ck:
+            return f"'{arr}' entry keys differ: {sorted(mk ^ ck)}"
+    # the gated-stage invariant must hold in the artifact too: never
+    # check in a measured hotpath run that leaked allocations
+    if "stages" in measured:
+        leaks = [s["name"] for s in measured["stages"]
+                 if s.get("gated") == 1 and s.get("allocs_per_op") != 0]
+        if leaks:
+            return f"gated stages allocated: {leaks}"
+    return None
+
+
+def check_csv(artifact: Path, checked: Path):
+    with open(artifact) as f:
+        measured_hdr = f.readline().strip()
+    with open(checked) as f:
+        current_hdr = f.readline().strip()
+    if measured_hdr != current_hdr:
+        return f"header differs: {measured_hdr!r} vs {current_hdr!r}"
+    return None
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--dry-run"]
+    dry_run = "--dry-run" in sys.argv[1:]
+    if len(args) != 1:
+        sys.exit(__doc__)
+    artifact_dir = Path(args[0])
+    results_dir = Path(__file__).resolve().parent.parent / "results"
+
+    failures, swapped = [], 0
+    for artifact_name, checked_name, kind, arrays in TARGETS:
+        artifact = artifact_dir / artifact_name
+        checked = results_dir / checked_name
+        if not artifact.exists():
+            print(f"skip: {artifact_name} not in artifact")
+            continue
+        if not checked.exists():
+            print(f"skip: {checked_name} has no checked-in copy")
+            continue
+        err = (check_json(artifact, checked, arrays) if kind == "json"
+               else check_csv(artifact, checked))
+        if err:
+            failures.append(f"{artifact_name}: {err}")
+            continue
+        if dry_run:
+            print(f"would refresh: {checked_name}")
+        else:
+            shutil.copyfile(artifact, checked)
+            print(f"refreshed: {checked_name}")
+        swapped += 1
+
+    for f in failures:
+        print(f"SCHEMA MISMATCH — not swapped: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+    if swapped == 0:
+        sys.exit("nothing refreshed: no recognized files in the artifact")
+
+
+if __name__ == "__main__":
+    main()
