@@ -20,8 +20,14 @@
 //! bits/round — the cross-PR perf trajectory).  The fleet section runs
 //! both a steady shared uplink and a scheduled mid-run capacity drop
 //! (`FleetConfig::uplink_schedule`).
+//!
+//! A final LOSS section sweeps seeded frame-loss laws (i.i.d. and
+//! Gilbert-Elliott bursts) times policy over the fleet's shared uplink,
+//! plus a churn row (mid-epoch drop + resume-reconnect every other
+//! batch), and writes results/BENCH_loss.json — the recovery plane's
+//! cross-PR trajectory (retransmits, drops, reconnects, completion).
 
-use sqs_sd::channel::{LinkConfig, SimulatedLink};
+use sqs_sd::channel::{LinkConfig, LossModel, SimulatedLink};
 use sqs_sd::control::AdaptiveMode;
 use sqs_sd::coordinator::{SdSession, SessionConfig, SessionResult, TimingMode};
 use sqs_sd::exp::{fast_mode, write_json_summary, CsvOut};
@@ -204,6 +210,108 @@ fn main() -> anyhow::Result<()> {
     csv.finish();
     knob_csv.finish();
     fleet_knob_csv.finish();
+
+    // ---- loss x policy: the recovery plane under seeded frame loss -----
+    // Every run is virtual-time deterministic; `none` must stay
+    // bit-identical to the pre-loss build (the LossModel draws no
+    // randomness there), while the lossy laws exercise the inline ARQ.
+    println!("\n== LOSS: frame-loss law x policy, 8 devices, shared uplink ==");
+    let loss_laws: [(&str, LossModel); 3] = [
+        ("none", LossModel::None),
+        ("iid2", LossModel::Iid { p: 0.02 }),
+        (
+            "burst",
+            LossModel::GilbertElliott {
+                p_enter_bad: 0.05,
+                p_exit_bad: 0.4,
+                loss_good: 0.005,
+                loss_bad: 0.3,
+            },
+        ),
+    ];
+    let loss_policies: [(&str, Policy); 2] = [
+        ("ksqs", Policy::KSqs { k: 8 }),
+        ("csqs", Policy::CSqs { beta0: 0.01, alpha: 0.0005, eta: 0.001 }),
+    ];
+    let loss_requests = if fast_mode() { 2 } else { 4 };
+    let loss_expected = 8 * loss_requests;
+    let loss_fleet = |loss: LossModel, policy: Policy, churn_every: u64| {
+        let base = DeviceProfile {
+            policy,
+            max_new_tokens: 24,
+            workload: Workload::ClosedLoop { think_s: 0.01 },
+            churn_drop_every: churn_every,
+            ..Default::default()
+        };
+        let mut cfg = FleetConfig::uniform(8, base);
+        cfg.uplink_bps = 5e5;
+        cfg.loss = loss;
+        cfg.requests_per_device = loss_requests;
+        cfg.verifier = VerifierConfig { concurrency: 4, batch_max: 8, ..Default::default() };
+        cfg.seed = 7171;
+        FleetSim::new(cfg).run()
+    };
+    let mut loss_points = Vec::new();
+    for (loss_name, loss) in &loss_laws {
+        for (pol_name, policy) in &loss_policies {
+            let r = loss_fleet(*loss, *policy, 0)?;
+            println!(
+                "{loss_name:<6} {pol_name:<6} latency p50 {:.4}s p95 {:.4}s | \
+                 {:.1} bits/tok | {} retransmits | {}/{} requests",
+                r.latency.p50(),
+                r.latency.percentile(95.0),
+                r.bits_per_token(),
+                r.retransmits,
+                r.completed,
+                loss_expected,
+            );
+            loss_points.push(Json::obj(vec![
+                ("loss", Json::Str(loss_name.to_string())),
+                ("policy", Json::Str(pol_name.to_string())),
+                ("steady_state_loss", Json::Num(loss.steady_state_loss())),
+                ("latency_p50_s", Json::Num(r.latency.p50())),
+                ("latency_p95_s", Json::Num(r.latency.percentile(95.0))),
+                ("bits_per_token", Json::Num(r.bits_per_token())),
+                ("retransmits", Json::Num(r.retransmits as f64)),
+                ("completed", Json::Num(r.completed as f64)),
+                ("expected", Json::Num(loss_expected as f64)),
+            ]));
+        }
+    }
+    // churn row: devices drop mid-epoch every 2 applied batches and
+    // resume-reconnect, stacked on the bursty loss law
+    let mut churn_points = Vec::new();
+    for (loss_name, loss) in &loss_laws {
+        let r = loss_fleet(*loss, Policy::KSqs { k: 8 }, 2)?;
+        println!(
+            "{loss_name:<6} churn  latency p50 {:.4}s | {} drops / {} reconnects | \
+             {} retransmits | {}/{} requests",
+            r.latency.p50(),
+            r.churn_drops,
+            r.churn_reconnects,
+            r.retransmits,
+            r.completed,
+            loss_expected,
+        );
+        churn_points.push(Json::obj(vec![
+            ("loss", Json::Str(loss_name.to_string())),
+            ("latency_p50_s", Json::Num(r.latency.p50())),
+            ("churn_drops", Json::Num(r.churn_drops as f64)),
+            ("churn_reconnects", Json::Num(r.churn_reconnects as f64)),
+            ("retransmits", Json::Num(r.retransmits as f64)),
+            ("completed", Json::Num(r.completed as f64)),
+            ("expected", Json::Num(loss_expected as f64)),
+        ]));
+    }
+    write_json_summary(
+        "BENCH_loss.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("loss_recovery".into())),
+            ("devices", Json::Num(8.0)),
+            ("points", Json::Arr(loss_points)),
+            ("churn", Json::Arr(churn_points)),
+        ]),
+    );
 
     write_json_summary(
         "BENCH_adaptive.json",

@@ -7,8 +7,12 @@
 //! latency ledger adds it to measured compute time — so experiments are
 //! reproducible regardless of host load.
 
+pub mod loss;
+pub mod profile;
 pub mod shared;
 
+pub use loss::{LossModel, LossProcess};
+pub use profile::{load_profile, parse_profile};
 pub use shared::SharedUplink;
 
 /// Link parameters.
@@ -58,6 +62,14 @@ pub struct SimulatedLink {
     /// clock, so stepped-link experiments stay bit-reproducible.
     schedule: Vec<(u64, f64)>,
     next_step: usize,
+    /// construction seed, retained so loss builders can derive their
+    /// own streams deterministically
+    seed: u64,
+    /// seeded frame-loss chain, per direction (lossless by default;
+    /// a `None` model draws no randomness, so loss-capable links are
+    /// bit-identical to pre-loss builds at loss = 0)
+    pub loss_up: LossProcess,
+    pub loss_down: LossProcess,
 }
 
 impl SimulatedLink {
@@ -69,7 +81,24 @@ impl SimulatedLink {
             rng: crate::util::rng::Pcg64::new(seed, 0xC4A77E1),
             schedule: Vec::new(),
             next_step: 0,
+            seed,
+            loss_up: LossProcess::new(LossModel::None, seed ^ 0x10_55E1),
+            loss_down: LossProcess::new(LossModel::None, seed ^ 0x10_55E2),
         }
+    }
+
+    /// Attach a frame-loss model to the uplink.  The process's RNG
+    /// stream derives from the link seed, so the same `(config, seed)`
+    /// always drops the same frames.
+    pub fn with_uplink_loss(mut self, model: LossModel) -> Self {
+        self.loss_up = LossProcess::new(model, self.seed ^ 0x10_55E1);
+        self
+    }
+
+    /// Attach a frame-loss model to the downlink.
+    pub fn with_downlink_loss(mut self, model: LossModel) -> Self {
+        self.loss_down = LossProcess::new(model, self.seed ^ 0x10_55E2);
+        self
     }
 
     /// Attach an uplink-bandwidth schedule (e.g. a mid-session drop:
@@ -174,6 +203,39 @@ mod tests {
         for bits in [100usize, 5000, 1, 777] {
             assert_eq!(plain.send_uplink(bits).to_bits(), scheduled.send_uplink(bits).to_bits());
         }
+    }
+
+    #[test]
+    fn none_loss_model_is_bit_neutral() {
+        // attaching the loss machinery with the model left at None must
+        // not perturb any latency or ledger bit
+        let cfg = LinkConfig { jitter_s: 0.004, ..Default::default() };
+        let mut plain = SimulatedLink::new(cfg, 77);
+        let mut lossy = SimulatedLink::new(cfg, 77)
+            .with_uplink_loss(LossModel::None)
+            .with_downlink_loss(LossModel::None);
+        for bits in [100usize, 5000, 1, 777] {
+            assert!(!lossy.loss_up.roll());
+            assert_eq!(plain.send_uplink(bits).to_bits(), lossy.send_uplink(bits).to_bits());
+            assert!(!lossy.loss_down.roll());
+            assert_eq!(plain.send_downlink(bits).to_bits(), lossy.send_downlink(bits).to_bits());
+        }
+        assert_eq!(lossy.loss_up.drops, 0);
+        assert_eq!(lossy.loss_up.rolls, 0);
+    }
+
+    #[test]
+    fn loss_rolls_do_not_perturb_jitter_stream() {
+        // the loss chain has its own RNG stream: rolling it must leave
+        // the jitter sequence untouched
+        let cfg = LinkConfig { jitter_s: 0.004, ..Default::default() };
+        let mut plain = SimulatedLink::new(cfg, 13);
+        let mut lossy = SimulatedLink::new(cfg, 13).with_uplink_loss(LossModel::Iid { p: 0.5 });
+        for bits in [640usize, 1280, 320, 960] {
+            lossy.loss_up.roll();
+            assert_eq!(plain.send_uplink(bits).to_bits(), lossy.send_uplink(bits).to_bits());
+        }
+        assert!(lossy.loss_up.rolls == 4);
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! Trace-driven bandwidth profiles.
+//!
+//! A profile is a CSV of `(frame_index, bits_per_second)` steps — the
+//! same frame-indexed semantics as
+//! [`SimulatedLink::with_uplink_schedule`](super::SimulatedLink::with_uplink_schedule)
+//! and [`SharedUplink::with_capacity_schedule`](super::SharedUplink::with_capacity_schedule):
+//! step `(n, bps)` caps the channel from the n-th transmitted frame
+//! (0-based) onward.  Keying on frame count rather than wall clock keeps
+//! trace-driven experiments a pure function of (config, seed).
+//!
+//! Shipped profiles live under `results/profiles/` (`4g.csv`, `5g.csv`,
+//! `leo.csv` — cellular fluctuation and LEO handover sawtooths shaped
+//! after public uplink traces) and load via the CLI `--profile` flag.
+
+/// Parse profile CSV text into sorted `(frame_index, bps)` steps.
+///
+/// Format: one `frame,bps` pair per line; blank lines and lines starting
+/// with `#` are ignored; an optional `frame,bps` header is skipped.
+///
+/// ```
+/// use sqs_sd::channel::parse_profile;
+/// let steps = parse_profile("# demo\nframe,bps\n0,1e6\n40,2.5e5\n").unwrap();
+/// assert_eq!(steps, vec![(0, 1e6), (40, 2.5e5)]);
+/// ```
+pub fn parse_profile(text: &str) -> Result<Vec<(u64, f64)>, String> {
+    let mut steps = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split(',');
+        let (a, b) = match (cols.next(), cols.next()) {
+            (Some(a), Some(b)) if cols.next().is_none() => (a.trim(), b.trim()),
+            _ => {
+                return Err(format!(
+                    "profile line {}: expected `frame,bps`, got {raw:?}",
+                    lineno + 1
+                ))
+            }
+        };
+        if a.eq_ignore_ascii_case("frame") {
+            continue; // header row
+        }
+        let frame: u64 = a
+            .parse()
+            .map_err(|_| format!("profile line {}: bad frame index {a:?}", lineno + 1))?;
+        let bps: f64 = b
+            .parse()
+            .map_err(|_| format!("profile line {}: bad bandwidth {b:?}", lineno + 1))?;
+        if !(bps.is_finite() && bps > 0.0) {
+            return Err(format!(
+                "profile line {}: bandwidth must be positive and finite, got {bps}",
+                lineno + 1
+            ));
+        }
+        steps.push((frame, bps));
+    }
+    if steps.is_empty() {
+        return Err("profile: no bandwidth steps found".to_string());
+    }
+    steps.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(steps)
+}
+
+/// Load a profile CSV from disk (see [`parse_profile`] for the format).
+pub fn load_profile(path: &str) -> Result<Vec<(u64, f64)>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("profile {path}: {e}"))?;
+    parse_profile(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_header_and_sorts() {
+        let text = "# LEO-shaped demo\nframe,bps\n40,2.5e5\n\n0,1e6\n# mid\n80,1e6\n";
+        let steps = parse_profile(text).unwrap();
+        assert_eq!(steps, vec![(0, 1e6), (40, 2.5e5), (80, 1e6)]);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(parse_profile("").is_err());
+        assert!(parse_profile("# only comments\n").is_err());
+        assert!(parse_profile("0\n").is_err());
+        assert!(parse_profile("0,1e6,extra\n").is_err());
+        assert!(parse_profile("x,1e6\n").is_err());
+        assert!(parse_profile("0,zoom\n").is_err());
+        assert!(parse_profile("0,-5\n").is_err());
+        assert!(parse_profile("0,0\n").is_err());
+    }
+
+    #[test]
+    fn shipped_profiles_parse() {
+        // the checked-in traces must stay loadable (CI runs this test
+        // from the workspace root's `rust/` directory)
+        for name in ["4g", "5g", "leo"] {
+            let path = format!("../results/profiles/{name}.csv");
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                let steps = parse_profile(&text).unwrap();
+                assert!(steps.len() >= 8, "{name}: suspiciously short profile");
+                assert_eq!(steps[0].0, 0, "{name}: first step should set frame 0");
+            }
+        }
+    }
+}

@@ -15,6 +15,7 @@
 use crate::trace::{TraceData, TraceSink, ACTOR_LINK};
 use crate::util::rng::Pcg64;
 
+use super::loss::{LossModel, LossProcess};
 use super::Ledger;
 
 /// A shared, rate-limited uplink with FIFO queueing and byte accounting.
@@ -41,6 +42,11 @@ pub struct SharedUplink {
     /// flight-recorder sink (disabled by default); `reserve` stamps
     /// `QueueWait` events in this channel's own clock domain
     tracer: TraceSink,
+    /// construction seed, retained for the loss builder
+    seed: u64,
+    /// seeded frame-loss chain shared by every device on the channel
+    /// (lossless by default; a `None` model draws no randomness)
+    pub loss: LossProcess,
 }
 
 impl SharedUplink {
@@ -56,7 +62,17 @@ impl SharedUplink {
             schedule: Vec::new(),
             next_step: 0,
             tracer: TraceSink::null(),
+            seed,
+            loss: LossProcess::new(LossModel::None, seed ^ 0x10_55E3),
         }
+    }
+
+    /// Attach a frame-loss model to the shared channel.  The chain is
+    /// rolled once per reserved frame in deterministic event order, so
+    /// drops are a pure function of `(config, seed)`.
+    pub fn with_loss(mut self, model: LossModel) -> Self {
+        self.loss = LossProcess::new(model, self.seed ^ 0x10_55E3);
+        self
     }
 
     /// Install a flight-recorder sink (shared with the fleet's devices).
@@ -213,6 +229,20 @@ mod tests {
             assert_eq!(a.0.to_bits(), b.0.to_bits());
             assert_eq!(a.1.to_bits(), b.1.to_bits());
         }
+    }
+
+    #[test]
+    fn none_loss_model_is_bit_neutral_on_shared_channel() {
+        let mut plain = SharedUplink::new(1e6, 0.01, 0.005, 4);
+        let mut lossy = SharedUplink::new(1e6, 0.01, 0.005, 4).with_loss(LossModel::None);
+        for (i, bits) in [900usize, 3000, 42, 1500].into_iter().enumerate() {
+            assert!(!lossy.loss.roll());
+            let a = plain.reserve(i as f64 * 0.05, bits);
+            let b = lossy.reserve(i as f64 * 0.05, bits);
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        assert_eq!(lossy.loss.rolls, 0);
     }
 
     #[test]

@@ -86,6 +86,15 @@ pub struct SessionConfig {
     /// v4 and ships `DraftTree` frames whose rejection continuations
     /// the cloud can survive into)
     pub tree_branching: usize,
+    /// bounded per-frame retransmit budget under a lossy channel; once a
+    /// frame has been lost `max_retransmits + 1` times the session falls
+    /// back to an epoch resync (uplink) or errors out (handshake,
+    /// downlink).  Irrelevant at loss = 0: a lossless link never enters
+    /// the recovery path at all.
+    pub max_retransmits: u32,
+    /// virtual seconds the edge waits past a frame's expected delivery
+    /// before declaring it lost and re-sending
+    pub loss_timeout_s: f64,
 }
 
 impl Default for SessionConfig {
@@ -102,9 +111,16 @@ impl Default for SessionConfig {
             adaptive: AdaptiveMode::Off,
             pipeline_depth: 1,
             tree_branching: 1,
+            max_retransmits: 4,
+            loss_timeout_s: 0.05,
         }
     }
 }
+
+/// Consecutive epoch-resyncs (uplink retransmit budgets exhausted
+/// back-to-back) before the session gives up with a clean error instead
+/// of spinning forever against a channel that drops everything.
+const MAX_RESYNC_STREAK: u32 = 16;
 
 /// Per-batch record (diagnostics, figure generation, knob traces).
 #[derive(Clone, Debug)]
@@ -146,6 +162,18 @@ pub struct SessionResult {
     /// sessions; their wire bits still count in the ledgers, but they
     /// produce no `BatchRecord`)
     pub discarded_batches: usize,
+    /// frames re-sent after a channel loss (handshake, draft uplink, and
+    /// duplicate-draft feedback recovery; 0 at loss = 0)
+    pub retransmits: u64,
+    /// epoch resyncs forced by an exhausted uplink retransmit budget:
+    /// the edge rolled back to the last acknowledged context and
+    /// redrafted (0 at loss = 0)
+    pub loss_resyncs: u64,
+    /// virtual seconds spent in loss recovery (loss timeouts plus
+    /// retransmission airtime).  Kept out of the per-stage
+    /// `t_uplink_s`/`t_downlink_s` ledgers so the control plane's link
+    /// estimator never mistakes loss for congestion.
+    pub t_recovery_s: f64,
     /// End-to-end virtual time.  At depth 1 this is the exact sum of the
     /// four stage components (the alternating protocol serializes them);
     /// at depth >= 2 it is the pipeline makespan, which overlap makes
@@ -322,23 +350,85 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         // acks.  Both frames ride the simulated link, so their bits and
         // latency are in the ledger like every other wire event.
         let hello = self.edge.wire.hello().map_err(|e| anyhow::anyhow!("handshake: {e}"))?;
-        let d_hello = self.transport.send_frame(
+        // A lost handshake frame is recovered by bounded blind re-send:
+        // neither side has negotiated loss-recovery semantics yet, so the
+        // timeout-and-retry here is the whole protocol.  At loss = 0 the
+        // loops never run and the ledger is bit-identical to before.
+        let hello_frame = Frame::Hello(hello);
+        let mut retransmits = 0u64;
+        let mut t_recovery = 0.0f64;
+        let mut d_hello = self.transport.send_frame(
             Direction::Up,
-            &Frame::Hello(hello),
+            &hello_frame,
             &mut self.edge.wire,
             0.0,
         )?;
+        let mut up_bits = d_hello.bits as u64;
+        while self.transport.last_send_lost() {
+            retransmits += 1;
+            if retransmits > self.cfg.max_retransmits as u64 {
+                bail!(
+                    "handshake: Hello lost beyond recovery ({} retries)",
+                    self.cfg.max_retransmits
+                );
+            }
+            t_recovery += d_hello.latency_s() + self.cfg.loss_timeout_s;
+            d_hello = self.transport.send_frame(
+                Direction::Up,
+                &hello_frame,
+                &mut self.edge.wire,
+                0.0,
+            )?;
+            up_bits += d_hello.bits as u64;
+        }
         let heard = match self.transport.recv_frame(Direction::Up, &mut self.edge.wire)? {
             Frame::Hello(h) => h,
             other => bail!("handshake: expected Hello on the uplink, got {}", other.name()),
         };
         let ack = negotiate(&heard).map_err(|e| anyhow::anyhow!("handshake rejected: {e}"))?;
-        let d_ack = self.transport.send_frame(
+        let ack_frame = Frame::HelloAck(ack);
+        let mut d_ack = self.transport.send_frame(
             Direction::Down,
-            &Frame::HelloAck(ack),
+            &ack_frame,
             &mut self.edge.wire,
             0.0,
         )?;
+        let mut down_bits = d_ack.bits as u64;
+        let mut ack_losses = 0u64;
+        while self.transport.last_send_lost() {
+            ack_losses += 1;
+            if ack_losses > self.cfg.max_retransmits as u64 {
+                bail!(
+                    "handshake: HelloAck lost beyond recovery ({} retries)",
+                    self.cfg.max_retransmits
+                );
+            }
+            retransmits += 1;
+            // the edge times out and re-sends the Hello; the cloud treats
+            // the duplicate as a re-ask and answers again.  The duplicate
+            // Hello itself rides the lossy uplink, but its loss only adds
+            // another timeout round, which the bounded loop already models.
+            t_recovery += d_ack.latency_s() + self.cfg.loss_timeout_s;
+            let d_dup = self.transport.send_frame(
+                Direction::Up,
+                &hello_frame,
+                &mut self.edge.wire,
+                0.0,
+            )?;
+            up_bits += d_dup.bits as u64;
+            if self.transport.last_send_lost() {
+                t_recovery += d_dup.latency_s() + self.cfg.loss_timeout_s;
+                continue;
+            }
+            let _ = self.transport.recv_frame(Direction::Up, &mut self.edge.wire)?;
+            d_ack = self.transport.send_frame(
+                Direction::Down,
+                &ack_frame,
+                &mut self.edge.wire,
+                0.0,
+            )?;
+            down_bits += d_ack.bits as u64;
+        }
         let ack = match self.transport.recv_frame(Direction::Down, &mut self.edge.wire)? {
             Frame::HelloAck(a) => a,
             other => bail!("handshake: expected HelloAck, got {}", other.name()),
@@ -350,10 +440,12 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             bail!("handshake: ack does not match the advertised codec config");
         }
         Ok(HandshakeLedger {
-            up_bits: d_hello.bits as u64,
-            down_bits: d_ack.bits as u64,
+            up_bits,
+            down_bits,
             t_up: d_hello.latency_s(),
             t_down: d_ack.latency_s(),
+            retransmits,
+            t_recovery,
         })
     }
 
@@ -394,9 +486,17 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         let mut reject_distortion = 0u64;
         let mut reject_mass_mismatch = 0.0f64;
         let mut reject_mass_distortion = 0.0f64;
+        // loss-recovery ledger (all zero at loss = 0: the recovery paths
+        // below are gated on `Transport::last_send_lost`, which a
+        // lossless link never raises)
+        let mut retransmits = hs.retransmits;
+        let mut loss_resyncs = 0u64;
+        let mut t_recovery = hs.t_recovery;
+        let mut consecutive_resyncs = 0u32;
 
-        // virtual timeline (handshake is sequential: up then down)
-        let hs_done = hs.t_up + hs.t_down;
+        // virtual timeline (handshake is sequential: up then down, plus
+        // any timeout-and-retry rounds the lossy link forced on it)
+        let hs_done = hs.t_up + hs.t_down + hs.t_recovery;
         let mut t_edge = hs_done; // when the edge is next free
         let mut up_busy = hs_done; // uplink transmitter busy-until
         let mut cloud_free = hs_done; // verify server busy-until
@@ -503,18 +603,79 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                     }
                     None => Frame::Draft(body),
                 };
-                let d_up = self.transport.send_frame(
+                let mut d_up = self.transport.send_frame(
                     Direction::Up,
                     &up_frame,
                     &mut self.edge.wire,
                     0.0,
                 )?;
-                let up_time = d_up.latency_s();
                 uplink_bits += d_up.bits as u64;
                 let air_s = d_up.bits as f64 / self.transport.link.cfg.uplink_bps;
-                let send_start = draft_done.max(up_busy);
+                let mut send_start = draft_done.max(up_busy);
                 up_busy = send_start + air_s;
                 let queue_wait_s = send_start - draft_done;
+                // ---- uplink loss recovery (never entered at loss = 0, so
+                // the lossless ledger is bit-identical by construction).
+                // A lost draft is invisible to the cloud: the edge learns
+                // of it only by feedback timeout, then re-sends the same
+                // encoded frame.  Once the retransmit budget is spent it
+                // stops betting on the channel — epoch-resync back to the
+                // pre-batch context and redraft from there, reusing the
+                // sequence number the cloud never saw.
+                let mut up_attempt = 0u32;
+                let mut resynced = false;
+                while self.transport.last_send_lost() {
+                    up_attempt += 1;
+                    // the loss is observed one airtime + timeout after the
+                    // transmitter started; the wasted spend is recovery
+                    // time, not uplink time, so the control plane's link
+                    // estimator never reads loss as congestion
+                    t_recovery += air_s + self.cfg.loss_timeout_s;
+                    let retry_at = send_start + air_s + self.cfg.loss_timeout_s;
+                    if up_attempt > self.cfg.max_retransmits {
+                        self.edge.resync_to(ctx_before)?;
+                        next_seq = seq;
+                        loss_resyncs += 1;
+                        consecutive_resyncs += 1;
+                        let epoch = edge_epoch;
+                        self.tracer.emit(retry_at, 0, || TraceData::LossResync {
+                            batch_seq: seq,
+                            epoch,
+                        });
+                        if consecutive_resyncs > MAX_RESYNC_STREAK {
+                            bail!(
+                                "uplink lost beyond recovery: {consecutive_resyncs} \
+                                 consecutive epoch resyncs (loss model defeats the \
+                                 retry budget of {})",
+                                self.cfg.max_retransmits
+                            );
+                        }
+                        t_edge = t_edge.max(retry_at);
+                        resynced = true;
+                        break;
+                    }
+                    retransmits += 1;
+                    let attempt = up_attempt;
+                    self.tracer.emit(retry_at, 0, || TraceData::Retransmit {
+                        dir: Dir::Up,
+                        batch_seq: seq,
+                        attempt,
+                    });
+                    d_up = self.transport.send_frame(
+                        Direction::Up,
+                        &up_frame,
+                        &mut self.edge.wire,
+                        0.0,
+                    )?;
+                    uplink_bits += d_up.bits as u64;
+                    send_start = retry_at.max(up_busy);
+                    up_busy = send_start + air_s;
+                }
+                if resynced {
+                    continue;
+                }
+                consecutive_resyncs = 0;
+                let up_time = d_up.latency_s();
                 let delivered_at = send_start + up_time;
                 let up_kind: &'static str = match &up_frame {
                     Frame::DraftTree(_) => "draft_tree",
@@ -665,17 +826,82 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
                 }
 
                 // ---- downlink feedback ----------------------------------
-                let d_down = self.transport.send_frame(
+                let down_frame = Frame::Feedback(fb_out);
+                let mut d_down = self.transport.send_frame(
                     Direction::Down,
-                    &Frame::Feedback(fb_out),
+                    &down_frame,
                     &mut self.edge.wire,
                     0.0,
                 )?;
-                let down_time = d_down.latency_s();
                 downlink_bits += d_down.bits as u64;
                 let fb_air_s = d_down.bits as f64 / self.transport.link.cfg.downlink_bps;
-                let fb_start = verify_done.max(down_busy);
+                let mut fb_start = verify_done.max(down_busy);
                 down_busy = fb_start + fb_air_s;
+                // ---- downlink loss recovery (never entered at loss = 0).
+                // A lost feedback strands the edge: it times out, re-sends
+                // the draft — a duplicate the cloud recognizes by sequence
+                // number and answers from its cached feedback without
+                // re-verifying — and waits again.  Either leg of that
+                // exchange can be lost too, so the loop is bounded like
+                // the uplink's.
+                let mut down_attempt = 0u32;
+                // the edge's timeout clock starts when the lost feedback
+                // would have arrived
+                let mut deadline = fb_start + d_down.latency_s();
+                while self.transport.last_send_lost() {
+                    down_attempt += 1;
+                    if down_attempt > self.cfg.max_retransmits {
+                        bail!(
+                            "feedback for seq {seq} lost beyond recovery \
+                             ({} duplicate-draft retries)",
+                            self.cfg.max_retransmits
+                        );
+                    }
+                    retransmits += 1;
+                    let act_at = deadline + self.cfg.loss_timeout_s;
+                    let attempt = down_attempt;
+                    self.tracer.emit(act_at, 0, || TraceData::Retransmit {
+                        dir: Dir::Down,
+                        batch_seq: seq,
+                        attempt,
+                    });
+                    // duplicate draft up (itself subject to loss)
+                    let d_dup = self.transport.send_frame(
+                        Direction::Up,
+                        &up_frame,
+                        &mut self.edge.wire,
+                        0.0,
+                    )?;
+                    uplink_bits += d_dup.bits as u64;
+                    let dup_start = act_at.max(up_busy);
+                    up_busy =
+                        dup_start + d_dup.bits as f64 / self.transport.link.cfg.uplink_bps;
+                    t_recovery += self.cfg.loss_timeout_s + d_dup.latency_s();
+                    if self.transport.last_send_lost() {
+                        // the duplicate died too: time out again from its
+                        // (never-observed) delivery time
+                        deadline = dup_start + d_dup.latency_s();
+                        continue;
+                    }
+                    // the cloud drains the duplicate and re-sends the
+                    // cached feedback
+                    let _ = self.transport.recv_frame_view(
+                        Direction::Up,
+                        &mut self.edge.wire,
+                        &mut arena,
+                    )?;
+                    d_down = self.transport.send_frame(
+                        Direction::Down,
+                        &down_frame,
+                        &mut self.edge.wire,
+                        0.0,
+                    )?;
+                    downlink_bits += d_down.bits as u64;
+                    fb_start = (dup_start + d_dup.latency_s()).max(down_busy);
+                    down_busy = fb_start + fb_air_s;
+                    deadline = fb_start + d_down.latency_s();
+                }
+                let down_time = d_down.latency_s();
                 let arrive_at = fb_start + down_time;
                 self.tracer.emit(fb_start, ACTOR_CLOUD, || TraceData::FrameTx {
                     dir: Dir::Down,
@@ -915,9 +1141,16 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         }
 
         // the alternating protocol serializes the four stages, so their
-        // sum IS the end-to-end time (bit-identical to the v2 loop); a
-        // pipelined run overlaps stages and reports the makespan instead
-        let total_time_s = if pipelined { t_edge } else { t_slm + t_up + t_llm + t_down };
+        // sum (plus any loss-recovery stalls) IS the end-to-end time
+        // (bit-identical to the v2 loop at loss = 0, where t_recovery is
+        // exactly 0.0); a pipelined run overlaps stages and reports the
+        // makespan instead, whose busy-until clocks already absorbed the
+        // recovery delays
+        let total_time_s = if pipelined {
+            t_edge
+        } else {
+            t_slm + t_up + t_llm + t_down + t_recovery
+        };
         let mut res = self.assemble(
             prompt.len(),
             batches,
@@ -936,6 +1169,9 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
         res.reject_distortion = reject_distortion;
         res.reject_mass_mismatch = reject_mass_mismatch;
         res.reject_mass_distortion = reject_mass_distortion;
+        res.retransmits = retransmits;
+        res.loss_resyncs = loss_resyncs;
+        res.t_recovery_s = t_recovery;
         Ok(res)
     }
 
@@ -1120,6 +1356,9 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
             pipeline_depth: self.cfg.pipeline_depth.max(1),
             tree_branching: self.cfg.tree_branching.max(1),
             discarded_batches: discarded,
+            retransmits: 0,
+            loss_resyncs: 0,
+            t_recovery_s: 0.0,
             total_time_s,
             t_slm_s: t_slm,
             t_uplink_s: t_up,
@@ -1157,12 +1396,15 @@ impl<D: DraftLm, T: TargetLm> SdSession<D, T> {
     }
 }
 
-/// One-time handshake ledger entries (bits + one-way latencies).
+/// One-time handshake ledger entries (bits + one-way latencies, plus
+/// any loss-recovery spend the exchange needed; both zero at loss = 0).
 struct HandshakeLedger {
     up_bits: u64,
     down_bits: u64,
     t_up: f64,
     t_down: f64,
+    retransmits: u64,
+    t_recovery: f64,
 }
 
 /// One unacknowledged speculative batch in the session engine's
@@ -1251,6 +1493,9 @@ impl<T: TargetLm> ArBaseline<T> {
             pipeline_depth: 1,
             tree_branching: 1,
             discarded_batches: 0,
+            retransmits: 0,
+            loss_resyncs: 0,
+            t_recovery_s: 0.0,
             total_time_s: t_up + t_llm + t_down,
             t_slm_s: 0.0,
             t_uplink_s: t_up,

@@ -429,6 +429,15 @@ impl<D: DraftLm> EdgeNode<D> {
     pub fn context_len(&self) -> usize {
         self.draft.len()
     }
+
+    /// Loss-recovery resync: discard every token drafted past `ctx_len`
+    /// and rewind the draft KV to match.  Used when a draft frame is
+    /// lost beyond the retransmit budget — the cloud never saw the
+    /// batch, so no verdict exists and the conformal controller hears
+    /// nothing (its guarantee covers verified rounds only).
+    pub fn resync_to(&mut self, ctx_len: usize) -> Result<()> {
+        self.draft.rollback(ctx_len)
+    }
 }
 
 #[cfg(test)]

@@ -78,6 +78,21 @@ pub struct DeviceProfile {
     /// bit-exact; >= 2 with `pipeline_depth >= 2` ships protocol-v4
     /// `DraftTree` frames)
     pub tree_branching: usize,
+    /// bounded ARQ budget on the shared uplink: how many times a lost
+    /// draft frame is re-sent (with a timeout between attempts) before
+    /// the run errors out.  Inline retransmission is the fleet tier's
+    /// whole recovery story — epoch resync lives in the session engine
+    /// — so the budget defaults generously; irrelevant at loss = 0.
+    pub max_retransmits: u32,
+    /// virtual seconds the device waits past a frame's expected
+    /// delivery before declaring it lost and re-sending
+    pub loss_timeout_s: f64,
+    /// churn: drop the connection after this many applied feedbacks and
+    /// reconnect via session resume (0 = never, the default)
+    pub churn_drop_every: u64,
+    /// virtual seconds a churned device is offline before its
+    /// resume-and-redraft completes
+    pub churn_reconnect_s: f64,
 }
 
 impl Default for DeviceProfile {
@@ -97,6 +112,10 @@ impl Default for DeviceProfile {
             adaptive: AdaptiveMode::Off,
             pipeline_depth: 1,
             tree_branching: 1,
+            max_retransmits: 12,
+            loss_timeout_s: 0.05,
+            churn_drop_every: 0,
+            churn_reconnect_s: 0.05,
         }
     }
 }
@@ -181,6 +200,12 @@ pub struct DeviceStats {
     pub reject_mass_distortion: f64,
     /// dropped mass alpha_n over every drafted node
     pub alpha: Summary,
+    /// draft frames re-sent after shared-uplink loss (0 at loss = 0)
+    pub retransmits: u64,
+    /// connections dropped by the churn process
+    pub churn_drops: u64,
+    /// successful resume-reconnects after a churn drop
+    pub churn_reconnects: u64,
 }
 
 /// Pre-registered metric handles for the rejection-attribution plane
@@ -237,6 +262,9 @@ pub struct Device {
     trace_now: f64,
     /// last knobs emitted as a `KnobChange` (emit on change only)
     last_knobs: Option<Knobs>,
+    /// feedbacks applied since the last churn reconnect (drives the
+    /// deterministic churn drop schedule)
+    batches_since_reconnect: u64,
     /// fleet-level attribution metric handles (None in unit drivers)
     attrib: Option<AttribSinks>,
     /// per-device decode scratch: frames off the port parse into this
@@ -317,6 +345,7 @@ impl Device {
             tracer: TraceSink::null(),
             trace_now: 0.0,
             last_knobs: None,
+            batches_since_reconnect: 0,
             attrib: None,
             arena: WireArena::new(),
         }
@@ -524,7 +553,36 @@ impl Device {
             None if self.pipelined() => Frame::DraftSeq(SeqDraft { seq, epoch, frame }),
             None => Frame::Draft(frame),
         };
-        let d = self.port.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, now)?;
+        let mut d = self.port.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, now)?;
+        // ---- shared-uplink loss recovery (never entered at loss = 0).
+        // Inline bounded ARQ: a lost frame's airtime was spent but it
+        // never reached the verifier queue, so the device times out and
+        // re-sends the same frame.  Retries happen before the delivery
+        // event is scheduled, which keeps the FIFO ack order — and with
+        // it the whole event machine — untouched.
+        let mut attempt = 0u32;
+        while self.port.last_send_lost() {
+            attempt += 1;
+            if attempt > self.profile.max_retransmits {
+                bail!(
+                    "device {}: draft seq {seq} lost beyond recovery \
+                     ({} retransmits)",
+                    self.id,
+                    self.profile.max_retransmits
+                );
+            }
+            self.stats.retransmits += 1;
+            self.stats.uplink_bits += d.bits as u64;
+            let retry_at = d.delivered_at + self.profile.loss_timeout_s;
+            let a = attempt;
+            let actor = self.id as u32;
+            self.tracer.emit(retry_at, actor, || TraceData::Retransmit {
+                dir: Dir::Up,
+                batch_seq: seq,
+                attempt: a,
+            });
+            d = self.port.send_frame(Direction::Up, &up_frame, &mut self.edge.wire, retry_at)?;
+        }
         let kind: &'static str = match &up_frame {
             Frame::DraftTree(_) => "draft_tree",
             Frame::DraftSeq(_) => "draft_seq",
@@ -750,6 +808,7 @@ impl Device {
             debug_assert_eq!(seq, pending.seq, "FIFO downlink: acks arrive in seq order");
         }
         self.speculated -= pending.drafted;
+        self.batches_since_reconnect += 1;
         let t = self.trace_now;
         let actor = self.id as u32;
         if let Some(bits) = fb.grant() {
@@ -906,6 +965,52 @@ impl Device {
         let produced = req.seq.len() - req.prompt_len;
         Ok((produced >= self.profile.max_new_tokens || !self.room_left())
             && self.in_flight.is_empty())
+    }
+
+    /// Has the churn process decided this device's connection drops
+    /// now?  Only quiescent devices churn (no drafts in flight and no
+    /// draft elapsing), so the drop never strands a sequence number.
+    pub fn should_churn(&self) -> bool {
+        self.profile.churn_drop_every > 0
+            && self.active.is_some()
+            && self.batches_since_reconnect >= self.profile.churn_drop_every
+            && self.in_flight.is_empty()
+            && !self.drafting
+    }
+
+    /// Drop the connection mid-request and reconnect via session
+    /// resume: both contexts restart from the committed sequence (what
+    /// a resume token restores), protocol state — sequence numbers and
+    /// speculation epochs — starts fresh like any new connection, and
+    /// the already-generated tokens are kept.  Returns the virtual
+    /// seconds until the first post-resume draft is ready (reconnect
+    /// delay + modeled SLM time), or None when the request has nothing
+    /// left to draft and should be completed instead.
+    pub fn churn_reconnect(&mut self, now: f64) -> Result<Option<f64>> {
+        let req = self
+            .active
+            .as_ref()
+            .ok_or_else(|| anyhow!("churn without active request"))?;
+        let actor = self.id as u32;
+        let epoch = self.edge_epoch;
+        self.tracer.emit(now, actor, || TraceData::ChurnDrop { epoch });
+        let seq = req.seq.clone();
+        self.edge.start(&seq)?;
+        self.cloud.start(&seq)?;
+        self.next_seq = 0;
+        self.edge_epoch = 0;
+        self.cloud_epoch = 0;
+        self.speculated = 0;
+        self.drafting = false;
+        self.in_flight.clear();
+        self.ready_feedback.clear();
+        self.cloud_prev = *seq.last().unwrap();
+        self.batches_since_reconnect = 0;
+        self.stats.churn_drops += 1;
+        self.stats.churn_reconnects += 1;
+        let reconnect_at = now + self.profile.churn_reconnect_s;
+        self.tracer.emit(reconnect_at, actor, || TraceData::ChurnReconnect { resumed: true });
+        Ok(self.begin_batch()?.map(|s| self.profile.churn_reconnect_s + s))
     }
 
     /// Record the finished request and free the device.

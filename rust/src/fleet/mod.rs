@@ -35,7 +35,7 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use crate::channel::SharedUplink;
+use crate::channel::{LossModel, SharedUplink};
 use crate::control::{AdaptiveMode, KnobPoint};
 use crate::coordinator::{linear_bounds, log_bounds, Counter, Gauge, Histogram, Metrics};
 use crate::model::synthetic::SyntheticWorld;
@@ -66,6 +66,11 @@ pub struct FleetConfig {
     /// same frame-indexed semantics as `SimulatedLink`'s schedule, so a
     /// fleet-wide capacity drop is a reproducible dynamic scenario
     pub uplink_schedule: Vec<(u64, f64)>,
+    /// frame-loss law on the shared uplink (None = lossless,
+    /// bit-identical to a build without the loss machinery; devices
+    /// recover lost drafts by bounded inline retransmission).  The
+    /// dedicated per-device downlinks are modeled lossless at this tier.
+    pub loss: LossModel,
     /// one-way propagation delay, seconds (both directions)
     pub propagation_s: f64,
     /// uniform jitter amplitude, seconds
@@ -88,6 +93,7 @@ impl FleetConfig {
             profiles,
             uplink_bps: 1e6,
             uplink_schedule: Vec::new(),
+            loss: LossModel::None,
             propagation_s: 0.010,
             jitter_s: 0.0,
             requests_per_device: 4,
@@ -178,6 +184,12 @@ pub struct FleetReport {
     pub verify_utilization: f64,
     /// fleet-wide stale speculative batches discarded by the verifier
     pub discarded_batches: u64,
+    /// fleet-wide draft frames re-sent after uplink loss (bounded ARQ)
+    pub retransmits: u64,
+    /// devices that dropped mid-request under scripted churn
+    pub churn_drops: u64,
+    /// successful resume-token reconnects after a churn drop
+    pub churn_reconnects: u64,
     /// (policy name, rejected batches, total batches)
     pub rejection_by_policy: Vec<(String, u64, u64)>,
     /// drafted-token acceptance across the fleet
@@ -285,6 +297,18 @@ impl FleetReport {
                 self.discarded_batches
             ));
         }
+        if self.retransmits > 0 {
+            out.push_str(&format!(
+                "loss recovery: {} draft frames retransmitted\n",
+                self.retransmits
+            ));
+        }
+        if self.churn_drops > 0 {
+            out.push_str(&format!(
+                "churn: {} device drops / {} resume reconnects\n",
+                self.churn_drops, self.churn_reconnects
+            ));
+        }
         out.push_str(&format!("acceptance: {:.3}\n", self.acceptance));
         let attributed = self.reject_mismatch + self.reject_distortion;
         if attributed > 0 {
@@ -328,6 +352,11 @@ struct FleetMetrics {
     verify_batch_size: Histogram,
     verify_queue_wait: Histogram,
     sessions_live: Gauge,
+    /// loss-recovery plane: inline ARQ re-sends on the shared uplink
+    resync_retransmits: Counter,
+    /// churn plane: connection drops and resume-reconnects
+    resume_drops: Counter,
+    resume_reconnects: Counter,
 }
 
 impl FleetMetrics {
@@ -354,6 +383,9 @@ impl FleetMetrics {
             verify_queue_wait: metrics
                 .histogram_handle("verify.queue_wait", &log_bounds(1e-6, 10.0, 6)),
             sessions_live: metrics.gauge_handle("sessions.live"),
+            resync_retransmits: metrics.counter_handle("resync.retransmits"),
+            resume_drops: metrics.counter_handle("resume.drops"),
+            resume_reconnects: metrics.counter_handle("resume.reconnects"),
         }
     }
 }
@@ -383,7 +415,8 @@ impl FleetSim {
         let world = SyntheticWorld::new(cfg.vocab, cfg.mismatch, cfg.seed ^ 0x57A7E);
         let uplink = Rc::new(RefCell::new(
             SharedUplink::new(cfg.uplink_bps, cfg.propagation_s, cfg.jitter_s, cfg.seed ^ 0x11F)
-                .with_capacity_schedule(cfg.uplink_schedule.clone()),
+                .with_capacity_schedule(cfg.uplink_schedule.clone())
+                .with_loss(cfg.loss),
         ));
         let devices: Vec<Device> = cfg
             .profiles
@@ -498,8 +531,15 @@ impl FleetSim {
             EventKind::DraftDone => {
                 // the device's port encodes the frame and reserves the
                 // shared channel; queue wait + total uplink time feed its
-                // link estimator when the round completes
+                // link estimator when the round completes.  Under a lossy
+                // uplink the send may retry inline (bounded ARQ) — the
+                // returned delivery is always the attempt that landed.
+                let retrans_before = self.devices[d].stats.retransmits;
                 let delivery = self.devices[d].send_draft(now)?;
+                let re_sent = self.devices[d].stats.retransmits - retrans_before;
+                if re_sent > 0 {
+                    self.m.resync_retransmits.inc(re_sent);
+                }
                 self.m.uplink_wait_s.observe(delivery.queue_wait_s);
                 self.events.push(delivery.delivered_at, d, EventKind::UplinkDelivered);
                 // pipelining: keep drafting speculative continuations
@@ -528,6 +568,20 @@ impl FleetSim {
                 }
                 if done {
                     self.finish_request(d, now)?;
+                } else if self.devices[d].should_churn() {
+                    // scripted churn: the device drops at this quiescent
+                    // point and immediately reconnects via its resume
+                    // token, restarting both contexts from the committed
+                    // prefix (generated tokens survive the round trip)
+                    self.m.resume_drops.inc(1);
+                    self.m.resume_reconnects.inc(1);
+                    match self.devices[d].churn_reconnect(now)? {
+                        Some(delay_s) => {
+                            self.events.push(now + delay_s, d, EventKind::DraftDone)
+                        }
+                        // no context room left after the restart
+                        None => self.finish_request(d, now)?,
+                    }
                 } else if self.devices[d].in_flight_len() == 0 && !self.devices[d].drafting {
                     match self.devices[d].begin_batch()? {
                         Some(draft_s) => {
@@ -628,6 +682,8 @@ impl FleetSim {
         let (mut reject_mismatch, mut reject_distortion) = (0u64, 0u64);
         let (mut reject_mass_mismatch, mut reject_mass_distortion) = (0.0f64, 0.0f64);
         let (mut alpha_sum, mut alpha_n) = (0.0f64, 0u64);
+        let mut retransmits = 0u64;
+        let (mut churn_drops, mut churn_reconnects) = (0u64, 0u64);
         for dev in &devices {
             let st = &dev.stats;
             completed += st.completed;
@@ -647,6 +703,9 @@ impl FleetSim {
             accepted += st.accepted_tokens;
             downlink_bits += st.downlink_bits;
             discarded_batches += st.discarded_batches;
+            retransmits += st.retransmits;
+            churn_drops += st.churn_drops;
+            churn_reconnects += st.churn_reconnects;
             let label = policy_label(&dev.profile.policy, dev.profile.adaptive);
             let entry = by_policy.entry(label.clone()).or_insert((0, 0));
             entry.0 += st.rejected_batches;
@@ -686,6 +745,9 @@ impl FleetSim {
             verify_mean_batch: verifier.mean_batch(),
             verify_utilization: verifier.utilization(horizon),
             discarded_batches,
+            retransmits,
+            churn_drops,
+            churn_reconnects,
             rejection_by_policy: by_policy
                 .into_iter()
                 .map(|(k, (r, t))| (k, r, t))
@@ -750,6 +812,60 @@ mod tests {
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.digest(), b.digest());
         assert!(!a.trace.is_empty());
+    }
+
+    #[test]
+    fn lossy_uplink_completes_with_retransmits() {
+        let mut cfg = base_cfg(4, Policy::KSqs { k: 8 });
+        cfg.loss = LossModel::Iid { p: 0.25 };
+        let report = FleetSim::new(cfg).run().unwrap();
+        assert_eq!(report.completed, 12, "loss must be recovered, not surfaced");
+        assert!(report.retransmits > 0, "25% iid loss should force retransmits");
+        assert_eq!(report.metrics.counter("resync.retransmits"), report.retransmits);
+    }
+
+    #[test]
+    fn lossy_ge_run_is_deterministic() {
+        let mk = || {
+            let mut cfg = base_cfg(3, Policy::KSqs { k: 8 });
+            cfg.loss = LossModel::GilbertElliott {
+                p_enter_bad: 0.05,
+                p_exit_bad: 0.4,
+                loss_good: 0.01,
+                loss_bad: 0.4,
+            };
+            cfg
+        };
+        let a = FleetSim::new(mk()).run().unwrap();
+        let b = FleetSim::new(mk()).run().unwrap();
+        assert_eq!(a.completed, 9);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.retransmits, b.retransmits);
+    }
+
+    #[test]
+    fn churn_drops_and_reconnects() {
+        let mk = || {
+            let profile = DeviceProfile {
+                policy: Policy::KSqs { k: 8 },
+                max_new_tokens: 16,
+                workload: Workload::ClosedLoop { think_s: 0.01 },
+                churn_drop_every: 2,
+                ..Default::default()
+            };
+            let mut cfg = FleetConfig::uniform(3, profile);
+            cfg.requests_per_device = 2;
+            cfg.seed = 42;
+            cfg
+        };
+        let a = FleetSim::new(mk()).run().unwrap();
+        assert_eq!(a.completed, 6, "churned requests resume and complete");
+        assert!(a.churn_drops > 0, "drop_every=2 must trigger at least one drop");
+        assert_eq!(a.churn_reconnects, a.churn_drops);
+        assert_eq!(a.metrics.counter("resume.drops"), a.churn_drops);
+        assert_eq!(a.metrics.counter("resume.reconnects"), a.churn_reconnects);
+        let b = FleetSim::new(mk()).run().unwrap();
+        assert_eq!(a.digest(), b.digest());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use sqs_sd::channel::LinkConfig;
+use sqs_sd::channel::{load_profile, LinkConfig, LossModel};
 use sqs_sd::control::AdaptiveMode;
 #[cfg(feature = "pjrt")]
 use sqs_sd::coordinator::PjrtStack;
@@ -404,6 +404,23 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     .opt("draft-token-ms", "1.2", "modeled SLM cost per drafted token, ms")
     .opt("vocab", "64", "synthetic vocabulary size")
     .opt("mismatch", "0.6", "draft-target mismatch (synthetic world)")
+    .opt(
+        "loss-model",
+        "none",
+        "shared-uplink frame loss: none | iid:<p> | ge:<p_enter>,<p_exit>,<loss_good>,<loss_bad>",
+    )
+    .opt(
+        "profile",
+        "",
+        "bandwidth-profile CSV driving the uplink schedule \
+         (frame,bps rows; e.g. results/profiles/leo.csv)",
+    )
+    .opt(
+        "churn-drop-every",
+        "0",
+        "churn: drop every device's connection after this many applied \
+         feedbacks and resume-reconnect (0 = never)",
+    )
     .flag("heterogeneous", "vary draft speed / downlink / rate per device")
     .flag("mixed", "round-robin ksqs/csqs/dense policies (overrides --policy)")
     .flag("trace", "print the exact event trace before the summary");
@@ -458,6 +475,7 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         adaptive: parse_adaptive(&a)?,
         pipeline_depth: parse_pipeline_depth(&a)?,
         tree_branching: parse_tree_branching(&a)?,
+        churn_drop_every: a.get_u64("churn-drop-every").map_err(|e| anyhow!(e))?,
         ..Default::default()
     };
     // --heterogeneous and --mixed compose: vary the hardware, then
@@ -476,10 +494,18 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
     if profiles.iter().any(|p| aimd_overrides_csqs(p.policy, p.adaptive)) {
         warn_aimd_overrides_csqs();
     }
+    let loss = LossModel::parse(&a.get("loss-model")).map_err(|e| anyhow!(e))?;
+    let profile = a.get("profile");
+    let uplink_schedule = if profile.is_empty() {
+        Vec::new()
+    } else {
+        load_profile(&profile).map_err(|e| anyhow!(e))?
+    };
     let cfg = FleetConfig {
         profiles,
         uplink_bps: link.uplink_bps,
-        uplink_schedule: Vec::new(),
+        uplink_schedule,
+        loss,
         propagation_s: link.propagation_s,
         jitter_s: link.jitter_s,
         requests_per_device: a.get_usize("requests").map_err(|e| anyhow!(e))?,
@@ -548,6 +574,17 @@ fn cmd_soak(argv: Vec<String>) -> Result<()> {
     .opt("max-sessions", "0", "live-session admission cap (0 = unbounded)")
     .opt("vocab", "64", "synthetic vocabulary size")
     .opt("mismatch", "0.6", "draft-target mismatch (synthetic world)")
+    .opt(
+        "read-timeout-s",
+        "30",
+        "per-read client deadline, seconds: a dead server fails sessions \
+         cleanly instead of hanging the generator (0 = blocking reads)",
+    )
+    .opt("resume-cap", "64", "server session-resume table capacity (0 disables resume)")
+    .flag(
+        "loss-recovery",
+        "advertise protocol v5 (resume tokens + nack recovery) from every client",
+    )
     .opt("metrics-json", "", "write the server metrics registry as JSON here");
     let a = a.parse_from(argv).map_err(|e| anyhow!("{e}"))?;
 
@@ -582,6 +619,7 @@ fn cmd_soak(argv: Vec<String>) -> Result<()> {
         verify_token_s: a.get_f64("verify-token-ms").map_err(|e| anyhow!(e))? / 1e3,
         max_backlog: a.get_usize("max-backlog").map_err(|e| anyhow!(e))?,
         max_sessions: a.get_usize("max-sessions").map_err(|e| anyhow!(e))?,
+        resume_cap: a.get_usize("resume-cap").map_err(|e| anyhow!(e))?,
         ..Default::default()
     };
     let soak_cfg = SoakConfig {
@@ -594,6 +632,8 @@ fn cmd_soak(argv: Vec<String>) -> Result<()> {
         ell: a.get_usize("ell").map_err(|e| anyhow!(e))? as u32,
         budget_bits: a.get_usize("budget").map_err(|e| anyhow!(e))?,
         adaptive,
+        read_timeout_s: a.get_f64("read-timeout-s").map_err(|e| anyhow!(e))?,
+        loss_recovery: a.get_flag("loss-recovery"),
         seed: a.get_u64("seed").map_err(|e| anyhow!(e))?,
         ..Default::default()
     };

@@ -32,6 +32,12 @@
 //!   whether `new_token` carries a residual resample.  The edge uses
 //!   the node index to branch its KV/context rollback to the surviving
 //!   node instead of the epoch root.  v3 peers skip it.
+//! * `Nack` (tag 5, 24 bits) — protocol-v5 loss recovery: the cloud
+//!   detected a sequence gap on the uplink (it expected `seq` but a
+//!   later draft arrived first) and requests a retransmit of the
+//!   missing draft.  The out-of-order frame is dropped, not buffered,
+//!   so a retransmitting edge replays everything from `seq` onward
+//!   (go-back-N).  Pre-v5 peers skip it like any unknown TLV.
 //!
 //! Extension bits ride the downlink ledger like every other wire bit, so
 //! `downlink_bits` stays exact.
@@ -67,12 +73,16 @@ pub const EXT_TAG_BUDGET_GRANT: u8 = 2;
 pub const EXT_TAG_ACK: u8 = 3;
 /// Tree acknowledgement for token-tree sessions (protocol v4).
 pub const EXT_TAG_TREE_ACK: u8 = 4;
+/// Retransmit request for lossy channels (protocol v5).
+pub const EXT_TAG_NACK: u8 = 5;
 const GRANT_WIDTH: usize = 24;
 /// Ack layout: | seq:16 | epoch:8 | discard:1 | (low to high bits).
 const ACK_WIDTH: usize = 25;
 /// TreeAck layout: | seq:16 | epoch:8 | discard:1 | resampled:1 |
 /// node:8 | depth:8 | (low to high bits).
 const TREE_ACK_WIDTH: usize = 42;
+/// Nack layout: | seq:16 | epoch:8 | (low to high bits).
+const NACK_WIDTH: usize = 24;
 /// Largest representable budget grant, bits per round.
 pub const MAX_GRANT_BITS: u32 = (1 << GRANT_WIDTH) - 1;
 
@@ -111,6 +121,17 @@ pub struct TreeAck {
     pub depth: u8,
 }
 
+/// Retransmit request riding a feedback frame (protocol v5 loss
+/// recovery): the cloud saw a sequence gap on the uplink and asks the
+/// edge to replay its unacknowledged drafts from `seq` onward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Nack {
+    /// first missing sequence number (go-back-N replay point)
+    pub seq: u16,
+    /// speculation epoch the cloud currently expects
+    pub epoch: u8,
+}
+
 /// One TLV extension on a v2 feedback frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Ext {
@@ -122,6 +143,8 @@ pub enum Ext {
     Ack(SeqAck),
     /// Tree ack for token-tree sessions (protocol v4).
     TreeAck(TreeAck),
+    /// Retransmit request for lossy channels (protocol v5).
+    Nack(Nack),
     /// Well-formed extension with an unrecognized tag: skipped by
     /// consumers, preserved bit-exactly on re-encode.
     Unknown { tag: u8, width: u8, value: u64 },
@@ -152,6 +175,10 @@ impl Ext {
                     | ((a.depth as u64) << 34);
                 Ok((EXT_TAG_TREE_ACK, TREE_ACK_WIDTH as u8, value))
             }
+            Ext::Nack(n) => {
+                let value = n.seq as u64 | ((n.epoch as u64) << 16);
+                Ok((EXT_TAG_NACK, NACK_WIDTH as u8, value))
+            }
             Ext::Unknown { tag, width, value } => {
                 if tag as usize >= 1 << EXT_TAG_BITS {
                     return Err(format!("extension tag {tag} exceeds {EXT_TAG_BITS} bits"));
@@ -174,6 +201,7 @@ impl Ext {
             Ext::BudgetGrant(_) => GRANT_WIDTH,
             Ext::Ack(_) => ACK_WIDTH,
             Ext::TreeAck(_) => TREE_ACK_WIDTH,
+            Ext::Nack(_) => NACK_WIDTH,
             Ext::Unknown { width, .. } => width as usize,
         };
         EXT_TAG_BITS + EXT_WIDTH_BITS + width
@@ -230,6 +258,13 @@ fn find_tree_ack(exts: &[Ext]) -> Option<TreeAck> {
     })
 }
 
+fn find_nack(exts: &[Ext]) -> Option<Nack> {
+    exts.iter().find_map(|e| match e {
+        Ext::Nack(n) => Some(*n),
+        _ => None,
+    })
+}
+
 impl FeedbackView<'_> {
     /// Owned copy, for the (cold) paths that must outlive the arena.
     pub fn to_feedback(&self) -> FeedbackV2 {
@@ -268,6 +303,11 @@ impl FeedbackView<'_> {
     /// The tree ack, if one rode this frame (token-tree sessions).
     pub fn tree_ack(&self) -> Option<TreeAck> {
         find_tree_ack(self.exts)
+    }
+
+    /// The retransmit request, if one rode this frame (v5 recovery).
+    pub fn nack(&self) -> Option<Nack> {
+        find_nack(self.exts)
     }
 
     /// The acknowledged sequence number and discard bit, either flavor.
@@ -316,6 +356,24 @@ impl FeedbackV2 {
     /// The tree ack, if one rode this frame (token-tree sessions).
     pub fn tree_ack(&self) -> Option<TreeAck> {
         find_tree_ack(&self.exts)
+    }
+
+    /// The retransmit request, if one rode this frame (v5 recovery).
+    pub fn nack(&self) -> Option<Nack> {
+        find_nack(&self.exts)
+    }
+
+    /// A pure retransmit request: nothing accepted, nothing resampled —
+    /// the cloud saw a gap at `seq` and the out-of-order frame was
+    /// dropped.  `batch_id` echoes the dropped frame's batch so the
+    /// edge can correlate in traces.
+    pub fn nack_frame(batch_id: u32, seq: u16, epoch: u8) -> FeedbackV2 {
+        FeedbackV2 {
+            batch_id,
+            accepted: 0,
+            new_token: 0,
+            exts: vec![Ext::Nack(Nack { seq, epoch })],
+        }
     }
 
     /// The sequence number this frame acknowledges, regardless of ack
@@ -425,6 +483,11 @@ impl FeedbackV2 {
                 EXT_TAG_TREE_ACK => {
                     return Err(format!("tree-ack extension must be {TREE_ACK_WIDTH} bits"))
                 }
+                EXT_TAG_NACK if width == NACK_WIDTH => Ext::Nack(Nack {
+                    seq: (value & 0xFFFF) as u16,
+                    epoch: ((value >> 16) & 0xFF) as u8,
+                }),
+                EXT_TAG_NACK => return Err(format!("nack extension must be {NACK_WIDTH} bits")),
                 t => Ext::Unknown { tag: t, width: width as u8, value },
             });
         }
@@ -529,6 +592,46 @@ mod tests {
         // a linear discard still answers acked_seq for the tree path
         let d = FeedbackV2::discard(1, 44, 2);
         assert_eq!(d.acked_seq(), Some((44, true)));
+    }
+
+    #[test]
+    fn nack_extension_roundtrips_at_every_corner() {
+        for (seq, epoch) in [(0u16, 0u8), (u16::MAX, u8::MAX), (500, 3), (1, 255)] {
+            let fb = FeedbackV2::nack_frame(13, seq, epoch);
+            let back = roundtrip(&fb);
+            assert_eq!(back, fb);
+            assert_eq!(back.nack(), Some(Nack { seq, epoch }));
+            assert_eq!(back.ack(), None, "a nack is not an ack");
+            assert_eq!(back.acked_seq(), None);
+            assert_eq!(fb.body_bits(), 68 + (4 + 6 + 24));
+        }
+        // a nack can ride a regular verdict too (gap noticed while a
+        // valid earlier frame is being answered)
+        let fb = FeedbackV2 {
+            batch_id: 4,
+            accepted: 2,
+            new_token: 17,
+            exts: vec![
+                Ext::Ack(SeqAck { seq: 6, epoch: 0, discard: false }),
+                Ext::Nack(Nack { seq: 7, epoch: 0 }),
+            ],
+        };
+        let back = roundtrip(&fb);
+        assert_eq!(back.ack().map(|a| a.seq), Some(6));
+        assert_eq!(back.nack().map(|n| n.seq), Some(7));
+    }
+
+    #[test]
+    fn nack_wrong_width_rejected() {
+        let mut w = BitWriter::new();
+        w.write_bits_u64(0, 64); // core
+        w.write_bits_u64(1, 4); // one ext
+        w.write_bits_u64(EXT_TAG_NACK as u64, 4);
+        w.write_bits_u64(25, 6); // ack width under the nack tag
+        w.write_bits_u64(0, 25);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(FeedbackV2::decode_from(&mut r).is_err());
     }
 
     #[test]

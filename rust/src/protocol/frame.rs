@@ -5,8 +5,8 @@
 //!
 //! ```text
 //!   | ver:4 | tag:4 | body... |
-//!   Hello    (0): | min_ver:4 | max_ver:4 | vocab:32 | ell:32 | scheme:2 | fixed_k:16 |
-//!   HelloAck (1): | ver:4 | ok:1 | vocab:32 | ell:32 | scheme:2 | fixed_k:16 |
+//!   Hello    (0): | min_ver:4 | max_ver:4 | vocab:32 | ell:32 | scheme:2 | fixed_k:16 | resume_token:32 |
+//!   HelloAck (1): | ver:4 | ok:1 | vocab:32 | ell:32 | scheme:2 | fixed_k:16 | resume_ok:1 | resume_token:32 |
 //!   Draft    (2): the v1 draft-frame layout, bit-for-bit (see codec::frame)
 //!   Feedback (3): the v2 feedback layout (see protocol::feedback)
 //!   Control  (4): | op:4 | op-specific |   (Prompt: | len:16 | token:16 * len |)
@@ -49,7 +49,7 @@ use crate::sqs::bits::SchemeBits;
 use crate::util::bitio::{BitReader, BitWriter};
 
 use super::feedback::{Ext, FeedbackV2, FeedbackView};
-use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2, PROTOCOL_V3, PROTOCOL_V4};
+use super::{MAX_SUPPORTED, MIN_SUPPORTED, PROTOCOL_V2, PROTOCOL_V3, PROTOCOL_V4, PROTOCOL_V5};
 
 /// Self-describing per-frame header: 4-bit version + 4-bit type tag.
 pub const FRAME_HEADER_BITS: usize = 8;
@@ -79,9 +79,13 @@ const OP_PROMPT: u64 = 0;
 const OP_BYE: u64 = 1;
 
 /// Exact wire size of a Hello frame, bits.
-pub const HELLO_BITS: usize = FRAME_HEADER_BITS + 4 + 4 + 32 + 32 + 2 + 16;
+pub const HELLO_BITS: usize = FRAME_HEADER_BITS + 4 + 4 + 32 + 32 + 2 + 16 + 32;
 /// Exact wire size of a HelloAck frame, bits.
-pub const HELLO_ACK_BITS: usize = FRAME_HEADER_BITS + 4 + 1 + 32 + 32 + 2 + 16;
+pub const HELLO_ACK_BITS: usize = FRAME_HEADER_BITS + 4 + 1 + 32 + 32 + 2 + 16 + 1 + 32;
+
+/// `resume_token` value meaning "no token" (fresh session, or a server
+/// that does not hand out resume state).
+pub const NO_RESUME_TOKEN: u32 = 0;
 
 /// Handshake proposal (edge -> cloud): the version range the sender
 /// speaks plus the codec parameters it wants for the session.
@@ -93,6 +97,13 @@ pub struct Hello {
     pub ell: u32,
     pub scheme: SchemeBits,
     pub fixed_k: u16,
+    /// Session-resume token from a previous [`HelloAck`]
+    /// ([`NO_RESUME_TOKEN`] = fresh session).  A reconnecting edge
+    /// presents it to ask the server to restore the session's committed
+    /// context and epoch instead of starting over (protocol v5 churn
+    /// recovery; servers without a matching entry answer
+    /// `resume_ok: false` and the edge restarts cleanly).
+    pub resume_token: u32,
 }
 
 /// Handshake response (cloud -> edge): the chosen version and the
@@ -105,6 +116,14 @@ pub struct HelloAck {
     pub ell: u32,
     pub scheme: SchemeBits,
     pub fixed_k: u16,
+    /// True iff the server restored the session named by the Hello's
+    /// `resume_token` (context + epoch). False on a fresh session, a
+    /// token miss, or a context-hash mismatch — the edge must then
+    /// start from scratch, never from a half-restored context.
+    pub resume_ok: bool,
+    /// Token the edge should present to resume *this* session after a
+    /// disconnect ([`NO_RESUME_TOKEN`]: server keeps no resume state).
+    pub resume_token: u32,
 }
 
 /// Out-of-band session control.
@@ -444,13 +463,17 @@ fn scheme_from(code: u64) -> Result<SchemeBits, String> {
 pub struct WireCodec {
     pub version: u8,
     payload: Option<FrameCodec>,
+    /// Resume token the next [`WireCodec::hello`] presents
+    /// ([`NO_RESUME_TOKEN`] on a fresh connection).  An edge that held a
+    /// token from a previous `HelloAck` sets it before reconnecting.
+    resume_token: u32,
 }
 
 impl WireCodec {
     /// A codec that can speak Hello/HelloAck/Control only — what each
     /// side holds before the handshake completes.
     pub fn handshake_only() -> WireCodec {
-        WireCodec { version: PROTOCOL_V2, payload: None }
+        WireCodec { version: PROTOCOL_V2, payload: None, resume_token: NO_RESUME_TOKEN }
     }
 
     /// A codec with known payload parameters (both ends of an in-process
@@ -459,7 +482,14 @@ impl WireCodec {
         WireCodec {
             version: PROTOCOL_V2,
             payload: Some(FrameCodec::new(vocab, ell, scheme, fixed_k)),
+            resume_token: NO_RESUME_TOKEN,
         }
+    }
+
+    /// Set the session-resume token the next [`WireCodec::hello`] will
+    /// present (a token previously handed out in a `HelloAck`).
+    pub fn set_resume_token(&mut self, token: u32) {
+        self.resume_token = token;
     }
 
     /// Build the session codec from a successful handshake.  The codec
@@ -499,6 +529,12 @@ impl WireCodec {
         self.version >= PROTOCOL_V4
     }
 
+    /// Does this codec speak protocol-v5 loss recovery (`Ext::Nack`,
+    /// duplicate-draft tolerance, session resume)?
+    pub fn loss_recovery(&self) -> bool {
+        self.version >= PROTOCOL_V5
+    }
+
     pub fn has_payload_codec(&self) -> bool {
         self.payload.is_some()
     }
@@ -522,6 +558,7 @@ impl WireCodec {
             ell: p.ell,
             scheme: p.scheme,
             fixed_k: p.fixed_k as u16,
+            resume_token: self.resume_token,
         })
     }
 
@@ -577,6 +614,7 @@ impl WireCodec {
                 w.write_bits_u64(h.ell as u64, 32);
                 w.write_bits_u64(scheme_code(h.scheme), 2);
                 w.write_bits_u64(h.fixed_k as u64, 16);
+                w.write_bits_u64(h.resume_token as u64, 32);
             }
             Frame::HelloAck(a) => {
                 w.write_bits_u64(TAG_HELLO_ACK, TAG_BITS);
@@ -586,6 +624,8 @@ impl WireCodec {
                 w.write_bits_u64(a.ell as u64, 32);
                 w.write_bits_u64(scheme_code(a.scheme), 2);
                 w.write_bits_u64(a.fixed_k as u64, 16);
+                w.write_bits_u64(a.resume_ok as u64, 1);
+                w.write_bits_u64(a.resume_token as u64, 32);
             }
             Frame::Draft(d) => {
                 w.write_bits_u64(TAG_DRAFT, TAG_BITS);
@@ -707,6 +747,7 @@ impl WireCodec {
                 let ell = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
                 let scheme = scheme_from(r.read_bits_u64(2).map_err(|e| e.to_string())?)?;
                 let fixed_k = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
+                let resume_token = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
                 Ok(FrameView::Hello(Hello {
                     min_version,
                     max_version,
@@ -714,6 +755,7 @@ impl WireCodec {
                     ell,
                     scheme,
                     fixed_k,
+                    resume_token,
                 }))
             }
             TAG_HELLO_ACK => {
@@ -723,7 +765,18 @@ impl WireCodec {
                 let ell = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
                 let scheme = scheme_from(r.read_bits_u64(2).map_err(|e| e.to_string())?)?;
                 let fixed_k = r.read_bits_u64(16).map_err(|e| e.to_string())? as u16;
-                Ok(FrameView::HelloAck(HelloAck { version, ok, vocab, ell, scheme, fixed_k }))
+                let resume_ok = r.read_bits_u64(1).map_err(|e| e.to_string())? == 1;
+                let resume_token = r.read_bits_u64(32).map_err(|e| e.to_string())? as u32;
+                Ok(FrameView::HelloAck(HelloAck {
+                    version,
+                    ok,
+                    vocab,
+                    ell,
+                    scheme,
+                    fixed_k,
+                    resume_ok,
+                    resume_token,
+                }))
             }
             TAG_DRAFT => {
                 let p = self
@@ -832,6 +885,7 @@ mod tests {
             ell: 100,
             scheme: SchemeBits::Adaptive,
             fixed_k: 0,
+            resume_token: 0xDEAD_BEEF,
         };
         let (bytes, bits) = wc.encode(&Frame::Hello(hello)).unwrap();
         assert_eq!(bits, HELLO_BITS);
@@ -844,10 +898,23 @@ mod tests {
             ell: 100,
             scheme: SchemeBits::Adaptive,
             fixed_k: 0,
+            resume_ok: true,
+            resume_token: u32::MAX,
         };
         let (bytes, bits) = wc.encode(&Frame::HelloAck(ack)).unwrap();
         assert_eq!(bits, HELLO_ACK_BITS);
         assert_eq!(wc.decode(&bytes).unwrap(), Frame::HelloAck(ack));
+    }
+
+    #[test]
+    fn resume_token_rides_the_hello() {
+        // fresh codecs advertise no token; a stored token from a prior
+        // HelloAck flows through hello() for session resume
+        let wc = codec();
+        assert_eq!(wc.hello().unwrap().resume_token, NO_RESUME_TOKEN);
+        let mut wc = codec();
+        wc.set_resume_token(0x5E55_1014);
+        assert_eq!(wc.hello().unwrap().resume_token, 0x5E55_1014);
     }
 
     #[test]
@@ -1089,6 +1156,7 @@ mod tests {
             ell: 100,
             scheme: SchemeBits::FixedK,
             fixed_k: 8,
+            resume_token: 7,
         };
         let (mut bytes, _) = wc.encode(&Frame::Hello(hello)).unwrap();
         bytes[0] = (9 << 4) | (bytes[0] & 0x0F); // header stamped v9

@@ -29,13 +29,13 @@ pub mod frame;
 pub mod transport;
 
 pub use feedback::{
-    fair_share_grant, Ext, FeedbackV2, FeedbackView, SeqAck, TreeAck, MAX_GRANT_BITS,
+    fair_share_grant, Ext, FeedbackV2, FeedbackView, Nack, SeqAck, TreeAck, MAX_GRANT_BITS,
 };
 pub use frame::{
     tree_children, tree_first_child, tree_path_into, tree_trunk_tokens, tree_validate,
     Control, Frame, FrameView, Hello, HelloAck, SeqDraft, TreeDraft, TreeFrameRef,
     TreeView, WireArena, WireCodec, FRAME_HEADER_BITS, HELLO_ACK_BITS, HELLO_BITS,
-    NO_PARENT, SEQ_PREFIX_BITS, TREE_PREFIX_BITS,
+    NO_PARENT, NO_RESUME_TOKEN, SEQ_PREFIX_BITS, TREE_PREFIX_BITS,
 };
 pub use transport::{
     Delivery, Direction, LinkTransport, SharedPort, StreamTransport, Transport,
@@ -55,9 +55,18 @@ pub const PROTOCOL_V3: u8 = 3;
 /// A v3 peer negotiates the session down and the edge falls back to
 /// linear `DraftSeq` pipelining.
 pub const PROTOCOL_V4: u8 = 4;
+/// v4 plus lossy-channel resilience: go-back-N retransmit requests
+/// (`Ext::Nack`), duplicate-draft tolerance (the cloud re-sends cached
+/// feedback instead of double-verifying), and session resume via the
+/// `resume_token` handshake fields.  The handshake *layout* (resume
+/// fields included) is version-agnostic — older peers simply send
+/// token 0 and ignore `resume_ok` — so v5 only gates the recovery
+/// *behavior*: a pre-v5 peer never emits a Nack and treats loss as a
+/// fatal stall, exactly as before.
+pub const PROTOCOL_V5: u8 = 5;
 /// Version range this build speaks.
 pub const MIN_SUPPORTED: u8 = PROTOCOL_V2;
-pub const MAX_SUPPORTED: u8 = PROTOCOL_V4;
+pub const MAX_SUPPORTED: u8 = PROTOCOL_V5;
 
 /// Protocol-level cap on the lattice resolution a peer may propose.
 /// The binomial tables behind the codec are dense in ell, so an
@@ -95,6 +104,8 @@ pub fn negotiate(h: &Hello) -> Result<HelloAck, String> {
     {
         return Err(format!("fixed K={} out of 1..=V={}", h.fixed_k, h.vocab));
     }
+    // Resume acceptance is a server-tier decision (the serve layer owns
+    // the resume table); parameter negotiation itself is resume-neutral.
     Ok(HelloAck {
         version: h.max_version.min(MAX_SUPPORTED),
         ok: true,
@@ -102,6 +113,8 @@ pub fn negotiate(h: &Hello) -> Result<HelloAck, String> {
         ell: h.ell,
         scheme: h.scheme,
         fixed_k: h.fixed_k,
+        resume_ok: false,
+        resume_token: frame::NO_RESUME_TOKEN,
     })
 }
 
@@ -118,6 +131,7 @@ mod tests {
             ell: 100,
             scheme: SchemeBits::FixedK,
             fixed_k: 8,
+            resume_token: NO_RESUME_TOKEN,
         }
     }
 
@@ -160,10 +174,18 @@ mod tests {
         let wc = WireCodec::negotiated(&ack).unwrap();
         assert!(wc.pipelining());
         assert!(!wc.trees(), "v3 sessions must not speak draft trees");
-        // a full v4 peer unlocks trees
-        let ack4 = negotiate(&hello()).unwrap();
+        // a v4-only peer unlocks trees but not loss recovery
+        let h4 = Hello { min_version: PROTOCOL_V2, max_version: PROTOCOL_V4, ..hello() };
+        let ack4 = negotiate(&h4).unwrap();
         assert_eq!(ack4.version, PROTOCOL_V4);
         assert!(WireCodec::negotiated(&ack4).unwrap().trees());
+        // a full-range peer lands on v5 (trees + loss recovery)
+        let ack5 = negotiate(&hello()).unwrap();
+        assert_eq!(ack5.version, PROTOCOL_V5);
+        let wc5 = WireCodec::negotiated(&ack5).unwrap();
+        assert!(wc5.trees());
+        assert!(wc5.loss_recovery());
+        assert!(!WireCodec::negotiated(&ack4).unwrap().loss_recovery());
     }
 
     #[test]

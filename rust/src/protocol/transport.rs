@@ -81,6 +81,16 @@ pub trait Transport {
 
     /// (frames, bits) shipped so far in `dir`.
     fn ledger(&self, dir: Direction) -> (u64, u64);
+
+    /// Did the most recent `send_frame` drop on the channel?  Simulated
+    /// transports with a loss model answer true when the loss chain ate
+    /// the frame: its airtime and bits were still charged (it *was*
+    /// transmitted) but it never enters the in-flight pipe, so a recv
+    /// would fail and the sender must retransmit or resync.  Reliable
+    /// transports (TCP) always answer false.
+    fn last_send_lost(&self) -> bool {
+        false
+    }
 }
 
 /// Bounded FIFO pipe pair shared by the simulated transports:
@@ -183,11 +193,12 @@ impl InflightPipes {
 pub struct LinkTransport {
     pub link: SimulatedLink,
     pipes: InflightPipes,
+    last_lost: bool,
 }
 
 impl LinkTransport {
     pub fn new(link: SimulatedLink) -> LinkTransport {
-        LinkTransport { link, pipes: InflightPipes::default() }
+        LinkTransport { link, pipes: InflightPipes::default(), last_lost: false }
     }
 
     /// Widen the in-flight window to `frames` per direction (pipelined
@@ -220,11 +231,24 @@ impl Transport for LinkTransport {
     ) -> Result<Delivery> {
         self.pipes.ensure_clear(dir)?;
         let (bytes, bits) = self.pipes.encode(codec, frame)?;
+        // roll the per-direction loss chain (a None model draws no
+        // randomness, so lossless runs stay bit-identical); the frame is
+        // transmitted either way — airtime and ledger bits are charged —
+        // but a lost frame never reaches the far end's pipe
+        let lost = match dir {
+            Direction::Up => self.link.loss_up.roll(),
+            Direction::Down => self.link.loss_down.roll(),
+        };
         let t = match dir {
             Direction::Up => self.link.send_uplink(bits),
             Direction::Down => self.link.send_downlink(bits),
         };
-        self.pipes.store(dir, bytes);
+        self.last_lost = lost;
+        if lost {
+            self.pipes.spare.push(bytes);
+        } else {
+            self.pipes.store(dir, bytes);
+        }
         Ok(Delivery { bits, submitted_at: now, queue_wait_s: 0.0, delivered_at: now + t })
     }
 
@@ -237,6 +261,10 @@ impl Transport for LinkTransport {
             Direction::Up => (self.link.up.frames, self.link.up.bits),
             Direction::Down => (self.link.down.frames, self.link.down.bits),
         }
+    }
+
+    fn last_send_lost(&self) -> bool {
+        self.last_lost
     }
 }
 
@@ -254,6 +282,7 @@ pub struct SharedPort {
     pipes: InflightPipes,
     up: (u64, u64),
     down: (u64, u64),
+    last_lost: bool,
 }
 
 impl SharedPort {
@@ -273,6 +302,7 @@ impl SharedPort {
             pipes: InflightPipes::default(),
             up: (0, 0),
             down: (0, 0),
+            last_lost: false,
         }
     }
 
@@ -303,9 +333,16 @@ impl Transport for SharedPort {
     ) -> Result<Delivery> {
         self.pipes.ensure_clear(dir)?;
         let (bytes, bits) = self.pipes.encode(codec, frame)?;
+        // the shared channel owns the loss chain: one roll per reserved
+        // uplink frame, in deterministic event order across devices.
+        // Dedicated downlinks are modeled lossless at this tier (the
+        // fleet's recovery story is uplink resync, not feedback loss).
+        let mut lost = false;
         let delivery = match dir {
             Direction::Up => {
-                let (start, delivered) = self.channel.borrow_mut().reserve(now, bits);
+                let mut ch = self.channel.borrow_mut();
+                lost = ch.loss.roll();
+                let (start, delivered) = ch.reserve(now, bits);
                 self.up.0 += 1;
                 self.up.1 += bits as u64;
                 Delivery {
@@ -324,7 +361,12 @@ impl Transport for SharedPort {
                 Delivery { bits, submitted_at: now, queue_wait_s: 0.0, delivered_at: now + t }
             }
         };
-        self.pipes.store(dir, bytes);
+        self.last_lost = lost;
+        if lost {
+            self.pipes.spare.push(bytes);
+        } else {
+            self.pipes.store(dir, bytes);
+        }
         Ok(delivery)
     }
 
@@ -337,6 +379,10 @@ impl Transport for SharedPort {
             Direction::Up => self.up,
             Direction::Down => self.down,
         }
+    }
+
+    fn last_send_lost(&self) -> bool {
+        self.last_lost
     }
 }
 
@@ -386,15 +432,30 @@ impl<S: Read + Write> StreamTransport<S> {
         }
     }
 
+    /// Map a blocking-read failure to a clean, recognizable error.  A
+    /// stream with a read deadline (e.g. `TcpStream::set_read_timeout`)
+    /// surfaces `WouldBlock`/`TimedOut` when the peer goes silent; before
+    /// this mapping an edge whose server died mid-session blocked in
+    /// `read_exact` forever.  Callers match on the message to distinguish
+    /// "peer silent" (reconnect/resume) from a framing error (fatal).
+    fn clean_read(e: std::io::Error) -> anyhow::Error {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                anyhow!("stream read timed out (peer silent past the read deadline)")
+            }
+            _ => e.into(),
+        }
+    }
+
     /// Read one length-prefixed frame into the reused buffer; returns
     /// the payload byte count.
     fn read_frame_bytes(&mut self, dir: Direction) -> Result<usize> {
         let mut len = [0u8; STREAM_LEN_PREFIX_BYTES];
-        self.stream.read_exact(&mut len)?;
+        self.stream.read_exact(&mut len).map_err(Self::clean_read)?;
         let n = u16::from_be_bytes(len) as usize;
         self.recv_buf.clear();
         self.recv_buf.resize(n, 0);
-        self.stream.read_exact(&mut self.recv_buf)?;
+        self.stream.read_exact(&mut self.recv_buf).map_err(Self::clean_read)?;
         self.tally(dir, (STREAM_LEN_PREFIX_BYTES + n) * 8);
         Ok(n)
     }
@@ -556,6 +617,47 @@ mod tests {
                    channel.borrow().ledger.bits);
         assert_eq!(a.recv_frame(Direction::Up, &mut wc).unwrap(), f);
         assert_eq!(b.recv_frame(Direction::Up, &mut wc).unwrap(), f);
+    }
+
+    #[test]
+    fn lost_frames_charge_airtime_but_never_arrive() {
+        use crate::channel::LossModel;
+        // p=1: every uplink frame drops; the ledger still charges the
+        // transmission (the bits were sent) but the pipe stays empty
+        let link = SimulatedLink::new(LinkConfig::default(), 5)
+            .with_uplink_loss(LossModel::Iid { p: 1.0 });
+        let mut tr = LinkTransport::new(link);
+        let mut wc = wire();
+        let f = Frame::Control(Control::Bye);
+        let d = tr.send_frame(Direction::Up, &f, &mut wc, 0.0).unwrap();
+        assert!(tr.last_send_lost());
+        assert_eq!(tr.ledger(Direction::Up), (1, d.bits as u64), "airtime charged");
+        assert!(tr.recv_frame(Direction::Up, &mut wc).is_err(), "frame never arrived");
+        // losing the frame frees the window: a retransmit is admitted
+        tr.send_frame(Direction::Up, &f, &mut wc, 1.0).unwrap();
+        // downlink chain untouched: lossless that way
+        tr.send_frame(Direction::Down, &f, &mut wc, 1.0).unwrap();
+        assert!(!tr.last_send_lost());
+        assert_eq!(tr.recv_frame(Direction::Down, &mut wc).unwrap(), f);
+    }
+
+    #[test]
+    fn shared_port_loss_rides_the_channel_chain() {
+        use crate::channel::LossModel;
+        let channel = Rc::new(RefCell::new(
+            SharedUplink::new(1000.0, 0.0, 0.0, 0).with_loss(LossModel::Iid { p: 1.0 }),
+        ));
+        let mut port = SharedPort::new(channel.clone(), 1e6, 0.0, 0.0, 1);
+        let mut wc = wire();
+        let f = Frame::Control(Control::Bye);
+        port.send_frame(Direction::Up, &f, &mut wc, 0.0).unwrap();
+        assert!(port.last_send_lost());
+        assert!(port.recv_frame(Direction::Up, &mut wc).is_err());
+        assert_eq!(channel.borrow().loss.drops, 1);
+        // the dedicated downlink is lossless at this tier
+        port.send_frame(Direction::Down, &f, &mut wc, 0.0).unwrap();
+        assert!(!port.last_send_lost());
+        assert_eq!(port.recv_frame(Direction::Down, &mut wc).unwrap(), f);
     }
 
     #[test]

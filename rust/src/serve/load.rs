@@ -43,6 +43,13 @@ pub struct SoakConfig {
     pub ell: u32,
     pub budget_bits: usize,
     pub adaptive: AdaptiveMode,
+    /// per-read deadline on every client stream: a server that dies
+    /// mid-soak fails its sessions with a clean timeout error instead
+    /// of hanging the generator forever (<= 0 restores blocking reads)
+    pub read_timeout_s: f64,
+    /// advertise protocol v5 (resume tokens + nack handling) from every
+    /// client — exercises the recovery handshake fields under load
+    pub loss_recovery: bool,
     pub seed: u64,
 }
 
@@ -59,6 +66,8 @@ impl Default for SoakConfig {
             ell: 100,
             budget_bits: 5000,
             adaptive: AdaptiveMode::Off,
+            read_timeout_s: 30.0,
+            loss_recovery: false,
             seed: 0,
         }
     }
@@ -158,6 +167,9 @@ fn run_one(
     }
     let stream = stream.ok_or_else(|| anyhow::anyhow!("connect retries exhausted"))?;
     stream.set_nodelay(true).ok();
+    if cfg.read_timeout_s > 0.0 {
+        stream.set_read_timeout(Some(Duration::from_secs_f64(cfg.read_timeout_s)))?;
+    }
     let mut transport = StreamTransport::new(stream);
     let draft = SyntheticDraft::new(world.clone(), 100_000);
     let edge_cfg = WireEdgeConfig {
@@ -167,6 +179,7 @@ fn run_one(
         adaptive: cfg.adaptive,
         pipeline_depth: cfg.pipeline_depth,
         tree_branching: cfg.tree_branching,
+        loss_recovery: cfg.loss_recovery,
         seed: cfg.seed ^ sid.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x50AC,
         ..Default::default()
     };

@@ -9,7 +9,7 @@
 //!   ids and pins each connection to a shard (`id % shards`),
 //! - **shard workers**, each owning a session table of nonblocking
 //!   sockets: they reassemble length-prefixed frames, run the
-//!   per-session protocol state machine ([`session::Session`]), and
+//!   per-session protocol state machine (`session::Session`), and
 //!   feed verify jobs into the shared queue,
 //! - **verify workers** draining one [`VerifyQueue`] of jobs from *all*
 //!   live sessions: a free slot coalesces up to `verify_batch` windows
@@ -33,7 +33,7 @@ mod session;
 pub use load::{run_soak, SoakConfig, SoakReport};
 pub use queue::{QueueConfig, QueueMetrics, VerifyQueue};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -48,7 +48,9 @@ use crate::coordinator::{linear_bounds, log_bounds, Gauge, Metrics};
 use crate::model::synthetic::{SyntheticTarget, SyntheticWorld};
 use crate::protocol::{negotiate, Ext, Hello, HelloAck};
 
-use session::{run_verify, Session, SessionCtx, SessionEvent, VerifyCtx, VerifyDone, VerifyJob};
+use session::{
+    run_verify, ResumeState, Session, SessionCtx, SessionEvent, VerifyCtx, VerifyDone, VerifyJob,
+};
 
 /// Aggregate wire-endpoint counters, shared across shard threads.
 /// This is the wall-clock domain: the counters are exact, but they are
@@ -70,6 +72,10 @@ pub struct WireStats {
     /// `RingTracer::dropped()` in via [`WireStats::note_trace_dropped`]);
     /// nonzero means recorded windows in the log are truncated
     pub trace_dropped: AtomicU64,
+    /// uplink sequence gaps answered with `Ext::Nack` (v5 recovery)
+    pub nacks: AtomicU64,
+    /// churned sessions restored from the resume table
+    pub resumes: AtomicU64,
 }
 
 impl WireStats {
@@ -77,7 +83,7 @@ impl WireStats {
     pub fn snapshot(&self) -> String {
         format!(
             "sessions={} frames={} verifies={} discards={} up_bits={} down_bits={} \
-             trace_dropped={}",
+             trace_dropped={} nacks={} resumes={}",
             self.sessions.load(Ordering::Relaxed),
             self.frames.load(Ordering::Relaxed),
             self.verify_calls.load(Ordering::Relaxed),
@@ -85,6 +91,8 @@ impl WireStats {
             self.uplink_bits.load(Ordering::Relaxed),
             self.downlink_bits.load(Ordering::Relaxed),
             self.trace_dropped.load(Ordering::Relaxed),
+            self.nacks.load(Ordering::Relaxed),
+            self.resumes.load(Ordering::Relaxed),
         )
     }
 
@@ -156,6 +164,10 @@ pub struct WireServerConfig {
     pub max_backlog: usize,
     /// live-session cap: Hellos beyond it are nacked (0 = unbounded)
     pub max_sessions: usize,
+    /// resume-table capacity: how many disconnected sessions the server
+    /// keeps restorable for v5 churn recovery (0 disables resume;
+    /// eviction is oldest-first)
+    pub resume_cap: usize,
 }
 
 impl Default for WireServerConfig {
@@ -182,7 +194,46 @@ impl Default for WireServerConfig {
             verify_token_s: 0.0,
             max_backlog: 0,
             max_sessions: 0,
+            resume_cap: 64,
         }
+    }
+}
+
+/// Bounded store of resumable sessions, keyed by the token their
+/// `HelloAck` handed out.  Shared across shards: a reconnecting client
+/// gets a fresh connection id and may pin to a different shard than the
+/// one that held its state.
+struct ResumeTable {
+    entries: HashMap<u32, ResumeState>,
+    /// insertion order for oldest-first eviction (may hold tokens whose
+    /// entry a resume already consumed; `insert` skips those)
+    order: VecDeque<u32>,
+    cap: usize,
+}
+
+impl ResumeTable {
+    fn new(cap: usize) -> ResumeTable {
+        ResumeTable { entries: HashMap::new(), order: VecDeque::new(), cap }
+    }
+
+    fn insert(&mut self, state: ResumeState) {
+        if self.cap == 0 {
+            return;
+        }
+        while self.entries.len() >= self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.entries.remove(&old);
+                }
+                None => break,
+            }
+        }
+        self.order.push_back(state.token);
+        self.entries.insert(state.token, state);
+    }
+
+    fn take(&mut self, token: u32) -> Option<ResumeState> {
+        self.entries.remove(&token)
     }
 }
 
@@ -197,6 +248,9 @@ struct Shared {
     temp: f32,
     /// sleep the modeled service time (verify_base_s/verify_token_s set)
     pace: bool,
+    /// v5 churn recovery: sessions parked by a disconnect, restorable
+    /// by the token their HelloAck handed out
+    resume: Mutex<ResumeTable>,
 }
 
 impl Shared {
@@ -279,6 +333,7 @@ impl WireServer {
             t0: Instant::now(),
             temp: cfg.temp,
             pace: cfg.verify_base_s > 0.0 || cfg.verify_token_s > 0.0,
+            resume: Mutex::new(ResumeTable::new(cfg.resume_cap)),
         });
 
         let workers: Vec<_> = (0..cfg.verify_workers.max(1))
@@ -436,6 +491,17 @@ impl SessionCtx for ShardCtx<'_> {
         Ok(VerifyCtx { cloud, prev: *prompt.last().expect("prompt checked non-empty") })
     }
 
+    fn try_resume(&self, hello: &Hello) -> Option<VerifyCtx> {
+        let state = self.shared.resume.lock().unwrap().take(hello.resume_token)?;
+        // the restored context only makes sense under the parameters it
+        // was built with; anything else is a clean restart (the
+        // mismatched entry is dropped, never half-applied)
+        if state.vocab != hello.vocab || state.ell != hello.ell {
+            return None;
+        }
+        Some(state.vctx)
+    }
+
     fn note_frame(&self) {
         let n = self.stats.frames.fetch_add(1, Ordering::Relaxed) + 1;
         if n % SNAPSHOT_EVERY == 0 {
@@ -449,6 +515,14 @@ impl SessionCtx for ShardCtx<'_> {
 
     fn note_verify(&self) {
         self.stats.verify_calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_nack(&self) {
+        self.stats.nacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_resume(&self) {
+        self.stats.resumes.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -646,7 +720,12 @@ fn shard_loop(
                 conn.finished()
             };
             if finished {
-                let conn = conns.remove(&id).expect("checked");
+                let mut conn = conns.remove(&id).expect("checked");
+                // an abrupt departure (no Bye) parks the session for a
+                // resume-token reconnect; a clean close leaves nothing
+                if let Some(state) = conn.session.take_resume_state() {
+                    shared.resume.lock().unwrap().insert(state);
+                }
                 finish_conn(conn, shared, stats);
             }
         }

@@ -24,8 +24,24 @@ use crate::codec::DraftFrame;
 use crate::model::synthetic::SyntheticTarget;
 use crate::protocol::{
     Control, Ext, FeedbackV2, Frame, Hello, HelloAck, SeqAck, SeqDraft, TreeAck, TreeDraft,
-    WireArena, WireCodec, MAX_SUPPORTED,
+    WireArena, WireCodec, MAX_SUPPORTED, NO_RESUME_TOKEN, PROTOCOL_V5,
 };
+
+/// How many recent per-seq feedback frames a session keeps for
+/// duplicate-draft replay (v5 loss recovery).  An edge retransmits after
+/// a feedback loss, so the answer it missed is always among the most
+/// recent verdicts; the cap only bounds pathological replay storms.
+const FB_CACHE: usize = 32;
+
+/// Server-assigned resume token for a connection: a nonzero mix of the
+/// connection id.  Tokens name resume-table entries; they are not an
+/// authentication secret in this synthetic tier.
+fn resume_token_for(id: u64) -> u32 {
+    match (id as u32).wrapping_mul(0x9E37_79B9) {
+        NO_RESUME_TOKEN => 1,
+        t => t,
+    }
+}
 
 /// The per-session verify state a job carries through the queue.
 pub(crate) struct VerifyCtx {
@@ -160,10 +176,28 @@ pub(crate) trait SessionCtx {
     fn admit_hello(&self, hello: &Hello) -> Result<HelloAck, String>;
     /// build a verify context for an admitted prompt
     fn build_vctx(&self, seed: u64, prompt: &[u16]) -> Result<VerifyCtx, String>;
+    /// consume the resume entry named by a reconnect Hello's token;
+    /// `None` on a miss or a parameter mismatch (the session then
+    /// starts fresh — never from a half-restored context)
+    fn try_resume(&self, hello: &Hello) -> Option<VerifyCtx>;
     /// uplink frame accounting (stats + periodic snapshot)
     fn note_frame(&self);
     fn note_discard(&self);
     fn note_verify(&self);
+    /// a sequence gap was nacked (v5 loss recovery)
+    fn note_nack(&self);
+    /// a churned session was restored from the resume table
+    fn note_resume(&self);
+}
+
+/// What a departing session leaves behind for a future reconnect: the
+/// verified context plus the codec parameters it was negotiated with
+/// (a resuming Hello must present the same ones).
+pub(crate) struct ResumeState {
+    pub token: u32,
+    pub vctx: VerifyCtx,
+    pub vocab: u32,
+    pub ell: u32,
 }
 
 pub(crate) struct Session {
@@ -176,6 +210,16 @@ pub(crate) struct Session {
     backlog: VecDeque<JobFrame>,
     bye: bool,
     seed: u64,
+    /// token we handed this client in our HelloAck (v5 sessions only;
+    /// `NO_RESUME_TOKEN` pre-v5) — the key its resume state files under
+    resume_token: u32,
+    /// negotiated (vocab, ell), kept for the resume-mismatch check
+    params: (u32, u32),
+    /// next uplink sequence number we expect (v5 gap detection); plain
+    /// ordering — a session would need 2^16 in-flight batches to wrap
+    next_seq: u16,
+    /// recent per-seq feedback, replayed verbatim on duplicate drafts
+    fb_cache: VecDeque<(u16, FeedbackV2)>,
     /// downlink stream bits emitted (length prefixes included)
     pub down_bits: u64,
     /// decode scratch: uplink frames parse into this arena; only frames
@@ -196,6 +240,10 @@ impl Session {
             backlog: VecDeque::new(),
             bye: false,
             seed,
+            resume_token: NO_RESUME_TOKEN,
+            params: (0, 0),
+            next_seq: 0,
+            fb_cache: VecDeque::new(),
             down_bits: 0,
             arena: WireArena::new(),
             enc_buf: Vec::new(),
@@ -252,7 +300,19 @@ impl Session {
         // this tier — a live-session cap (overload policy: reject at
         // the door, never shed an admitted session's frames)
         match ctx.admit_hello(&hello) {
-            Ok(ack) => {
+            Ok(mut ack) => {
+                let mut resumed = None;
+                if ack.version >= PROTOCOL_V5 {
+                    // v5 churn recovery: every session gets a token to
+                    // present after a disconnect, and a token the server
+                    // still holds restores the committed context (seq
+                    // and epoch restart at 0 on the new connection)
+                    ack.resume_token = resume_token_for(self.id);
+                    if hello.resume_token != NO_RESUME_TOKEN {
+                        resumed = ctx.try_resume(&hello);
+                        ack.resume_ok = resumed.is_some();
+                    }
+                }
                 if let Err(e) = self.emit(&Frame::HelloAck(ack), wr) {
                     return SessionEvent::Error(e);
                 }
@@ -260,7 +320,15 @@ impl Session {
                     Ok(c) => self.codec = c,
                     Err(e) => return SessionEvent::Error(e),
                 }
-                self.phase = Phase::AwaitPrompt;
+                self.resume_token = ack.resume_token;
+                self.params = (ack.vocab, ack.ell);
+                if let Some(vctx) = resumed {
+                    ctx.note_resume();
+                    self.vctx = Some(vctx);
+                    self.phase = Phase::Streaming;
+                } else {
+                    self.phase = Phase::AwaitPrompt;
+                }
                 SessionEvent::Continue
             }
             Err(e) => {
@@ -272,6 +340,8 @@ impl Session {
                     ell: hello.ell,
                     scheme: hello.scheme,
                     fixed_k: hello.fixed_k,
+                    resume_ok: false,
+                    resume_token: NO_RESUME_TOKEN,
                 };
                 let _ = self.emit(&Frame::HelloAck(nack), wr);
                 SessionEvent::Error(format!("handshake rejected: {e}"))
@@ -303,8 +373,18 @@ impl Session {
         ctx.note_frame();
         match frame {
             Frame::Draft(f) => self.backlog.push_back(JobFrame::Plain(f)),
-            Frame::DraftSeq(sd) => self.backlog.push_back(JobFrame::Seq(sd)),
-            Frame::DraftTree(td) => self.backlog.push_back(JobFrame::Tree(td)),
+            Frame::DraftSeq(sd) => {
+                if let Some(ev) = self.check_seq(sd.frame.batch_id, sd.seq, ctx, wr) {
+                    return ev;
+                }
+                self.backlog.push_back(JobFrame::Seq(sd))
+            }
+            Frame::DraftTree(td) => {
+                if let Some(ev) = self.check_seq(td.frame.batch_id, td.seq, ctx, wr) {
+                    return ev;
+                }
+                self.backlog.push_back(JobFrame::Tree(td))
+            }
             Frame::Control(Control::Bye) => {
                 self.bye = true;
                 return self.close_if_drained();
@@ -314,6 +394,82 @@ impl Session {
             }
         }
         self.pump(ctx, wr)
+    }
+
+    /// v5 sequence bookkeeping for an arriving draft.  `None` admits the
+    /// frame; `Some(event)` means recovery consumed it:
+    ///
+    /// - a **gap** (`seq` ahead of what we expect) drops the frame and
+    ///   nacks the first missing seq — go-back-N, the edge replays from
+    ///   there, so nothing is buffered out of order;
+    /// - a **duplicate** (`seq` already answered) replays the cached
+    ///   feedback verbatim — the retransmit means the edge never heard
+    ///   it — or is dropped silently when the verdict has aged out.
+    fn check_seq(
+        &mut self,
+        batch_id: u32,
+        seq: u16,
+        ctx: &dyn SessionCtx,
+        wr: &mut Vec<u8>,
+    ) -> Option<SessionEvent> {
+        if !self.codec.loss_recovery() {
+            return None;
+        }
+        if seq == self.next_seq {
+            self.next_seq = self.next_seq.wrapping_add(1);
+            return None;
+        }
+        if seq > self.next_seq {
+            ctx.note_nack();
+            let fb = FeedbackV2::nack_frame(batch_id, self.next_seq, self.epoch);
+            return Some(match self.emit(&Frame::Feedback(fb), wr) {
+                Ok(()) => SessionEvent::Continue,
+                Err(e) => SessionEvent::Error(e),
+            });
+        }
+        let cached = self.fb_cache.iter().find(|(s, _)| *s == seq).map(|(_, fb)| fb.clone());
+        Some(match cached {
+            Some(fb) => match self.emit(&Frame::Feedback(fb), wr) {
+                Ok(()) => SessionEvent::Continue,
+                Err(e) => SessionEvent::Error(e),
+            },
+            // answered so long ago the cache dropped it: the edge has
+            // newer feedback in flight already, nothing to replay
+            None => SessionEvent::Continue,
+        })
+    }
+
+    /// Remember a seq-carrying feedback for duplicate replay.
+    fn cache_feedback(&mut self, fb: &FeedbackV2) {
+        if !self.codec.loss_recovery() {
+            return;
+        }
+        if let Some((seq, _)) = fb.acked_seq() {
+            if self.fb_cache.len() >= FB_CACHE {
+                self.fb_cache.pop_front();
+            }
+            self.fb_cache.push_back((seq, fb.clone()));
+        }
+    }
+
+    /// What this session leaves for a future reconnect: its verify
+    /// context, filed under the token we handed out at the handshake.
+    /// `None` when there is nothing worth resuming — pre-v5 sessions,
+    /// sessions that never reached streaming, or a clean `Bye`.
+    pub(crate) fn take_resume_state(&mut self) -> Option<ResumeState> {
+        if self.resume_token == NO_RESUME_TOKEN || self.bye {
+            return None;
+        }
+        if !matches!(self.phase, Phase::Streaming) {
+            return None;
+        }
+        let vctx = self.vctx.take()?;
+        Some(ResumeState {
+            token: self.resume_token,
+            vctx,
+            vocab: self.params.0,
+            ell: self.params.1,
+        })
     }
 
     /// Feed the shared queue while the session's context is home and
@@ -341,6 +497,7 @@ impl Session {
                 let mut fb = FeedbackV2::discard(batch_id, seq, epoch);
                 fb.exts.extend(ctx.exts());
                 ctx.note_discard();
+                self.cache_feedback(&fb);
                 if let Err(e) = self.emit(&Frame::Feedback(fb), wr) {
                     return SessionEvent::Error(e);
                 }
@@ -372,6 +529,7 @@ impl Session {
                 if ok.bump_epoch {
                     self.epoch = self.epoch.wrapping_add(1);
                 }
+                self.cache_feedback(&ok.fb);
                 if let Err(e) = self.emit(&Frame::Feedback(ok.fb), wr) {
                     return SessionEvent::Error(e);
                 }

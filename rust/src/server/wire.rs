@@ -24,6 +24,8 @@ pub use crate::serve::{WireServer, WireServerConfig, WireStats};
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -32,7 +34,7 @@ use crate::edge::EdgeNode;
 use crate::model::DraftLm;
 use crate::protocol::{
     Control, Direction, Frame, SeqDraft, StreamTransport, Transport, TreeDraft, NO_PARENT,
-    PROTOCOL_V3, PROTOCOL_V4,
+    NO_RESUME_TOKEN, PROTOCOL_V3, PROTOCOL_V4, PROTOCOL_V5,
 };
 use crate::sqs::Policy;
 use crate::trace::{Dir, TraceData, TraceSink};
@@ -52,6 +54,11 @@ pub struct WireEdgeConfig {
     /// token-tree branching factor (1 = the v3 linear pipeline,
     /// bit-exact; >= 2 with `pipeline_depth >= 2` negotiates v4)
     pub tree_branching: usize,
+    /// advertise protocol v5 (loss recovery): the HelloAck then carries
+    /// a resume token this client can present after a disconnect, and
+    /// the server tolerates duplicate drafts / answers gaps with nacks.
+    /// Off by default — pre-v5 sessions are bit-identical.
+    pub loss_recovery: bool,
     pub seed: u64,
 }
 
@@ -66,9 +73,27 @@ impl Default for WireEdgeConfig {
             adaptive: AdaptiveMode::Off,
             pipeline_depth: 1,
             tree_branching: 1,
+            loss_recovery: false,
             seed: 0,
         }
     }
+}
+
+/// Connect to a wire endpoint with a read deadline on the stream.
+/// Without a deadline an edge whose server dies mid-session blocks in
+/// `read_exact` forever; with one, the silence surfaces as a clean
+/// "stream read timed out" error the caller can turn into a
+/// reconnect-and-resume.  `read_timeout_s <= 0` keeps blocking reads.
+pub fn connect_edge<A: ToSocketAddrs>(
+    addr: A,
+    read_timeout_s: f64,
+) -> Result<StreamTransport<TcpStream>> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    if read_timeout_s > 0.0 {
+        stream.set_read_timeout(Some(Duration::from_secs_f64(read_timeout_s)))?;
+    }
+    Ok(StreamTransport::new(stream))
 }
 
 /// What one wire session produced (edge-side view).
@@ -91,6 +116,11 @@ pub struct WireRunReport {
     pub grants_seen: usize,
     /// speculative batches the server discarded as stale (pipelined)
     pub discarded: usize,
+    /// token from the HelloAck for resuming this session after a
+    /// disconnect ([`NO_RESUME_TOKEN`] on pre-v5 sessions)
+    pub resume_token: u32,
+    /// did this run restore server-side state via a presented token?
+    pub resumed: bool,
 }
 
 impl WireRunReport {
@@ -110,6 +140,10 @@ pub struct WireEdge<D: DraftLm> {
     /// emission sequence — frame kinds and bit counts are deterministic,
     /// wall time is deliberately excluded (see DESIGN.md §12).
     pub tracer: TraceSink,
+    /// resume token the last HelloAck handed out (v5 sessions)
+    resume_token: u32,
+    /// did the last handshake restore server-side session state?
+    resumed: bool,
 }
 
 impl<D: DraftLm> WireEdge<D> {
@@ -135,6 +169,11 @@ impl<D: DraftLm> WireEdge<D> {
                 PROTOCOL_V3
             });
         }
+        // version unlocks are cumulative, so advertising v5 keeps the
+        // pipelining/tree shapes chosen above available under the ack
+        if cfg.loss_recovery {
+            edge.wire.set_version(PROTOCOL_V5);
+        }
         let control = ControlLoop::for_session(
             cfg.adaptive,
             cfg.policy,
@@ -144,12 +183,29 @@ impl<D: DraftLm> WireEdge<D> {
             cfg.pipeline_depth,
             cfg.tree_branching,
         );
-        WireEdge { edge, control, cfg, tracer: TraceSink::null() }
+        WireEdge {
+            edge,
+            control,
+            cfg,
+            tracer: TraceSink::null(),
+            resume_token: NO_RESUME_TOKEN,
+            resumed: false,
+        }
     }
 
     /// Install a flight-recorder sink.
     pub fn set_tracer(&mut self, sink: TraceSink) {
         self.tracer = sink;
+    }
+
+    /// Present a resume token (from a previous run's
+    /// [`WireRunReport::resume_token`]) on the next handshake.  With a
+    /// `loss_recovery` client, a server still holding the session
+    /// restores its verified context: pass the previously committed
+    /// sequence as the next `run`'s prompt and the server skips the
+    /// prompt round trip, resuming verification where it left off.
+    pub fn set_resume_token(&mut self, token: u32) {
+        self.edge.wire.set_resume_token(token);
     }
 
     /// Run one request over the transport: handshake, prompt, then the
@@ -262,6 +318,8 @@ impl<D: DraftLm> WireEdge<D> {
             frame_bits,
             grants_seen,
             discarded: 0,
+            resume_token: self.resume_token,
+            resumed: self.resumed,
             tokens: seq,
         })
     }
@@ -295,12 +353,19 @@ impl<D: DraftLm> WireEdge<D> {
             bail!("server negotiated a different codec config");
         }
         self.edge.wire.set_version(ack.version);
-        transport.send_frame(
-            Direction::Up,
-            &Frame::Control(Control::Prompt(prompt.to_vec())),
-            &mut self.edge.wire,
-            0.0,
-        )?;
+        self.resume_token = ack.resume_token;
+        self.resumed = ack.resume_ok;
+        // a restored session's server context already holds the prompt
+        // (the committed sequence the caller passed back in); only a
+        // fresh session ships it
+        if !ack.resume_ok {
+            transport.send_frame(
+                Direction::Up,
+                &Frame::Control(Control::Prompt(prompt.to_vec())),
+                &mut self.edge.wire,
+                0.0,
+            )?;
+        }
         Ok((d_hello.bits as u64, hs_down, ack.version))
     }
 
@@ -579,6 +644,8 @@ impl<D: DraftLm> WireEdge<D> {
             frame_bits,
             grants_seen,
             discarded,
+            resume_token: self.resume_token,
+            resumed: self.resumed,
             tokens: seq_committed,
         })
     }

@@ -96,6 +96,18 @@ pub enum TraceData {
     KnobChange { k: i64, ell: usize, budget_bits: usize, depth: usize, branching: usize },
     /// The verifier granted uplink budget to this actor.
     GrantIssued { bits: usize },
+    /// A frame was lost on the channel and the sender re-sent it
+    /// (`attempt` counts from 1 within the frame's recovery).
+    Retransmit { dir: Dir, batch_seq: u16, attempt: u32 },
+    /// Loss recovery gave up on a frame: the sender rolled back to the
+    /// last acknowledged context and resynced at `epoch`.
+    LossResync { batch_seq: u16, epoch: u8 },
+    /// A fleet device dropped mid-session (churn model); its in-flight
+    /// work at `epoch` is abandoned.
+    ChurnDrop { epoch: u8 },
+    /// A churned device reconnected; `resumed` = the server restored the
+    /// session from its resume table (false: clean restart).
+    ChurnReconnect { resumed: bool },
     /// A rejection decomposed per the paper's bound: `alpha` is the
     /// dropped mass at the rejected position, `tv` the measured TV(q, q̂)
     /// compression distortion, `rhat` the dense-vs-compressed rejection
@@ -126,6 +138,10 @@ impl TraceData {
             TraceData::TreeSurvivor { .. } => "tree_survivor",
             TraceData::KnobChange { .. } => "knob_change",
             TraceData::GrantIssued { .. } => "grant_issued",
+            TraceData::Retransmit { .. } => "retransmit",
+            TraceData::LossResync { .. } => "loss_resync",
+            TraceData::ChurnDrop { .. } => "churn_drop",
+            TraceData::ChurnReconnect { .. } => "churn_reconnect",
             TraceData::RejectAttrib { .. } => "reject_attrib",
         }
     }
@@ -177,6 +193,19 @@ impl TraceData {
                 ("branching", n(*branching)),
             ],
             TraceData::GrantIssued { bits } => vec![("bits", n(*bits))],
+            TraceData::Retransmit { dir, batch_seq, attempt } => vec![
+                ("dir", Json::Str(dir.name().into())),
+                ("batch_seq", n(*batch_seq as usize)),
+                ("attempt", n(*attempt as usize)),
+            ],
+            TraceData::LossResync { batch_seq, epoch } => vec![
+                ("batch_seq", n(*batch_seq as usize)),
+                ("epoch", n(*epoch as usize)),
+            ],
+            TraceData::ChurnDrop { epoch } => vec![("epoch", n(*epoch as usize))],
+            TraceData::ChurnReconnect { resumed } => {
+                vec![("resumed", Json::Bool(*resumed))]
+            }
             TraceData::RejectAttrib { batch_seq, pos, alpha, tv, rhat, mismatch, distortion } => {
                 vec![
                     ("batch_seq", n(*batch_seq as usize)),

@@ -321,6 +321,7 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
             ell: 100,
             scheme: SchemeBits::FixedK,
             fixed_k: 8,
+            resume_token: 0,
         }),
         Frame::HelloAck(sqs_sd::protocol::negotiate(&Hello {
             min_version: MIN_SUPPORTED,
@@ -329,6 +330,7 @@ fn sample_frames(codec: &mut WireCodec) -> Vec<(&'static str, Vec<u8>)> {
             ell: 100,
             scheme: SchemeBits::FixedK,
             fixed_k: 8,
+            resume_token: 0,
         })
         .unwrap()),
         Frame::Draft(DraftFrame { batch_id: 77, tokens: tokens.clone() }),
